@@ -1,0 +1,54 @@
+//! Worker-scaling study on the paper's linear-regression task (Fig. 2
+//! regime): how the Sum/AdaCons gap evolves with the number of workers,
+//! plus the simulated communication overhead at two fabric speeds.
+//!
+//! Run: `cargo run --release --example linreg_scaling [-- --steps 150]`
+
+use std::sync::Arc;
+
+use adacons::collective::{CostModel, Topology};
+use adacons::config::TrainConfig;
+use adacons::coordinator::Trainer;
+use adacons::optim::Schedule;
+use adacons::runtime::Runtime;
+use adacons::util::argparse::Args;
+
+fn main() -> anyhow::Result<()> {
+    adacons::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1), &[]);
+    let steps = args.usize_or("steps", 150)?;
+    let rt = Arc::new(Runtime::open_default()?);
+
+    println!("{:>4} {:>12} {:>12} {:>8}", "N", "Sum loss", "AdaCons", "ratio");
+    for n in [2, 4, 8, 16, 32] {
+        let run = |agg: &str| -> anyhow::Result<f64> {
+            let cfg = TrainConfig {
+                artifact: "linreg_b16".into(),
+                workers: n,
+                aggregator: agg.into(),
+                optimizer: "linreg-exact".into(),
+                schedule: Schedule::Const { lr: 0.0 },
+                steps,
+                seed: 11,
+                ..TrainConfig::default()
+            };
+            Ok(Trainer::new(rt.clone(), cfg)?.run()?.final_train_loss(10))
+        };
+        let sum = run("mean")?;
+        let ada = run("adacons")?;
+        println!("{n:>4} {sum:>12.6} {ada:>12.6} {:>8.3}", sum / ada);
+    }
+
+    println!("\nsimulated AdaCons comm overhead vs Sum (25.6M-param model, 32 ranks):");
+    for gbps in [100.0, 800.0] {
+        let m = CostModel::from_topology(&Topology::ring_gbps(32, gbps));
+        let d = 25_600_000;
+        println!(
+            "  {gbps:>5} Gb/s: Sum {:.2} ms, AdaCons {:.2} ms ({:+.1} ms)",
+            m.sum_iteration_s(d) * 1e3,
+            m.adacons_iteration_s(d) * 1e3,
+            (m.adacons_iteration_s(d) - m.sum_iteration_s(d)) * 1e3
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,32 @@
+// Leak regression probe: the runtime execute path must hold RSS flat.
+// (History: the xla crate's execute::<Literal> path leaks its converted
+// input buffers; runtime/executable.rs uses execute_b instead.)
+use adacons::data::Array;
+use adacons::runtime::Runtime;
+
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/statm").unwrap();
+    let pages: f64 = s.split_whitespace().nth(1).unwrap().parse().unwrap();
+    pages * 4096.0 / 1e6
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::open_default()?;
+    let exe = rt.load("linreg_b64")?;
+    let params = exe.spec.load_init(0)?;
+    let batch = vec![Array::F32(vec![0.5; 64 * 1000], vec![64, 1000])];
+    let mut first = 0.0;
+    for i in 0..3001 {
+        exe.run_train(&params, &batch)?;
+        if i == 0 {
+            first = rss_mb();
+        }
+        if i % 1000 == 0 {
+            println!("iter {i}: rss {:.1} MB", rss_mb());
+        }
+    }
+    let growth = rss_mb() - first;
+    anyhow::ensure!(growth < 50.0, "leak: rss grew {growth:.1} MB over 3000 execs");
+    println!("OK: rss growth {growth:.1} MB over 3000 execs");
+    Ok(())
+}

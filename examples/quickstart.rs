@@ -1,0 +1,47 @@
+//! Quickstart: train the paper's stochastic linear-regression task (Eq. 14)
+//! with plain averaging vs AdaCons, each given the optimal analytical step
+//! size (the Fig. 2 protocol), and print both loss curves.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use std::sync::Arc;
+
+use adacons::config::TrainConfig;
+use adacons::coordinator::Trainer;
+use adacons::optim::Schedule;
+use adacons::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    adacons::util::logging::init();
+    let rt = Arc::new(Runtime::open_default()?);
+    println!("PJRT platform: {}", rt.platform());
+
+    let mut curves = Vec::new();
+    for aggregator in ["mean", "adacons"] {
+        let cfg = TrainConfig {
+            artifact: "linreg_b16".into(),
+            workers: 8,
+            aggregator: aggregator.into(),
+            optimizer: "linreg-exact".into(),
+            schedule: Schedule::Const { lr: 0.0 },
+            steps: 150,
+            seed: 0,
+            ..TrainConfig::default()
+        };
+        let res = Trainer::new(rt.clone(), cfg)?.run()?;
+        println!(
+            "{aggregator:>8}: initial loss {:.5}, final loss {:.6} ({} steps, {:.2} ms/step wall)",
+            res.train_loss[0],
+            res.final_train_loss(10),
+            res.train_loss.len(),
+            res.wall_iter_s * 1e3
+        );
+        curves.push((aggregator, res.train_loss));
+    }
+
+    println!("\nstep, mean_loss, adacons_loss");
+    for i in (0..curves[0].1.len()).step_by(10) {
+        println!("{i:4}, {:.6}, {:.6}", curves[0].1[i], curves[1].1[i]);
+    }
+    Ok(())
+}

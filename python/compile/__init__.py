@@ -1,0 +1,6 @@
+"""Build-time compile path: L2 JAX models + L1 Pallas kernels -> AOT HLO.
+
+Nothing in this package is imported at training time; ``make artifacts``
+runs ``python -m compile.aot`` once and the Rust binary consumes the
+resulting ``artifacts/`` directory.
+"""

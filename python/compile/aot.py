@@ -1,0 +1,138 @@
+"""AOT pipeline: lower every manifest entry to HLO text + init blobs +
+``artifacts/manifest.json``.
+
+Run once via ``make artifacts`` (``cd python && python -m compile.aot
+--out-dir ../artifacts``).  Python never runs at training time.
+
+Per train artifact we also record a *golden*: loss / grad checksums on a
+deterministic constant batch that the Rust integration tests regenerate
+bit-identically (f32 arrays = 0.5, int arrays = index % cardinality).
+"""
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from .hlo import lower_to_hlo_text
+from .manifest import INIT_SEEDS, model_bundles, kernel_bundles
+
+
+def golden_batch(spec, meta):
+    """Deterministic batch the Rust side can regenerate exactly."""
+    shape = tuple(spec.shape)
+    if spec.dtype == "f32":
+        return np.full(shape, 0.5, dtype=np.float32)
+    # int arrays: index % cardinality along the flattened array.
+    card = {
+        "y": meta.get("classes", 2),
+        "cat": meta.get("vocab", 2),
+        "tokens": meta.get("vocab", 2),
+    }.get(spec.name, 2)
+    flat = np.arange(int(np.prod(shape)), dtype=np.int64) % card
+    return flat.reshape(shape).astype(np.int32)
+
+
+def build_artifact(bundle, out_dir, skip_golden=False):
+    records = {}
+    t0 = time.time()
+    param_spec = (
+        [jnp.zeros((bundle.param_dim,), jnp.float32)] if bundle.param_dim else []
+    )
+
+    def lower(fn, inputs):
+        specs = [s.sds() for s in inputs]
+        if bundle.param_dim:
+            import jax
+
+            specs = [jax.ShapeDtypeStruct((bundle.param_dim,), jnp.float32)] + specs
+        return lower_to_hlo_text(fn, *specs)
+
+    # --- train graph ---
+    hlo = lower(bundle.train_fn, bundle.train_inputs)
+    hlo_path = f"{bundle.name}.hlo.txt"
+    with open(os.path.join(out_dir, hlo_path), "w") as f:
+        f.write(hlo)
+
+    init_paths = {}
+    golden = None
+    if bundle.init_params is not None:
+        for seed in INIT_SEEDS:
+            flat = bundle.init_params(seed)
+            assert flat.shape == (bundle.param_dim,) and flat.dtype == np.float32
+            p = f"{bundle.name}.init.s{seed}.bin"
+            with open(os.path.join(out_dir, p), "wb") as f:
+                f.write(flat.astype("<f4").tobytes())
+            init_paths[str(seed)] = p
+        if not skip_golden:
+            batch = [golden_batch(s, bundle.meta) for s in bundle.train_inputs]
+            flat0 = bundle.init_params(INIT_SEEDS[0])
+            loss, grads = bundle.train_fn(jnp.asarray(flat0), *[jnp.asarray(b) for b in batch])
+            grads = np.asarray(grads, dtype=np.float64)
+            golden = {
+                "seed": INIT_SEEDS[0],
+                "loss": float(loss),
+                "grad_sum": float(grads.sum()),
+                "grad_l2": float(np.sqrt((grads * grads).sum())),
+            }
+
+    records[bundle.name] = {
+        "hlo": hlo_path,
+        "kind": bundle.meta.get("kind", "train"),
+        "model": bundle.meta.get("model", bundle.name),
+        "param_dim": bundle.param_dim,
+        "inputs": [s.to_json() for s in bundle.train_inputs],
+        "outputs": [s.to_json() for s in bundle.train_outputs],
+        "init": init_paths,
+        "golden": golden,
+        "meta": bundle.meta,
+    }
+
+    # --- eval graph ---
+    if bundle.eval_fn is not None:
+        ehlo = lower(bundle.eval_fn, bundle.eval_inputs)
+        epath = f"{bundle.name}__eval.hlo.txt"
+        with open(os.path.join(out_dir, epath), "w") as f:
+            f.write(ehlo)
+        records[f"{bundle.name}__eval"] = {
+            "hlo": epath,
+            "kind": "eval",
+            "model": bundle.meta.get("model", bundle.name),
+            "param_dim": bundle.param_dim,
+            "inputs": [s.to_json() for s in bundle.eval_inputs],
+            "outputs": [s.to_json() for s in bundle.eval_outputs],
+            "init": init_paths,
+            "golden": None,
+            "meta": bundle.meta,
+        }
+    print(f"  [{time.time() - t0:6.1f}s] {bundle.name} (d={bundle.param_dim})")
+    return records
+
+
+def main():
+    ap = argparse.ArgumentParser(description="AdaCons AOT artifact builder")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on bundle names")
+    ap.add_argument("--skip-golden", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    bundles = model_bundles() + kernel_bundles()
+    if args.only:
+        bundles = [b for b in bundles if args.only in b.name]
+
+    artifacts = {}
+    for bundle in bundles:
+        artifacts.update(build_artifact(bundle, args.out_dir, args.skip_golden))
+
+    manifest = {"version": 1, "artifacts": artifacts}
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {len(artifacts)} artifacts to {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

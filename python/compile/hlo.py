@@ -1,0 +1,25 @@
+"""Lowering helpers: jitted JAX function -> HLO *text*.
+
+HLO text (not a serialized ``HloModuleProto``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` 0.1.6 crate links) rejects with
+``proto.id() <= INT_MAX``.  The text parser reassigns ids, so text
+round-trips cleanly.  See /opt/xla-example/README.md.
+"""
+
+import jax
+from jax._src.lib import xla_client as xc
+
+
+def lower_to_hlo_text(fn, *arg_specs) -> str:
+    """Lower ``fn`` at the given ShapeDtypeStructs and return HLO text.
+
+    The function is lowered with ``return_tuple=True`` so the Rust side
+    always unwraps a single tuple literal regardless of arity.
+    """
+    lowered = jax.jit(fn).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()

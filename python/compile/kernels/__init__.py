@@ -1,0 +1,12 @@
+"""L1 Pallas kernels (build-time only; lowered into the model HLO).
+
+All kernels are authored for TPU-style tiling (VMEM-sized blocks feeding an
+MXU-friendly contraction) but lowered with ``interpret=True`` so the PJRT CPU
+client can execute the resulting HLO. See DESIGN.md §Hardware-Adaptation.
+"""
+
+from .consensus import consensus_stats, gram_matrix
+from .weighted_sum import weighted_sum
+from .fused_linear import fused_linear
+
+__all__ = ["consensus_stats", "gram_matrix", "weighted_sum", "fused_linear"]

@@ -1,0 +1,119 @@
+"""Consensus-coefficient Pallas kernel — the AdaCons aggregation hot-spot.
+
+Given the gradient matrix ``P`` of shape ``(N, D)`` (one row per worker,
+``N << D``), AdaCons (Eq. 7 of the paper) needs, per worker ``i``:
+
+* ``dots[i] = <g_i, g_bar>`` with ``g_bar = mean_j g_j``
+* ``sqn[i]  = ||g_i||^2``
+
+Both are single-pass reductions over the huge ``D`` axis, so the kernel tiles
+``D`` into VMEM-sized blocks of ``TILE_D`` columns and accumulates the
+``N``-vector partials across the grid.  On a real TPU each ``(N, TILE_D)``
+block is one HBM->VMEM DMA and the ``P_tile @ mean_tile`` contraction maps to
+the MXU; here we lower with ``interpret=True`` for the CPU PJRT client.
+
+``gram_matrix`` additionally exposes the full ``P P^T`` Gram accumulation used
+by the preconditioner perspective (paper Eq. 9) and by the ablation benches.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default column tile. N is tiny (<= 64), so VMEM usage is dominated by the
+# (N, TILE_D) input tile: 64 * 8192 * 4B = 2 MiB, comfortably inside the
+# ~16 MiB VMEM budget with double-buffering headroom.
+DEFAULT_TILE_D = 8192
+
+
+def _consensus_kernel(p_ref, dots_ref, sqn_ref):
+    """Accumulate per-worker <g_i, g_bar> and ||g_i||^2 over one D tile."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        dots_ref[...] = jnp.zeros_like(dots_ref)
+        sqn_ref[...] = jnp.zeros_like(sqn_ref)
+
+    p = p_ref[...]  # (N, TILE_D) block in VMEM
+    mean_tile = jnp.mean(p, axis=0)  # (TILE_D,)
+    # (N, TILE_D) @ (TILE_D,) -> (N,): MXU-friendly contraction in f32.
+    dots_ref[...] += jnp.dot(p, mean_tile, preferred_element_type=jnp.float32)
+    sqn_ref[...] += jnp.sum(p * p, axis=1).astype(jnp.float32)
+
+
+def _gram_kernel(p_ref, gram_ref):
+    """Accumulate the N x N Gram matrix P P^T over one D tile."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        gram_ref[...] = jnp.zeros_like(gram_ref)
+
+    p = p_ref[...]
+    gram_ref[...] += jnp.dot(p, p.T, preferred_element_type=jnp.float32)
+
+
+def _pad_cols(p, tile_d):
+    """Zero-pad the D axis up to a multiple of tile_d (zeros are reduction
+    identities for both the dot and the squared-norm accumulators)."""
+    n, d = p.shape
+    rem = d % tile_d
+    if rem == 0:
+        return p, d
+    pad = tile_d - rem
+    return jnp.pad(p, ((0, 0), (0, pad))), d + pad
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d",))
+def consensus_stats(p, tile_d=DEFAULT_TILE_D):
+    """Per-worker consensus statistics for AdaCons Eq. 7.
+
+    Args:
+      p: ``f32[N, D]`` worker-gradient matrix.
+      tile_d: column tile size (static).
+
+    Returns:
+      ``(dots, sqn)``: ``dots[i] = <g_i, mean_j g_j>`` and
+      ``sqn[i] = ||g_i||^2``, both ``f32[N]``.
+    """
+    p = p.astype(jnp.float32)
+    n, _ = p.shape
+    tile_d = min(tile_d, p.shape[1]) if p.shape[1] > 0 else 1
+    p_padded, d_padded = _pad_cols(p, tile_d)
+    grid = (d_padded // tile_d,)
+    dots, sqn = pl.pallas_call(
+        _consensus_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((n, tile_d), lambda i: (0, i))],
+        out_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(p_padded)
+    return dots, sqn
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d",))
+def gram_matrix(p, tile_d=DEFAULT_TILE_D):
+    """Full Gram matrix ``P P^T`` (``f32[N, N]``), tiled over D."""
+    p = p.astype(jnp.float32)
+    n, _ = p.shape
+    tile_d = min(tile_d, p.shape[1]) if p.shape[1] > 0 else 1
+    p_padded, d_padded = _pad_cols(p, tile_d)
+    grid = (d_padded // tile_d,)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((n, tile_d), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((n, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,
+    )(p_padded)

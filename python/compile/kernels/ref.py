@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel — the build-time correctness bar.
+
+pytest (python/tests/) sweeps shapes and dtypes with hypothesis and asserts
+``assert_allclose(kernel(...), ref(...))`` for each pair below.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def consensus_stats_ref(p):
+    """Reference for kernels.consensus.consensus_stats."""
+    p = p.astype(jnp.float32)
+    g_bar = jnp.mean(p, axis=0)
+    dots = p @ g_bar
+    sqn = jnp.sum(p * p, axis=1)
+    return dots, sqn
+
+
+def gram_matrix_ref(p):
+    """Reference for kernels.consensus.gram_matrix."""
+    p = p.astype(jnp.float32)
+    return p @ p.T
+
+
+def weighted_sum_ref(gamma, p):
+    """Reference for kernels.weighted_sum.weighted_sum."""
+    return gamma.astype(jnp.float32) @ p.astype(jnp.float32)
+
+
+def fused_linear_ref(x, w, b, activation="none"):
+    """Reference for kernels.fused_linear.fused_linear."""
+    y = x.astype(jnp.float32) @ w.astype(jnp.float32) + b.astype(jnp.float32)
+    if activation == "none":
+        return y
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    if activation == "gelu":
+        return jax.nn.gelu(y)
+    if activation == "tanh":
+        return jnp.tanh(y)
+    raise ValueError(activation)
+
+
+def adacons_weights_ref(p, lam=None):
+    """End-to-end oracle for the AdaCons coefficient pipeline (Eq. 7/12/13).
+
+    Returns the per-worker weights ``gamma`` such that the aggregated update
+    is ``sum_i gamma_i g_i``.  With ``lam=None`` the sum-one normalization of
+    Eq. 13 is applied; otherwise the raw Eq. 8 weights (scaled by ``lam``)
+    are returned.  Used by the Rust integration goldens as well.
+    """
+    p = p.astype(jnp.float64)
+    n = p.shape[0]
+    g_bar = jnp.mean(p, axis=0)
+    dots = p @ g_bar  # <g_i, g_bar>
+    sqn = jnp.sum(p * p, axis=1)
+    if lam is not None:
+        # Raw Eq. 8: w_{t+1} = w_t - lam*eta/N * sum_i dots_i/sqn_i * g_i.
+        return (lam / n) * dots / sqn
+    # Eq. 13: lambda normalizes the subspace coefficients alpha_i =
+    # dots_i/||g_i|| to sum one; the re-projection then divides by ||g_i||
+    # once more, giving gamma_i = lambda * dots_i / ||g_i||^2 (Eq. 12).
+    lam_star = 1.0 / jnp.sum(dots / jnp.sqrt(sqn))
+    return lam_star * dots / sqn

@@ -1,0 +1,45 @@
+"""Weighted gradient re-projection Pallas kernel (AdaCons Eq. 12).
+
+Computes ``out = sum_i gamma_i * g_i = gamma @ P`` for ``P`` of shape
+``(N, D)``.  Tiled over the D axis; each grid step DMAs one ``(N, TILE_D)``
+block plus the tiny ``gamma`` vector into VMEM and emits a ``TILE_D`` output
+slab, so the kernel is purely bandwidth-bound (arithmetic intensity 2N flops
+per 4N bytes read) — see DESIGN.md §9 for the roofline estimate.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .consensus import DEFAULT_TILE_D, _pad_cols
+
+
+def _wsum_kernel(gamma_ref, p_ref, out_ref):
+    gamma = gamma_ref[...]  # (N,)
+    p = p_ref[...]  # (N, TILE_D)
+    out_ref[...] = jnp.dot(gamma, p, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d",))
+def weighted_sum(gamma, p, tile_d=DEFAULT_TILE_D):
+    """``f32[D]`` weighted combination ``sum_i gamma[i] * p[i, :]``."""
+    p = p.astype(jnp.float32)
+    gamma = gamma.astype(jnp.float32)
+    n, d = p.shape
+    tile_d = min(tile_d, d) if d > 0 else 1
+    p_padded, d_padded = _pad_cols(p, tile_d)
+    grid = (d_padded // tile_d,)
+    out = pl.pallas_call(
+        _wsum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n, tile_d), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((tile_d,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d_padded,), jnp.float32),
+        interpret=True,
+    )(gamma, p_padded)
+    return out[:d]

@@ -1,0 +1,72 @@
+"""The AOT build manifest: every artifact the Rust coordinator can load.
+
+Each entry lowers to ``artifacts/<name>.hlo.txt`` (+ ``<name>__eval.hlo.txt``
+when the bundle has an eval function) and ``<name>.init.s<seed>.bin`` blobs.
+Keep this list in sync with DESIGN.md §7.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .models import ArraySpec, ModelBundle
+from .models import linreg, mlp, detection, dlrm, transformer
+from .kernels import consensus_stats, weighted_sum
+
+INIT_SEEDS = (0, 1, 2)
+
+# Kernel-artifact geometry for the runtime benches (N workers, D params).
+KERNEL_N = 8
+KERNEL_D = 1 << 20
+KERNEL_TILE = 1 << 16
+
+
+def model_bundles():
+    """All model bundles to build, in build order (cheap first)."""
+    return [
+        linreg.build(16),
+        linreg.build(64),
+        linreg.build(128),
+        mlp.build(32, eval_batch=256),
+        detection.build(32, eval_batch=256),
+        dlrm.build(64, eval_batch=512),
+        transformer.build("sm", 8),
+        transformer.build("md", 4),
+    ]
+
+
+def kernel_bundles():
+    """Standalone L1 kernel graphs (consensus + weighted-sum) exposed to the
+    Rust runtime for the kernel-path parity tests and benches."""
+
+    def consensus_fn(p):
+        dots, sqn = consensus_stats(p, tile_d=KERNEL_TILE)
+        return dots, sqn
+
+    def wsum_fn(gamma, p):
+        return (weighted_sum(gamma, p, tile_d=KERNEL_TILE),)
+
+    p_spec = ArraySpec("p", "f32", (KERNEL_N, KERNEL_D))
+    g_spec = ArraySpec("gamma", "f32", (KERNEL_N,))
+    return [
+        ModelBundle(
+            name=f"kernel_consensus_n{KERNEL_N}",
+            param_dim=0,
+            init_params=None,
+            train_fn=consensus_fn,
+            train_inputs=[p_spec],
+            train_outputs=[
+                ArraySpec("dots", "f32", (KERNEL_N,)),
+                ArraySpec("sqn", "f32", (KERNEL_N,)),
+            ],
+            meta={"model": "kernel", "kind": "kernel", "n": KERNEL_N, "d": KERNEL_D},
+        ),
+        ModelBundle(
+            name=f"kernel_wsum_n{KERNEL_N}",
+            param_dim=0,
+            init_params=None,
+            train_fn=wsum_fn,
+            train_inputs=[g_spec, p_spec],
+            train_outputs=[ArraySpec("out", "f32", (KERNEL_D,))],
+            meta={"model": "kernel", "kind": "kernel", "n": KERNEL_N, "d": KERNEL_D},
+        ),
+    ]

@@ -1,0 +1,69 @@
+"""L2 model zoo.
+
+Every model exposes a :class:`ModelBundle` whose train/eval functions take a
+single **flat** ``f32[d]`` parameter vector first (flatten/unflatten lives in
+JAX, so the Rust coordinator only ever sees flat vectors) followed by the
+batch arrays.  ``train_fn`` returns ``(loss, grads_flat)``; ``eval_fn``
+returns model-specific metric arrays (documented per model and recorded in
+the artifact manifest).
+"""
+
+import dataclasses
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+
+@dataclasses.dataclass
+class ArraySpec:
+    """Shape/dtype of one runtime input or output, as seen by Rust."""
+
+    name: str
+    dtype: str  # "f32" | "i32"
+    shape: Tuple[int, ...]
+
+    def sds(self):
+        dt = {"f32": jnp.float32, "i32": jnp.int32}[self.dtype]
+        return jax.ShapeDtypeStruct(tuple(self.shape), dt)
+
+    def to_json(self):
+        return {"name": self.name, "dtype": self.dtype, "shape": list(self.shape)}
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    """Everything the AOT pipeline needs for one (model, local-batch) config."""
+
+    name: str
+    param_dim: int
+    init_params: Callable[[int], np.ndarray]  # seed -> f32[d]
+    train_fn: Callable  # (flat, *batch) -> (loss, grads)
+    train_inputs: List[ArraySpec]  # batch arrays (excluding params)
+    train_outputs: List[ArraySpec]
+    eval_fn: Callable = None  # (flat, *batch) -> metric arrays
+    eval_inputs: List[ArraySpec] = None
+    eval_outputs: List[ArraySpec] = None
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+def flat_init(init_pytree_fn, seed):
+    """Initialize a pytree and return (flat f32[d] numpy, unravel)."""
+    params = init_pytree_fn(jax.random.PRNGKey(seed))
+    flat, unravel = ravel_pytree(params)
+    return np.asarray(flat, dtype=np.float32), unravel
+
+
+def make_flat_value_and_grad(loss_fn, unravel):
+    """Wrap a pytree loss into a flat-parameter (loss, flat_grad) function."""
+
+    def flat_loss(flat, *batch):
+        return loss_fn(unravel(flat), *batch)
+
+    def train_fn(flat, *batch):
+        loss, grads = jax.value_and_grad(flat_loss)(flat, *batch)
+        return loss, grads
+
+    return train_fn

@@ -1,0 +1,119 @@
+"""Synthetic detection head — the RetinaNet substitute (Fig. 4, Fig. 7).
+
+A shared trunk over 128-d region features with two heads: focal-weighted
+classification over C = 8 object classes and Huber box regression (4 coords),
+mirroring RetinaNet's cls+box loss structure.  Rust computes an mAP-proxy
+from the eval outputs (per-example class probabilities + box L1 error) by
+sweeping score thresholds.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import ArraySpec, ModelBundle, flat_init, make_flat_value_and_grad
+from ..kernels import fused_linear
+
+IN_DIM = 128
+HIDDEN = 256
+CLASSES = 8
+FOCAL_GAMMA = 2.0
+HUBER_DELTA = 1.0
+
+
+def _init_pytree(key):
+    ks = jax.random.split(key, 4)
+
+    def dense(k, i, o):
+        scale = jnp.sqrt(2.0 / i)
+        return {
+            "w": jax.random.normal(k, (i, o), jnp.float32) * scale,
+            "b": jnp.zeros((o,), jnp.float32),
+        }
+
+    return {
+        "t1": dense(ks[0], IN_DIM, HIDDEN),
+        "t2": dense(ks[1], HIDDEN, HIDDEN),
+        "cls": dense(ks[2], HIDDEN, CLASSES),
+        "box": dense(ks[3], HIDDEN, 4),
+    }
+
+
+def _heads(params, x):
+    h = fused_linear(x, params["t1"]["w"], params["t1"]["b"], activation="relu")
+    h = fused_linear(h, params["t2"]["w"], params["t2"]["b"], activation="relu")
+    logits = h @ params["cls"]["w"] + params["cls"]["b"]
+    boxes = h @ params["box"]["w"] + params["box"]["b"]
+    return logits, boxes
+
+
+def _focal_ce(logits, y):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    p = jnp.exp(logp)
+    pt = jnp.take_along_axis(p, y[:, None], axis=-1)[:, 0]
+    logpt = jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+    return -jnp.mean(((1.0 - pt) ** FOCAL_GAMMA) * logpt)
+
+
+def _huber(pred, target):
+    err = pred - target
+    a = jnp.abs(err)
+    quad = jnp.minimum(a, HUBER_DELTA)
+    return jnp.mean(0.5 * quad * quad + HUBER_DELTA * (a - quad))
+
+
+def _loss(params, x, y, box):
+    logits, boxes = _heads(params, x)
+    return _focal_ce(logits, y) + _huber(boxes, box)
+
+
+def build(local_batch: int, eval_batch: int = None) -> ModelBundle:
+    flat0, unravel = flat_init(_init_pytree, 0)
+    d = flat0.shape[0]
+    train_fn = make_flat_value_and_grad(_loss, unravel)
+    eb = eval_batch or local_batch
+
+    def eval_fn(flat, x, y, box):
+        params = unravel(flat)
+        logits, boxes = _heads(params, x)
+        probs = jax.nn.softmax(logits, axis=-1)
+        box_l1 = jnp.mean(jnp.abs(boxes - box), axis=-1)
+        loss = _focal_ce(logits, y) + _huber(boxes, box)
+        return loss, probs, box_l1
+
+    def init_params(seed):
+        flat, _ = flat_init(_init_pytree, seed)
+        return flat
+
+    return ModelBundle(
+        name=f"det_b{local_batch}",
+        param_dim=d,
+        init_params=init_params,
+        train_fn=train_fn,
+        train_inputs=[
+            ArraySpec("x", "f32", (local_batch, IN_DIM)),
+            ArraySpec("y", "i32", (local_batch,)),
+            ArraySpec("box", "f32", (local_batch, 4)),
+        ],
+        train_outputs=[
+            ArraySpec("loss", "f32", ()),
+            ArraySpec("grads", "f32", (d,)),
+        ],
+        eval_fn=eval_fn,
+        eval_inputs=[
+            ArraySpec("x", "f32", (eb, IN_DIM)),
+            ArraySpec("y", "i32", (eb,)),
+            ArraySpec("box", "f32", (eb, 4)),
+        ],
+        eval_outputs=[
+            ArraySpec("loss", "f32", ()),
+            ArraySpec("probs", "f32", (eb, CLASSES)),
+            ArraySpec("box_l1", "f32", (eb,)),
+        ],
+        meta={
+            "model": "det",
+            "local_batch": local_batch,
+            "eval_batch": eb,
+            "in_dim": IN_DIM,
+            "classes": CLASSES,
+        },
+    )

@@ -1,0 +1,50 @@
+"""Stochastic linear regression (paper Eq. 14, Fig. 2 / Fig. 9).
+
+``min_w E_{zeta ~ U[0,1]^d} [ (w^T zeta)^2 / 2 ]`` with d = 1000.
+The Rust side generates the U[0,1] batches; this module only lowers the
+loss/gradient graph.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ArraySpec, ModelBundle
+
+DIM = 1000
+
+
+def build(local_batch: int, dim: int = DIM) -> ModelBundle:
+    def loss_fn(w, x):
+        # x: (B, dim) ~ U[0,1]; loss = mean_b 0.5 * (w . x_b)^2
+        y = x @ w
+        return 0.5 * jnp.mean(y * y)
+
+    def train_fn(flat, x):
+        loss, g = jax.value_and_grad(loss_fn)(flat, x)
+        return loss, g
+
+    def eval_fn(flat, x):
+        return (loss_fn(flat, x),)
+
+    def init_params(seed):
+        rng = np.random.default_rng(seed)
+        # Paper starts from a generic non-zero iterate; N(0, 1/sqrt(d)).
+        return (rng.standard_normal(dim) / np.sqrt(dim)).astype(np.float32)
+
+    xs = ArraySpec("x", "f32", (local_batch, dim))
+    return ModelBundle(
+        name=f"linreg_b{local_batch}",
+        param_dim=dim,
+        init_params=init_params,
+        train_fn=train_fn,
+        train_inputs=[xs],
+        train_outputs=[
+            ArraySpec("loss", "f32", ()),
+            ArraySpec("grads", "f32", (dim,)),
+        ],
+        eval_fn=eval_fn,
+        eval_inputs=[xs],
+        eval_outputs=[ArraySpec("loss", "f32", ())],
+        meta={"model": "linreg", "local_batch": local_batch, "dim": dim},
+    )

@@ -1,0 +1,159 @@
+"""Causal transformer LM — the BERT-Large substitute (Fig. 6 / Fig. 11,
+Table 2) and the end-to-end training example.
+
+Pre-LN decoder-only transformer with next-token cross-entropy (the paper
+uses MLM phase-1 pretraining; causal LM is the same loss family over the
+same synthetic token statistics — see DESIGN.md §Hardware-Adaptation).
+MLP blocks run through the fused_linear Pallas kernel.
+
+Two stock sizes:
+  sm — d=96,  L=3, h=4, ff=384, seq 64,  vocab 512   (~0.45M params)
+  md — d=256, L=4, h=8, ff=1024, seq 128, vocab 2048 (~4.3M params)
+plus a documented ``lg`` (~100M) config for larger testbeds.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import ArraySpec, ModelBundle, flat_init, make_flat_value_and_grad
+from ..kernels import fused_linear
+
+
+@dataclasses.dataclass(frozen=True)
+class TfmConfig:
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq: int
+
+
+SIZES = {
+    "sm": TfmConfig(vocab=512, d_model=96, n_layers=3, n_heads=4, d_ff=384, seq=64),
+    "md": TfmConfig(vocab=2048, d_model=256, n_layers=4, n_heads=8, d_ff=1024, seq=128),
+    # lg is not built by default (single-CPU testbed); kept for completeness.
+    "lg": TfmConfig(vocab=32768, d_model=768, n_layers=12, n_heads=12, d_ff=3072, seq=512),
+}
+
+
+def _init_pytree_fn(cfg: TfmConfig):
+    def init(key):
+        ks = jax.random.split(key, 2 + cfg.n_layers)
+        scale = 0.02
+
+        def mat(k, shape):
+            return jax.random.normal(k, shape, jnp.float32) * scale
+
+        layers = []
+        for l in range(cfg.n_layers):
+            lk = jax.random.split(ks[2 + l], 6)
+            layers.append(
+                {
+                    "ln1": {"g": jnp.ones((cfg.d_model,)), "b": jnp.zeros((cfg.d_model,))},
+                    "wqkv": mat(lk[0], (cfg.d_model, 3 * cfg.d_model)),
+                    "wo": mat(lk[1], (cfg.d_model, cfg.d_model)),
+                    "ln2": {"g": jnp.ones((cfg.d_model,)), "b": jnp.zeros((cfg.d_model,))},
+                    "w1": mat(lk[2], (cfg.d_model, cfg.d_ff)),
+                    "b1": jnp.zeros((cfg.d_ff,)),
+                    "w2": mat(lk[3], (cfg.d_ff, cfg.d_model)),
+                    "b2": jnp.zeros((cfg.d_model,)),
+                }
+            )
+        return {
+            "tok_emb": mat(ks[0], (cfg.vocab, cfg.d_model)),
+            "pos_emb": mat(ks[1], (cfg.seq, cfg.d_model)),
+            "layers": layers,
+            "ln_f": {"g": jnp.ones((cfg.d_model,)), "b": jnp.zeros((cfg.d_model,))},
+        }
+
+    return init
+
+
+def _layer_norm(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g + b
+
+
+def _block(cfg, layer, x):
+    b, s, d = x.shape
+    h = _layer_norm(x, layer["ln1"]["g"], layer["ln1"]["b"])
+    qkv = h @ layer["wqkv"]  # (B,S,3D)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    hd = d // cfg.n_heads
+
+    def heads(t):
+        return t.reshape(b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(hd).astype(jnp.float32)
+    mask = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    att = jnp.where(mask, att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, d)
+    x = x + out @ layer["wo"]
+    h = _layer_norm(x, layer["ln2"]["g"], layer["ln2"]["b"])
+    # Fused MLP through the L1 Pallas kernel (flatten tokens to rows).
+    h2 = fused_linear(h.reshape(b * s, d), layer["w1"], layer["b1"], activation="gelu")
+    h2 = fused_linear(h2, layer["w2"], layer["b2"], activation="none")
+    return x + h2.reshape(b, s, d)
+
+
+def _loss_fn(cfg: TfmConfig):
+    def loss(params, tokens):
+        # tokens: (B, seq+1) int32; inputs = [:, :-1], targets = [:, 1:].
+        inp = tokens[:, :-1]
+        tgt = tokens[:, 1:]
+        x = jnp.take(params["tok_emb"], inp, axis=0) + params["pos_emb"][None, :, :]
+        for layer in params["layers"]:
+            x = _block(cfg, layer, x)
+        x = _layer_norm(x, params["ln_f"]["g"], params["ln_f"]["b"])
+        logits = x @ params["tok_emb"].T  # tied LM head
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        return jnp.mean(nll)
+
+    return loss
+
+
+def build(size: str, local_batch: int) -> ModelBundle:
+    cfg = SIZES[size]
+    loss = _loss_fn(cfg)
+    flat0, unravel = flat_init(_init_pytree_fn(cfg), 0)
+    d = flat0.shape[0]
+    train_fn = make_flat_value_and_grad(loss, unravel)
+
+    def eval_fn(flat, tokens):
+        return (loss(unravel(flat), tokens),)
+
+    def init_params(seed):
+        flat, _ = flat_init(_init_pytree_fn(cfg), seed)
+        return flat
+
+    toks = ArraySpec("tokens", "i32", (local_batch, cfg.seq + 1))
+    return ModelBundle(
+        name=f"tfm_{size}_b{local_batch}",
+        param_dim=d,
+        init_params=init_params,
+        train_fn=train_fn,
+        train_inputs=[toks],
+        train_outputs=[
+            ArraySpec("loss", "f32", ()),
+            ArraySpec("grads", "f32", (d,)),
+        ],
+        eval_fn=eval_fn,
+        eval_inputs=[toks],
+        eval_outputs=[ArraySpec("loss", "f32", ())],
+        meta={
+            "model": f"tfm_{size}",
+            "local_batch": local_batch,
+            "vocab": cfg.vocab,
+            "seq": cfg.seq,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+        },
+    )

@@ -1,0 +1,71 @@
+"""AOT pipeline checks: manifest schema, HLO text parseability markers,
+golden reproducibility, adacons reference pipeline sanity."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile.aot import build_artifact, golden_batch
+from compile.models import linreg
+from compile.kernels.ref import adacons_weights_ref
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_build_artifact_roundtrip(tmp_path):
+    b = linreg.build(16, dim=32)
+    recs = build_artifact(b, str(tmp_path))
+    assert set(recs) == {"linreg_b16", "linreg_b16__eval"}
+    rec = recs["linreg_b16"]
+    hlo = (tmp_path / rec["hlo"]).read_text()
+    assert hlo.startswith("HloModule")
+    assert "ROOT" in hlo
+    blob = (tmp_path / rec["init"]["0"]).read_bytes()
+    assert len(blob) == 32 * 4
+    flat = np.frombuffer(blob, dtype="<f4")
+    assert_allclose(flat, b.init_params(0))
+    # Golden is reproducible.
+    batch = [jnp.asarray(golden_batch(s, b.meta)) for s in b.train_inputs]
+    loss, grads = b.train_fn(jnp.asarray(b.init_params(0)), *batch)
+    assert abs(float(loss) - rec["golden"]["loss"]) < 1e-5
+
+
+def test_repo_manifest_schema_if_built():
+    path = os.path.join(ART_DIR, "manifest.json")
+    if not os.path.exists(path):
+        return  # artifacts not built in this checkout
+    with open(path) as f:
+        manifest = json.load(f)
+    assert manifest["version"] == 1
+    arts = manifest["artifacts"]
+    assert "linreg_b16" in arts and "tfm_sm_b8" in arts
+    for name, rec in arts.items():
+        assert os.path.exists(os.path.join(ART_DIR, rec["hlo"])), name
+        for blob in rec.get("init", {}).values():
+            assert os.path.exists(os.path.join(ART_DIR, blob)), name
+        for spec in rec["inputs"] + rec["outputs"]:
+            assert spec["dtype"] in ("f32", "i32")
+        if rec["kind"] == "train" and rec["param_dim"]:
+            g = rec["golden"]
+            assert g is not None and np.isfinite(g["loss"])
+
+
+def test_adacons_ref_weights_sum_one_in_subspace():
+    rng = np.random.default_rng(0)
+    p = rng.standard_normal((8, 200))
+    gamma = np.asarray(adacons_weights_ref(jnp.asarray(p)))
+    # Subspace coefficients alpha_i = gamma_i * ||g_i|| sum to one (Eq. 13).
+    norms = np.linalg.norm(p, axis=1)
+    # jnp truncates the f64 request to f32 without jax_enable_x64.
+    assert abs((gamma * norms).sum() - 1.0) < 1e-4
+
+
+def test_adacons_ref_collapses_to_mean_for_identical_grads():
+    g = np.random.default_rng(1).standard_normal(100)
+    p = np.tile(g, (4, 1))
+    gamma_raw = np.asarray(adacons_weights_ref(jnp.asarray(p), lam=1.0))
+    # Raw Eq. 8 with lam=1: gamma_i = 1/N -> exact mean.
+    assert_allclose(gamma_raw, np.full(4, 0.25), rtol=1e-6)  # f32 pipeline

@@ -1,0 +1,72 @@
+"""Hypothesis sweep of the consensus Pallas kernel vs the jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import consensus_stats, gram_matrix
+from compile.kernels import ref
+
+
+def _rand_p(n, d, seed, dtype):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal((n, d)) * rng.uniform(0.1, 3.0)).astype(dtype)
+
+
+@given(
+    n=st.integers(1, 16),
+    d=st.integers(1, 700),
+    tile=st.sampled_from([32, 100, 256, 1024]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_consensus_stats_matches_ref(n, d, tile, seed):
+    p = _rand_p(n, d, seed, np.float32)
+    dots, sqn = consensus_stats(jnp.asarray(p), tile_d=tile)
+    rd, rs = ref.consensus_stats_ref(jnp.asarray(p))
+    assert_allclose(np.asarray(dots), np.asarray(rd), rtol=2e-4, atol=1e-4)
+    assert_allclose(np.asarray(sqn), np.asarray(rs), rtol=2e-4, atol=1e-4)
+
+
+@given(
+    n=st.integers(1, 12),
+    d=st.integers(1, 500),
+    tile=st.sampled_from([64, 128, 333]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gram_matches_ref(n, d, tile, seed):
+    p = _rand_p(n, d, seed, np.float32)
+    g = gram_matrix(jnp.asarray(p), tile_d=tile)
+    rg = ref.gram_matrix_ref(jnp.asarray(p))
+    assert_allclose(np.asarray(g), np.asarray(rg), rtol=2e-4, atol=1e-4)
+
+
+def test_consensus_bf16_input_promotes():
+    p = _rand_p(4, 256, 0, np.float32).astype(jnp.bfloat16)
+    dots, sqn = consensus_stats(jnp.asarray(p), tile_d=64)
+    rd, rs = ref.consensus_stats_ref(jnp.asarray(p))
+    assert dots.dtype == jnp.float32 and sqn.dtype == jnp.float32
+    assert_allclose(np.asarray(dots), np.asarray(rd), rtol=1e-2, atol=1e-2)
+
+
+def test_gram_is_psd():
+    p = _rand_p(8, 300, 3, np.float32)
+    g = np.asarray(gram_matrix(jnp.asarray(p), tile_d=128), dtype=np.float64)
+    eig = np.linalg.eigvalsh((g + g.T) / 2)
+    assert eig.min() >= -1e-3  # PSD up to accumulation noise
+
+
+def test_tile_larger_than_d_clamps():
+    p = _rand_p(3, 17, 5, np.float32)
+    dots, sqn = consensus_stats(jnp.asarray(p), tile_d=4096)
+    rd, rs = ref.consensus_stats_ref(jnp.asarray(p))
+    assert_allclose(np.asarray(dots), np.asarray(rd), rtol=1e-4, atol=1e-5)
+    assert_allclose(np.asarray(sqn), np.asarray(rs), rtol=1e-4, atol=1e-5)
+
+
+def test_identical_rows_consensus_equals_norm():
+    g = np.full((1, 64), 0.3, np.float32)
+    p = np.repeat(g, 6, axis=0)
+    dots, sqn = consensus_stats(jnp.asarray(p), tile_d=16)
+    # <g, mean> = ||g||^2 when all rows identical.
+    assert_allclose(np.asarray(dots), np.asarray(sqn), rtol=1e-5)

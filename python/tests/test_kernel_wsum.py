@@ -1,0 +1,39 @@
+"""Hypothesis sweep of the weighted-sum Pallas kernel vs the jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import weighted_sum
+from compile.kernels.ref import weighted_sum_ref
+
+
+@given(
+    n=st.integers(1, 16),
+    d=st.integers(1, 900),
+    tile=st.sampled_from([16, 128, 500, 2048]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_weighted_sum_matches_ref(n, d, tile, seed):
+    rng = np.random.default_rng(seed)
+    p = rng.standard_normal((n, d)).astype(np.float32)
+    gamma = rng.standard_normal(n).astype(np.float32)
+    out = weighted_sum(jnp.asarray(gamma), jnp.asarray(p), tile_d=tile)
+    exp = weighted_sum_ref(jnp.asarray(gamma), jnp.asarray(p))
+    assert out.shape == (d,)
+    assert_allclose(np.asarray(out), np.asarray(exp), rtol=2e-4, atol=1e-4)
+
+
+def test_uniform_weights_recover_mean():
+    rng = np.random.default_rng(0)
+    p = rng.standard_normal((8, 333)).astype(np.float32)
+    gamma = np.full(8, 1.0 / 8, np.float32)
+    out = weighted_sum(jnp.asarray(gamma), jnp.asarray(p), tile_d=100)
+    assert_allclose(np.asarray(out), p.mean(axis=0), rtol=1e-4, atol=1e-5)
+
+
+def test_zero_weights_zero_output():
+    p = np.ones((4, 64), np.float32)
+    out = weighted_sum(jnp.zeros(4), jnp.asarray(p), tile_d=16)
+    assert_allclose(np.asarray(out), np.zeros(64), atol=0)

@@ -1,0 +1,106 @@
+"""L2 model checks: flat-param gradient correctness, shapes, determinism."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile.models import linreg, mlp, detection, dlrm, transformer
+from compile.aot import golden_batch
+
+
+def _check_bundle(bundle):
+    flat = jnp.asarray(bundle.init_params(0))
+    assert flat.shape == (bundle.param_dim,)
+    batch = [jnp.asarray(golden_batch(s, bundle.meta)) for s in bundle.train_inputs]
+    loss, grads = bundle.train_fn(flat, *batch)
+    assert np.asarray(loss).shape == ()
+    assert grads.shape == (bundle.param_dim,)
+    assert np.isfinite(np.asarray(loss))
+    assert np.isfinite(np.asarray(grads)).all()
+    return flat, batch, loss, grads
+
+
+def _fd_check(bundle, flat, batch, grads, n_coords=5, eps=1e-3, rtol=0.15):
+    """Finite-difference spot check of the flat gradient."""
+
+    def loss_at(f):
+        l, _ = bundle.train_fn(f, *batch)
+        return float(l)
+
+    rng = np.random.default_rng(0)
+    idx = rng.choice(bundle.param_dim, size=min(n_coords, bundle.param_dim), replace=False)
+    f = np.asarray(flat, dtype=np.float64)
+    for i in idx:
+        fp = f.copy()
+        fp[i] += eps
+        fm = f.copy()
+        fm[i] -= eps
+        fd = (loss_at(jnp.asarray(fp, jnp.float32)) - loss_at(jnp.asarray(fm, jnp.float32))) / (2 * eps)
+        g = float(grads[i])
+        if abs(fd) < 1e-4 and abs(g) < 1e-4:
+            continue
+        assert abs(fd - g) <= rtol * max(abs(fd), abs(g)) + 1e-4, (i, fd, g)
+
+
+def test_linreg_grad_is_analytic():
+    b = linreg.build(16, dim=64)
+    flat, batch, loss, grads = _check_bundle(b)
+    x = np.asarray(batch[0], dtype=np.float64)
+    w = np.asarray(flat, dtype=np.float64)
+    expected = (x * (x @ w)[:, None]).mean(axis=0)
+    assert_allclose(np.asarray(grads), expected, rtol=1e-4, atol=1e-6)
+
+
+def test_mlp_bundle_and_fd():
+    b = mlp.build(8, eval_batch=8)
+    flat, batch, loss, grads = _check_bundle(b)
+    _fd_check(b, flat, batch, grads)
+    # eval outputs
+    outs = b.eval_fn(flat, *batch)
+    assert np.asarray(outs[1]).shape == (8,)
+    assert set(np.unique(np.asarray(outs[1]))) <= {0.0, 1.0}
+
+
+def test_detection_bundle_and_fd():
+    b = detection.build(8, eval_batch=8)
+    flat, batch, loss, grads = _check_bundle(b)
+    _fd_check(b, flat, batch, grads)
+    outs = b.eval_fn(flat, *batch)
+    probs = np.asarray(outs[1])
+    assert probs.shape == (8, detection.CLASSES)
+    assert_allclose(probs.sum(axis=-1), np.ones(8), rtol=1e-5)
+
+
+def test_dlrm_bundle_and_fd():
+    b = dlrm.build(16, eval_batch=16)
+    flat, batch, loss, grads = _check_bundle(b)
+    _fd_check(b, flat, batch, grads)
+    outs = b.eval_fn(flat, *batch)
+    scores = np.asarray(outs[1])
+    assert ((scores >= 0) & (scores <= 1)).all()
+
+
+def test_transformer_sm_bundle():
+    b = transformer.build("sm", 2)
+    flat, batch, loss, grads = _check_bundle(b)
+    # At random init the LM loss should be near ln(vocab).
+    assert abs(float(loss) - np.log(transformer.SIZES["sm"].vocab)) < 1.0
+
+
+def test_init_seeds_differ_but_shapes_match():
+    b = mlp.build(4)
+    f0, f1 = b.init_params(0), b.init_params(1)
+    assert f0.shape == f1.shape
+    assert not np.array_equal(f0, f1)
+    assert_allclose(b.init_params(0), f0)  # deterministic
+
+
+def test_grad_descent_reduces_linreg_loss():
+    b = linreg.build(32, dim=32)
+    flat = jnp.asarray(b.init_params(0))
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.uniform(0, 1, (32, 32)).astype(np.float32))
+    l0, g = b.train_fn(flat, x)
+    l1, _ = b.train_fn(flat - 0.05 * g, x)  # lr < 2/L for E[xx^T], x~U[0,1]^32
+    assert float(l1) < float(l0)

@@ -1,0 +1,48 @@
+//! Aggregation micro-bench: every aggregator over a (N, d) grid of
+//! gradient-matrix sizes — the L3 hot-path cost that Table 1's overhead
+//! column is made of. Prints mean/p50/p99 and effective memory bandwidth.
+
+use adacons::aggregation::{self};
+use adacons::bench::bench_auto;
+use adacons::tensor::{Buckets, GradSet};
+use adacons::util::prng::Rng;
+
+fn main() {
+    let budget = std::env::var("BENCH_BUDGET_S")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.4);
+    println!("== aggregation micro-bench (budget {budget}s/case) ==");
+    for (n, d) in [(8usize, 1_000_000usize), (32, 1_000_000), (8, 10_000_000)] {
+        let mut rng = Rng::new(42);
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; d];
+                rng.fill_normal_f32(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let gs = GradSet::from_rows(&rows);
+        let mut out = vec![0.0f32; d];
+        let buckets = Buckets::single(d);
+        println!("-- N={n}, d={d} ({} MB gradient matrix) --", n * d * 4 / 1_000_000);
+        for name in ["mean", "adacons", "adacons-raw", "grawa", "adasum"] {
+            let mut agg = aggregation::by_name(name, n).unwrap();
+            let r = bench_auto(&format!("{name} N={n} d={d}"), budget, || {
+                agg.aggregate(&gs, &buckets, &mut out);
+            });
+            // mean reads N*d once + writes d; adacons reads ~2x for stats+proj
+            println!("{}   [{:.1} GB/s]", r.report_line(), r.throughput_gbps(n * d * 4));
+        }
+        // robust baselines are O(N log N) per coordinate — bench smaller d
+        if d <= 1_000_000 {
+            for name in ["median", "trimmed-mean"] {
+                let mut agg = aggregation::by_name(name, n).unwrap();
+                let r = bench_auto(&format!("{name} N={n} d={d}"), budget, || {
+                    agg.aggregate(&gs, &buckets, &mut out);
+                });
+                println!("{}", r.report_line());
+            }
+        }
+    }
+}

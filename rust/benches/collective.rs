@@ -1,0 +1,49 @@
+//! Collective-substrate bench: the data-moving ring all-reduce
+//! implementation vs buffer sizes, plus the α-β closed forms it charges.
+
+use adacons::bench::bench_auto;
+use adacons::collective::{ring_allreduce, CostModel, Topology};
+use adacons::util::prng::Rng;
+
+fn main() {
+    let budget = std::env::var("BENCH_BUDGET_S")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.4);
+    println!("== ring all-reduce (in-process data movement) ==");
+    for (n, d) in [(4usize, 262_144usize), (8, 262_144), (8, 2_097_152), (32, 262_144)] {
+        let mut rng = Rng::new(0);
+        let base: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; d];
+                rng.fill_normal_f32(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let model = CostModel::from_topology(&Topology::ring_gbps(n, 100.0));
+        let mut work = base.clone();
+        let r = bench_auto(&format!("ring_allreduce N={n} d={d}"), budget, || {
+            work.clone_from(&base);
+            ring_allreduce(&mut work, &model, None);
+        });
+        println!(
+            "{}   [{:.2} GB/s moved]",
+            r.report_line(),
+            r.throughput_gbps(2 * (n - 1) * (d / n) * 4 * n)
+        );
+    }
+
+    println!("\n== α-β model closed forms (simulated fabric seconds) ==");
+    for gbps in [100.0, 800.0] {
+        for n in [8usize, 32] {
+            let m = CostModel::from_topology(&Topology::ring_gbps(n, gbps));
+            let d = 25_600_000; // ResNet-50 scale
+            println!(
+                "  {gbps:>4} Gb/s N={n:<3}: allreduce(d) {:>8.3} ms, allgather(N) {:>7.3} us, adacons iter comm {:>8.3} ms",
+                m.allreduce_s(d * 4) * 1e3,
+                m.allgather_s(4) * 1e6,
+                m.adacons_iteration_s(d) * 1e3
+            );
+        }
+    }
+}

@@ -1,0 +1,56 @@
+//! Table 1 bench: measured per-iteration wall time, Sum vs AdaCons, on
+//! every model task — the end-to-end overhead the paper reports as
+//! 1.04-1.05x. (The `adacons table table1` harness adds the simulated
+//! paper-scale rows; this bench is the measured column.)
+
+use std::sync::Arc;
+
+use adacons::config::TrainConfig;
+use adacons::coordinator::Trainer;
+use adacons::optim::Schedule;
+use adacons::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let steps = std::env::var("BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10usize);
+    let rt = match Runtime::open_default() {
+        Ok(rt) => Arc::new(rt),
+        Err(e) => {
+            eprintln!("artifacts not built ({e}); run `make artifacts` first");
+            return Ok(());
+        }
+    };
+    println!("== Table 1 (measured, this host): per-iteration seconds, N=8, {steps} steps ==");
+    println!(
+        "{:<16} {:>12} {:>12} {:>10}",
+        "task", "Sum (ms)", "AdaCons (ms)", "slowdown"
+    );
+    for artifact in ["linreg_b64", "mlp_cls_b32", "det_b32", "dlrm_b64", "tfm_sm_b8"] {
+        let mut iter_ms = Vec::new();
+        for agg in ["mean", "adacons"] {
+            let cfg = TrainConfig {
+                artifact: artifact.into(),
+                workers: 8,
+                aggregator: agg.into(),
+                optimizer: "sgd".into(),
+                schedule: Schedule::Const { lr: 0.001 },
+                steps,
+                seed: 0,
+                ..TrainConfig::default()
+            };
+            let res = Trainer::new(rt.clone(), cfg)?.run()?;
+            iter_ms.push(res.wall_iter_s * 1e3);
+        }
+        println!(
+            "{:<16} {:>12.2} {:>12.2} {:>9.3}x",
+            artifact,
+            iter_ms[0],
+            iter_ms[1],
+            iter_ms[1] / iter_ms[0]
+        );
+    }
+    println!("\npaper: 1.04x (Imagenet), 1.04x (RetinaNet), 1.05x (DLRM), 1.04x (BERT)");
+    Ok(())
+}

@@ -1,0 +1,384 @@
+//! AdaCons — adaptive consensus gradient aggregation (the paper).
+//!
+//! Pipeline per bucket (Alg. 1):
+//!
+//! 1. **Consensus statistics** (Eq. 7): `dots_i = <g_i, g_bar>`,
+//!    `sqn_i = ||g_i||²` — one fused pass over the gradient matrix (on a
+//!    real fabric: the first O(d) all-reduce).
+//! 2. **Subspace coefficients**: `α_i = dots_i / ||g_i||` — the first-order
+//!    step in the subspace spanned by the *normalized* worker directions
+//!    (an O(N) all-gather shares them).
+//! 3. **Subspace momentum** (Eq. 11): sort-invariant EMA — sort α, EMA the
+//!    sorted vector against the running sorted EMA, scatter back through
+//!    the inverse permutation. Decouples the smoothing from worker
+//!    identity, since shards are re-dealt every step.
+//! 4. **Unbiased normalization** (Eq. 13): scale so Σ α_i = 1, removing
+//!    the λ hyper-parameter; without it, the raw Eq. 8 scaling λ/N is used
+//!    (λ = 1, Table 2 "AdaCons" column).
+//! 5. **Re-projection** (Eq. 12): `out = Σ γ_i g_i` with
+//!    `γ_i = α_i / ||g_i||` (the second O(d) all-reduce).
+
+use super::stats::CoeffStages;
+use super::{AggInfo, Aggregator};
+use crate::collective::CollectiveKind;
+use crate::tensor::{Buckets, GradSet};
+
+/// Which components of the method are enabled (Table 2 ablation axes).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaConsConfig {
+    /// EMA momentum over sorted subspace coefficients (Eq. 11). β = 0.99
+    /// in the paper.
+    pub momentum: Option<f64>,
+    /// Sum-one normalization (Eq. 13).
+    pub normalize: bool,
+    /// λ for the un-normalized variant (Eq. 8; paper ablates λ = 1).
+    pub lambda: f64,
+}
+
+impl AdaConsConfig {
+    /// Full method: momentum + normalization (the paper's "Moment. & Norm.").
+    pub fn full() -> Self {
+        AdaConsConfig {
+            momentum: Some(0.99),
+            normalize: true,
+            lambda: 1.0,
+        }
+    }
+
+    /// Basic subspace aggregation, Eq. 8 with λ = 1.
+    pub fn raw() -> Self {
+        AdaConsConfig {
+            momentum: None,
+            normalize: false,
+            lambda: 1.0,
+        }
+    }
+
+    pub fn momentum_only() -> Self {
+        AdaConsConfig {
+            momentum: Some(0.99),
+            normalize: false,
+            lambda: 1.0,
+        }
+    }
+
+    pub fn norm_only() -> Self {
+        AdaConsConfig {
+            momentum: None,
+            normalize: true,
+            lambda: 1.0,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct AdaCons {
+    cfg: AdaConsConfig,
+    /// Running sorted-EMA state, one vector per bucket (lazily sized).
+    ema_sorted: Vec<Vec<f64>>,
+    /// Scratch reused across steps (no allocation on the hot path).
+    alpha: Vec<f64>,
+    gamma: Vec<f32>,
+    order: Vec<usize>,
+}
+
+impl AdaCons {
+    pub fn new(cfg: AdaConsConfig) -> Self {
+        AdaCons {
+            cfg,
+            ema_sorted: Vec::new(),
+            alpha: Vec::new(),
+            gamma: Vec::new(),
+            order: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> AdaConsConfig {
+        self.cfg
+    }
+
+    /// The coefficient pipeline on precomputed statistics; exposed for unit
+    /// tests and the property suite. Returns (γ, stages).
+    pub fn weights_from_stats(
+        &mut self,
+        bucket_idx: usize,
+        dots: &[f64],
+        sqn: &[f64],
+    ) -> (Vec<f32>, CoeffStages) {
+        let n = dots.len();
+        let mut stages = CoeffStages::default();
+
+        // -- subspace coefficients α_i = <g_i, g_bar> / ||g_i|| (Eq. 7) --
+        self.alpha.clear();
+        for i in 0..n {
+            let norm = sqn[i].sqrt();
+            self.alpha.push(if norm > 0.0 { dots[i] / norm } else { 0.0 });
+        }
+        stages.record_raw(&self.alpha);
+
+        // -- sorted-EMA momentum (Eq. 11) --
+        if let Some(beta) = self.cfg.momentum {
+            while self.ema_sorted.len() <= bucket_idx {
+                self.ema_sorted.push(Vec::new());
+            }
+            self.order.clear();
+            self.order.extend(0..n);
+            let alpha = &self.alpha;
+            self.order
+                .sort_by(|&a, &b| alpha[a].partial_cmp(&alpha[b]).unwrap());
+            let ema = &mut self.ema_sorted[bucket_idx];
+            if ema.len() != n {
+                // First step (or N changed): seed the EMA with the current
+                // sorted coefficients instead of zero so early steps are
+                // not artificially shrunk.
+                ema.clear();
+                ema.extend(self.order.iter().map(|&i| self.alpha[i]));
+            } else {
+                for (k, &i) in self.order.iter().enumerate() {
+                    ema[k] = beta * ema[k] + (1.0 - beta) * self.alpha[i];
+                }
+            }
+            for (k, &i) in self.order.iter().enumerate() {
+                self.alpha[i] = ema[k];
+            }
+            stages.record_momentum(&self.alpha);
+        }
+
+        // -- normalization (Eq. 13) or raw λ/N scaling (Eq. 8) --
+        if self.cfg.normalize {
+            let denom: f64 = self.alpha.iter().sum();
+            let scale_ref: f64 = self.alpha.iter().map(|a| a.abs()).sum::<f64>();
+            if denom.abs() > 1e-12 * scale_ref.max(1e-30) {
+                let inv = 1.0 / denom;
+                for a in &mut self.alpha {
+                    *a *= inv;
+                }
+            } else {
+                // Degenerate subspace (coefficients cancel): fall back to
+                // uniform weights = plain averaging.
+                for (i, a) in self.alpha.iter_mut().enumerate() {
+                    let norm = sqn[i].sqrt();
+                    *a = norm / n as f64; // γ becomes 1/N below
+                }
+            }
+        } else {
+            let s = self.cfg.lambda / n as f64;
+            for a in &mut self.alpha {
+                *a *= s;
+            }
+        }
+        stages.record_final(&self.alpha);
+
+        // -- re-projection weights γ_i = α_i / ||g_i|| (Eq. 12) --
+        self.gamma.clear();
+        for i in 0..n {
+            let norm = sqn[i].sqrt();
+            self.gamma
+                .push(if norm > 0.0 { (self.alpha[i] / norm) as f32 } else { 0.0 });
+        }
+        (self.gamma.clone(), stages)
+    }
+}
+
+impl Aggregator for AdaCons {
+    fn name(&self) -> &'static str {
+        match (self.cfg.momentum.is_some(), self.cfg.normalize) {
+            (true, true) => "adacons",
+            (false, false) => "adacons-raw",
+            (true, false) => "adacons-momentum",
+            (false, true) => "adacons-norm",
+        }
+    }
+
+    fn aggregate(&mut self, grads: &GradSet, buckets: &Buckets, out: &mut [f32]) -> AggInfo {
+        assert_eq!(out.len(), grads.d());
+        let mut first_gamma = None;
+        let mut first_stages = None;
+        for (b, (lo, hi)) in buckets.iter().enumerate() {
+            let st = grads.consensus_stats_range(lo, hi);
+            let (gamma, stages) = self.weights_from_stats(b, &st.dots, &st.sqn);
+            grads.weighted_sum_range_into(&gamma, lo, hi, &mut out[lo..hi]);
+            if b == 0 {
+                first_gamma = Some(gamma);
+                first_stages = Some(stages);
+            }
+        }
+        AggInfo {
+            gammas: first_gamma,
+            coeff_stages: first_stages,
+            comm: vec![
+                (CollectiveKind::AllReduce, grads.d() * 4),
+                (CollectiveKind::AllGather, 4),
+                (CollectiveKind::AllReduce, grads.d() * 4),
+            ],
+        }
+    }
+
+    fn reset(&mut self) {
+        self.ema_sorted.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Buckets, GradSet};
+    use crate::util::prng::Rng;
+
+    fn random_set(n: usize, d: usize, seed: u64) -> GradSet {
+        let mut rng = Rng::new(seed);
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..d).map(|_| rng.normal_f32(1.0)).collect())
+            .collect();
+        GradSet::from_rows(&rows)
+    }
+
+    #[test]
+    fn raw_collapses_to_mean_for_identical_gradients() {
+        let g: Vec<f32> = (0..64).map(|i| (i as f32) * 0.1 - 3.0).collect();
+        let gs = GradSet::from_rows(&vec![g.clone(); 4]);
+        let mut out = vec![0.0; 64];
+        let mut agg = AdaCons::new(AdaConsConfig::raw());
+        agg.aggregate(&gs, &Buckets::single(64), &mut out);
+        for j in 0..64 {
+            assert!((out[j] - g[j]).abs() < 1e-5, "j={j}");
+        }
+    }
+
+    #[test]
+    fn normalized_weights_have_sum_one_subspace_coeffs() {
+        let gs = random_set(8, 200, 1);
+        let st = gs.consensus_stats();
+        let mut agg = AdaCons::new(AdaConsConfig::norm_only());
+        let (gamma, _) = agg.weights_from_stats(0, &st.dots, &st.sqn);
+        // Σ γ_i ||g_i|| = Σ α_i = 1 (Eq. 13).
+        let s: f64 = gamma
+            .iter()
+            .zip(&st.sqn)
+            .map(|(&g, &q)| g as f64 * q.sqrt())
+            .sum();
+        assert!((s - 1.0).abs() < 1e-6, "{s}");
+    }
+
+    #[test]
+    fn raw_matches_eq8_closed_form() {
+        let gs = random_set(5, 50, 2);
+        let st = gs.consensus_stats();
+        let mut agg = AdaCons::new(AdaConsConfig::raw());
+        let (gamma, _) = agg.weights_from_stats(0, &st.dots, &st.sqn);
+        for i in 0..5 {
+            let expect = (1.0 / 5.0) * st.dots[i] / st.sqn[i];
+            assert!((gamma[i] as f64 - expect).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn momentum_smooths_coefficient_jumps() {
+        let mut agg = AdaCons::new(AdaConsConfig::momentum_only());
+        let sqn = vec![1.0; 4];
+        // Step 1 seeds the EMA.
+        let (g1, _) = agg.weights_from_stats(0, &[1.0, 1.0, 1.0, 1.0], &sqn);
+        // Step 2: one coefficient spikes; EMA should keep weights near step 1.
+        let (g2, _) = agg.weights_from_stats(0, &[1.0, 1.0, 1.0, 100.0], &sqn);
+        let jump = (g2[3] - g1[3]).abs();
+        assert!(jump < 0.3 * (100.0f32 - 1.0) / 4.0, "jump={jump}");
+        // Without momentum the spike passes through.
+        let mut raw = AdaCons::new(AdaConsConfig::raw());
+        let (r1, _) = raw.weights_from_stats(0, &[1.0, 1.0, 1.0, 1.0], &sqn);
+        let (r2, _) = raw.weights_from_stats(0, &[1.0, 1.0, 1.0, 100.0], &sqn);
+        assert!((r2[3] - r1[3]).abs() > 10.0 * jump);
+    }
+
+    #[test]
+    fn momentum_is_order_invariant() {
+        // Same multiset of coefficients in different worker order must
+        // produce the same multiset of weights (sort trick, Eq. 11).
+        let sqn = vec![1.0; 4];
+        let mut a = AdaCons::new(AdaConsConfig::momentum_only());
+        let mut b = AdaCons::new(AdaConsConfig::momentum_only());
+        a.weights_from_stats(0, &[1.0, 2.0, 3.0, 4.0], &sqn);
+        b.weights_from_stats(0, &[4.0, 3.0, 2.0, 1.0], &sqn);
+        let (ga, _) = a.weights_from_stats(0, &[5.0, 6.0, 7.0, 8.0], &sqn);
+        let (gb, _) = b.weights_from_stats(0, &[8.0, 7.0, 6.0, 5.0], &sqn);
+        let mut sa = ga.clone();
+        let mut sb = gb.clone();
+        sa.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        sb.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        for (x, y) in sa.iter().zip(&sb) {
+            assert!((x - y).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn zero_gradient_worker_gets_zero_weight() {
+        let mut rows = vec![vec![0.0f32; 32]; 3];
+        rows[0] = (0..32).map(|i| i as f32 * 0.1).collect();
+        rows[1] = rows[0].iter().map(|x| x * 2.0).collect();
+        let gs = GradSet::from_rows(&rows);
+        let st = gs.consensus_stats();
+        let mut agg = AdaCons::new(AdaConsConfig::full());
+        let (gamma, _) = agg.weights_from_stats(0, &st.dots, &st.sqn);
+        assert_eq!(gamma[2], 0.0);
+        assert!(gamma[0] > 0.0 && gamma[1] > 0.0);
+    }
+
+    #[test]
+    fn degenerate_cancellation_falls_back_to_mean() {
+        // Two exactly-opposed gradients: Σα = 0, Eq. 13 is singular.
+        let g: Vec<f32> = (0..16).map(|i| i as f32 - 8.0).collect();
+        let neg: Vec<f32> = g.iter().map(|x| -x).collect();
+        let gs = GradSet::from_rows(&[g.clone(), neg]);
+        let mut out = vec![0.0; 16];
+        let mut agg = AdaCons::new(AdaConsConfig::norm_only());
+        let info = agg.aggregate(&gs, &Buckets::single(16), &mut out);
+        let gam = info.gammas.unwrap();
+        assert!((gam[0] - 0.5).abs() < 1e-6 && (gam[1] - 0.5).abs() < 1e-6);
+        // Mean of g and -g is zero.
+        assert!(out.iter().all(|&x| x.abs() < 1e-5));
+    }
+
+    #[test]
+    fn bucketed_aggregation_covers_whole_vector() {
+        let gs = random_set(4, 100, 3);
+        let mut whole = vec![0.0; 100];
+        let mut parts = vec![0.0; 100];
+        let mut a1 = AdaCons::new(AdaConsConfig::norm_only());
+        let mut a2 = AdaCons::new(AdaConsConfig::norm_only());
+        a1.aggregate(&gs, &Buckets::single(100), &mut whole);
+        a2.aggregate(&gs, &Buckets::fixed(100, 30), &mut parts);
+        // Both produce finite, fully-written outputs; bucketed differs in
+        // general (per-layer coefficients) but must agree when buckets = 1.
+        assert!(parts.iter().all(|x| x.is_finite()));
+        let mut again = vec![0.0; 100];
+        let mut a3 = AdaCons::new(AdaConsConfig::norm_only());
+        a3.aggregate(&gs, &Buckets::single(100), &mut again);
+        assert_eq!(whole, again);
+    }
+
+    #[test]
+    fn descent_direction_positive_correlation_with_mean() {
+        // <ψ, g_bar> > 0 for generic same-signed-consensus gradients:
+        // the aggregate must remain a descent direction.
+        let gs = random_set(8, 300, 4);
+        let mut mean = vec![0.0; 300];
+        gs.mean_into(&mut mean);
+        let mut out = vec![0.0; 300];
+        let mut agg = AdaCons::new(AdaConsConfig::full());
+        agg.aggregate(&gs, &Buckets::single(300), &mut out);
+        let ip = crate::tensor::ops::dot(&out, &mean);
+        assert!(ip > 0.0, "ip={ip}");
+    }
+
+    #[test]
+    fn reset_clears_momentum() {
+        let sqn = vec![1.0; 3];
+        let mut agg = AdaCons::new(AdaConsConfig::full());
+        agg.weights_from_stats(0, &[1.0, 2.0, 3.0], &sqn);
+        agg.reset();
+        // After reset, the next step re-seeds (same result as a fresh one).
+        let (g1, _) = agg.weights_from_stats(0, &[3.0, 4.0, 5.0], &sqn);
+        let mut fresh = AdaCons::new(AdaConsConfig::full());
+        let (g2, _) = fresh.weights_from_stats(0, &[3.0, 4.0, 5.0], &sqn);
+        assert_eq!(g1, g2);
+    }
+}

@@ -1,0 +1,82 @@
+//! GRAWA-style baseline [Dimlioglu & Choromanska, AISTATS 2024]: weighted
+//! averaging with weights inversely proportional to gradient norms
+//! (pulls toward flat regions). Weights are normalized to sum one.
+
+use super::{AggInfo, Aggregator};
+use crate::collective::CollectiveKind;
+use crate::tensor::{Buckets, GradSet};
+
+#[derive(Debug, Default)]
+pub struct Grawa;
+
+impl Grawa {
+    pub fn new() -> Self {
+        Grawa
+    }
+}
+
+impl Aggregator for Grawa {
+    fn name(&self) -> &'static str {
+        "grawa"
+    }
+
+    fn aggregate(&mut self, grads: &GradSet, _buckets: &Buckets, out: &mut [f32]) -> AggInfo {
+        let n = grads.n();
+        let st = grads.consensus_stats();
+        let inv: Vec<f64> = st
+            .sqn
+            .iter()
+            .map(|&q| {
+                let norm = q.sqrt();
+                if norm > 1e-30 {
+                    1.0 / norm
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let total: f64 = inv.iter().sum();
+        let gammas: Vec<f32> = if total > 0.0 {
+            inv.iter().map(|&w| (w / total) as f32).collect()
+        } else {
+            vec![1.0 / n as f32; n]
+        };
+        grads.weighted_sum_into(&gammas, out);
+        AggInfo {
+            gammas: Some(gammas),
+            coeff_stages: None,
+            comm: vec![
+                (CollectiveKind::AllGather, 4),
+                (CollectiveKind::AllReduce, grads.d() * 4),
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Buckets, GradSet};
+
+    #[test]
+    fn weights_favor_small_norm_and_sum_one() {
+        let gs = GradSet::from_rows(&[vec![1.0f32; 16], vec![4.0f32; 16]]);
+        let mut out = vec![0.0; 16];
+        let info = Grawa::new().aggregate(&gs, &Buckets::single(16), &mut out);
+        let g = info.gammas.unwrap();
+        assert!(g[0] > g[1]);
+        assert!((g.iter().map(|&x| x as f64).sum::<f64>() - 1.0).abs() < 1e-6);
+        assert!((g[0] as f64 / g[1] as f64 - 4.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn all_zero_gradients_fall_back_to_uniform() {
+        let gs = GradSet::from_rows(&vec![vec![0.0f32; 4]; 3]);
+        let mut out = vec![0.0; 4];
+        let info = Grawa::new().aggregate(&gs, &Buckets::single(4), &mut out);
+        let g = info.gammas.unwrap();
+        for w in g {
+            assert!((w - 1.0 / 3.0).abs() < 1e-6);
+        }
+    }
+}

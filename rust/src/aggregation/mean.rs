@@ -1,0 +1,46 @@
+//! The averaging baseline — what the paper calls "Sum" (gradient averaging
+//! with the learning rate folded in). One ring all-reduce per step.
+
+use super::{AggInfo, Aggregator};
+use crate::collective::CollectiveKind;
+use crate::tensor::{Buckets, GradSet};
+
+#[derive(Debug, Default)]
+pub struct MeanAggregator;
+
+impl MeanAggregator {
+    pub fn new() -> Self {
+        MeanAggregator
+    }
+}
+
+impl Aggregator for MeanAggregator {
+    fn name(&self) -> &'static str {
+        "mean"
+    }
+
+    fn aggregate(&mut self, grads: &GradSet, _buckets: &Buckets, out: &mut [f32]) -> AggInfo {
+        grads.mean_into(out);
+        AggInfo {
+            gammas: Some(vec![1.0 / grads.n() as f32; grads.n()]),
+            coeff_stages: None,
+            comm: vec![(CollectiveKind::AllReduce, grads.d() * 4)],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Buckets, GradSet};
+
+    #[test]
+    fn mean_of_constant_rows() {
+        let gs = GradSet::from_rows(&[vec![1.0; 8], vec![3.0; 8]]);
+        let mut out = vec![0.0; 8];
+        let info = MeanAggregator::new().aggregate(&gs, &Buckets::single(8), &mut out);
+        assert!(out.iter().all(|&x| (x - 2.0).abs() < 1e-6));
+        assert_eq!(info.gammas.unwrap(), vec![0.5, 0.5]);
+        assert_eq!(info.comm.len(), 1);
+    }
+}

@@ -1,0 +1,100 @@
+//! Gradient aggregation — the paper's contribution surface.
+//!
+//! An [`Aggregator`] maps the N worker gradients (a [`GradSet`]) to one
+//! descent direction, optionally per parameter bucket (model-wise vs
+//! layer-wise).  Implementations:
+//!
+//! * [`mean::MeanAggregator`] — the ubiquitous averaging baseline ("Sum").
+//! * [`adacons::AdaCons`] — the paper: subspace first-order coefficients
+//!   (Eq. 7/8), sorted-EMA subspace momentum (Eq. 11), sum-one
+//!   normalization (Eq. 13), each independently toggleable (Table 2).
+//! * [`adasum::Adasum`] — the orthogonality-enhancing baseline [34].
+//! * [`grawa::Grawa`] — inverse-gradient-norm weighting [18].
+//! * [`robust`] — coordinate median / trimmed mean (Byzantine baselines).
+
+pub mod adacons;
+pub mod adasum;
+pub mod grawa;
+pub mod mean;
+pub mod robust;
+pub mod stats;
+
+use crate::collective::CollectiveKind;
+use crate::tensor::{Buckets, GradSet};
+
+pub use adacons::{AdaCons, AdaConsConfig};
+pub use adasum::Adasum;
+pub use grawa::Grawa;
+pub use mean::MeanAggregator;
+pub use robust::{CoordinateMedian, TrimmedMean};
+pub use stats::CoeffStages;
+
+/// Metadata returned by one aggregation step.
+#[derive(Debug, Clone, Default)]
+pub struct AggInfo {
+    /// Final per-worker weights γ (first bucket), when the scheme is a
+    /// linear combination. `None` for non-linear schemes (median).
+    pub gammas: Option<Vec<f32>>,
+    /// Subspace-coefficient statistics per stage (Fig. 7), when applicable.
+    pub coeff_stages: Option<CoeffStages>,
+    /// Communication ops this step would issue on a real fabric
+    /// (kind, payload bytes) — charged to the SimClock by the coordinator.
+    pub comm: Vec<(CollectiveKind, usize)>,
+}
+
+/// A synchronous gradient aggregation scheme.
+pub trait Aggregator: Send {
+    fn name(&self) -> &'static str;
+
+    /// Aggregate `grads` into `out` (length d), bucket by bucket.
+    fn aggregate(&mut self, grads: &GradSet, buckets: &Buckets, out: &mut [f32]) -> AggInfo;
+
+    /// Clear step-dependent state (e.g. momentum) between runs.
+    fn reset(&mut self) {}
+}
+
+/// Build an aggregator by name — the config-file surface.
+/// Names: `mean` (aka `sum`), `adacons`, `adacons-raw`, `adacons-momentum`,
+/// `adacons-norm`, `adasum`, `grawa`, `median`, `trimmed-mean`.
+pub fn by_name(name: &str, n_workers: usize) -> Option<Box<dyn Aggregator>> {
+    let _ = n_workers;
+    match name {
+        "mean" | "sum" | "average" => Some(Box::new(MeanAggregator::new())),
+        "adacons" => Some(Box::new(AdaCons::new(AdaConsConfig::full()))),
+        "adacons-raw" => Some(Box::new(AdaCons::new(AdaConsConfig::raw()))),
+        "adacons-momentum" => Some(Box::new(AdaCons::new(AdaConsConfig::momentum_only()))),
+        "adacons-norm" => Some(Box::new(AdaCons::new(AdaConsConfig::norm_only()))),
+        "adasum" => Some(Box::new(Adasum::new())),
+        "grawa" => Some(Box::new(Grawa::new())),
+        "median" => Some(Box::new(CoordinateMedian::new())),
+        "trimmed-mean" => Some(Box::new(TrimmedMean::new(0.2))),
+        _ => None,
+    }
+}
+
+/// All aggregator names, for CLI help and sweep harnesses.
+pub const ALL_NAMES: &[&str] = &[
+    "mean",
+    "adacons",
+    "adacons-raw",
+    "adacons-momentum",
+    "adacons-norm",
+    "adasum",
+    "grawa",
+    "median",
+    "trimmed-mean",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_all_names() {
+        for name in ALL_NAMES {
+            let agg = by_name(name, 4).unwrap_or_else(|| panic!("{name}"));
+            assert!(!agg.name().is_empty());
+        }
+        assert!(by_name("nope", 4).is_none());
+    }
+}

@@ -1,0 +1,150 @@
+//! Robust aggregation baselines for the Byzantine-worker example (the
+//! paper's §1 motivates adaptive aggregation by workers producing
+//! computing errors / bad local gradients; these are the classical
+//! defenses to compare against).
+
+use super::{AggInfo, Aggregator};
+use crate::collective::CollectiveKind;
+use crate::tensor::{Buckets, GradSet};
+
+/// Coordinate-wise median.
+#[derive(Debug, Default)]
+pub struct CoordinateMedian {
+    scratch: Vec<f32>,
+}
+
+impl CoordinateMedian {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Aggregator for CoordinateMedian {
+    fn name(&self) -> &'static str {
+        "median"
+    }
+
+    fn aggregate(&mut self, grads: &GradSet, _buckets: &Buckets, out: &mut [f32]) -> AggInfo {
+        let n = grads.n();
+        self.scratch.resize(n, 0.0);
+        for j in 0..grads.d() {
+            for i in 0..n {
+                self.scratch[i] = grads.row(i)[j];
+            }
+            self.scratch
+                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            out[j] = if n % 2 == 1 {
+                self.scratch[n / 2]
+            } else {
+                0.5 * (self.scratch[n / 2 - 1] + self.scratch[n / 2])
+            };
+        }
+        AggInfo {
+            gammas: None,
+            coeff_stages: None,
+            // Requires gathering all gradients: N x d all-gather cost.
+            comm: vec![(CollectiveKind::AllGather, grads.d() * 4)],
+        }
+    }
+}
+
+/// Coordinate-wise α-trimmed mean: drop the `trim_frac` highest and lowest
+/// values per coordinate, average the rest.
+#[derive(Debug)]
+pub struct TrimmedMean {
+    trim_frac: f64,
+    scratch: Vec<f32>,
+}
+
+impl TrimmedMean {
+    pub fn new(trim_frac: f64) -> Self {
+        assert!((0.0..0.5).contains(&trim_frac));
+        TrimmedMean {
+            trim_frac,
+            scratch: Vec::new(),
+        }
+    }
+}
+
+impl Aggregator for TrimmedMean {
+    fn name(&self) -> &'static str {
+        "trimmed-mean"
+    }
+
+    fn aggregate(&mut self, grads: &GradSet, _buckets: &Buckets, out: &mut [f32]) -> AggInfo {
+        let n = grads.n();
+        let k = ((n as f64) * self.trim_frac).floor() as usize;
+        let keep = n - 2 * k;
+        assert!(keep > 0, "trim fraction leaves no workers");
+        self.scratch.resize(n, 0.0);
+        for j in 0..grads.d() {
+            for i in 0..n {
+                self.scratch[i] = grads.row(i)[j];
+            }
+            self.scratch
+                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            let s: f64 = self.scratch[k..n - k].iter().map(|&x| x as f64).sum();
+            out[j] = (s / keep as f64) as f32;
+        }
+        AggInfo {
+            gammas: None,
+            coeff_stages: None,
+            comm: vec![(CollectiveKind::AllGather, grads.d() * 4)],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Buckets, GradSet};
+
+    #[test]
+    fn median_ignores_one_outlier() {
+        let rows = vec![
+            vec![1.0f32, 1.0],
+            vec![1.1, 0.9],
+            vec![0.9, 1.1],
+            vec![1e6, -1e6], // Byzantine
+            vec![1.0, 1.0],
+        ];
+        let gs = GradSet::from_rows(&rows);
+        let mut out = vec![0.0; 2];
+        CoordinateMedian::new().aggregate(&gs, &Buckets::single(2), &mut out);
+        assert!((out[0] - 1.0).abs() < 0.11);
+        assert!((out[1] - 1.0).abs() < 0.11);
+    }
+
+    #[test]
+    fn median_even_count_averages_middles() {
+        let rows = vec![vec![1.0f32], vec![2.0], vec![3.0], vec![4.0]];
+        let gs = GradSet::from_rows(&rows);
+        let mut out = vec![0.0; 1];
+        CoordinateMedian::new().aggregate(&gs, &Buckets::single(1), &mut out);
+        assert!((out[0] - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn trimmed_mean_drops_extremes() {
+        let rows = vec![
+            vec![0.0f32],
+            vec![10.0],
+            vec![11.0],
+            vec![12.0],
+            vec![1000.0],
+        ];
+        let gs = GradSet::from_rows(&rows);
+        let mut out = vec![0.0; 1];
+        TrimmedMean::new(0.2).aggregate(&gs, &Buckets::single(1), &mut out);
+        assert!((out[0] - 11.0).abs() < 1e-5, "{}", out[0]);
+    }
+
+    #[test]
+    fn trimmed_mean_zero_trim_is_mean() {
+        let rows = vec![vec![1.0f32], vec![3.0]];
+        let gs = GradSet::from_rows(&rows);
+        let mut out = vec![0.0; 1];
+        TrimmedMean::new(0.0).aggregate(&gs, &Buckets::single(1), &mut out);
+        assert!((out[0] - 2.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,72 @@
+//! Subspace-coefficient stage statistics (paper Fig. 7): mean/std of the
+//! coefficients (a) at the first-order approximation, (b) after momentum,
+//! (c) after the unbiasing normalization.
+
+use crate::util::stats;
+
+#[derive(Debug, Clone, Default)]
+pub struct CoeffStages {
+    pub raw_mean: f64,
+    pub raw_std: f64,
+    pub momentum_mean: Option<f64>,
+    pub momentum_std: Option<f64>,
+    pub final_mean: f64,
+    pub final_std: f64,
+}
+
+impl CoeffStages {
+    pub fn record_raw(&mut self, alpha: &[f64]) {
+        self.raw_mean = stats::mean(alpha);
+        self.raw_std = stats::std(alpha);
+    }
+
+    pub fn record_momentum(&mut self, alpha: &[f64]) {
+        self.momentum_mean = Some(stats::mean(alpha));
+        self.momentum_std = Some(stats::std(alpha));
+    }
+
+    pub fn record_final(&mut self, alpha: &[f64]) {
+        self.final_mean = stats::mean(alpha);
+        self.final_std = stats::std(alpha);
+    }
+
+    /// CSV row: raw_mean,raw_std,mom_mean,mom_std,final_mean,final_std.
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{}",
+            self.raw_mean,
+            self.raw_std,
+            self.momentum_mean.unwrap_or(f64::NAN),
+            self.momentum_std.unwrap_or(f64::NAN),
+            self.final_mean,
+            self.final_std
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_all_stages() {
+        let mut s = CoeffStages::default();
+        s.record_raw(&[1.0, 2.0, 3.0]);
+        s.record_momentum(&[1.5, 2.0, 2.5]);
+        s.record_final(&[0.2, 0.3, 0.5]);
+        assert!((s.raw_mean - 2.0).abs() < 1e-12);
+        assert!(s.momentum_std.unwrap() < s.raw_std);
+        assert!((s.final_mean - 1.0 / 3.0).abs() < 1e-12);
+        let row = s.csv_row();
+        assert_eq!(row.split(',').count(), 6);
+    }
+
+    #[test]
+    fn momentum_optional() {
+        let mut s = CoeffStages::default();
+        s.record_raw(&[1.0, 1.0]);
+        s.record_final(&[0.5, 0.5]);
+        assert!(s.momentum_mean.is_none());
+        assert!(s.csv_row().contains("NaN"));
+    }
+}

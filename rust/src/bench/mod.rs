@@ -1,0 +1,112 @@
+//! Micro-benchmark harness (criterion is not vendored offline): warmup,
+//! timed iterations, mean/std/p50/p99 reporting, and a throughput helper.
+
+use crate::util::stats::Quantiles;
+use crate::util::timer::Timer;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>10.3} ms ± {:>7.3}  (p50 {:>8.3}, p99 {:>8.3}, n={})",
+            self.name,
+            self.mean_s * 1e3,
+            self.std_s * 1e3,
+            self.p50_s * 1e3,
+            self.p99_s * 1e3,
+            self.iters
+        )
+    }
+
+    /// GB/s given bytes touched per iteration.
+    pub fn throughput_gbps(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.mean_s / 1e9
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` warmup calls.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        f();
+        samples.push(t.elapsed_s());
+    }
+    summarize(name, &samples)
+}
+
+/// Auto-calibrated: choose iteration count targeting ~`budget_s` seconds.
+pub fn bench_auto(name: &str, budget_s: f64, mut f: impl FnMut()) -> BenchResult {
+    // one probe call for calibration (also serves as warmup)
+    let t = Timer::start();
+    f();
+    let probe = t.elapsed_s().max(1e-9);
+    let iters = ((budget_s / probe) as usize).clamp(5, 10_000);
+    bench(name, 1, iters, f)
+}
+
+fn summarize(name: &str, samples: &[f64]) -> BenchResult {
+    let mean = crate::util::stats::mean(samples);
+    let std = crate::util::stats::std(samples);
+    let mut q = Quantiles::default();
+    for &s in samples {
+        q.push(s);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: mean,
+        std_s: std,
+        p50_s: q.quantile(0.5),
+        p99_s: q.quantile(0.99),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleeps() {
+        let r = bench("sleep", 1, 5, || {
+            std::thread::sleep(std::time::Duration::from_millis(2))
+        });
+        assert!(r.mean_s >= 0.0015, "{}", r.mean_s);
+        assert_eq!(r.iters, 5);
+        assert!(r.report_line().contains("sleep"));
+    }
+
+    #[test]
+    fn auto_calibration_bounds_iters() {
+        let r = bench_auto("noop", 0.01, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iters <= 10_000 && r.iters >= 5);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_s: 0.001,
+            std_s: 0.0,
+            p50_s: 0.001,
+            p99_s: 0.001,
+        };
+        assert!((r.throughput_gbps(1_000_000) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,157 @@
+//! α-β cost model for the collectives (Hockney model, the standard
+//! closed forms NCCL tuning is reasoned about with).
+//!
+//! Ring all-reduce of B bytes over n ranks: 2(n-1) steps, each moving
+//! B/n bytes over the bottleneck link → `T = 2(n-1)(α + B/(n·bw))`.
+//! Ring all-gather of per-rank payload b: (n-1) steps of b bytes.
+//! Broadcast (tree): ceil(log2 n) steps of B bytes.
+
+use super::topology::Topology;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollectiveKind {
+    AllReduce,
+    AllGather,
+    Broadcast,
+}
+
+/// Closed-form collective timing over a topology's bottleneck link.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub alpha_s: f64,
+    pub bandwidth_bps: f64,
+    pub n: usize,
+}
+
+impl CostModel {
+    pub fn from_topology(t: &Topology) -> Self {
+        let (alpha_s, bandwidth_bps) = t.bottleneck_link();
+        CostModel {
+            alpha_s,
+            bandwidth_bps,
+            n: t.n_ranks(),
+        }
+    }
+
+    /// Ring all-reduce of `bytes` total payload.
+    pub fn allreduce_s(&self, bytes: usize) -> f64 {
+        if self.n <= 1 {
+            return 0.0;
+        }
+        let steps = 2 * (self.n - 1);
+        let chunk = bytes as f64 / self.n as f64;
+        steps as f64 * (self.alpha_s + chunk / self.bandwidth_bps)
+    }
+
+    /// Ring all-gather where each rank contributes `bytes_per_rank`.
+    pub fn allgather_s(&self, bytes_per_rank: usize) -> f64 {
+        if self.n <= 1 {
+            return 0.0;
+        }
+        (self.n - 1) as f64 * (self.alpha_s + bytes_per_rank as f64 / self.bandwidth_bps)
+    }
+
+    /// Binomial-tree broadcast of `bytes`.
+    pub fn broadcast_s(&self, bytes: usize) -> f64 {
+        if self.n <= 1 {
+            return 0.0;
+        }
+        let steps = (self.n as f64).log2().ceil();
+        steps * (self.alpha_s + bytes as f64 / self.bandwidth_bps)
+    }
+
+    pub fn time_s(&self, kind: CollectiveKind, bytes: usize) -> f64 {
+        match kind {
+            CollectiveKind::AllReduce => self.allreduce_s(bytes),
+            CollectiveKind::AllGather => self.allgather_s(bytes),
+            CollectiveKind::Broadcast => self.broadcast_s(bytes),
+        }
+    }
+
+    /// Per-iteration communication time of the plain averaging baseline:
+    /// one all-reduce of the d-dimensional f32 gradient (Alg. 1 baseline).
+    pub fn sum_iteration_s(&self, d: usize) -> f64 {
+        self.allreduce_s(d * 4)
+    }
+
+    /// Per-iteration communication time of AdaCons (Alg. 1): one O(d)
+    /// all-reduce for `<g_i, g_bar>`, an O(N) all-gather of scalar
+    /// coefficients, then the second O(d) all-reduce of the re-weighted
+    /// gradients.
+    pub fn adacons_iteration_s(&self, d: usize) -> f64 {
+        self.allreduce_s(d * 4) + self.allgather_s(4) + self.allreduce_s(d * 4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::topology::Topology;
+
+    fn model(n: usize, gbps: f64) -> CostModel {
+        CostModel::from_topology(&Topology::ring_gbps(n, gbps))
+    }
+
+    #[test]
+    fn closed_forms() {
+        let m = model(4, 80.0); // 10 GB/s
+        // allreduce 40 MB: 6 steps of 10 MB => 6*(5e-6 + 1e-3)
+        let t = m.allreduce_s(40_000_000);
+        assert!((t - 6.0 * (5e-6 + 1e-3)).abs() < 1e-9, "{t}");
+        // allgather of 4 bytes/rank: 3 steps, latency dominated
+        let g = m.allgather_s(4);
+        assert!((g - 3.0 * (5e-6 + 4.0 / 10e9)).abs() < 1e-12);
+        // broadcast 1 MB over 4 ranks: 2 steps
+        let b = m.broadcast_s(1_000_000);
+        assert!((b - 2.0 * (5e-6 + 1e-4)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_rank_is_free() {
+        let m = model(1, 100.0);
+        assert_eq!(m.allreduce_s(1 << 20), 0.0);
+        assert_eq!(m.allgather_s(4), 0.0);
+        assert_eq!(m.broadcast_s(4), 0.0);
+    }
+
+    #[test]
+    fn adacons_overhead_ratio_matches_table1_regime() {
+        // ResNet-50-scale gradient (25.6M params) on the paper's fabric:
+        // AdaCons adds one all-reduce -> ~2x comm, but compute dominates
+        // the iteration; the *comm-only* ratio must be just above 2x
+        // (+ negligible all-gather), and ~1.0x once overlapped at 800 Gb/s
+        // relative to the step. Here we check the comm-only ratio bound.
+        let m = CostModel::from_topology(&Topology::paper_testbed());
+        let d = 25_600_000;
+        let sum = m.sum_iteration_s(d);
+        let ada = m.adacons_iteration_s(d);
+        let ratio = ada / sum;
+        assert!(ratio > 1.99 && ratio < 2.05, "ratio={ratio}");
+    }
+
+    #[test]
+    fn bandwidth_scaling_shrinks_absolute_overhead() {
+        let slow = model(32, 100.0);
+        let fast = model(32, 800.0);
+        let d = 25_600_000;
+        let over_slow = fast.adacons_iteration_s(d); // reuse vars below
+        let _ = over_slow;
+        let abs_slow = slow.adacons_iteration_s(d) - slow.sum_iteration_s(d);
+        let abs_fast = fast.adacons_iteration_s(d) - fast.sum_iteration_s(d);
+        assert!(abs_fast < abs_slow / 6.0, "{abs_fast} vs {abs_slow}");
+    }
+
+    #[test]
+    fn kind_dispatch() {
+        let m = model(8, 100.0);
+        assert_eq!(
+            m.time_s(CollectiveKind::AllReduce, 100),
+            m.allreduce_s(100)
+        );
+        assert_eq!(m.time_s(CollectiveKind::AllGather, 4), m.allgather_s(4));
+        assert_eq!(
+            m.time_s(CollectiveKind::Broadcast, 100),
+            m.broadcast_s(100)
+        );
+    }
+}

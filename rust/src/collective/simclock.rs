@@ -1,0 +1,77 @@
+//! Simulated wall clock, per rank.
+//!
+//! Synchronous data parallelism advances in barriers: a collective
+//! completes on every rank at `max_i(ready_i) + T_collective`.  The clock
+//! tracks per-rank simulated time so straggler injection (a rank whose
+//! compute takes longer) propagates into iteration time exactly as it
+//! would on hardware.
+
+#[derive(Debug, Clone)]
+pub struct SimClock {
+    t: Vec<f64>, // per-rank simulated seconds
+}
+
+impl SimClock {
+    pub fn new(n: usize) -> Self {
+        SimClock { t: vec![0.0; n] }
+    }
+
+    pub fn n(&self) -> usize {
+        self.t.len()
+    }
+
+    /// Advance one rank by local compute time.
+    pub fn advance(&mut self, rank: usize, dt: f64) {
+        self.t[rank] += dt;
+    }
+
+    /// A synchronous collective: all ranks align to the slowest, then pay
+    /// the collective's duration. Returns completion time.
+    pub fn collective(&mut self, duration: f64) -> f64 {
+        let start = self.t.iter().cloned().fold(0.0, f64::max);
+        let done = start + duration;
+        for t in &mut self.t {
+            *t = done;
+        }
+        done
+    }
+
+    pub fn rank_time(&self, rank: usize) -> f64 {
+        self.t[rank]
+    }
+
+    /// Global time = slowest rank.
+    pub fn now(&self) -> f64 {
+        self.t.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn barrier_aligns_to_slowest() {
+        let mut c = SimClock::new(3);
+        c.advance(0, 1.0);
+        c.advance(1, 3.0);
+        c.advance(2, 2.0);
+        let done = c.collective(0.5);
+        assert!((done - 3.5).abs() < 1e-12);
+        for r in 0..3 {
+            assert_eq!(c.rank_time(r), 3.5);
+        }
+    }
+
+    #[test]
+    fn straggler_paces_iteration() {
+        let mut c = SimClock::new(2);
+        // 10 iterations; rank 1 is 2x slower.
+        for _ in 0..10 {
+            c.advance(0, 0.1);
+            c.advance(1, 0.2);
+            c.collective(0.01);
+        }
+        assert!((c.now() - 10.0 * 0.21).abs() < 1e-9);
+    }
+}

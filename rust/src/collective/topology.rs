@@ -1,0 +1,127 @@
+//! Cluster topologies for the communication simulator.
+
+/// A communication topology over `n` ranks.
+///
+/// `Ring` is the NCCL-style homogeneous ring the paper's all-reduce runs
+/// on.  `Hierarchical` models the paper's actual testbed shape — `nodes`
+/// hosts with `gpus_per_node` ranks each, fast intra-node links and a
+/// slower inter-node fabric — and is used by the Table 1 sensitivity
+/// sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Topology {
+    Ring {
+        n: usize,
+        /// Per-hop latency (seconds), the α term.
+        latency_s: f64,
+        /// Link bandwidth (bytes/second), the 1/β term.
+        bandwidth_bps: f64,
+    },
+    Hierarchical {
+        nodes: usize,
+        gpus_per_node: usize,
+        intra_latency_s: f64,
+        intra_bandwidth_bps: f64,
+        inter_latency_s: f64,
+        inter_bandwidth_bps: f64,
+    },
+}
+
+impl Topology {
+    /// The paper's testbed: 8 nodes x 4 A6000 over 100 Gb/s InfiniBand,
+    /// NVLink-class intra-node links.
+    pub fn paper_testbed() -> Topology {
+        Topology::Hierarchical {
+            nodes: 8,
+            gpus_per_node: 4,
+            intra_latency_s: 2e-6,
+            intra_bandwidth_bps: 50e9,  // ~400 Gb/s effective intra-node
+            inter_latency_s: 5e-6,
+            inter_bandwidth_bps: 12.5e9, // 100 Gb/s
+        }
+    }
+
+    /// Homogeneous ring at a given fabric speed in Gb/s.
+    pub fn ring_gbps(n: usize, gbps: f64) -> Topology {
+        Topology::Ring {
+            n,
+            latency_s: 5e-6,
+            bandwidth_bps: gbps * 1e9 / 8.0,
+        }
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        match self {
+            Topology::Ring { n, .. } => *n,
+            Topology::Hierarchical {
+                nodes,
+                gpus_per_node,
+                ..
+            } => nodes * gpus_per_node,
+        }
+    }
+
+    /// The (α, β⁻¹) of the slowest link a ring over all ranks traverses —
+    /// the bottleneck that paces every synchronous ring step.
+    pub fn bottleneck_link(&self) -> (f64, f64) {
+        match self {
+            Topology::Ring {
+                latency_s,
+                bandwidth_bps,
+                ..
+            } => (*latency_s, *bandwidth_bps),
+            Topology::Hierarchical {
+                nodes,
+                inter_latency_s,
+                inter_bandwidth_bps,
+                intra_latency_s,
+                intra_bandwidth_bps,
+                ..
+            } => {
+                if *nodes > 1 {
+                    (*inter_latency_s, *inter_bandwidth_bps)
+                } else {
+                    (*intra_latency_s, *intra_bandwidth_bps)
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_counts() {
+        assert_eq!(Topology::paper_testbed().n_ranks(), 32);
+        assert_eq!(Topology::ring_gbps(8, 100.0).n_ranks(), 8);
+    }
+
+    #[test]
+    fn bottleneck_is_inter_node_when_multi_node() {
+        let t = Topology::paper_testbed();
+        let (lat, bw) = t.bottleneck_link();
+        assert_eq!(lat, 5e-6);
+        assert_eq!(bw, 12.5e9);
+    }
+
+    #[test]
+    fn single_node_bottleneck_is_intra() {
+        let t = Topology::Hierarchical {
+            nodes: 1,
+            gpus_per_node: 4,
+            intra_latency_s: 1e-6,
+            intra_bandwidth_bps: 50e9,
+            inter_latency_s: 5e-6,
+            inter_bandwidth_bps: 12.5e9,
+        };
+        assert_eq!(t.bottleneck_link(), (1e-6, 50e9));
+    }
+
+    #[test]
+    fn ring_gbps_converts_to_bytes() {
+        let t = Topology::ring_gbps(4, 800.0);
+        let (_, bw) = t.bottleneck_link();
+        assert!((bw - 100e9).abs() < 1.0);
+    }
+}

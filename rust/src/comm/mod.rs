@@ -1,0 +1,202 @@
+//! In-process rank-to-rank transport: typed mailboxes and a reusable step
+//! barrier.
+//!
+//! On the single-accelerator testbed the coordinator drives ranks
+//! round-robin (see `worker/`), but the aggregation algebra itself is
+//! host-side and thread-safe; this module provides the transport for the
+//! threaded deployment shape — N rank threads exchanging gradients with a
+//! leader — and is exercised by `threaded_allreduce`, a multi-threaded
+//! driver of the simulated collectives used in tests and benches.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Barrier, Mutex};
+
+/// A typed point-to-point mailbox (multi-producer, single-consumer).
+pub struct Mailbox<T> {
+    tx: Sender<T>,
+    rx: Mutex<Receiver<T>>,
+}
+
+impl<T> Default for Mailbox<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Mailbox<T> {
+    pub fn new() -> Self {
+        let (tx, rx) = channel();
+        Mailbox {
+            tx,
+            rx: Mutex::new(rx),
+        }
+    }
+
+    pub fn sender(&self) -> Sender<T> {
+        self.tx.clone()
+    }
+
+    /// Blocking receive.
+    pub fn recv(&self) -> T {
+        self.rx.lock().unwrap().recv().expect("mailbox closed")
+    }
+
+    /// Receive exactly `n` messages.
+    pub fn recv_n(&self, n: usize) -> Vec<T> {
+        let rx = self.rx.lock().unwrap();
+        (0..n).map(|_| rx.recv().expect("mailbox closed")).collect()
+    }
+}
+
+/// The leader's view of a step exchange: collect one gradient per rank,
+/// return the aggregated direction to all ranks.
+pub struct StepExchange {
+    pub n: usize,
+    grads_in: Mailbox<(usize, Vec<f32>)>,
+    results_out: Vec<Sender<Arc<Vec<f32>>>>,
+    results_in: Vec<Mutex<Receiver<Arc<Vec<f32>>>>>,
+    pub barrier: Arc<Barrier>,
+}
+
+impl StepExchange {
+    pub fn new(n: usize) -> Self {
+        let mut results_out = Vec::with_capacity(n);
+        let mut results_in = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            results_out.push(tx);
+            results_in.push(Mutex::new(rx));
+        }
+        StepExchange {
+            n,
+            grads_in: Mailbox::new(),
+            results_out,
+            results_in,
+            barrier: Arc::new(Barrier::new(n + 1)), // ranks + leader
+        }
+    }
+
+    /// Rank side: submit this step's gradient.
+    pub fn submit(&self, rank: usize, grad: Vec<f32>) {
+        self.grads_in.sender().send((rank, grad)).unwrap();
+    }
+
+    /// Rank side: wait for the aggregated direction.
+    pub fn wait_result(&self, rank: usize) -> Arc<Vec<f32>> {
+        self.results_in[rank]
+            .lock()
+            .unwrap()
+            .recv()
+            .expect("exchange closed")
+    }
+
+    /// Leader side: gather all rank gradients (any order), aggregate with
+    /// `f`, broadcast the result.
+    pub fn leader_step(&self, f: impl FnOnce(Vec<Vec<f32>>) -> Vec<f32>) {
+        let mut slots: Vec<Option<Vec<f32>>> = (0..self.n).map(|_| None).collect();
+        for (rank, grad) in self.grads_in.recv_n(self.n) {
+            slots[rank] = Some(grad);
+        }
+        let grads: Vec<Vec<f32>> = slots.into_iter().map(|s| s.expect("missing rank")).collect();
+        let result = Arc::new(f(grads));
+        for tx in &self.results_out {
+            tx.send(result.clone()).unwrap();
+        }
+    }
+}
+
+/// Multi-threaded driver: N rank threads aggregate `rounds` of locally
+/// generated gradients through a shared [`StepExchange`] with the given
+/// aggregator name. Returns the final aggregated vector. Used by tests to
+/// prove the aggregation path is thread-clean end-to-end.
+pub fn threaded_allreduce(
+    n: usize,
+    d: usize,
+    rounds: usize,
+    aggregator: &str,
+    make_grad: impl Fn(usize, usize) -> Vec<f32> + Send + Sync + 'static,
+) -> Vec<f32> {
+    use crate::tensor::{Buckets, GradSet};
+    let exchange = Arc::new(StepExchange::new(n));
+    let make_grad = Arc::new(make_grad);
+    let mut handles = Vec::new();
+    for rank in 0..n {
+        let ex = exchange.clone();
+        let mg = make_grad.clone();
+        handles.push(std::thread::spawn(move || {
+            for round in 0..rounds {
+                ex.submit(rank, mg(rank, round));
+                let _ = ex.wait_result(rank);
+                ex.barrier.wait();
+            }
+        }));
+    }
+    let mut agg = crate::aggregation::by_name(aggregator, n).expect("aggregator");
+    let buckets = Buckets::single(d);
+    let mut last = vec![0.0f32; d];
+    for _ in 0..rounds {
+        exchange.leader_step(|grads| {
+            let gs = GradSet::from_rows(&grads);
+            let mut out = vec![0.0f32; d];
+            agg.aggregate(&gs, &buckets, &mut out);
+            last = out.clone();
+            out
+        });
+        exchange.barrier.wait();
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    last
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mailbox_roundtrip() {
+        let mb = Mailbox::new();
+        let tx = mb.sender();
+        std::thread::spawn(move || tx.send(42u32).unwrap());
+        assert_eq!(mb.recv(), 42);
+    }
+
+    #[test]
+    fn exchange_collects_out_of_order_ranks() {
+        let ex = Arc::new(StepExchange::new(3));
+        for rank in [2usize, 0, 1] {
+            let ex = ex.clone();
+            std::thread::spawn(move || {
+                ex.submit(rank, vec![rank as f32; 2]);
+            });
+        }
+        ex.leader_step(|grads| {
+            assert_eq!(grads[0], vec![0.0; 2]);
+            assert_eq!(grads[1], vec![1.0; 2]);
+            assert_eq!(grads[2], vec![2.0; 2]);
+            vec![9.0; 2]
+        });
+        for rank in 0..3 {
+            assert_eq!(*ex.wait_result(rank), vec![9.0; 2]);
+        }
+    }
+
+    #[test]
+    fn threaded_mean_matches_expectation() {
+        // rank r contributes the constant vector r+1 -> mean = (1+2+3+4)/4.
+        let out = threaded_allreduce(4, 16, 3, "mean", |rank, _| vec![(rank + 1) as f32; 16]);
+        for x in out {
+            assert!((x - 2.5).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn threaded_adacons_runs_multiround() {
+        let out = threaded_allreduce(4, 32, 5, "adacons", |rank, round| {
+            let mut rng = crate::util::prng::Rng::new((rank * 1000 + round) as u64);
+            (0..32).map(|_| rng.normal_f32(1.0) + 0.5).collect()
+        });
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+}

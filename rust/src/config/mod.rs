@@ -1,0 +1,256 @@
+//! Typed run configuration: JSON config files + CLI overrides + presets.
+//!
+//! Every experiment in `exp/` is a [`TrainConfig`] (or a sweep of them), so
+//! any paper run can be reproduced from the command line:
+//! `adacons train --config cfg.json --workers 8 --aggregator adacons`.
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::GradInjector;
+use crate::optim::Schedule;
+use crate::util::argparse::Args;
+use crate::util::json::Json;
+
+/// Full specification of one training run.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Train artifact name from the manifest (e.g. `mlp_cls_b32`).
+    pub artifact: String,
+    /// Eval artifact (defaults to `<artifact>__eval` when present).
+    pub eval_artifact: Option<String>,
+    /// Number of simulated ranks N.
+    pub workers: usize,
+    /// Aggregator name (see `aggregation::ALL_NAMES`).
+    pub aggregator: String,
+    /// Optimizer name (see `optim::by_name`).
+    pub optimizer: String,
+    /// LR schedule spec, e.g. `const:0.1` or `cosine:0.1:100:1000`.
+    pub schedule: Schedule,
+    pub steps: usize,
+    pub eval_every: usize,
+    /// Eval batches pooled per evaluation point.
+    pub eval_batches: usize,
+    /// Data/injection seed.
+    pub seed: u64,
+    /// Parameter init seed (must exist in the artifact's init blobs).
+    pub init_seed: u64,
+    /// Global-norm clip; None disables (Fig. 8 toggles this).
+    pub clip: Option<f64>,
+    /// Layer-wise aggregation bucket capacity; None = model-wise.
+    pub bucket_cap: Option<usize>,
+    /// Label-skew knob for the classification stream (0 = i.i.d.).
+    pub heterogeneity: f64,
+    /// Per-rank gradient injectors: (rank, spec).
+    pub injectors: Vec<(usize, GradInjector)>,
+    /// Simulated fabric speed for the comm cost model (Gb/s).
+    pub fabric_gbps: f64,
+    pub log_every: usize,
+    /// Optional JSONL step-log path.
+    pub jsonl: Option<String>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            artifact: "linreg_b64".into(),
+            eval_artifact: None,
+            workers: 4,
+            aggregator: "adacons".into(),
+            optimizer: "sgd".into(),
+            schedule: Schedule::Const { lr: 0.05 },
+            steps: 100,
+            eval_every: 0,
+            eval_batches: 4,
+            seed: 0,
+            init_seed: 0,
+            clip: None,
+            bucket_cap: None,
+            heterogeneity: 0.0,
+            injectors: Vec::new(),
+            fabric_gbps: 100.0,
+            log_every: 0,
+            jsonl: None,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Parse from a JSON object (all keys optional; unknown keys rejected).
+    pub fn from_json(j: &Json) -> Result<TrainConfig> {
+        let mut cfg = TrainConfig::default();
+        let obj = j.as_obj().context("config must be a JSON object")?;
+        for (k, v) in obj {
+            match k.as_str() {
+                "artifact" => cfg.artifact = v.as_str().context("artifact")?.into(),
+                "eval_artifact" => {
+                    cfg.eval_artifact = Some(v.as_str().context("eval_artifact")?.into())
+                }
+                "workers" => cfg.workers = v.as_usize().context("workers")?,
+                "aggregator" => cfg.aggregator = v.as_str().context("aggregator")?.into(),
+                "optimizer" => cfg.optimizer = v.as_str().context("optimizer")?.into(),
+                "schedule" => {
+                    cfg.schedule = Schedule::parse(v.as_str().context("schedule")?)
+                        .context("bad schedule spec")?
+                }
+                "steps" => cfg.steps = v.as_usize().context("steps")?,
+                "eval_every" => cfg.eval_every = v.as_usize().context("eval_every")?,
+                "eval_batches" => cfg.eval_batches = v.as_usize().context("eval_batches")?,
+                "seed" => cfg.seed = v.as_f64().context("seed")? as u64,
+                "init_seed" => cfg.init_seed = v.as_f64().context("init_seed")? as u64,
+                "clip" => cfg.clip = v.as_f64(),
+                "bucket_cap" => cfg.bucket_cap = v.as_usize(),
+                "heterogeneity" => cfg.heterogeneity = v.as_f64().context("heterogeneity")?,
+                "fabric_gbps" => cfg.fabric_gbps = v.as_f64().context("fabric_gbps")?,
+                "log_every" => cfg.log_every = v.as_usize().context("log_every")?,
+                "jsonl" => cfg.jsonl = Some(v.as_str().context("jsonl")?.into()),
+                "injectors" => {
+                    for item in v.as_arr().context("injectors")? {
+                        let rank = item.get("rank").as_usize().context("injector rank")?;
+                        let spec = item.get("spec").as_str().context("injector spec")?;
+                        cfg.injectors.push((
+                            rank,
+                            GradInjector::parse(spec).context("bad injector spec")?,
+                        ));
+                    }
+                }
+                other => bail!("unknown config key {other:?}"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Apply CLI overrides on top of the current values.
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(a) = args.str_opt("artifact") {
+            self.artifact = a.into();
+        }
+        if let Some(a) = args.str_opt("eval-artifact") {
+            self.eval_artifact = Some(a.into());
+        }
+        self.workers = args.usize_or("workers", self.workers)?;
+        if let Some(a) = args.str_opt("aggregator") {
+            self.aggregator = a.into();
+        }
+        if let Some(a) = args.str_opt("optimizer") {
+            self.optimizer = a.into();
+        }
+        if let Some(s) = args.str_opt("schedule") {
+            self.schedule = Schedule::parse(s).context("bad --schedule")?;
+        }
+        self.steps = args.usize_or("steps", self.steps)?;
+        self.eval_every = args.usize_or("eval-every", self.eval_every)?;
+        self.eval_batches = args.usize_or("eval-batches", self.eval_batches)?;
+        self.seed = args.u64_or("seed", self.seed)?;
+        self.init_seed = args.u64_or("init-seed", self.init_seed)?;
+        if let Some(c) = args.str_opt("clip") {
+            self.clip = if c == "none" {
+                None
+            } else {
+                Some(c.parse().context("bad --clip")?)
+            };
+        }
+        if let Some(c) = args.str_opt("bucket-cap") {
+            self.bucket_cap = Some(c.parse().context("bad --bucket-cap")?);
+        }
+        self.heterogeneity = args.f64_or("heterogeneity", self.heterogeneity)?;
+        self.fabric_gbps = args.f64_or("fabric-gbps", self.fabric_gbps)?;
+        self.log_every = args.usize_or("log-every", self.log_every)?;
+        if let Some(p) = args.str_opt("jsonl") {
+            self.jsonl = Some(p.into());
+        }
+        if let Some(spec) = args.str_opt("inject") {
+            // --inject rank:spec, e.g. --inject 0:sign-flip
+            let (rank, rest) = spec.split_once(':').context("--inject rank:spec")?;
+            self.injectors.push((
+                rank.parse().context("inject rank")?,
+                GradInjector::parse(rest).context("inject spec")?,
+            ));
+        }
+        self.validate()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            bail!("workers must be >= 1");
+        }
+        if self.steps == 0 {
+            bail!("steps must be >= 1");
+        }
+        if crate::aggregation::by_name(&self.aggregator, self.workers).is_none() {
+            bail!(
+                "unknown aggregator {:?} (known: {:?})",
+                self.aggregator,
+                crate::aggregation::ALL_NAMES
+            );
+        }
+        for (rank, _) in &self.injectors {
+            if *rank >= self.workers {
+                bail!("injector rank {rank} >= workers {}", self.workers);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load_file(path: &str) -> Result<TrainConfig> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        TrainConfig::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip_and_unknown_key() {
+        let j = Json::parse(
+            r#"{"artifact":"mlp_cls_b32","workers":8,"aggregator":"mean",
+                "schedule":"cosine:0.1:10:100","steps":50,"clip":1.0,
+                "injectors":[{"rank":2,"spec":"sign-flip"}]}"#,
+        )
+        .unwrap();
+        let cfg = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.workers, 8);
+        assert_eq!(cfg.aggregator, "mean");
+        assert_eq!(cfg.clip, Some(1.0));
+        assert_eq!(cfg.injectors.len(), 1);
+        let bad = Json::parse(r#"{"wat": 1}"#).unwrap();
+        assert!(TrainConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut cfg = TrainConfig::default();
+        let args = Args::parse(
+            "--workers 16 --aggregator adasum --schedule const:0.01 --clip none --inject 3:zero"
+                .split_whitespace()
+                .map(String::from),
+            &[],
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.workers, 16);
+        assert_eq!(cfg.aggregator, "adasum");
+        assert_eq!(cfg.clip, None);
+        assert_eq!(cfg.injectors[0].0, 3);
+    }
+
+    #[test]
+    fn validation_rejects_bad_values() {
+        let mut cfg = TrainConfig::default();
+        cfg.workers = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::default();
+        cfg.aggregator = "nope".into();
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::default();
+        cfg.injectors.push((99, GradInjector::None));
+        assert!(cfg.validate().is_err());
+    }
+}

@@ -1,0 +1,82 @@
+//! Binary checkpoints: magic + version + step + param vector (LE f32).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 8] = b"ADACONS1";
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub params: Vec<f32>,
+}
+
+impl Checkpoint {
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&self.step.to_le_bytes())?;
+        f.write_all(&(self.params.len() as u64).to_le_bytes())?;
+        for p in &self.params {
+            f.write_all(&p.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(&path).with_context(|| format!("{:?}", path.as_ref()))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not an adacons checkpoint");
+        }
+        let mut u64buf = [0u8; 8];
+        f.read_exact(&mut u64buf)?;
+        let step = u64::from_le_bytes(u64buf);
+        f.read_exact(&mut u64buf)?;
+        let len = u64::from_le_bytes(u64buf) as usize;
+        let mut bytes = vec![0u8; len * 4];
+        f.read_exact(&mut bytes)?;
+        let params = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Checkpoint { step, params })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_bit_exact() {
+        let ck = Checkpoint {
+            step: 123,
+            params: vec![1.5, -2.25, f32::MIN_POSITIVE, 0.0, 3.0e30],
+        };
+        let dir = std::env::temp_dir().join("adacons_ckpt_test");
+        let path = dir.join("a.ckpt");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("adacons_ckpt_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"NOTACKPTxxxxxxxxxxxx").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,138 @@
+//! Held-out evaluation: runs the model's eval artifact on a dedicated
+//! shard (a rank id no trainer worker uses) and reduces the outputs to the
+//! task's paper metric.
+
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+use crate::data::{Array, DataGen};
+use crate::metrics;
+use crate::runtime::{Executable, Runtime};
+
+/// Rank id reserved for the evaluation stream.
+pub const EVAL_RANK: u64 = 1 << 40;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalOutcome {
+    pub loss: f64,
+    /// The task metric (accuracy / AUC / mAP-proxy / loss).
+    pub metric: f64,
+    pub metric_name: &'static str,
+}
+
+pub struct Evaluator {
+    exe: Arc<Executable>,
+    gen: Box<dyn DataGen>,
+    model: String,
+    batches: usize,
+}
+
+impl Evaluator {
+    /// Build the evaluator for a train artifact, if it has an eval twin.
+    pub fn for_artifact(
+        rt: &Runtime,
+        train_artifact: &str,
+        eval_artifact: Option<&str>,
+        seed: u64,
+        batches: usize,
+    ) -> Result<Option<Evaluator>> {
+        let name = match eval_artifact {
+            Some(n) => n.to_string(),
+            None => format!("{train_artifact}__eval"),
+        };
+        if rt.manifest.get(&name).is_err() {
+            return Ok(None);
+        }
+        let exe = rt.load(&name)?;
+        let model = exe.spec.model.clone();
+        let gen = crate::data::for_model(&model, seed, EVAL_RANK, 0.0, &exe.spec.meta)
+            .with_context(|| format!("no data generator for model {model}"))?;
+        Ok(Some(Evaluator {
+            exe,
+            gen,
+            model,
+            batches,
+        }))
+    }
+
+    pub fn metric_name(&self) -> &'static str {
+        match self.model.as_str() {
+            "mlp_cls" => "accuracy",
+            "dlrm" => "auc",
+            "det" => "map_proxy",
+            _ => "loss",
+        }
+    }
+
+    /// Evaluate `params`, pooling `self.batches` held-out batches.
+    pub fn evaluate(&mut self, params: &[f32]) -> Result<EvalOutcome> {
+        let b = self.exe.spec.local_batch();
+        let mut losses = Vec::new();
+        let mut pooled_correct = Vec::new();
+        let mut pooled_scores = Vec::new();
+        let mut pooled_labels = Vec::new();
+        let mut pooled_maxprob = Vec::new();
+        let mut pooled_clscorrect = Vec::new();
+        let mut pooled_boxl1 = Vec::new();
+        for _ in 0..self.batches {
+            let batch = self.gen.next_batch(b);
+            let outs = self.exe.run(Some(params), &batch)?;
+            let loss = outs[0]
+                .as_f32()
+                .and_then(|v| v.first().copied())
+                .context("eval output 0 must be loss")? as f64;
+            losses.push(loss);
+            match self.model.as_str() {
+                "mlp_cls" => {
+                    pooled_correct.extend_from_slice(outs[1].as_f32().context("correct")?);
+                }
+                "dlrm" => {
+                    pooled_scores.extend_from_slice(outs[1].as_f32().context("score")?);
+                    // labels are the third batch array
+                    pooled_labels.extend_from_slice(batch[2].as_f32().context("y")?);
+                }
+                "det" => {
+                    let probs = outs[1].as_f32().context("probs")?;
+                    let box_l1 = outs[2].as_f32().context("box_l1")?;
+                    let labels = batch[1].as_i32().context("y")?;
+                    let c = self.exe.spec.outputs[1].shape[1];
+                    for i in 0..b {
+                        let row = &probs[i * c..(i + 1) * c];
+                        let (argmax, &maxp) = row
+                            .iter()
+                            .enumerate()
+                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                            .unwrap();
+                        pooled_maxprob.push(maxp);
+                        pooled_clscorrect
+                            .push(if argmax as i32 == labels[i] { 1.0 } else { 0.0 });
+                        pooled_boxl1.push(box_l1[i]);
+                    }
+                }
+                _ => {}
+            }
+        }
+        let loss = crate::util::stats::mean(&losses);
+        let (metric, metric_name) = match self.model.as_str() {
+            "mlp_cls" => (metrics::accuracy(&pooled_correct), "accuracy"),
+            "dlrm" => (
+                metrics::auc_from_scores(&pooled_scores, &pooled_labels),
+                "auc",
+            ),
+            "det" => (
+                metrics::map_proxy(&pooled_maxprob, &pooled_clscorrect, &pooled_boxl1, 0.5),
+                "map_proxy",
+            ),
+            _ => (loss, "loss"),
+        };
+        Ok(EvalOutcome {
+            loss,
+            metric,
+            metric_name,
+        })
+    }
+}
+
+// Silence an unused-import warning path for Array in non-test builds.
+#[allow(unused)]
+fn _keep(_a: Array) {}

@@ -1,0 +1,14 @@
+//! The training coordinator — the L3 leader.
+//!
+//! Owns the master parameters, drives the synchronous step loop
+//! (local gradients → aggregation → optimizer → broadcast), charges the
+//! communication cost model to the simulated clock, evaluates, logs, and
+//! checkpoints.
+
+pub mod checkpoint;
+pub mod eval;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use eval::{EvalOutcome, Evaluator};
+pub use trainer::{TrainResult, Trainer};

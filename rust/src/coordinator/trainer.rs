@@ -1,0 +1,284 @@
+//! The synchronous data-parallel training loop (Alg. 1 embedding).
+//!
+//! Per step: every rank draws its shard batch and computes a local
+//! gradient through the shared PJRT executable; the aggregator combines
+//! them (AdaCons or a baseline); optional global-norm clipping; the
+//! optimizer steps the master parameters.  Compute and communication are
+//! charged to a [`SimClock`] through the α-β cost model so iteration
+//! timing can be reported for fabrics we do not have (Table 1).
+
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+use crate::aggregation::{self, AggInfo, Aggregator, CoeffStages};
+use crate::collective::{CostModel, SimClock, Topology};
+use crate::config::TrainConfig;
+use crate::coordinator::eval::{EvalOutcome, Evaluator};
+use crate::optim::{self, clip_global_norm, Optimizer};
+use crate::runtime::{Executable, Runtime};
+use crate::tensor::{Buckets, GradSet};
+use crate::util::timer::{PhaseTimer, Timer};
+use crate::worker::Worker;
+
+/// One evaluation point.
+#[derive(Debug, Clone)]
+pub struct EvalPoint {
+    pub step: usize,
+    pub outcome: EvalOutcome,
+}
+
+/// Everything a run produces.
+#[derive(Debug)]
+pub struct TrainResult {
+    /// Per-step mean local train loss.
+    pub train_loss: Vec<f64>,
+    pub evals: Vec<EvalPoint>,
+    pub metric_name: &'static str,
+    /// Coefficient-stage statistics per logged step (Fig. 7).
+    pub coeff_log: Vec<(usize, CoeffStages)>,
+    /// Simulated seconds per iteration (compute + comm on the modeled
+    /// fabric), averaged.
+    pub sim_iter_s: f64,
+    /// Measured wall seconds per iteration on this host.
+    pub wall_iter_s: f64,
+    /// Phase breakdown (grad / aggregate / optimize).
+    pub phases: PhaseTimer,
+    pub final_params: Vec<f32>,
+    /// Effective batch = workers * local batch.
+    pub effective_batch: usize,
+}
+
+impl TrainResult {
+    pub fn final_train_loss(&self, window: usize) -> f64 {
+        let n = self.train_loss.len();
+        let lo = n.saturating_sub(window.max(1));
+        crate::util::stats::mean(&self.train_loss[lo..])
+    }
+
+    pub fn final_metric(&self) -> Option<f64> {
+        self.evals.last().map(|e| e.outcome.metric)
+    }
+
+    /// First step whose train loss EMA drops below `target` (speedup metric
+    /// in the BERT comparison); None if never reached.
+    pub fn steps_to_loss(&self, target: f64) -> Option<usize> {
+        let mut ema = crate::util::stats::Ema::new(0.9);
+        for (i, &l) in self.train_loss.iter().enumerate() {
+            if ema.push(l) < target {
+                return Some(i);
+            }
+        }
+        None
+    }
+}
+
+/// The coordinator.
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    rt: Arc<Runtime>,
+    exe: Arc<Executable>,
+    workers: Vec<Worker>,
+    aggregator: Box<dyn Aggregator>,
+    optimizer: Box<dyn Optimizer>,
+    evaluator: Option<Evaluator>,
+    buckets: Buckets,
+    cost: CostModel,
+    pub params: Vec<f32>,
+    start_step: usize,
+}
+
+impl Trainer {
+    pub fn new(rt: Arc<Runtime>, cfg: TrainConfig) -> Result<Trainer> {
+        cfg.validate()?;
+        let exe = rt.load(&cfg.artifact)?;
+        let d = exe.spec.param_dim;
+        anyhow::ensure!(d > 0, "{} is not a trainable artifact", cfg.artifact);
+        let params = exe.spec.load_init(cfg.init_seed)?;
+        let model = exe.spec.model.clone();
+        let workers = (0..cfg.workers)
+            .map(|rank| {
+                let gen = crate::data::for_model(
+                    &model,
+                    cfg.seed,
+                    rank as u64,
+                    cfg.heterogeneity,
+                    &exe.spec.meta,
+                )
+                .with_context(|| format!("no data generator for model {model}"))?;
+                let injector = cfg
+                    .injectors
+                    .iter()
+                    .find(|(r, _)| *r == rank)
+                    .map(|(_, i)| i.clone())
+                    .unwrap_or(crate::data::GradInjector::None);
+                Ok(Worker::new(rank, gen, injector, cfg.seed))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let aggregator = aggregation::by_name(&cfg.aggregator, cfg.workers)
+            .context("unknown aggregator")?;
+        let optimizer = optim::by_name(&cfg.optimizer, d).context("unknown optimizer")?;
+        let evaluator = Evaluator::for_artifact(
+            &rt,
+            &cfg.artifact,
+            cfg.eval_artifact.as_deref(),
+            cfg.seed,
+            cfg.eval_batches,
+        )?;
+        let buckets = match cfg.bucket_cap {
+            Some(cap) => Buckets::fixed(d, cap),
+            None => Buckets::single(d),
+        };
+        let cost = CostModel::from_topology(&Topology::ring_gbps(cfg.workers, cfg.fabric_gbps));
+        Ok(Trainer {
+            cfg,
+            rt,
+            exe,
+            workers,
+            aggregator,
+            optimizer,
+            evaluator,
+            buckets,
+            cost,
+            params,
+            start_step: 0,
+        })
+    }
+
+    /// Resume from a checkpoint (params + step counter).
+    pub fn restore(&mut self, ck: &crate::coordinator::Checkpoint) -> Result<()> {
+        anyhow::ensure!(
+            ck.params.len() == self.params.len(),
+            "checkpoint dim mismatch"
+        );
+        self.params = ck.params.clone();
+        self.start_step = ck.step as usize;
+        Ok(())
+    }
+
+    pub fn local_batch(&self) -> usize {
+        self.exe.spec.local_batch()
+    }
+
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.rt
+    }
+
+    /// Run the configured number of steps.
+    pub fn run(&mut self) -> Result<TrainResult> {
+        let d = self.exe.spec.param_dim;
+        let n = self.cfg.workers;
+        let mut grads = GradSet::zeros(n, d);
+        let mut agg = vec![0.0f32; d];
+        let mut clock = SimClock::new(n);
+        let mut phases = PhaseTimer::default();
+        let mut train_loss = Vec::with_capacity(self.cfg.steps);
+        let mut coeff_log = Vec::new();
+        let mut evals = Vec::new();
+        let mut metric_name: &'static str = "loss";
+        let local_batch = self.local_batch();
+        let mut jsonl = match &self.cfg.jsonl {
+            Some(p) => Some(crate::metrics::JsonlWriter::create(p)?),
+            None => None,
+        };
+        let wall = Timer::start();
+
+        for step in self.start_step..self.start_step + self.cfg.steps {
+            // --- local gradients (parallel on real hardware; charged to the
+            //     sim clock per rank, executed round-robin on this 1-CPU host)
+            let mut loss_sum = 0.0f64;
+            phases.time("grad", || -> Result<()> {
+                for w in &mut self.workers {
+                    let rank = w.rank;
+                    w.compute_grad(&self.exe, &self.params, local_batch, grads.row_mut(rank))?;
+                    loss_sum += w.last_loss as f64;
+                    clock.advance(rank, w.last_compute_s);
+                }
+                Ok(())
+            })?;
+            train_loss.push(loss_sum / n as f64);
+
+            // --- aggregation (the paper) + comm cost accounting
+            let info: AggInfo =
+                phases.time("aggregate", || {
+                    self.aggregator.aggregate(&grads, &self.buckets, &mut agg)
+                });
+            for (kind, bytes) in &info.comm {
+                clock.collective(self.cost.time_s(*kind, *bytes));
+            }
+            if let Some(stages) = info.coeff_stages {
+                if self.cfg.log_every > 0 && step % self.cfg.log_every == 0 {
+                    coeff_log.push((step, stages));
+                }
+            }
+
+            // --- clip + optimize
+            phases.time("optimize", || {
+                if let Some(max_norm) = self.cfg.clip {
+                    clip_global_norm(&mut agg, max_norm);
+                }
+                let lr = self.cfg.schedule.lr(step) as f32;
+                self.optimizer.step(&mut self.params, &agg, lr);
+            });
+
+            // --- eval
+            if self.cfg.eval_every > 0
+                && (step % self.cfg.eval_every == 0 || step + 1 == self.start_step + self.cfg.steps)
+            {
+                if let Some(ev) = &mut self.evaluator {
+                    let outcome = ev.evaluate(&self.params)?;
+                    metric_name = outcome.metric_name;
+                    if self.cfg.log_every > 0 {
+                        log::info!(
+                            "step {step}: loss {:.4} {} {:.4}",
+                            outcome.loss,
+                            outcome.metric_name,
+                            outcome.metric
+                        );
+                    }
+                    evals.push(EvalPoint { step, outcome });
+                }
+            }
+            if self.cfg.log_every > 0 && step % self.cfg.log_every == 0 {
+                log::debug!("step {step}: train loss {:.5}", train_loss.last().unwrap());
+            }
+            if let Some(w) = &mut jsonl {
+                use crate::util::json::{num, obj, s};
+                let mut rec = vec![
+                    ("step", num(step as f64)),
+                    ("train_loss", num(*train_loss.last().unwrap())),
+                    ("lr", num(self.cfg.schedule.lr(step))),
+                    ("sim_time_s", num(clock.now())),
+                    ("aggregator", s(&self.cfg.aggregator)),
+                ];
+                if let Some(e) = evals.last() {
+                    if e.step == step {
+                        rec.push(("eval_loss", num(e.outcome.loss)));
+                        rec.push(("metric", num(e.outcome.metric)));
+                    }
+                }
+                w.write(&obj(rec))?;
+            }
+        }
+        if let Some(w) = &mut jsonl {
+            w.flush()?;
+        }
+
+        let steps = self.cfg.steps.max(1) as f64;
+        Ok(TrainResult {
+            train_loss,
+            evals,
+            metric_name,
+            coeff_log,
+            sim_iter_s: clock.now() / steps,
+            wall_iter_s: wall.elapsed_s() / steps,
+            phases,
+            final_params: self.params.clone(),
+            effective_batch: n * local_batch,
+        })
+    }
+}
+
+/// Convenience: build a trainer on the default runtime and run it.
+pub fn run_config(rt: Arc<Runtime>, cfg: TrainConfig) -> Result<TrainResult> {
+    Trainer::new(rt, cfg)?.run()
+}

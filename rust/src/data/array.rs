@@ -1,0 +1,75 @@
+//! Host arrays exchanged with the PJRT runtime.
+
+/// A typed host array (data, shape).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Array {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+/// One batch = the model's input arrays, in artifact-manifest order
+/// (excluding the leading flat-params input).
+pub type Batch = Vec<Array>;
+
+impl Array {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Array::F32(_, s) | Array::I32(_, s) => s,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Array::F32(d, _) => d.len(),
+            Array::I32(d, _) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn dtype_str(&self) -> &'static str {
+        match self {
+            Array::F32(..) => "f32",
+            Array::I32(..) => "i32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Array::F32(d, _) => Some(d),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            Array::I32(d, _) => Some(d),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        let a = Array::F32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        assert_eq!(a.shape(), &[2, 2]);
+        assert_eq!(a.len(), 4);
+        assert_eq!(a.numel(), 4);
+        assert_eq!(a.dtype_str(), "f32");
+        assert!(a.as_f32().is_some());
+        assert!(a.as_i32().is_none());
+        let b = Array::I32(vec![1, 2], vec![2]);
+        assert_eq!(b.dtype_str(), "i32");
+        assert_eq!(b.as_i32().unwrap(), &[1, 2]);
+    }
+}

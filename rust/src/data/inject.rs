@@ -1,0 +1,156 @@
+//! Gradient-stream failure injection.
+//!
+//! The paper motivates adaptive aggregation by "computing errors from the
+//! workers or out-of-distribution data samples inducing bad local
+//! gradients" (§1) and shows clipping-vs-perturbation behaviour in Fig. 8.
+//! An injector wraps one rank's gradient before aggregation.
+
+use crate::util::prng::Rng;
+
+/// What a faulty/noisy worker does to its gradient each step.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GradInjector {
+    /// Healthy worker.
+    None,
+    /// Byzantine: flips the gradient sign (adversarial ascent).
+    SignFlip,
+    /// Byzantine: rescales by a large factor.
+    Scale(f32),
+    /// Sends zeros (crashed accelerator returning stale buffers).
+    Zero,
+    /// Adds Gaussian noise of the given std (flaky link / ECC errors).
+    GaussNoise(f32),
+    /// Adds heavy-tailed Student-t noise (dof, scale) — the Fig. 8
+    /// perturbed-gradient regime where clipping matters.
+    HeavyTail { dof: f64, scale: f32 },
+    /// Fires `inner` only with probability `p` per step.
+    Intermittent { p: f64, inner: Box<GradInjector> },
+}
+
+impl GradInjector {
+    /// Parse `none`, `sign-flip`, `scale:100`, `zero`, `noise:0.5`,
+    /// `heavy-tail:2:0.5`, `intermittent:0.1:sign-flip`.
+    pub fn parse(s: &str) -> Option<GradInjector> {
+        let parts: Vec<&str> = s.splitn(3, ':').collect();
+        match parts.as_slice() {
+            ["none"] => Some(GradInjector::None),
+            ["sign-flip"] => Some(GradInjector::SignFlip),
+            ["zero"] => Some(GradInjector::Zero),
+            ["scale", f] => Some(GradInjector::Scale(f.parse().ok()?)),
+            ["noise", s] => Some(GradInjector::GaussNoise(s.parse().ok()?)),
+            ["heavy-tail", dof, sc] => Some(GradInjector::HeavyTail {
+                dof: dof.parse().ok()?,
+                scale: sc.parse().ok()?,
+            }),
+            ["intermittent", p, rest] => Some(GradInjector::Intermittent {
+                p: p.parse().ok()?,
+                inner: Box::new(GradInjector::parse(rest)?),
+            }),
+            _ => None,
+        }
+    }
+
+    pub fn apply(&self, grad: &mut [f32], rng: &mut Rng) {
+        match self {
+            GradInjector::None => {}
+            GradInjector::SignFlip => {
+                for g in grad.iter_mut() {
+                    *g = -*g;
+                }
+            }
+            GradInjector::Scale(f) => {
+                for g in grad.iter_mut() {
+                    *g *= f;
+                }
+            }
+            GradInjector::Zero => {
+                for g in grad.iter_mut() {
+                    *g = 0.0;
+                }
+            }
+            GradInjector::GaussNoise(std) => {
+                for g in grad.iter_mut() {
+                    *g += rng.normal_f32(*std);
+                }
+            }
+            GradInjector::HeavyTail { dof, scale } => {
+                for g in grad.iter_mut() {
+                    *g += (rng.student_t(*dof) as f32) * scale;
+                }
+            }
+            GradInjector::Intermittent { p, inner } => {
+                if rng.uniform() < *p {
+                    inner.apply(grad, rng);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_forms() {
+        assert_eq!(GradInjector::parse("none").unwrap(), GradInjector::None);
+        assert_eq!(
+            GradInjector::parse("sign-flip").unwrap(),
+            GradInjector::SignFlip
+        );
+        assert_eq!(
+            GradInjector::parse("scale:8").unwrap(),
+            GradInjector::Scale(8.0)
+        );
+        assert!(matches!(
+            GradInjector::parse("heavy-tail:2:0.5").unwrap(),
+            GradInjector::HeavyTail { .. }
+        ));
+        assert!(matches!(
+            GradInjector::parse("intermittent:0.5:zero").unwrap(),
+            GradInjector::Intermittent { .. }
+        ));
+        assert!(GradInjector::parse("bogus").is_none());
+        assert!(GradInjector::parse("scale:x").is_none());
+    }
+
+    #[test]
+    fn effects() {
+        let mut rng = Rng::new(0);
+        let base = vec![1.0f32, -2.0, 3.0];
+
+        let mut g = base.clone();
+        GradInjector::SignFlip.apply(&mut g, &mut rng);
+        assert_eq!(g, vec![-1.0, 2.0, -3.0]);
+
+        let mut g = base.clone();
+        GradInjector::Scale(10.0).apply(&mut g, &mut rng);
+        assert_eq!(g, vec![10.0, -20.0, 30.0]);
+
+        let mut g = base.clone();
+        GradInjector::Zero.apply(&mut g, &mut rng);
+        assert_eq!(g, vec![0.0; 3]);
+
+        let mut g = base.clone();
+        GradInjector::GaussNoise(0.1).apply(&mut g, &mut rng);
+        assert_ne!(g, base);
+    }
+
+    #[test]
+    fn intermittent_fires_sometimes() {
+        let inj = GradInjector::Intermittent {
+            p: 0.5,
+            inner: Box::new(GradInjector::Zero),
+        };
+        let mut rng = Rng::new(1);
+        let mut fired = 0;
+        for _ in 0..200 {
+            let mut g = vec![1.0f32];
+            inj.apply(&mut g, &mut rng);
+            if g[0] == 0.0 {
+                fired += 1;
+            }
+        }
+        assert!(fired > 50 && fired < 150, "{fired}");
+    }
+}

@@ -1,0 +1,39 @@
+//! Stochastic linear-regression stream (paper Eq. 14): ζ ~ U[0,1]^d.
+
+use super::{Array, Batch, DataGen};
+use crate::util::prng::Rng;
+
+pub struct LinRegGen {
+    rng: Rng,
+    dim: usize,
+}
+
+impl LinRegGen {
+    pub fn new(rng: Rng, dim: usize) -> Self {
+        LinRegGen { rng, dim }
+    }
+}
+
+impl DataGen for LinRegGen {
+    fn next_batch(&mut self, b: usize) -> Batch {
+        let mut x = vec![0.0f32; b * self.dim];
+        self.rng.fill_uniform_f32(&mut x);
+        vec![Array::F32(x, vec![b, self.dim])]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn values_are_uniform_01() {
+        let mut g = LinRegGen::new(Rng::new(0), 32);
+        let batch = g.next_batch(64);
+        let x = batch[0].as_f32().unwrap();
+        assert_eq!(x.len(), 64 * 32);
+        assert!(x.iter().all(|&v| (0.0..1.0).contains(&v)));
+        let mean: f32 = x.iter().sum::<f32>() / x.len() as f32;
+        assert!((mean - 0.5).abs() < 0.02, "{mean}");
+    }
+}

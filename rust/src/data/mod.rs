@@ -1,0 +1,117 @@
+//! Synthetic workload generators — the data substrate.
+//!
+//! The paper trains on MLPerf datasets we cannot ship; each generator here
+//! reproduces the *statistical structure the aggregation method actually
+//! interacts with*: i.i.d. per-worker shards with controllable inter-worker
+//! gradient diversity (sampling noise via local batch size, optional
+//! label/feature skew via `heterogeneity`).  See DESIGN.md
+//! §Hardware-Adaptation for the substitution argument.
+
+pub mod array;
+pub mod classification;
+pub mod ctr;
+pub mod detection;
+pub mod inject;
+pub mod linreg;
+pub mod text;
+
+pub use array::{Array, Batch};
+pub use inject::GradInjector;
+
+use crate::util::prng::Rng;
+
+/// A per-worker batch stream. Implementations are deterministic functions
+/// of (task seed, worker rank, draw index).
+pub trait DataGen: Send {
+    /// Generate the next local batch of `b` examples.
+    fn next_batch(&mut self, b: usize) -> Batch;
+}
+
+/// Build the generator matching a model family name from the artifact
+/// manifest (`linreg`, `mlp_cls`, `det`, `dlrm`, `tfm_sm`, `tfm_md`).
+pub fn for_model(
+    model: &str,
+    task_seed: u64,
+    rank: u64,
+    heterogeneity: f64,
+    meta: &crate::util::json::Json,
+) -> Option<Box<dyn DataGen>> {
+    let rng = Rng::new(task_seed).fork(rank);
+    match model {
+        "linreg" => {
+            let dim = meta.get("dim").as_usize().unwrap_or(1000);
+            Some(Box::new(linreg::LinRegGen::new(rng, dim)))
+        }
+        "mlp_cls" => {
+            let in_dim = meta.get("in_dim").as_usize().unwrap_or(256);
+            let classes = meta.get("classes").as_usize().unwrap_or(16);
+            Some(Box::new(classification::MixtureGen::new(
+                task_seed,
+                rng,
+                in_dim,
+                classes,
+                heterogeneity,
+            )))
+        }
+        "det" => {
+            let in_dim = meta.get("in_dim").as_usize().unwrap_or(128);
+            let classes = meta.get("classes").as_usize().unwrap_or(8);
+            Some(Box::new(detection::DetectionGen::new(
+                task_seed, rng, in_dim, classes,
+            )))
+        }
+        "dlrm" => {
+            let fields = meta.get("fields").as_usize().unwrap_or(8);
+            let vocab = meta.get("vocab").as_usize().unwrap_or(1000);
+            let dense = meta.get("dense_dim").as_usize().unwrap_or(16);
+            Some(Box::new(ctr::CtrGen::new(task_seed, rng, fields, vocab, dense)))
+        }
+        m if m.starts_with("tfm") => {
+            let vocab = meta.get("vocab").as_usize().unwrap_or(512);
+            let seq = meta.get("seq").as_usize().unwrap_or(64);
+            Some(Box::new(text::TextGen::new(task_seed, rng, vocab, seq)))
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn factory_covers_all_models() {
+        let meta = Json::parse(r#"{"dim":10,"in_dim":8,"classes":4,"fields":2,"vocab":50,"dense_dim":4,"seq":8}"#).unwrap();
+        for m in ["linreg", "mlp_cls", "det", "dlrm", "tfm_sm", "tfm_md"] {
+            let mut g = for_model(m, 1, 0, 0.0, &meta).unwrap_or_else(|| panic!("{m}"));
+            let batch = g.next_batch(4);
+            assert!(!batch.is_empty(), "{m}");
+        }
+        assert!(for_model("nope", 1, 0, 0.0, &meta).is_none());
+    }
+
+    #[test]
+    fn ranks_get_distinct_streams() {
+        let meta = Json::parse(r#"{"dim":16}"#).unwrap();
+        let mut g0 = for_model("linreg", 7, 0, 0.0, &meta).unwrap();
+        let mut g1 = for_model("linreg", 7, 1, 0.0, &meta).unwrap();
+        let b0 = g0.next_batch(2);
+        let b1 = g1.next_batch(2);
+        match (&b0[0], &b1[0]) {
+            (Array::F32(x0, _), Array::F32(x1, _)) => assert_ne!(x0, x1),
+            _ => panic!("expected f32 arrays"),
+        }
+    }
+
+    #[test]
+    fn same_rank_same_seed_reproduces() {
+        let meta = Json::parse(r#"{"dim":16}"#).unwrap();
+        let mut a = for_model("linreg", 7, 3, 0.0, &meta).unwrap();
+        let mut b = for_model("linreg", 7, 3, 0.0, &meta).unwrap();
+        match (&a.next_batch(2)[0], &b.next_batch(2)[0]) {
+            (Array::F32(x0, _), Array::F32(x1, _)) => assert_eq!(x0, x1),
+            _ => panic!(),
+        }
+    }
+}

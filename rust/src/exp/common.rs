@@ -1,0 +1,72 @@
+//! Shared experiment plumbing.
+
+use anyhow::Result;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::config::TrainConfig;
+use crate::coordinator::{TrainResult, Trainer};
+use crate::metrics::CsvWriter;
+use crate::runtime::Runtime;
+use crate::util::argparse::Args;
+
+/// Output directory for results (`--out-dir`, default `results/`).
+pub fn out_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str_or("out-dir", "results"))
+}
+
+/// Step-count scaling for bigger hosts (`--steps-scale`, default 1.0).
+pub fn scale_steps(args: &Args, steps: usize) -> usize {
+    let s = args.f64_or("steps-scale", 1.0).unwrap_or(1.0);
+    ((steps as f64 * s).round() as usize).max(2)
+}
+
+/// Run one config, logging a one-line summary.
+pub fn run(rt: Arc<Runtime>, cfg: TrainConfig, tag: &str) -> Result<TrainResult> {
+    let t = crate::util::timer::Timer::start();
+    let res = Trainer::new(rt, cfg)?.run()?;
+    println!(
+        "  {tag}: final train loss {:.5}{} [{:.1}s wall, sim {:.3} ms/iter]",
+        res.final_train_loss(10),
+        res.final_metric()
+            .map(|m| format!(", {} {:.4}", res.metric_name, m))
+            .unwrap_or_default(),
+        t.elapsed_s(),
+        res.sim_iter_s * 1e3,
+    );
+    Ok(res)
+}
+
+/// Write per-step training-loss curves: columns (series, step, loss).
+pub fn write_loss_curves(
+    path: PathBuf,
+    curves: &[(String, &TrainResult)],
+) -> Result<()> {
+    let mut w = CsvWriter::create(&path, &["series", "step", "train_loss"])?;
+    for (name, res) in curves {
+        for (step, loss) in res.train_loss.iter().enumerate() {
+            w.row(&[name.clone(), step.to_string(), format!("{loss}")])?;
+        }
+    }
+    w.flush()?;
+    println!("  wrote {path:?}");
+    Ok(())
+}
+
+/// Write eval-metric curves: columns (series, step, loss, metric).
+pub fn write_eval_curves(path: PathBuf, curves: &[(String, &TrainResult)]) -> Result<()> {
+    let mut w = CsvWriter::create(&path, &["series", "step", "eval_loss", "metric"])?;
+    for (name, res) in curves {
+        for p in &res.evals {
+            w.row(&[
+                name.clone(),
+                p.step.to_string(),
+                format!("{}", p.outcome.loss),
+                format!("{}", p.outcome.metric),
+            ])?;
+        }
+    }
+    w.flush()?;
+    println!("  wrote {path:?}");
+    Ok(())
+}

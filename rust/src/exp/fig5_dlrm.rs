@@ -1,0 +1,72 @@
+//! Fig. 5 / Fig. 10 — recommendation (DLRM-DCNv2 substitute): Sum vs
+//! AdaCons AUC across batch scaling (the paper scales the 64K baseline up
+//! to 8x via more workers).
+//!
+//! Paper shape: AdaCons keeps hitting the AUC target as the effective
+//! batch scales; Sum degrades.
+
+use anyhow::Result;
+use std::sync::Arc;
+
+use super::common;
+use crate::config::TrainConfig;
+use crate::optim::Schedule;
+use crate::runtime::Runtime;
+use crate::util::argparse::Args;
+
+pub fn run(rt: Arc<Runtime>, args: &Args) -> Result<()> {
+    let out = common::out_dir(args);
+    let steps = common::scale_steps(args, 100);
+    // Batch scaling 1x/2x/4x/8x via worker count (local batch fixed at 64).
+    let workers = args.usize_list_or("workers", &[2, 4, 8, 16])?;
+    let seed = args.u64_or("seed", 3)?;
+
+    let mut results = Vec::new();
+    for &n in &workers {
+        for agg in ["mean", "adacons"] {
+            let cfg = TrainConfig {
+                artifact: "dlrm_b64".into(),
+                workers: n,
+                aggregator: agg.into(),
+                optimizer: "adam".into(),
+                schedule: Schedule::WarmupCosine {
+                    lr: 0.002,
+                    warmup: steps / 10,
+                    total: steps,
+                    final_frac: 0.1,
+                },
+                steps,
+                eval_every: (steps / 10).max(1),
+                eval_batches: 6,
+                seed,
+                ..TrainConfig::default()
+            };
+            let res = common::run(rt.clone(), cfg, &format!("N={n} {agg}"))?;
+            results.push((format!("scale{n}x_{agg}"), res));
+        }
+    }
+    let refs: Vec<(String, &crate::coordinator::TrainResult)> =
+        results.iter().map(|(n, r)| (n.clone(), r)).collect();
+    common::write_eval_curves(out.join("fig5_auc.csv"), &refs)?;
+    common::write_loss_curves(out.join("fig5_train_loss.csv"), &refs)?;
+
+    println!("final AUC by batch scale (local batch 64):");
+    for &n in &workers {
+        let metric = |agg: &str| {
+            results
+                .iter()
+                .find(|(name, _)| name == &format!("scale{n}x_{agg}"))
+                .and_then(|(_, r)| r.final_metric())
+                .unwrap_or(f64::NAN)
+        };
+        let (m, a) = (metric("mean"), metric("adacons"));
+        println!(
+            "  eff_batch={:<5} Sum {:.4}  AdaCons {:.4}  (Δ {:+.4})",
+            n * 64,
+            m,
+            a,
+            a - m
+        );
+    }
+    Ok(())
+}

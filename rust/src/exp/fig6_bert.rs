@@ -1,0 +1,68 @@
+//! Fig. 6 / Fig. 11 — language-model pretraining (BERT-Large substitute):
+//! Sum vs AdaCons training-loss curves in the baseline setting and the
+//! 20%-fewer-iterations setting; reports minimum loss and the
+//! speedup-to-baseline-minimum (the paper: 3% lower loss, 14% speedup).
+
+use anyhow::Result;
+use std::sync::Arc;
+
+use super::common;
+use crate::config::TrainConfig;
+use crate::optim::Schedule;
+use crate::runtime::Runtime;
+use crate::util::argparse::Args;
+
+pub fn run(rt: Arc<Runtime>, args: &Args) -> Result<()> {
+    let out = common::out_dir(args);
+    let base_steps = common::scale_steps(args, 140);
+    let workers = args.usize_or("workers", 4)?;
+    let seed = args.u64_or("seed", 4)?;
+
+    let make = |agg: &str, steps: usize| TrainConfig {
+        artifact: "tfm_sm_b8".into(),
+        workers,
+        aggregator: agg.into(),
+        optimizer: "adamw".into(),
+        schedule: Schedule::WarmupCosine {
+            lr: 3e-3,
+            warmup: steps / 10,
+            total: steps,
+            final_frac: 0.1,
+        },
+        steps,
+        seed,
+        ..TrainConfig::default()
+    };
+
+    let mut all = Vec::new();
+    for (setting, steps) in [("full", base_steps), ("short", base_steps * 4 / 5)] {
+        let mut min_losses = Vec::new();
+        for agg in ["mean", "adacons"] {
+            let res = common::run(rt.clone(), make(agg, steps), &format!("{setting} {agg}"))?;
+            min_losses.push((
+                agg,
+                res.train_loss.iter().cloned().fold(f64::INFINITY, f64::min),
+            ));
+            all.push((format!("{setting}_{agg}"), res));
+        }
+        println!(
+            "  {setting}: min loss Sum {:.4} vs AdaCons {:.4}",
+            min_losses[0].1, min_losses[1].1
+        );
+        // Speedup: steps AdaCons needs to reach Sum's final (EMA) loss.
+        let sum_res = &all[all.len() - 2].1;
+        let ada_res = &all[all.len() - 1].1;
+        let target = sum_res.final_train_loss(10);
+        if let Some(s) = ada_res.steps_to_loss(target) {
+            println!(
+                "  {setting}: AdaCons reaches Sum's final loss at step {s}/{} ({:.0}% speedup)",
+                steps,
+                100.0 * (1.0 - s as f64 / steps as f64)
+            );
+        }
+    }
+    let refs: Vec<(String, &crate::coordinator::TrainResult)> =
+        all.iter().map(|(n, r)| (n.clone(), r)).collect();
+    common::write_loss_curves(out.join("fig6_loss.csv"), &refs)?;
+    Ok(())
+}

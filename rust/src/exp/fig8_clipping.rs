@@ -1,0 +1,90 @@
+//! Fig. 8 — transformer training under perturbed gradients, with and
+//! without global-norm clipping (ViT-32 substitute).
+//!
+//! Paper shape: with clipping both methods are close; removing clipping
+//! under heavy-tailed gradient noise is catastrophic for Sum but AdaCons
+//! absorbs it (its consensus weights already damp the outlier worker),
+//! flipping the ranking decisively toward AdaCons (paper: +5.26% top-1).
+
+use anyhow::Result;
+use std::sync::Arc;
+
+use super::common;
+use crate::config::TrainConfig;
+use crate::data::GradInjector;
+use crate::optim::Schedule;
+use crate::runtime::Runtime;
+use crate::util::argparse::Args;
+
+pub fn run(rt: Arc<Runtime>, args: &Args) -> Result<()> {
+    let out = common::out_dir(args);
+    let steps = common::scale_steps(args, 100);
+    let workers = args.usize_or("workers", 8)?;
+    let seed = args.u64_or("seed", 5)?;
+
+    // Two of the eight workers emit heavy-tailed perturbed gradients —
+    // the "perturbed gradients" regime of §5.4.
+    let injectors = vec![
+        (
+            0usize,
+            GradInjector::Intermittent {
+                p: 0.25,
+                inner: Box::new(GradInjector::HeavyTail {
+                    dof: 2.0,
+                    scale: 0.02,
+                }),
+            },
+        ),
+        (
+            1usize,
+            GradInjector::Intermittent {
+                p: 0.25,
+                inner: Box::new(GradInjector::Scale(8.0)),
+            },
+        ),
+    ];
+
+    let mut all = Vec::new();
+    for (clip_name, clip) in [("clip", Some(1.0)), ("noclip", None)] {
+        for agg in ["mean", "adacons"] {
+            let cfg = TrainConfig {
+                artifact: "tfm_sm_b8".into(),
+                workers,
+                aggregator: agg.into(),
+                optimizer: "adamw".into(),
+                schedule: Schedule::WarmupCosine {
+                    lr: 3e-3,
+                    warmup: steps / 5, // the paper's long warmup
+                    total: steps,
+                    final_frac: 0.1,
+                },
+                steps,
+                clip,
+                injectors: injectors.clone(),
+                seed,
+                ..TrainConfig::default()
+            };
+            let res = common::run(rt.clone(), cfg, &format!("{clip_name} {agg}"))?;
+            all.push((format!("{clip_name}_{agg}"), res));
+        }
+    }
+    let refs: Vec<(String, &crate::coordinator::TrainResult)> =
+        all.iter().map(|(n, r)| (n.clone(), r)).collect();
+    common::write_loss_curves(out.join("fig8_loss.csv"), &refs)?;
+
+    println!("final train loss (lower is better):");
+    for clip_name in ["clip", "noclip"] {
+        let f = |agg: &str| {
+            all.iter()
+                .find(|(n, _)| n == &format!("{clip_name}_{agg}"))
+                .map(|(_, r)| r.final_train_loss(10))
+                .unwrap_or(f64::NAN)
+        };
+        println!(
+            "  {clip_name:>7}: Sum {:.4}  AdaCons {:.4}",
+            f("mean"),
+            f("adacons")
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Experiment harness: one module per paper figure/table (DESIGN.md §4).
+//!
+//! Every harness writes `results/<id>*.csv` with the series the paper
+//! plots and prints a paper-shaped summary to stdout. Budgets are sized
+//! for the single-CPU testbed; `--steps-scale` multiplies all step counts
+//! for longer runs on bigger hosts.
+
+pub mod ablation_bucket;
+pub mod common;
+pub mod fig2_linreg;
+pub mod fig3_imagenet;
+pub mod fig4_retinanet;
+pub mod fig5_dlrm;
+pub mod fig6_bert;
+pub mod fig7_coeffs;
+pub mod fig8_clipping;
+pub mod table1_timing;
+pub mod table2_ablation;
+
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+use crate::runtime::Runtime;
+use crate::util::argparse::Args;
+
+pub const FIGURES: &[&str] = &["fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8"];
+pub const TABLES: &[&str] = &["table1", "table2", "buckets"];
+
+pub fn run_figure(rt: Arc<Runtime>, id: &str, args: &Args) -> Result<()> {
+    match id {
+        "fig2" => fig2_linreg::run(rt, args),
+        "fig3" => fig3_imagenet::run(rt, args),
+        "fig4" => fig4_retinanet::run(rt, args),
+        "fig5" => fig5_dlrm::run(rt, args),
+        "fig6" => fig6_bert::run(rt, args),
+        "fig7" => fig7_coeffs::run(rt, args),
+        "fig8" => fig8_clipping::run(rt, args),
+        "all" => {
+            for f in FIGURES {
+                println!("\n=== {f} ===");
+                run_figure(rt.clone(), f, args)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown figure {other:?} (known: {FIGURES:?})"),
+    }
+}
+
+pub fn run_table(rt: Arc<Runtime>, id: &str, args: &Args) -> Result<()> {
+    match id {
+        "table1" => table1_timing::run(rt, args),
+        "table2" => table2_ablation::run(rt, args),
+        "buckets" => ablation_bucket::run(rt, args),
+        "all" => {
+            for t in TABLES {
+                println!("\n=== {t} ===");
+                run_table(rt.clone(), t, args)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown table {other:?} (known: {TABLES:?})"),
+    }
+}

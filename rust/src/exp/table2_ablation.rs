@@ -1,0 +1,124 @@
+//! Table 2 — component ablation: Sum / AdaCons (raw Eq. 8) / +Momentum
+//! (Eq. 11) / +Normalization (Eq. 13) / both, on the classification
+//! (accuracy ↑), recommendation (AUC ↑) and LM (loss ↓) substitutes.
+//!
+//! Paper shape: Sum < AdaCons < Momentum < Normalization ≤ Moment.&Norm.
+
+use anyhow::Result;
+use std::sync::Arc;
+
+use super::common;
+use crate::config::TrainConfig;
+use crate::metrics::CsvWriter;
+use crate::optim::Schedule;
+use crate::runtime::Runtime;
+use crate::util::argparse::Args;
+
+const VARIANTS: &[(&str, &str)] = &[
+    ("Sum", "mean"),
+    ("AdaCons", "adacons-raw"),
+    ("Momentum", "adacons-momentum"),
+    ("Normalization", "adacons-norm"),
+    ("Moment.&Norm.", "adacons"),
+];
+
+pub fn run(rt: Arc<Runtime>, args: &Args) -> Result<()> {
+    let out = common::out_dir(args);
+    let steps = common::scale_steps(args, 100);
+    let seed = args.u64_or("seed", 6)?;
+    let mut w = CsvWriter::create(
+        out.join("table2_ablation.csv"),
+        &["task", "variant", "value", "metric"],
+    )?;
+
+    let tasks: Vec<(&str, TrainConfig)> = vec![
+        (
+            "Imagenet(acc)",
+            TrainConfig {
+                artifact: "mlp_cls_b32".into(),
+                workers: 8,
+                optimizer: "adam".into(),
+                schedule: Schedule::WarmupCosine {
+                    lr: 0.004,
+                    warmup: steps / 10,
+                    total: steps,
+                    final_frac: 0.05,
+                },
+                steps,
+                eval_every: steps - 1,
+                eval_batches: 6,
+                heterogeneity: 0.3,
+                seed,
+                ..TrainConfig::default()
+            },
+        ),
+        (
+            "DLRM(auc)",
+            TrainConfig {
+                artifact: "dlrm_b64".into(),
+                workers: 8,
+                optimizer: "adam".into(),
+                schedule: Schedule::WarmupCosine {
+                    lr: 0.002,
+                    warmup: steps / 10,
+                    total: steps,
+                    final_frac: 0.1,
+                },
+                steps,
+                eval_every: steps - 1,
+                eval_batches: 6,
+                seed,
+                ..TrainConfig::default()
+            },
+        ),
+        (
+            "BERT(loss)",
+            TrainConfig {
+                artifact: "tfm_sm_b8".into(),
+                workers: 4,
+                optimizer: "adamw".into(),
+                schedule: Schedule::WarmupCosine {
+                    lr: 3e-3,
+                    warmup: steps / 10,
+                    total: steps,
+                    final_frac: 0.1,
+                },
+                steps,
+                seed,
+                ..TrainConfig::default()
+            },
+        ),
+    ];
+
+    println!(
+        "{:<14} {}",
+        "Task",
+        VARIANTS
+            .iter()
+            .map(|(label, _)| format!("{label:>14}"))
+            .collect::<String>()
+    );
+    for (task, base_cfg) in tasks {
+        let mut row = format!("{task:<14}");
+        for (label, agg) in VARIANTS {
+            let mut cfg = base_cfg.clone();
+            cfg.aggregator = agg.to_string();
+            let res = common::run(rt.clone(), cfg, &format!("{task} {label}"))?;
+            // Metric: eval metric when available, else final train loss.
+            let (value, metric) = match res.final_metric() {
+                Some(m) if res.metric_name != "loss" => (m, res.metric_name),
+                _ => (res.final_train_loss(10), "loss"),
+            };
+            row.push_str(&format!("{value:>14.4}"));
+            w.row(&[
+                task.into(),
+                label.to_string(),
+                format!("{value}"),
+                metric.into(),
+            ])?;
+        }
+        println!("{row}");
+    }
+    w.flush()?;
+    Ok(())
+}

@@ -1,0 +1,22 @@
+//! AdaCons — Adaptive Consensus Gradients Aggregation for Scaled
+//! Distributed Training.
+//!
+//! Rust (L3) coordinator implementing the paper's gradient-aggregation
+//! contribution plus every substrate it depends on; compute (L2 JAX model,
+//! L1 Pallas kernels) is AOT-compiled to HLO and executed via PJRT.
+//! See DESIGN.md for the system inventory and experiment index.
+
+pub mod aggregation;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod metrics;
+pub mod optim;
+pub mod runtime;
+pub mod worker;
+pub mod collective;
+pub mod comm;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,157 @@
+//! `adacons` — the leader binary.
+//!
+//! Subcommands:
+//!   train   — run one training config (JSON file + CLI overrides)
+//!   figure  — regenerate a paper figure's series (fig2..fig8 | all)
+//!   table   — regenerate a paper table (table1 | table2 | all)
+//!   inspect — list the artifacts in the manifest
+//!   help    — this text
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use adacons::config::TrainConfig;
+use adacons::coordinator::{Checkpoint, Trainer};
+use adacons::runtime::Runtime;
+use adacons::util::argparse::Args;
+
+const USAGE: &str = "\
+adacons — Adaptive Consensus Gradients Aggregation (paper reproduction)
+
+USAGE:
+  adacons train [--config cfg.json] [--artifact NAME] [--workers N]
+                [--aggregator mean|adacons|adacons-raw|adacons-momentum|
+                 adacons-norm|adasum|grawa|median|trimmed-mean]
+                [--optimizer sgd|sgd-momentum|adam|adamw|lamb|linreg-exact]
+                [--schedule const:LR|cosine:LR:WARM:TOTAL|step:LR:EVERY:G|invsqrt:LR:WARM]
+                [--steps N] [--eval-every N] [--seed S] [--clip C|none]
+                [--bucket-cap N] [--heterogeneity H] [--inject RANK:SPEC]
+                [--fabric-gbps G] [--save-checkpoint PATH] [--load-checkpoint PATH]
+                [--csv PATH]
+  adacons figure fig2|fig3|fig4|fig5|fig6|fig7|fig8|all [--out-dir DIR] [--steps-scale F]
+  adacons table  table1|table2|all [--out-dir DIR] [--steps-scale F]
+  adacons inspect
+  adacons help
+
+Artifacts must be built first: `make artifacts` (runs python/compile/aot.py once).
+";
+
+fn main() {
+    adacons::util::logging::init();
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = argv.remove(0);
+    match cmd.as_str() {
+        "train" => {
+            let args = Args::parse(argv, &[]);
+            cmd_train(&args)
+        }
+        "figure" => {
+            anyhow::ensure!(!argv.is_empty(), "figure id required (fig2..fig8 | all)");
+            let id = argv.remove(0);
+            let args = Args::parse(argv, &[]);
+            let rt = Arc::new(Runtime::open_default()?);
+            adacons::exp::run_figure(rt, &id, &args)
+        }
+        "table" => {
+            anyhow::ensure!(!argv.is_empty(), "table id required (table1 | table2 | all)");
+            let id = argv.remove(0);
+            let args = Args::parse(argv, &[]);
+            let rt = Arc::new(Runtime::open_default()?);
+            adacons::exp::run_table(rt, &id, &args)
+        }
+        "inspect" => cmd_inspect(),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = match args.str_opt("config") {
+        Some(path) => TrainConfig::load_file(path)?,
+        None => TrainConfig::default(),
+    };
+    cfg.apply_args(args)?;
+    let rt = Arc::new(Runtime::open_default()?);
+    let mut trainer = Trainer::new(rt, cfg.clone())?;
+    if let Some(path) = args.str_opt("load-checkpoint") {
+        let ck = Checkpoint::load(path)?;
+        trainer.restore(&ck).context("restoring checkpoint")?;
+        println!("restored checkpoint at step {}", ck.step);
+    }
+    let res = trainer.run()?;
+    println!(
+        "{} x{} workers, {} steps: train loss {:.5} -> {:.5}",
+        cfg.artifact,
+        cfg.workers,
+        cfg.steps,
+        res.train_loss.first().unwrap_or(&f64::NAN),
+        res.final_train_loss(10),
+    );
+    if let Some(m) = res.final_metric() {
+        println!("final {}: {:.4}", res.metric_name, m);
+    }
+    println!(
+        "per-iteration: {:.2} ms wall, {:.3} ms simulated @ {} Gb/s fabric",
+        res.wall_iter_s * 1e3,
+        res.sim_iter_s * 1e3,
+        cfg.fabric_gbps
+    );
+    print!("{}", res.phases.report());
+    if let Some(path) = args.str_opt("save-checkpoint") {
+        Checkpoint {
+            step: cfg.steps as u64,
+            params: res.final_params.clone(),
+        }
+        .save(path)?;
+        println!("saved checkpoint to {path}");
+    }
+    if let Some(path) = args.str_opt("csv") {
+        let mut w = adacons::metrics::CsvWriter::create(path, &["step", "train_loss"])?;
+        for (i, l) in res.train_loss.iter().enumerate() {
+            w.row(&[i.to_string(), format!("{l}")])?;
+        }
+        w.flush()?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_inspect() -> Result<()> {
+    let rt = Runtime::open_default()?;
+    println!("PJRT platform: {}", rt.platform());
+    println!(
+        "{:<24} {:>6} {:>10} {:>8}  inputs",
+        "artifact", "kind", "param_dim", "batch"
+    );
+    for (name, spec) in &rt.manifest.artifacts {
+        let inputs: Vec<String> = spec
+            .inputs
+            .iter()
+            .map(|s| format!("{}:{}{:?}", s.name, s.dtype, s.shape))
+            .collect();
+        println!(
+            "{:<24} {:>6} {:>10} {:>8}  {}",
+            name,
+            spec.kind,
+            spec.param_dim,
+            spec.local_batch(),
+            inputs.join(" ")
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! ROC AUC via the rank-sum (Mann-Whitney U) estimator, with tie handling
+//! by midranks — the DLRM task's target metric.
+
+/// AUC of `scores` against binary `labels` (anything > 0.5 is positive).
+pub fn auc_from_scores(scores: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n = scores.len();
+    if n == 0 {
+        return 0.5;
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap_or(std::cmp::Ordering::Equal));
+    // midranks for ties
+    let mut ranks = vec![0.0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        let mid = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            ranks[idx[k]] = mid;
+        }
+        i = j + 1;
+    }
+    let pos = labels.iter().filter(|&&l| l > 0.5).count() as f64;
+    let neg = n as f64 - pos;
+    if pos == 0.0 || neg == 0.0 {
+        return 0.5;
+    }
+    let rank_sum: f64 = (0..n).filter(|&i| labels[i] > 0.5).map(|i| ranks[i]).sum();
+    (rank_sum - pos * (pos + 1.0) / 2.0) / (pos * neg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_separation() {
+        let scores = [0.1f32, 0.2, 0.8, 0.9];
+        let labels = [0.0f32, 0.0, 1.0, 1.0];
+        assert!((auc_from_scores(&scores, &labels) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverted_is_zero() {
+        let scores = [0.9f32, 0.8, 0.2, 0.1];
+        let labels = [0.0f32, 0.0, 1.0, 1.0];
+        assert!(auc_from_scores(&scores, &labels) < 1e-12);
+    }
+
+    #[test]
+    fn random_is_half() {
+        // identical scores => ties => AUC 0.5 by midranks
+        let scores = [0.5f32; 10];
+        let labels = [1.0f32, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0];
+        assert!((auc_from_scores(&scores, &labels) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matches_brute_force_pair_count() {
+        let scores = [0.1f32, 0.4, 0.35, 0.8, 0.65, 0.9, 0.5, 0.3];
+        let labels = [0.0f32, 0.0, 1.0, 1.0, 0.0, 1.0, 1.0, 0.0];
+        // brute force: P(score_pos > score_neg) + 0.5 P(=)
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for i in 0..8 {
+            for j in 0..8 {
+                if labels[i] > 0.5 && labels[j] < 0.5 {
+                    den += 1.0;
+                    if scores[i] > scores[j] {
+                        num += 1.0;
+                    } else if scores[i] == scores[j] {
+                        num += 0.5;
+                    }
+                }
+            }
+        }
+        assert!((auc_from_scores(&scores, &labels) - num / den).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_single_class() {
+        assert_eq!(auc_from_scores(&[0.1, 0.9], &[1.0, 1.0]), 0.5);
+        assert_eq!(auc_from_scores(&[], &[]), 0.5);
+    }
+}

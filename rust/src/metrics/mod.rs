@@ -1,0 +1,27 @@
+//! Evaluation metrics and result sinks.
+
+pub mod auc;
+pub mod map_proxy;
+pub mod sink;
+
+pub use auc::auc_from_scores;
+pub use map_proxy::map_proxy;
+pub use sink::{CsvWriter, JsonlWriter};
+
+/// Top-1 accuracy from a per-example correctness vector (0/1 floats, the
+/// eval-artifact output convention).
+pub fn accuracy(correct: &[f32]) -> f64 {
+    if correct.is_empty() {
+        return 0.0;
+    }
+    correct.iter().map(|&c| c as f64).sum::<f64>() / correct.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(super::accuracy(&[1.0, 0.0, 1.0, 1.0]), 0.75);
+        assert_eq!(super::accuracy(&[]), 0.0);
+    }
+}

@@ -1,0 +1,102 @@
+//! Result sinks: CSV series (one per figure) and JSONL step logs.
+
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Buffered CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter {
+            out,
+            cols: header.len(),
+        })
+    }
+
+    pub fn row(&mut self, values: &[String]) -> std::io::Result<()> {
+        debug_assert_eq!(values.len(), self.cols, "csv row arity mismatch");
+        writeln!(self.out, "{}", values.join(","))
+    }
+
+    pub fn row_display(&mut self, values: &[&dyn std::fmt::Display]) -> std::io::Result<()> {
+        let strs: Vec<String> = values.iter().map(|v| v.to_string()).collect();
+        self.row(&strs)
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+/// JSONL step logger.
+pub struct JsonlWriter {
+    out: BufWriter<File>,
+}
+
+impl JsonlWriter {
+    pub fn create<P: AsRef<Path>>(path: P) -> std::io::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            fs::create_dir_all(dir)?;
+        }
+        Ok(JsonlWriter {
+            out: BufWriter::new(File::create(path)?),
+        })
+    }
+
+    pub fn write(&mut self, record: &Json) -> std::io::Result<()> {
+        writeln!(self.out, "{}", record.to_string_compact())
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{num, obj};
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("adacons_test_csv");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["step", "loss"]).unwrap();
+            w.row(&["0".into(), "1.5".into()]).unwrap();
+            w.row_display(&[&1, &0.75]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "step,loss\n0,1.5\n1,0.75\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let dir = std::env::temp_dir().join("adacons_test_jsonl");
+        let path = dir.join("t.jsonl");
+        {
+            let mut w = JsonlWriter::create(&path).unwrap();
+            w.write(&obj(vec![("step", num(1.0)), ("loss", num(0.5))]))
+                .unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = Json::parse(text.trim()).unwrap();
+        assert_eq!(parsed.get("loss").as_f64().unwrap(), 0.5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

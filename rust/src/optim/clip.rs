@@ -1,0 +1,47 @@
+//! Global-norm gradient clipping (paper §5.4 / Fig. 8: clipping is
+//! critical for large transformers but limits AdaCons' effectiveness —
+//! the Fig. 8 harness toggles this).
+
+use crate::tensor::ops;
+
+/// Clip `grad` in place to global L2 norm `max_norm`. Returns the scale
+/// that was applied (1.0 when no clipping happened).
+pub fn clip_global_norm(grad: &mut [f32], max_norm: f64) -> f64 {
+    let norm = ops::nrm2(grad);
+    if norm > max_norm && norm > 0.0 {
+        let scale = max_norm / norm;
+        ops::scale(scale as f32, grad);
+        scale
+    } else {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clips_when_above() {
+        let mut g = vec![3.0f32, 4.0]; // norm 5
+        let s = clip_global_norm(&mut g, 1.0);
+        assert!((s - 0.2).abs() < 1e-12);
+        assert!((ops::nrm2(&g) - 1.0).abs() < 1e-6);
+        // direction preserved
+        assert!((g[0] / g[1] - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn noop_when_below() {
+        let mut g = vec![0.3f32, 0.4];
+        let s = clip_global_norm(&mut g, 1.0);
+        assert_eq!(s, 1.0);
+        assert_eq!(g, vec![0.3, 0.4]);
+    }
+
+    #[test]
+    fn zero_gradient_safe() {
+        let mut g = vec![0.0f32; 4];
+        assert_eq!(clip_global_norm(&mut g, 1.0), 1.0);
+    }
+}

@@ -1,0 +1,37 @@
+//! Optimizers applied to the aggregated direction (paper §3.2: "other
+//! optimizers (e.g., Adam) can be applied to the obtained aggregated
+//! directions"), learning-rate schedules, and gradient clipping.
+
+pub mod clip;
+pub mod linreg_exact;
+pub mod optimizer;
+pub mod schedule;
+
+pub use clip::clip_global_norm;
+pub use linreg_exact::LinregExact;
+pub use optimizer::{Adam, AdamW, Lamb, Optimizer, Sgd, SgdMomentum};
+pub use schedule::Schedule;
+
+/// Build an optimizer by name: `sgd`, `sgd-momentum`, `adam`, `adamw`, `lamb`.
+pub fn by_name(name: &str, d: usize) -> Option<Box<dyn Optimizer>> {
+    match name {
+        "sgd" => Some(Box::new(Sgd::new())),
+        "linreg-exact" => Some(Box::new(LinregExact::new())),
+        "sgd-momentum" => Some(Box::new(SgdMomentum::new(d, 0.9))),
+        "adam" => Some(Box::new(Adam::new(d, 0.9, 0.999, 1e-8))),
+        "adamw" => Some(Box::new(AdamW::new(d, 0.9, 0.999, 1e-8, 0.01))),
+        "lamb" => Some(Box::new(Lamb::new(d, 0.9, 0.999, 1e-6, 0.01))),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn registry() {
+        for n in ["sgd", "sgd-momentum", "adam", "adamw", "lamb", "linreg-exact"] {
+            assert!(super::by_name(n, 4).is_some(), "{n}");
+        }
+        assert!(super::by_name("lion", 4).is_none());
+    }
+}

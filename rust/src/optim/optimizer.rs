@@ -1,0 +1,269 @@
+//! First-order optimizers over flat parameter vectors.
+
+/// A stateful optimizer stepping flat `f32` parameters with a flat update
+/// direction (the aggregated gradient).
+pub trait Optimizer: Send {
+    fn name(&self) -> &'static str;
+    /// `params -= lr * f(direction)` where `f` is the optimizer's transform.
+    fn step(&mut self, params: &mut [f32], direction: &[f32], lr: f32);
+    fn reset(&mut self);
+}
+
+/// Plain SGD.
+#[derive(Debug, Default)]
+pub struct Sgd;
+
+impl Sgd {
+    pub fn new() -> Self {
+        Sgd
+    }
+}
+
+impl Optimizer for Sgd {
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn step(&mut self, params: &mut [f32], direction: &[f32], lr: f32) {
+        for (p, g) in params.iter_mut().zip(direction) {
+            *p -= lr * g;
+        }
+    }
+
+    fn reset(&mut self) {}
+}
+
+/// SGD with heavy-ball momentum.
+#[derive(Debug)]
+pub struct SgdMomentum {
+    mu: f32,
+    velocity: Vec<f32>,
+}
+
+impl SgdMomentum {
+    pub fn new(d: usize, mu: f32) -> Self {
+        SgdMomentum {
+            mu,
+            velocity: vec![0.0; d],
+        }
+    }
+}
+
+impl Optimizer for SgdMomentum {
+    fn name(&self) -> &'static str {
+        "sgd-momentum"
+    }
+
+    fn step(&mut self, params: &mut [f32], direction: &[f32], lr: f32) {
+        for ((p, g), v) in params.iter_mut().zip(direction).zip(&mut self.velocity) {
+            *v = self.mu * *v + g;
+            *p -= lr * *v;
+        }
+    }
+
+    fn reset(&mut self) {
+        self.velocity.iter_mut().for_each(|v| *v = 0.0);
+    }
+}
+
+/// Adam (Kingma & Ba) with bias correction.
+#[derive(Debug)]
+pub struct Adam {
+    b1: f32,
+    b2: f32,
+    eps: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: i32,
+}
+
+impl Adam {
+    pub fn new(d: usize, b1: f32, b2: f32, eps: f32) -> Self {
+        Adam {
+            b1,
+            b2,
+            eps,
+            m: vec![0.0; d],
+            v: vec![0.0; d],
+            t: 0,
+        }
+    }
+
+    fn adam_update(&mut self, params: &mut [f32], direction: &[f32], lr: f32, wd: f32) {
+        self.t += 1;
+        let c1 = 1.0 - self.b1.powi(self.t);
+        let c2 = 1.0 - self.b2.powi(self.t);
+        for i in 0..params.len() {
+            let g = direction[i];
+            self.m[i] = self.b1 * self.m[i] + (1.0 - self.b1) * g;
+            self.v[i] = self.b2 * self.v[i] + (1.0 - self.b2) * g * g;
+            let mhat = self.m[i] / c1;
+            let vhat = self.v[i] / c2;
+            params[i] -= lr * (mhat / (vhat.sqrt() + self.eps) + wd * params[i]);
+        }
+    }
+}
+
+impl Optimizer for Adam {
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+
+    fn step(&mut self, params: &mut [f32], direction: &[f32], lr: f32) {
+        self.adam_update(params, direction, lr, 0.0);
+    }
+
+    fn reset(&mut self) {
+        self.m.iter_mut().for_each(|x| *x = 0.0);
+        self.v.iter_mut().for_each(|x| *x = 0.0);
+        self.t = 0;
+    }
+}
+
+/// AdamW — Adam with decoupled weight decay.
+#[derive(Debug)]
+pub struct AdamW {
+    inner: Adam,
+    weight_decay: f32,
+}
+
+impl AdamW {
+    pub fn new(d: usize, b1: f32, b2: f32, eps: f32, weight_decay: f32) -> Self {
+        AdamW {
+            inner: Adam::new(d, b1, b2, eps),
+            weight_decay,
+        }
+    }
+}
+
+impl Optimizer for AdamW {
+    fn name(&self) -> &'static str {
+        "adamw"
+    }
+
+    fn step(&mut self, params: &mut [f32], direction: &[f32], lr: f32) {
+        let wd = self.weight_decay;
+        self.inner.adam_update(params, direction, lr, wd);
+    }
+
+    fn reset(&mut self) {
+        self.inner.reset();
+    }
+}
+
+/// LAMB (You et al.) — layer-adaptive large-batch optimizer; here applied
+/// model-wise over the flat vector (trust ratio over the whole vector),
+/// which is the flat-parameter analogue the BERT bench uses.
+#[derive(Debug)]
+pub struct Lamb {
+    inner: Adam,
+    weight_decay: f32,
+}
+
+impl Lamb {
+    pub fn new(d: usize, b1: f32, b2: f32, eps: f32, weight_decay: f32) -> Self {
+        Lamb {
+            inner: Adam::new(d, b1, b2, eps),
+            weight_decay,
+        }
+    }
+}
+
+impl Optimizer for Lamb {
+    fn name(&self) -> &'static str {
+        "lamb"
+    }
+
+    fn step(&mut self, params: &mut [f32], direction: &[f32], lr: f32) {
+        let a = &mut self.inner;
+        a.t += 1;
+        let c1 = 1.0 - a.b1.powi(a.t);
+        let c2 = 1.0 - a.b2.powi(a.t);
+        // Build the Adam update, then rescale by the trust ratio.
+        let mut update = vec![0.0f32; params.len()];
+        for i in 0..params.len() {
+            let g = direction[i];
+            a.m[i] = a.b1 * a.m[i] + (1.0 - a.b1) * g;
+            a.v[i] = a.b2 * a.v[i] + (1.0 - a.b2) * g * g;
+            let mhat = a.m[i] / c1;
+            let vhat = a.v[i] / c2;
+            update[i] = mhat / (vhat.sqrt() + a.eps) + self.weight_decay * params[i];
+        }
+        let wnorm = crate::tensor::ops::nrm2(params) as f32;
+        let unorm = crate::tensor::ops::nrm2(&update) as f32;
+        let trust = if wnorm > 0.0 && unorm > 0.0 {
+            wnorm / unorm
+        } else {
+            1.0
+        };
+        for (p, u) in params.iter_mut().zip(&update) {
+            *p -= lr * trust * u;
+        }
+    }
+
+    fn reset(&mut self) {
+        self.inner.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quadratic_converges(opt: &mut dyn Optimizer, lr: f32) -> f32 {
+        // min 0.5*||x||^2, grad = x.
+        let mut x = vec![1.0f32, -2.0, 3.0];
+        for _ in 0..200 {
+            let g = x.clone();
+            opt.step(&mut x, &g, lr);
+        }
+        crate::tensor::ops::nrm2(&x) as f32
+    }
+
+    #[test]
+    fn all_optimizers_converge_on_quadratic() {
+        assert!(quadratic_converges(&mut Sgd::new(), 0.1) < 1e-3);
+        assert!(quadratic_converges(&mut SgdMomentum::new(3, 0.9), 0.02) < 1e-3);
+        assert!(quadratic_converges(&mut Adam::new(3, 0.9, 0.999, 1e-8), 0.05) < 1e-2);
+        assert!(quadratic_converges(&mut AdamW::new(3, 0.9, 0.999, 1e-8, 0.0), 0.05) < 1e-2);
+        assert!(quadratic_converges(&mut Lamb::new(3, 0.9, 0.999, 1e-6, 0.0), 0.05) < 1e-1);
+    }
+
+    #[test]
+    fn sgd_step_is_exact() {
+        let mut x = vec![1.0f32, 2.0];
+        Sgd::new().step(&mut x, &[0.5, -0.5], 0.1);
+        assert!((x[0] - 0.95).abs() < 1e-7);
+        assert!((x[1] - 2.05).abs() < 1e-7);
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        let mut opt = SgdMomentum::new(1, 0.9);
+        let mut x = vec![0.0f32];
+        opt.step(&mut x, &[1.0], 1.0); // v=1, x=-1
+        opt.step(&mut x, &[1.0], 1.0); // v=1.9, x=-2.9
+        assert!((x[0] + 2.9).abs() < 1e-6);
+        opt.reset();
+        opt.step(&mut x, &[0.0], 1.0);
+        assert!((x[0] + 2.9).abs() < 1e-6); // velocity cleared
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // Bias correction makes |Δ| ≈ lr regardless of gradient scale.
+        let mut opt = Adam::new(1, 0.9, 0.999, 1e-8);
+        let mut x = vec![0.0f32];
+        opt.step(&mut x, &[1e-3], 0.1);
+        assert!((x[0].abs() - 0.1).abs() < 1e-3, "{}", x[0]);
+    }
+
+    #[test]
+    fn adamw_decays_weights_without_gradient() {
+        let mut opt = AdamW::new(1, 0.9, 0.999, 1e-8, 0.1);
+        let mut x = vec![1.0f32];
+        opt.step(&mut x, &[0.0], 0.1);
+        assert!(x[0] < 1.0); // decay applied
+        assert!(x[0] > 0.95);
+    }
+}

@@ -1,0 +1,159 @@
+//! Learning-rate schedules (the MLPerf baselines use warmup + decay).
+
+/// LR as a function of the global step.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Schedule {
+    Const {
+        lr: f64,
+    },
+    /// Linear warmup to `lr` over `warmup` steps, then cosine decay to
+    /// `final_frac * lr` at `total` steps.
+    WarmupCosine {
+        lr: f64,
+        warmup: usize,
+        total: usize,
+        final_frac: f64,
+    },
+    /// Step decay: lr * gamma^(step / every).
+    StepDecay {
+        lr: f64,
+        every: usize,
+        gamma: f64,
+    },
+    /// Linear warmup then inverse-sqrt decay (transformer pretraining).
+    WarmupInvSqrt {
+        lr: f64,
+        warmup: usize,
+    },
+}
+
+impl Schedule {
+    pub fn lr(&self, step: usize) -> f64 {
+        match *self {
+            Schedule::Const { lr } => lr,
+            Schedule::WarmupCosine {
+                lr,
+                warmup,
+                total,
+                final_frac,
+            } => {
+                if warmup > 0 && step < warmup {
+                    lr * (step + 1) as f64 / warmup as f64
+                } else {
+                    let t = ((step - warmup) as f64 / (total.saturating_sub(warmup)).max(1) as f64)
+                        .min(1.0);
+                    let cos = 0.5 * (1.0 + (std::f64::consts::PI * t).cos());
+                    lr * (final_frac + (1.0 - final_frac) * cos)
+                }
+            }
+            Schedule::StepDecay { lr, every, gamma } => lr * gamma.powi((step / every) as i32),
+            Schedule::WarmupInvSqrt { lr, warmup } => {
+                if warmup > 0 && step < warmup {
+                    lr * (step + 1) as f64 / warmup as f64
+                } else {
+                    lr * (warmup.max(1) as f64 / (step + 1) as f64).sqrt()
+                }
+            }
+        }
+    }
+
+    /// Parse `const:0.1`, `cosine:0.1:100:1000[:0.01]`, `step:0.1:30:0.1`,
+    /// `invsqrt:0.001:100`.
+    pub fn parse(s: &str) -> Option<Schedule> {
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts.as_slice() {
+            ["const", lr] => Some(Schedule::Const { lr: lr.parse().ok()? }),
+            ["cosine", lr, warmup, total] => Some(Schedule::WarmupCosine {
+                lr: lr.parse().ok()?,
+                warmup: warmup.parse().ok()?,
+                total: total.parse().ok()?,
+                final_frac: 0.0,
+            }),
+            ["cosine", lr, warmup, total, ff] => Some(Schedule::WarmupCosine {
+                lr: lr.parse().ok()?,
+                warmup: warmup.parse().ok()?,
+                total: total.parse().ok()?,
+                final_frac: ff.parse().ok()?,
+            }),
+            ["step", lr, every, gamma] => Some(Schedule::StepDecay {
+                lr: lr.parse().ok()?,
+                every: every.parse().ok()?,
+                gamma: gamma.parse().ok()?,
+            }),
+            ["invsqrt", lr, warmup] => Some(Schedule::WarmupInvSqrt {
+                lr: lr.parse().ok()?,
+                warmup: warmup.parse().ok()?,
+            }),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn const_schedule() {
+        let s = Schedule::Const { lr: 0.1 };
+        assert_eq!(s.lr(0), 0.1);
+        assert_eq!(s.lr(10_000), 0.1);
+    }
+
+    #[test]
+    fn warmup_cosine_shape() {
+        let s = Schedule::WarmupCosine {
+            lr: 1.0,
+            warmup: 10,
+            total: 110,
+            final_frac: 0.0,
+        };
+        assert!(s.lr(0) < s.lr(5));
+        assert!((s.lr(9) - 1.0).abs() < 1e-9); // end of warmup
+        assert!(s.lr(60) < 1.0);
+        assert!(s.lr(109) < 0.01);
+        assert!(s.lr(500) >= 0.0); // clamped past total
+    }
+
+    #[test]
+    fn step_decay() {
+        let s = Schedule::StepDecay {
+            lr: 1.0,
+            every: 10,
+            gamma: 0.5,
+        };
+        assert_eq!(s.lr(0), 1.0);
+        assert_eq!(s.lr(10), 0.5);
+        assert_eq!(s.lr(25), 0.25);
+    }
+
+    #[test]
+    fn invsqrt_decays() {
+        let s = Schedule::WarmupInvSqrt { lr: 1.0, warmup: 4 };
+        assert!(s.lr(0) < s.lr(3));
+        assert!((s.lr(3) - 1.0).abs() < 1e-9);
+        assert!(s.lr(99) < 0.3);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(
+            Schedule::parse("const:0.5").unwrap(),
+            Schedule::Const { lr: 0.5 }
+        );
+        assert!(matches!(
+            Schedule::parse("cosine:0.1:10:100").unwrap(),
+            Schedule::WarmupCosine { .. }
+        ));
+        assert!(matches!(
+            Schedule::parse("step:0.1:30:0.5").unwrap(),
+            Schedule::StepDecay { .. }
+        ));
+        assert!(matches!(
+            Schedule::parse("invsqrt:0.001:100").unwrap(),
+            Schedule::WarmupInvSqrt { .. }
+        ));
+        assert!(Schedule::parse("bogus").is_none());
+        assert!(Schedule::parse("const:x").is_none());
+    }
+}

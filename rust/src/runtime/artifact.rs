@@ -1,0 +1,225 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime (`artifacts/manifest.json`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Dtype+shape of one runtime input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: String, // "f32" | "i32"
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<IoSpec> {
+        let name = j.get("name").as_str().context("io spec name")?.to_string();
+        let dtype = j.get("dtype").as_str().context("io spec dtype")?.to_string();
+        if dtype != "f32" && dtype != "i32" {
+            bail!("unsupported dtype {dtype}");
+        }
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .context("io spec shape")?
+            .iter()
+            .map(|v| v.as_usize().context("shape dim"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(IoSpec { name, dtype, shape })
+    }
+}
+
+/// Golden checksums recorded at AOT time on a deterministic batch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Golden {
+    pub seed: u64,
+    pub loss: f64,
+    pub grad_sum: f64,
+    pub grad_l2: f64,
+}
+
+/// One loadable artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    pub kind: String, // "train" | "eval" | "kernel"
+    pub model: String,
+    pub param_dim: usize,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub init: BTreeMap<u64, PathBuf>,
+    pub golden: Option<Golden>,
+    pub meta: Json,
+}
+
+impl ArtifactSpec {
+    /// Load the initial flat parameter vector for `seed` (little-endian f32).
+    pub fn load_init(&self, seed: u64) -> Result<Vec<f32>> {
+        let path = self
+            .init
+            .get(&seed)
+            .with_context(|| format!("{}: no init blob for seed {seed}", self.name))?;
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() != self.param_dim * 4 {
+            bail!(
+                "{}: init blob has {} bytes, expected {}",
+                self.name,
+                bytes.len(),
+                self.param_dim * 4
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Local batch size (first dim of the first batch input).
+    pub fn local_batch(&self) -> usize {
+        self.inputs.first().and_then(|s| s.shape.first().copied()).unwrap_or(0)
+    }
+}
+
+/// The full artifact directory.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {dir:?}/manifest.json — run `make artifacts`"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let version = j.get("version").as_usize().unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut artifacts = BTreeMap::new();
+        for (name, rec) in j.get("artifacts").as_obj().context("artifacts obj")? {
+            let inputs = rec
+                .get("inputs")
+                .as_arr()
+                .context("inputs")?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = rec
+                .get("outputs")
+                .as_arr()
+                .context("outputs")?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let mut init = BTreeMap::new();
+            if let Some(m) = rec.get("init").as_obj() {
+                for (seed, p) in m {
+                    init.insert(
+                        seed.parse::<u64>().context("init seed key")?,
+                        dir.join(p.as_str().context("init path")?),
+                    );
+                }
+            }
+            let golden = rec.get("golden").as_obj().map(|_| Golden {
+                seed: rec.get("golden").get("seed").as_usize().unwrap_or(0) as u64,
+                loss: rec.get("golden").get("loss").as_f64().unwrap_or(f64::NAN),
+                grad_sum: rec.get("golden").get("grad_sum").as_f64().unwrap_or(f64::NAN),
+                grad_l2: rec.get("golden").get("grad_l2").as_f64().unwrap_or(f64::NAN),
+            });
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    hlo_path: dir.join(rec.get("hlo").as_str().context("hlo path")?),
+                    kind: rec.get("kind").as_str().unwrap_or("train").to_string(),
+                    model: rec.get("model").as_str().unwrap_or("").to_string(),
+                    param_dim: rec.get("param_dim").as_usize().unwrap_or(0),
+                    inputs,
+                    outputs,
+                    init,
+                    golden,
+                    meta: rec.get("meta").clone(),
+                },
+            );
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))
+    }
+
+    /// Default artifact directory: `$ADACONS_ARTIFACTS` or `artifacts/`
+    /// relative to the current directory (falling back to the crate root).
+    pub fn default_dir() -> PathBuf {
+        if let Ok(p) = std::env::var("ADACONS_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        let local = PathBuf::from("artifacts");
+        if local.join("manifest.json").exists() {
+            return local;
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_manifest() -> Option<Manifest> {
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(dir).unwrap())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn loads_repo_manifest_when_built() {
+        let Some(m) = repo_manifest() else { return };
+        let lin = m.get("linreg_b16").unwrap();
+        assert_eq!(lin.param_dim, 1000);
+        assert_eq!(lin.kind, "train");
+        assert_eq!(lin.inputs[0].shape, vec![16, 1000]);
+        assert_eq!(lin.outputs.len(), 2);
+        assert_eq!(lin.local_batch(), 16);
+        let init = lin.load_init(0).unwrap();
+        assert_eq!(init.len(), 1000);
+        assert!(init.iter().all(|x| x.is_finite()));
+        assert!(lin.golden.is_some());
+        assert!(m.get("missing_thing").is_err());
+    }
+
+    #[test]
+    fn eval_artifacts_present() {
+        let Some(m) = repo_manifest() else { return };
+        let ev = m.get("mlp_cls_b32__eval").unwrap();
+        assert_eq!(ev.kind, "eval");
+        assert_eq!(ev.outputs.len(), 2);
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let dir = std::env::temp_dir().join("adacons_bad_manifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"version": 9, "artifacts": {}}"#).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

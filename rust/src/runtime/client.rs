@@ -1,0 +1,55 @@
+//! The process-wide runtime: one PJRT CPU client + a compile cache.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::artifact::Manifest;
+use super::executable::Executable;
+
+/// Owns the PJRT client, the artifact manifest, and compiled executables.
+/// Executables are compiled lazily on first use and shared via `Arc` (the
+/// PJRT CPU client is thread-safe; worker threads share one client, which
+/// matches one-accelerator-per-process semantics without N copies of XLA).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: std::sync::Mutex<BTreeMap<String, Arc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn create<P: AsRef<Path>>(artifact_dir: P) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        let manifest = Manifest::load(artifact_dir)?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: std::sync::Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// Open the default artifact directory (`$ADACONS_ARTIFACTS` or
+    /// `artifacts/`).
+    pub fn open_default() -> Result<Runtime> {
+        Self::create(Manifest::default_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling if needed) the executable for an artifact.
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.get(name)?;
+        let t = crate::util::timer::Timer::start();
+        let exe = Arc::new(Executable::compile(&self.client, spec)?);
+        log::info!("compiled {} in {:.2}s", name, t.elapsed_s());
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+}

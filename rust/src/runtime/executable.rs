@@ -1,0 +1,129 @@
+//! A compiled artifact: HLO text -> PJRT executable + typed host I/O.
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::ArtifactSpec;
+use crate::data::{Array, Batch};
+
+/// A compiled, ready-to-run computation.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Stage one host array on the device.
+///
+/// NOTE: this deliberately uses `buffer_from_host_buffer` + `execute_b`
+/// rather than `execute::<Literal>`: the literal path in the bundled
+/// xla_extension leaks the converted input buffers (~input-size bytes per
+/// call, measured in examples/_leaktest.rs history — see EXPERIMENTS.md
+/// §Perf), while the host-buffer path is leak-free and skips one copy.
+fn buffer_from_array(client: &xla::PjRtClient, a: &Array) -> Result<xla::PjRtBuffer> {
+    let b = match a {
+        Array::F32(data, shape) => client.buffer_from_host_buffer(data, shape, None)?,
+        Array::I32(data, shape) => client.buffer_from_host_buffer(data, shape, None)?,
+    };
+    Ok(b)
+}
+
+fn array_from_literal(lit: &xla::Literal, spec: &crate::runtime::IoSpec) -> Result<Array> {
+    let shape = spec.shape.clone();
+    match spec.dtype.as_str() {
+        "f32" => Ok(Array::F32(lit.to_vec::<f32>()?, shape)),
+        "i32" => Ok(Array::I32(lit.to_vec::<i32>()?, shape)),
+        other => bail!("unsupported output dtype {other}"),
+    }
+}
+
+impl Executable {
+    /// Access the underlying PJRT executable (benches / probes).
+    pub fn raw(&self) -> &xla::PjRtLoadedExecutable {
+        &self.exe
+    }
+
+    /// Compile `spec`'s HLO text on the given PJRT client.
+    pub fn compile(client: &xla::PjRtClient, spec: &ArtifactSpec) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(&spec.hlo_path)
+            .with_context(|| format!("parsing HLO text {:?}", spec.hlo_path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", spec.name))?;
+        Ok(Executable {
+            spec: spec.clone(),
+            exe,
+        })
+    }
+
+    /// Execute with an optional leading flat-parameter vector plus the
+    /// batch arrays (manifest order). Returns the output arrays.
+    pub fn run(&self, params: Option<&[f32]>, batch: &Batch) -> Result<Vec<Array>> {
+        let client = self.exe.client();
+        let mut buffers: Vec<xla::PjRtBuffer> = Vec::with_capacity(batch.len() + 1);
+        if self.spec.param_dim > 0 {
+            let p = params.context("artifact expects a parameter vector")?;
+            if p.len() != self.spec.param_dim {
+                bail!(
+                    "{}: params len {} != param_dim {}",
+                    self.spec.name,
+                    p.len(),
+                    self.spec.param_dim
+                );
+            }
+            buffers.push(client.buffer_from_host_buffer(p, &[p.len()], None)?);
+        }
+        if batch.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: got {} batch arrays, expected {}",
+                self.spec.name,
+                batch.len(),
+                self.spec.inputs.len()
+            );
+        }
+        for (a, spec) in batch.iter().zip(&self.spec.inputs) {
+            if a.numel() != spec.numel() || a.dtype_str() != spec.dtype {
+                bail!(
+                    "{}: input {} mismatch (got {:?}/{}, want {:?}/{})",
+                    self.spec.name,
+                    spec.name,
+                    a.shape(),
+                    a.dtype_str(),
+                    spec.shape,
+                    spec.dtype
+                );
+            }
+            buffers.push(buffer_from_array(client, a)?);
+        }
+        let result = self.exe.execute_b(&buffers)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        // Lowered with return_tuple=True: always a tuple at the root.
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: got {} outputs, expected {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| array_from_literal(lit, spec))
+            .collect()
+    }
+
+    /// Convenience for train artifacts: returns (loss, grads).
+    pub fn run_train(&self, params: &[f32], batch: &Batch) -> Result<(f32, Vec<f32>)> {
+        let outs = self.run(Some(params), batch)?;
+        let loss = outs[0]
+            .as_f32()
+            .and_then(|v| v.first().copied())
+            .context("train output 0 must be the f32 loss")?;
+        let grads = match outs.into_iter().nth(1) {
+            Some(Array::F32(g, _)) => g,
+            _ => bail!("train output 1 must be the f32 gradient vector"),
+        };
+        Ok((loss, grads))
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced
+//! once by `make artifacts` and executes them from the training hot path.
+//! Python never runs at training time.
+//!
+//! Interchange is HLO **text** — xla_extension 0.5.1 (what the published
+//! `xla` 0.1.6 crate links) rejects jax ≥ 0.5's serialized protos
+//! (64-bit instruction ids); the text parser reassigns ids.
+
+pub mod artifact;
+pub mod client;
+pub mod executable;
+
+pub use artifact::{ArtifactSpec, IoSpec, Manifest};
+pub use client::Runtime;
+pub use executable::Executable;

@@ -1,0 +1,106 @@
+//! Parameter bucketization — the DDP-style segmentation of the flat
+//! gradient used for layer-wise aggregation (the paper aggregates
+//! model-wise by default and reports "similar performance" layer-wise;
+//! Table 2's ablation bench exercises both via these buckets).
+
+/// Disjoint, ordered column ranges covering `[0, d)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Buckets {
+    bounds: Vec<usize>, // len = num_buckets + 1; bounds[0] = 0, last = d
+}
+
+impl Buckets {
+    /// One bucket covering everything (model-wise aggregation).
+    pub fn single(d: usize) -> Self {
+        Buckets { bounds: vec![0, d] }
+    }
+
+    /// Fixed-size buckets of at most `cap` elements (DDP gradient buckets).
+    pub fn fixed(d: usize, cap: usize) -> Self {
+        assert!(cap > 0);
+        let mut bounds = vec![0];
+        let mut x = 0;
+        while x < d {
+            x = (x + cap).min(d);
+            bounds.push(x);
+        }
+        if d == 0 {
+            bounds.push(0);
+        }
+        Buckets { bounds }
+    }
+
+    /// Buckets from explicit segment sizes (e.g. per-layer parameter counts).
+    pub fn from_sizes(sizes: &[usize]) -> Self {
+        let mut bounds = vec![0];
+        let mut acc = 0;
+        for &s in sizes {
+            acc += s;
+            bounds.push(acc);
+        }
+        Buckets { bounds }
+    }
+
+    pub fn len(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn total(&self) -> usize {
+        *self.bounds.last().unwrap()
+    }
+
+    pub fn range(&self, i: usize) -> (usize, usize) {
+        (self.bounds[i], self.bounds[i + 1])
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        (0..self.len()).map(|i| self.range(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_covers_all() {
+        let b = Buckets::single(100);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b.range(0), (0, 100));
+        assert_eq!(b.total(), 100);
+    }
+
+    #[test]
+    fn fixed_partitions_exactly() {
+        let b = Buckets::fixed(10, 4);
+        let ranges: Vec<_> = b.iter().collect();
+        assert_eq!(ranges, vec![(0, 4), (4, 8), (8, 10)]);
+        // ranges tile [0, d) with no gaps or overlaps
+        let mut x = 0;
+        for (lo, hi) in b.iter() {
+            assert_eq!(lo, x);
+            assert!(hi > lo);
+            x = hi;
+        }
+        assert_eq!(x, 10);
+    }
+
+    #[test]
+    fn from_sizes_matches_layers() {
+        let b = Buckets::from_sizes(&[3, 5, 2]);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.range(1), (3, 8));
+        assert_eq!(b.total(), 10);
+    }
+
+    #[test]
+    fn fixed_divisible() {
+        let b = Buckets::fixed(8, 4);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.range(1), (4, 8));
+    }
+}

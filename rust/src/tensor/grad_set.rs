@@ -1,0 +1,284 @@
+//! [`GradSet`] — the N worker gradients as one row-major `(N, d)` buffer.
+//!
+//! This mirrors the Pallas consensus kernel's memory layout (one DMA-able
+//! row per worker) and lets the fused statistics pass stream column chunks
+//! through L1/L2 cache: for each chunk we compute the chunk mean and
+//! immediately the per-row partial dots, so `P` is read **once** per
+//! statistics pass instead of twice (mean pass + dot pass).
+
+use super::ops;
+
+/// Row-major (N, d) gradient matrix.
+#[derive(Debug, Clone)]
+pub struct GradSet {
+    data: Vec<f32>,
+    n: usize,
+    d: usize,
+}
+
+/// Per-worker consensus statistics (paper Eq. 7 inputs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConsensusStats {
+    /// `dots[i] = <g_i, g_bar>` with `g_bar` the mean gradient.
+    pub dots: Vec<f64>,
+    /// `sqn[i] = ||g_i||^2`.
+    pub sqn: Vec<f64>,
+}
+
+/// Column chunk size for the fused statistics pass. Swept in the §Perf
+/// pass (EXPERIMENTS.md): 1024 f32 = 4 KiB/row keeps a worker row chunk +
+/// the mean chunk L1-resident even at N = 32 (2048 ties at N = 8 but is
+/// ~11% slower at N = 32; 8192 spills L1 and loses ~25%).
+const CHUNK: usize = 1024;
+
+impl GradSet {
+    pub fn zeros(n: usize, d: usize) -> Self {
+        GradSet {
+            data: vec![0.0; n * d],
+            n,
+            d,
+        }
+    }
+
+    pub fn from_rows(rows: &[Vec<f32>]) -> Self {
+        let n = rows.len();
+        assert!(n > 0);
+        let d = rows[0].len();
+        let mut data = Vec::with_capacity(n * d);
+        for r in rows {
+            assert_eq!(r.len(), d, "ragged gradient rows");
+            data.extend_from_slice(r);
+        }
+        GradSet { data, n, d }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Overwrite row `i`.
+    pub fn set_row(&mut self, i: usize, src: &[f32]) {
+        assert_eq!(src.len(), self.d);
+        self.row_mut(i).copy_from_slice(src);
+    }
+
+    /// Mean gradient into `out` (the Sum/averaging baseline's entire job).
+    pub fn mean_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.d);
+        // Chunk over columns so the accumulator stays in L1 instead of
+        // streaming the whole d-vector through memory N times (§Perf).
+        let inv_n = 1.0 / self.n as f32;
+        let mut start = 0;
+        while start < self.d {
+            let end = (start + CHUNK).min(self.d);
+            let oc = &mut out[start..end];
+            ops::fill(oc, 0.0);
+            for i in 0..self.n {
+                ops::axpy(1.0, &self.data[i * self.d + start..i * self.d + end], oc);
+            }
+            ops::scale(inv_n, oc);
+            start = end;
+        }
+    }
+
+    /// Fused single-pass consensus statistics (Eq. 7): per column chunk,
+    /// build the chunk mean then accumulate each row's partial dot and
+    /// squared norm. Reads the matrix exactly once.
+    pub fn consensus_stats(&self) -> ConsensusStats {
+        let mut dots = vec![0.0f64; self.n];
+        let mut sqn = vec![0.0f64; self.n];
+        let mut mean_chunk = vec![0.0f32; CHUNK.min(self.d.max(1))];
+        let inv_n = 1.0 / self.n as f32;
+        let mut start = 0;
+        while start < self.d {
+            let end = (start + CHUNK).min(self.d);
+            let w = end - start;
+            let mc = &mut mean_chunk[..w];
+            ops::fill(mc, 0.0);
+            for i in 0..self.n {
+                let row = &self.data[i * self.d + start..i * self.d + end];
+                ops::axpy(1.0, row, mc);
+            }
+            ops::scale(inv_n, mc);
+            for i in 0..self.n {
+                let row = &self.data[i * self.d + start..i * self.d + end];
+                let (dt, sq) = ops::dot_sqnorm_fused(row, mc);
+                dots[i] += dt;
+                sqn[i] += sq;
+            }
+            start = end;
+        }
+        ConsensusStats { dots, sqn }
+    }
+
+    /// Consensus statistics restricted to a column range (layer-wise /
+    /// bucketed aggregation).
+    pub fn consensus_stats_range(&self, lo: usize, hi: usize) -> ConsensusStats {
+        assert!(lo <= hi && hi <= self.d);
+        let mut dots = vec![0.0f64; self.n];
+        let mut sqn = vec![0.0f64; self.n];
+        let mut mean_chunk = vec![0.0f32; CHUNK.min((hi - lo).max(1))];
+        let inv_n = 1.0 / self.n as f32;
+        let mut start = lo;
+        while start < hi {
+            let end = (start + CHUNK).min(hi);
+            let w = end - start;
+            let mc = &mut mean_chunk[..w];
+            ops::fill(mc, 0.0);
+            for i in 0..self.n {
+                let row = &self.data[i * self.d + start..i * self.d + end];
+                ops::axpy(1.0, row, mc);
+            }
+            ops::scale(inv_n, mc);
+            for i in 0..self.n {
+                let row = &self.data[i * self.d + start..i * self.d + end];
+                let (dt, sq) = ops::dot_sqnorm_fused(row, mc);
+                dots[i] += dt;
+                sqn[i] += sq;
+            }
+            start = end;
+        }
+        ConsensusStats { dots, sqn }
+    }
+
+    /// `out = sum_i gamma[i] * g_i` (the Eq. 12 re-projection).
+    pub fn weighted_sum_into(&self, gamma: &[f32], out: &mut [f32]) {
+        assert_eq!(gamma.len(), self.n);
+        assert_eq!(out.len(), self.d);
+        self.weighted_sum_range_into(gamma, 0, self.d, out);
+    }
+
+    /// Weighted sum over a column range.
+    pub fn weighted_sum_range_into(&self, gamma: &[f32], lo: usize, hi: usize, out: &mut [f32]) {
+        assert_eq!(gamma.len(), self.n);
+        assert_eq!(out.len(), hi - lo);
+        // Chunked accumulation: the out-chunk stays in L1 across the N
+        // row passes (§Perf — see EXPERIMENTS.md).
+        let mut start = lo;
+        while start < hi {
+            let end = (start + CHUNK).min(hi);
+            let oc = &mut out[start - lo..end - lo];
+            ops::fill(oc, 0.0);
+            for i in 0..self.n {
+                let row = &self.data[i * self.d + start..i * self.d + end];
+                ops::axpy(gamma[i], row, oc);
+            }
+            start = end;
+        }
+    }
+
+    /// Full N x N Gram matrix (preconditioner perspective, Eq. 9); used by
+    /// Adasum-style baselines and diagnostics, not the AdaCons hot path.
+    pub fn gram(&self) -> Vec<f64> {
+        let mut g = vec![0.0f64; self.n * self.n];
+        for i in 0..self.n {
+            for j in i..self.n {
+                let v = ops::dot(self.row(i), self.row(j));
+                g[i * self.n + j] = v;
+                g[j * self.n + i] = v;
+            }
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn random_set(n: usize, d: usize, seed: u64) -> GradSet {
+        let mut rng = Rng::new(seed);
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..d).map(|_| rng.normal_f32(1.0)).collect())
+            .collect();
+        GradSet::from_rows(&rows)
+    }
+
+    #[test]
+    fn mean_matches_naive() {
+        let gs = random_set(5, 97, 0);
+        let mut out = vec![0.0f32; 97];
+        gs.mean_into(&mut out);
+        for j in 0..97 {
+            let naive: f32 = (0..5).map(|i| gs.row(i)[j]).sum::<f32>() / 5.0;
+            assert!((out[j] - naive).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn consensus_stats_match_two_pass_naive() {
+        // d > CHUNK to exercise the chunked path.
+        let gs = random_set(4, 5000, 1);
+        let mut mean = vec![0.0f32; 5000];
+        gs.mean_into(&mut mean);
+        let stats = gs.consensus_stats();
+        for i in 0..4 {
+            let dn = ops::dot(gs.row(i), &mean);
+            let sn = ops::sqnorm(gs.row(i));
+            assert!((stats.dots[i] - dn).abs() < 1e-4 * dn.abs().max(1.0));
+            assert!((stats.sqn[i] - sn).abs() < 1e-6 * sn);
+        }
+    }
+
+    #[test]
+    fn range_stats_match_full_on_whole_range() {
+        let gs = random_set(3, 301, 2);
+        let full = gs.consensus_stats();
+        let ranged = gs.consensus_stats_range(0, 301);
+        for i in 0..3 {
+            assert!((full.dots[i] - ranged.dots[i]).abs() < 1e-9);
+            assert!((full.sqn[i] - ranged.sqn[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn weighted_sum_uniform_recovers_mean() {
+        let gs = random_set(6, 128, 3);
+        let mut mean = vec![0.0f32; 128];
+        gs.mean_into(&mut mean);
+        let gamma = vec![1.0 / 6.0; 6];
+        let mut out = vec![0.0f32; 128];
+        gs.weighted_sum_into(&gamma, &mut out);
+        for j in 0..128 {
+            assert!((out[j] - mean[j]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gram_is_symmetric_and_diag_is_sqnorm() {
+        let gs = random_set(4, 50, 4);
+        let g = gs.gram();
+        let stats = gs.consensus_stats();
+        for i in 0..4 {
+            // stats accumulate f32 lanes within chunks (see ops::dot_sqnorm_fused)
+            assert!((g[i * 4 + i] - stats.sqn[i]).abs() < 1e-4 * stats.sqn[i]);
+            for j in 0..4 {
+                assert_eq!(g[i * 4 + j], g[j * 4 + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn dots_relate_gram_rows_to_mean() {
+        let gs = random_set(5, 64, 5);
+        let g = gs.gram();
+        let stats = gs.consensus_stats();
+        for i in 0..5 {
+            let from_gram: f64 = (0..5).map(|j| g[i * 5 + j]).sum::<f64>() / 5.0;
+            assert!((stats.dots[i] - from_gram).abs() < 1e-6 * from_gram.abs().max(1.0));
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Flat-tensor substrate: the coordinator's view of parameters/gradients is
+//! always a contiguous `f32` vector (flatten/unflatten lives in the L2 JAX
+//! graph), so this module provides cache-friendly fused ops over flat
+//! buffers plus the row-major [`GradSet`] holding all N worker gradients.
+
+pub mod bucket;
+pub mod grad_set;
+pub mod ops;
+
+pub use bucket::Buckets;
+pub use grad_set::GradSet;

@@ -1,0 +1,157 @@
+//! Fused flat-vector primitives. These are the only math on the L3 hot
+//! path, so they are written to auto-vectorize: fixed-width unrolled loops
+//! over `f32` with `f64` block accumulators (accuracy over 10^8-element
+//! gradients) — see EXPERIMENTS.md §Perf for the measured numbers.
+
+/// Dot product with f64 accumulation.
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += a[j] as f64 * b[j] as f64;
+        acc[1] += a[j + 1] as f64 * b[j + 1] as f64;
+        acc[2] += a[j + 2] as f64 * b[j + 2] as f64;
+        acc[3] += a[j + 3] as f64 * b[j + 3] as f64;
+    }
+    let mut tail = 0.0f64;
+    for j in chunks * 4..a.len() {
+        tail += a[j] as f64 * b[j] as f64;
+    }
+    acc[0] + acc[1] + acc[2] + acc[3] + tail
+}
+
+/// Squared L2 norm with f64 accumulation.
+pub fn sqnorm(a: &[f32]) -> f64 {
+    dot(a, a)
+}
+
+/// L2 norm.
+pub fn nrm2(a: &[f32]) -> f64 {
+    sqnorm(a).sqrt()
+}
+
+/// Fused `(<a,b>, <a,a>)` over one cache-resident chunk.
+///
+/// Accumulates in 8 f32 lanes (auto-vectorizes; fine for chunk-sized
+/// ranges) and returns f64 — callers accumulate the f64 partials across
+/// chunks, which keeps the end-to-end error at the f64 level while the
+/// inner loop stays pure f32 SIMD. This is the §Perf replacement for
+/// calling `dot` + `sqnorm` separately (one read of `a` instead of two,
+/// no per-element f64 converts).
+pub fn dot_sqnorm_fused(a: &[f32], b: &[f32]) -> (f64, f64) {
+    debug_assert_eq!(a.len(), b.len());
+    const LANES: usize = 8;
+    let mut dot_acc = [0.0f32; LANES];
+    let mut sq_acc = [0.0f32; LANES];
+    let chunks = a.len() / LANES;
+    for i in 0..chunks {
+        let j = i * LANES;
+        for l in 0..LANES {
+            let av = a[j + l];
+            dot_acc[l] += av * b[j + l];
+            sq_acc[l] += av * av;
+        }
+    }
+    let mut dot_tail = 0.0f64;
+    let mut sq_tail = 0.0f64;
+    for j in chunks * LANES..a.len() {
+        dot_tail += a[j] as f64 * b[j] as f64;
+        sq_tail += a[j] as f64 * a[j] as f64;
+    }
+    (
+        dot_acc.iter().map(|&x| x as f64).sum::<f64>() + dot_tail,
+        sq_acc.iter().map(|&x| x as f64).sum::<f64>() + sq_tail,
+    )
+}
+
+/// `y += alpha * x`.
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `y = alpha * x` (overwrite).
+pub fn scaled_copy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi = alpha * xi;
+    }
+}
+
+/// `x *= alpha`.
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// Fill with a constant.
+pub fn fill(x: &mut [f32], v: f32) {
+    for xi in x.iter_mut() {
+        *xi = v;
+    }
+}
+
+/// Element sum (f64 accumulate).
+pub fn sum(a: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for &x in a {
+        acc += x as f64;
+    }
+    acc
+}
+
+/// max |x_i|.
+pub fn max_abs(a: &[f32]) -> f32 {
+    a.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+}
+
+/// True if every element is finite.
+pub fn all_finite(a: &[f32]) -> bool {
+    a.iter().all(|x| x.is_finite())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive_on_odd_len() {
+        let a: Vec<f32> = (0..103).map(|i| (i as f32) * 0.1 - 5.0).collect();
+        let b: Vec<f32> = (0..103).map(|i| 1.0 - (i as f32) * 0.01).collect();
+        let naive: f64 = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| *x as f64 * *y as f64)
+            .sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-9);
+    }
+
+    #[test]
+    fn norms_and_axpy() {
+        let x = vec![3.0f32, 4.0];
+        assert!((nrm2(&x) - 5.0).abs() < 1e-12);
+        let mut y = vec![1.0f32, 1.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![7.0, 9.0]);
+        scaled_copy(0.5, &x, &mut y);
+        assert_eq!(y, vec![1.5, 2.0]);
+        scale(2.0, &mut y);
+        assert_eq!(y, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn misc_helpers() {
+        let mut x = vec![0.0f32; 3];
+        fill(&mut x, 2.5);
+        assert!((sum(&x) - 7.5).abs() < 1e-12);
+        assert_eq!(max_abs(&[-3.0, 2.0]), 3.0);
+        assert!(all_finite(&x));
+        assert!(!all_finite(&[1.0, f32::NAN]));
+        assert!(!all_finite(&[f32::INFINITY]));
+    }
+}

@@ -1,0 +1,136 @@
+//! Tiny CLI argument parser (clap is not vendored offline).
+//!
+//! Grammar: `binary <subcommand...> [--flag] [--key value] [--key=value]
+//! [positional...]`. Typed accessors parse on demand and report readable
+//! errors.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArgError {
+    #[error("missing required option --{0}")]
+    Missing(String),
+    #[error("option --{0}: cannot parse {1:?} as {2}")]
+    Parse(String, String, &'static str),
+}
+
+impl Args {
+    /// Parse raw argv items (excluding the program/subcommand names).
+    /// `bool_flags` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(items: I, bool_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn str_opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.str_opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn req(&self, name: &str) -> Result<&str, ArgError> {
+        self.str_opt(name).ok_or_else(|| ArgError::Missing(name.into()))
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, ArgError> {
+        match self.str_opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError::Parse(name.into(), v.into(), "usize")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, ArgError> {
+        match self.str_opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError::Parse(name.into(), v.into(), "u64")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, ArgError> {
+        match self.str_opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError::Parse(name.into(), v.into(), "f64")),
+        }
+    }
+
+    /// Comma-separated list of usize, e.g. `--workers 4,8,16`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, ArgError> {
+        match self.str_opt(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse()
+                        .map_err(|_| ArgError::Parse(name.into(), v.into(), "usize list"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), &["verbose"])
+    }
+
+    #[test]
+    fn mixes_styles() {
+        let a = parse("pos1 --k v --x=3 --verbose pos2 --tail");
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+        assert_eq!(a.str_opt("k"), Some("v"));
+        assert_eq!(a.usize_or("x", 0).unwrap(), 3);
+        assert!(a.flag("verbose"));
+        assert!(a.flag("tail")); // trailing option with no value = flag
+    }
+
+    #[test]
+    fn typed_accessors_and_errors() {
+        let a = parse("--n 8 --lr 0.5 --list 1,2,3");
+        assert_eq!(a.usize_or("n", 1).unwrap(), 8);
+        assert!((a.f64_or("lr", 0.0).unwrap() - 0.5).abs() < 1e-12);
+        assert_eq!(a.usize_list_or("list", &[]).unwrap(), vec![1, 2, 3]);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+        assert!(a.req("absent").is_err());
+        let bad = parse("--n x");
+        assert!(bad.usize_or("n", 1).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Utility substrates built from scratch (the offline environment vendors
+//! only the `xla` crate's dependency closure, so the usual ecosystem crates
+//! — rand, serde, clap, criterion — are re-implemented here at the size
+//! this project needs).
+
+pub mod argparse;
+pub mod json;
+pub mod logging;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,293 @@
+//! Deterministic PRNGs: SplitMix64 (seeding) and xoshiro256** (streams).
+//!
+//! Every stochastic component in the coordinator (data shards, failure
+//! injection, property tests) draws from an explicitly-seeded `Rng`, so any
+//! run is reproducible from its config seed. Worker `i` derives its stream
+//! with [`Rng::fork`], which matches how the paper shards i.i.d. data
+//! across ranks.
+
+/// SplitMix64 step — used for seeding and stream derivation.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** PRNG. Not cryptographic; fast, 2^256-1 period, passes BigCrush.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed via SplitMix64 expansion (recommended by the xoshiro authors).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Derive an independent stream keyed by `key` (e.g. a worker rank).
+    pub fn fork(&self, key: u64) -> Rng {
+        let mut sm = self.s[0]
+            ^ self.s[1].rotate_left(17)
+            ^ self.s[2].rotate_left(31)
+            ^ self.s[3].rotate_left(47)
+            ^ key.wrapping_mul(0xA24B_AED4_963E_E407);
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn uniform_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Standard normal via Box-Muller (cached second value dropped for
+    /// simplicity; the hot paths draw in bulk anyway).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.uniform();
+            if u1 > 1e-300 {
+                let u2 = self.uniform();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (std::f64::consts::TAU * u2).cos();
+            }
+        }
+    }
+
+    /// Normal f32 with mean 0 and the given std.
+    #[inline]
+    pub fn normal_f32(&mut self, std: f32) -> f32 {
+        (self.normal() as f32) * std
+    }
+
+    /// Student-t with `dof` degrees of freedom — the heavy-tailed noise used
+    /// by the Fig. 8 gradient-perturbation experiment.
+    pub fn student_t(&mut self, dof: f64) -> f64 {
+        // t = N / sqrt(ChiSq(dof)/dof); ChiSq via sum of squared normals
+        // is fine for small integer dof.
+        let n = self.normal();
+        let k = dof.max(1.0) as usize;
+        let mut chi = 0.0;
+        for _ in 0..k {
+            let z = self.normal();
+            chi += z * z;
+        }
+        n / (chi / dof).sqrt()
+    }
+
+    /// Zipf-distributed integer in [0, n) with exponent `s`, via rejection
+    /// sampling (Devroye). Used by the CTR categorical-feature generator.
+    pub fn zipf(&mut self, n: u64, s: f64) -> u64 {
+        if s <= 0.0 {
+            return self.below(n);
+        }
+        let nf = n as f64;
+        loop {
+            let u = self.uniform();
+            let v = self.uniform();
+            let x = if (s - 1.0).abs() < 1e-9 {
+                nf.powf(u)
+            } else {
+                let t = (nf.powf(1.0 - s) - 1.0) * u + 1.0;
+                t.powf(1.0 / (1.0 - s))
+            };
+            let k = x.floor().max(1.0);
+            let ratio = (k / x).powf(s);
+            if v * ratio <= 1.0 {
+                return (k as u64 - 1).min(n - 1);
+            }
+        }
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Fill a slice with U[0,1) f32 — bulk path for data generators.
+    pub fn fill_uniform_f32(&mut self, out: &mut [f32]) {
+        for x in out.iter_mut() {
+            *x = self.uniform_f32();
+        }
+    }
+
+    /// Fill a slice with N(0, std) f32.
+    pub fn fill_normal_f32(&mut self, out: &mut [f32], std: f32) {
+        for x in out.iter_mut() {
+            *x = self.normal_f32(std);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        let mut c = Rng::new(43);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let vc: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let root = Rng::new(7);
+        let mut w0 = root.fork(0);
+        let mut w1 = root.fork(1);
+        let v0: Vec<u64> = (0..8).map(|_| w0.next_u64()).collect();
+        let v1: Vec<u64> = (0..8).map(|_| w1.next_u64()).collect();
+        assert_ne!(v0, v1);
+        // Re-deriving the same key reproduces the stream.
+        let mut w0b = root.fork(0);
+        assert_eq!(v0[0], w0b.next_u64());
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut r = Rng::new(1);
+        let mut sum = 0.0;
+        for _ in 0..20_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / 20_000.0;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(2);
+        let n = 20_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.normal();
+            s1 += z;
+            s2 += z * z;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let v = r.below(7) as usize;
+            assert!(v < 7);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn zipf_is_skewed_toward_small_ids() {
+        let mut r = Rng::new(4);
+        let mut lo = 0;
+        let n = 10_000;
+        for _ in 0..n {
+            if r.zipf(1000, 1.2) < 10 {
+                lo += 1;
+            }
+        }
+        // With s=1.2 the first 10 ids carry far more than 10/1000 of mass.
+        assert!(lo > n / 10, "lo={lo}");
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut r = Rng::new(5);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn student_t_has_heavier_tails_than_normal() {
+        let mut r = Rng::new(6);
+        let n = 30_000;
+        let mut extreme_t = 0;
+        let mut extreme_n = 0;
+        for _ in 0..n {
+            if r.student_t(2.0).abs() > 4.0 {
+                extreme_t += 1;
+            }
+            if r.normal().abs() > 4.0 {
+                extreme_n += 1;
+            }
+        }
+        assert!(extreme_t > extreme_n * 5, "t={extreme_t} n={extreme_n}");
+    }
+}

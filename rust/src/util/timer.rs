@@ -1,0 +1,104 @@
+//! Wall-clock timing helpers.
+
+use std::time::Instant;
+
+/// Scoped stopwatch.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+
+    pub fn elapsed_us(&self) -> f64 {
+        self.elapsed_s() * 1e6
+    }
+}
+
+/// Accumulates named phase timings across a loop (e.g. grad/agg/opt per step).
+#[derive(Debug, Default)]
+pub struct PhaseTimer {
+    phases: Vec<(String, f64, u64)>, // name, total seconds, count
+}
+
+impl PhaseTimer {
+    pub fn add(&mut self, name: &str, seconds: f64) {
+        if let Some(p) = self.phases.iter_mut().find(|p| p.0 == name) {
+            p.1 += seconds;
+            p.2 += 1;
+        } else {
+            self.phases.push((name.to_string(), seconds, 1));
+        }
+    }
+
+    pub fn time<R>(&mut self, name: &str, f: impl FnOnce() -> R) -> R {
+        let t = Timer::start();
+        let r = f();
+        self.add(name, t.elapsed_s());
+        r
+    }
+
+    pub fn total(&self, name: &str) -> f64 {
+        self.phases
+            .iter()
+            .find(|p| p.0 == name)
+            .map(|p| p.1)
+            .unwrap_or(0.0)
+    }
+
+    pub fn mean(&self, name: &str) -> f64 {
+        self.phases
+            .iter()
+            .find(|p| p.0 == name)
+            .map(|p| if p.2 == 0 { 0.0 } else { p.1 / p.2 as f64 })
+            .unwrap_or(0.0)
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for (name, total, count) in &self.phases {
+            s.push_str(&format!(
+                "{name}: total {total:.3}s over {count} calls (mean {:.3}ms)\n",
+                total / (*count).max(1) as f64 * 1e3
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut pt = PhaseTimer::default();
+        pt.add("a", 0.5);
+        pt.add("a", 1.5);
+        pt.add("b", 1.0);
+        assert!((pt.total("a") - 2.0).abs() < 1e-12);
+        assert!((pt.mean("a") - 1.0).abs() < 1e-12);
+        assert_eq!(pt.total("missing"), 0.0);
+        assert!(pt.report().contains("a:"));
+    }
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.elapsed_ms() >= 1.0);
+    }
+}

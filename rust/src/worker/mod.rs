@@ -1,0 +1,91 @@
+//! Worker rank state.
+//!
+//! A worker owns its data shard (a seeded stream), its failure injector,
+//! and its gradient slot.  The testbed is a single CPU, so ranks execute
+//! round-robin against the shared PJRT client while the [`SimClock`]
+//! models them running in parallel (each rank is charged only its own
+//! compute time); on a multi-accelerator deployment each rank would be a
+//! process and the collectives real.
+//!
+//! [`SimClock`]: crate::collective::SimClock
+
+use anyhow::Result;
+
+use crate::data::{Batch, DataGen, GradInjector};
+use crate::runtime::Executable;
+use crate::util::prng::Rng;
+
+pub struct Worker {
+    pub rank: usize,
+    gen: Box<dyn DataGen>,
+    injector: GradInjector,
+    inject_rng: Rng,
+    /// Last computed local loss.
+    pub last_loss: f32,
+    /// Wall-clock seconds spent in grad computation this step (per-rank
+    /// compute time charged to the sim clock).
+    pub last_compute_s: f64,
+}
+
+impl Worker {
+    pub fn new(rank: usize, gen: Box<dyn DataGen>, injector: GradInjector, seed: u64) -> Self {
+        Worker {
+            rank,
+            gen,
+            injector,
+            inject_rng: Rng::new(seed ^ 0xFA11).fork(rank as u64),
+            last_loss: 0.0,
+            last_compute_s: 0.0,
+        }
+    }
+
+    /// Draw the next local batch.
+    pub fn next_batch(&mut self, local_batch: usize) -> Batch {
+        self.gen.next_batch(local_batch)
+    }
+
+    /// Compute the local gradient into `grad_out` via the PJRT executable,
+    /// then apply this rank's failure injection.
+    pub fn compute_grad(
+        &mut self,
+        exe: &Executable,
+        params: &[f32],
+        local_batch: usize,
+        grad_out: &mut [f32],
+    ) -> Result<()> {
+        let batch = self.next_batch(local_batch);
+        let t = crate::util::timer::Timer::start();
+        let (loss, grads) = exe.run_train(params, &batch)?;
+        self.last_compute_s = t.elapsed_s();
+        self.last_loss = loss;
+        grad_out.copy_from_slice(&grads);
+        self.injector.apply(grad_out, &mut self.inject_rng);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Array;
+
+    struct ConstGen(f32, usize);
+
+    impl DataGen for ConstGen {
+        fn next_batch(&mut self, b: usize) -> Batch {
+            vec![Array::F32(vec![self.0; b * self.1], vec![b, self.1])]
+        }
+    }
+
+    #[test]
+    fn injector_applies_to_stream() {
+        let mut w = Worker::new(0, Box::new(ConstGen(1.0, 4)), GradInjector::SignFlip, 3);
+        let b = w.next_batch(2);
+        assert_eq!(b[0].as_f32().unwrap(), &[1.0; 8]);
+        // injector applied at the gradient level is covered in compute_grad;
+        // here check the injector state machine directly
+        let mut g = vec![1.0f32, -1.0];
+        w.injector.apply(&mut g, &mut w.inject_rng);
+        assert_eq!(g, vec![-1.0, 1.0]);
+    }
+}

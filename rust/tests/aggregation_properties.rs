@@ -1,0 +1,234 @@
+//! Property-based tests of the aggregation algebra (DESIGN.md §5
+//! invariants), driven by the in-house `util::proptest` harness.
+
+use adacons::aggregation::{AdaCons, AdaConsConfig, Aggregator, Grawa, MeanAggregator};
+use adacons::tensor::{ops, Buckets, GradSet};
+use adacons::util::proptest::{run_cases, Gen};
+
+fn random_gradset(g: &mut Gen, n_max: usize, d_max: usize) -> GradSet {
+    let n = g.usize_in(2, n_max);
+    let d = g.usize_in(4, d_max);
+    let scale = g.f64_in(0.05, 4.0) as f32;
+    GradSet::from_rows(&g.grad_matrix(n, d, scale))
+}
+
+#[test]
+fn prop_norm_variant_subspace_coefficients_sum_one() {
+    run_cases(60, 0xA1, |g| {
+        let gs = random_gradset(g, 12, 300);
+        let st = gs.consensus_stats();
+        let mut agg = AdaCons::new(AdaConsConfig::norm_only());
+        let (gamma, _) = agg.weights_from_stats(0, &st.dots, &st.sqn);
+        let s: f64 = gamma
+            .iter()
+            .zip(&st.sqn)
+            .map(|(&w, &q)| w as f64 * q.sqrt())
+            .sum();
+        // Either sum-one held (Eq. 13), or the degenerate fallback produced
+        // uniform weights; detect the fallback via equal gammas.
+        let uniform = gamma.windows(2).all(|w| (w[0] - w[1]).abs() < 1e-9);
+        assert!((s - 1.0).abs() < 1e-4 || uniform, "sum {s}, gamma {gamma:?}");
+    });
+}
+
+#[test]
+fn prop_identical_gradients_collapse_all_variants() {
+    run_cases(40, 0xA2, |g| {
+        let d = g.usize_in(4, 200);
+        let n = g.usize_in(2, 10);
+        let row = g.vec_normal(d, 1.0);
+        if ops::sqnorm(&row) < 1e-12 {
+            return; // measure-zero degenerate case
+        }
+        let gs = GradSet::from_rows(&vec![row.clone(); n]);
+        for cfg in [AdaConsConfig::raw(), AdaConsConfig::norm_only()] {
+            let mut agg = AdaCons::new(cfg);
+            let mut out = vec![0.0f32; d];
+            agg.aggregate(&gs, &Buckets::single(d), &mut out);
+            let norm = ops::nrm2(&row);
+            for j in 0..d {
+                // raw (Eq. 8, λ=1): out == mean == row.
+                // norm (Eq. 13): γ_i = 1/(N||g||) -> out = g/||g||.
+                let expect = if cfg.normalize {
+                    row[j] as f64 / norm
+                } else {
+                    row[j] as f64
+                };
+                assert!(
+                    (out[j] as f64 - expect).abs() < 2e-4 * expect.abs().max(1.0),
+                    "cfg={cfg:?} j={j}: {} vs {expect}",
+                    out[j]
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_worker_permutation_equivariance() {
+    // Relabeling workers permutes γ identically (no positional bias),
+    // for the stateless variants.
+    run_cases(40, 0xA3, |g| {
+        let gs = random_gradset(g, 8, 120);
+        let n = gs.n();
+        let d = gs.d();
+        let mut perm: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = g.usize_in(0, i);
+            perm.swap(i, j);
+        }
+        let permuted =
+            GradSet::from_rows(&perm.iter().map(|&i| gs.row(i).to_vec()).collect::<Vec<_>>());
+        for cfg in [AdaConsConfig::raw(), AdaConsConfig::norm_only()] {
+            let mut a = AdaCons::new(cfg);
+            let mut b = AdaCons::new(cfg);
+            let mut out_a = vec![0.0f32; d];
+            let mut out_b = vec![0.0f32; d];
+            let ia = a.aggregate(&gs, &Buckets::single(d), &mut out_a);
+            let ib = b.aggregate(&permuted, &Buckets::single(d), &mut out_b);
+            let ga = ia.gammas.unwrap();
+            let gb = ib.gammas.unwrap();
+            for (k, &i) in perm.iter().enumerate() {
+                assert!(
+                    (ga[i] - gb[k]).abs() <= 2e-4 * ga[i].abs().max(1e-3),
+                    "cfg={cfg:?}: gamma[{i}]={} vs permuted gamma[{k}]={}",
+                    ga[i],
+                    gb[k]
+                );
+            }
+            for j in 0..d {
+                assert!((out_a[j] - out_b[j]).abs() < 1e-3 * out_a[j].abs().max(1.0));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_mean_and_grawa_weights_sum_one() {
+    run_cases(40, 0xA4, |g| {
+        let gs = random_gradset(g, 10, 100);
+        let d = gs.d();
+        let mut out = vec![0.0f32; d];
+        let aggs: Vec<Box<dyn Aggregator>> =
+            vec![Box::new(MeanAggregator::new()), Box::new(Grawa::new())];
+        for mut agg in aggs {
+            let info = agg.aggregate(&gs, &Buckets::single(d), &mut out);
+            let gam = info.gammas.unwrap();
+            let s: f64 = gam.iter().map(|&x| x as f64).sum();
+            assert!((s - 1.0).abs() < 1e-5, "{} sum {s}", agg.name());
+        }
+    });
+}
+
+#[test]
+fn prop_preconditioner_gram_is_psd() {
+    // v^T (P^T P) v = ||P v||^2 >= 0 (paper §3.3's PSD claim probed
+    // through the Gram form).
+    run_cases(40, 0xA5, |g| {
+        let gs = random_gradset(g, 8, 80);
+        let n = gs.n();
+        let gram = gs.gram();
+        let probe: Vec<f64> = (0..n).map(|_| g.f64_in(-1.0, 1.0)).collect();
+        let mut quad = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                quad += probe[i] * probe[j] * gram[i * n + j];
+            }
+        }
+        assert!(quad >= -1e-6 * quad.abs().max(1.0), "quad {quad}");
+    });
+}
+
+#[test]
+fn prop_aggregate_is_descent_direction_on_consensus_bundles() {
+    // When all worker gradients share a dominant common component (the
+    // regime synchronous SGD operates in), <psi, g_bar> > 0 for every
+    // linear aggregator — the update never ascends.
+    run_cases(40, 0xA6, |g| {
+        let n = g.usize_in(2, 8);
+        let d = g.usize_in(8, 150);
+        let common = g.vec_normal(d, 1.0);
+        if ops::sqnorm(&common) < 1e-6 {
+            return;
+        }
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let noise = g.vec_normal(d, 0.2);
+                common.iter().zip(&noise).map(|(&c, &e)| c + e).collect()
+            })
+            .collect();
+        let gs = GradSet::from_rows(&rows);
+        let mut mean_dir = vec![0.0f32; d];
+        gs.mean_into(&mut mean_dir);
+        for name in ["adacons", "adacons-raw", "adacons-norm", "grawa", "mean"] {
+            let mut agg = adacons::aggregation::by_name(name, n).unwrap();
+            let mut out = vec![0.0f32; d];
+            agg.aggregate(&gs, &Buckets::single(d), &mut out);
+            let ip = ops::dot(&out, &mean_dir);
+            assert!(ip > 0.0, "{name}: <psi, g_bar> = {ip}");
+        }
+    });
+}
+
+#[test]
+fn prop_momentum_stream_stays_bounded() {
+    // A stationary coefficient stream through the sorted EMA never
+    // diverges and stays within the stream's range.
+    run_cases(30, 0xA7, |g| {
+        let n = g.usize_in(2, 8);
+        let mut agg = AdaCons::new(AdaConsConfig::momentum_only());
+        let sqn = vec![1.0; n];
+        let lo = g.f64_in(0.1, 1.0);
+        let hi = lo + g.f64_in(0.1, 1.0);
+        let mut last = Vec::new();
+        for _ in 0..50 {
+            let dots: Vec<f64> = (0..n).map(|_| g.f64_in(lo, hi)).collect();
+            let (gamma, _) = agg.weights_from_stats(0, &dots, &sqn);
+            last = gamma;
+        }
+        for &w in &last {
+            assert!(w.is_finite());
+            // gamma = alpha/N with alpha EMA-bounded in [lo, hi].
+            assert!(w as f64 >= lo / n as f64 * 0.5 && w as f64 <= hi / n as f64 * 2.0);
+        }
+    });
+}
+
+#[test]
+fn prop_bucketed_and_modelwise_agree_for_mean() {
+    // Averaging is linear in each coordinate, so layer-wise == model-wise.
+    run_cases(30, 0xA8, |g| {
+        let gs = random_gradset(g, 6, 200);
+        let d = gs.d();
+        let cap = g.usize_in(1, d);
+        let mut a = vec![0.0f32; d];
+        let mut b = vec![0.0f32; d];
+        MeanAggregator::new().aggregate(&gs, &Buckets::single(d), &mut a);
+        MeanAggregator::new().aggregate(&gs, &Buckets::fixed(d, cap), &mut b);
+        for j in 0..d {
+            assert!((a[j] - b[j]).abs() < 1e-6);
+        }
+    });
+}
+
+#[test]
+fn prop_ring_allreduce_matches_direct_sum() {
+    use adacons::collective::{ring_allreduce, CostModel, Topology};
+    run_cases(30, 0xA9, |g| {
+        let n = g.usize_in(1, 9);
+        let d = g.usize_in(1, 300);
+        let bufs: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal(d, 1.0)).collect();
+        let expected: Vec<f32> = (0..d).map(|j| bufs.iter().map(|b| b[j]).sum()).collect();
+        let mut work = bufs.clone();
+        let model = CostModel::from_topology(&Topology::ring_gbps(n, 100.0));
+        ring_allreduce(&mut work, &model, None);
+        for r in 0..n {
+            for j in 0..d {
+                assert!(
+                    (work[r][j] - expected[j]).abs() <= 1e-3 * expected[j].abs().max(1.0),
+                    "n={n} d={d} r={r} j={j}"
+                );
+            }
+        }
+    });
+}

@@ -1,0 +1,70 @@
+//! Integration smoke of the experiment harness: every figure/table module
+//! runs end-to-end at a tiny budget and writes its CSVs. (Skipped when
+//! artifacts are not built.)
+
+use std::sync::Arc;
+
+use adacons::runtime::{Manifest, Runtime};
+use adacons::util::argparse::Args;
+
+fn runtime() -> Option<Arc<Runtime>> {
+    let dir = Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(Arc::new(Runtime::create(dir).unwrap()))
+    } else {
+        None
+    }
+}
+
+fn tiny_args(out: &std::path::Path, extra: &str) -> Args {
+    let s = format!(
+        "--out-dir {} --steps-scale 0.04 --workers 2 --local-batches 16 {extra}",
+        out.display()
+    );
+    Args::parse(s.split_whitespace().map(String::from), &[])
+}
+
+#[test]
+fn fig2_writes_csvs() {
+    let Some(rt) = runtime() else { return };
+    let dir = std::env::temp_dir().join("adacons_exp_smoke_fig2");
+    adacons::exp::run_figure(rt, "fig2", &tiny_args(&dir, "")).unwrap();
+    assert!(dir.join("fig2_curves.csv").exists());
+    assert!(dir.join("fig2_summary.csv").exists());
+    let text = std::fs::read_to_string(dir.join("fig2_summary.csv")).unwrap();
+    assert!(text.lines().count() > 2, "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn fig5_and_fig7_write_csvs() {
+    let Some(rt) = runtime() else { return };
+    let dir = std::env::temp_dir().join("adacons_exp_smoke_fig57");
+    adacons::exp::run_figure(rt.clone(), "fig5", &tiny_args(&dir, "")).unwrap();
+    assert!(dir.join("fig5_auc.csv").exists());
+    adacons::exp::run_figure(rt, "fig7", &tiny_args(&dir, "")).unwrap();
+    let text = std::fs::read_to_string(dir.join("fig7_coeff_stages.csv")).unwrap();
+    // header + at least one logged step with 7 columns
+    let mut lines = text.lines();
+    assert_eq!(lines.next().unwrap().split(',').count(), 7);
+    assert!(lines.next().is_some());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bucket_ablation_writes_csv() {
+    let Some(rt) = runtime() else { return };
+    let dir = std::env::temp_dir().join("adacons_exp_smoke_buckets");
+    adacons::exp::run_table(rt, "buckets", &tiny_args(&dir, "")).unwrap();
+    let text = std::fs::read_to_string(dir.join("ablation_bucket.csv")).unwrap();
+    assert_eq!(text.lines().count(), 5); // header + 4 granularities
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn unknown_ids_error() {
+    let Some(rt) = runtime() else { return };
+    let args = Args::parse(std::iter::empty(), &[]);
+    assert!(adacons::exp::run_figure(rt.clone(), "fig99", &args).is_err());
+    assert!(adacons::exp::run_table(rt, "table9", &args).is_err());
+}

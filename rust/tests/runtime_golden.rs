@@ -1,0 +1,165 @@
+//! Integration: the PJRT runtime reproduces the Python-side goldens.
+//!
+//! `aot.py` records (loss, grad_sum, grad_l2) on a deterministic batch
+//! (f32 arrays = 0.5, int arrays = index % cardinality). We regenerate
+//! that batch bit-identically here, execute the compiled HLO, and compare.
+
+use adacons::data::{Array, Batch};
+use adacons::runtime::{ArtifactSpec, Manifest, Runtime};
+use adacons::tensor::ops;
+
+fn golden_batch(spec: &ArtifactSpec) -> Batch {
+    spec.inputs
+        .iter()
+        .map(|io| {
+            let n: usize = io.numel();
+            if io.dtype == "f32" {
+                Array::F32(vec![0.5; n], io.shape.clone())
+            } else {
+                let card = match io.name.as_str() {
+                    "y" => spec.meta.get("classes").as_usize().unwrap_or(2),
+                    "cat" | "tokens" => spec.meta.get("vocab").as_usize().unwrap_or(2),
+                    _ => 2,
+                } as i64;
+                Array::I32(
+                    (0..n as i64).map(|i| (i % card) as i32).collect(),
+                    io.shape.clone(),
+                )
+            }
+        })
+        .collect()
+}
+
+fn runtime() -> Option<Runtime> {
+    let dir = Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(Runtime::create(dir).unwrap())
+    } else {
+        eprintln!("artifacts not built; skipping");
+        None
+    }
+}
+
+#[test]
+fn train_artifacts_match_python_goldens() {
+    let Some(rt) = runtime() else { return };
+    // Every train artifact with a golden must reproduce it.
+    let names: Vec<String> = rt
+        .manifest
+        .artifacts
+        .iter()
+        .filter(|(_, s)| s.kind == "train" && s.golden.is_some() && s.param_dim > 0)
+        // keep the fast ones in the default run; tfm_md is covered by the
+        // end-to-end example
+        .filter(|(n, _)| n.as_str() != "tfm_md_b4")
+        .map(|(n, _)| n.clone())
+        .collect();
+    assert!(names.len() >= 5, "expected several train artifacts");
+    for name in names {
+        let exe = rt.load(&name).unwrap();
+        let golden = exe.spec.golden.clone().unwrap();
+        let params = exe.spec.load_init(golden.seed).unwrap();
+        let batch = golden_batch(&exe.spec);
+        let (loss, grads) = exe.run_train(&params, &batch).unwrap();
+        let grad_sum = ops::sum(&grads);
+        let grad_l2 = ops::sqnorm(&grads).sqrt();
+        let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-6);
+        assert!(
+            rel(loss as f64, golden.loss) < 2e-4,
+            "{name} loss {} vs golden {}",
+            loss,
+            golden.loss
+        );
+        assert!(
+            rel(grad_sum, golden.grad_sum) < 5e-3,
+            "{name} grad_sum {grad_sum} vs {}",
+            golden.grad_sum
+        );
+        assert!(
+            rel(grad_l2, golden.grad_l2) < 1e-3,
+            "{name} grad_l2 {grad_l2} vs {}",
+            golden.grad_l2
+        );
+    }
+}
+
+#[test]
+fn kernel_consensus_artifact_matches_rust_stats() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("kernel_consensus_n8").unwrap();
+    let n = 8usize;
+    let d = exe.spec.inputs[0].shape[1];
+    // Deterministic pseudo-random P.
+    let mut rng = adacons::util::prng::Rng::new(42);
+    let mut p = vec![0.0f32; n * d];
+    rng.fill_normal_f32(&mut p, 1.0);
+    let batch = vec![Array::F32(p.clone(), vec![n, d])];
+    let outs = exe.run(None, &batch).unwrap();
+    let dots = outs[0].as_f32().unwrap();
+    let sqn = outs[1].as_f32().unwrap();
+    let gs = adacons::tensor::GradSet::from_rows(
+        &(0..n).map(|i| p[i * d..(i + 1) * d].to_vec()).collect::<Vec<_>>(),
+    );
+    let st = gs.consensus_stats();
+    for i in 0..n {
+        let rel = (dots[i] as f64 - st.dots[i]).abs() / st.dots[i].abs().max(1.0);
+        assert!(rel < 1e-3, "dots[{i}]: {} vs {}", dots[i], st.dots[i]);
+        let rel = (sqn[i] as f64 - st.sqn[i]).abs() / st.sqn[i];
+        assert!(rel < 1e-4, "sqn[{i}]");
+    }
+}
+
+#[test]
+fn kernel_wsum_artifact_matches_rust_weighted_sum() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("kernel_wsum_n8").unwrap();
+    let n = 8usize;
+    let d = exe.spec.inputs[1].shape[1];
+    let mut rng = adacons::util::prng::Rng::new(7);
+    let mut p = vec![0.0f32; n * d];
+    rng.fill_normal_f32(&mut p, 1.0);
+    let gamma: Vec<f32> = (0..n).map(|i| 0.1 * i as f32 - 0.3).collect();
+    let batch = vec![
+        Array::F32(gamma.clone(), vec![n]),
+        Array::F32(p.clone(), vec![n, d]),
+    ];
+    let outs = exe.run(None, &batch).unwrap();
+    let got = outs[0].as_f32().unwrap();
+    let gs = adacons::tensor::GradSet::from_rows(
+        &(0..n).map(|i| p[i * d..(i + 1) * d].to_vec()).collect::<Vec<_>>(),
+    );
+    let mut want = vec![0.0f32; d];
+    gs.weighted_sum_into(&gamma, &mut want);
+    for j in (0..d).step_by(997) {
+        assert!((got[j] - want[j]).abs() < 1e-3, "j={j}");
+    }
+}
+
+#[test]
+fn eval_artifact_runs_and_shapes_match() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("mlp_cls_b32__eval").unwrap();
+    let params = exe.spec.load_init(0).unwrap();
+    let batch = golden_batch(&exe.spec);
+    let outs = exe.run(Some(&params), &batch).unwrap();
+    assert_eq!(outs.len(), 2);
+    let correct = outs[1].as_f32().unwrap();
+    assert_eq!(correct.len(), exe.spec.inputs[0].shape[0]);
+    assert!(correct.iter().all(|&c| c == 0.0 || c == 1.0));
+}
+
+#[test]
+fn input_validation_errors_are_caught() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("linreg_b16").unwrap();
+    let params = exe.spec.load_init(0).unwrap();
+    // Wrong batch arity.
+    assert!(exe.run(Some(&params), &vec![]).is_err());
+    // Wrong param length.
+    let bad = vec![0.0f32; 3];
+    let batch = golden_batch(&exe.spec);
+    assert!(exe.run(Some(&bad), &batch).is_err());
+    // Wrong dtype.
+    let wrong = vec![Array::I32(vec![0; 16 * 1000], vec![16, 1000])];
+    assert!(exe.run(Some(&params), &wrong).is_err());
+}
