@@ -1,9 +1,13 @@
-//! Aggregation micro-bench: every aggregator over a (N, d) grid of
-//! gradient-matrix sizes — the L3 hot-path cost that Table 1's overhead
-//! column is made of. Prints mean/p50/p99 and effective memory bandwidth.
+//! Aggregation micro-bench: the thread-scaling sweep over the parallel
+//! engine (1/2/4/nproc threads x N workers x d), which emits the
+//! machine-readable `BENCH_aggregation.json` the perf trajectory tracks,
+//! plus a per-aggregator comparison at the host's full parallelism — the
+//! L3 hot-path cost that Table 1's overhead column is made of.
 
-use adacons::aggregation::{self};
+use adacons::aggregation::{self, Aggregator};
+use adacons::bench::aggregation_sweep::{run_and_write, SweepConfig};
 use adacons::bench::bench_auto;
+use adacons::parallel::{ParallelCtx, ParallelPolicy};
 use adacons::tensor::{Buckets, GradSet};
 use adacons::util::prng::Rng;
 
@@ -12,37 +16,44 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(0.4);
-    println!("== aggregation micro-bench (budget {budget}s/case) ==");
-    for (n, d) in [(8usize, 1_000_000usize), (32, 1_000_000), (8, 10_000_000)] {
+
+    // --- thread-scaling sweep (writes BENCH_aggregation.json) ---
+    let sweep = SweepConfig::full(budget);
+    if let Err(e) = run_and_write(&sweep, "BENCH_aggregation.json") {
+        eprintln!("sweep failed: {e}");
+        std::process::exit(1);
+    }
+
+    // --- per-aggregator comparison at full host parallelism ---
+    let ctx = ParallelCtx::new(ParallelPolicy::default());
+    println!(
+        "\n== aggregator comparison ({} threads, budget {budget}s/case) ==",
+        ctx.threads()
+    );
+    for (n, d) in [(8usize, 1_000_000usize), (32, 1_000_000)] {
         let mut rng = Rng::new(42);
-        let rows: Vec<Vec<f32>> = (0..n)
-            .map(|_| {
-                let mut v = vec![0.0f32; d];
-                rng.fill_normal_f32(&mut v, 1.0);
-                v
-            })
-            .collect();
-        let gs = GradSet::from_rows(&rows);
+        let mut gs = GradSet::zeros(n, d);
+        for i in 0..n {
+            rng.fill_normal_f32(gs.row_mut(i), 1.0);
+        }
         let mut out = vec![0.0f32; d];
         let buckets = Buckets::single(d);
         println!("-- N={n}, d={d} ({} MB gradient matrix) --", n * d * 4 / 1_000_000);
         for name in ["mean", "adacons", "adacons-raw", "grawa", "adasum"] {
             let mut agg = aggregation::by_name(name, n).unwrap();
             let r = bench_auto(&format!("{name} N={n} d={d}"), budget, || {
-                agg.aggregate(&gs, &buckets, &mut out);
+                agg.aggregate_ctx(&gs, &buckets, &mut out, &ctx);
             });
             // mean reads N*d once + writes d; adacons reads ~2x for stats+proj
             println!("{}   [{:.1} GB/s]", r.report_line(), r.throughput_gbps(n * d * 4));
         }
-        // robust baselines are O(N log N) per coordinate — bench smaller d
-        if d <= 1_000_000 {
-            for name in ["median", "trimmed-mean"] {
-                let mut agg = aggregation::by_name(name, n).unwrap();
-                let r = bench_auto(&format!("{name} N={n} d={d}"), budget, || {
-                    agg.aggregate(&gs, &buckets, &mut out);
-                });
-                println!("{}", r.report_line());
-            }
+        // robust baselines are O(N log N) per coordinate
+        for name in ["median", "trimmed-mean"] {
+            let mut agg = aggregation::by_name(name, n).unwrap();
+            let r = bench_auto(&format!("{name} N={n} d={d}"), budget, || {
+                agg.aggregate_ctx(&gs, &buckets, &mut out, &ctx);
+            });
+            println!("{}", r.report_line());
         }
     }
 }

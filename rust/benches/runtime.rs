@@ -11,11 +11,15 @@ use adacons::runtime::Runtime;
 use adacons::tensor::GradSet;
 use adacons::util::prng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> adacons::util::error::Result<()> {
     let budget = std::env::var("BENCH_BUDGET_S")
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(0.5);
+    if !Runtime::HAS_PJRT {
+        eprintln!("built without the pjrt feature; nothing to bench");
+        return Ok(());
+    }
     let rt = match Runtime::open_default() {
         Ok(rt) => Arc::new(rt),
         Err(e) => {

@@ -10,11 +10,15 @@ use adacons::coordinator::Trainer;
 use adacons::optim::Schedule;
 use adacons::runtime::Runtime;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> adacons::util::error::Result<()> {
     let steps = std::env::var("BENCH_STEPS")
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(10usize);
+    if !Runtime::HAS_PJRT {
+        eprintln!("built without the pjrt feature; nothing to bench");
+        return Ok(());
+    }
     let rt = match Runtime::open_default() {
         Ok(rt) => Arc::new(rt),
         Err(e) => {

@@ -21,6 +21,7 @@
 use super::stats::CoeffStages;
 use super::{AggInfo, Aggregator};
 use crate::collective::CollectiveKind;
+use crate::parallel::ParallelCtx;
 use crate::tensor::{Buckets, GradSet};
 
 /// Which components of the method are enabled (Table 2 ablation axes).
@@ -116,6 +117,24 @@ impl AdaCons {
         }
         stages.record_raw(&self.alpha);
 
+        // -- non-finite guard: an inf/NaN gradient upstream (overflowed
+        // loss, bad rank) makes α_i NaN (inf/inf) or ±inf, which would
+        // poison the EMA state and normalization. Fall back to uniform
+        // weights (= plain averaging) for this step and leave the
+        // momentum state untouched.
+        if self.alpha.iter().any(|a| !a.is_finite()) {
+            // Record a finite placeholder (the effective uniform mixing
+            // weight) so Fig. 7 stage logs are not poisoned by the inf/NaN
+            // the guard is here to contain.
+            for a in &mut self.alpha {
+                *a = 1.0 / n as f64;
+            }
+            stages.record_final(&self.alpha);
+            self.gamma.clear();
+            self.gamma.extend(std::iter::repeat(1.0 / n as f32).take(n));
+            return (self.gamma.clone(), stages);
+        }
+
         // -- sorted-EMA momentum (Eq. 11) --
         if let Some(beta) = self.cfg.momentum {
             while self.ema_sorted.len() <= bucket_idx {
@@ -124,8 +143,9 @@ impl AdaCons {
             self.order.clear();
             self.order.extend(0..n);
             let alpha = &self.alpha;
-            self.order
-                .sort_by(|&a, &b| alpha[a].partial_cmp(&alpha[b]).unwrap());
+            // total_cmp: the guard above keeps NaN out, but a total order
+            // keeps the sort panic-free by construction.
+            self.order.sort_by(|&a, &b| alpha[a].total_cmp(&alpha[b]));
             let ema = &mut self.ema_sorted[bucket_idx];
             if ema.len() != n {
                 // First step (or N changed): seed the EMA with the current
@@ -190,14 +210,20 @@ impl Aggregator for AdaCons {
         }
     }
 
-    fn aggregate(&mut self, grads: &GradSet, buckets: &Buckets, out: &mut [f32]) -> AggInfo {
+    fn aggregate_ctx(
+        &mut self,
+        grads: &GradSet,
+        buckets: &Buckets,
+        out: &mut [f32],
+        ctx: &ParallelCtx,
+    ) -> AggInfo {
         assert_eq!(out.len(), grads.d());
         let mut first_gamma = None;
         let mut first_stages = None;
         for (b, (lo, hi)) in buckets.iter().enumerate() {
-            let st = grads.consensus_stats_range(lo, hi);
+            let st = grads.consensus_stats_range_ctx(lo, hi, ctx);
             let (gamma, stages) = self.weights_from_stats(b, &st.dots, &st.sqn);
-            grads.weighted_sum_range_into(&gamma, lo, hi, &mut out[lo..hi]);
+            grads.weighted_sum_range_into_ctx(&gamma, lo, hi, &mut out[lo..hi], ctx);
             if b == 0 {
                 first_gamma = Some(gamma);
                 first_stages = Some(stages);
@@ -211,6 +237,7 @@ impl Aggregator for AdaCons {
                 (CollectiveKind::AllGather, 4),
                 (CollectiveKind::AllReduce, grads.d() * 4),
             ],
+            par: Some(ctx.par_plan(grads.d())),
         }
     }
 
@@ -367,6 +394,34 @@ mod tests {
         agg.aggregate(&gs, &Buckets::single(300), &mut out);
         let ip = crate::tensor::ops::dot(&out, &mean);
         assert!(ip > 0.0, "ip={ip}");
+    }
+
+    #[test]
+    fn nan_coefficient_falls_back_to_uniform_without_panic() {
+        // Regression: the momentum sort used partial_cmp().unwrap(), which
+        // panicked when an inf gradient upstream made α_i = inf/inf = NaN.
+        let mut agg = AdaCons::new(AdaConsConfig::full());
+        let sqn = vec![1.0, 1.0, f64::INFINITY, 1.0];
+        let dots = vec![1.0, 2.0, f64::INFINITY, 0.5];
+        let (gamma, _) = agg.weights_from_stats(0, &dots, &sqn);
+        assert_eq!(gamma, vec![0.25; 4]);
+        // Momentum state stays clean: a following finite step seeds fresh.
+        let (g1, _) = agg.weights_from_stats(0, &[1.0; 4], &vec![1.0; 4]);
+        let mut fresh = AdaCons::new(AdaConsConfig::full());
+        let (g2, _) = fresh.weights_from_stats(0, &[1.0; 4], &vec![1.0; 4]);
+        assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn inf_gradient_row_does_not_panic_aggregate() {
+        let mut rows = vec![vec![1.0f32; 32]; 3];
+        rows[1][5] = f32::INFINITY; // bad rank
+        let gs = GradSet::from_rows(&rows);
+        let mut out = vec![0.0f32; 32];
+        let mut agg = AdaCons::new(AdaConsConfig::full());
+        let info = agg.aggregate(&gs, &Buckets::single(32), &mut out);
+        // Uniform fallback weights, no panic.
+        assert_eq!(info.gammas.unwrap(), vec![1.0 / 3.0; 3]);
     }
 
     #[test]

@@ -9,6 +9,7 @@
 
 use super::{AggInfo, Aggregator};
 use crate::collective::CollectiveKind;
+use crate::parallel::ParallelCtx;
 use crate::tensor::{ops, Buckets, GradSet};
 
 #[derive(Debug, Default)]
@@ -19,14 +20,30 @@ impl Adasum {
         Adasum
     }
 
-    fn pair(a: &[f32], b: &[f32], out: &mut Vec<f32>) {
-        let ab = ops::dot(a, b);
-        let na = ops::sqnorm(a);
-        let nb = ops::sqnorm(b);
+    /// One pairwise combine: the `(<a,b>, ||a||², ||b||²)` reduction and
+    /// the elementwise blend both run sharded on the context's pool, with
+    /// the dot partials folded in the fixed shard-order tree (so the
+    /// result is bitwise-stable across thread counts).
+    fn pair(a: &[f32], b: &[f32], out: &mut Vec<f32>, ctx: &ParallelCtx) {
+        let (ab, na, nb) = ctx
+            .map_reduce(
+                0,
+                a.len(),
+                |lo, hi| ops::dot3(&a[lo..hi], &b[lo..hi]),
+                |x, y| (x.0 + y.0, x.1 + y.1, x.2 + y.2),
+            )
+            .unwrap_or((0.0, 0.0, 0.0));
         let ca = if na > 0.0 { 1.0 - ab / (2.0 * na) } else { 1.0 } as f32;
         let cb = if nb > 0.0 { 1.0 - ab / (2.0 * nb) } else { 1.0 } as f32;
         out.clear();
-        out.extend(a.iter().zip(b.iter()).map(|(&x, &y)| ca * x + cb * y));
+        out.resize(a.len(), 0.0);
+        ctx.for_each_out_shard(0, a.len(), out, |lo, hi, oc| {
+            for (k, o) in oc.iter_mut().enumerate() {
+                let j = lo + k;
+                *o = ca * a[j] + cb * b[j];
+            }
+            debug_assert_eq!(lo + oc.len(), hi);
+        });
     }
 }
 
@@ -35,7 +52,13 @@ impl Aggregator for Adasum {
         "adasum"
     }
 
-    fn aggregate(&mut self, grads: &GradSet, _buckets: &Buckets, out: &mut [f32]) -> AggInfo {
+    fn aggregate_ctx(
+        &mut self,
+        grads: &GradSet,
+        _buckets: &Buckets,
+        out: &mut [f32],
+        ctx: &ParallelCtx,
+    ) -> AggInfo {
         let n = grads.n();
         let d = grads.d();
         assert_eq!(out.len(), d);
@@ -46,7 +69,7 @@ impl Aggregator for Adasum {
             let mut it = level.into_iter();
             while let Some(a) = it.next() {
                 if let Some(b) = it.next() {
-                    Self::pair(&a, &b, &mut scratch);
+                    Self::pair(&a, &b, &mut scratch, ctx);
                     next.push(scratch.clone());
                 } else {
                     next.push(a); // odd tail passes through
@@ -63,6 +86,7 @@ impl Aggregator for Adasum {
             coeff_stages: None,
             // log2(N) rounds of pairwise exchanges ≈ one allreduce in cost.
             comm: vec![(CollectiveKind::AllReduce, d * 4)],
+            par: Some(ctx.par_plan(d)),
         }
     }
 }

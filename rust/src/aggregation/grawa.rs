@@ -4,6 +4,7 @@
 
 use super::{AggInfo, Aggregator};
 use crate::collective::CollectiveKind;
+use crate::parallel::ParallelCtx;
 use crate::tensor::{Buckets, GradSet};
 
 #[derive(Debug, Default)]
@@ -20,9 +21,15 @@ impl Aggregator for Grawa {
         "grawa"
     }
 
-    fn aggregate(&mut self, grads: &GradSet, _buckets: &Buckets, out: &mut [f32]) -> AggInfo {
+    fn aggregate_ctx(
+        &mut self,
+        grads: &GradSet,
+        _buckets: &Buckets,
+        out: &mut [f32],
+        ctx: &ParallelCtx,
+    ) -> AggInfo {
         let n = grads.n();
-        let st = grads.consensus_stats();
+        let st = grads.consensus_stats_ctx(ctx);
         let inv: Vec<f64> = st
             .sqn
             .iter()
@@ -41,7 +48,7 @@ impl Aggregator for Grawa {
         } else {
             vec![1.0 / n as f32; n]
         };
-        grads.weighted_sum_into(&gammas, out);
+        grads.weighted_sum_into_ctx(&gammas, out, ctx);
         AggInfo {
             gammas: Some(gammas),
             coeff_stages: None,
@@ -49,6 +56,7 @@ impl Aggregator for Grawa {
                 (CollectiveKind::AllGather, 4),
                 (CollectiveKind::AllReduce, grads.d() * 4),
             ],
+            par: Some(ctx.par_plan(grads.d())),
         }
     }
 }

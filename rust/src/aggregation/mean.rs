@@ -3,6 +3,7 @@
 
 use super::{AggInfo, Aggregator};
 use crate::collective::CollectiveKind;
+use crate::parallel::ParallelCtx;
 use crate::tensor::{Buckets, GradSet};
 
 #[derive(Debug, Default)]
@@ -19,12 +20,19 @@ impl Aggregator for MeanAggregator {
         "mean"
     }
 
-    fn aggregate(&mut self, grads: &GradSet, _buckets: &Buckets, out: &mut [f32]) -> AggInfo {
-        grads.mean_into(out);
+    fn aggregate_ctx(
+        &mut self,
+        grads: &GradSet,
+        _buckets: &Buckets,
+        out: &mut [f32],
+        ctx: &ParallelCtx,
+    ) -> AggInfo {
+        grads.mean_into_ctx(out, ctx);
         AggInfo {
             gammas: Some(vec![1.0 / grads.n() as f32; grads.n()]),
             coeff_stages: None,
             comm: vec![(CollectiveKind::AllReduce, grads.d() * 4)],
+            par: Some(ctx.par_plan(grads.d())),
         }
     }
 }

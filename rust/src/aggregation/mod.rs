@@ -20,6 +20,7 @@ pub mod robust;
 pub mod stats;
 
 use crate::collective::CollectiveKind;
+use crate::parallel::{ParPlan, ParallelCtx};
 use crate::tensor::{Buckets, GradSet};
 
 pub use adacons::{AdaCons, AdaConsConfig};
@@ -40,14 +41,31 @@ pub struct AggInfo {
     /// Communication ops this step would issue on a real fabric
     /// (kind, payload bytes) — charged to the SimClock by the coordinator.
     pub comm: Vec<(CollectiveKind, usize)>,
+    /// Thread-count / shard-size choices the parallel engine made for the
+    /// full-width range (reported by exp/table1 next to the timings).
+    pub par: Option<ParPlan>,
 }
 
 /// A synchronous gradient aggregation scheme.
 pub trait Aggregator: Send {
     fn name(&self) -> &'static str;
 
-    /// Aggregate `grads` into `out` (length d), bucket by bucket.
-    fn aggregate(&mut self, grads: &GradSet, buckets: &Buckets, out: &mut [f32]) -> AggInfo;
+    /// Aggregate `grads` into `out` (length d), bucket by bucket, running
+    /// the tensor kernels on `ctx`'s worker pool. Results are
+    /// bitwise-identical at any thread count (fixed shard plan +
+    /// fixed-order partial reduction — see `parallel`).
+    fn aggregate_ctx(
+        &mut self,
+        grads: &GradSet,
+        buckets: &Buckets,
+        out: &mut [f32],
+        ctx: &ParallelCtx,
+    ) -> AggInfo;
+
+    /// Serial convenience wrapper (one-lane context, jobs run inline).
+    fn aggregate(&mut self, grads: &GradSet, buckets: &Buckets, out: &mut [f32]) -> AggInfo {
+        self.aggregate_ctx(grads, buckets, out, &ParallelCtx::serial())
+    }
 
     /// Clear step-dependent state (e.g. momentum) between runs.
     fn reset(&mut self) {}

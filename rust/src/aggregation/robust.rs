@@ -5,17 +5,19 @@
 
 use super::{AggInfo, Aggregator};
 use crate::collective::CollectiveKind;
+use crate::parallel::ParallelCtx;
 use crate::tensor::{Buckets, GradSet};
 
-/// Coordinate-wise median.
+/// Coordinate-wise median. Coordinates are independent, so the column
+/// range shards freely across the pool (each shard job carries its own
+/// N-element sort scratch); output is bitwise-identical at any thread
+/// count.
 #[derive(Debug, Default)]
-pub struct CoordinateMedian {
-    scratch: Vec<f32>,
-}
+pub struct CoordinateMedian;
 
 impl CoordinateMedian {
     pub fn new() -> Self {
-        Self::default()
+        Self
     }
 }
 
@@ -24,45 +26,51 @@ impl Aggregator for CoordinateMedian {
         "median"
     }
 
-    fn aggregate(&mut self, grads: &GradSet, _buckets: &Buckets, out: &mut [f32]) -> AggInfo {
+    fn aggregate_ctx(
+        &mut self,
+        grads: &GradSet,
+        _buckets: &Buckets,
+        out: &mut [f32],
+        ctx: &ParallelCtx,
+    ) -> AggInfo {
         let n = grads.n();
-        self.scratch.resize(n, 0.0);
-        for j in 0..grads.d() {
-            for i in 0..n {
-                self.scratch[i] = grads.row(i)[j];
+        ctx.for_each_out_shard(0, grads.d(), out, |lo, _hi, oc| {
+            let mut scratch = vec![0.0f32; n];
+            for (k, o) in oc.iter_mut().enumerate() {
+                let j = lo + k;
+                for i in 0..n {
+                    scratch[i] = grads.row(i)[j];
+                }
+                scratch.sort_by(|a, b| a.total_cmp(b));
+                *o = if n % 2 == 1 {
+                    scratch[n / 2]
+                } else {
+                    0.5 * (scratch[n / 2 - 1] + scratch[n / 2])
+                };
             }
-            self.scratch
-                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-            out[j] = if n % 2 == 1 {
-                self.scratch[n / 2]
-            } else {
-                0.5 * (self.scratch[n / 2 - 1] + self.scratch[n / 2])
-            };
-        }
+        });
         AggInfo {
             gammas: None,
             coeff_stages: None,
             // Requires gathering all gradients: N x d all-gather cost.
             comm: vec![(CollectiveKind::AllGather, grads.d() * 4)],
+            par: Some(ctx.par_plan(grads.d())),
         }
     }
 }
 
 /// Coordinate-wise α-trimmed mean: drop the `trim_frac` highest and lowest
-/// values per coordinate, average the rest.
+/// values per coordinate, average the rest. Column-sharded like the
+/// median.
 #[derive(Debug)]
 pub struct TrimmedMean {
     trim_frac: f64,
-    scratch: Vec<f32>,
 }
 
 impl TrimmedMean {
     pub fn new(trim_frac: f64) -> Self {
         assert!((0.0..0.5).contains(&trim_frac));
-        TrimmedMean {
-            trim_frac,
-            scratch: Vec::new(),
-        }
+        TrimmedMean { trim_frac }
     }
 }
 
@@ -71,25 +79,34 @@ impl Aggregator for TrimmedMean {
         "trimmed-mean"
     }
 
-    fn aggregate(&mut self, grads: &GradSet, _buckets: &Buckets, out: &mut [f32]) -> AggInfo {
+    fn aggregate_ctx(
+        &mut self,
+        grads: &GradSet,
+        _buckets: &Buckets,
+        out: &mut [f32],
+        ctx: &ParallelCtx,
+    ) -> AggInfo {
         let n = grads.n();
         let k = ((n as f64) * self.trim_frac).floor() as usize;
         let keep = n - 2 * k;
         assert!(keep > 0, "trim fraction leaves no workers");
-        self.scratch.resize(n, 0.0);
-        for j in 0..grads.d() {
-            for i in 0..n {
-                self.scratch[i] = grads.row(i)[j];
+        ctx.for_each_out_shard(0, grads.d(), out, |lo, _hi, oc| {
+            let mut scratch = vec![0.0f32; n];
+            for (c, o) in oc.iter_mut().enumerate() {
+                let j = lo + c;
+                for i in 0..n {
+                    scratch[i] = grads.row(i)[j];
+                }
+                scratch.sort_by(|a, b| a.total_cmp(b));
+                let s: f64 = scratch[k..n - k].iter().map(|&x| x as f64).sum();
+                *o = (s / keep as f64) as f32;
             }
-            self.scratch
-                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-            let s: f64 = self.scratch[k..n - k].iter().map(|&x| x as f64).sum();
-            out[j] = (s / keep as f64) as f32;
-        }
+        });
         AggInfo {
             gammas: None,
             coeff_stages: None,
             comm: vec![(CollectiveKind::AllGather, grads.d() * 4)],
+            par: Some(ctx.par_plan(grads.d())),
         }
     }
 }

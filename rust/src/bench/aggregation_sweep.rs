@@ -1,0 +1,360 @@
+//! Thread-scaling sweep for the aggregation hot path: every engine kernel
+//! (`consensus_stats`, `weighted_sum`, `mean`) plus the end-to-end
+//! `adacons` aggregate, over a (threads x workers x d) grid, emitting the
+//! machine-readable `BENCH_aggregation.json` the perf trajectory is
+//! tracked with (EXPERIMENTS.md §Perf).
+//!
+//! Reproduce with `cargo run --release --bin bench_aggregation`; the
+//! `aggregation` bench target and `scripts/ci.sh` (smoke mode) call the
+//! same entry points.
+
+use std::collections::BTreeMap;
+
+use crate::aggregation::{self, Aggregator};
+use crate::bench::bench_auto;
+use crate::parallel::{plan_shards, ParallelCtx, ParallelPolicy};
+use crate::tensor::ops::CHUNK;
+use crate::tensor::{Buckets, GradSet};
+use crate::util::error::{bail, Context, Result};
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::prng::Rng;
+
+/// Grid + budget for one sweep run.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Target seconds per benchmarked case.
+    pub budget_s: f64,
+    /// Thread counts; 1 is always measured first (speedup baseline).
+    pub threads: Vec<usize>,
+    /// Worker counts N.
+    pub workers: Vec<usize>,
+    /// Gradient dimensions d.
+    pub dims: Vec<usize>,
+    /// Engine shard knob (passed through to the policy).
+    pub min_shard_elems: usize,
+    /// Skip gradient matrices larger than this many bytes (logged, never
+    /// silent).
+    pub max_case_bytes: usize,
+}
+
+impl SweepConfig {
+    /// The full grid from the perf plan: 1/2/4/nproc threads x N in
+    /// {4, 8, 32} x d in {1e5, 1e6, 1e7}.
+    pub fn full(budget_s: f64) -> SweepConfig {
+        let nproc = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let mut threads = vec![1, 2, 4, nproc];
+        threads.sort_unstable();
+        threads.dedup();
+        SweepConfig {
+            budget_s,
+            threads,
+            workers: vec![4, 8, 32],
+            dims: vec![100_000, 1_000_000, 10_000_000],
+            min_shard_elems: crate::parallel::DEFAULT_MIN_SHARD_ELEMS,
+            max_case_bytes: 2_000_000_000,
+        }
+    }
+
+    /// Tiny grid for CI smoke runs: validates the whole pipeline (grid,
+    /// JSON schema, speedup bookkeeping) in a few seconds.
+    pub fn smoke(budget_s: f64) -> SweepConfig {
+        SweepConfig {
+            budget_s,
+            threads: vec![1, 2],
+            workers: vec![4, 8],
+            dims: vec![100_000, 1_000_000],
+            min_shard_elems: 16 * 1024,
+            max_case_bytes: 2_000_000_000,
+        }
+    }
+}
+
+fn random_grad_set(n: usize, d: usize, seed: u64) -> GradSet {
+    let mut gs = GradSet::zeros(n, d);
+    let mut rng = Rng::new(seed);
+    for i in 0..n {
+        rng.fill_normal_f32(gs.row_mut(i), 1.0);
+    }
+    gs
+}
+
+/// Run the sweep, printing one report line per case, and return the JSON
+/// document (callers decide where to write it).
+pub fn run_sweep(cfg: &SweepConfig) -> Result<Json> {
+    let mut threads = cfg.threads.clone();
+    threads.sort_unstable();
+    threads.dedup();
+    if threads.first() != Some(&1) {
+        threads.insert(0, 1);
+    }
+    let nproc = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    println!(
+        "== aggregation thread-scaling sweep (budget {:.3}s/case, host {} cpus) ==",
+        cfg.budget_s, nproc
+    );
+    // mean seconds of the 1-thread baseline per (op, workers, d)
+    let mut baseline: BTreeMap<(String, usize, usize), f64> = BTreeMap::new();
+    let mut cases: Vec<Json> = Vec::new();
+    for &n in &cfg.workers {
+        for &d in &cfg.dims {
+            let bytes = n * d * 4;
+            if bytes > cfg.max_case_bytes {
+                println!(
+                    "-- skipping N={n}, d={d}: {bytes} B gradient matrix exceeds the \
+                     {} B case cap --",
+                    cfg.max_case_bytes
+                );
+                cases.push(obj(vec![
+                    ("workers", num(n as f64)),
+                    ("d", num(d as f64)),
+                    ("skipped", Json::Bool(true)),
+                    ("reason", s("matrix exceeds max_case_bytes")),
+                ]));
+                continue;
+            }
+            println!("-- N={n}, d={d} ({} MB gradient matrix) --", bytes / 1_000_000);
+            let gs = random_grad_set(n, d, 42);
+            let gamma: Vec<f32> = (0..n).map(|i| 0.5 + 0.1 * i as f32).collect();
+            let buckets = Buckets::single(d);
+            let mut out = vec![0.0f32; d];
+            for &t in &threads {
+                let policy = ParallelPolicy {
+                    threads: t,
+                    min_shard_elems: cfg.min_shard_elems,
+                };
+                let ctx = ParallelCtx::new(policy);
+                let plan = plan_shards(0, d, cfg.min_shard_elems);
+                let shard_w = plan.first().map(|&(a, b)| b - a).unwrap_or(0);
+                let mut agg = aggregation::by_name("adacons", n)
+                    .context("adacons not in registry")?;
+                let runs: Vec<(&str, crate::bench::BenchResult, usize)> = vec![
+                    (
+                        "consensus_stats",
+                        bench_auto(
+                            &format!("consensus_stats N={n} d={d} t={t}"),
+                            cfg.budget_s,
+                            || {
+                                std::hint::black_box(gs.consensus_stats_ctx(&ctx));
+                            },
+                        ),
+                        bytes,
+                    ),
+                    (
+                        "weighted_sum",
+                        bench_auto(
+                            &format!("weighted_sum    N={n} d={d} t={t}"),
+                            cfg.budget_s,
+                            || {
+                                gs.weighted_sum_into_ctx(&gamma, &mut out, &ctx);
+                            },
+                        ),
+                        bytes + d * 4,
+                    ),
+                    (
+                        "mean",
+                        bench_auto(
+                            &format!("mean            N={n} d={d} t={t}"),
+                            cfg.budget_s,
+                            || {
+                                gs.mean_into_ctx(&mut out, &ctx);
+                            },
+                        ),
+                        bytes + d * 4,
+                    ),
+                    (
+                        "adacons",
+                        bench_auto(
+                            &format!("adacons (e2e)   N={n} d={d} t={t}"),
+                            cfg.budget_s,
+                            || {
+                                agg.aggregate_ctx(&gs, &buckets, &mut out, &ctx);
+                            },
+                        ),
+                        2 * bytes + d * 4,
+                    ),
+                ];
+                for (op, r, touched) in runs {
+                    let key = (op.to_string(), n, d);
+                    if t == 1 {
+                        baseline.insert(key.clone(), r.mean_s);
+                    }
+                    let speedup = baseline.get(&key).map(|&b| b / r.mean_s);
+                    println!(
+                        "{}   [{:.1} GB/s]{}",
+                        r.report_line(),
+                        r.throughput_gbps(touched),
+                        speedup
+                            .map(|x| format!("  [{x:.2}x vs 1t]"))
+                            .unwrap_or_default()
+                    );
+                    cases.push(obj(vec![
+                        ("op", s(op)),
+                        ("workers", num(n as f64)),
+                        ("d", num(d as f64)),
+                        ("threads", num(t as f64)),
+                        ("shards", num(plan.len() as f64)),
+                        ("shard_elems", num(shard_w as f64)),
+                        ("iters", num(r.iters as f64)),
+                        ("mean_s", num(r.mean_s)),
+                        ("p50_s", num(r.p50_s)),
+                        ("p99_s", num(r.p99_s)),
+                        ("gbps", num(r.throughput_gbps(touched))),
+                        (
+                            "speedup_vs_1t",
+                            speedup.map(num).unwrap_or(Json::Null),
+                        ),
+                    ]));
+                }
+            }
+        }
+    }
+    Ok(obj(vec![
+        ("bench", s("aggregation")),
+        ("schema_version", num(1.0)),
+        ("chunk", num(CHUNK as f64)),
+        ("min_shard_elems", num(cfg.min_shard_elems as f64)),
+        ("host_threads", num(nproc as f64)),
+        ("budget_s", num(cfg.budget_s)),
+        ("cases", arr(cases)),
+    ]))
+}
+
+/// Run the sweep and write `path` (pretty JSON).
+pub fn run_and_write(cfg: &SweepConfig, path: &str) -> Result<()> {
+    let doc = run_sweep(cfg)?;
+    std::fs::write(path, doc.to_string_pretty())
+        .with_context(|| format!("writing {path}"))?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// Validate that `path` holds a well-formed sweep document (CI gate).
+pub fn validate_file(path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let doc = Json::parse(&text).map_err(|e| crate::err!("{path}: {e}"))?;
+    if doc.get("bench").as_str() != Some("aggregation") {
+        bail!("{path}: missing bench=aggregation tag");
+    }
+    let cases = doc.get("cases").as_arr().context("cases array")?;
+    let mut measured = 0usize;
+    for (i, c) in cases.iter().enumerate() {
+        if c.get("skipped").as_bool() == Some(true) {
+            continue;
+        }
+        for key in ["op", "workers", "d", "threads", "mean_s"] {
+            if c.get(key).is_null() {
+                bail!("{path}: case {i} missing {key:?}");
+            }
+        }
+        let mean_s = c.get("mean_s").as_f64().context("mean_s")?;
+        if !(mean_s.is_finite() && mean_s > 0.0) {
+            bail!("{path}: case {i} has bad mean_s {mean_s}");
+        }
+        measured += 1;
+    }
+    if measured == 0 {
+        bail!("{path}: no measured cases");
+    }
+    println!("{path}: ok ({measured} measured cases)");
+    Ok(())
+}
+
+/// Render the consensus_stats / weighted_sum scaling rows as a markdown
+/// table (for pasting into EXPERIMENTS.md §Perf).
+pub fn markdown_table(doc: &Json) -> String {
+    let mut out = String::new();
+    out.push_str("| op | N | d | threads | mean ms | GB/s | speedup vs 1t |\n");
+    out.push_str("|---|---|---|---|---|---|---|\n");
+    if let Some(cases) = doc.get("cases").as_arr() {
+        for c in cases {
+            if c.get("skipped").as_bool() == Some(true) {
+                continue;
+            }
+            let op = c.get("op").as_str().unwrap_or("?");
+            if op != "consensus_stats" && op != "weighted_sum" {
+                continue;
+            }
+            out.push_str(&format!(
+                "| {} | {} | {} | {} | {:.3} | {:.1} | {} |\n",
+                op,
+                c.get("workers").as_usize().unwrap_or(0),
+                c.get("d").as_usize().unwrap_or(0),
+                c.get("threads").as_usize().unwrap_or(0),
+                c.get("mean_s").as_f64().unwrap_or(f64::NAN) * 1e3,
+                c.get("gbps").as_f64().unwrap_or(f64::NAN),
+                c.get("speedup_vs_1t")
+                    .as_f64()
+                    .map(|x| format!("{x:.2}x"))
+                    .unwrap_or_else(|| "-".to_string()),
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_sweep_emits_valid_doc() {
+        // Microscopic grid: correctness of the plumbing, not the numbers.
+        let cfg = SweepConfig {
+            budget_s: 0.001,
+            threads: vec![1, 2],
+            workers: vec![2],
+            dims: vec![10_000],
+            min_shard_elems: 2048,
+            max_case_bytes: 1 << 30,
+        };
+        let doc = run_sweep(&cfg).unwrap();
+        let cases = doc.get("cases").as_arr().unwrap();
+        // 2 thread counts x 4 ops.
+        assert_eq!(cases.len(), 8);
+        for c in cases {
+            assert!(c.get("mean_s").as_f64().unwrap() > 0.0);
+            assert!(!c.get("speedup_vs_1t").is_null());
+        }
+        let md = markdown_table(&doc);
+        assert!(md.contains("consensus_stats"));
+        // Round-trip through a file and the validator.
+        let dir = std::env::temp_dir().join("adacons_sweep_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_aggregation.json");
+        std::fs::write(&path, doc.to_string_pretty()).unwrap();
+        validate_file(path.to_str().unwrap()).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn oversized_cases_are_skipped_loudly() {
+        let cfg = SweepConfig {
+            budget_s: 0.001,
+            threads: vec![1],
+            workers: vec![4],
+            dims: vec![1_000_000],
+            min_shard_elems: 2048,
+            max_case_bytes: 1000, // force the skip path
+        };
+        let doc = run_sweep(&cfg).unwrap();
+        let cases = doc.get("cases").as_arr().unwrap();
+        assert_eq!(cases.len(), 1);
+        assert_eq!(cases[0].get("skipped").as_bool(), Some(true));
+    }
+
+    #[test]
+    fn validator_rejects_garbage() {
+        let dir = std::env::temp_dir().join("adacons_sweep_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.json");
+        std::fs::write(&path, r#"{"bench":"other","cases":[]}"#).unwrap();
+        assert!(validate_file(path.to_str().unwrap()).is_err());
+        std::fs::write(&path, r#"{"bench":"aggregation","cases":[]}"#).unwrap();
+        assert!(validate_file(path.to_str().unwrap()).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

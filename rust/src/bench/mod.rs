@@ -1,5 +1,8 @@
 //! Micro-benchmark harness (criterion is not vendored offline): warmup,
 //! timed iterations, mean/std/p50/p99 reporting, and a throughput helper.
+//! `aggregation_sweep` builds the thread-scaling sweep on top of it.
+
+pub mod aggregation_sweep;
 
 use crate::util::stats::Quantiles;
 use crate::util::timer::Timer;

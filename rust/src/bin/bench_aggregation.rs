@@ -1,0 +1,43 @@
+//! `bench_aggregation` — reproduce `BENCH_aggregation.json` (the
+//! aggregation-engine thread-scaling sweep) from anywhere:
+//!
+//!   cargo run --release --bin bench_aggregation                  # full grid
+//!   cargo run --release --bin bench_aggregation -- --smoke --budget 0.05
+//!   cargo run --release --bin bench_aggregation -- --check BENCH_aggregation.json
+//!   cargo run --release --bin bench_aggregation -- --table BENCH_aggregation.json
+
+use adacons::bench::aggregation_sweep::{
+    markdown_table, run_and_write, validate_file, SweepConfig,
+};
+use adacons::util::argparse::Args;
+use adacons::util::error::Result;
+use adacons::util::json::Json;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &["smoke"]);
+    if let Some(path) = args.str_opt("check") {
+        return validate_file(path);
+    }
+    if let Some(path) = args.str_opt("table") {
+        let text = std::fs::read_to_string(path)?;
+        let doc = Json::parse(&text).map_err(|e| adacons::err!("{path}: {e}"))?;
+        print!("{}", markdown_table(&doc));
+        return Ok(());
+    }
+    let smoke = args.flag("smoke");
+    let budget = args.f64_or("budget", if smoke { 0.05 } else { 0.4 })?;
+    let cfg = if smoke {
+        SweepConfig::smoke(budget)
+    } else {
+        SweepConfig::full(budget)
+    };
+    let out = args.str_or("out", "BENCH_aggregation.json");
+    run_and_write(&cfg, &out)
+}

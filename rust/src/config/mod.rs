@@ -4,11 +4,11 @@
 //! any paper run can be reproduced from the command line:
 //! `adacons train --config cfg.json --workers 8 --aggregator adacons`.
 
-use anyhow::{bail, Context, Result};
-
 use crate::data::GradInjector;
 use crate::optim::Schedule;
+use crate::parallel::ParallelPolicy;
 use crate::util::argparse::Args;
+use crate::util::error::{bail, Context, Result};
 use crate::util::json::Json;
 
 /// Full specification of one training run.
@@ -47,6 +47,9 @@ pub struct TrainConfig {
     pub log_every: usize,
     /// Optional JSONL step-log path.
     pub jsonl: Option<String>,
+    /// Parallel engine knobs for the aggregation hot path
+    /// (`par_threads`: 0 = all cores; `par_min_shard_elems`).
+    pub parallel: ParallelPolicy,
 }
 
 impl Default for TrainConfig {
@@ -70,6 +73,7 @@ impl Default for TrainConfig {
             fabric_gbps: 100.0,
             log_every: 0,
             jsonl: None,
+            parallel: ParallelPolicy::default(),
         }
     }
 }
@@ -103,6 +107,11 @@ impl TrainConfig {
                 "fabric_gbps" => cfg.fabric_gbps = v.as_f64().context("fabric_gbps")?,
                 "log_every" => cfg.log_every = v.as_usize().context("log_every")?,
                 "jsonl" => cfg.jsonl = Some(v.as_str().context("jsonl")?.into()),
+                "par_threads" => cfg.parallel.threads = v.as_usize().context("par_threads")?,
+                "par_min_shard_elems" => {
+                    cfg.parallel.min_shard_elems =
+                        v.as_usize().context("par_min_shard_elems")?
+                }
                 "injectors" => {
                     for item in v.as_arr().context("injectors")? {
                         let rank = item.get("rank").as_usize().context("injector rank")?;
@@ -156,6 +165,9 @@ impl TrainConfig {
         self.heterogeneity = args.f64_or("heterogeneity", self.heterogeneity)?;
         self.fabric_gbps = args.f64_or("fabric-gbps", self.fabric_gbps)?;
         self.log_every = args.usize_or("log-every", self.log_every)?;
+        self.parallel.threads = args.usize_or("par-threads", self.parallel.threads)?;
+        self.parallel.min_shard_elems =
+            args.usize_or("par-min-shard-elems", self.parallel.min_shard_elems)?;
         if let Some(p) = args.str_opt("jsonl") {
             self.jsonl = Some(p.into());
         }
@@ -189,12 +201,15 @@ impl TrainConfig {
                 bail!("injector rank {rank} >= workers {}", self.workers);
             }
         }
+        if self.parallel.threads > 1024 {
+            bail!("par_threads {} is implausible (max 1024)", self.parallel.threads);
+        }
         Ok(())
     }
 
     pub fn load_file(path: &str) -> Result<TrainConfig> {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| crate::err!("{path}: {e}"))?;
         TrainConfig::from_json(&j)
     }
 }
@@ -239,6 +254,25 @@ mod tests {
         assert_eq!(cfg.aggregator, "adasum");
         assert_eq!(cfg.clip, None);
         assert_eq!(cfg.injectors[0].0, 3);
+    }
+
+    #[test]
+    fn parallel_knobs_from_json_and_cli() {
+        let j = Json::parse(r#"{"par_threads":4,"par_min_shard_elems":8192}"#).unwrap();
+        let cfg = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.parallel.threads, 4);
+        assert_eq!(cfg.parallel.min_shard_elems, 8192);
+        let mut cfg = TrainConfig::default();
+        assert_eq!(cfg.parallel.threads, 0); // auto
+        let args = Args::parse(
+            "--par-threads 2 --par-min-shard-elems 2048"
+                .split_whitespace()
+                .map(String::from),
+            &[],
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.parallel.threads, 2);
+        assert_eq!(cfg.parallel.min_shard_elems, 2048);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 use std::io::{Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 
 const MAGIC: &[u8; 8] = b"ADACONS1";
 

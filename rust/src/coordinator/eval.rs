@@ -2,8 +2,9 @@
 //! shard (a rank id no trainer worker uses) and reduces the outputs to the
 //! task's paper metric.
 
-use anyhow::{Context, Result};
 use std::sync::Arc;
+
+use crate::util::error::{Context, Result};
 
 use crate::data::{Array, DataGen};
 use crate::metrics;

@@ -7,7 +7,6 @@
 //! charged to a [`SimClock`] through the α-β cost model so iteration
 //! timing can be reported for fabrics we do not have (Table 1).
 
-use anyhow::{Context, Result};
 use std::sync::Arc;
 
 use crate::aggregation::{self, AggInfo, Aggregator, CoeffStages};
@@ -15,8 +14,10 @@ use crate::collective::{CostModel, SimClock, Topology};
 use crate::config::TrainConfig;
 use crate::coordinator::eval::{EvalOutcome, Evaluator};
 use crate::optim::{self, clip_global_norm, Optimizer};
+use crate::parallel::{ParPlan, ParallelCtx};
 use crate::runtime::{Executable, Runtime};
 use crate::tensor::{Buckets, GradSet};
+use crate::util::error::{ensure, Context, Result};
 use crate::util::timer::{PhaseTimer, Timer};
 use crate::worker::Worker;
 
@@ -46,6 +47,8 @@ pub struct TrainResult {
     pub final_params: Vec<f32>,
     /// Effective batch = workers * local batch.
     pub effective_batch: usize,
+    /// Thread/shard choices the aggregation engine made (last step).
+    pub agg_par: Option<ParPlan>,
 }
 
 impl TrainResult {
@@ -83,6 +86,9 @@ pub struct Trainer {
     evaluator: Option<Evaluator>,
     buckets: Buckets,
     cost: CostModel,
+    /// Persistent parallel context: the worker pool is spawned once here
+    /// and reused by every aggregation step (no per-step thread spawn).
+    par: ParallelCtx,
     pub params: Vec<f32>,
     start_step: usize,
 }
@@ -92,7 +98,7 @@ impl Trainer {
         cfg.validate()?;
         let exe = rt.load(&cfg.artifact)?;
         let d = exe.spec.param_dim;
-        anyhow::ensure!(d > 0, "{} is not a trainable artifact", cfg.artifact);
+        ensure!(d > 0, "{} is not a trainable artifact", cfg.artifact);
         let params = exe.spec.load_init(cfg.init_seed)?;
         let model = exe.spec.model.clone();
         let workers = (0..cfg.workers)
@@ -129,6 +135,7 @@ impl Trainer {
             None => Buckets::single(d),
         };
         let cost = CostModel::from_topology(&Topology::ring_gbps(cfg.workers, cfg.fabric_gbps));
+        let par = ParallelCtx::new(cfg.parallel);
         Ok(Trainer {
             cfg,
             rt,
@@ -139,6 +146,7 @@ impl Trainer {
             evaluator,
             buckets,
             cost,
+            par,
             params,
             start_step: 0,
         })
@@ -146,7 +154,7 @@ impl Trainer {
 
     /// Resume from a checkpoint (params + step counter).
     pub fn restore(&mut self, ck: &crate::coordinator::Checkpoint) -> Result<()> {
-        anyhow::ensure!(
+        ensure!(
             ck.params.len() == self.params.len(),
             "checkpoint dim mismatch"
         );
@@ -175,6 +183,7 @@ impl Trainer {
         let mut coeff_log = Vec::new();
         let mut evals = Vec::new();
         let mut metric_name: &'static str = "loss";
+        let mut agg_par: Option<ParPlan> = None;
         let local_batch = self.local_batch();
         let mut jsonl = match &self.cfg.jsonl {
             Some(p) => Some(crate::metrics::JsonlWriter::create(p)?),
@@ -197,13 +206,17 @@ impl Trainer {
             })?;
             train_loss.push(loss_sum / n as f64);
 
-            // --- aggregation (the paper) + comm cost accounting
-            let info: AggInfo =
-                phases.time("aggregate", || {
-                    self.aggregator.aggregate(&grads, &self.buckets, &mut agg)
-                });
+            // --- aggregation (the paper) + comm cost accounting; tensor
+            //     kernels fan out over the persistent worker pool
+            let info: AggInfo = phases.time("aggregate", || {
+                self.aggregator
+                    .aggregate_ctx(&grads, &self.buckets, &mut agg, &self.par)
+            });
             for (kind, bytes) in &info.comm {
                 clock.collective(self.cost.time_s(*kind, *bytes));
+            }
+            if info.par.is_some() {
+                agg_par = info.par;
             }
             if let Some(stages) = info.coeff_stages {
                 if self.cfg.log_every > 0 && step % self.cfg.log_every == 0 {
@@ -228,7 +241,7 @@ impl Trainer {
                     let outcome = ev.evaluate(&self.params)?;
                     metric_name = outcome.metric_name;
                     if self.cfg.log_every > 0 {
-                        log::info!(
+                        crate::log_info!(
                             "step {step}: loss {:.4} {} {:.4}",
                             outcome.loss,
                             outcome.metric_name,
@@ -239,7 +252,7 @@ impl Trainer {
                 }
             }
             if self.cfg.log_every > 0 && step % self.cfg.log_every == 0 {
-                log::debug!("step {step}: train loss {:.5}", train_loss.last().unwrap());
+                crate::log_debug!("step {step}: train loss {:.5}", train_loss.last().unwrap());
             }
             if let Some(w) = &mut jsonl {
                 use crate::util::json::{num, obj, s};
@@ -274,6 +287,7 @@ impl Trainer {
             phases,
             final_params: self.params.clone(),
             effective_batch: n * local_batch,
+            agg_par,
         })
     }
 }

@@ -7,7 +7,7 @@
 //! reports final accuracy side by side, plus per-bucket coefficient
 //! dispersion.
 
-use anyhow::Result;
+use crate::util::error::Result;
 use std::sync::Arc;
 
 use super::common;

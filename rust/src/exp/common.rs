@@ -1,6 +1,6 @@
 //! Shared experiment plumbing.
 
-use anyhow::Result;
+use crate::util::error::Result;
 use std::path::PathBuf;
 use std::sync::Arc;
 

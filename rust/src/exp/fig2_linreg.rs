@@ -5,7 +5,7 @@
 //! Paper shape to reproduce: AdaCons ≥ Sum everywhere, with the gap
 //! growing with N and with batch size (richer subspace).
 
-use anyhow::Result;
+use crate::util::error::Result;
 use std::sync::Arc;
 
 use super::common;

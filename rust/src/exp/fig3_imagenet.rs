@@ -3,7 +3,7 @@
 //!
 //! Paper shape: AdaCons converges faster and ends ~1% higher at every N.
 
-use anyhow::Result;
+use crate::util::error::Result;
 use std::sync::Arc;
 
 use super::common;

@@ -4,7 +4,7 @@
 //! Paper shape: AdaCons converges faster with a +0.7%/+0.2% final gap at
 //! 16/32 workers.
 
-use anyhow::Result;
+use crate::util::error::Result;
 use std::sync::Arc;
 
 use super::common;

@@ -5,7 +5,7 @@
 //! Paper shape: AdaCons keeps hitting the AUC target as the effective
 //! batch scales; Sum degrades.
 
-use anyhow::Result;
+use crate::util::error::Result;
 use std::sync::Arc;
 
 use super::common;

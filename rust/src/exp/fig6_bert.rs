@@ -3,7 +3,7 @@
 //! 20%-fewer-iterations setting; reports minimum loss and the
 //! speedup-to-baseline-minimum (the paper: 3% lower loss, 14% speedup).
 
-use anyhow::Result;
+use crate::util::error::Result;
 use std::sync::Arc;
 
 use super::common;

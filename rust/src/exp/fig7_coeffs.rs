@@ -3,7 +3,7 @@
 //! EMA momentum, (c) after the unbiasing normalization — logged from the
 //! detection task like the paper.
 
-use anyhow::Result;
+use crate::util::error::Result;
 use std::sync::Arc;
 
 use super::common;

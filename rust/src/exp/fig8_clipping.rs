@@ -6,7 +6,7 @@
 //! absorbs it (its consensus weights already damp the outlier worker),
 //! flipping the ranking decisively toward AdaCons (paper: +5.26% top-1).
 
-use anyhow::Result;
+use crate::util::error::Result;
 use std::sync::Arc;
 
 use super::common;

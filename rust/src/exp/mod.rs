@@ -17,7 +17,7 @@ pub mod fig8_clipping;
 pub mod table1_timing;
 pub mod table2_ablation;
 
-use anyhow::{bail, Result};
+use crate::util::error::{bail, Result};
 use std::sync::Arc;
 
 use crate::runtime::Runtime;

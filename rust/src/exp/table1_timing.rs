@@ -8,7 +8,7 @@
 //!    compute times), which is what reproduces the 1.04–1.05× slowdown,
 //!    plus the §5.1 remark that 800 Gb/s makes the overhead negligible.
 
-use anyhow::Result;
+use crate::util::error::Result;
 use std::sync::Arc;
 
 use super::common;
@@ -37,6 +37,7 @@ pub fn run(rt: Arc<Runtime>, args: &Args) -> Result<()> {
 
     // --- measured on this host ---
     println!("measured per-iteration wall time on this host ({steps} steps):");
+    let mut engine: Option<crate::parallel::ParPlan> = None;
     for artifact in ["mlp_cls_b32", "det_b32", "dlrm_b64", "tfm_sm_b8"] {
         let mut iter_s = Vec::new();
         for agg in ["mean", "adacons"] {
@@ -52,6 +53,9 @@ pub fn run(rt: Arc<Runtime>, args: &Args) -> Result<()> {
             };
             let res = common::run(rt.clone(), cfg, &format!("{artifact} {agg}"))?;
             iter_s.push(res.wall_iter_s);
+            if res.agg_par.is_some() {
+                engine = res.agg_par;
+            }
         }
         let slowdown = iter_s[1] / iter_s[0];
         println!(
@@ -66,6 +70,13 @@ pub fn run(rt: Arc<Runtime>, args: &Args) -> Result<()> {
             format!("{}", iter_s[1]),
             format!("{slowdown}"),
         ])?;
+    }
+
+    if let Some(p) = engine {
+        println!(
+            "  aggregation engine: {} threads x {} shards ({} elems/shard)",
+            p.threads, p.shards, p.shard_elems
+        );
     }
 
     // --- simulated at the paper's scale ---

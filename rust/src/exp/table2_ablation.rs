@@ -4,7 +4,7 @@
 //!
 //! Paper shape: Sum < AdaCons < Momentum < Normalization ≤ Moment.&Norm.
 
-use anyhow::Result;
+use crate::util::error::Result;
 use std::sync::Arc;
 
 use super::common;

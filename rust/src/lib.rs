@@ -14,6 +14,7 @@ pub mod data;
 pub mod exp;
 pub mod metrics;
 pub mod optim;
+pub mod parallel;
 pub mod runtime;
 pub mod worker;
 pub mod collective;

@@ -9,12 +9,12 @@
 
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
-
 use adacons::config::TrainConfig;
 use adacons::coordinator::{Checkpoint, Trainer};
 use adacons::runtime::Runtime;
 use adacons::util::argparse::Args;
+use adacons::util::error::{Context, Result};
+use adacons::{bail, ensure};
 
 const USAGE: &str = "\
 adacons — Adaptive Consensus Gradients Aggregation (paper reproduction)
@@ -58,14 +58,14 @@ fn run() -> Result<()> {
             cmd_train(&args)
         }
         "figure" => {
-            anyhow::ensure!(!argv.is_empty(), "figure id required (fig2..fig8 | all)");
+            ensure!(!argv.is_empty(), "figure id required (fig2..fig8 | all)");
             let id = argv.remove(0);
             let args = Args::parse(argv, &[]);
             let rt = Arc::new(Runtime::open_default()?);
             adacons::exp::run_figure(rt, &id, &args)
         }
         "table" => {
-            anyhow::ensure!(!argv.is_empty(), "table id required (table1 | table2 | all)");
+            ensure!(!argv.is_empty(), "table id required (table1 | table2 | all)");
             let id = argv.remove(0);
             let args = Args::parse(argv, &[]);
             let rt = Arc::new(Runtime::open_default()?);

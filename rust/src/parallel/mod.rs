@@ -1,0 +1,273 @@
+//! Parallel sharded execution engine for the L3 aggregation hot path.
+//!
+//! Three pieces (see EXPERIMENTS.md §Perf):
+//!
+//! * [`WorkerPool`] — a persistent std-only scoped thread pool; the
+//!   trainer builds it once and reuses it every step.
+//! * [`plan_shards`] — a deterministic column-shard planner aligned to the
+//!   serial kernels' `CHUNK` grid; the plan never depends on the thread
+//!   count, so partial reductions have a fixed shape at any parallelism.
+//! * [`ParallelCtx`] — policy + pool, with the two execution primitives
+//!   every aggregator is built from: [`ParallelCtx::map_reduce`]
+//!   (per-shard partials folded by a fixed-order pairwise tree — bitwise
+//!   reproducible regardless of threads) and
+//!   [`ParallelCtx::for_each_out_shard`] (disjoint output slices, one per
+//!   shard, trivially order-independent).
+
+pub mod plan;
+pub mod pool;
+
+pub use plan::{plan_shards, shard_elems, MAX_SHARDS};
+pub use pool::{Job, WorkerPool};
+
+/// Default minimum shard width: 64K f32 columns = 256 KiB per worker row
+/// slice, big enough that queue traffic is noise next to the member work.
+pub const DEFAULT_MIN_SHARD_ELEMS: usize = 64 * 1024;
+
+/// User-facing knobs for the engine (config surface: `par_threads`,
+/// `par_min_shard_elems`; CLI: `--par-threads`, `--par-min-shard-elems`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParallelPolicy {
+    /// Compute lanes; 0 = auto (all available cores).
+    pub threads: usize,
+    /// Minimum columns per shard (rounded up to the kernel CHUNK).
+    pub min_shard_elems: usize,
+}
+
+impl Default for ParallelPolicy {
+    fn default() -> Self {
+        ParallelPolicy {
+            threads: 0,
+            min_shard_elems: DEFAULT_MIN_SHARD_ELEMS,
+        }
+    }
+}
+
+impl ParallelPolicy {
+    /// Single-lane policy (the default for standalone library calls).
+    pub fn serial() -> Self {
+        ParallelPolicy {
+            threads: 1,
+            ..ParallelPolicy::default()
+        }
+    }
+
+    /// `threads` with 0 resolved to the host's available parallelism.
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        }
+    }
+}
+
+/// What the engine actually chose for a range — recorded in `AggInfo` so
+/// timing harnesses (exp/table1) can report it next to the numbers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParPlan {
+    pub threads: usize,
+    pub shards: usize,
+    pub shard_elems: usize,
+}
+
+/// A policy bound to a live pool: the execution context threaded through
+/// `Aggregator::aggregate_ctx` and the `GradSet` kernels.
+pub struct ParallelCtx {
+    policy: ParallelPolicy,
+    pool: WorkerPool,
+}
+
+impl ParallelCtx {
+    pub fn new(policy: ParallelPolicy) -> ParallelCtx {
+        let pool = WorkerPool::new(policy.resolved_threads());
+        ParallelCtx { policy, pool }
+    }
+
+    /// One-lane context; jobs run inline on the caller. Cheap to build
+    /// (no threads are spawned), used by the serial convenience wrappers.
+    pub fn serial() -> ParallelCtx {
+        ParallelCtx::new(ParallelPolicy::serial())
+    }
+
+    pub fn policy(&self) -> ParallelPolicy {
+        self.policy
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// The shard plan this context produces for `[lo, hi)`.
+    pub fn plan(&self, lo: usize, hi: usize) -> Vec<(usize, usize)> {
+        plan_shards(lo, hi, self.policy.min_shard_elems)
+    }
+
+    /// Plan summary for a `d`-column range (AggInfo reporting).
+    pub fn par_plan(&self, d: usize) -> ParPlan {
+        let shards = self.plan(0, d);
+        ParPlan {
+            threads: self.threads(),
+            shards: shards.len(),
+            shard_elems: shards.first().map(|&(a, b)| b - a).unwrap_or(0),
+        }
+    }
+
+    /// Run pre-built jobs on the pool (blocks until all finish).
+    pub fn run<'scope>(&self, jobs: Vec<Job<'scope>>) {
+        self.pool.run_scope(jobs);
+    }
+
+    /// Map every shard of `[lo, hi)` to a partial value (in parallel),
+    /// then fold the partials with a **fixed-shape pairwise tree** over
+    /// the shard index. The tree shape depends only on the shard plan, so
+    /// the folded result is bitwise-identical at every thread count.
+    /// Returns `None` for an empty range.
+    pub fn map_reduce<T, M, R>(&self, lo: usize, hi: usize, map: M, combine: R) -> Option<T>
+    where
+        T: Send,
+        M: Fn(usize, usize) -> T + Sync,
+        R: Fn(T, T) -> T,
+    {
+        let shards = self.plan(lo, hi);
+        if shards.is_empty() {
+            return None;
+        }
+        if shards.len() == 1 {
+            return Some(map(shards[0].0, shards[0].1));
+        }
+        let mut slots: Vec<Option<T>> = Vec::with_capacity(shards.len());
+        slots.resize_with(shards.len(), || None);
+        {
+            let map_ref = &map;
+            let jobs: Vec<Job<'_>> = slots
+                .iter_mut()
+                .zip(&shards)
+                .map(|(slot, &(a, b))| {
+                    Box::new(move || {
+                        *slot = Some(map_ref(a, b));
+                    }) as Job<'_>
+                })
+                .collect();
+            self.run(jobs);
+        }
+        let mut level: Vec<T> = slots
+            .into_iter()
+            .map(|s| s.expect("pool dropped a shard job"))
+            .collect();
+        while level.len() > 1 {
+            let mut next = Vec::with_capacity(level.len().div_ceil(2));
+            let mut it = level.into_iter();
+            while let Some(a) = it.next() {
+                match it.next() {
+                    Some(b) => next.push(combine(a, b)),
+                    None => next.push(a),
+                }
+            }
+            level = next;
+        }
+        level.pop()
+    }
+
+    /// Run `f(shard_lo, shard_hi, out_slice)` for every shard of
+    /// `[lo, hi)`, handing each job the disjoint slice of `out` its
+    /// columns own (`out[k]` corresponds to column `lo + k`). Column
+    /// outputs are independent, so this is bitwise-identical to the
+    /// serial loop at any thread count.
+    pub fn for_each_out_shard<F>(&self, lo: usize, hi: usize, out: &mut [f32], f: F)
+    where
+        F: Fn(usize, usize, &mut [f32]) + Sync,
+    {
+        assert_eq!(out.len(), hi - lo);
+        let shards = self.plan(lo, hi);
+        if shards.is_empty() {
+            return;
+        }
+        if shards.len() == 1 {
+            f(lo, hi, out);
+            return;
+        }
+        // Interior shards are uniform by construction, so chunks_mut
+        // yields exactly the per-shard output slices, disjointly.
+        let width = shards[0].1 - shards[0].0;
+        let f_ref = &f;
+        let jobs: Vec<Job<'_>> = out
+            .chunks_mut(width)
+            .zip(&shards)
+            .map(|(oc, &(a, b))| {
+                debug_assert_eq!(oc.len(), b - a);
+                Box::new(move || f_ref(a, b, oc)) as Job<'_>
+            })
+            .collect();
+        self.run(jobs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_reduce_is_bitwise_stable_across_thread_counts() {
+        // Sum of ill-conditioned f64 terms: any reduction-order change
+        // shows up in the low bits, so exact equality is a real check.
+        let data: Vec<f64> = (0..40_000)
+            .map(|i| ((i * 2654435761usize % 1000) as f64 - 500.0) * 1e-7 + 1.0)
+            .collect();
+        let sum_with = |threads: usize| {
+            let ctx = ParallelCtx::new(ParallelPolicy {
+                threads,
+                min_shard_elems: 1024,
+            });
+            ctx.map_reduce(
+                0,
+                data.len(),
+                |lo, hi| data[lo..hi].iter().sum::<f64>(),
+                |a, b| a + b,
+            )
+            .unwrap()
+        };
+        let s1 = sum_with(1);
+        assert_eq!(s1.to_bits(), sum_with(2).to_bits());
+        assert_eq!(s1.to_bits(), sum_with(7).to_bits());
+    }
+
+    #[test]
+    fn map_reduce_empty_range() {
+        let ctx = ParallelCtx::serial();
+        assert!(ctx.map_reduce(5, 5, |_, _| 1.0f64, |a, b| a + b).is_none());
+    }
+
+    #[test]
+    fn for_each_out_shard_writes_every_column() {
+        let ctx = ParallelCtx::new(ParallelPolicy {
+            threads: 3,
+            min_shard_elems: 1024,
+        });
+        let (lo, hi) = (100usize, 100 + 5 * 1024 + 321);
+        let mut out = vec![0.0f32; hi - lo];
+        ctx.for_each_out_shard(lo, hi, &mut out, |a, b, oc| {
+            for (k, v) in oc.iter_mut().enumerate() {
+                *v = (a + k) as f32;
+            }
+            assert_eq!(a + oc.len(), b);
+        });
+        for (k, &v) in out.iter().enumerate() {
+            assert_eq!(v, (lo + k) as f32);
+        }
+    }
+
+    #[test]
+    fn par_plan_reports_choices() {
+        let ctx = ParallelCtx::new(ParallelPolicy {
+            threads: 2,
+            min_shard_elems: 2048,
+        });
+        let p = ctx.par_plan(10_000);
+        assert_eq!(p.threads, 2);
+        assert_eq!(p.shard_elems, 2048);
+        assert_eq!(p.shards, 5);
+    }
+}

@@ -1,0 +1,107 @@
+//! Deterministic column-shard planner for the aggregation hot path.
+//!
+//! The plan is a pure function of the column range and the policy's
+//! `min_shard_elems` — **never** of the thread count — so the shape of the
+//! per-shard partial reduction is fixed at any parallelism and results are
+//! bitwise-reproducible whether a range runs on 1 thread or 64 (see
+//! EXPERIMENTS.md §Perf). Shard boundaries fall on the serial kernels'
+//! `CHUNK`-element grid measured from the range start, so every shard job
+//! sees exactly the chunk sequence the single-threaded loop would.
+
+use crate::tensor::ops::CHUNK;
+
+/// Upper bound on shards per range: keeps the fixed-order tree reduction
+/// and the per-shard scratch negligible even at d = 10^9.
+pub const MAX_SHARDS: usize = 256;
+
+/// Uniform shard size (in elements) for a `len`-column range: at least
+/// `min_shard_elems`, rounded up to a multiple of `CHUNK`, grown if needed
+/// so the shard count stays within [`MAX_SHARDS`].
+pub fn shard_elems(len: usize, min_shard_elems: usize) -> usize {
+    let mut elems = min_shard_elems.max(CHUNK).div_ceil(CHUNK) * CHUNK;
+    let floor = len.div_ceil(MAX_SHARDS);
+    if elems < floor {
+        elems = floor.div_ceil(CHUNK) * CHUNK;
+    }
+    elems
+}
+
+/// Split `[lo, hi)` into uniform shards of [`shard_elems`] columns, the
+/// last shard ragged up to `hi`. Returns `(lo, hi)` pairs in column order;
+/// all shards except the last have identical width (callers rely on this
+/// to hand out disjoint `chunks_mut` output slices).
+pub fn plan_shards(lo: usize, hi: usize, min_shard_elems: usize) -> Vec<(usize, usize)> {
+    assert!(lo <= hi);
+    let len = hi - lo;
+    if len == 0 {
+        return Vec::new();
+    }
+    let elems = shard_elems(len, min_shard_elems);
+    let mut shards = Vec::with_capacity(len.div_ceil(elems));
+    let mut start = lo;
+    while start < hi {
+        let end = (start + elems).min(hi);
+        shards.push((start, end));
+        start = end;
+    }
+    shards
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_range_exactly_with_uniform_shards() {
+        for (lo, hi, min) in [
+            (0usize, 10_000usize, 1024usize),
+            (5, 5, 1024),
+            (0, 1023, 1024),
+            (0, 1024, 1024),
+            (100, 100_000, 4096),
+            (0, 3 * 1024 + 17, 1),
+        ] {
+            let shards = plan_shards(lo, hi, min);
+            if lo == hi {
+                assert!(shards.is_empty());
+                continue;
+            }
+            let w = shards[0].1 - shards[0].0;
+            let mut x = lo;
+            for (i, &(a, b)) in shards.iter().enumerate() {
+                assert_eq!(a, x, "gap at shard {i}");
+                assert!(b > a);
+                if i + 1 < shards.len() {
+                    assert_eq!(b - a, w, "non-uniform interior shard {i}");
+                }
+                x = b;
+            }
+            assert_eq!(x, hi);
+            assert!(w % CHUNK == 0 || hi - lo <= w);
+        }
+    }
+
+    #[test]
+    fn plan_is_thread_count_free_and_chunk_aligned() {
+        let shards = plan_shards(0, 1_000_000, 65_536);
+        assert!(shards.len() > 1);
+        for &(a, _) in &shards {
+            assert_eq!(a % CHUNK, 0);
+        }
+        // Same inputs, same plan — nothing else feeds the planner.
+        assert_eq!(shards, plan_shards(0, 1_000_000, 65_536));
+    }
+
+    #[test]
+    fn shard_count_is_capped() {
+        let shards = plan_shards(0, 1_000_000_000, 1);
+        assert!(shards.len() <= MAX_SHARDS, "{}", shards.len());
+    }
+
+    #[test]
+    fn min_shard_rounds_up_to_chunk() {
+        assert_eq!(shard_elems(10_000_000, 1), CHUNK);
+        assert_eq!(shard_elems(10_000_000, CHUNK + 1), 2 * CHUNK);
+        assert_eq!(shard_elems(10_000, 65_536), 65_536);
+    }
+}

@@ -1,0 +1,251 @@
+//! Persistent scoped worker pool (std-only; rayon is not vendored
+//! offline).
+//!
+//! Threads are spawned once and reused across scopes, so the per-step cost
+//! of a parallel region is one mutex-guarded queue push per shard — no
+//! thread spawn on the training hot path. Jobs may borrow stack data:
+//! [`WorkerPool::run_scope`] blocks until every submitted job has finished
+//! (the count is decremented by a drop guard even if a job unwinds), which
+//! is what makes the `'scope → 'static` transmute below sound.
+//!
+//! The calling thread participates in draining the queue, so a pool built
+//! for `threads` compute lanes spawns `threads - 1` OS threads; a
+//! one-thread pool runs every job inline on the caller, giving a serial
+//! path that shares 100% of the code with the parallel one.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A unit of work submitted to the pool. Jobs only need to live as long as
+/// the `run_scope` call that submits them.
+pub type Job<'a> = Box<dyn FnOnce() + Send + 'a>;
+
+struct Queue {
+    jobs: VecDeque<Job<'static>>,
+    shutdown: bool,
+}
+
+struct PoolState {
+    queue: Mutex<Queue>,
+    job_ready: Condvar,
+    pending: Mutex<usize>,
+    all_done: Condvar,
+    job_panicked: AtomicBool,
+}
+
+impl PoolState {
+    fn pop_job(&self) -> Option<Job<'static>> {
+        let mut q = self.queue.lock().unwrap();
+        q.jobs.pop_front()
+    }
+
+    /// Run one job, decrementing `pending` even if the job unwinds.
+    fn run_job(&self, job: Job<'static>) {
+        struct Done<'a>(&'a PoolState);
+        impl Drop for Done<'_> {
+            fn drop(&mut self) {
+                let mut p = self.0.pending.lock().unwrap();
+                *p -= 1;
+                if *p == 0 {
+                    self.0.all_done.notify_all();
+                }
+            }
+        }
+        let _done = Done(self);
+        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)).is_err() {
+            self.job_panicked.store(true, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Persistent pool of `threads - 1` workers plus the calling thread.
+pub struct WorkerPool {
+    threads: usize,
+    state: Arc<PoolState>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Build a pool with `threads` compute lanes (clamped to >= 1).
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let state = Arc::new(PoolState {
+            queue: Mutex::new(Queue {
+                jobs: VecDeque::new(),
+                shutdown: false,
+            }),
+            job_ready: Condvar::new(),
+            pending: Mutex::new(0),
+            all_done: Condvar::new(),
+            job_panicked: AtomicBool::new(false),
+        });
+        let handles = (0..threads - 1)
+            .map(|_| {
+                let state = state.clone();
+                std::thread::spawn(move || loop {
+                    let job = {
+                        let mut q = state.queue.lock().unwrap();
+                        loop {
+                            if let Some(job) = q.jobs.pop_front() {
+                                break Some(job);
+                            }
+                            if q.shutdown {
+                                break None;
+                            }
+                            q = state.job_ready.wait(q).unwrap();
+                        }
+                    };
+                    match job {
+                        Some(job) => state.run_job(job),
+                        None => return,
+                    }
+                })
+            })
+            .collect();
+        WorkerPool {
+            threads,
+            state,
+            handles,
+        }
+    }
+
+    /// Compute lanes this pool was built for (workers + caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `jobs` to completion, in parallel across the pool. Blocks until
+    /// every job has finished, so jobs may borrow data owned by the caller.
+    /// Panics (after draining) if any job panicked on a worker thread.
+    pub fn run_scope<'scope>(&self, jobs: Vec<Job<'scope>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        if self.threads == 1 || jobs.len() == 1 {
+            // Serial fast path: same jobs, same order, no queue traffic.
+            for job in jobs {
+                job();
+            }
+            return;
+        }
+        {
+            let mut p = self.state.pending.lock().unwrap();
+            *p += jobs.len();
+        }
+        {
+            let mut q = self.state.queue.lock().unwrap();
+            for job in jobs {
+                // SAFETY: we block below until `pending` returns to zero,
+                // i.e. every job pushed here has run to completion (the
+                // decrement happens in a drop guard, so it fires even on
+                // unwind). No job can outlive the 'scope borrows it holds,
+                // which is the only obligation the erased lifetime drops.
+                let job: Job<'static> = unsafe {
+                    std::mem::transmute::<Job<'scope>, Job<'static>>(job)
+                };
+                q.jobs.push_back(job);
+            }
+            self.state.job_ready.notify_all();
+        }
+        // The caller is a compute lane too: help drain the queue.
+        while let Some(job) = self.state.pop_job() {
+            self.state.run_job(job);
+        }
+        // Wait for jobs still in flight on worker threads.
+        let mut p = self.state.pending.lock().unwrap();
+        while *p != 0 {
+            p = self.state.all_done.wait(p).unwrap();
+        }
+        drop(p);
+        if self.state.job_panicked.swap(false, Ordering::SeqCst) {
+            panic!("a pool job panicked (see stderr for the worker backtrace)");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.state.queue.lock().unwrap();
+            q.shutdown = true;
+            self.state.job_ready.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn runs_borrowed_jobs_across_scopes() {
+        let pool = WorkerPool::new(4);
+        // Reuse the same pool for many scopes — no spawn per scope.
+        for round in 0..50usize {
+            let mut slots = vec![0usize; 16];
+            let jobs: Vec<Job<'_>> = slots
+                .iter_mut()
+                .enumerate()
+                .map(|(i, slot)| Box::new(move || *slot = i + round) as Job<'_>)
+                .collect();
+            pool.run_scope(jobs);
+            for (i, &v) in slots.iter().enumerate() {
+                assert_eq!(v, i + round);
+            }
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let counter = AtomicUsize::new(0);
+        let jobs: Vec<Job<'_>> = (0..8)
+            .map(|_| {
+                Box::new(|| {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                }) as Job<'_>
+            })
+            .collect();
+        pool.run_scope(jobs);
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn empty_scope_is_a_noop() {
+        let pool = WorkerPool::new(2);
+        pool.run_scope(Vec::new());
+    }
+
+    #[test]
+    fn panicking_job_propagates_without_deadlock() {
+        let pool = WorkerPool::new(4);
+        let jobs: Vec<Job<'_>> = (0..8)
+            .map(|i| {
+                Box::new(move || {
+                    if i == 3 {
+                        panic!("job boom");
+                    }
+                }) as Job<'_>
+            })
+            .collect();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_scope(jobs);
+        }));
+        assert!(r.is_err());
+        // Pool still usable after a failed scope.
+        let mut v = vec![0u32; 4];
+        let jobs: Vec<Job<'_>> = v
+            .iter_mut()
+            .map(|slot| Box::new(move || *slot = 7) as Job<'_>)
+            .collect();
+        pool.run_scope(jobs);
+        assert_eq!(v, vec![7; 4]);
+    }
+}

@@ -4,8 +4,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
-
+use crate::util::error::{bail, Context, Result};
 use crate::util::json::Json;
 
 /// Dtype+shape of one runtime input/output.
@@ -102,7 +101,7 @@ impl Manifest {
         let dir = dir.as_ref().to_path_buf();
         let text = std::fs::read_to_string(dir.join("manifest.json"))
             .with_context(|| format!("reading {dir:?}/manifest.json — run `make artifacts`"))?;
-        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| crate::err!("manifest: {e}"))?;
         let version = j.get("version").as_usize().unwrap_or(0);
         if version != 1 {
             bail!("unsupported manifest version {version}");

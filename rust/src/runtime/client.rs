@@ -1,32 +1,43 @@
 //! The process-wide runtime: one PJRT CPU client + a compile cache.
+//!
+//! The PJRT path needs the `xla` crate, which only exists in toolchain
+//! images that vendor its dependency closure; the default build is
+//! offline/dependency-free, so everything touching `xla` is gated behind
+//! the `pjrt` cargo feature. Without it the manifest still loads (so
+//! `inspect` and the shape-level tooling work) and `load()` reports a
+//! clear error instead of executing.
 
-use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Arc;
 
-use anyhow::Result;
-
 use super::artifact::Manifest;
 use super::executable::Executable;
+use crate::util::error::Result;
 
 /// Owns the PJRT client, the artifact manifest, and compiled executables.
 /// Executables are compiled lazily on first use and shared via `Arc` (the
 /// PJRT CPU client is thread-safe; worker threads share one client, which
 /// matches one-accelerator-per-process semantics without N copies of XLA).
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     pub manifest: Manifest,
-    cache: std::sync::Mutex<BTreeMap<String, Arc<Executable>>>,
+    #[cfg(feature = "pjrt")]
+    cache: std::sync::Mutex<std::collections::BTreeMap<String, Arc<Executable>>>,
 }
 
 impl Runtime {
+    /// Whether this build can actually execute artifacts.
+    pub const HAS_PJRT: bool = cfg!(feature = "pjrt");
+
     pub fn create<P: AsRef<Path>>(artifact_dir: P) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu()?;
         let manifest = Manifest::load(artifact_dir)?;
         Ok(Runtime {
-            client,
+            #[cfg(feature = "pjrt")]
+            client: xla::PjRtClient::cpu()?,
             manifest,
-            cache: std::sync::Mutex::new(BTreeMap::new()),
+            #[cfg(feature = "pjrt")]
+            cache: std::sync::Mutex::new(std::collections::BTreeMap::new()),
         })
     }
 
@@ -36,11 +47,18 @@ impl Runtime {
         Self::create(Manifest::default_dir())
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    pub fn platform(&self) -> String {
+        "none (built without the `pjrt` feature)".to_string()
+    }
+
     /// Get (compiling if needed) the executable for an artifact.
+    #[cfg(feature = "pjrt")]
     pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
         if let Some(e) = self.cache.lock().unwrap().get(name) {
             return Ok(e.clone());
@@ -48,8 +66,21 @@ impl Runtime {
         let spec = self.manifest.get(name)?;
         let t = crate::util::timer::Timer::start();
         let exe = Arc::new(Executable::compile(&self.client, spec)?);
-        log::info!("compiled {} in {:.2}s", name, t.elapsed_s());
+        crate::log_info!("compiled {} in {:.2}s", name, t.elapsed_s());
         self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
         Ok(exe)
+    }
+
+    /// Without PJRT the manifest lookup still validates the name, then we
+    /// refuse to execute.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        let _ = self.manifest.get(name)?;
+        crate::bail!(
+            "artifact {name:?}: this binary was built without the `pjrt` feature, \
+             so it cannot execute compiled artifacts. On a toolchain image that \
+             vendors the xla crate, add `xla = \"0.1.6\"` to rust/Cargo.toml \
+             [dependencies] and rebuild with `--features pjrt`"
+        )
     }
 }

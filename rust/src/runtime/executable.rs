@@ -1,13 +1,19 @@
 //! A compiled artifact: HLO text -> PJRT executable + typed host I/O.
-
-use anyhow::{bail, Context, Result};
+//!
+//! The real implementation needs the `xla` crate and lives behind the
+//! `pjrt` feature; the default offline build compiles a stub that carries
+//! the spec (so every signature downstream typechecks) and errors on
+//! execution. `Runtime::load` refuses to construct the stub, so the error
+//! surfaces at load time with a clear message.
 
 use super::artifact::ArtifactSpec;
 use crate::data::{Array, Batch};
+use crate::util::error::{bail, Context, Result};
 
 /// A compiled, ready-to-run computation.
 pub struct Executable {
     pub spec: ArtifactSpec,
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
 }
 
@@ -18,6 +24,7 @@ pub struct Executable {
 /// xla_extension leaks the converted input buffers (~input-size bytes per
 /// call, measured in examples/_leaktest.rs history — see EXPERIMENTS.md
 /// §Perf), while the host-buffer path is leak-free and skips one copy.
+#[cfg(feature = "pjrt")]
 fn buffer_from_array(client: &xla::PjRtClient, a: &Array) -> Result<xla::PjRtBuffer> {
     let b = match a {
         Array::F32(data, shape) => client.buffer_from_host_buffer(data, shape, None)?,
@@ -26,6 +33,7 @@ fn buffer_from_array(client: &xla::PjRtClient, a: &Array) -> Result<xla::PjRtBuf
     Ok(b)
 }
 
+#[cfg(feature = "pjrt")]
 fn array_from_literal(lit: &xla::Literal, spec: &crate::runtime::IoSpec) -> Result<Array> {
     let shape = spec.shape.clone();
     match spec.dtype.as_str() {
@@ -35,6 +43,7 @@ fn array_from_literal(lit: &xla::Literal, spec: &crate::runtime::IoSpec) -> Resu
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl Executable {
     /// Access the underlying PJRT executable (benches / probes).
     pub fn raw(&self) -> &xla::PjRtLoadedExecutable {
@@ -112,7 +121,20 @@ impl Executable {
             .map(|(lit, spec)| array_from_literal(lit, spec))
             .collect()
     }
+}
 
+#[cfg(not(feature = "pjrt"))]
+impl Executable {
+    /// Stub: execution requires the `pjrt` feature.
+    pub fn run(&self, _params: Option<&[f32]>, _batch: &Batch) -> Result<Vec<Array>> {
+        bail!(
+            "{}: built without the `pjrt` feature; cannot execute",
+            self.spec.name
+        )
+    }
+}
+
+impl Executable {
     /// Convenience for train artifacts: returns (loss, grads).
     pub fn run_train(&self, params: &[f32], batch: &Batch) -> Result<(f32, Vec<f32>)> {
         let outs = self.run(Some(params), batch)?;

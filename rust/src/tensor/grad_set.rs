@@ -5,8 +5,19 @@
 //! through L1/L2 cache: for each chunk we compute the chunk mean and
 //! immediately the per-row partial dots, so `P` is read **once** per
 //! statistics pass instead of twice (mean pass + dot pass).
+//!
+//! Every hot-path kernel comes in two forms: a `_ctx` variant that fans
+//! column shards out across a [`ParallelCtx`]'s worker pool, and a serial
+//! convenience wrapper that runs the same sharded code inline. The shard
+//! plan and the fixed-order tree reduction of `(dots, sqn)` partials
+//! depend only on the range and the policy's `min_shard_elems` — never on
+//! the thread count — so results are bitwise-identical at any parallelism
+//! (covered by `tests/parallel_equivalence.rs`).
 
 use super::ops;
+use crate::parallel::ParallelCtx;
+
+pub use crate::tensor::ops::CHUNK;
 
 /// Row-major (N, d) gradient matrix.
 #[derive(Debug, Clone)]
@@ -25,11 +36,40 @@ pub struct ConsensusStats {
     pub sqn: Vec<f64>,
 }
 
-/// Column chunk size for the fused statistics pass. Swept in the §Perf
-/// pass (EXPERIMENTS.md): 1024 f32 = 4 KiB/row keeps a worker row chunk +
-/// the mean chunk L1-resident even at N = 32 (2048 ties at N = 8 but is
-/// ~11% slower at N = 32; 8192 spills L1 and loses ~25%).
-const CHUNK: usize = 1024;
+/// One shard of the fused statistics pass: per column chunk, build the
+/// chunk mean then accumulate each row's partial dot and squared norm.
+/// Reads the shard's columns of the matrix exactly once.
+fn stats_shard(
+    data: &[f32],
+    n: usize,
+    d: usize,
+    lo: usize,
+    hi: usize,
+    dots: &mut [f64],
+    sqn: &mut [f64],
+) {
+    let mut mean_chunk = vec![0.0f32; CHUNK.min((hi - lo).max(1))];
+    let inv_n = 1.0 / n as f32;
+    let mut start = lo;
+    while start < hi {
+        let end = (start + CHUNK).min(hi);
+        let w = end - start;
+        let mc = &mut mean_chunk[..w];
+        ops::fill(mc, 0.0);
+        for i in 0..n {
+            let row = &data[i * d + start..i * d + end];
+            ops::axpy(1.0, row, mc);
+        }
+        ops::scale(inv_n, mc);
+        for i in 0..n {
+            let row = &data[i * d + start..i * d + end];
+            let (dt, sq) = ops::dot_sqnorm_fused(row, mc);
+            dots[i] += dt;
+            sqn[i] += sq;
+        }
+        start = end;
+    }
+}
 
 impl GradSet {
     pub fn zeros(n: usize, d: usize) -> Self {
@@ -76,107 +116,130 @@ impl GradSet {
 
     /// Mean gradient into `out` (the Sum/averaging baseline's entire job).
     pub fn mean_into(&self, out: &mut [f32]) {
-        assert_eq!(out.len(), self.d);
-        // Chunk over columns so the accumulator stays in L1 instead of
-        // streaming the whole d-vector through memory N times (§Perf).
-        let inv_n = 1.0 / self.n as f32;
-        let mut start = 0;
-        while start < self.d {
-            let end = (start + CHUNK).min(self.d);
-            let oc = &mut out[start..end];
-            ops::fill(oc, 0.0);
-            for i in 0..self.n {
-                ops::axpy(1.0, &self.data[i * self.d + start..i * self.d + end], oc);
-            }
-            ops::scale(inv_n, oc);
-            start = end;
-        }
+        self.mean_into_ctx(out, &ParallelCtx::serial());
     }
 
-    /// Fused single-pass consensus statistics (Eq. 7): per column chunk,
-    /// build the chunk mean then accumulate each row's partial dot and
-    /// squared norm. Reads the matrix exactly once.
-    pub fn consensus_stats(&self) -> ConsensusStats {
-        let mut dots = vec![0.0f64; self.n];
-        let mut sqn = vec![0.0f64; self.n];
-        let mut mean_chunk = vec![0.0f32; CHUNK.min(self.d.max(1))];
+    /// Sharded mean: each shard owns a disjoint slice of `out`, chunked so
+    /// the accumulator stays in L1 instead of streaming the whole d-vector
+    /// through memory N times (§Perf).
+    pub fn mean_into_ctx(&self, out: &mut [f32], ctx: &ParallelCtx) {
+        assert_eq!(out.len(), self.d);
         let inv_n = 1.0 / self.n as f32;
-        let mut start = 0;
-        while start < self.d {
-            let end = (start + CHUNK).min(self.d);
-            let w = end - start;
-            let mc = &mut mean_chunk[..w];
-            ops::fill(mc, 0.0);
-            for i in 0..self.n {
-                let row = &self.data[i * self.d + start..i * self.d + end];
-                ops::axpy(1.0, row, mc);
+        let (data, n, d) = (&self.data, self.n, self.d);
+        ctx.for_each_out_shard(0, d, out, |slo, shi, oslice| {
+            let mut start = slo;
+            while start < shi {
+                let end = (start + CHUNK).min(shi);
+                let oc = &mut oslice[start - slo..end - slo];
+                ops::fill(oc, 0.0);
+                for i in 0..n {
+                    ops::axpy(1.0, &data[i * d + start..i * d + end], oc);
+                }
+                ops::scale(inv_n, oc);
+                start = end;
             }
-            ops::scale(inv_n, mc);
-            for i in 0..self.n {
-                let row = &self.data[i * self.d + start..i * self.d + end];
-                let (dt, sq) = ops::dot_sqnorm_fused(row, mc);
-                dots[i] += dt;
-                sqn[i] += sq;
-            }
-            start = end;
-        }
-        ConsensusStats { dots, sqn }
+        });
+    }
+
+    /// Fused single-pass consensus statistics (Eq. 7); serial wrapper.
+    pub fn consensus_stats(&self) -> ConsensusStats {
+        self.consensus_stats_range_ctx(0, self.d, &ParallelCtx::serial())
+    }
+
+    /// Consensus statistics on the given execution context.
+    pub fn consensus_stats_ctx(&self, ctx: &ParallelCtx) -> ConsensusStats {
+        self.consensus_stats_range_ctx(0, self.d, ctx)
     }
 
     /// Consensus statistics restricted to a column range (layer-wise /
-    /// bucketed aggregation).
+    /// bucketed aggregation); serial wrapper.
     pub fn consensus_stats_range(&self, lo: usize, hi: usize) -> ConsensusStats {
+        self.consensus_stats_range_ctx(lo, hi, &ParallelCtx::serial())
+    }
+
+    /// Sharded consensus statistics over `[lo, hi)`: per-shard `(dots,
+    /// sqn)` partials computed in parallel, folded by the context's
+    /// fixed-order tree reduction (bitwise-reproducible at any thread
+    /// count).
+    pub fn consensus_stats_range_ctx(
+        &self,
+        lo: usize,
+        hi: usize,
+        ctx: &ParallelCtx,
+    ) -> ConsensusStats {
         assert!(lo <= hi && hi <= self.d);
-        let mut dots = vec![0.0f64; self.n];
-        let mut sqn = vec![0.0f64; self.n];
-        let mut mean_chunk = vec![0.0f32; CHUNK.min((hi - lo).max(1))];
-        let inv_n = 1.0 / self.n as f32;
-        let mut start = lo;
-        while start < hi {
-            let end = (start + CHUNK).min(hi);
-            let w = end - start;
-            let mc = &mut mean_chunk[..w];
-            ops::fill(mc, 0.0);
-            for i in 0..self.n {
-                let row = &self.data[i * self.d + start..i * self.d + end];
-                ops::axpy(1.0, row, mc);
-            }
-            ops::scale(inv_n, mc);
-            for i in 0..self.n {
-                let row = &self.data[i * self.d + start..i * self.d + end];
-                let (dt, sq) = ops::dot_sqnorm_fused(row, mc);
-                dots[i] += dt;
-                sqn[i] += sq;
-            }
-            start = end;
+        let (data, n, d) = (&self.data, self.n, self.d);
+        let folded = ctx.map_reduce(
+            lo,
+            hi,
+            |slo, shi| {
+                let mut dots = vec![0.0f64; n];
+                let mut sqn = vec![0.0f64; n];
+                stats_shard(data, n, d, slo, shi, &mut dots, &mut sqn);
+                (dots, sqn)
+            },
+            |mut a, b| {
+                for (x, y) in a.0.iter_mut().zip(&b.0) {
+                    *x += *y;
+                }
+                for (x, y) in a.1.iter_mut().zip(&b.1) {
+                    *x += *y;
+                }
+                a
+            },
+        );
+        match folded {
+            Some((dots, sqn)) => ConsensusStats { dots, sqn },
+            None => ConsensusStats {
+                dots: vec![0.0; n],
+                sqn: vec![0.0; n],
+            },
         }
-        ConsensusStats { dots, sqn }
     }
 
     /// `out = sum_i gamma[i] * g_i` (the Eq. 12 re-projection).
     pub fn weighted_sum_into(&self, gamma: &[f32], out: &mut [f32]) {
-        assert_eq!(gamma.len(), self.n);
-        assert_eq!(out.len(), self.d);
         self.weighted_sum_range_into(gamma, 0, self.d, out);
     }
 
-    /// Weighted sum over a column range.
+    /// Weighted sum on the given execution context.
+    pub fn weighted_sum_into_ctx(&self, gamma: &[f32], out: &mut [f32], ctx: &ParallelCtx) {
+        self.weighted_sum_range_into_ctx(gamma, 0, self.d, out, ctx);
+    }
+
+    /// Weighted sum over a column range; serial wrapper.
     pub fn weighted_sum_range_into(&self, gamma: &[f32], lo: usize, hi: usize, out: &mut [f32]) {
+        self.weighted_sum_range_into_ctx(gamma, lo, hi, out, &ParallelCtx::serial());
+    }
+
+    /// Sharded weighted sum: each shard owns a disjoint slice of `out`,
+    /// chunked so the out-chunk stays in L1 across the N row passes
+    /// (§Perf — see EXPERIMENTS.md).
+    pub fn weighted_sum_range_into_ctx(
+        &self,
+        gamma: &[f32],
+        lo: usize,
+        hi: usize,
+        out: &mut [f32],
+        ctx: &ParallelCtx,
+    ) {
         assert_eq!(gamma.len(), self.n);
         assert_eq!(out.len(), hi - lo);
-        // Chunked accumulation: the out-chunk stays in L1 across the N
-        // row passes (§Perf — see EXPERIMENTS.md).
-        let mut start = lo;
-        while start < hi {
-            let end = (start + CHUNK).min(hi);
-            let oc = &mut out[start - lo..end - lo];
-            ops::fill(oc, 0.0);
-            for i in 0..self.n {
-                let row = &self.data[i * self.d + start..i * self.d + end];
-                ops::axpy(gamma[i], row, oc);
+        assert!(lo <= hi && hi <= self.d);
+        let (data, n, d) = (&self.data, self.n, self.d);
+        ctx.for_each_out_shard(lo, hi, out, |slo, shi, oslice| {
+            let mut start = slo;
+            while start < shi {
+                let end = (start + CHUNK).min(shi);
+                let oc = &mut oslice[start - slo..end - slo];
+                ops::fill(oc, 0.0);
+                for i in 0..n {
+                    let row = &data[i * d + start..i * d + end];
+                    ops::axpy(gamma[i], row, oc);
+                }
+                start = end;
             }
-            start = end;
-        }
+        });
     }
 
     /// Full N x N Gram matrix (preconditioner perspective, Eq. 9); used by
@@ -197,6 +260,7 @@ impl GradSet {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::parallel::{ParallelCtx, ParallelPolicy};
     use crate::util::prng::Rng;
 
     fn random_set(n: usize, d: usize, seed: u64) -> GradSet {
@@ -255,6 +319,34 @@ mod tests {
         for j in 0..128 {
             assert!((out[j] - mean[j]).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn parallel_ctx_kernels_match_serial_wrappers() {
+        // Fine shards + several threads vs the serial wrappers; the
+        // dedicated bitwise suite lives in tests/parallel_equivalence.rs,
+        // this is the in-module smoke.
+        let gs = random_set(5, 3 * CHUNK + 123, 7);
+        let ctx = ParallelCtx::new(ParallelPolicy {
+            threads: 4,
+            min_shard_elems: CHUNK,
+        });
+        let st_par = gs.consensus_stats_ctx(&ctx);
+        let st_ser = gs.consensus_stats_range_ctx(0, gs.d(), &ParallelCtx::new(ParallelPolicy {
+            threads: 1,
+            min_shard_elems: CHUNK,
+        }));
+        assert_eq!(st_par.dots, st_ser.dots);
+        assert_eq!(st_par.sqn, st_ser.sqn);
+        let mut a = vec![0.0f32; gs.d()];
+        let mut b = vec![0.0f32; gs.d()];
+        gs.mean_into(&mut a);
+        gs.mean_into_ctx(&mut b, &ctx);
+        assert_eq!(a, b);
+        let gamma: Vec<f32> = (0..5).map(|i| 0.1 + 0.05 * i as f32).collect();
+        gs.weighted_sum_into(&gamma, &mut a);
+        gs.weighted_sum_into_ctx(&gamma, &mut b, &ctx);
+        assert_eq!(a, b);
     }
 
     #[test]

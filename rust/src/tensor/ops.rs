@@ -3,6 +3,14 @@
 //! over `f32` with `f64` block accumulators (accuracy over 10^8-element
 //! gradients) — see EXPERIMENTS.md §Perf for the measured numbers.
 
+/// Column chunk size for the fused statistics passes. Swept in the §Perf
+/// pass (EXPERIMENTS.md): 1024 f32 = 4 KiB/row keeps a worker row chunk +
+/// the mean chunk L1-resident even at N = 32 (2048 ties at N = 8 but is
+/// ~11% slower at N = 32; 8192 spills L1 and loses ~25%). The parallel
+/// shard planner (`parallel::plan_shards`) aligns shard boundaries to this
+/// grid so sharded kernels see the same chunk sequence as the serial loop.
+pub const CHUNK: usize = 1024;
+
 /// Dot product with f64 accumulation.
 pub fn dot(a: &[f32], b: &[f32]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
@@ -63,6 +71,39 @@ pub fn dot_sqnorm_fused(a: &[f32], b: &[f32]) -> (f64, f64) {
     (
         dot_acc.iter().map(|&x| x as f64).sum::<f64>() + dot_tail,
         sq_acc.iter().map(|&x| x as f64).sum::<f64>() + sq_tail,
+    )
+}
+
+/// Fused `(<a,b>, <a,a>, <b,b>)` with f64 accumulation — one read of each
+/// operand for the Adasum pairwise rule (vs three separate passes).
+pub fn dot3(a: &[f32], b: &[f32]) -> (f64, f64, f64) {
+    debug_assert_eq!(a.len(), b.len());
+    let mut ab = [0.0f64; 4];
+    let mut aa = [0.0f64; 4];
+    let mut bb = [0.0f64; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        for l in 0..4 {
+            let av = a[j + l] as f64;
+            let bv = b[j + l] as f64;
+            ab[l] += av * bv;
+            aa[l] += av * av;
+            bb[l] += bv * bv;
+        }
+    }
+    let (mut ab_t, mut aa_t, mut bb_t) = (0.0f64, 0.0f64, 0.0f64);
+    for j in chunks * 4..a.len() {
+        let av = a[j] as f64;
+        let bv = b[j] as f64;
+        ab_t += av * bv;
+        aa_t += av * av;
+        bb_t += bv * bv;
+    }
+    (
+        ab[0] + ab[1] + ab[2] + ab[3] + ab_t,
+        aa[0] + aa[1] + aa[2] + aa[3] + aa_t,
+        bb[0] + bb[1] + bb[2] + bb[3] + bb_t,
     )
 }
 
@@ -129,6 +170,16 @@ mod tests {
             .map(|(x, y)| *x as f64 * *y as f64)
             .sum();
         assert!((dot(&a, &b) - naive).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dot3_matches_separate_passes() {
+        let a: Vec<f32> = (0..203).map(|i| (i as f32) * 0.05 - 4.0).collect();
+        let b: Vec<f32> = (0..203).map(|i| 2.0 - (i as f32) * 0.02).collect();
+        let (ab, aa, bb) = dot3(&a, &b);
+        assert!((ab - dot(&a, &b)).abs() < 1e-9);
+        assert!((aa - sqnorm(&a)).abs() < 1e-9);
+        assert!((bb - sqnorm(&b)).abs() < 1e-9);
     }
 
     #[test]

@@ -13,13 +13,24 @@ pub struct Args {
     pub flags: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ArgError {
-    #[error("missing required option --{0}")]
     Missing(String),
-    #[error("option --{0}: cannot parse {1:?} as {2}")]
     Parse(String, String, &'static str),
 }
+
+impl std::fmt::Display for ArgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArgError::Missing(name) => write!(f, "missing required option --{name}"),
+            ArgError::Parse(name, value, ty) => {
+                write!(f, "option --{name}: cannot parse {value:?} as {ty}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ArgError {}
 
 impl Args {
     /// Parse raw argv items (excluding the program/subcommand names).

@@ -1,0 +1,190 @@
+//! Minimal error plumbing (anyhow is not vendored offline): a single
+//! string-chained [`Error`], a defaulted [`Result`] alias, a [`Context`]
+//! extension trait for `Result`/`Option`, and `bail!`/`ensure!`/`err!`
+//! macros. The surface deliberately mirrors the anyhow idioms the codebase
+//! already uses so call sites read identically.
+
+use std::fmt;
+
+/// A boxed-free, message-carrying error. Context layers are flattened into
+/// the message front-to-back (`"outer: inner"`), which is exactly what the
+/// CLI prints.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error { msg: m.into() }
+    }
+
+    fn wrap(self, ctx: impl fmt::Display) -> Error {
+        Error {
+            msg: format!("{ctx}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<crate::util::json::JsonError> for Error {
+    fn from(e: crate::util::json::JsonError) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<crate::util::argparse::ArgError> for Error {
+    fn from(e: crate::util::argparse::ArgError) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<String> for Error {
+    fn from(m: String) -> Error {
+        Error::msg(m)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(m: &str) -> Error {
+        Error::msg(m)
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// `Result` defaulted to [`Error`], anyhow-style.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(...)` / `.with_context(|| ...)` for results and options.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e.to_string()).wrap(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e.to_string()).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Build an [`Error`] from a format string (anyhow's `anyhow!`).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return an error built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Early-return an error unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+// Make the macros importable alongside the types:
+// `use crate::util::error::{bail, Context, Result};`.
+pub use crate::{bail, ensure, err};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        bail!("broken {}", 42)
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "broken 42");
+        assert_eq!(format!("{e:#}"), "broken 42");
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        fn check(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert_eq!(check(30).unwrap_err().to_string(), "x too big: 30");
+    }
+
+    #[test]
+    fn context_chains_front_to_back() {
+        let r: Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "gone",
+        ));
+        let e = r.context("opening file").unwrap_err();
+        assert!(e.to_string().starts_with("opening file: "), "{e}");
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(e.to_string(), "missing thing");
+    }
+
+    #[test]
+    fn io_error_converts_via_question_mark() {
+        fn read_missing() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file/xyz")?;
+            Ok(s)
+        }
+        assert!(read_missing().is_err());
+    }
+
+    #[test]
+    fn err_macro_builds_error() {
+        let e = err!("code {}", 7);
+        assert_eq!(e.to_string(), "code 7");
+    }
+}

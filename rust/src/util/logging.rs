@@ -1,52 +1,122 @@
-//! Minimal `log`-crate backend writing to stderr with a level filter set
-//! from `ADACONS_LOG` (error|warn|info|debug|trace; default info).
+//! Std-only leveled logging to stderr (the `log` crate is not vendored
+//! offline). A process-global level filter is set from `ADACONS_LOG`
+//! (error|warn|info|debug|trace; default info); the `log_error!` /
+//! `log_warn!` / `log_info!` / `log_debug!` macros are the call surface.
 
-use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::atomic::{AtomicUsize, Ordering};
 
-struct StderrLogger;
-
-impl log::Log for StderrLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= log::max_level()
-    }
-
-    fn log(&self, record: &Record) {
-        if self.enabled(record.metadata()) {
-            let tag = match record.level() {
-                Level::Error => "E",
-                Level::Warn => "W",
-                Level::Info => "I",
-                Level::Debug => "D",
-                Level::Trace => "T",
-            };
-            eprintln!("[{tag} {}] {}", record.target(), record.args());
-        }
-    }
-
-    fn flush(&self) {}
+/// Log severity, ordered from quietest to noisiest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
 }
 
-static LOGGER: StderrLogger = StderrLogger;
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "E",
+            Level::Warn => "W",
+            Level::Info => "I",
+            Level::Debug => "D",
+            Level::Trace => "T",
+        }
+    }
+}
 
-/// Install the logger (idempotent).
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(Level::Info as usize);
+
+/// Install the level filter from the environment (idempotent).
 pub fn init() {
     let level = match std::env::var("ADACONS_LOG").as_deref() {
-        Ok("error") => LevelFilter::Error,
-        Ok("warn") => LevelFilter::Warn,
-        Ok("debug") => LevelFilter::Debug,
-        Ok("trace") => LevelFilter::Trace,
-        _ => LevelFilter::Info,
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
     };
-    let _ = log::set_logger(&LOGGER);
-    log::set_max_level(level);
+    set_max_level(level);
+}
+
+pub fn set_max_level(level: Level) {
+    MAX_LEVEL.store(level as usize, Ordering::Relaxed);
+}
+
+pub fn enabled(level: Level) -> bool {
+    level as usize <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one record; the macros below are the intended entry point.
+pub fn log(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("[{} {}] {}", level.tag(), target, args);
+    }
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Error,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Warn,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Info,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Debug,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
+    // One test body: the level filter is process-global, and parallel
+    // test threads mutating it would race.
     #[test]
-    fn init_is_idempotent() {
-        super::init();
-        super::init();
-        log::info!("logging smoke test");
+    fn init_and_level_filter() {
+        init();
+        init();
+        crate::log_info!("logging smoke test");
+        set_max_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_max_level(Level::Info);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
     }
 }

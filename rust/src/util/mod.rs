@@ -4,6 +4,7 @@
 //! this project needs).
 
 pub mod argparse;
+pub mod error;
 pub mod json;
 pub mod logging;
 pub mod prng;

@@ -9,10 +9,9 @@
 //!
 //! [`SimClock`]: crate::collective::SimClock
 
-use anyhow::Result;
-
 use crate::data::{Batch, DataGen, GradInjector};
 use crate::runtime::Executable;
+use crate::util::error::Result;
 use crate::util::prng::Rng;
 
 pub struct Worker {

@@ -8,6 +8,9 @@ use adacons::runtime::{Manifest, Runtime};
 use adacons::util::argparse::Args;
 
 fn runtime() -> Option<Arc<Runtime>> {
+    if !Runtime::HAS_PJRT {
+        return None;
+    }
     let dir = Manifest::default_dir();
     if dir.join("manifest.json").exists() {
         Some(Arc::new(Runtime::create(dir).unwrap()))

@@ -1,0 +1,162 @@
+//! Parallel == serial equivalence for the sharded aggregation engine.
+//!
+//! The shard plan and the fixed-order tree reduction depend only on the
+//! column range and `min_shard_elems` — never on the thread count — so
+//! every kernel must produce **bitwise-identical** results at 1, 2, and
+//! `nproc` threads, including ragged shard tails (d not a multiple of
+//! CHUNK) and the bucketed `consensus_stats_range` path. `mean_into` /
+//! `weighted_sum_range_into` outputs are per-column independent, so they
+//! must additionally be bitwise-stable across *different shard plans*.
+
+use adacons::aggregation::{self, Aggregator};
+use adacons::parallel::{ParallelCtx, ParallelPolicy};
+use adacons::tensor::{grad_set::CHUNK, Buckets, GradSet};
+use adacons::util::proptest::run_cases;
+
+fn nproc() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+fn ctx(threads: usize, min_shard_elems: usize) -> ParallelCtx {
+    ParallelCtx::new(ParallelPolicy {
+        threads,
+        min_shard_elems,
+    })
+}
+
+/// Thread counts every property is checked at.
+fn thread_grid() -> Vec<usize> {
+    let mut t = vec![1, 2, nproc()];
+    t.sort_unstable();
+    t.dedup();
+    t
+}
+
+/// Dimensions that exercise: d < CHUNK, d == CHUNK, ragged tails, many
+/// shards.
+const DIMS: &[usize] = &[17, 1000, 1024, 3 * 1024 + 17, 50_000];
+
+fn random_set(n: usize, d: usize, seed: u64) -> GradSet {
+    let mut rng = adacons::util::prng::Rng::new(seed);
+    let rows: Vec<Vec<f32>> = (0..n)
+        .map(|_| (0..d).map(|_| rng.normal_f32(1.0)).collect())
+        .collect();
+    GradSet::from_rows(&rows)
+}
+
+#[test]
+fn consensus_stats_bitwise_equal_at_every_thread_count() {
+    for (k, &d) in DIMS.iter().enumerate() {
+        let gs = random_set(5, d, 100 + k as u64);
+        let base = gs.consensus_stats_ctx(&ctx(1, CHUNK));
+        for t in thread_grid() {
+            let st = gs.consensus_stats_ctx(&ctx(t, CHUNK));
+            assert_eq!(base.dots, st.dots, "dots differ at d={d}, t={t}");
+            assert_eq!(base.sqn, st.sqn, "sqn differ at d={d}, t={t}");
+        }
+    }
+}
+
+#[test]
+fn default_policy_stats_match_serial_wrapper_bitwise() {
+    // The trainer's default context (auto threads, default min shard) must
+    // reproduce the library serial wrappers exactly.
+    let gs = random_set(8, 200_000, 7);
+    let serial = gs.consensus_stats();
+    let auto = gs.consensus_stats_ctx(&ParallelCtx::new(ParallelPolicy::default()));
+    assert_eq!(serial.dots, auto.dots);
+    assert_eq!(serial.sqn, auto.sqn);
+}
+
+#[test]
+fn prop_range_stats_bitwise_equal_across_threads() {
+    run_cases(40, 0xE1, |g| {
+        let n = g.usize_in(2, 9);
+        let d = g.usize_in(8, 20_000);
+        let gs = random_set(n, d, g.case_seed);
+        // Unaligned bucket bounds (the layer-wise path).
+        let lo = g.usize_in(0, d - 1);
+        let hi = g.usize_in(lo + 1, d);
+        let min_shard = [CHUNK, 2 * CHUNK, 3000][g.usize_in(0, 2)];
+        let base = gs.consensus_stats_range_ctx(lo, hi, &ctx(1, min_shard));
+        for t in thread_grid() {
+            let st = gs.consensus_stats_range_ctx(lo, hi, &ctx(t, min_shard));
+            assert_eq!(base.dots, st.dots, "lo={lo} hi={hi} t={t}");
+            assert_eq!(base.sqn, st.sqn, "lo={lo} hi={hi} t={t}");
+        }
+    });
+}
+
+#[test]
+fn prop_mean_and_weighted_sum_bitwise_equal_across_threads_and_plans() {
+    run_cases(40, 0xE2, |g| {
+        let n = g.usize_in(2, 8);
+        let d = g.usize_in(4, 20_000);
+        let gs = random_set(n, d, g.case_seed);
+        let gamma: Vec<f32> = (0..n).map(|_| g.f64_in(-0.5, 1.5) as f32).collect();
+        let lo = g.usize_in(0, d - 1);
+        let hi = g.usize_in(lo + 1, d);
+        let mut base_mean = vec![0.0f32; d];
+        gs.mean_into(&mut base_mean);
+        let mut base_ws = vec![0.0f32; hi - lo];
+        gs.weighted_sum_range_into(&gamma, lo, hi, &mut base_ws);
+        // Column outputs are independent: any thread count AND any shard
+        // plan must reproduce the serial wrapper bit-for-bit.
+        for t in thread_grid() {
+            for min_shard in [CHUNK, 4096] {
+                let c = ctx(t, min_shard);
+                let mut m = vec![0.0f32; d];
+                gs.mean_into_ctx(&mut m, &c);
+                assert_eq!(base_mean, m, "mean t={t} min_shard={min_shard}");
+                let mut w = vec![0.0f32; hi - lo];
+                gs.weighted_sum_range_into_ctx(&gamma, lo, hi, &mut w, &c);
+                assert_eq!(base_ws, w, "wsum t={t} min_shard={min_shard}");
+            }
+        }
+    });
+}
+
+#[test]
+fn all_aggregators_bitwise_equal_across_thread_counts() {
+    for &d in &[3 * 1024 + 17, 10_000] {
+        let n = 6;
+        let gs = random_set(n, d, 0xAB);
+        let buckets = Buckets::single(d);
+        for name in aggregation::ALL_NAMES {
+            let mut base_out = vec![0.0f32; d];
+            let mut base_agg = aggregation::by_name(name, n).unwrap();
+            let base_info = base_agg.aggregate_ctx(&gs, &buckets, &mut base_out, &ctx(1, CHUNK));
+            for t in thread_grid() {
+                let mut out = vec![0.0f32; d];
+                let mut agg = aggregation::by_name(name, n).unwrap();
+                let info = agg.aggregate_ctx(&gs, &buckets, &mut out, &ctx(t, CHUNK));
+                assert_eq!(base_out, out, "{name} output differs at t={t}, d={d}");
+                assert_eq!(base_info.gammas, info.gammas, "{name} gammas at t={t}");
+                assert_eq!(
+                    info.par.map(|p| (p.shards, p.shard_elems)),
+                    base_info.par.map(|p| (p.shards, p.shard_elems)),
+                    "{name} shard plan must not depend on threads"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn bucketed_adacons_bitwise_equal_across_thread_counts() {
+    let (n, d) = (5, 7 * 1024 + 311);
+    let gs = random_set(n, d, 0xCD);
+    // Bucket cap chosen to be CHUNK-unaligned on purpose.
+    let buckets = Buckets::fixed(d, 2500);
+    let mut base_out = vec![0.0f32; d];
+    aggregation::by_name("adacons", n)
+        .unwrap()
+        .aggregate_ctx(&gs, &buckets, &mut base_out, &ctx(1, CHUNK));
+    for t in thread_grid() {
+        let mut out = vec![0.0f32; d];
+        aggregation::by_name("adacons", n)
+            .unwrap()
+            .aggregate_ctx(&gs, &buckets, &mut out, &ctx(t, CHUNK));
+        assert_eq!(base_out, out, "bucketed adacons differs at t={t}");
+    }
+}

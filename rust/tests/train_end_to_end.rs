@@ -12,6 +12,10 @@ use adacons::optim::Schedule;
 use adacons::runtime::{Manifest, Runtime};
 
 fn runtime() -> Option<Arc<Runtime>> {
+    if !Runtime::HAS_PJRT {
+        eprintln!("built without the pjrt feature; skipping");
+        return None;
+    }
     let dir = Manifest::default_dir();
     if dir.join("manifest.json").exists() {
         Some(Arc::new(Runtime::create(dir).unwrap()))

@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 verify + formatting + a smoke-mode bench sweep that
+# validates BENCH_aggregation.json end to end.
+#
+#   scripts/ci.sh              # everything
+#   scripts/ci.sh --no-bench   # skip the bench smoke (e.g. constrained CI)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+if [[ "${1:-}" != "--no-bench" ]]; then
+  echo "== smoke bench (budget 0.05s/case) =="
+  cargo run --release --bin bench_aggregation -- --smoke --budget 0.05 --out BENCH_aggregation.json
+  echo "== validate BENCH_aggregation.json =="
+  cargo run --release --bin bench_aggregation -- --check BENCH_aggregation.json
+fi
+
+echo "ci.sh: all green"
