@@ -19,7 +19,7 @@
 //!    `γ_i = α_i / ||g_i||` (the second O(d) all-reduce).
 
 use super::stats::CoeffStages;
-use super::{AggInfo, Aggregator};
+use super::{per_bucket_payload_ops, AggInfo, Aggregator, BucketWork, BucketedAggregator};
 use crate::collective::CollectiveKind;
 use crate::parallel::ParallelCtx;
 use crate::tensor::{Buckets, GradSet};
@@ -200,28 +200,40 @@ impl AdaCons {
     }
 }
 
-impl Aggregator for AdaCons {
-    fn name(&self) -> &'static str {
-        match (self.cfg.momentum.is_some(), self.cfg.normalize) {
-            (true, true) => "adacons",
-            (false, false) => "adacons-raw",
-            (true, false) => "adacons-momentum",
-            (false, true) => "adacons-norm",
-        }
+impl BucketedAggregator for AdaCons {
+    fn ingest_bucket(
+        &self,
+        _b: usize,
+        view: &GradSet,
+        lo: usize,
+        hi: usize,
+        ctx: &ParallelCtx,
+    ) -> BucketWork {
+        // Phase 1: the bucket's consensus statistics (Eq. 7 restricted to
+        // the bucket) — on a real fabric, the bucket's first all-reduce.
+        BucketWork::Stats(view.consensus_stats_range_ctx(lo, hi, ctx))
     }
 
-    fn aggregate_ctx(
+    fn finalize(
         &mut self,
         grads: &GradSet,
         buckets: &Buckets,
+        work: Vec<BucketWork>,
         out: &mut [f32],
         ctx: &ParallelCtx,
     ) -> AggInfo {
         assert_eq!(out.len(), grads.d());
+        assert_eq!(work.len(), buckets.len());
         let mut first_gamma = None;
         let mut first_stages = None;
-        for (b, (lo, hi)) in buckets.iter().enumerate() {
-            let st = grads.consensus_stats_range_ctx(lo, hi, ctx);
+        // Fixed bucket order: the coefficient pipeline (EMA state) and the
+        // re-projection run exactly as the serial loop would, however the
+        // phase-1 tasks interleaved.
+        for (b, ((lo, hi), w)) in buckets.iter().zip(work).enumerate() {
+            let st = match w {
+                BucketWork::Stats(st) => st,
+                other => panic!("adacons ingests Stats work, got {other:?}"),
+            };
             let (gamma, stages) = self.weights_from_stats(b, &st.dots, &st.sqn);
             grads.weighted_sum_range_into_ctx(&gamma, lo, hi, &mut out[lo..hi], ctx);
             if b == 0 {
@@ -229,15 +241,36 @@ impl Aggregator for AdaCons {
                 first_stages = Some(stages);
             }
         }
+        // Per-bucket stats all-reduces overlap the backward; the scalar
+        // all-gather and the re-weighted-gradient all-reduce need the
+        // coefficients, so they are exposed (§5.1's measured overhead).
+        let mut comm = per_bucket_payload_ops(CollectiveKind::AllReduce, buckets);
+        comm.push(super::CommOp {
+            kind: CollectiveKind::AllGather,
+            bytes: 4,
+            bucket: None,
+        });
+        comm.push(super::CommOp {
+            kind: CollectiveKind::AllReduce,
+            bytes: grads.d() * 4,
+            bucket: None,
+        });
         AggInfo {
             gammas: first_gamma,
             coeff_stages: first_stages,
-            comm: vec![
-                (CollectiveKind::AllReduce, grads.d() * 4),
-                (CollectiveKind::AllGather, 4),
-                (CollectiveKind::AllReduce, grads.d() * 4),
-            ],
+            comm,
             par: Some(ctx.par_plan(grads.d())),
+        }
+    }
+}
+
+impl Aggregator for AdaCons {
+    fn name(&self) -> &'static str {
+        match (self.cfg.momentum.is_some(), self.cfg.normalize) {
+            (true, true) => "adacons",
+            (false, false) => "adacons-raw",
+            (true, false) => "adacons-momentum",
+            (false, true) => "adacons-norm",
         }
     }
 

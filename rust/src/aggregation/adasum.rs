@@ -7,7 +7,7 @@
 //! workers (odd tails pass through), then scaled by 1/N to stay on the
 //! averaging learning-rate scale.
 
-use super::{AggInfo, Aggregator};
+use super::{AggInfo, Aggregator, BucketWork, BucketedAggregator, CommOp};
 use crate::collective::CollectiveKind;
 use crate::parallel::ParallelCtx;
 use crate::tensor::{ops, Buckets, GradSet};
@@ -47,15 +47,26 @@ impl Adasum {
     }
 }
 
-impl Aggregator for Adasum {
-    fn name(&self) -> &'static str {
-        "adasum"
+impl BucketedAggregator for Adasum {
+    fn ingest_bucket(
+        &self,
+        _b: usize,
+        _view: &GradSet,
+        _lo: usize,
+        _hi: usize,
+        _ctx: &ParallelCtx,
+    ) -> BucketWork {
+        // The pairwise tree's deeper levels blend whole vectors, so no
+        // per-bucket partial survives recombination — everything runs in
+        // finalize on the assembled set (the comm below is exposed).
+        BucketWork::Deferred
     }
 
-    fn aggregate_ctx(
+    fn finalize(
         &mut self,
         grads: &GradSet,
         _buckets: &Buckets,
+        _work: Vec<BucketWork>,
         out: &mut [f32],
         ctx: &ParallelCtx,
     ) -> AggInfo {
@@ -85,9 +96,19 @@ impl Aggregator for Adasum {
             gammas: None, // not a fixed linear combination of the inputs
             coeff_stages: None,
             // log2(N) rounds of pairwise exchanges ≈ one allreduce in cost.
-            comm: vec![(CollectiveKind::AllReduce, d * 4)],
+            comm: vec![CommOp {
+                kind: CollectiveKind::AllReduce,
+                bytes: d * 4,
+                bucket: None,
+            }],
             par: Some(ctx.par_plan(d)),
         }
+    }
+}
+
+impl Aggregator for Adasum {
+    fn name(&self) -> &'static str {
+        "adasum"
     }
 }
 

@@ -2,7 +2,7 @@
 //! averaging with weights inversely proportional to gradient norms
 //! (pulls toward flat regions). Weights are normalized to sum one.
 
-use super::{AggInfo, Aggregator};
+use super::{AggInfo, Aggregator, BucketWork, BucketedAggregator, CommOp};
 use crate::collective::CollectiveKind;
 use crate::parallel::ParallelCtx;
 use crate::tensor::{Buckets, GradSet};
@@ -16,22 +16,53 @@ impl Grawa {
     }
 }
 
-impl Aggregator for Grawa {
-    fn name(&self) -> &'static str {
-        "grawa"
+impl BucketedAggregator for Grawa {
+    fn ingest_bucket(
+        &self,
+        _b: usize,
+        view: &GradSet,
+        lo: usize,
+        hi: usize,
+        ctx: &ParallelCtx,
+    ) -> BucketWork {
+        // Norm partials are additive over column ranges; each bucket
+        // contributes its slice of every worker's squared norm.
+        //
+        // NOTE: on multi-bucket configs this decomposition is the
+        // scheme's *new* canonical form — mathematically equal to the
+        // pre-refactor full-range fold but associated differently in
+        // f64, so low-order bits differ from binaries before the
+        // pipelined executor landed (grawa previously ignored buckets).
+        // Bitwise stability across overlap modes and thread counts is
+        // what the equivalence suite enforces; single-bucket (the old
+        // effective behavior at any bucket_cap) is bit-identical to
+        // the pre-refactor path.
+        BucketWork::Stats(view.consensus_stats_range_ctx(lo, hi, ctx))
     }
 
-    fn aggregate_ctx(
+    fn finalize(
         &mut self,
         grads: &GradSet,
-        _buckets: &Buckets,
+        buckets: &Buckets,
+        work: Vec<BucketWork>,
         out: &mut [f32],
         ctx: &ParallelCtx,
     ) -> AggInfo {
         let n = grads.n();
-        let st = grads.consensus_stats_ctx(ctx);
-        let inv: Vec<f64> = st
-            .sqn
+        assert_eq!(work.len(), buckets.len());
+        // Sum the per-bucket norm partials in fixed bucket order — the
+        // global norms the inverse weighting needs, reproducibly.
+        let mut sqn = vec![0.0f64; n];
+        for w in work {
+            let st = match w {
+                BucketWork::Stats(st) => st,
+                other => panic!("grawa ingests Stats work, got {other:?}"),
+            };
+            for (acc, v) in sqn.iter_mut().zip(&st.sqn) {
+                *acc += *v;
+            }
+        }
+        let inv: Vec<f64> = sqn
             .iter()
             .map(|&q| {
                 let norm = q.sqrt();
@@ -49,15 +80,32 @@ impl Aggregator for Grawa {
             vec![1.0 / n as f32; n]
         };
         grads.weighted_sum_into_ctx(&gammas, out, ctx);
+        // Per-bucket scalar norm partials (4 B each) overlap the backward;
+        // the weighted all-reduce needs the global weights — exposed.
+        let mut comm: Vec<CommOp> = (0..buckets.len())
+            .map(|b| CommOp {
+                kind: CollectiveKind::AllGather,
+                bytes: 4,
+                bucket: Some(b),
+            })
+            .collect();
+        comm.push(CommOp {
+            kind: CollectiveKind::AllReduce,
+            bytes: grads.d() * 4,
+            bucket: None,
+        });
         AggInfo {
             gammas: Some(gammas),
             coeff_stages: None,
-            comm: vec![
-                (CollectiveKind::AllGather, 4),
-                (CollectiveKind::AllReduce, grads.d() * 4),
-            ],
+            comm,
             par: Some(ctx.par_plan(grads.d())),
         }
+    }
+}
+
+impl Aggregator for Grawa {
+    fn name(&self) -> &'static str {
+        "grawa"
     }
 }
 

@@ -1,7 +1,10 @@
 //! The averaging baseline — what the paper calls "Sum" (gradient averaging
 //! with the learning rate folded in). One ring all-reduce per step.
 
-use super::{AggInfo, Aggregator};
+use super::{
+    per_bucket_payload_ops, write_bucket_outputs, AggInfo, Aggregator, BucketWork,
+    BucketedAggregator,
+};
 use crate::collective::CollectiveKind;
 use crate::parallel::ParallelCtx;
 use crate::tensor::{Buckets, GradSet};
@@ -15,25 +18,43 @@ impl MeanAggregator {
     }
 }
 
-impl Aggregator for MeanAggregator {
-    fn name(&self) -> &'static str {
-        "mean"
+impl BucketedAggregator for MeanAggregator {
+    fn ingest_bucket(
+        &self,
+        _b: usize,
+        view: &GradSet,
+        lo: usize,
+        hi: usize,
+        ctx: &ParallelCtx,
+    ) -> BucketWork {
+        // Column-separable: the bucket's slice of the mean is final.
+        let mut o = vec![0.0f32; hi - lo];
+        view.mean_range_into_ctx(lo, hi, &mut o, ctx);
+        BucketWork::Output(o)
     }
 
-    fn aggregate_ctx(
+    fn finalize(
         &mut self,
         grads: &GradSet,
-        _buckets: &Buckets,
+        buckets: &Buckets,
+        work: Vec<BucketWork>,
         out: &mut [f32],
         ctx: &ParallelCtx,
     ) -> AggInfo {
-        grads.mean_into_ctx(out, ctx);
+        write_bucket_outputs(buckets, work, out);
         AggInfo {
             gammas: Some(vec![1.0 / grads.n() as f32; grads.n()]),
             coeff_stages: None,
-            comm: vec![(CollectiveKind::AllReduce, grads.d() * 4)],
+            // One bucketed ring all-reduce: every transfer overlaps.
+            comm: per_bucket_payload_ops(CollectiveKind::AllReduce, buckets),
             par: Some(ctx.par_plan(grads.d())),
         }
+    }
+}
+
+impl Aggregator for MeanAggregator {
+    fn name(&self) -> &'static str {
+        "mean"
     }
 }
 

@@ -21,7 +21,7 @@ pub mod stats;
 
 use crate::collective::CollectiveKind;
 use crate::parallel::{ParPlan, ParallelCtx};
-use crate::tensor::{Buckets, GradSet};
+use crate::tensor::{grad_set::ConsensusStats, Buckets, GradSet};
 
 pub use adacons::{AdaCons, AdaConsConfig};
 pub use adasum::Adasum;
@@ -29,6 +29,20 @@ pub use grawa::Grawa;
 pub use mean::MeanAggregator;
 pub use robust::{CoordinateMedian, TrimmedMean};
 pub use stats::CoeffStages;
+
+/// One communication operation a step would issue on a real fabric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CommOp {
+    pub kind: CollectiveKind,
+    /// Payload bytes (per rank for all-gathers, total for all-reduces —
+    /// matching `CostModel::time_s`).
+    pub bytes: usize,
+    /// `Some(b)`: the payload exists as soon as bucket `b`'s gradients do,
+    /// so on a bucketed fabric this transfer may overlap the remaining
+    /// backward compute (DDP pipelining). `None`: the op depends on the
+    /// full gradient or on the bucketed phase's results — it is exposed.
+    pub bucket: Option<usize>,
+}
 
 /// Metadata returned by one aggregation step.
 #[derive(Debug, Clone, Default)]
@@ -38,29 +52,93 @@ pub struct AggInfo {
     pub gammas: Option<Vec<f32>>,
     /// Subspace-coefficient statistics per stage (Fig. 7), when applicable.
     pub coeff_stages: Option<CoeffStages>,
-    /// Communication ops this step would issue on a real fabric
-    /// (kind, payload bytes) — charged to the SimClock by the coordinator.
-    pub comm: Vec<(CollectiveKind, usize)>,
+    /// Communication ops this step would issue on a real fabric — charged
+    /// to the step's event timeline by the coordinator (per-bucket ops at
+    /// their bucket's readiness, exposed ops after the backward).
+    pub comm: Vec<CommOp>,
     /// Thread-count / shard-size choices the parallel engine made for the
     /// full-width range (reported by exp/table1 next to the timings).
     pub par: Option<ParPlan>,
 }
 
+/// The per-bucket result of [`BucketedAggregator::ingest_bucket`].
+#[derive(Debug, Clone)]
+pub enum BucketWork {
+    /// Per-worker consensus statistics over the bucket's columns (Eq. 7
+    /// restricted to the bucket) — the schemes whose coefficients are
+    /// functions of `(dots, sqn)` partials.
+    Stats(ConsensusStats),
+    /// The bucket's aggregated output columns, already final (schemes
+    /// whose math is column-separable: mean, median, trimmed mean).
+    Output(Vec<f32>),
+    /// Nothing useful can be computed per bucket — the scheme needs the
+    /// fully assembled gradient set (Adasum's pairwise tree); all work
+    /// happens in `finalize`.
+    Deferred,
+}
+
+/// The two-phase aggregation protocol the pipelined executor drives.
+///
+/// `ingest_bucket` is phase 1: pure per-bucket work, safe to run
+/// concurrently across buckets (it takes `&self` and may execute on a
+/// pool task while later buckets are still arriving). `finalize` is
+/// phase 2: fold the per-bucket work into `out` in **fixed bucket
+/// order**, which is what keeps the pipelined path bitwise-identical to
+/// the serial one no matter how the phase-1 tasks interleaved.
+pub trait BucketedAggregator: Send + Sync {
+    /// Consume bucket `b`'s gradient columns. `view` is either the full
+    /// gradient set with `lo..hi` the bucket's absolute column range (the
+    /// inline path) or an owned `(N, hi-lo)` per-bucket copy with
+    /// `lo = 0` (the pipelined path's per-bucket sends). Every kernel
+    /// chunks relative to `lo`, so the result is bitwise-identical either
+    /// way (covered by `tests/parallel_equivalence.rs`).
+    fn ingest_bucket(
+        &self,
+        b: usize,
+        view: &GradSet,
+        lo: usize,
+        hi: usize,
+        ctx: &ParallelCtx,
+    ) -> BucketWork;
+
+    /// Fold the per-bucket work into `out` (length d = `buckets.total()`),
+    /// in bucket order. `grads` is the fully assembled gradient set (both
+    /// execution paths have it by finalize time); `work[b]` is what
+    /// `ingest_bucket` returned for bucket `b`.
+    fn finalize(
+        &mut self,
+        grads: &GradSet,
+        buckets: &Buckets,
+        work: Vec<BucketWork>,
+        out: &mut [f32],
+        ctx: &ParallelCtx,
+    ) -> AggInfo;
+}
+
 /// A synchronous gradient aggregation scheme.
-pub trait Aggregator: Send {
+pub trait Aggregator: BucketedAggregator {
     fn name(&self) -> &'static str;
 
     /// Aggregate `grads` into `out` (length d), bucket by bucket, running
-    /// the tensor kernels on `ctx`'s worker pool. Results are
-    /// bitwise-identical at any thread count (fixed shard plan +
-    /// fixed-order partial reduction — see `parallel`).
+    /// the tensor kernels on `ctx`'s worker pool. This is the degenerate
+    /// unpipelined path: every bucket is ingested inline in order, then
+    /// folded. Results are bitwise-identical at any thread count (fixed
+    /// shard plan + fixed-order partial reduction — see `parallel`) and
+    /// to the pipelined executor (`coordinator::pipeline`).
     fn aggregate_ctx(
         &mut self,
         grads: &GradSet,
         buckets: &Buckets,
         out: &mut [f32],
         ctx: &ParallelCtx,
-    ) -> AggInfo;
+    ) -> AggInfo {
+        let work: Vec<BucketWork> = buckets
+            .iter()
+            .enumerate()
+            .map(|(b, (lo, hi))| self.ingest_bucket(b, grads, lo, hi, ctx))
+            .collect();
+        self.finalize(grads, buckets, work, out, ctx)
+    }
 
     /// Serial convenience wrapper (one-lane context, jobs run inline).
     fn aggregate(&mut self, grads: &GradSet, buckets: &Buckets, out: &mut [f32]) -> AggInfo {
@@ -69,6 +147,32 @@ pub trait Aggregator: Send {
 
     /// Clear step-dependent state (e.g. momentum) between runs.
     fn reset(&mut self) {}
+}
+
+/// One `CommOp` per bucket: `kind` with the bucket's payload size, ready
+/// at that bucket (the DDP-overlappable phase-1 transfers).
+pub(crate) fn per_bucket_payload_ops(kind: CollectiveKind, buckets: &Buckets) -> Vec<CommOp> {
+    buckets
+        .iter()
+        .enumerate()
+        .map(|(b, (lo, hi))| CommOp {
+            kind,
+            bytes: (hi - lo) * 4,
+            bucket: Some(b),
+        })
+        .collect()
+}
+
+/// Copy per-bucket `BucketWork::Output` slices into the full vector.
+pub(crate) fn write_bucket_outputs(buckets: &Buckets, work: Vec<BucketWork>, out: &mut [f32]) {
+    assert_eq!(out.len(), buckets.total());
+    assert_eq!(work.len(), buckets.len());
+    for ((lo, hi), w) in buckets.iter().zip(work) {
+        match w {
+            BucketWork::Output(v) => out[lo..hi].copy_from_slice(&v),
+            other => panic!("expected per-bucket Output work, got {other:?}"),
+        }
+    }
 }
 
 /// Build an aggregator by name — the config-file surface.

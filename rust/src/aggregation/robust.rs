@@ -3,7 +3,10 @@
 //! computing errors / bad local gradients; these are the classical
 //! defenses to compare against).
 
-use super::{AggInfo, Aggregator};
+use super::{
+    per_bucket_payload_ops, write_bucket_outputs, AggInfo, Aggregator, BucketWork,
+    BucketedAggregator,
+};
 use crate::collective::CollectiveKind;
 use crate::parallel::ParallelCtx;
 use crate::tensor::{Buckets, GradSet};
@@ -21,41 +24,58 @@ impl CoordinateMedian {
     }
 }
 
-impl Aggregator for CoordinateMedian {
-    fn name(&self) -> &'static str {
-        "median"
-    }
-
-    fn aggregate_ctx(
-        &mut self,
-        grads: &GradSet,
-        _buckets: &Buckets,
-        out: &mut [f32],
+impl BucketedAggregator for CoordinateMedian {
+    fn ingest_bucket(
+        &self,
+        _b: usize,
+        view: &GradSet,
+        lo: usize,
+        hi: usize,
         ctx: &ParallelCtx,
-    ) -> AggInfo {
-        let n = grads.n();
-        ctx.for_each_out_shard(0, grads.d(), out, |lo, _hi, oc| {
+    ) -> BucketWork {
+        let n = view.n();
+        let mut o = vec![0.0f32; hi - lo];
+        ctx.for_each_out_shard(lo, hi, &mut o, |slo, _shi, oc| {
             let mut scratch = vec![0.0f32; n];
-            for (k, o) in oc.iter_mut().enumerate() {
-                let j = lo + k;
+            for (k, ov) in oc.iter_mut().enumerate() {
+                let j = slo + k;
                 for i in 0..n {
-                    scratch[i] = grads.row(i)[j];
+                    scratch[i] = view.row(i)[j];
                 }
                 scratch.sort_by(|a, b| a.total_cmp(b));
-                *o = if n % 2 == 1 {
+                *ov = if n % 2 == 1 {
                     scratch[n / 2]
                 } else {
                     0.5 * (scratch[n / 2 - 1] + scratch[n / 2])
                 };
             }
         });
+        BucketWork::Output(o)
+    }
+
+    fn finalize(
+        &mut self,
+        grads: &GradSet,
+        buckets: &Buckets,
+        work: Vec<BucketWork>,
+        out: &mut [f32],
+        ctx: &ParallelCtx,
+    ) -> AggInfo {
+        write_bucket_outputs(buckets, work, out);
         AggInfo {
             gammas: None,
             coeff_stages: None,
-            // Requires gathering all gradients: N x d all-gather cost.
-            comm: vec![(CollectiveKind::AllGather, grads.d() * 4)],
+            // Requires gathering all gradients; each bucket's gather can
+            // start as soon as that bucket exists.
+            comm: per_bucket_payload_ops(CollectiveKind::AllGather, buckets),
             par: Some(ctx.par_plan(grads.d())),
         }
+    }
+}
+
+impl Aggregator for CoordinateMedian {
+    fn name(&self) -> &'static str {
+        "median"
     }
 }
 
@@ -74,40 +94,56 @@ impl TrimmedMean {
     }
 }
 
-impl Aggregator for TrimmedMean {
-    fn name(&self) -> &'static str {
-        "trimmed-mean"
-    }
-
-    fn aggregate_ctx(
-        &mut self,
-        grads: &GradSet,
-        _buckets: &Buckets,
-        out: &mut [f32],
+impl BucketedAggregator for TrimmedMean {
+    fn ingest_bucket(
+        &self,
+        _b: usize,
+        view: &GradSet,
+        lo: usize,
+        hi: usize,
         ctx: &ParallelCtx,
-    ) -> AggInfo {
-        let n = grads.n();
+    ) -> BucketWork {
+        let n = view.n();
         let k = ((n as f64) * self.trim_frac).floor() as usize;
         let keep = n - 2 * k;
         assert!(keep > 0, "trim fraction leaves no workers");
-        ctx.for_each_out_shard(0, grads.d(), out, |lo, _hi, oc| {
+        let mut o = vec![0.0f32; hi - lo];
+        ctx.for_each_out_shard(lo, hi, &mut o, |slo, _shi, oc| {
             let mut scratch = vec![0.0f32; n];
-            for (c, o) in oc.iter_mut().enumerate() {
-                let j = lo + c;
+            for (c, ov) in oc.iter_mut().enumerate() {
+                let j = slo + c;
                 for i in 0..n {
-                    scratch[i] = grads.row(i)[j];
+                    scratch[i] = view.row(i)[j];
                 }
                 scratch.sort_by(|a, b| a.total_cmp(b));
                 let s: f64 = scratch[k..n - k].iter().map(|&x| x as f64).sum();
-                *o = (s / keep as f64) as f32;
+                *ov = (s / keep as f64) as f32;
             }
         });
+        BucketWork::Output(o)
+    }
+
+    fn finalize(
+        &mut self,
+        grads: &GradSet,
+        buckets: &Buckets,
+        work: Vec<BucketWork>,
+        out: &mut [f32],
+        ctx: &ParallelCtx,
+    ) -> AggInfo {
+        write_bucket_outputs(buckets, work, out);
         AggInfo {
             gammas: None,
             coeff_stages: None,
-            comm: vec![(CollectiveKind::AllGather, grads.d() * 4)],
+            comm: per_bucket_payload_ops(CollectiveKind::AllGather, buckets),
             par: Some(ctx.par_plan(grads.d())),
         }
+    }
+}
+
+impl Aggregator for TrimmedMean {
+    fn name(&self) -> &'static str {
+        "trimmed-mean"
     }
 }
 

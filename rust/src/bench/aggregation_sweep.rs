@@ -12,6 +12,8 @@ use std::collections::BTreeMap;
 
 use crate::aggregation::{self, Aggregator};
 use crate::bench::bench_auto;
+use crate::collective::{CostModel, SimClock, Topology};
+use crate::coordinator::pipeline::PipelinedExecutor;
 use crate::parallel::{plan_shards, ParallelCtx, ParallelPolicy};
 use crate::tensor::ops::CHUNK;
 use crate::tensor::{Buckets, GradSet};
@@ -35,6 +37,10 @@ pub struct SweepConfig {
     /// Skip gradient matrices larger than this many bytes (logged, never
     /// silent).
     pub max_case_bytes: usize,
+    /// Pipelined-step overlap modes to bench (`--overlap` dimension):
+    /// each entry adds an `adacons_step` case driving the full
+    /// `PipelinedExecutor` (16 buckets) with overlap on or off.
+    pub overlap_modes: Vec<bool>,
 }
 
 impl SweepConfig {
@@ -54,6 +60,7 @@ impl SweepConfig {
             dims: vec![100_000, 1_000_000, 10_000_000],
             min_shard_elems: crate::parallel::DEFAULT_MIN_SHARD_ELEMS,
             max_case_bytes: 2_000_000_000,
+            overlap_modes: vec![false, true],
         }
     }
 
@@ -67,6 +74,7 @@ impl SweepConfig {
             dims: vec![100_000, 1_000_000],
             min_shard_elems: 16 * 1024,
             max_case_bytes: 2_000_000_000,
+            overlap_modes: vec![false, true],
         }
     }
 }
@@ -209,6 +217,94 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Json> {
                         ),
                     ]));
                 }
+
+                // --- the --overlap dimension: a full pipelined step
+                //     (per-bucket arrival -> ingest tasks -> finalize)
+                //     with overlap on vs off, 16 buckets ---
+                if !cfg.overlap_modes.is_empty() && 3 * bytes > cfg.max_case_bytes {
+                    // The pipelined step carries two extra (N, d) buffers
+                    // (full assembly + per-bucket stores); skip loudly
+                    // rather than tripling the footprint of the biggest
+                    // cases.
+                    println!(
+                        "-- skipping adacons_step N={n}, d={d}, t={t}: 3x{bytes} B \
+                         exceeds the {} B case cap --",
+                        cfg.max_case_bytes
+                    );
+                    cases.push(obj(vec![
+                        ("op", s("adacons_step")),
+                        ("workers", num(n as f64)),
+                        ("d", num(d as f64)),
+                        ("threads", num(t as f64)),
+                        ("skipped", Json::Bool(true)),
+                        ("reason", s("pipelined buffers exceed max_case_bytes")),
+                    ]));
+                    continue;
+                }
+                for &overlap in &cfg.overlap_modes {
+                    let buckets = Buckets::fixed(d, d.div_ceil(16).max(1));
+                    let mut pagg = aggregation::by_name("adacons", n)
+                        .context("adacons not in registry")?;
+                    let mut pexec = PipelinedExecutor::new(n, buckets.clone(), overlap);
+                    let mut pgrads = GradSet::zeros(n, d);
+                    let mut pout = vec![0.0f32; d];
+                    let mut clock = SimClock::new(n);
+                    let cost = CostModel::from_topology(&Topology::ring_gbps(n, 100.0));
+                    let mode = if overlap { "on" } else { "off" };
+                    let r = bench_auto(
+                        &format!("adacons step    N={n} d={d} t={t} overlap={mode}"),
+                        cfg.budget_s,
+                        || {
+                            let mut produce = |rank: usize,
+                                               deliver: &mut dyn FnMut(usize, &[f32])|
+                             -> Result<(f64, f64)> {
+                                for (b, (lo, hi)) in buckets.iter().enumerate() {
+                                    deliver(b, &gs.row(rank)[lo..hi]);
+                                }
+                                Ok((0.0, 0.0))
+                            };
+                            pexec
+                                .run_step(
+                                    &mut produce,
+                                    pagg.as_mut(),
+                                    &mut pgrads,
+                                    &mut pout,
+                                    &ctx,
+                                    &mut clock,
+                                    &cost,
+                                )
+                                .expect("pipelined bench step");
+                        },
+                    );
+                    let key = (format!("adacons_step_{mode}"), n, d);
+                    if t == 1 {
+                        baseline.insert(key.clone(), r.mean_s);
+                    }
+                    let speedup = baseline.get(&key).map(|&b| b / r.mean_s);
+                    println!(
+                        "{}{}",
+                        r.report_line(),
+                        speedup
+                            .map(|x| format!("  [{x:.2}x vs 1t]"))
+                            .unwrap_or_default()
+                    );
+                    cases.push(obj(vec![
+                        ("op", s("adacons_step")),
+                        ("overlap", s(mode)),
+                        ("workers", num(n as f64)),
+                        ("d", num(d as f64)),
+                        ("threads", num(t as f64)),
+                        ("buckets", num(buckets.len() as f64)),
+                        ("iters", num(r.iters as f64)),
+                        ("mean_s", num(r.mean_s)),
+                        ("p50_s", num(r.p50_s)),
+                        ("p99_s", num(r.p99_s)),
+                        (
+                            "speedup_vs_1t",
+                            speedup.map(num).unwrap_or(Json::Null),
+                        ),
+                    ]));
+                }
             }
         }
     }
@@ -263,6 +359,50 @@ pub fn validate_file(path: &str) -> Result<()> {
     Ok(())
 }
 
+/// Median `mean_s` of the measured `adacons` e2e aggregate cases — the
+/// aggregate-phase figure the CI perf-history gate tracks.
+fn aggregate_phase_median(path: &str) -> Result<f64> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let doc = Json::parse(&text).map_err(|e| crate::err!("{path}: {e}"))?;
+    let mut v: Vec<f64> = doc
+        .get("cases")
+        .as_arr()
+        .context("cases array")?
+        .iter()
+        .filter(|c| {
+            c.get("op").as_str() == Some("adacons")
+                && c.get("skipped").as_bool() != Some(true)
+        })
+        .filter_map(|c| c.get("mean_s").as_f64())
+        .collect();
+    if v.is_empty() {
+        bail!("{path}: no measured adacons cases");
+    }
+    v.sort_by(|a, b| a.total_cmp(b));
+    Ok(v[v.len() / 2])
+}
+
+/// CI perf-history gate: fail if `current`'s aggregate-phase median
+/// regresses more than `max_ratio` vs the committed `baseline` document
+/// (both must come from the same grid, e.g. two smoke runs).
+pub fn compare_files(baseline: &str, current: &str, max_ratio: f64) -> Result<()> {
+    let b = aggregate_phase_median(baseline)?;
+    let c = aggregate_phase_median(current)?;
+    let ratio = c / b;
+    println!(
+        "aggregate-phase median: baseline {:.6}s ({baseline}), current {:.6}s ({current}), \
+         ratio {ratio:.3}x (gate {max_ratio:.2}x)",
+        b, c
+    );
+    if !(ratio.is_finite() && ratio <= max_ratio) {
+        bail!(
+            "aggregate-phase median regressed {ratio:.3}x > {max_ratio:.2}x vs {baseline}"
+        );
+    }
+    println!("perf gate: ok");
+    Ok(())
+}
+
 /// Render the consensus_stats / weighted_sum scaling rows as a markdown
 /// table (for pasting into EXPERIMENTS.md §Perf).
 pub fn markdown_table(doc: &Json) -> String {
@@ -310,6 +450,7 @@ mod tests {
             dims: vec![10_000],
             min_shard_elems: 2048,
             max_case_bytes: 1 << 30,
+            overlap_modes: vec![],
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -339,11 +480,58 @@ mod tests {
             dims: vec![1_000_000],
             min_shard_elems: 2048,
             max_case_bytes: 1000, // force the skip path
+            overlap_modes: vec![false, true],
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
         assert_eq!(cases.len(), 1);
         assert_eq!(cases[0].get("skipped").as_bool(), Some(true));
+    }
+
+    #[test]
+    fn overlap_dimension_emits_tagged_cases() {
+        let cfg = SweepConfig {
+            budget_s: 0.001,
+            threads: vec![1],
+            workers: vec![2],
+            dims: vec![8_192],
+            min_shard_elems: 2048,
+            max_case_bytes: 1 << 30,
+            overlap_modes: vec![false, true],
+        };
+        let doc = run_sweep(&cfg).unwrap();
+        let cases = doc.get("cases").as_arr().unwrap();
+        // 4 kernel ops + 2 overlap modes.
+        assert_eq!(cases.len(), 6);
+        let tagged: Vec<&str> = cases
+            .iter()
+            .filter(|c| c.get("op").as_str() == Some("adacons_step"))
+            .filter_map(|c| c.get("overlap").as_str())
+            .collect();
+        assert_eq!(tagged, vec!["off", "on"]);
+    }
+
+    #[test]
+    fn perf_gate_compares_adacons_medians() {
+        let dir = std::env::temp_dir().join("adacons_perf_gate");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mk = |name: &str, mean_s: f64| -> String {
+            let path = dir.join(name);
+            let doc = format!(
+                r#"{{"bench":"aggregation","cases":[
+                    {{"op":"adacons","workers":4,"d":1000,"threads":1,"mean_s":{mean_s}}},
+                    {{"op":"mean","workers":4,"d":1000,"threads":1,"mean_s":99.0}}
+                ]}}"#
+            );
+            std::fs::write(&path, doc).unwrap();
+            path.to_str().unwrap().to_string()
+        };
+        let base = mk("base.json", 0.010);
+        let ok = mk("ok.json", 0.012);
+        let bad = mk("bad.json", 0.020);
+        compare_files(&base, &ok, 1.3).unwrap();
+        assert!(compare_files(&base, &bad, 1.3).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -3,11 +3,14 @@
 //!
 //!   cargo run --release --bin bench_aggregation                  # full grid
 //!   cargo run --release --bin bench_aggregation -- --smoke --budget 0.05
+//!   cargo run --release --bin bench_aggregation -- --overlap on   # on|off|both
 //!   cargo run --release --bin bench_aggregation -- --check BENCH_aggregation.json
 //!   cargo run --release --bin bench_aggregation -- --table BENCH_aggregation.json
+//!   cargo run --release --bin bench_aggregation -- --compare bench_history/baseline.json \
+//!       BENCH_aggregation.json --max-regress 1.3
 
 use adacons::bench::aggregation_sweep::{
-    markdown_table, run_and_write, validate_file, SweepConfig,
+    compare_files, markdown_table, run_and_write, validate_file, SweepConfig,
 };
 use adacons::util::argparse::Args;
 use adacons::util::error::Result;
@@ -31,13 +34,31 @@ fn run() -> Result<()> {
         print!("{}", markdown_table(&doc));
         return Ok(());
     }
+    if let Some(baseline) = args.str_opt("compare") {
+        let current = args
+            .positional
+            .first()
+            .map(String::as_str)
+            .unwrap_or("BENCH_aggregation.json");
+        let max_ratio = args.f64_or("max-regress", 1.3)?;
+        return compare_files(baseline, current, max_ratio);
+    }
     let smoke = args.flag("smoke");
     let budget = args.f64_or("budget", if smoke { 0.05 } else { 0.4 })?;
-    let cfg = if smoke {
+    let mut cfg = if smoke {
         SweepConfig::smoke(budget)
     } else {
         SweepConfig::full(budget)
     };
+    if let Some(mode) = args.str_opt("overlap") {
+        cfg.overlap_modes = match mode {
+            "on" => vec![true],
+            "off" => vec![false],
+            "both" => vec![false, true],
+            "none" => vec![],
+            other => return Err(adacons::err!("--overlap {other:?}: want on|off|both|none")),
+        };
+    }
     let out = args.str_or("out", "BENCH_aggregation.json");
     run_and_write(&cfg, &out)
 }

@@ -12,10 +12,12 @@ pub mod allreduce;
 pub mod cost_model;
 pub mod overlap;
 pub mod simclock;
+pub mod timeline;
 pub mod topology;
 
 pub use allreduce::{ring_allgather, ring_allreduce, ring_broadcast};
 pub use cost_model::{CollectiveKind, CostModel};
 pub use overlap::{adacons_iteration_overlapped_s, exposed_comm_s, sum_iteration_overlapped_s};
 pub use simclock::SimClock;
+pub use timeline::StepTimeline;
 pub use topology::Topology;

@@ -6,6 +6,12 @@
 //! all-reduce of bucket *k* overlaps the backward computation of bucket
 //! *k+1..*, so the exposed communication is only what outlasts the
 //! remaining compute (classic DDP pipelining).
+//!
+//! These closed forms assume uniform bucket readiness. The actual step
+//! accounting now runs through [`super::timeline::StepTimeline`], which
+//! generalizes the same NIC-serialization recurrence to straggling ranks,
+//! ragged buckets, and exposed ops — `timeline`'s tests cross-check that
+//! it reproduces `exposed_comm_s` exactly in the uniform case.
 
 use super::cost_model::CostModel;
 

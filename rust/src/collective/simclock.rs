@@ -36,6 +36,17 @@ impl SimClock {
         done
     }
 
+    /// Completion barrier at an externally scheduled time (the event
+    /// timeline's NIC completion): every rank aligns to the later of its
+    /// own time and `done_s`. Returns the common time.
+    pub fn align(&mut self, done_s: f64) -> f64 {
+        let done = self.t.iter().cloned().fold(done_s, f64::max);
+        for t in &mut self.t {
+            *t = done;
+        }
+        done
+    }
+
     pub fn rank_time(&self, rank: usize) -> f64 {
         self.t[rank]
     }

@@ -1,0 +1,148 @@
+//! Event timeline for one training step's communication.
+//!
+//! Replaces the barrier-only accounting (`SimClock::collective` after the
+//! whole backward) with the deployment shape: bucketed transfers are
+//! posted at their bucket's readiness time and serialize on a modeled
+//! NIC, so bucket *k*'s collective runs while buckets *k+1..* are still
+//! being computed. This folds the analytical `overlap::exposed_comm_s`
+//! pipeline model into the actual step accounting — for uniform bucket
+//! readiness the two agree exactly (see the cross-check test below),
+//! but the timeline also handles stragglers, ragged bucket sizes, and
+//! exposed (non-overlappable) ops like AdaCons' second all-reduce.
+
+use super::simclock::SimClock;
+
+/// The NIC schedule of one step. Build it at the step's start, post every
+/// transfer (bucketed ones at their readiness, exposed ones at backward
+/// end), then [`StepTimeline::commit`] the completion barrier to the
+/// clock.
+#[derive(Debug, Clone)]
+pub struct StepTimeline {
+    /// When the modeled NIC next becomes free.
+    nic_free_s: f64,
+    /// Sum of every posted transfer's duration (what a fully serial,
+    /// unpipelined schedule would expose).
+    serial_s: f64,
+}
+
+impl StepTimeline {
+    /// A fresh timeline whose NIC is free from `start_s` (the step start,
+    /// i.e. the previous barrier's completion time).
+    pub fn new(start_s: f64) -> Self {
+        StepTimeline {
+            nic_free_s: start_s,
+            serial_s: 0.0,
+        }
+    }
+
+    /// Post one transfer whose payload is ready at `ready_s` and occupies
+    /// the NIC for `dur_s`. Transfers serialize: this one starts at
+    /// `max(ready_s, nic_free)`. Returns its completion time.
+    pub fn post(&mut self, ready_s: f64, dur_s: f64) -> f64 {
+        let start = ready_s.max(self.nic_free_s);
+        self.nic_free_s = start + dur_s;
+        self.serial_s += dur_s;
+        self.nic_free_s
+    }
+
+    /// Completion time of everything posted so far.
+    pub fn done_s(&self) -> f64 {
+        self.nic_free_s
+    }
+
+    /// Total transfer time posted, i.e. the unpipelined (fully exposed)
+    /// communication accounting.
+    pub fn serial_s(&self) -> f64 {
+        self.serial_s
+    }
+
+    /// Communication not hidden behind compute: how far the schedule's
+    /// completion outlasts `compute_end_s`.
+    pub fn exposed_s(&self, compute_end_s: f64) -> f64 {
+        (self.done_s() - compute_end_s).max(0.0)
+    }
+
+    /// Synchronous completion barrier: every rank aligns to the later of
+    /// its own time and the schedule's completion.
+    pub fn commit(&self, clock: &mut SimClock) -> f64 {
+        clock.align(self.done_s())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::cost_model::CostModel;
+    use crate::collective::overlap::exposed_comm_s;
+    use crate::collective::topology::Topology;
+
+    #[test]
+    fn serializes_on_the_nic() {
+        let mut tl = StepTimeline::new(0.0);
+        // Ready early, back to back: second waits for the NIC.
+        assert_eq!(tl.post(0.0, 1.0), 1.0);
+        assert_eq!(tl.post(0.5, 1.0), 2.0);
+        // Ready late: NIC idles until the payload exists.
+        assert_eq!(tl.post(5.0, 1.0), 6.0);
+        assert_eq!(tl.serial_s(), 3.0);
+        assert_eq!(tl.exposed_s(5.5), 0.5);
+        assert_eq!(tl.exposed_s(10.0), 0.0);
+    }
+
+    #[test]
+    fn matches_analytical_overlap_model_for_uniform_buckets() {
+        // The detached α-β formula (`overlap::exposed_comm_s`) and the
+        // event timeline must agree exactly when bucket readiness is
+        // uniform — the timeline generalizes the formula, it does not
+        // replace its answers.
+        let model = CostModel::from_topology(&Topology::ring_gbps(32, 100.0));
+        let compute_s = 0.1;
+        let d = 25_600_000usize;
+        for n_buckets in [1usize, 2, 8, 32] {
+            let bucket_bytes = d * 4 / n_buckets;
+            let per_bucket_comm = model.allreduce_s(bucket_bytes);
+            let per_bucket_compute = compute_s / n_buckets as f64;
+            let mut tl = StepTimeline::new(0.0);
+            for k in 0..n_buckets {
+                tl.post((k + 1) as f64 * per_bucket_compute, per_bucket_comm);
+            }
+            let formula = exposed_comm_s(&model, compute_s, bucket_bytes, n_buckets);
+            let timeline = tl.exposed_s(compute_s);
+            assert!(
+                (formula - timeline).abs() < 1e-15,
+                "buckets={n_buckets}: {formula} vs {timeline}"
+            );
+        }
+    }
+
+    #[test]
+    fn commit_aligns_all_ranks_to_completion() {
+        let mut clock = SimClock::new(3);
+        clock.advance(0, 1.0);
+        clock.advance(1, 3.0);
+        clock.advance(2, 2.0);
+        let mut tl = StepTimeline::new(0.0);
+        tl.post(3.0, 0.5); // ready when the slowest rank finishes
+        let done = tl.commit(&mut clock);
+        assert!((done - 3.5).abs() < 1e-12);
+        for r in 0..3 {
+            assert_eq!(clock.rank_time(r), 3.5);
+        }
+    }
+
+    #[test]
+    fn barrier_semantics_recovered_when_everything_is_exposed() {
+        // Posting every op at compute end reproduces the barrier-only
+        // accounting: completion = compute_end + Σ durations.
+        let compute_end = 2.0;
+        let durs = [0.3, 0.1, 0.2];
+        let mut tl = StepTimeline::new(0.0);
+        for &d in &durs {
+            tl.post(compute_end, d);
+        }
+        let serial: f64 = durs.iter().sum();
+        assert!((tl.done_s() - (compute_end + serial)).abs() < 1e-12);
+        assert!((tl.exposed_s(compute_end) - serial).abs() < 1e-12);
+        assert_eq!(tl.serial_s(), serial);
+    }
+}

@@ -7,9 +7,17 @@
 //! threaded deployment shape — N rank threads exchanging gradients with a
 //! leader — and is exercised by `threaded_allreduce`, a multi-threaded
 //! driver of the simulated collectives used in tests and benches.
+//!
+//! The wire unit is a **bucket**, not a whole gradient: ranks send
+//! `(rank, bucket, columns)` messages as each bucket of their backward
+//! completes ([`StepExchange::submit_bucket`]), matching the pipelined
+//! executor's arrival surface; the leader assembles buckets in any
+//! arrival order and aggregates once the matrix is complete.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Barrier, Mutex};
+
+use crate::tensor::{Buckets, GradSet};
 
 /// A typed point-to-point mailbox (multi-producer, single-consumer).
 pub struct Mailbox<T> {
@@ -48,11 +56,12 @@ impl<T> Mailbox<T> {
     }
 }
 
-/// The leader's view of a step exchange: collect one gradient per rank,
-/// return the aggregated direction to all ranks.
+/// The leader's view of a step exchange: collect every rank's gradient
+/// buckets, return the aggregated direction to all ranks.
 pub struct StepExchange {
     pub n: usize,
-    grads_in: Mailbox<(usize, Vec<f32>)>,
+    /// `(rank, bucket, columns)` — one message per bucket per rank.
+    buckets_in: Mailbox<(usize, usize, Vec<f32>)>,
     results_out: Vec<Sender<Arc<Vec<f32>>>>,
     results_in: Vec<Mutex<Receiver<Arc<Vec<f32>>>>>,
     pub barrier: Arc<Barrier>,
@@ -69,16 +78,26 @@ impl StepExchange {
         }
         StepExchange {
             n,
-            grads_in: Mailbox::new(),
+            buckets_in: Mailbox::new(),
             results_out,
             results_in,
             barrier: Arc::new(Barrier::new(n + 1)), // ranks + leader
         }
     }
 
-    /// Rank side: submit this step's gradient.
-    pub fn submit(&self, rank: usize, grad: Vec<f32>) {
-        self.grads_in.sender().send((rank, grad)).unwrap();
+    /// Rank side: send one bucket's columns as soon as it is ready.
+    pub fn submit_bucket(&self, rank: usize, bucket: usize, cols: Vec<f32>) {
+        self.buckets_in.sender().send((rank, bucket, cols)).unwrap();
+    }
+
+    /// Rank side: send a whole gradient as its bucket sequence (the
+    /// degenerate single-bucket path when `buckets` is
+    /// [`Buckets::single`]).
+    pub fn submit(&self, rank: usize, buckets: &Buckets, grad: &[f32]) {
+        assert_eq!(grad.len(), buckets.total());
+        for (b, (lo, hi)) in buckets.iter().enumerate() {
+            self.submit_bucket(rank, b, grad[lo..hi].to_vec());
+        }
     }
 
     /// Rank side: wait for the aggregated direction.
@@ -90,15 +109,23 @@ impl StepExchange {
             .expect("exchange closed")
     }
 
-    /// Leader side: gather all rank gradients (any order), aggregate with
+    /// Leader side: gather `n * buckets.len()` bucket messages (any
+    /// arrival order) into the assembled gradient matrix, aggregate with
     /// `f`, broadcast the result.
-    pub fn leader_step(&self, f: impl FnOnce(Vec<Vec<f32>>) -> Vec<f32>) {
-        let mut slots: Vec<Option<Vec<f32>>> = (0..self.n).map(|_| None).collect();
-        for (rank, grad) in self.grads_in.recv_n(self.n) {
-            slots[rank] = Some(grad);
+    pub fn leader_step(&self, buckets: &Buckets, f: impl FnOnce(GradSet) -> Vec<f32>) {
+        let nb = buckets.len();
+        let mut gs = GradSet::zeros(self.n, buckets.total());
+        let mut seen = vec![false; self.n * nb];
+        for (rank, b, cols) in self.buckets_in.recv_n(self.n * nb) {
+            let (lo, hi) = buckets.range(b);
+            assert_eq!(cols.len(), hi - lo, "bucket {b} payload width");
+            assert!(
+                !std::mem::replace(&mut seen[rank * nb + b], true),
+                "duplicate bucket {b} from rank {rank}"
+            );
+            gs.row_mut(rank)[lo..hi].copy_from_slice(&cols);
         }
-        let grads: Vec<Vec<f32>> = slots.into_iter().map(|s| s.expect("missing rank")).collect();
-        let result = Arc::new(f(grads));
+        let result = Arc::new(f(gs));
         for tx in &self.results_out {
             tx.send(result.clone()).unwrap();
         }
@@ -107,36 +134,41 @@ impl StepExchange {
 
 /// Multi-threaded driver: N rank threads aggregate `rounds` of locally
 /// generated gradients through a shared [`StepExchange`] with the given
-/// aggregator name. Returns the final aggregated vector. Used by tests to
-/// prove the aggregation path is thread-clean end-to-end.
+/// aggregator name, sending per-bucket messages (`bucket_cap` columns per
+/// bucket; `None` = one bucket). Returns the final aggregated vector.
+/// Used by tests to prove the bucketed aggregation path is thread-clean
+/// end-to-end.
 pub fn threaded_allreduce(
     n: usize,
     d: usize,
     rounds: usize,
     aggregator: &str,
+    bucket_cap: Option<usize>,
     make_grad: impl Fn(usize, usize) -> Vec<f32> + Send + Sync + 'static,
 ) -> Vec<f32> {
-    use crate::tensor::{Buckets, GradSet};
+    let buckets = Arc::new(match bucket_cap {
+        Some(cap) => Buckets::fixed(d, cap),
+        None => Buckets::single(d),
+    });
     let exchange = Arc::new(StepExchange::new(n));
     let make_grad = Arc::new(make_grad);
     let mut handles = Vec::new();
     for rank in 0..n {
         let ex = exchange.clone();
         let mg = make_grad.clone();
+        let bk = buckets.clone();
         handles.push(std::thread::spawn(move || {
             for round in 0..rounds {
-                ex.submit(rank, mg(rank, round));
+                ex.submit(rank, &bk, &mg(rank, round));
                 let _ = ex.wait_result(rank);
                 ex.barrier.wait();
             }
         }));
     }
     let mut agg = crate::aggregation::by_name(aggregator, n).expect("aggregator");
-    let buckets = Buckets::single(d);
     let mut last = vec![0.0f32; d];
     for _ in 0..rounds {
-        exchange.leader_step(|grads| {
-            let gs = GradSet::from_rows(&grads);
+        exchange.leader_step(&buckets, |gs| {
             let mut out = vec![0.0f32; d];
             agg.aggregate(&gs, &buckets, &mut out);
             last = out.clone();
@@ -163,29 +195,34 @@ mod tests {
     }
 
     #[test]
-    fn exchange_collects_out_of_order_ranks() {
+    fn exchange_collects_out_of_order_bucket_messages() {
         let ex = Arc::new(StepExchange::new(3));
+        let buckets = Buckets::fixed(4, 2); // 2 buckets of 2 columns
         for rank in [2usize, 0, 1] {
             let ex = ex.clone();
             std::thread::spawn(move || {
-                ex.submit(rank, vec![rank as f32; 2]);
+                // Deliberately send bucket 1 before bucket 0.
+                ex.submit_bucket(rank, 1, vec![rank as f32 + 10.0; 2]);
+                ex.submit_bucket(rank, 0, vec![rank as f32; 2]);
             });
         }
-        ex.leader_step(|grads| {
-            assert_eq!(grads[0], vec![0.0; 2]);
-            assert_eq!(grads[1], vec![1.0; 2]);
-            assert_eq!(grads[2], vec![2.0; 2]);
-            vec![9.0; 2]
+        ex.leader_step(&buckets, |gs| {
+            for rank in 0..3 {
+                assert_eq!(gs.row(rank)[..2], [rank as f32; 2]);
+                assert_eq!(gs.row(rank)[2..], [rank as f32 + 10.0; 2]);
+            }
+            vec![9.0; 4]
         });
         for rank in 0..3 {
-            assert_eq!(*ex.wait_result(rank), vec![9.0; 2]);
+            assert_eq!(*ex.wait_result(rank), vec![9.0; 4]);
         }
     }
 
     #[test]
     fn threaded_mean_matches_expectation() {
         // rank r contributes the constant vector r+1 -> mean = (1+2+3+4)/4.
-        let out = threaded_allreduce(4, 16, 3, "mean", |rank, _| vec![(rank + 1) as f32; 16]);
+        let out =
+            threaded_allreduce(4, 16, 3, "mean", None, |rank, _| vec![(rank + 1) as f32; 16]);
         for x in out {
             assert!((x - 2.5).abs() < 1e-6);
         }
@@ -193,10 +230,57 @@ mod tests {
 
     #[test]
     fn threaded_adacons_runs_multiround() {
-        let out = threaded_allreduce(4, 32, 5, "adacons", |rank, round| {
+        let out = threaded_allreduce(4, 32, 5, "adacons", None, |rank, round| {
             let mut rng = crate::util::prng::Rng::new((rank * 1000 + round) as u64);
             (0..32).map(|_| rng.normal_f32(1.0) + 0.5).collect()
         });
         assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn bucketed_sends_reassemble_the_exact_gradient_matrix() {
+        // The per-bucket wire format is a pure transport change: whatever
+        // the bucketization, the leader must reassemble bit-identical
+        // rows in rank order (this checks the assembly directly, so rank
+        // or column misplacement cannot hide behind a symmetric
+        // aggregator downstream).
+        let (n, d) = (3usize, 50usize);
+        let grads: Vec<Vec<f32>> = (0..n)
+            .map(|rank| {
+                let mut rng = crate::util::prng::Rng::new(rank as u64 + 7);
+                (0..d).map(|_| rng.normal_f32(1.0)).collect()
+            })
+            .collect();
+        let assemble = |cap: Option<usize>| -> Vec<Vec<f32>> {
+            let buckets = match cap {
+                Some(c) => Buckets::fixed(d, c),
+                None => Buckets::single(d),
+            };
+            let ex = Arc::new(StepExchange::new(n));
+            let mut handles = Vec::new();
+            for rank in 0..n {
+                let ex = ex.clone();
+                let g = grads[rank].clone();
+                let bk = buckets.clone();
+                handles.push(std::thread::spawn(move || {
+                    ex.submit(rank, &bk, &g);
+                    let _ = ex.wait_result(rank);
+                }));
+            }
+            let mut rows = Vec::new();
+            ex.leader_step(&buckets, |gs| {
+                rows = (0..n).map(|i| gs.row(i).to_vec()).collect();
+                vec![0.0; d]
+            });
+            for h in handles {
+                h.join().unwrap();
+            }
+            rows
+        };
+        let whole = assemble(None);
+        assert_eq!(whole, grads);
+        for cap in [1usize, 7, 16, 50] {
+            assert_eq!(whole, assemble(Some(cap)), "cap={cap}");
+        }
     }
 }

@@ -50,6 +50,12 @@ pub struct TrainConfig {
     /// Parallel engine knobs for the aggregation hot path
     /// (`par_threads`: 0 = all cores; `par_min_shard_elems`).
     pub parallel: ParallelPolicy,
+    /// Comm/compute overlap: pipeline per-bucket aggregation work with
+    /// gradient arrival and schedule bucketed collectives on the event
+    /// timeline (`--overlap on|off`). Off reproduces the barrier-only
+    /// step loop exactly; on is bitwise-identical in output and reports
+    /// strictly less exposed communication on multi-bucket configs.
+    pub overlap: bool,
 }
 
 impl Default for TrainConfig {
@@ -74,7 +80,17 @@ impl Default for TrainConfig {
             log_every: 0,
             jsonl: None,
             parallel: ParallelPolicy::default(),
+            overlap: false,
         }
+    }
+}
+
+/// Parse an `on`/`off` switch (also accepts `true`/`false`, `1`/`0`).
+fn parse_switch(v: &str) -> Option<bool> {
+    match v {
+        "on" | "true" | "1" => Some(true),
+        "off" | "false" | "0" => Some(false),
+        _ => None,
     }
 }
 
@@ -111,6 +127,15 @@ impl TrainConfig {
                 "par_min_shard_elems" => {
                     cfg.parallel.min_shard_elems =
                         v.as_usize().context("par_min_shard_elems")?
+                }
+                "overlap" => {
+                    cfg.overlap = match (v.as_bool(), v.as_str()) {
+                        (Some(b), _) => b,
+                        (None, Some(s)) => {
+                            parse_switch(s).context("overlap must be on|off")?
+                        }
+                        _ => bail!("overlap must be a bool or \"on\"/\"off\""),
+                    }
                 }
                 "injectors" => {
                     for item in v.as_arr().context("injectors")? {
@@ -168,6 +193,9 @@ impl TrainConfig {
         self.parallel.threads = args.usize_or("par-threads", self.parallel.threads)?;
         self.parallel.min_shard_elems =
             args.usize_or("par-min-shard-elems", self.parallel.min_shard_elems)?;
+        if let Some(v) = args.str_opt("overlap") {
+            self.overlap = parse_switch(v).context("--overlap on|off")?;
+        }
         if let Some(p) = args.str_opt("jsonl") {
             self.jsonl = Some(p.into());
         }
@@ -273,6 +301,30 @@ mod tests {
         cfg.apply_args(&args).unwrap();
         assert_eq!(cfg.parallel.threads, 2);
         assert_eq!(cfg.parallel.min_shard_elems, 2048);
+    }
+
+    #[test]
+    fn overlap_knob_from_json_and_cli() {
+        assert!(!TrainConfig::default().overlap);
+        let j = Json::parse(r#"{"overlap":"on"}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).unwrap().overlap);
+        let j = Json::parse(r#"{"overlap":false}"#).unwrap();
+        assert!(!TrainConfig::from_json(&j).unwrap().overlap);
+        let j = Json::parse(r#"{"overlap":"sideways"}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err());
+        let mut cfg = TrainConfig::default();
+        let args = Args::parse(
+            "--overlap on".split_whitespace().map(String::from),
+            &[],
+        );
+        cfg.apply_args(&args).unwrap();
+        assert!(cfg.overlap);
+        let args = Args::parse(
+            "--overlap off".split_whitespace().map(String::from),
+            &[],
+        );
+        cfg.apply_args(&args).unwrap();
+        assert!(!cfg.overlap);
     }
 
     #[test]

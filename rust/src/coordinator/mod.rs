@@ -7,8 +7,10 @@
 
 pub mod checkpoint;
 pub mod eval;
+pub mod pipeline;
 pub mod trainer;
 
 pub use checkpoint::Checkpoint;
 pub use eval::{EvalOutcome, Evaluator};
+pub use pipeline::{PipelinedExecutor, StepOutcome};
 pub use trainer::{TrainResult, Trainer};

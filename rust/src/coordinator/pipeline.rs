@@ -1,0 +1,401 @@
+//! Event-driven pipelined step executor.
+//!
+//! The serial loop runs grad → aggregate → optimize as three phases; this
+//! executor dissolves the first barrier. Ranks deliver their gradients
+//! **bucket by bucket** (`Worker::compute_grad_buckets`); the moment a
+//! bucket has arrived from every rank, its phase-1 aggregation work
+//! (`BucketedAggregator::ingest_bucket`) is submitted to the persistent
+//! pool as a non-blocking task ([`TaskScope::submit`]), so bucket *k*'s
+//! consensus statistics run while buckets *k+1..* are still arriving.
+//! Phase 2 (`finalize`) joins the task handles in **fixed bucket order**,
+//! which — together with the thread-count-free shard plan — makes the
+//! pipelined output bitwise-identical to `Aggregator::aggregate_ctx`'s
+//! serial path (enforced by `tests/parallel_equivalence.rs`).
+//!
+//! Simulated time is charged through the [`StepTimeline`]: per-bucket
+//! collectives post at their bucket's readiness and serialize on the
+//! modeled NIC (the paper's §5.1 overlap argument, previously only an
+//! analytical side-car in `collective::overlap`), while `overlap = false`
+//! reproduces the barrier-only `SimClock` accounting exactly.
+//!
+//! [`TaskScope::submit`]: crate::parallel::TaskScope::submit
+
+use crate::aggregation::{AggInfo, Aggregator, BucketWork};
+use crate::collective::{CostModel, SimClock, StepTimeline};
+use crate::parallel::ParallelCtx;
+use crate::tensor::{BucketTracker, Buckets, GradSet};
+use crate::util::error::Result;
+
+/// Per-rank gradient production: compute rank `rank`'s local gradient and
+/// deliver it through `deliver(bucket, columns)` in bucket order; return
+/// `(local_loss, compute_seconds)`.
+pub type GradProducer<'a> =
+    dyn FnMut(usize, &mut dyn FnMut(usize, &[f32])) -> Result<(f64, f64)> + 'a;
+
+/// What one executed step reports beyond the aggregation metadata.
+#[derive(Debug)]
+pub struct StepOutcome {
+    pub info: AggInfo,
+    /// Mean local train loss across ranks.
+    pub mean_loss: f64,
+    /// Simulated communication time not hidden behind compute this step.
+    pub exposed_comm_s: f64,
+    /// The unpipelined accounting for the same ops: the sum of every
+    /// transfer's duration (== `exposed_comm_s` when overlap is off).
+    pub serial_comm_s: f64,
+}
+
+/// The reusable per-run state of the pipelined step loop: bucket arrival
+/// bookkeeping plus one `(N, bucket_width)` assembly buffer per bucket
+/// (the "per-bucket sends"), allocated once and reused every step.
+pub struct PipelinedExecutor {
+    buckets: Buckets,
+    overlap: bool,
+    tracker: BucketTracker,
+    assembly: Vec<GradSet>,
+    n: usize,
+}
+
+impl PipelinedExecutor {
+    pub fn new(n_ranks: usize, buckets: Buckets, overlap: bool) -> Self {
+        // The per-bucket stores are a second full (N, d) matrix; the
+        // overlap-off path never touches them, so only pay for them when
+        // pipelining is actually on.
+        let assembly = if overlap {
+            buckets
+                .iter()
+                .map(|(lo, hi)| GradSet::zeros(n_ranks, hi - lo))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let tracker = BucketTracker::new(buckets.len(), n_ranks);
+        PipelinedExecutor {
+            buckets,
+            overlap,
+            tracker,
+            assembly,
+            n: n_ranks,
+        }
+    }
+
+    pub fn overlap(&self) -> bool {
+        self.overlap
+    }
+
+    pub fn buckets(&self) -> &Buckets {
+        &self.buckets
+    }
+
+    /// Run one step: produce every rank's gradient, aggregate into `out`,
+    /// and charge compute + communication to the simulated clock.
+    ///
+    /// `grads` is the full `(N, d)` assembly both paths maintain (the
+    /// aggregators' `finalize` needs it); `out` receives the aggregated
+    /// direction. With `overlap = false` this degenerates to the serial
+    /// grad-then-aggregate loop with barrier collectives — same code
+    /// surface, bitwise-identical output.
+    pub fn run_step(
+        &mut self,
+        produce: &mut GradProducer<'_>,
+        agg: &mut dyn Aggregator,
+        grads: &mut GradSet,
+        out: &mut [f32],
+        ctx: &ParallelCtx,
+        clock: &mut SimClock,
+        cost: &CostModel,
+    ) -> Result<StepOutcome> {
+        assert_eq!(grads.n(), self.n);
+        assert_eq!(grads.d(), self.buckets.total());
+        assert_eq!(out.len(), grads.d());
+        let n = self.n;
+        let nb = self.buckets.len();
+        let start_s: Vec<f64> = (0..n).map(|r| clock.rank_time(r)).collect();
+        let mut loss_sum = 0.0f64;
+        let mut compute_s = vec![0.0f64; n];
+
+        let info = if self.overlap {
+            self.tracker.reset();
+            let buckets = &self.buckets;
+            let tracker = &mut self.tracker;
+            let assembly = &mut self.assembly;
+            // Ingest tasks run on pool workers, so their kernels must not
+            // fan out again (a nested barrier would deadlock the pool);
+            // one lane with the same min_shard_elems keeps the shard plan
+            // — and the result bits — identical.
+            let ictx = ParallelCtx::new(ctx.intra_task_policy());
+            let agg_ref: &dyn Aggregator = &*agg;
+            let scope_result = ctx.task_scope(|scope| -> Result<Vec<BucketWork>> {
+                let ictx_ref = &ictx;
+                let mut handles: Vec<_> = (0..nb).map(|_| None).collect();
+                for rank in 0..n {
+                    let mut deliver = |b: usize, cols: &[f32]| {
+                        let (lo, hi) = buckets.range(b);
+                        grads.row_mut(rank)[lo..hi].copy_from_slice(cols);
+                        assembly[b].set_row(rank, cols);
+                        if tracker.arrive(b) {
+                            // Bucket complete: hand its stats work to the
+                            // pool and keep receiving later buckets.
+                            let view =
+                                std::mem::replace(&mut assembly[b], GradSet::zeros(0, 0));
+                            handles[b] = Some(scope.submit(move || {
+                                let w = agg_ref.ingest_bucket(b, &view, 0, view.d(), ictx_ref);
+                                (w, view)
+                            }));
+                        }
+                    };
+                    let (loss, cs) = produce(rank, &mut deliver)?;
+                    loss_sum += loss;
+                    compute_s[rank] = cs;
+                }
+                // Join in fixed bucket order — the only ordering finalize
+                // ever sees — and recover the assembly buffers for reuse.
+                let mut work = Vec::with_capacity(nb);
+                for (b, h) in handles.into_iter().enumerate() {
+                    let h = h.unwrap_or_else(|| panic!("bucket {b} never became ready"));
+                    let (w, view) = h.join();
+                    assembly[b] = view;
+                    work.push(w);
+                }
+                Ok(work)
+            });
+            let work = match scope_result {
+                Ok(work) => work,
+                Err(e) => {
+                    // A producer error can leave bucket stores moved into
+                    // tasks that were never joined; rebuild them so the
+                    // executor stays reusable for a clean retry step.
+                    for (b, (lo, hi)) in self.buckets.iter().enumerate() {
+                        if self.assembly[b].d() != hi - lo {
+                            self.assembly[b] = GradSet::zeros(self.n, hi - lo);
+                        }
+                    }
+                    return Err(e);
+                }
+            };
+            agg.finalize(grads, &self.buckets, work, out, ctx)
+        } else {
+            for rank in 0..n {
+                let mut deliver = |b: usize, cols: &[f32]| {
+                    let (lo, hi) = self.buckets.range(b);
+                    grads.row_mut(rank)[lo..hi].copy_from_slice(cols);
+                };
+                let (loss, cs) = produce(rank, &mut deliver)?;
+                loss_sum += loss;
+                compute_s[rank] = cs;
+            }
+            agg.aggregate_ctx(grads, &self.buckets, out, ctx)
+        };
+
+        // --- simulated-time accounting ---
+        for (r, &cs) in compute_s.iter().enumerate() {
+            clock.advance(r, cs);
+        }
+        let compute_end = clock.now();
+        let (exposed_comm_s, serial_comm_s) = if self.overlap {
+            let step_start = start_s.iter().cloned().fold(0.0, f64::max);
+            let mut tl = StepTimeline::new(step_start);
+            for op in &info.comm {
+                let dur = cost.time_s(op.kind, op.bytes);
+                let ready = match op.bucket {
+                    Some(b) => bucket_ready_s(&start_s, &compute_s, b, nb),
+                    None => compute_end,
+                };
+                tl.post(ready, dur);
+            }
+            let exposed = tl.exposed_s(compute_end);
+            tl.commit(clock);
+            (exposed, tl.serial_s())
+        } else {
+            // Barrier semantics, op by op — exactly the pre-pipeline
+            // accounting (every transfer is exposed).
+            let mut serial = 0.0;
+            for op in &info.comm {
+                let dur = cost.time_s(op.kind, op.bytes);
+                clock.collective(dur);
+                serial += dur;
+            }
+            (serial, serial)
+        };
+
+        Ok(StepOutcome {
+            info,
+            mean_loss: loss_sum / n as f64,
+            exposed_comm_s,
+            serial_comm_s,
+        })
+    }
+}
+
+/// Simulated readiness of bucket `b`: each rank emits its buckets
+/// uniformly across its backward pass (the `overlap::exposed_comm_s`
+/// model, per rank), and the bucket is ready once the slowest rank has
+/// emitted it — stragglers delay every bucket proportionally.
+fn bucket_ready_s(start_s: &[f64], compute_s: &[f64], b: usize, n_buckets: usize) -> f64 {
+    let frac = (b + 1) as f64 / n_buckets as f64;
+    start_s
+        .iter()
+        .zip(compute_s)
+        .map(|(s, c)| s + frac * c)
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregation;
+    use crate::collective::Topology;
+    use crate::parallel::ParallelPolicy;
+    use crate::tensor::ops::CHUNK;
+    use crate::util::prng::Rng;
+
+    fn rows(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..d).map(|_| rng.normal_f32(1.0)).collect())
+            .collect()
+    }
+
+    /// Producer replaying fixed rows with fixed per-rank compute times.
+    fn replay_producer<'a>(
+        rows: &'a [Vec<f32>],
+        buckets: &'a Buckets,
+        compute_s: &'a [f64],
+    ) -> impl FnMut(usize, &mut dyn FnMut(usize, &[f32])) -> Result<(f64, f64)> + 'a {
+        move |rank, deliver| {
+            for (b, (lo, hi)) in buckets.iter().enumerate() {
+                deliver(b, &rows[rank][lo..hi]);
+            }
+            Ok((0.0, compute_s[rank]))
+        }
+    }
+
+    fn run_mode(
+        overlap: bool,
+        threads: usize,
+        name: &str,
+        rows_data: &[Vec<f32>],
+        buckets: &Buckets,
+        compute: &[f64],
+    ) -> (Vec<f32>, StepOutcome, SimClock) {
+        let n = rows_data.len();
+        let d = buckets.total();
+        let ctx = ParallelCtx::new(ParallelPolicy {
+            threads,
+            min_shard_elems: CHUNK,
+        });
+        let mut agg = aggregation::by_name(name, n).unwrap();
+        let mut exec = PipelinedExecutor::new(n, buckets.clone(), overlap);
+        let mut grads = GradSet::zeros(n, d);
+        let mut out = vec![0.0f32; d];
+        let mut clock = SimClock::new(n);
+        let cost = CostModel::from_topology(&Topology::ring_gbps(n, 100.0));
+        let mut produce = replay_producer(rows_data, buckets, compute);
+        let outcome = exec
+            .run_step(
+                &mut produce,
+                agg.as_mut(),
+                &mut grads,
+                &mut out,
+                &ctx,
+                &mut clock,
+                &cost,
+            )
+            .unwrap();
+        (out, outcome, clock)
+    }
+
+    #[test]
+    fn overlap_on_equals_off_bitwise_smoke() {
+        let d = 3 * CHUNK + 77;
+        let data = rows(4, d, 11);
+        let buckets = Buckets::fixed(d, CHUNK + 13); // ragged, unaligned
+        let compute = vec![0.01; 4];
+        for name in ["adacons", "mean", "median"] {
+            let (on, _, _) = run_mode(true, 3, name, &data, &buckets, &compute);
+            let (off, _, _) = run_mode(false, 3, name, &data, &buckets, &compute);
+            assert_eq!(on, off, "{name}");
+        }
+    }
+
+    #[test]
+    fn overlap_exposes_less_comm_than_serial_accounting() {
+        let d = 4 * CHUNK;
+        let data = rows(4, d, 5);
+        let buckets = Buckets::fixed(d, CHUNK);
+        let compute = vec![0.05; 4];
+        let (_, on, _) = run_mode(true, 2, "adacons", &data, &buckets, &compute);
+        assert!(
+            on.exposed_comm_s < on.serial_comm_s,
+            "{} vs {}",
+            on.exposed_comm_s,
+            on.serial_comm_s
+        );
+        let (_, off, _) = run_mode(false, 2, "adacons", &data, &buckets, &compute);
+        assert!((off.exposed_comm_s - off.serial_comm_s).abs() < 1e-15);
+        assert!((on.serial_comm_s - off.serial_comm_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn producer_error_propagates_cleanly() {
+        let d = 2 * CHUNK;
+        let n = 3;
+        let data = rows(n, d, 7);
+        let buckets = Buckets::fixed(d, CHUNK);
+        let ctx = ParallelCtx::new(ParallelPolicy {
+            threads: 2,
+            min_shard_elems: CHUNK,
+        });
+        let mut agg = aggregation::by_name("mean", n).unwrap();
+        let mut exec = PipelinedExecutor::new(n, buckets.clone(), true);
+        let mut grads = GradSet::zeros(n, d);
+        let mut out = vec![0.0f32; d];
+        let mut clock = SimClock::new(n);
+        let cost = CostModel::from_topology(&Topology::ring_gbps(n, 100.0));
+        let mut produce = |rank: usize,
+                           deliver: &mut dyn FnMut(usize, &[f32])|
+         -> Result<(f64, f64)> {
+            if rank == 2 {
+                return Err(crate::err!("rank 2 fell over"));
+            }
+            for (b, (lo, hi)) in buckets.iter().enumerate() {
+                deliver(b, &data[rank][lo..hi]);
+            }
+            Ok((0.0, 0.01))
+        };
+        let r = exec.run_step(
+            &mut produce,
+            agg.as_mut(),
+            &mut grads,
+            &mut out,
+            &ctx,
+            &mut clock,
+            &cost,
+        );
+        assert!(r.is_err());
+        // The executor must stay reusable after a failed step (bucket
+        // stores that were moved into tasks are rebuilt on the error
+        // path): a clean retry produces the correct aggregate.
+        let mut retry = |rank: usize,
+                         deliver: &mut dyn FnMut(usize, &[f32])|
+         -> Result<(f64, f64)> {
+            for (b, (lo, hi)) in buckets.iter().enumerate() {
+                deliver(b, &data[rank][lo..hi]);
+            }
+            Ok((0.0, 0.01))
+        };
+        exec.run_step(
+            &mut retry,
+            agg.as_mut(),
+            &mut grads,
+            &mut out,
+            &ctx,
+            &mut clock,
+            &cost,
+        )
+        .unwrap();
+        let mut expect = vec![0.0f32; d];
+        GradSet::from_rows(&data).mean_into(&mut expect);
+        assert_eq!(out, expect);
+    }
+}

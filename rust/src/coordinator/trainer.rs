@@ -1,18 +1,23 @@
 //! The synchronous data-parallel training loop (Alg. 1 embedding).
 //!
 //! Per step: every rank draws its shard batch and computes a local
-//! gradient through the shared PJRT executable; the aggregator combines
-//! them (AdaCons or a baseline); optional global-norm clipping; the
-//! optimizer steps the master parameters.  Compute and communication are
-//! charged to a [`SimClock`] through the α-β cost model so iteration
-//! timing can be reported for fabrics we do not have (Table 1).
+//! gradient through the shared PJRT executable, delivering it bucket by
+//! bucket to the [`PipelinedExecutor`]; the aggregator combines them
+//! (AdaCons or a baseline) — with `overlap` on, each bucket's phase-1
+//! statistics run on the worker pool while later buckets are still
+//! arriving; optional global-norm clipping; the optimizer steps the
+//! master parameters.  Compute and communication are charged to a
+//! [`SimClock`] through the α-β cost model and the per-step event
+//! timeline, so iteration timing *and exposed communication* can be
+//! reported for fabrics we do not have (Table 1, §5.1).
 
 use std::sync::Arc;
 
-use crate::aggregation::{self, AggInfo, Aggregator, CoeffStages};
+use crate::aggregation::{self, Aggregator, CoeffStages};
 use crate::collective::{CostModel, SimClock, Topology};
 use crate::config::TrainConfig;
 use crate::coordinator::eval::{EvalOutcome, Evaluator};
+use crate::coordinator::pipeline::PipelinedExecutor;
 use crate::optim::{self, clip_global_norm, Optimizer};
 use crate::parallel::{ParPlan, ParallelCtx};
 use crate::runtime::{Executable, Runtime};
@@ -49,6 +54,14 @@ pub struct TrainResult {
     pub effective_batch: usize,
     /// Thread/shard choices the aggregation engine made (last step).
     pub agg_par: Option<ParPlan>,
+    /// Whether the step loop ran with comm/compute overlap.
+    pub overlap: bool,
+    /// Mean simulated communication per step not hidden behind compute
+    /// (event-timeline accounting; == `serial_comm_s` with overlap off).
+    pub exposed_comm_s: f64,
+    /// Mean simulated communication per step under the unpipelined
+    /// accounting (every transfer exposed).
+    pub serial_comm_s: f64,
 }
 
 impl TrainResult {
@@ -189,36 +202,54 @@ impl Trainer {
             Some(p) => Some(crate::metrics::JsonlWriter::create(p)?),
             None => None,
         };
+        let mut exec = PipelinedExecutor::new(n, self.buckets.clone(), self.cfg.overlap);
+        let mut exposed_comm_total = 0.0f64;
+        let mut serial_comm_total = 0.0f64;
         let wall = Timer::start();
 
         for step in self.start_step..self.start_step + self.cfg.steps {
-            // --- local gradients (parallel on real hardware; charged to the
-            //     sim clock per rank, executed round-robin on this 1-CPU host)
-            let mut loss_sum = 0.0f64;
-            phases.time("grad", || -> Result<()> {
-                for w in &mut self.workers {
-                    let rank = w.rank;
-                    w.compute_grad(&self.exe, &self.params, local_batch, grads.row_mut(rank))?;
-                    loss_sum += w.last_loss as f64;
-                    clock.advance(rank, w.last_compute_s);
-                }
-                Ok(())
-            })?;
-            train_loss.push(loss_sum / n as f64);
-
-            // --- aggregation (the paper) + comm cost accounting; tensor
-            //     kernels fan out over the persistent worker pool
-            let info: AggInfo = phases.time("aggregate", || {
-                self.aggregator
-                    .aggregate_ctx(&grads, &self.buckets, &mut agg, &self.par)
-            });
-            for (kind, bytes) in &info.comm {
-                clock.collective(self.cost.time_s(*kind, *bytes));
+            // --- event-driven step: ranks deliver gradients bucket by
+            //     bucket (round-robin on this 1-CPU host, parallel on real
+            //     hardware); ready buckets' statistics run on the worker
+            //     pool while later buckets arrive; compute + comm are
+            //     charged to the sim clock through the event timeline.
+            let step_t = Timer::start();
+            let mut grad_s = 0.0f64;
+            let outcome = {
+                let (workers, exe, params, buckets) = (
+                    &mut self.workers,
+                    &self.exe,
+                    &self.params,
+                    &self.buckets,
+                );
+                let mut produce = |rank: usize,
+                                   deliver: &mut dyn FnMut(usize, &[f32])|
+                 -> Result<(f64, f64)> {
+                    let t = Timer::start();
+                    let w = &mut workers[rank];
+                    w.compute_grad_buckets(exe, params, local_batch, buckets, deliver)?;
+                    grad_s += t.elapsed_s();
+                    Ok((w.last_loss as f64, w.last_compute_s))
+                };
+                exec.run_step(
+                    &mut produce,
+                    self.aggregator.as_mut(),
+                    &mut grads,
+                    &mut agg,
+                    &self.par,
+                    &mut clock,
+                    &self.cost,
+                )?
+            };
+            phases.add("grad", grad_s);
+            phases.add("aggregate", (step_t.elapsed_s() - grad_s).max(0.0));
+            train_loss.push(outcome.mean_loss);
+            exposed_comm_total += outcome.exposed_comm_s;
+            serial_comm_total += outcome.serial_comm_s;
+            if outcome.info.par.is_some() {
+                agg_par = outcome.info.par;
             }
-            if info.par.is_some() {
-                agg_par = info.par;
-            }
-            if let Some(stages) = info.coeff_stages {
+            if let Some(stages) = outcome.info.coeff_stages {
                 if self.cfg.log_every > 0 && step % self.cfg.log_every == 0 {
                     coeff_log.push((step, stages));
                 }
@@ -261,6 +292,7 @@ impl Trainer {
                     ("train_loss", num(*train_loss.last().unwrap())),
                     ("lr", num(self.cfg.schedule.lr(step))),
                     ("sim_time_s", num(clock.now())),
+                    ("exposed_comm_s", num(outcome.exposed_comm_s)),
                     ("aggregator", s(&self.cfg.aggregator)),
                 ];
                 if let Some(e) = evals.last() {
@@ -288,6 +320,9 @@ impl Trainer {
             final_params: self.params.clone(),
             effective_batch: n * local_batch,
             agg_par,
+            overlap: self.cfg.overlap,
+            exposed_comm_s: exposed_comm_total / steps,
+            serial_comm_s: serial_comm_total / steps,
         })
     }
 }

@@ -26,7 +26,8 @@ USAGE:
                 [--optimizer sgd|sgd-momentum|adam|adamw|lamb|linreg-exact]
                 [--schedule const:LR|cosine:LR:WARM:TOTAL|step:LR:EVERY:G|invsqrt:LR:WARM]
                 [--steps N] [--eval-every N] [--seed S] [--clip C|none]
-                [--bucket-cap N] [--heterogeneity H] [--inject RANK:SPEC]
+                [--bucket-cap N] [--overlap on|off] [--heterogeneity H]
+                [--inject RANK:SPEC] [--par-threads N] [--par-min-shard-elems N]
                 [--fabric-gbps G] [--save-checkpoint PATH] [--load-checkpoint PATH]
                 [--csv PATH]
   adacons figure fig2|fig3|fig4|fig5|fig6|fig7|fig8|all [--out-dir DIR] [--steps-scale F]
@@ -110,6 +111,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         res.wall_iter_s * 1e3,
         res.sim_iter_s * 1e3,
         cfg.fabric_gbps
+    );
+    println!(
+        "exposed comm: {:.4} ms/iter (overlap {}; unpipelined {:.4} ms)",
+        res.exposed_comm_s * 1e3,
+        if res.overlap { "on" } else { "off" },
+        res.serial_comm_s * 1e3,
     );
     print!("{}", res.phases.report());
     if let Some(path) = args.str_opt("save-checkpoint") {

@@ -13,12 +13,18 @@
 //!   reproducible regardless of threads) and
 //!   [`ParallelCtx::for_each_out_shard`] (disjoint output slices, one per
 //!   shard, trivially order-independent).
+//! * [`task`] — non-blocking submission ([`TaskScope::submit`] +
+//!   [`TaskHandle::join`]) layered on the same pool, used by the
+//!   pipelined step executor to overlap per-bucket aggregation work with
+//!   gradient arrival.
 
 pub mod plan;
 pub mod pool;
+pub mod task;
 
 pub use plan::{plan_shards, shard_elems, MAX_SHARDS};
 pub use pool::{Job, WorkerPool};
+pub use task::{TaskHandle, TaskScope};
 
 /// Default minimum shard width: 64K f32 columns = 256 KiB per worker row
 /// slice, big enough that queue traffic is noise next to the member work.
@@ -118,6 +124,28 @@ impl ParallelCtx {
     /// Run pre-built jobs on the pool (blocks until all finish).
     pub fn run<'scope>(&self, jobs: Vec<Job<'scope>>) {
         self.pool.run_scope(jobs);
+    }
+
+    /// Open a non-blocking submission window on the pool (see
+    /// [`task::TaskScope::submit`]): the pipelined executor hands each
+    /// ready bucket's aggregation work to the pool here and keeps
+    /// processing later buckets while it runs.
+    pub fn task_scope<'env, F, R>(&'env self, f: F) -> R
+    where
+        F: for<'scope> FnOnce(&'scope TaskScope<'scope, 'env>) -> R,
+    {
+        self.pool.task_scope(f)
+    }
+
+    /// Policy for work running *inside* a submitted task: one lane (a
+    /// nested fan-out from a pool worker would deadlock the pool), same
+    /// `min_shard_elems` so the shard plan — and therefore the fixed-order
+    /// partial reduction — is bit-identical to this context's.
+    pub fn intra_task_policy(&self) -> ParallelPolicy {
+        ParallelPolicy {
+            threads: 1,
+            min_shard_elems: self.policy.min_shard_elems,
+        }
     }
 
     /// Map every shard of `[lo, hi)` to a partial value (in parallel),

@@ -116,6 +116,25 @@ impl WorkerPool {
         self.threads
     }
 
+    /// Enqueue one type-erased job without waiting for it.
+    ///
+    /// # Safety
+    /// The caller must guarantee the job runs to completion before any
+    /// borrow it holds expires — the task-scope layer does this by
+    /// refusing to return until its pending count is zero. Must not be
+    /// called on a one-lane pool (no workers exist to drain the queue).
+    pub(crate) unsafe fn push_job<'a>(&self, job: Job<'a>) {
+        debug_assert!(self.threads > 1, "push_job on a one-lane pool");
+        {
+            let mut p = self.state.pending.lock().unwrap();
+            *p += 1;
+        }
+        let job: Job<'static> = std::mem::transmute::<Job<'a>, Job<'static>>(job);
+        let mut q = self.state.queue.lock().unwrap();
+        q.jobs.push_back(job);
+        self.state.job_ready.notify_one();
+    }
+
     /// Run `jobs` to completion, in parallel across the pool. Blocks until
     /// every job has finished, so jobs may borrow data owned by the caller.
     /// Panics (after draining) if any job panicked on a worker thread.

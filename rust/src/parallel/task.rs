@@ -1,0 +1,278 @@
+//! Non-blocking task submission on the persistent pool.
+//!
+//! [`WorkerPool::run_scope`] is a barrier: it blocks until every job in
+//! the batch finishes, which is the right shape for a fan-out kernel but
+//! the wrong one for pipelining — the pipelined step loop needs to hand a
+//! ready bucket's aggregation work to the pool and *keep going* while
+//! later buckets are still arriving. [`TaskScope::submit`] provides that:
+//! it enqueues one job and returns a [`TaskHandle`] immediately; the
+//! caller joins handles later, in whatever order the algorithm needs
+//! (the pipelined executor joins in fixed bucket order, which is what
+//! keeps results bitwise-identical to the serial path).
+//!
+//! Soundness mirrors `std::thread::scope`: tasks may borrow anything that
+//! outlives the [`WorkerPool::task_scope`] call, because `task_scope`
+//! refuses to return (even on unwind) until every submitted task has
+//! finished. Handles carry the scope lifetime, so they cannot escape.
+//!
+//! On a one-lane pool the submitted task runs inline on the caller —
+//! the serial path shares 100% of the code with the pipelined one, and a
+//! later `join` can never block on workers that do not exist.
+
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::pool::{Job, WorkerPool};
+
+enum SlotState<T> {
+    Pending,
+    Done(T),
+    Panicked,
+}
+
+struct TaskSlot<T> {
+    state: Mutex<SlotState<T>>,
+    done: Condvar,
+}
+
+impl<T> TaskSlot<T> {
+    fn new() -> Self {
+        TaskSlot {
+            state: Mutex::new(SlotState::Pending),
+            done: Condvar::new(),
+        }
+    }
+
+    fn fill(&self, v: Result<T, ()>) {
+        let mut st = self.state.lock().unwrap();
+        *st = match v {
+            Ok(v) => SlotState::Done(v),
+            Err(()) => SlotState::Panicked,
+        };
+        self.done.notify_all();
+    }
+}
+
+/// Handle to one in-flight task. Dropping without joining is allowed —
+/// the scope still waits for the task before returning.
+pub struct TaskHandle<'scope, T> {
+    slot: Arc<TaskSlot<T>>,
+    _scope: PhantomData<&'scope ()>,
+}
+
+impl<T> TaskHandle<'_, T> {
+    /// Block until the task finishes and return its result. Panics if the
+    /// task panicked (the payload is reported on the worker's stderr).
+    pub fn join(self) -> T {
+        let mut st = self.slot.state.lock().unwrap();
+        loop {
+            match std::mem::replace(&mut *st, SlotState::Pending) {
+                SlotState::Done(v) => return v,
+                SlotState::Panicked => panic!("a submitted pool task panicked"),
+                SlotState::Pending => st = self.slot.done.wait(st).unwrap(),
+            }
+        }
+    }
+}
+
+struct ScopeState {
+    pending: Mutex<usize>,
+    all_done: Condvar,
+}
+
+/// An open submission window on the pool; created by
+/// [`WorkerPool::task_scope`].
+pub struct TaskScope<'scope, 'env: 'scope> {
+    pool: &'scope WorkerPool,
+    state: Arc<ScopeState>,
+    _scope: PhantomData<&'scope mut &'scope ()>,
+    _env: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'scope, 'env> TaskScope<'scope, 'env> {
+    /// Enqueue `f` on the pool and return a handle without blocking. On a
+    /// one-lane pool `f` runs inline before `submit` returns.
+    pub fn submit<T, F>(&'scope self, f: F) -> TaskHandle<'scope, T>
+    where
+        T: Send + 'scope,
+        F: FnOnce() -> T + Send + 'scope,
+    {
+        let slot = Arc::new(TaskSlot::new());
+        if self.pool.threads() == 1 {
+            // Inline serial path: no workers exist to drain the queue, and
+            // running here keeps the code path identical to the pool one.
+            slot.fill(catch_unwind(AssertUnwindSafe(f)).map_err(|_| ()));
+            return TaskHandle {
+                slot,
+                _scope: PhantomData,
+            };
+        }
+        {
+            let mut p = self.state.pending.lock().unwrap();
+            *p += 1;
+        }
+        let state = self.state.clone();
+        let task_slot = slot.clone();
+        let job: Job<'scope> = Box::new(move || {
+            // Catch here (not in the pool's run_job) so a task panic is
+            // reported through the handle instead of poisoning the pool's
+            // scoped-batch panic flag.
+            task_slot.fill(catch_unwind(AssertUnwindSafe(f)).map_err(|_| ()));
+            let mut p = state.pending.lock().unwrap();
+            *p -= 1;
+            if *p == 0 {
+                state.all_done.notify_all();
+            }
+        });
+        // SAFETY: task_scope waits (even on unwind) until this scope's
+        // pending count returns to zero before returning, so the job runs
+        // to completion while every 'scope borrow it holds is still live.
+        unsafe { self.pool.push_job(job) };
+        TaskHandle {
+            slot,
+            _scope: PhantomData,
+        }
+    }
+
+    fn wait_all(&self) {
+        let mut p = self.state.pending.lock().unwrap();
+        while *p != 0 {
+            p = self.state.all_done.wait(p).unwrap();
+        }
+    }
+}
+
+impl WorkerPool {
+    /// Open a submission window: `f` may [`TaskScope::submit`] tasks that
+    /// borrow anything outliving this call; `task_scope` returns only
+    /// after every submitted task has finished (unwind-safe, like
+    /// `std::thread::scope`).
+    pub fn task_scope<'env, F, R>(&'env self, f: F) -> R
+    where
+        F: for<'scope> FnOnce(&'scope TaskScope<'scope, 'env>) -> R,
+    {
+        let scope = TaskScope {
+            pool: self,
+            state: Arc::new(ScopeState {
+                pending: Mutex::new(0),
+                all_done: Condvar::new(),
+            }),
+            _scope: PhantomData,
+            _env: PhantomData,
+        };
+        // Wait for stragglers even if `f` unwinds mid-scope — in-flight
+        // tasks borrow 'env data, so returning (or unwinding past this
+        // frame) before they finish would be unsound.
+        let r = catch_unwind(AssertUnwindSafe(|| f(&scope)));
+        scope.wait_all();
+        match r {
+            Ok(v) => v,
+            Err(payload) => std::panic::resume_unwind(payload),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn submit_and_join_returns_results() {
+        let pool = WorkerPool::new(4);
+        let data: Vec<u64> = (0..32).collect();
+        let total: u64 = pool.task_scope(|scope| {
+            let handles: Vec<_> = data
+                .chunks(8)
+                .map(|c| scope.submit(move || c.iter().sum::<u64>()))
+                .collect();
+            handles.into_iter().map(|h| h.join()).sum()
+        });
+        assert_eq!(total, (0..32).sum::<u64>());
+    }
+
+    #[test]
+    fn one_lane_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        let mut log = Vec::new();
+        pool.task_scope(|scope| {
+            for i in 0..4 {
+                let h = scope.submit(move || i * 10);
+                log.push(h.join());
+            }
+        });
+        assert_eq!(log, vec![0, 10, 20, 30]);
+    }
+
+    #[test]
+    fn scope_waits_for_unjoined_tasks() {
+        let pool = WorkerPool::new(3);
+        let hits = AtomicUsize::new(0);
+        pool.task_scope(|scope| {
+            for _ in 0..16 {
+                // Handles dropped without join: the scope must still wait.
+                let _ = scope.submit(|| {
+                    hits.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn panicking_task_propagates_through_join_only() {
+        let pool = WorkerPool::new(4);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.task_scope(|scope| {
+                let ok = scope.submit(|| 7u32);
+                let bad = scope.submit(|| panic!("task boom"));
+                assert_eq!(ok.join(), 7);
+                bad.join()
+            })
+        }));
+        assert!(r.is_err());
+        // The pool's scoped-batch path stays clean after a task panic.
+        let mut v = vec![0u32; 4];
+        let jobs: Vec<Job<'_>> = v
+            .iter_mut()
+            .map(|slot| Box::new(move || *slot = 9) as Job<'_>)
+            .collect();
+        pool.run_scope(jobs);
+        assert_eq!(v, vec![9; 4]);
+    }
+
+    #[test]
+    fn tasks_overlap_with_caller_work() {
+        // The caller keeps executing between submit and join; the task's
+        // side effect lands by join time at the latest.
+        let pool = WorkerPool::new(2);
+        let x = pool.task_scope(|scope| {
+            let h = scope.submit(|| 21u32);
+            let local = 2u32; // caller-side "overlapped" work
+            h.join() * local
+        });
+        assert_eq!(x, 42);
+    }
+
+    #[test]
+    fn interleaves_with_run_scope_batches() {
+        // A task in flight must not corrupt the pending accounting of a
+        // concurrent run_scope barrier on the same pool.
+        let pool = WorkerPool::new(4);
+        pool.task_scope(|scope| {
+            let h = scope.submit(|| {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                1u32
+            });
+            let mut v = vec![0u32; 8];
+            let jobs: Vec<Job<'_>> = v
+                .iter_mut()
+                .map(|slot| Box::new(move || *slot = 3) as Job<'_>)
+                .collect();
+            pool.run_scope(jobs);
+            assert_eq!(v, vec![3; 8]);
+            assert_eq!(h.join(), 1);
+        });
+    }
+}

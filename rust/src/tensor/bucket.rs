@@ -60,6 +60,52 @@ impl Buckets {
     pub fn iter(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
         (0..self.len()).map(|i| self.range(i))
     }
+
+    /// Payload bytes of bucket `i` (f32 columns).
+    pub fn bytes(&self, i: usize) -> usize {
+        let (lo, hi) = self.range(i);
+        (hi - lo) * 4
+    }
+}
+
+/// Arrival bookkeeping for the pipelined executor: bucket `b` becomes
+/// *ready* — eligible for its aggregation task and its simulated
+/// collective — once every rank has delivered it.
+#[derive(Debug, Clone)]
+pub struct BucketTracker {
+    counts: Vec<usize>,
+    ranks: usize,
+}
+
+impl BucketTracker {
+    pub fn new(n_buckets: usize, n_ranks: usize) -> Self {
+        assert!(n_ranks > 0);
+        BucketTracker {
+            counts: vec![0; n_buckets],
+            ranks: n_ranks,
+        }
+    }
+
+    /// Clear arrivals for the next step.
+    pub fn reset(&mut self) {
+        self.counts.iter_mut().for_each(|c| *c = 0);
+    }
+
+    /// Record one rank's delivery of bucket `b`; returns `true` exactly
+    /// when this arrival completes the bucket (ready-edge trigger).
+    pub fn arrive(&mut self, b: usize) -> bool {
+        self.counts[b] += 1;
+        assert!(
+            self.counts[b] <= self.ranks,
+            "bucket {b} delivered more than once per rank"
+        );
+        self.counts[b] == self.ranks
+    }
+
+    /// True once every rank has delivered bucket `b`.
+    pub fn ready(&self, b: usize) -> bool {
+        self.counts[b] == self.ranks
+    }
 }
 
 #[cfg(test)]
@@ -102,5 +148,26 @@ mod tests {
         let b = Buckets::fixed(8, 4);
         assert_eq!(b.len(), 2);
         assert_eq!(b.range(1), (4, 8));
+    }
+
+    #[test]
+    fn tracker_fires_once_per_bucket() {
+        let mut t = BucketTracker::new(2, 3);
+        assert!(!t.arrive(0));
+        assert!(!t.arrive(0));
+        assert!(!t.ready(0));
+        assert!(t.arrive(0)); // third rank completes it
+        assert!(t.ready(0));
+        assert!(!t.ready(1));
+        t.reset();
+        assert!(!t.ready(0));
+        assert!(!t.arrive(0));
+    }
+
+    #[test]
+    fn bucket_bytes() {
+        let b = Buckets::fixed(10, 4);
+        assert_eq!(b.bytes(0), 16);
+        assert_eq!(b.bytes(2), 8); // ragged tail
     }
 }

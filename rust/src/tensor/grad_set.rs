@@ -123,10 +123,18 @@ impl GradSet {
     /// the accumulator stays in L1 instead of streaming the whole d-vector
     /// through memory N times (§Perf).
     pub fn mean_into_ctx(&self, out: &mut [f32], ctx: &ParallelCtx) {
-        assert_eq!(out.len(), self.d);
+        self.mean_range_into_ctx(0, self.d, out, ctx)
+    }
+
+    /// Mean restricted to a column range (per-bucket view). Column outputs
+    /// are independent, so this is bitwise-identical to the corresponding
+    /// slice of the full-range mean at any shard plan or thread count.
+    pub fn mean_range_into_ctx(&self, lo: usize, hi: usize, out: &mut [f32], ctx: &ParallelCtx) {
+        assert!(lo <= hi && hi <= self.d);
+        assert_eq!(out.len(), hi - lo);
         let inv_n = 1.0 / self.n as f32;
         let (data, n, d) = (&self.data, self.n, self.d);
-        ctx.for_each_out_shard(0, d, out, |slo, shi, oslice| {
+        ctx.for_each_out_shard(lo, hi, out, |slo, shi, oslice| {
             let mut start = slo;
             while start < shi {
                 let end = (start + CHUNK).min(shi);
@@ -244,13 +252,44 @@ impl GradSet {
 
     /// Full N x N Gram matrix (preconditioner perspective, Eq. 9); used by
     /// Adasum-style baselines and diagnostics, not the AdaCons hot path.
+    /// Serial wrapper over the sharded kernel.
     pub fn gram(&self) -> Vec<f64> {
-        let mut g = vec![0.0f64; self.n * self.n];
-        for i in 0..self.n {
-            for j in i..self.n {
-                let v = ops::dot(self.row(i), self.row(j));
-                g[i * self.n + j] = v;
-                g[j * self.n + i] = v;
+        self.gram_ctx(&ParallelCtx::serial())
+    }
+
+    /// Sharded Gram matrix: each shard computes every pair's partial dot
+    /// over its columns (upper triangle only), the per-shard `N x N` f64
+    /// partials are folded by the context's fixed-order tree, then the
+    /// triangle is mirrored. The fold shape depends only on the shard
+    /// plan, so the result is bitwise-identical at any thread count
+    /// (covered by `tests/parallel_equivalence.rs`).
+    pub fn gram_ctx(&self, ctx: &ParallelCtx) -> Vec<f64> {
+        let (data, n, d) = (&self.data, self.n, self.d);
+        let folded = ctx.map_reduce(
+            0,
+            d,
+            |slo, shi| {
+                let mut g = vec![0.0f64; n * n];
+                for i in 0..n {
+                    let ri = &data[i * d + slo..i * d + shi];
+                    for j in i..n {
+                        let rj = &data[j * d + slo..j * d + shi];
+                        g[i * n + j] = ops::dot(ri, rj);
+                    }
+                }
+                g
+            },
+            |mut a, b| {
+                for (x, y) in a.iter_mut().zip(&b) {
+                    *x += *y;
+                }
+                a
+            },
+        );
+        let mut g = folded.unwrap_or_else(|| vec![0.0f64; n * n]);
+        for i in 0..n {
+            for j in i + 1..n {
+                g[j * n + i] = g[i * n + j];
             }
         }
         g

@@ -7,5 +7,5 @@ pub mod bucket;
 pub mod grad_set;
 pub mod ops;
 
-pub use bucket::Buckets;
+pub use bucket::{BucketTracker, Buckets};
 pub use grad_set::GradSet;

@@ -11,6 +11,7 @@
 
 use crate::data::{Batch, DataGen, GradInjector};
 use crate::runtime::Executable;
+use crate::tensor::Buckets;
 use crate::util::error::Result;
 use crate::util::prng::Rng;
 
@@ -59,6 +60,34 @@ impl Worker {
         self.last_loss = loss;
         grad_out.copy_from_slice(&grads);
         self.injector.apply(grad_out, &mut self.inject_rng);
+        Ok(())
+    }
+
+    /// Compute the local gradient via the existing executable, then
+    /// deliver it **bucket by bucket** through `on_bucket(b, columns)` in
+    /// bucket order — the DDP-style arrival surface the pipelined
+    /// executor consumes (on real hardware each bucket would fire as the
+    /// backward pass reaches it; here the full gradient exists first and
+    /// the buckets replay its arrival). Injection is applied before
+    /// delivery, so downstream consumers see exactly what `compute_grad`
+    /// would have produced.
+    pub fn compute_grad_buckets(
+        &mut self,
+        exe: &Executable,
+        params: &[f32],
+        local_batch: usize,
+        buckets: &Buckets,
+        on_bucket: &mut dyn FnMut(usize, &[f32]),
+    ) -> Result<()> {
+        let batch = self.next_batch(local_batch);
+        let t = crate::util::timer::Timer::start();
+        let (loss, mut grads) = exe.run_train(params, &batch)?;
+        self.last_compute_s = t.elapsed_s();
+        self.last_loss = loss;
+        self.injector.apply(&mut grads, &mut self.inject_rng);
+        for (b, (lo, hi)) in buckets.iter().enumerate() {
+            on_bucket(b, &grads[lo..hi]);
+        }
         Ok(())
     }
 }

@@ -9,8 +9,11 @@
 //! must additionally be bitwise-stable across *different shard plans*.
 
 use adacons::aggregation::{self, Aggregator};
+use adacons::collective::{CostModel, SimClock, Topology};
+use adacons::coordinator::pipeline::PipelinedExecutor;
 use adacons::parallel::{ParallelCtx, ParallelPolicy};
 use adacons::tensor::{grad_set::CHUNK, Buckets, GradSet};
+use adacons::util::error::Result;
 use adacons::util::proptest::run_cases;
 
 fn nproc() -> usize {
@@ -138,6 +141,175 @@ fn all_aggregators_bitwise_equal_across_thread_counts() {
                     "{name} shard plan must not depend on threads"
                 );
             }
+        }
+    }
+}
+
+#[test]
+fn gram_bitwise_equal_across_thread_counts() {
+    for (k, &d) in [500usize, 3 * 1024 + 17, 50_000].iter().enumerate() {
+        let gs = random_set(6, d, 0x6A + k as u64);
+        let base = gs.gram_ctx(&ctx(1, CHUNK));
+        for t in thread_grid() {
+            assert_eq!(base, gs.gram_ctx(&ctx(t, CHUNK)), "gram differs at d={d} t={t}");
+        }
+        // Serial wrapper == auto-threaded context at the default policy.
+        let auto = gs.gram_ctx(&ParallelCtx::new(ParallelPolicy::default()));
+        assert_eq!(gs.gram(), auto, "gram wrapper differs at d={d}");
+    }
+}
+
+/// Drive one pipelined step over fixed synthetic rows; returns the
+/// aggregated output and the step's simulated clock + comm accounting.
+fn pipelined_step(
+    name: &str,
+    rows: &[Vec<f32>],
+    buckets: &Buckets,
+    threads: usize,
+    min_shard: usize,
+    overlap: bool,
+    compute_s: &[f64],
+) -> (Vec<f32>, adacons::coordinator::pipeline::StepOutcome, SimClock) {
+    let n = rows.len();
+    let d = buckets.total();
+    let ctx = ctx(threads, min_shard);
+    let mut agg = aggregation::by_name(name, n).unwrap();
+    let mut exec = PipelinedExecutor::new(n, buckets.clone(), overlap);
+    let mut grads = GradSet::zeros(n, d);
+    let mut out = vec![0.0f32; d];
+    let mut clock = SimClock::new(n);
+    let cost = CostModel::from_topology(&Topology::ring_gbps(n, 100.0));
+    let mut produce = |rank: usize,
+                       deliver: &mut dyn FnMut(usize, &[f32])|
+     -> Result<(f64, f64)> {
+        for (b, (lo, hi)) in buckets.iter().enumerate() {
+            deliver(b, &rows[rank][lo..hi]);
+        }
+        Ok((0.0, compute_s[rank]))
+    };
+    let outcome = exec
+        .run_step(
+            &mut produce,
+            agg.as_mut(),
+            &mut grads,
+            &mut out,
+            &ctx,
+            &mut clock,
+            &cost,
+        )
+        .unwrap();
+    (out, outcome, clock)
+}
+
+#[test]
+fn overlap_on_off_and_serial_bitwise_equal_all_aggregators() {
+    // Acceptance gate: overlap on == overlap off == the serial
+    // aggregate_ctx path, for every aggregator, across thread counts and
+    // a ragged bucket tail.
+    let (n, d) = (5, 4 * CHUNK + 311);
+    let gs = random_set(n, d, 0xF00D);
+    let rows: Vec<Vec<f32>> = (0..n).map(|i| gs.row(i).to_vec()).collect();
+    let buckets = Buckets::fixed(d, CHUNK + 700); // CHUNK-unaligned + ragged tail
+    let compute = vec![0.02; n];
+    for name in aggregation::ALL_NAMES {
+        let mut serial_out = vec![0.0f32; d];
+        aggregation::by_name(name, n)
+            .unwrap()
+            .aggregate_ctx(&gs, &buckets, &mut serial_out, &ctx(1, CHUNK));
+        for t in thread_grid() {
+            let (on, _, _) = pipelined_step(name, &rows, &buckets, t, CHUNK, true, &compute);
+            let (off, _, _) = pipelined_step(name, &rows, &buckets, t, CHUNK, false, &compute);
+            assert_eq!(on, off, "{name}: overlap on != off at t={t}");
+            assert_eq!(on, serial_out, "{name}: overlap on != serial at t={t}");
+        }
+    }
+}
+
+#[test]
+fn prop_overlap_equivalence_ragged_buckets() {
+    run_cases(25, 0xE3, |g| {
+        let n = g.usize_in(2, 7);
+        let d = g.usize_in(8, 15_000);
+        let gs = random_set(n, d, g.case_seed);
+        let rows: Vec<Vec<f32>> = (0..n).map(|i| gs.row(i).to_vec()).collect();
+        let cap = g.usize_in(1, d); // arbitrary ragged bucketization
+        let buckets = Buckets::fixed(d, cap);
+        let compute: Vec<f64> = (0..n).map(|_| g.f64_in(0.0, 0.1)).collect();
+        let names = ["adacons", "mean", "grawa", "adasum", "median"];
+        let name = names[g.usize_in(0, names.len() - 1)];
+        let min_shard = [CHUNK, 3000][g.usize_in(0, 1)];
+        let mut serial_out = vec![0.0f32; d];
+        aggregation::by_name(name, n)
+            .unwrap()
+            .aggregate_ctx(&gs, &buckets, &mut serial_out, &ctx(1, min_shard));
+        for t in thread_grid() {
+            let (on, _, _) =
+                pipelined_step(name, &rows, &buckets, t, min_shard, true, &compute);
+            let (off, _, _) =
+                pipelined_step(name, &rows, &buckets, t, min_shard, false, &compute);
+            assert_eq!(on, off, "{name} d={d} cap={cap} t={t}");
+            assert_eq!(on, serial_out, "{name} d={d} cap={cap} t={t}");
+        }
+    });
+}
+
+#[test]
+fn straggler_timeline_matches_barrier_semantics_when_overlap_off() {
+    // With overlap off, the executor must reproduce the barrier-only
+    // SimClock accounting exactly, stragglers included: every rank
+    // advances by its own compute, then each comm op is a collective.
+    let (n, d) = (3, 2 * CHUNK);
+    let gs = random_set(n, d, 0xBEEF);
+    let rows: Vec<Vec<f32>> = (0..n).map(|i| gs.row(i).to_vec()).collect();
+    let buckets = Buckets::fixed(d, CHUNK);
+    let compute = vec![0.1, 0.5, 0.2]; // rank 1 straggles
+    let (_, outcome, clock) =
+        pipelined_step("adacons", &rows, &buckets, 2, CHUNK, false, &compute);
+    // Hand-driven barrier accounting over the same reported ops.
+    let cost = CostModel::from_topology(&Topology::ring_gbps(n, 100.0));
+    let mut manual = SimClock::new(n);
+    for (r, &c) in compute.iter().enumerate() {
+        manual.advance(r, c);
+    }
+    for op in &outcome.info.comm {
+        manual.collective(cost.time_s(op.kind, op.bytes));
+    }
+    assert!((clock.now() - manual.now()).abs() < 1e-15, "{} vs {}", clock.now(), manual.now());
+    // Off = everything exposed.
+    assert!((outcome.exposed_comm_s - outcome.serial_comm_s).abs() < 1e-15);
+    // And the straggler paces the step: completion > its compute time.
+    assert!(clock.now() > 0.5);
+}
+
+#[test]
+fn overlap_on_reports_strictly_less_exposed_comm_multi_bucket() {
+    let (n, d) = (4, 8 * CHUNK);
+    let gs = random_set(n, d, 0xACE);
+    let rows: Vec<Vec<f32>> = (0..n).map(|i| gs.row(i).to_vec()).collect();
+    let buckets = Buckets::fixed(d, CHUNK);
+    let compute = vec![0.05; n];
+    for name in aggregation::ALL_NAMES {
+        let (_, on, clock_on) =
+            pipelined_step(name, &rows, &buckets, 2, CHUNK, true, &compute);
+        let (_, off, clock_off) =
+            pipelined_step(name, &rows, &buckets, 2, CHUNK, false, &compute);
+        // Same ops, same serial accounting...
+        assert!(
+            (on.serial_comm_s - off.serial_comm_s).abs() < 1e-12,
+            "{name}: serial accounting drifted"
+        );
+        // ...but pipelining hides bucketed transfers behind compute for
+        // every scheme that has any (adasum is fully exposed by design).
+        if name != &"adasum" {
+            assert!(
+                on.exposed_comm_s < off.exposed_comm_s,
+                "{name}: {} !< {}",
+                on.exposed_comm_s,
+                off.exposed_comm_s
+            );
+            assert!(clock_on.now() < clock_off.now(), "{name}: sim time not reduced");
+        } else {
+            assert!(on.exposed_comm_s <= off.exposed_comm_s + 1e-15, "{name}");
         }
     }
 }

@@ -17,10 +17,25 @@ echo "== cargo fmt --check =="
 cargo fmt --check
 
 if [[ "${1:-}" != "--no-bench" ]]; then
-  echo "== smoke bench (budget 0.05s/case) =="
-  cargo run --release --bin bench_aggregation -- --smoke --budget 0.05 --out BENCH_aggregation.json
+  echo "== smoke bench (budget 0.05s/case, --overlap both) =="
+  cargo run --release --bin bench_aggregation -- --smoke --budget 0.05 --overlap both --out BENCH_aggregation.json
   echo "== validate BENCH_aggregation.json =="
   cargo run --release --bin bench_aggregation -- --check BENCH_aggregation.json
+
+  echo "== perf history =="
+  mkdir -p bench_history
+  sha="$(git rev-parse --short HEAD 2>/dev/null || echo nogit)"
+  cp BENCH_aggregation.json "bench_history/${sha}.json"
+  echo "archived bench_history/${sha}.json"
+  if [[ -f bench_history/baseline.json ]]; then
+    # Fail if the aggregate-phase median regresses >1.3x vs the committed
+    # baseline (both sides are smoke-grid runs).
+    cargo run --release --bin bench_aggregation -- \
+      --compare bench_history/baseline.json BENCH_aggregation.json --max-regress 1.3
+  else
+    cp BENCH_aggregation.json bench_history/baseline.json
+    echo "seeded bench_history/baseline.json (commit it to arm the perf gate)"
+  fi
 fi
 
 echo "ci.sh: all green"
