@@ -89,6 +89,9 @@ def build_artifact(bundle, out_dir, skip_golden=False):
         "init": init_paths,
         "golden": golden,
         "meta": bundle.meta,
+        # Interpreter program (native Rust backend); None for models the
+        # interpreter does not cover.
+        "program": bundle.program,
     }
 
     # --- eval graph ---
@@ -107,6 +110,7 @@ def build_artifact(bundle, out_dir, skip_golden=False):
             "init": init_paths,
             "golden": None,
             "meta": bundle.meta,
+            "program": bundle.program,
         }
     print(f"  [{time.time() - t0:6.1f}s] {bundle.name} (d={bundle.param_dim})")
     return records

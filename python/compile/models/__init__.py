@@ -47,6 +47,35 @@ class ModelBundle:
     eval_inputs: List[ArraySpec] = None
     eval_outputs: List[ArraySpec] = None
     meta: dict = dataclasses.field(default_factory=dict)
+    # Optional interpreter program description (see
+    # rust/src/runtime/interp/program.rs): a dense-layer chain + loss with
+    # explicit flat-vector offsets. Lets the Rust native backend execute
+    # this artifact without XLA. Built with `dense_program(...)`.
+    program: dict = None
+
+
+def dense_program(layer_dims, acts, loss, init_stds=None, bias=True):
+    """Build a ``program`` record for a feed-forward dense chain.
+
+    Offsets follow jax's ``ravel_pytree`` order for the standard
+    ``{l1: {b, w}, l2: {b, w}, ...}`` pytree: dict keys sort
+    alphabetically, so each layer stores its bias before its weight.
+    ``layer_dims`` is [(in, out), ...]; ``loss`` is the loss record, e.g.
+    ``{"kind": "softmax_xent", "classes": 16}``.
+    """
+    layers = []
+    off = 0
+    for i, (in_dim, out_dim) in enumerate(layer_dims):
+        rec = {"in": in_dim, "out": out_dim, "act": acts[i]}
+        if bias:
+            rec["b_off"] = off
+            off += out_dim
+        rec["w_off"] = off
+        off += in_dim * out_dim
+        if init_stds is not None:
+            rec["init_std"] = float(init_stds[i])
+        layers.append(rec)
+    return {"layers": layers, "loss": loss}
 
 
 def flat_init(init_pytree_fn, seed):

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import ArraySpec, ModelBundle
+from . import ArraySpec, ModelBundle, dense_program
 
 DIM = 1000
 
@@ -47,4 +47,14 @@ def build(local_batch: int, dim: int = DIM) -> ModelBundle:
         eval_inputs=[xs],
         eval_outputs=[ArraySpec("loss", "f32", ())],
         meta={"model": "linreg", "local_batch": local_batch, "dim": dim},
+        # Native-interpreter program: one bias-free dense layer into the
+        # half-mean-square loss; params are the raw weight vector, so the
+        # flat layout is trivially ravel-compatible.
+        program=dense_program(
+            [(dim, 1)],
+            acts=["none"],
+            loss={"kind": "mean_square"},
+            init_stds=[1.0 / np.sqrt(dim)],
+            bias=False,
+        ),
     )

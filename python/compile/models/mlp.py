@@ -7,7 +7,7 @@ the lowered HLO carries the L1 kernel on its hot path.
 import jax
 import jax.numpy as jnp
 
-from . import ArraySpec, ModelBundle, flat_init, make_flat_value_and_grad
+from . import ArraySpec, ModelBundle, dense_program, flat_init, make_flat_value_and_grad
 from ..kernels import fused_linear
 
 IN_DIM = 256
@@ -93,4 +93,13 @@ def build(local_batch: int, eval_batch: int = None) -> ModelBundle:
             "in_dim": IN_DIM,
             "classes": CLASSES,
         },
+        # Native-interpreter program mirroring _logits/_loss: offsets
+        # follow ravel_pytree's b-before-w per-layer order (validated by
+        # test_aot_manifest.py against the actual unravel structure).
+        program=dense_program(
+            [(IN_DIM, HIDDEN), (HIDDEN, HIDDEN), (HIDDEN, CLASSES)],
+            acts=["relu", "relu", "none"],
+            loss={"kind": "softmax_xent", "classes": CLASSES},
+            init_stds=[(2.0 / IN_DIM) ** 0.5, (2.0 / HIDDEN) ** 0.5, (2.0 / HIDDEN) ** 0.5],
+        ),
     )

@@ -31,6 +31,41 @@ def test_build_artifact_roundtrip(tmp_path):
     batch = [jnp.asarray(golden_batch(s, b.meta)) for s in b.train_inputs]
     loss, grads = b.train_fn(jnp.asarray(b.init_params(0)), *batch)
     assert abs(float(loss) - rec["golden"]["loss"]) < 1e-5
+    # The interpreter program record rides along in the manifest.
+    prog = rec["program"]
+    assert prog["loss"] == {"kind": "mean_square"}
+    assert prog["layers"][0]["w_off"] == 0 and prog["layers"][0]["in"] == 32
+
+
+def test_mlp_program_offsets_match_ravel_layout():
+    """The emitted w_off/b_off must match where ravel_pytree actually puts
+    each block — the contract the Rust interpreter relies on to share init
+    blobs with the PJRT path."""
+    import jax
+    from jax.flatten_util import ravel_pytree
+
+    from compile.models import mlp
+
+    b = mlp.build(32, eval_batch=64)
+    prog = b.program
+    params = mlp._init_pytree(jax.random.PRNGKey(0))
+    flat, _ = ravel_pytree(params)
+    last = prog["layers"][-1]
+    assert last["w_off"] + last["in"] * last["out"] == flat.shape[0] == b.param_dim
+    for li, name in enumerate(["l1", "l2", "l3"]):
+        rec = prog["layers"][li]
+        for leaf, off_key, count in [
+            ("b", "b_off", rec["out"]),
+            ("w", "w_off", rec["in"] * rec["out"]),
+        ]:
+            marked = jax.tree_util.tree_map(jnp.zeros_like, params)
+            marked[name][leaf] = jnp.ones_like(marked[name][leaf])
+            mflat, _ = ravel_pytree(marked)
+            idx = np.nonzero(np.asarray(mflat))[0]
+            assert idx.shape[0] == count, (name, leaf)
+            assert int(idx[0]) == rec[off_key], (name, leaf)
+            # Block is contiguous.
+            assert int(idx[-1]) == rec[off_key] + count - 1, (name, leaf)
 
 
 def test_repo_manifest_schema_if_built():

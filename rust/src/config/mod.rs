@@ -7,6 +7,7 @@
 use crate::data::GradInjector;
 use crate::optim::Schedule;
 use crate::parallel::ParallelPolicy;
+use crate::runtime::Backend;
 use crate::util::argparse::Args;
 use crate::util::error::{bail, Context, Result};
 use crate::util::json::Json;
@@ -50,6 +51,11 @@ pub struct TrainConfig {
     /// Parallel engine knobs for the aggregation hot path
     /// (`par_threads`: 0 = all cores; `par_min_shard_elems`).
     pub parallel: ParallelPolicy,
+    /// Execution backend (`--backend auto|interp|pjrt`): `interp` is the
+    /// native interpreter (default offline build), `pjrt` the XLA path
+    /// (toolchain images, `--features pjrt`), `auto` picks pjrt when
+    /// compiled in and interp otherwise.
+    pub backend: Backend,
     /// Comm/compute overlap: pipeline per-bucket aggregation work with
     /// gradient arrival and schedule bucketed collectives on the event
     /// timeline (`--overlap on|off`). Off reproduces the barrier-only
@@ -80,6 +86,7 @@ impl Default for TrainConfig {
             log_every: 0,
             jsonl: None,
             parallel: ParallelPolicy::default(),
+            backend: Backend::Auto,
             overlap: false,
         }
     }
@@ -127,6 +134,11 @@ impl TrainConfig {
                 "par_min_shard_elems" => {
                     cfg.parallel.min_shard_elems =
                         v.as_usize().context("par_min_shard_elems")?
+                }
+                "backend" => {
+                    let s = v.as_str().context("backend")?;
+                    cfg.backend = Backend::parse(s)
+                        .with_context(|| format!("backend {s:?}: want auto|interp|pjrt"))?;
                 }
                 "overlap" => {
                     cfg.overlap = match (v.as_bool(), v.as_str()) {
@@ -193,6 +205,10 @@ impl TrainConfig {
         self.parallel.threads = args.usize_or("par-threads", self.parallel.threads)?;
         self.parallel.min_shard_elems =
             args.usize_or("par-min-shard-elems", self.parallel.min_shard_elems)?;
+        if let Some(v) = args.str_opt("backend") {
+            self.backend = Backend::parse(v)
+                .with_context(|| format!("--backend {v:?}: want auto|interp|pjrt"))?;
+        }
         if let Some(v) = args.str_opt("overlap") {
             self.overlap = parse_switch(v).context("--overlap on|off")?;
         }
@@ -313,18 +329,25 @@ mod tests {
         let j = Json::parse(r#"{"overlap":"sideways"}"#).unwrap();
         assert!(TrainConfig::from_json(&j).is_err());
         let mut cfg = TrainConfig::default();
-        let args = Args::parse(
-            "--overlap on".split_whitespace().map(String::from),
-            &[],
-        );
+        let args = Args::parse("--overlap on".split_whitespace().map(String::from), &[]);
         cfg.apply_args(&args).unwrap();
         assert!(cfg.overlap);
-        let args = Args::parse(
-            "--overlap off".split_whitespace().map(String::from),
-            &[],
-        );
+        let args = Args::parse("--overlap off".split_whitespace().map(String::from), &[]);
         cfg.apply_args(&args).unwrap();
         assert!(!cfg.overlap);
+    }
+
+    #[test]
+    fn backend_knob_from_json_and_cli() {
+        assert_eq!(TrainConfig::default().backend, Backend::Auto);
+        let j = Json::parse(r#"{"backend":"interp"}"#).unwrap();
+        assert_eq!(TrainConfig::from_json(&j).unwrap().backend, Backend::Interp);
+        let j = Json::parse(r#"{"backend":"tpu"}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err());
+        let mut cfg = TrainConfig::default();
+        let args = Args::parse("--backend pjrt".split_whitespace().map(String::from), &[]);
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.backend, Backend::Pjrt);
     }
 
     #[test]

@@ -198,7 +198,17 @@ impl PipelinedExecutor {
             for op in &info.comm {
                 let dur = cost.time_s(op.kind, op.bytes);
                 let ready = match op.bucket {
-                    Some(b) => bucket_ready_s(&start_s, &compute_s, b, nb),
+                    Some(b) => {
+                        let (lo, _) = self.buckets.range(b);
+                        // The backward pass finalizes the *end* of the flat
+                        // parameter vector first (last layers), so bucket
+                        // readiness runs in descending index order — the
+                        // same order `Worker::compute_grad_buckets` streams
+                        // live off the interpreter backend.
+                        let total = self.buckets.total().max(1);
+                        let frac = (total - lo) as f64 / total as f64;
+                        bucket_ready_s(&start_s, &compute_s, frac)
+                    }
                     None => compute_end,
                 };
                 tl.post(ready, dur);
@@ -227,12 +237,12 @@ impl PipelinedExecutor {
     }
 }
 
-/// Simulated readiness of bucket `b`: each rank emits its buckets
-/// uniformly across its backward pass (the `overlap::exposed_comm_s`
-/// model, per rank), and the bucket is ready once the slowest rank has
-/// emitted it — stragglers delay every bucket proportionally.
-fn bucket_ready_s(start_s: &[f64], compute_s: &[f64], b: usize, n_buckets: usize) -> f64 {
-    let frac = (b + 1) as f64 / n_buckets as f64;
+/// Simulated readiness of a bucket that completes after fraction `frac`
+/// of the backward pass: each rank emits parameters uniformly across its
+/// backward (the `overlap::exposed_comm_s` model, per rank), and the
+/// bucket is ready once the slowest rank has emitted it — stragglers
+/// delay every bucket proportionally.
+fn bucket_ready_s(start_s: &[f64], compute_s: &[f64], frac: f64) -> f64 {
     start_s
         .iter()
         .zip(compute_s)

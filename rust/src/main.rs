@@ -11,7 +11,7 @@ use std::sync::Arc;
 
 use adacons::config::TrainConfig;
 use adacons::coordinator::{Checkpoint, Trainer};
-use adacons::runtime::Runtime;
+use adacons::runtime::{Backend, Runtime};
 use adacons::util::argparse::Args;
 use adacons::util::error::{Context, Result};
 use adacons::{bail, ensure};
@@ -21,6 +21,7 @@ adacons — Adaptive Consensus Gradients Aggregation (paper reproduction)
 
 USAGE:
   adacons train [--config cfg.json] [--artifact NAME] [--workers N]
+                [--backend auto|interp|pjrt]
                 [--aggregator mean|adacons|adacons-raw|adacons-momentum|
                  adacons-norm|adasum|grawa|median|trimmed-mean]
                 [--optimizer sgd|sgd-momentum|adam|adamw|lamb|linreg-exact]
@@ -32,11 +33,23 @@ USAGE:
                 [--csv PATH]
   adacons figure fig2|fig3|fig4|fig5|fig6|fig7|fig8|all [--out-dir DIR] [--steps-scale F]
   adacons table  table1|table2|all [--out-dir DIR] [--steps-scale F]
-  adacons inspect
+  adacons inspect [--backend auto|interp|pjrt]
   adacons help
 
-Artifacts must be built first: `make artifacts` (runs python/compile/aot.py once).
+The linreg and MLP artifacts run on the native interpreter backend out of
+the box; the full artifact set needs `make artifacts` (runs
+python/compile/aot.py once) plus a `--features pjrt` build.
 ";
+
+/// Backend choice for the subcommands that take it straight from Args.
+fn backend_arg(args: &Args) -> Result<Backend> {
+    match args.str_opt("backend") {
+        None => Ok(Backend::Auto),
+        Some(v) => {
+            Backend::parse(v).with_context(|| format!("--backend {v:?}: want auto|interp|pjrt"))
+        }
+    }
+}
 
 fn main() {
     adacons::util::logging::init();
@@ -62,17 +75,20 @@ fn run() -> Result<()> {
             ensure!(!argv.is_empty(), "figure id required (fig2..fig8 | all)");
             let id = argv.remove(0);
             let args = Args::parse(argv, &[]);
-            let rt = Arc::new(Runtime::open_default()?);
+            let rt = Arc::new(Runtime::open_default_with(backend_arg(&args)?)?);
             adacons::exp::run_figure(rt, &id, &args)
         }
         "table" => {
             ensure!(!argv.is_empty(), "table id required (table1 | table2 | all)");
             let id = argv.remove(0);
             let args = Args::parse(argv, &[]);
-            let rt = Arc::new(Runtime::open_default()?);
+            let rt = Arc::new(Runtime::open_default_with(backend_arg(&args)?)?);
             adacons::exp::run_table(rt, &id, &args)
         }
-        "inspect" => cmd_inspect(),
+        "inspect" => {
+            let args = Args::parse(argv, &[]);
+            cmd_inspect(&args)
+        }
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -87,7 +103,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         None => TrainConfig::default(),
     };
     cfg.apply_args(args)?;
-    let rt = Arc::new(Runtime::open_default()?);
+    let rt = Arc::new(Runtime::open_default_with(cfg.backend)?);
     let mut trainer = Trainer::new(rt, cfg.clone())?;
     if let Some(path) = args.str_opt("load-checkpoint") {
         let ck = Checkpoint::load(path)?;
@@ -138,9 +154,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_inspect() -> Result<()> {
-    let rt = Runtime::open_default()?;
-    println!("PJRT platform: {}", rt.platform());
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let rt = Runtime::open_default_with(backend_arg(args)?)?;
+    println!("backend: {} ({})", rt.backend(), rt.platform());
     println!(
         "{:<24} {:>6} {:>10} {:>8}  inputs",
         "artifact", "kind", "param_dim", "batch"

@@ -4,6 +4,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
+use crate::runtime::interp::ProgramSpec;
 use crate::util::error::{bail, Context, Result};
 use crate::util::json::Json;
 
@@ -59,15 +60,35 @@ pub struct ArtifactSpec {
     pub init: BTreeMap<u64, PathBuf>,
     pub golden: Option<Golden>,
     pub meta: Json,
+    /// Interpreter program description (native backend); present for the
+    /// small artifacts (linreg/MLP) via aot.py emission or the builtin
+    /// fallback specs.
+    pub program: Option<ProgramSpec>,
 }
 
 impl ArtifactSpec {
-    /// Load the initial flat parameter vector for `seed` (little-endian f32).
+    /// Load the initial flat parameter vector for `seed` (little-endian
+    /// f32 blob; artifacts without blobs but with a program fall back to
+    /// the deterministic generated init).
     pub fn load_init(&self, seed: u64) -> Result<Vec<f32>> {
-        let path = self
-            .init
-            .get(&seed)
-            .with_context(|| format!("{}: no init blob for seed {seed}", self.name))?;
+        let Some(path) = self.init.get(&seed) else {
+            if let Some(prog) = &self.program {
+                if self.init.is_empty() {
+                    // Generated init is the only parameter source here, so
+                    // a missing/zero init_std would silently train from an
+                    // all-zero (symmetric, gradient-dead) start — refuse.
+                    if prog.layers.iter().any(|l| l.init_std <= 0.0) {
+                        bail!(
+                            "{}: no init blobs and the program lacks positive \
+                             init_std fields to generate one",
+                            self.name
+                        );
+                    }
+                    return Ok(crate::runtime::interp::init_params(prog, seed));
+                }
+            }
+            bail!("{}: no init blob for seed {seed}", self.name);
+        };
         let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
         if bytes.len() != self.param_dim * 4 {
             bail!(
@@ -94,9 +115,23 @@ impl ArtifactSpec {
 pub struct Manifest {
     pub dir: PathBuf,
     pub artifacts: BTreeMap<String, ArtifactSpec>,
+    /// True when this is the hand-written fallback manifest (no
+    /// `manifest.json` on disk; interpreter-only artifacts).
+    pub builtin: bool,
 }
 
 impl Manifest {
+    /// Load `dir/manifest.json`, or fall back to the builtin interpreter
+    /// specs when the directory has no manifest at all.
+    pub fn load_or_builtin<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        if dir.join("manifest.json").exists() {
+            Self::load(dir)
+        } else {
+            Ok(crate::runtime::interp::builtin::builtin_manifest(dir))
+        }
+    }
+
     pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
         let text = std::fs::read_to_string(dir.join("manifest.json"))
@@ -131,6 +166,13 @@ impl Manifest {
                     );
                 }
             }
+            let program = match rec.get("program") {
+                Json::Null => None,
+                p => Some(
+                    ProgramSpec::from_json(p)
+                        .with_context(|| format!("artifact {name}: bad program record"))?,
+                ),
+            };
             let golden = rec.get("golden").as_obj().map(|_| Golden {
                 seed: rec.get("golden").get("seed").as_usize().unwrap_or(0) as u64,
                 loss: rec.get("golden").get("loss").as_f64().unwrap_or(f64::NAN),
@@ -150,10 +192,15 @@ impl Manifest {
                     init,
                     golden,
                     meta: rec.get("meta").clone(),
+                    program,
                 },
             );
         }
-        Ok(Manifest { dir, artifacts })
+        Ok(Manifest {
+            dir,
+            artifacts,
+            builtin: false,
+        })
     }
 
     pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
@@ -211,6 +258,44 @@ mod tests {
         let ev = m.get("mlp_cls_b32__eval").unwrap();
         assert_eq!(ev.kind, "eval");
         assert_eq!(ev.outputs.len(), 2);
+    }
+
+    #[test]
+    fn load_or_builtin_falls_back_without_manifest() {
+        let dir = std::env::temp_dir().join("adacons_no_manifest_here");
+        let m = Manifest::load_or_builtin(&dir).unwrap();
+        assert!(m.builtin);
+        let lin = m.get("linreg_b16").unwrap();
+        assert!(lin.program.is_some());
+        assert!(lin.golden.is_some());
+        assert_eq!(lin.load_init(0).unwrap().len(), 1000);
+    }
+
+    #[test]
+    fn manifest_program_records_parse() {
+        let dir = std::env::temp_dir().join("adacons_program_manifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version": 1, "artifacts": {"tiny": {
+                 "hlo": "tiny.hlo.txt", "kind": "train", "model": "linreg",
+                 "param_dim": 4,
+                 "inputs": [{"name": "x", "dtype": "f32", "shape": [2, 4]}],
+                 "outputs": [{"name": "loss", "dtype": "f32", "shape": []},
+                             {"name": "grads", "dtype": "f32", "shape": [4]}],
+                 "program": {"layers": [{"in": 4, "out": 1, "w_off": 0,
+                                          "init_std": 0.5}],
+                             "loss": {"kind": "mean_square"}}}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(!m.builtin);
+        let t = m.get("tiny").unwrap();
+        let prog = t.program.as_ref().unwrap();
+        assert_eq!(prog.param_dim(), 4);
+        // No init blobs, but a program: generated init works.
+        assert_eq!(t.load_init(3).unwrap().len(), 4);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

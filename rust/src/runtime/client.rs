@@ -1,11 +1,17 @@
-//! The process-wide runtime: one PJRT CPU client + a compile cache.
+//! The process-wide runtime: backend selection, the artifact manifest,
+//! and a load cache.
 //!
-//! The PJRT path needs the `xla` crate, which only exists in toolchain
-//! images that vendor its dependency closure; the default build is
-//! offline/dependency-free, so everything touching `xla` is gated behind
-//! the `pjrt` cargo feature. Without it the manifest still loads (so
-//! `inspect` and the shape-level tooling work) and `load()` reports a
-//! clear error instead of executing.
+//! Two backends live behind one dispatch surface:
+//! * `Backend::Interp` — the native interpreter; always available, runs
+//!   every artifact that carries a `ProgramSpec` (builtin fallback specs
+//!   cover linreg/MLP when no `artifacts/` directory exists).
+//! * `Backend::Pjrt` — XLA execution via the `xla` crate; needs the
+//!   `pjrt` cargo feature and a toolchain image that vendors the crate's
+//!   dependency closure.
+//!
+//! `Backend::Auto` resolves to PJRT when compiled in, else the
+//! interpreter — so the default offline build trains end to end while a
+//! toolchain image keeps its old behaviour unchanged.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -14,73 +20,222 @@ use super::artifact::Manifest;
 use super::executable::Executable;
 use crate::util::error::Result;
 
-/// Owns the PJRT client, the artifact manifest, and compiled executables.
-/// Executables are compiled lazily on first use and shared via `Arc` (the
-/// PJRT CPU client is thread-safe; worker threads share one client, which
-/// matches one-accelerator-per-process semantics without N copies of XLA).
+/// Which execution engine runs the artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Pick the best available: PJRT if compiled in, else the interpreter.
+    Auto,
+    /// Native Rust interpreter (std-only, no toolchain image).
+    Interp,
+    /// XLA via PJRT (`--features pjrt`).
+    Pjrt,
+}
+
+impl Backend {
+    /// Parse a config/CLI value (`auto` | `interp` | `pjrt`).
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "auto" => Some(Backend::Auto),
+            "interp" | "interpreter" => Some(Backend::Interp),
+            "pjrt" | "xla" => Some(Backend::Pjrt),
+            _ => None,
+        }
+    }
+
+    /// Resolve `Auto` to a concrete backend for this build.
+    pub fn effective(self) -> Backend {
+        match self {
+            Backend::Auto => {
+                if cfg!(feature = "pjrt") {
+                    Backend::Pjrt
+                } else {
+                    Backend::Interp
+                }
+            }
+            b => b,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Auto => "auto",
+            Backend::Interp => "interp",
+            Backend::Pjrt => "pjrt",
+        }
+    }
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Owns the backend state, the artifact manifest, and loaded executables.
+/// Executables are built lazily on first use and shared via `Arc` (the
+/// PJRT CPU client is thread-safe and the interpreter is stateless;
+/// worker threads share one runtime, matching one-accelerator-per-process
+/// semantics without N copies of the engine).
 pub struct Runtime {
+    backend: Backend,
     #[cfg(feature = "pjrt")]
-    client: xla::PjRtClient,
+    client: Option<xla::PjRtClient>,
     pub manifest: Manifest,
-    #[cfg(feature = "pjrt")]
     cache: std::sync::Mutex<std::collections::BTreeMap<String, Arc<Executable>>>,
 }
 
 impl Runtime {
-    /// Whether this build can actually execute artifacts.
+    /// Whether this build can actually execute PJRT artifacts.
     pub const HAS_PJRT: bool = cfg!(feature = "pjrt");
 
+    /// Open `artifact_dir` on the build's default backend (`Auto`).
     pub fn create<P: AsRef<Path>>(artifact_dir: P) -> Result<Runtime> {
-        let manifest = Manifest::load(artifact_dir)?;
+        Self::create_with(artifact_dir, Backend::Auto)
+    }
+
+    /// Open `artifact_dir` on an explicit backend. The manifest falls
+    /// back to the builtin interpreter specs when no `manifest.json`
+    /// exists on disk.
+    pub fn create_with<P: AsRef<Path>>(artifact_dir: P, backend: Backend) -> Result<Runtime> {
+        let manifest = Manifest::load_or_builtin(artifact_dir)?;
+        let backend = backend.effective();
+        #[cfg(not(feature = "pjrt"))]
+        if backend == Backend::Pjrt {
+            crate::bail!(
+                "backend pjrt: this binary was built without the `pjrt` feature. \
+                 Use --backend interp, or rebuild with `--features pjrt` on a \
+                 toolchain image that vendors the real xla crate"
+            );
+        }
+        if backend == Backend::Pjrt && manifest.builtin {
+            // Fail fast with the old guidance: the builtin specs carry no
+            // HLO files, so letting PJRT proceed would surface only as a
+            // confusing parse error at first load.
+            crate::bail!(
+                "backend pjrt: no artifacts/manifest.json found (the builtin fallback \
+                 specs are interpreter-only). Run `make artifacts` first, or use \
+                 --backend interp"
+            );
+        }
         Ok(Runtime {
+            backend,
             #[cfg(feature = "pjrt")]
-            client: xla::PjRtClient::cpu()?,
+            client: match backend {
+                Backend::Pjrt => Some(xla::PjRtClient::cpu()?),
+                _ => None,
+            },
             manifest,
-            #[cfg(feature = "pjrt")]
             cache: std::sync::Mutex::new(std::collections::BTreeMap::new()),
         })
     }
 
     /// Open the default artifact directory (`$ADACONS_ARTIFACTS` or
-    /// `artifacts/`).
+    /// `artifacts/`) on the build's default backend.
     pub fn open_default() -> Result<Runtime> {
         Self::create(Manifest::default_dir())
     }
 
-    #[cfg(feature = "pjrt")]
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// Open the default artifact directory on an explicit backend.
+    pub fn open_default_with(backend: Backend) -> Result<Runtime> {
+        Self::create_with(Manifest::default_dir(), backend)
     }
 
-    #[cfg(not(feature = "pjrt"))]
-    pub fn platform(&self) -> String {
-        "none (built without the `pjrt` feature)".to_string()
+    /// The concrete backend this runtime executes on.
+    pub fn backend(&self) -> Backend {
+        self.backend
     }
 
-    /// Get (compiling if needed) the executable for an artifact.
-    #[cfg(feature = "pjrt")]
+    pub fn platform(&self) -> String {
+        match self.backend {
+            Backend::Interp => format!(
+                "interp (native interpreter{})",
+                if self.manifest.builtin {
+                    ", builtin fallback specs"
+                } else {
+                    ""
+                }
+            ),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt => match &self.client {
+                Some(c) => c.platform_name(),
+                None => "pjrt (no client)".to_string(),
+            },
+            #[cfg(not(feature = "pjrt"))]
+            Backend::Pjrt => "pjrt (unavailable in this build)".to_string(),
+            Backend::Auto => unreachable!("create_with resolves Auto"),
+        }
+    }
+
+    /// Get (building if needed) the executable for an artifact.
     pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
         if let Some(e) = self.cache.lock().unwrap().get(name) {
             return Ok(e.clone());
         }
         let spec = self.manifest.get(name)?;
-        let t = crate::util::timer::Timer::start();
-        let exe = Arc::new(Executable::compile(&self.client, spec)?);
-        crate::log_info!("compiled {} in {:.2}s", name, t.elapsed_s());
+        let exe = match self.backend {
+            Backend::Interp => Arc::new(Executable::interpret(spec)?),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt => {
+                let client = self
+                    .client
+                    .as_ref()
+                    .expect("pjrt backend always holds a client");
+                let t = crate::util::timer::Timer::start();
+                let exe = Arc::new(Executable::compile(client, spec)?);
+                crate::log_info!("compiled {} in {:.2}s", name, t.elapsed_s());
+                exe
+            }
+            #[cfg(not(feature = "pjrt"))]
+            Backend::Pjrt => crate::bail!(
+                "artifact {name:?}: this binary was built without the `pjrt` feature, \
+                 so it cannot execute compiled artifacts. On a toolchain image that \
+                 vendors the xla crate, rebuild with `--features pjrt`"
+            ),
+            Backend::Auto => unreachable!("create_with resolves Auto"),
+        };
         self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
         Ok(exe)
     }
+}
 
-    /// Without PJRT the manifest lookup still validates the name, then we
-    /// refuse to execute.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parse_and_resolution() {
+        assert_eq!(Backend::parse("interp"), Some(Backend::Interp));
+        assert_eq!(Backend::parse("pjrt"), Some(Backend::Pjrt));
+        assert_eq!(Backend::parse("auto"), Some(Backend::Auto));
+        assert_eq!(Backend::parse("tpu"), None);
+        let eff = Backend::Auto.effective();
+        assert_ne!(eff, Backend::Auto);
+        if !Runtime::HAS_PJRT {
+            assert_eq!(eff, Backend::Interp);
+        }
+        assert_eq!(Backend::Interp.to_string(), "interp");
+    }
+
+    #[test]
+    fn interp_runtime_loads_builtin_artifacts() {
+        let dir = std::env::temp_dir().join("adacons_interp_rt_test");
+        let rt = Runtime::create_with(&dir, Backend::Interp).unwrap();
+        assert_eq!(rt.backend(), Backend::Interp);
+        assert!(rt.platform().contains("interp"));
+        let exe = rt.load("linreg_b16").unwrap();
+        assert!(exe.is_interp());
+        // Cache returns the same executable.
+        let again = rt.load("linreg_b16").unwrap();
+        assert!(Arc::ptr_eq(&exe, &again));
+        // Unknown names still error through the manifest.
+        assert!(rt.load("nope").is_err());
+    }
+
     #[cfg(not(feature = "pjrt"))]
-    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
-        let _ = self.manifest.get(name)?;
-        crate::bail!(
-            "artifact {name:?}: this binary was built without the `pjrt` feature, \
-             so it cannot execute compiled artifacts. On a toolchain image that \
-             vendors the xla crate, add `xla = \"0.1.6\"` to rust/Cargo.toml \
-             [dependencies] and rebuild with `--features pjrt`"
-        )
+    #[test]
+    fn pjrt_backend_refused_without_feature() {
+        let dir = std::env::temp_dir().join("adacons_interp_rt_test");
+        let err = Runtime::create_with(&dir, Backend::Pjrt).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 }

@@ -1,20 +1,29 @@
-//! A compiled artifact: HLO text -> PJRT executable + typed host I/O.
+//! A loaded artifact: typed host I/O over one of the two execution
+//! backends (native interpreter / PJRT).
 //!
-//! The real implementation needs the `xla` crate and lives behind the
-//! `pjrt` feature; the default offline build compiles a stub that carries
-//! the spec (so every signature downstream typechecks) and errors on
-//! execution. `Runtime::load` refuses to construct the stub, so the error
-//! surfaces at load time with a clear message.
+//! The PJRT variant needs the `xla` crate and lives behind the `pjrt`
+//! feature; the interpreter variant is always available and carries a
+//! [`InterpExec`] program. Input validation (arity, shapes, dtypes,
+//! parameter length) is shared, so both backends reject bad batches with
+//! identical errors.
+//!
+//! [`InterpExec`]: crate::runtime::interp::InterpExec
 
 use super::artifact::ArtifactSpec;
 use crate::data::{Array, Batch};
+use crate::runtime::interp::InterpExec;
 use crate::util::error::{bail, Context, Result};
 
-/// A compiled, ready-to-run computation.
+/// A compiled or interpreted, ready-to-run computation.
 pub struct Executable {
     pub spec: ArtifactSpec,
+    imp: Imp,
+}
+
+enum Imp {
+    Interp(InterpExec),
     #[cfg(feature = "pjrt")]
-    exe: xla::PjRtLoadedExecutable,
+    Pjrt(xla::PjRtLoadedExecutable),
 }
 
 /// Stage one host array on the device.
@@ -43,14 +52,18 @@ fn array_from_literal(lit: &xla::Literal, spec: &crate::runtime::IoSpec) -> Resu
     }
 }
 
-#[cfg(feature = "pjrt")]
 impl Executable {
-    /// Access the underlying PJRT executable (benches / probes).
-    pub fn raw(&self) -> &xla::PjRtLoadedExecutable {
-        &self.exe
+    /// Build the interpreter executable for `spec` (requires a program
+    /// record; errors with guidance otherwise).
+    pub fn interpret(spec: &ArtifactSpec) -> Result<Executable> {
+        Ok(Executable {
+            spec: spec.clone(),
+            imp: Imp::Interp(InterpExec::new(spec)?),
+        })
     }
 
     /// Compile `spec`'s HLO text on the given PJRT client.
+    #[cfg(feature = "pjrt")]
     pub fn compile(client: &xla::PjRtClient, spec: &ArtifactSpec) -> Result<Executable> {
         let proto = xla::HloModuleProto::from_text_file(&spec.hlo_path)
             .with_context(|| format!("parsing HLO text {:?}", spec.hlo_path))?;
@@ -60,15 +73,27 @@ impl Executable {
             .with_context(|| format!("compiling {}", spec.name))?;
         Ok(Executable {
             spec: spec.clone(),
-            exe,
+            imp: Imp::Pjrt(exe),
         })
     }
 
-    /// Execute with an optional leading flat-parameter vector plus the
-    /// batch arrays (manifest order). Returns the output arrays.
-    pub fn run(&self, params: Option<&[f32]>, batch: &Batch) -> Result<Vec<Array>> {
-        let client = self.exe.client();
-        let mut buffers: Vec<xla::PjRtBuffer> = Vec::with_capacity(batch.len() + 1);
+    /// Access the underlying PJRT executable (benches / probes).
+    #[cfg(feature = "pjrt")]
+    pub fn raw(&self) -> Option<&xla::PjRtLoadedExecutable> {
+        match &self.imp {
+            Imp::Pjrt(e) => Some(e),
+            _ => None,
+        }
+    }
+
+    /// True when this executable runs on the native interpreter.
+    pub fn is_interp(&self) -> bool {
+        matches!(self.imp, Imp::Interp(_))
+    }
+
+    /// Shared host-side validation: parameter length, batch arity, input
+    /// shapes/dtypes — identical errors on both backends.
+    fn validate_io(&self, params: Option<&[f32]>, batch: &Batch) -> Result<()> {
         if self.spec.param_dim > 0 {
             let p = params.context("artifact expects a parameter vector")?;
             if p.len() != self.spec.param_dim {
@@ -79,7 +104,6 @@ impl Executable {
                     self.spec.param_dim
                 );
             }
-            buffers.push(client.buffer_from_host_buffer(p, &[p.len()], None)?);
         }
         if batch.len() != self.spec.inputs.len() {
             bail!(
@@ -101,9 +125,36 @@ impl Executable {
                     spec.dtype
                 );
             }
+        }
+        Ok(())
+    }
+
+    /// Execute with an optional leading flat-parameter vector plus the
+    /// batch arrays (manifest order). Returns the output arrays.
+    pub fn run(&self, params: Option<&[f32]>, batch: &Batch) -> Result<Vec<Array>> {
+        self.validate_io(params, batch)?;
+        match &self.imp {
+            Imp::Interp(exec) => exec.run(&self.spec, params.unwrap_or(&[]), batch),
+            #[cfg(feature = "pjrt")]
+            Imp::Pjrt(_) => self.run_pjrt(params, batch),
+        }
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn run_pjrt(&self, params: Option<&[f32]>, batch: &Batch) -> Result<Vec<Array>> {
+        let Imp::Pjrt(exe) = &self.imp else {
+            bail!("{}: not a PJRT executable", self.spec.name)
+        };
+        let client = exe.client();
+        let mut buffers: Vec<xla::PjRtBuffer> = Vec::with_capacity(batch.len() + 1);
+        if self.spec.param_dim > 0 {
+            let p = params.context("artifact expects a parameter vector")?;
+            buffers.push(client.buffer_from_host_buffer(p, &[p.len()], None)?);
+        }
+        for a in batch.iter() {
             buffers.push(buffer_from_array(client, a)?);
         }
-        let result = self.exe.execute_b(&buffers)?;
+        let result = exe.execute_b(&buffers)?;
         let tuple = result[0][0].to_literal_sync()?;
         // Lowered with return_tuple=True: always a tuple at the root.
         let parts = tuple.to_tuple()?;
@@ -121,20 +172,7 @@ impl Executable {
             .map(|(lit, spec)| array_from_literal(lit, spec))
             .collect()
     }
-}
 
-#[cfg(not(feature = "pjrt"))]
-impl Executable {
-    /// Stub: execution requires the `pjrt` feature.
-    pub fn run(&self, _params: Option<&[f32]>, _batch: &Batch) -> Result<Vec<Array>> {
-        bail!(
-            "{}: built without the `pjrt` feature; cannot execute",
-            self.spec.name
-        )
-    }
-}
-
-impl Executable {
     /// Convenience for train artifacts: returns (loss, grads).
     pub fn run_train(&self, params: &[f32], batch: &Batch) -> Result<(f32, Vec<f32>)> {
         let outs = self.run(Some(params), batch)?;
@@ -147,5 +185,39 @@ impl Executable {
             _ => bail!("train output 1 must be the f32 gradient vector"),
         };
         Ok((loss, grads))
+    }
+
+    /// Train step with streaming gradient segments: `on_segment(grads,
+    /// offset, len)` fires as each contiguous parameter-gradient block is
+    /// finalized (reverse layer order on the interpreter — the real DDP
+    /// arrival order — or one whole-vector segment on PJRT, which has no
+    /// intra-step hook). The full gradient is assembled into `grad_out`;
+    /// returns the loss.
+    pub fn run_train_stream(
+        &self,
+        params: &[f32],
+        batch: &Batch,
+        grad_out: &mut [f32],
+        on_segment: &mut dyn FnMut(&[f32], usize, usize),
+    ) -> Result<f32> {
+        self.validate_io(Some(params), batch)?;
+        if grad_out.len() != self.spec.param_dim {
+            bail!(
+                "{}: grad buffer len {} != param_dim {}",
+                self.spec.name,
+                grad_out.len(),
+                self.spec.param_dim
+            );
+        }
+        match &self.imp {
+            Imp::Interp(exec) => exec.run_train_stream(params, batch, grad_out, on_segment),
+            #[cfg(feature = "pjrt")]
+            Imp::Pjrt(_) => {
+                let (loss, grads) = self.run_train(params, batch)?;
+                grad_out.copy_from_slice(&grads);
+                on_segment(grad_out, 0, grad_out.len());
+                Ok(loss)
+            }
+        }
     }
 }

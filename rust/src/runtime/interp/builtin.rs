@@ -1,0 +1,244 @@
+//! Hand-written fallback artifact specs for the interpreter backend.
+//!
+//! When no `artifacts/manifest.json` exists (the default offline
+//! checkout), the runtime falls back to these specs so end-to-end
+//! training runs with zero Python: the paper's linreg task (Eq. 14,
+//! Fig. 2) at the three local batch sizes, and the MLP classifier
+//! (Fig. 3 / Table 2 substitute). Shapes, dims, meta, and the flat
+//! parameter layout (per layer: bias before weight, jax `ravel_pytree`
+//! order) mirror `python/compile/manifest.py` exactly, so a later
+//! `make artifacts` drop-in changes nothing downstream. Goldens are
+//! minted by the f64 reference at load time ([`super::reference`]).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use crate::runtime::artifact::{ArtifactSpec, IoSpec, Manifest};
+use crate::util::json::{num, obj, s};
+
+use super::program::{Act, Dense, Loss, ProgramSpec};
+use super::reference;
+
+const LINREG_DIM: usize = 1000;
+const MLP_IN: usize = 256;
+const MLP_HIDDEN: usize = 512;
+const MLP_CLASSES: usize = 16;
+const MLP_TRAIN_BATCH: usize = 32;
+const MLP_EVAL_BATCH: usize = 256;
+
+fn f32_io(name: &str, shape: Vec<usize>) -> IoSpec {
+    IoSpec {
+        name: name.to_string(),
+        dtype: "f32".to_string(),
+        shape,
+    }
+}
+
+fn i32_io(name: &str, shape: Vec<usize>) -> IoSpec {
+    IoSpec {
+        name: name.to_string(),
+        dtype: "i32".to_string(),
+        shape,
+    }
+}
+
+fn linreg_program() -> ProgramSpec {
+    ProgramSpec {
+        layers: vec![Dense {
+            in_dim: LINREG_DIM,
+            out_dim: 1,
+            w_off: 0,
+            b_off: None,
+            act: Act::Linear,
+            // aot.py inits linreg from N(0, 1/sqrt(d)).
+            init_std: (1.0 / (LINREG_DIM as f64).sqrt()) as f32,
+        }],
+        loss: Loss::MeanSquare,
+    }
+}
+
+fn mlp_program() -> ProgramSpec {
+    // jax ravel_pytree order over {l1:{b,w}, l2:{b,w}, l3:{b,w}}:
+    // keys sort alphabetically, so each layer stores bias before weight.
+    let dims = [(MLP_IN, MLP_HIDDEN), (MLP_HIDDEN, MLP_HIDDEN), (MLP_HIDDEN, MLP_CLASSES)];
+    let mut layers = Vec::new();
+    let mut off = 0usize;
+    for (i, &(in_dim, out_dim)) in dims.iter().enumerate() {
+        let b_off = off;
+        let w_off = off + out_dim;
+        off = w_off + in_dim * out_dim;
+        layers.push(Dense {
+            in_dim,
+            out_dim,
+            w_off,
+            b_off: Some(b_off),
+            // He init on every layer, matching mlp.py's dense() helper.
+            init_std: (2.0 / in_dim as f64).sqrt() as f32,
+            act: if i + 1 < dims.len() { Act::Relu } else { Act::Linear },
+        });
+    }
+    ProgramSpec {
+        layers,
+        loss: Loss::SoftmaxXent { classes: MLP_CLASSES },
+    }
+}
+
+fn with_golden(mut spec: ArtifactSpec) -> ArtifactSpec {
+    if spec.kind == "train" {
+        let golden = reference::golden(&spec);
+        spec.golden = Some(golden.expect("builtin goldens mint from static specs"));
+    }
+    spec
+}
+
+fn linreg_spec(dir: &std::path::Path, local_batch: usize, eval: bool) -> ArtifactSpec {
+    let base = format!("linreg_b{local_batch}");
+    let name = if eval { format!("{base}__eval") } else { base };
+    let kind = if eval { "eval" } else { "train" };
+    let prog = linreg_program();
+    let outputs = if eval {
+        vec![f32_io("loss", vec![])]
+    } else {
+        vec![f32_io("loss", vec![]), f32_io("grads", vec![LINREG_DIM])]
+    };
+    with_golden(ArtifactSpec {
+        hlo_path: dir.join(format!("{name}.hlo.txt")),
+        name,
+        kind: kind.to_string(),
+        model: "linreg".to_string(),
+        param_dim: LINREG_DIM,
+        inputs: vec![f32_io("x", vec![local_batch, LINREG_DIM])],
+        outputs,
+        init: BTreeMap::new(),
+        golden: None,
+        meta: obj(vec![
+            ("model", s("linreg")),
+            ("local_batch", num(local_batch as f64)),
+            ("dim", num(LINREG_DIM as f64)),
+        ]),
+        program: Some(prog),
+    })
+}
+
+fn mlp_spec(dir: &std::path::Path, eval: bool) -> ArtifactSpec {
+    let name = if eval {
+        format!("mlp_cls_b{MLP_TRAIN_BATCH}__eval")
+    } else {
+        format!("mlp_cls_b{MLP_TRAIN_BATCH}")
+    };
+    let kind = if eval { "eval" } else { "train" };
+    let prog = mlp_program();
+    let d = prog.param_dim();
+    let b = if eval { MLP_EVAL_BATCH } else { MLP_TRAIN_BATCH };
+    let outputs = if eval {
+        vec![f32_io("loss", vec![]), f32_io("correct", vec![b])]
+    } else {
+        vec![f32_io("loss", vec![]), f32_io("grads", vec![d])]
+    };
+    with_golden(ArtifactSpec {
+        hlo_path: dir.join(format!("{name}.hlo.txt")),
+        name,
+        kind: kind.to_string(),
+        model: "mlp_cls".to_string(),
+        param_dim: d,
+        inputs: vec![f32_io("x", vec![b, MLP_IN]), i32_io("y", vec![b])],
+        outputs,
+        init: BTreeMap::new(),
+        golden: None,
+        meta: obj(vec![
+            ("model", s("mlp_cls")),
+            ("local_batch", num(MLP_TRAIN_BATCH as f64)),
+            ("eval_batch", num(MLP_EVAL_BATCH as f64)),
+            ("in_dim", num(MLP_IN as f64)),
+            ("classes", num(MLP_CLASSES as f64)),
+        ]),
+        program: Some(prog),
+    })
+}
+
+/// The fallback manifest: every interpretable artifact, goldens included.
+pub fn builtin_manifest(dir: PathBuf) -> Manifest {
+    let mut artifacts = BTreeMap::new();
+    for lb in [16usize, 64, 128] {
+        for eval in [false, true] {
+            let spec = linreg_spec(&dir, lb, eval);
+            artifacts.insert(spec.name.clone(), spec);
+        }
+    }
+    for eval in [false, true] {
+        let spec = mlp_spec(&dir, eval);
+        artifacts.insert(spec.name.clone(), spec);
+    }
+    Manifest {
+        dir,
+        artifacts,
+        builtin: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_manifest_covers_the_paper_tasks() {
+        let m = builtin_manifest(PathBuf::from("artifacts"));
+        for name in [
+            "linreg_b16",
+            "linreg_b64",
+            "linreg_b128",
+            "linreg_b16__eval",
+            "mlp_cls_b32",
+            "mlp_cls_b32__eval",
+        ] {
+            assert!(m.get(name).is_ok(), "{name} missing");
+        }
+        let lin = m.get("linreg_b16").unwrap();
+        assert_eq!(lin.param_dim, 1000);
+        assert_eq!(lin.local_batch(), 16);
+        assert_eq!(lin.inputs[0].shape, vec![16, 1000]);
+        let mlp = m.get("mlp_cls_b32").unwrap();
+        assert_eq!(mlp.param_dim, 402_448); // 3-layer 256-512-512-16 MLP
+        assert_eq!(mlp.meta.get("classes").as_usize(), Some(16));
+        let ev = m.get("mlp_cls_b32__eval").unwrap();
+        assert_eq!(ev.kind, "eval");
+        assert_eq!(ev.local_batch(), 256);
+        assert_eq!(ev.outputs.len(), 2);
+    }
+
+    #[test]
+    fn builtin_goldens_are_finite_and_plausible() {
+        let m = builtin_manifest(PathBuf::from("artifacts"));
+        for (name, spec) in &m.artifacts {
+            if spec.kind != "train" {
+                assert!(spec.golden.is_none(), "{name}");
+                continue;
+            }
+            let g = spec.golden.as_ref().unwrap_or_else(|| panic!("{name} golden"));
+            assert!(g.loss.is_finite() && g.loss > 0.0, "{name} loss {}", g.loss);
+            assert!(g.grad_l2.is_finite() && g.grad_l2 > 0.0, "{name}");
+            assert!(g.grad_sum.is_finite(), "{name}");
+        }
+        // The MLP starts near chance: loss ~ ln(16).
+        let g = m.get("mlp_cls_b32").unwrap().golden.clone().unwrap();
+        assert!(
+            (g.loss - (16.0f64).ln()).abs() < 1.0,
+            "mlp golden loss {} far from ln(16)",
+            g.loss
+        );
+    }
+
+    #[test]
+    fn builtin_inits_load_for_any_seed() {
+        let m = builtin_manifest(PathBuf::from("artifacts"));
+        let lin = m.get("linreg_b64").unwrap();
+        let p0 = lin.load_init(0).unwrap();
+        let p1 = lin.load_init(1).unwrap();
+        assert_eq!(p0.len(), 1000);
+        assert_ne!(p0, p1);
+        assert!(p0.iter().all(|v| v.is_finite()));
+        // Same model, different batch size: identical init (aot parity).
+        let lin16 = m.get("linreg_b16").unwrap();
+        assert_eq!(lin16.load_init(0).unwrap(), p0);
+    }
+}

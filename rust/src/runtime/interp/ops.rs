@@ -1,0 +1,264 @@
+//! Interpreter op kernels: matmul, bias add, relu/sigmoid, mean-square
+//! and softmax-xent losses, and their backward ops.
+//!
+//! All kernels store f32 (matching the PJRT artifacts' dtype contract)
+//! but accumulate in f64, so the interpreter's results sit within f32
+//! rounding of the straight-line f64 reference (`super::reference`) —
+//! that is what makes the tight golden tolerances in
+//! `tests/runtime_golden.rs` and the finite-difference checks in
+//! `tests/interp_grad_check.rs` possible.
+
+/// `out = x @ w`: `x` is `(m, k)` row-major, `w` is `(k, n)` row-major.
+/// Accumulates each output row in an f64 buffer (inner loop runs over the
+/// contiguous `n` axis, so it vectorizes).
+pub fn matmul(x: &[f32], m: usize, k: usize, w: &[f32], n: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    let mut row = vec![0.0f64; n];
+    for i in 0..m {
+        row.iter_mut().for_each(|r| *r = 0.0);
+        for kk in 0..k {
+            let xv = x[i * k + kk] as f64;
+            if xv == 0.0 {
+                continue; // post-relu inputs are ~half zeros
+            }
+            let wrow = &w[kk * n..(kk + 1) * n];
+            for (r, &wv) in row.iter_mut().zip(wrow) {
+                *r += xv * wv as f64;
+            }
+        }
+        for (o, &r) in out[i * n..(i + 1) * n].iter_mut().zip(&row) {
+            *o = r as f32;
+        }
+    }
+}
+
+/// `h[i, :] += b` for every row.
+pub fn bias_add(h: &mut [f32], m: usize, n: usize, b: &[f32]) {
+    debug_assert_eq!(h.len(), m * n);
+    debug_assert_eq!(b.len(), n);
+    for i in 0..m {
+        for (hv, &bv) in h[i * n..(i + 1) * n].iter_mut().zip(b) {
+            *hv += bv;
+        }
+    }
+}
+
+/// In-place `max(x, 0)`.
+pub fn relu(h: &mut [f32]) {
+    for v in h.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// In-place logistic sigmoid (computed in f64 per element).
+pub fn sigmoid(h: &mut [f32]) {
+    for v in h.iter_mut() {
+        *v = (1.0 / (1.0 + (-(*v as f64)).exp())) as f32;
+    }
+}
+
+/// Backward of relu given the *post-activation* values: `dh *= 1[h > 0]`
+/// (subgradient 0 at the kink, matching jax's `max` VJP at 0 inputs).
+pub fn relu_backward(h: &[f32], dh: &mut [f32]) {
+    debug_assert_eq!(h.len(), dh.len());
+    for (d, &hv) in dh.iter_mut().zip(h) {
+        if hv <= 0.0 {
+            *d = 0.0;
+        }
+    }
+}
+
+/// Backward of sigmoid given the post-activation values: `dh *= s(1-s)`.
+pub fn sigmoid_backward(h: &[f32], dh: &mut [f32]) {
+    debug_assert_eq!(h.len(), dh.len());
+    for (d, &s) in dh.iter_mut().zip(h) {
+        let s = s as f64;
+        *d = (*d as f64 * s * (1.0 - s)) as f32;
+    }
+}
+
+/// Weight gradient `dw = x^T @ dz`: `x` is `(m, k)`, `dz` is `(m, n)`,
+/// `dw` out is `(k, n)` row-major. f64 accumulator matrix.
+pub fn matmul_dw(x: &[f32], dz: &[f32], m: usize, k: usize, n: usize, dw: &mut [f32]) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(dz.len(), m * n);
+    debug_assert_eq!(dw.len(), k * n);
+    let mut acc = vec![0.0f64; k * n];
+    for i in 0..m {
+        let dzrow = &dz[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let xv = x[i * k + kk] as f64;
+            if xv == 0.0 {
+                continue;
+            }
+            let arow = &mut acc[kk * n..(kk + 1) * n];
+            for (a, &dv) in arow.iter_mut().zip(dzrow) {
+                *a += xv * dv as f64;
+            }
+        }
+    }
+    for (o, &a) in dw.iter_mut().zip(&acc) {
+        *o = a as f32;
+    }
+}
+
+/// Input gradient `dx = dz @ w^T`: `dz` is `(m, n)`, `w` is `(k, n)`,
+/// `dx` out is `(m, k)`. Each element is a contiguous f64 dot over `n`.
+pub fn matmul_dx(dz: &[f32], w: &[f32], m: usize, k: usize, n: usize, dx: &mut [f32]) {
+    debug_assert_eq!(dz.len(), m * n);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(dx.len(), m * k);
+    for i in 0..m {
+        let dzrow = &dz[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let wrow = &w[kk * n..(kk + 1) * n];
+            let mut acc = 0.0f64;
+            for (&dv, &wv) in dzrow.iter().zip(wrow) {
+                acc += dv as f64 * wv as f64;
+            }
+            dx[i * k + kk] = acc as f32;
+        }
+    }
+}
+
+/// Bias gradient `db = sum_rows(dz)` with f64 column accumulators.
+pub fn bias_db(dz: &[f32], m: usize, n: usize, db: &mut [f32]) {
+    debug_assert_eq!(dz.len(), m * n);
+    debug_assert_eq!(db.len(), n);
+    let mut acc = vec![0.0f64; n];
+    for i in 0..m {
+        for (a, &dv) in acc.iter_mut().zip(&dz[i * n..(i + 1) * n]) {
+            *a += dv as f64;
+        }
+    }
+    for (o, &a) in db.iter_mut().zip(&acc) {
+        *o = a as f32;
+    }
+}
+
+/// Mean-square loss `mean_b 0.5*||y_b||^2` over `(m, n)` outputs.
+/// Returns the f64 loss and writes `dy = y / m`.
+pub fn mean_square_loss(y: &[f32], m: usize, n: usize, dy: &mut [f32]) -> f64 {
+    debug_assert_eq!(y.len(), m * n);
+    debug_assert_eq!(dy.len(), m * n);
+    let inv_m = 1.0 / m as f64;
+    let mut acc = 0.0f64;
+    for (&v, d) in y.iter().zip(dy.iter_mut()) {
+        let v = v as f64;
+        acc += v * v;
+        *d = (v * inv_m) as f32;
+    }
+    0.5 * acc * inv_m
+}
+
+/// Mean softmax cross-entropy over `(m, c)` logits with i32 labels.
+/// Per-row log-sum-exp runs in f64 (max-shifted, so large logits cannot
+/// overflow). Returns the f64 loss and writes
+/// `dlogits = (softmax - onehot(y)) / m`.
+pub fn softmax_xent_loss(logits: &[f32], y: &[i32], m: usize, c: usize, dl: &mut [f32]) -> f64 {
+    debug_assert_eq!(logits.len(), m * c);
+    debug_assert_eq!(y.len(), m);
+    debug_assert_eq!(dl.len(), m * c);
+    let inv_m = 1.0 / m as f64;
+    let mut loss = 0.0f64;
+    for i in 0..m {
+        let row = &logits[i * c..(i + 1) * c];
+        let label = y[i] as usize;
+        debug_assert!(label < c, "label {label} out of range (classes {c})");
+        let mx = row.iter().fold(f64::NEG_INFINITY, |a, &v| a.max(v as f64));
+        let mut z = 0.0f64;
+        for &v in row {
+            z += (v as f64 - mx).exp();
+        }
+        let lse = mx + z.ln();
+        loss += lse - row[label] as f64;
+        let drow = &mut dl[i * c..(i + 1) * c];
+        for (j, (d, &v)) in drow.iter_mut().zip(row).enumerate() {
+            let p = (v as f64 - mx).exp() / z;
+            let target = if j == label { 1.0 } else { 0.0 };
+            *d = ((p - target) * inv_m) as f32;
+        }
+    }
+    loss * inv_m
+}
+
+/// Per-row argmax == label indicator (the `correct` eval output of the
+/// classifier artifacts; ties resolve to the lowest index, like argmax).
+pub fn argmax_correct(logits: &[f32], y: &[i32], m: usize, c: usize, out: &mut [f32]) {
+    debug_assert_eq!(logits.len(), m * c);
+    debug_assert_eq!(out.len(), m);
+    for i in 0..m {
+        let row = &logits[i * c..(i + 1) * c];
+        let mut best = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = j;
+            }
+        }
+        out[i] = if best as i32 == y[i] { 1.0 } else { 0.0 };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small_exact() {
+        // (2,3) @ (3,2)
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let w = [1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let mut out = [0.0f32; 4];
+        matmul(&x, 2, 3, &w, 2, &mut out);
+        assert_eq!(out, [4.0, 5.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn bias_relu_sigmoid_roundtrip() {
+        let mut h = [-1.0f32, 0.5, -0.25, 2.0];
+        bias_add(&mut h, 2, 2, &[0.25, -0.5]);
+        assert_eq!(h, [-0.75, 0.0, 0.0, 1.5]);
+        let mut r = h;
+        relu(&mut r);
+        assert_eq!(r, [0.0, 0.0, 0.0, 1.5]);
+        let mut s = [0.0f32];
+        sigmoid(&mut s);
+        assert!((s[0] - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn softmax_xent_uniform_logits() {
+        let logits = [0.0f32; 6]; // (2, 3) uniform
+        let y = [0i32, 2];
+        let mut dl = [0.0f32; 6];
+        let loss = softmax_xent_loss(&logits, &y, 2, 3, &mut dl);
+        assert!((loss - (3.0f64).ln()).abs() < 1e-12);
+        // Gradient rows sum to zero and the label entry is negative.
+        assert!((dl[0] - (1.0 / 3.0 - 1.0) as f32 / 2.0).abs() < 1e-6);
+        let row_sum: f32 = dl[..3].iter().sum();
+        assert!(row_sum.abs() < 1e-6);
+    }
+
+    #[test]
+    fn mean_square_matches_hand_value() {
+        let y = [1.0f32, -2.0, 3.0, 0.0]; // (2, 2)
+        let mut dy = [0.0f32; 4];
+        let loss = mean_square_loss(&y, 2, 2, &mut dy);
+        assert!((loss - 0.5 * (1.0 + 4.0 + 9.0) / 2.0).abs() < 1e-12);
+        assert_eq!(dy, [0.5, -1.0, 1.5, 0.0]);
+    }
+
+    #[test]
+    fn argmax_correct_handles_ties_low() {
+        let logits = [1.0f32, 1.0, 0.0, 0.5, 2.0, 0.5]; // (2, 3)
+        let mut out = [9.0f32; 2];
+        argmax_correct(&logits, &[0, 1], 2, 3, &mut out);
+        assert_eq!(out, [1.0, 1.0]);
+        argmax_correct(&logits, &[1, 0], 2, 3, &mut out);
+        assert_eq!(out, [0.0, 0.0]);
+    }
+}

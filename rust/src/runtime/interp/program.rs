@@ -1,0 +1,241 @@
+//! `ProgramSpec` — the per-artifact program description that drives the
+//! native interpreter backend.
+//!
+//! A program is a feed-forward chain of dense layers (matmul + optional
+//! bias + activation) followed by a loss. Each layer names the *offsets*
+//! of its weight/bias blocks inside the flat parameter vector, so the
+//! interpreter is layout-agnostic: `python/compile/aot.py` emits offsets
+//! matching jax's `ravel_pytree` order (per layer: bias before weight),
+//! and the hand-written fallback specs in [`super::builtin`] use the same
+//! convention so a later `make artifacts` run stays init-blob compatible.
+
+use crate::util::error::{bail, Context, Result};
+use crate::util::json::Json;
+
+/// Elementwise activation applied after the affine map.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    Linear,
+    Relu,
+    Sigmoid,
+}
+
+impl Act {
+    pub fn parse(s: &str) -> Option<Act> {
+        match s {
+            "none" | "linear" => Some(Act::Linear),
+            "relu" => Some(Act::Relu),
+            "sigmoid" => Some(Act::Sigmoid),
+            _ => None,
+        }
+    }
+}
+
+/// One dense layer: `h = act(x @ W + b)` with `W` stored row-major
+/// `(in_dim, out_dim)` at `w_off` and `b` (when present) at `b_off`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dense {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub w_off: usize,
+    pub b_off: Option<usize>,
+    pub act: Act,
+    /// Weight-init std used when the artifact has no init blobs (builtin
+    /// fallback path); biases init to zero.
+    pub init_std: f32,
+}
+
+impl Dense {
+    pub fn w_len(&self) -> usize {
+        self.in_dim * self.out_dim
+    }
+}
+
+/// The scalar training loss applied to the final layer output.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Loss {
+    /// `mean_b 0.5 * ||y_b||^2` — the paper's Eq. 14 stochastic linear
+    /// regression objective (MSE against a zero target).
+    MeanSquare,
+    /// Mean softmax cross-entropy over `classes` logits with i32 labels.
+    SoftmaxXent { classes: usize },
+}
+
+/// A complete interpretable program for one artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProgramSpec {
+    pub layers: Vec<Dense>,
+    pub loss: Loss,
+}
+
+impl ProgramSpec {
+    /// Parse the manifest's `program` record.
+    ///
+    /// ```json
+    /// {"layers": [{"in": 256, "out": 512, "w_off": 512, "b_off": 0,
+    ///              "act": "relu", "init_std": 0.088}],
+    ///  "loss": {"kind": "softmax_xent", "classes": 16}}
+    /// ```
+    pub fn from_json(j: &Json) -> Result<ProgramSpec> {
+        let mut layers = Vec::new();
+        for (i, l) in j.get("layers").as_arr().context("program layers")?.iter().enumerate() {
+            let in_dim = l.get("in").as_usize().with_context(|| format!("layer {i} in"))?;
+            let out_dim = l.get("out").as_usize().with_context(|| format!("layer {i} out"))?;
+            let act = match l.get("act").as_str() {
+                None => Act::Linear,
+                Some(s) => Act::parse(s).with_context(|| format!("layer {i}: bad act {s:?}"))?,
+            };
+            layers.push(Dense {
+                in_dim,
+                out_dim,
+                w_off: l.get("w_off").as_usize().with_context(|| format!("layer {i} w_off"))?,
+                b_off: l.get("b_off").as_usize(),
+                act,
+                init_std: l.get("init_std").as_f64().unwrap_or(0.0) as f32,
+            });
+        }
+        let lj = j.get("loss");
+        let loss = match lj.get("kind").as_str() {
+            Some("mean_square") => Loss::MeanSquare,
+            Some("softmax_xent") => Loss::SoftmaxXent {
+                classes: lj.get("classes").as_usize().context("softmax_xent classes")?,
+            },
+            other => bail!("program loss kind {other:?} not supported"),
+        };
+        let p = ProgramSpec { layers, loss };
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Batch-input feature dim of the first layer.
+    pub fn in_dim(&self) -> usize {
+        self.layers.first().map(|l| l.in_dim).unwrap_or(0)
+    }
+
+    /// Output dim of the last layer.
+    pub fn out_dim(&self) -> usize {
+        self.layers.last().map(|l| l.out_dim).unwrap_or(0)
+    }
+
+    /// The parameter blocks `(offset, len)` in flat-vector order.
+    pub fn param_blocks(&self) -> Vec<(usize, usize)> {
+        let mut blocks = Vec::with_capacity(2 * self.layers.len());
+        for l in &self.layers {
+            blocks.push((l.w_off, l.w_len()));
+            if let Some(b) = l.b_off {
+                blocks.push((b, l.out_dim));
+            }
+        }
+        blocks.sort_unstable();
+        blocks
+    }
+
+    /// Total parameter count implied by the blocks.
+    pub fn param_dim(&self) -> usize {
+        self.param_blocks().iter().map(|&(o, l)| o + l).max().unwrap_or(0)
+    }
+
+    /// Structural checks: non-empty, layer dims chain, blocks tile the
+    /// flat vector exactly (the streaming backward path relies on full
+    /// coverage to complete every gradient bucket).
+    pub fn validate(&self) -> Result<()> {
+        if self.layers.is_empty() {
+            bail!("program has no layers");
+        }
+        for (i, w) in self.layers.windows(2).enumerate() {
+            if w[0].out_dim != w[1].in_dim {
+                bail!(
+                    "program layer {i} out {} != layer {} in {}",
+                    w[0].out_dim,
+                    i + 1,
+                    w[1].in_dim
+                );
+            }
+        }
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.in_dim == 0 || l.out_dim == 0 {
+                bail!("program layer {i} has a zero dim");
+            }
+        }
+        if let Loss::SoftmaxXent { classes } = self.loss {
+            if classes != self.out_dim() {
+                bail!(
+                    "softmax_xent classes {classes} != final layer out {}",
+                    self.out_dim()
+                );
+            }
+        }
+        let blocks = self.param_blocks();
+        let mut cursor = 0usize;
+        for &(off, len) in &blocks {
+            if off != cursor {
+                bail!(
+                    "program param blocks must tile [0, d) exactly: \
+                     gap/overlap at offset {off} (expected {cursor})"
+                );
+            }
+            cursor = off + len;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mlp_json() -> Json {
+        Json::parse(
+            r#"{"layers": [
+                 {"in": 4, "out": 3, "w_off": 3, "b_off": 0, "act": "relu"},
+                 {"in": 3, "out": 2, "w_off": 17, "b_off": 15, "act": "none"}],
+                "loss": {"kind": "softmax_xent", "classes": 2}}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_and_validates_mlp() {
+        let p = ProgramSpec::from_json(&mlp_json()).unwrap();
+        assert_eq!(p.layers.len(), 2);
+        assert_eq!(p.layers[0].act, Act::Relu);
+        assert_eq!(p.param_dim(), 3 + 12 + 2 + 6);
+        assert_eq!(p.in_dim(), 4);
+        assert_eq!(p.out_dim(), 2);
+    }
+
+    #[test]
+    fn rejects_dim_mismatch_and_gaps() {
+        let mut p = ProgramSpec::from_json(&mlp_json()).unwrap();
+        p.layers[1].in_dim = 5;
+        assert!(p.validate().is_err());
+        let mut p = ProgramSpec::from_json(&mlp_json()).unwrap();
+        p.layers[1].w_off = 18; // leaves a gap at 17
+        assert!(p.validate().is_err());
+        let mut p = ProgramSpec::from_json(&mlp_json()).unwrap();
+        p.loss = Loss::SoftmaxXent { classes: 5 };
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_bad_loss_kind() {
+        let j = Json::parse(
+            r#"{"layers": [{"in": 2, "out": 1, "w_off": 0}],
+                "loss": {"kind": "hinge"}}"#,
+        )
+        .unwrap();
+        assert!(ProgramSpec::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn linreg_shape() {
+        let j = Json::parse(
+            r#"{"layers": [{"in": 1000, "out": 1, "w_off": 0, "init_std": 0.0316}],
+                "loss": {"kind": "mean_square"}}"#,
+        )
+        .unwrap();
+        let p = ProgramSpec::from_json(&j).unwrap();
+        assert_eq!(p.param_dim(), 1000);
+        assert!(p.layers[0].b_off.is_none());
+    }
+}

@@ -1,0 +1,220 @@
+//! Straight-line f64 reference implementation — the second, independent
+//! pair of eyes behind the builtin golden checksums.
+//!
+//! When artifacts are built by `python/compile/aot.py`, goldens come from
+//! jax itself. The builtin fallback specs have no Python to lean on, so
+//! their goldens are minted here: textbook f64 loops (no shared kernels,
+//! different loop structure from [`super::ops`]) over the same init
+//! vector and deterministic golden batch. `tests/runtime_golden.rs` then
+//! cross-checks the f32 interpreter against these values, which catches a
+//! formula error in either implementation.
+
+use crate::data::Batch;
+use crate::runtime::artifact::{ArtifactSpec, Golden};
+use crate::util::error::{bail, Context, Result};
+
+use super::program::{Act, Loss, ProgramSpec};
+
+/// Forward + backward in pure f64. Returns `(loss, flat_grads)`.
+pub fn loss_and_grad(
+    prog: &ProgramSpec,
+    params: &[f32],
+    batch: &Batch,
+) -> Result<(f64, Vec<f64>)> {
+    let x32 = batch[0].as_f32().context("reference: input 0 must be f32")?;
+    let x: Vec<f64> = x32.iter().map(|&v| v as f64).collect();
+    let m = x.len() / prog.in_dim();
+    let p: Vec<f64> = params.iter().map(|&v| v as f64).collect();
+
+    // Forward: keep every post-activation.
+    let mut acts: Vec<Vec<f64>> = Vec::new();
+    for (li, l) in prog.layers.iter().enumerate() {
+        let input: &[f64] = if li == 0 { &x } else { &acts[li - 1] };
+        let (k, n) = (l.in_dim, l.out_dim);
+        let mut h = vec![0.0f64; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = match l.b_off {
+                    Some(b) => p[b + j],
+                    None => 0.0,
+                };
+                for kk in 0..k {
+                    acc += input[i * k + kk] * p[l.w_off + kk * n + j];
+                }
+                h[i * n + j] = match l.act {
+                    Act::Linear => acc,
+                    Act::Relu => acc.max(0.0),
+                    Act::Sigmoid => 1.0 / (1.0 + (-acc).exp()),
+                };
+            }
+        }
+        acts.push(h);
+    }
+
+    // Loss + dLoss/d(final output).
+    let out = acts.last().context("reference: empty program")?;
+    let c = prog.out_dim();
+    let mut loss = 0.0f64;
+    let mut dh = vec![0.0f64; out.len()];
+    match prog.loss {
+        Loss::MeanSquare => {
+            for (i, &v) in out.iter().enumerate() {
+                loss += 0.5 * v * v;
+                dh[i] = v;
+            }
+            loss /= m as f64;
+            dh.iter_mut().for_each(|d| *d /= m as f64);
+        }
+        Loss::SoftmaxXent { classes } => {
+            let y = batch[1].as_i32().context("reference: input 1 must be i32")?;
+            if classes != c {
+                bail!("reference: classes {classes} != out dim {c}");
+            }
+            for i in 0..m {
+                let row = &out[i * c..(i + 1) * c];
+                let label = y[i] as usize;
+                let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let z: f64 = row.iter().map(|&v| (v - mx).exp()).sum();
+                loss += mx + z.ln() - row[label];
+                for j in 0..c {
+                    let p_j = (row[j] - mx).exp() / z;
+                    dh[i * c + j] = (p_j - if j == label { 1.0 } else { 0.0 }) / m as f64;
+                }
+            }
+            loss /= m as f64;
+        }
+    }
+
+    // Backward, last layer to first.
+    let mut grads = vec![0.0f64; prog.param_dim()];
+    for li in (0..prog.layers.len()).rev() {
+        let l = &prog.layers[li];
+        let (k, n) = (l.in_dim, l.out_dim);
+        let h = &acts[li];
+        // Activation derivative through the stored post-activations.
+        let mut dz = dh.clone();
+        for (d, &hv) in dz.iter_mut().zip(h.iter()) {
+            match l.act {
+                Act::Linear => {}
+                Act::Relu => {
+                    if hv <= 0.0 {
+                        *d = 0.0;
+                    }
+                }
+                Act::Sigmoid => *d *= hv * (1.0 - hv),
+            }
+        }
+        let input: &[f64] = if li == 0 { &x } else { &acts[li - 1] };
+        for kk in 0..k {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for i in 0..m {
+                    acc += input[i * k + kk] * dz[i * n + j];
+                }
+                grads[l.w_off + kk * n + j] = acc;
+            }
+        }
+        if let Some(b_off) = l.b_off {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for i in 0..m {
+                    acc += dz[i * n + j];
+                }
+                grads[b_off + j] = acc;
+            }
+        }
+        if li > 0 {
+            let mut dx = vec![0.0f64; m * k];
+            for i in 0..m {
+                for kk in 0..k {
+                    let mut acc = 0.0f64;
+                    for j in 0..n {
+                        acc += dz[i * n + j] * p[l.w_off + kk * n + j];
+                    }
+                    dx[i * k + kk] = acc;
+                }
+            }
+            dh = dx;
+        }
+    }
+    Ok((loss, grads))
+}
+
+/// Mint the golden checksums for a builtin train artifact: seed-0 init,
+/// deterministic golden batch, all-f64 math.
+pub fn golden(spec: &ArtifactSpec) -> Result<Golden> {
+    let prog = spec
+        .program
+        .as_ref()
+        .with_context(|| format!("{}: no program to mint a golden from", spec.name))?;
+    let params = spec.load_init(0)?;
+    let batch = super::golden_batch(spec);
+    let (loss, grads) = loss_and_grad(prog, &params, &batch)?;
+    let grad_sum: f64 = grads.iter().sum();
+    let grad_l2: f64 = grads.iter().map(|g| g * g).sum::<f64>().sqrt();
+    Ok(Golden {
+        seed: 0,
+        loss,
+        grad_sum,
+        grad_l2,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Array;
+    use crate::runtime::interp::program::Dense;
+    use crate::util::prng::Rng;
+
+    /// Tiny 2-layer relu net: reference vs interpreter must agree to
+    /// ~f32 rounding (the interpreter stores f32 at layer boundaries).
+    #[test]
+    fn reference_matches_interpreter_on_small_net() {
+        let prog = ProgramSpec {
+            layers: vec![
+                Dense {
+                    in_dim: 5,
+                    out_dim: 4,
+                    w_off: 4,
+                    b_off: Some(0),
+                    act: Act::Relu,
+                    init_std: 0.5,
+                },
+                Dense {
+                    in_dim: 4,
+                    out_dim: 3,
+                    w_off: 27,
+                    b_off: Some(24),
+                    act: Act::Linear,
+                    init_std: 0.5,
+                },
+            ],
+            loss: Loss::SoftmaxXent { classes: 3 },
+        };
+        prog.validate().unwrap();
+        let params = super::super::init_params(&prog, 7);
+        let m = 6usize;
+        let mut rng = Rng::new(3);
+        let mut x = vec![0.0f32; m * 5];
+        rng.fill_normal_f32(&mut x, 1.0);
+        let y: Vec<i32> = (0..m as i32).map(|i| i % 3).collect();
+        let batch: Batch = vec![Array::F32(x, vec![m, 5]), Array::I32(y, vec![m])];
+
+        let (ref_loss, ref_grads) = loss_and_grad(&prog, &params, &batch).unwrap();
+
+        let spec_like_exec = super::super::InterpExec { prog: prog.clone() };
+        let mut grads = vec![0.0f32; prog.param_dim()];
+        let loss = spec_like_exec
+            .run_train_stream(&params, &batch, &mut grads, &mut |_, _, _| {})
+            .unwrap();
+
+        assert!((loss as f64 - ref_loss).abs() < 1e-5 * ref_loss.abs().max(1.0));
+        for (i, (&g, &r)) in grads.iter().zip(&ref_grads).enumerate() {
+            assert!(
+                (g as f64 - r).abs() < 1e-5 * r.abs().max(1e-3),
+                "grad[{i}]: interp {g} vs reference {r}"
+            );
+        }
+    }
+}

@@ -1,15 +1,24 @@
-//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced
-//! once by `make artifacts` and executes them from the training hot path.
-//! Python never runs at training time.
+//! Execution runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json` produced once by `make artifacts`) and executes them
+//! from the training hot path. Python never runs at training time.
 //!
-//! Interchange is HLO **text** — xla_extension 0.5.1 (what the published
-//! `xla` 0.1.6 crate links) rejects jax ≥ 0.5's serialized protos
-//! (64-bit instruction ids); the text parser reassigns ids.
+//! Two backends sit behind one `Runtime`/`Executable` surface:
+//! * **interp** — a native-Rust interpreter ([`interp`]) driven by the
+//!   manifest's `ProgramSpec` records (with builtin fallback specs for
+//!   the linreg/MLP artifacts, so the default offline build trains end
+//!   to end with no Python and no manifest at all);
+//! * **pjrt** — XLA via the `xla` crate, gated behind the `pjrt` cargo
+//!   feature (toolchain images only). Interchange is HLO **text** —
+//!   xla_extension 0.5.1 (what the published `xla` 0.1.6 crate links)
+//!   rejects jax ≥ 0.5's serialized protos (64-bit instruction ids); the
+//!   text parser reassigns ids.
 
 pub mod artifact;
 pub mod client;
 pub mod executable;
+pub mod interp;
 
-pub use artifact::{ArtifactSpec, IoSpec, Manifest};
-pub use client::Runtime;
+pub use artifact::{ArtifactSpec, Golden, IoSpec, Manifest};
+pub use client::{Backend, Runtime};
 pub use executable::Executable;
+pub use interp::ProgramSpec;

@@ -25,6 +25,10 @@ pub struct Worker {
     /// Wall-clock seconds spent in grad computation this step (per-rank
     /// compute time charged to the sim clock).
     pub last_compute_s: f64,
+    /// Persistent gradient assembly buffer for the streaming path.
+    grad_buf: Vec<f32>,
+    /// Per-bucket filled-element counts for the streaming path.
+    bucket_fill: Vec<usize>,
 }
 
 impl Worker {
@@ -36,6 +40,8 @@ impl Worker {
             inject_rng: Rng::new(seed ^ 0xFA11).fork(rank as u64),
             last_loss: 0.0,
             last_compute_s: 0.0,
+            grad_buf: Vec::new(),
+            bucket_fill: Vec::new(),
         }
     }
 
@@ -63,14 +69,19 @@ impl Worker {
         Ok(())
     }
 
-    /// Compute the local gradient via the existing executable, then
-    /// deliver it **bucket by bucket** through `on_bucket(b, columns)` in
-    /// bucket order — the DDP-style arrival surface the pipelined
-    /// executor consumes (on real hardware each bucket would fire as the
-    /// backward pass reaches it; here the full gradient exists first and
-    /// the buckets replay its arrival). Injection is applied before
-    /// delivery, so downstream consumers see exactly what `compute_grad`
-    /// would have produced.
+    /// Compute the local gradient and deliver it **bucket by bucket**
+    /// through `on_bucket(b, columns)` — the DDP-style arrival surface the
+    /// pipelined executor consumes.
+    ///
+    /// Healthy workers take the **live** path: the executable streams
+    /// parameter-gradient segments as its backward pass finalizes them
+    /// (reverse layer order on the interpreter backend), and each bucket
+    /// is delivered the moment the segments cover it — genuine per-rank
+    /// compute overlapping the pool's aggregation tasks, not a replay.
+    /// Workers with a failure injector fall back to compute-then-replay,
+    /// because injectors draw from their RNG in flat element order and
+    /// must see the whole gradient at once (bitwise-identical to the
+    /// pre-streaming behaviour).
     pub fn compute_grad_buckets(
         &mut self,
         exe: &Executable,
@@ -79,14 +90,58 @@ impl Worker {
         buckets: &Buckets,
         on_bucket: &mut dyn FnMut(usize, &[f32]),
     ) -> Result<()> {
-        let batch = self.next_batch(local_batch);
-        let t = crate::util::timer::Timer::start();
-        let (loss, mut grads) = exe.run_train(params, &batch)?;
-        self.last_compute_s = t.elapsed_s();
-        self.last_loss = loss;
-        self.injector.apply(&mut grads, &mut self.inject_rng);
+        let d = buckets.total();
+        let mut grad_buf = std::mem::take(&mut self.grad_buf);
+        grad_buf.resize(d, 0.0);
+        if matches!(self.injector, GradInjector::None) {
+            let batch = self.next_batch(local_batch);
+            self.bucket_fill.clear();
+            self.bucket_fill.resize(buckets.len(), 0);
+            let fill = &mut self.bucket_fill;
+            // Delivery work (bucket copies, overlap-mode task submission)
+            // is timed separately and excluded from the compute seconds
+            // charged to the sim clock — the clock models rank backward
+            // time, not the leader's aggregation hooks.
+            let mut deliver_s = 0.0f64;
+            let t = crate::util::timer::Timer::start();
+            let r = exe.run_train_stream(params, &batch, &mut grad_buf, &mut |g, off, len| {
+                // Credit the segment to every bucket it overlaps; a
+                // bucket is ready exactly when its range is fully
+                // written (segments never overlap, so counts are exact).
+                let dt = crate::util::timer::Timer::start();
+                let end = off + len;
+                for (b, (lo, hi)) in buckets.iter().enumerate() {
+                    let ov = end.min(hi).saturating_sub(off.max(lo));
+                    if ov == 0 {
+                        continue;
+                    }
+                    fill[b] += ov;
+                    if fill[b] == hi - lo {
+                        on_bucket(b, &g[lo..hi]);
+                    }
+                }
+                deliver_s += dt.elapsed_s();
+            });
+            self.last_compute_s = (t.elapsed_s() - deliver_s).max(0.0);
+            self.grad_buf = grad_buf;
+            let loss = r?;
+            debug_assert!(
+                self.bucket_fill
+                    .iter()
+                    .enumerate()
+                    .all(|(b, &f)| f == buckets.range(b).1 - buckets.range(b).0),
+                "streamed segments did not cover every bucket"
+            );
+            self.last_loss = loss;
+            return Ok(());
+        }
+        // Injector ranks reuse the whole-vector path (compute_grad owns
+        // the draw/timer/injection sequence) and replay bucket arrival.
+        let r = self.compute_grad(exe, params, local_batch, &mut grad_buf);
+        self.grad_buf = grad_buf;
+        r?;
         for (b, (lo, hi)) in buckets.iter().enumerate() {
-            on_bucket(b, &grads[lo..hi]);
+            on_bucket(b, &self.grad_buf[lo..hi]);
         }
         Ok(())
     }

@@ -1,13 +1,18 @@
-//! Integration smoke of the experiment harness: every figure/table module
-//! runs end-to-end at a tiny budget and writes its CSVs. (Skipped when
-//! artifacts are not built.)
+//! Integration smoke of the experiment harness at a tiny budget.
+//!
+//! The figures that only need the interpretable artifacts (fig2 linreg,
+//! the bucket ablation on the MLP) run in **every** build via the native
+//! interpreter; figures needing the full artifact set (det/dlrm/tfm)
+//! still require a `--features pjrt` build with artifacts and skip
+//! otherwise.
 
 use std::sync::Arc;
 
-use adacons::runtime::{Manifest, Runtime};
+use adacons::runtime::{Backend, Manifest, Runtime};
 use adacons::util::argparse::Args;
 
-fn runtime() -> Option<Arc<Runtime>> {
+/// Full artifact set on PJRT (toolchain images only).
+fn full_runtime() -> Option<Arc<Runtime>> {
     if !Runtime::HAS_PJRT {
         return None;
     }
@@ -17,6 +22,11 @@ fn runtime() -> Option<Arc<Runtime>> {
     } else {
         None
     }
+}
+
+/// Interpretable artifacts on the native backend (always available).
+fn interp_runtime() -> Arc<Runtime> {
+    Arc::new(Runtime::open_default_with(Backend::Interp).expect("interp backend"))
 }
 
 fn tiny_args(out: &std::path::Path, extra: &str) -> Args {
@@ -29,7 +39,7 @@ fn tiny_args(out: &std::path::Path, extra: &str) -> Args {
 
 #[test]
 fn fig2_writes_csvs() {
-    let Some(rt) = runtime() else { return };
+    let rt = interp_runtime();
     let dir = std::env::temp_dir().join("adacons_exp_smoke_fig2");
     adacons::exp::run_figure(rt, "fig2", &tiny_args(&dir, "")).unwrap();
     assert!(dir.join("fig2_curves.csv").exists());
@@ -40,8 +50,26 @@ fn fig2_writes_csvs() {
 }
 
 #[test]
+fn bucket_ablation_writes_csv() {
+    let rt = interp_runtime();
+    let dir = std::env::temp_dir().join("adacons_exp_smoke_buckets");
+    adacons::exp::run_table(rt, "buckets", &tiny_args(&dir, "")).unwrap();
+    let text = std::fs::read_to_string(dir.join("ablation_bucket.csv")).unwrap();
+    assert_eq!(text.lines().count(), 5); // header + 4 granularities
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn unknown_ids_error() {
+    let rt = interp_runtime();
+    let args = Args::parse(std::iter::empty(), &[]);
+    assert!(adacons::exp::run_figure(rt.clone(), "fig99", &args).is_err());
+    assert!(adacons::exp::run_table(rt, "table9", &args).is_err());
+}
+
+#[test]
 fn fig5_and_fig7_write_csvs() {
-    let Some(rt) = runtime() else { return };
+    let Some(rt) = full_runtime() else { return };
     let dir = std::env::temp_dir().join("adacons_exp_smoke_fig57");
     adacons::exp::run_figure(rt.clone(), "fig5", &tiny_args(&dir, "")).unwrap();
     assert!(dir.join("fig5_auc.csv").exists());
@@ -52,22 +80,4 @@ fn fig5_and_fig7_write_csvs() {
     assert_eq!(lines.next().unwrap().split(',').count(), 7);
     assert!(lines.next().is_some());
     std::fs::remove_dir_all(&dir).ok();
-}
-
-#[test]
-fn bucket_ablation_writes_csv() {
-    let Some(rt) = runtime() else { return };
-    let dir = std::env::temp_dir().join("adacons_exp_smoke_buckets");
-    adacons::exp::run_table(rt, "buckets", &tiny_args(&dir, "")).unwrap();
-    let text = std::fs::read_to_string(dir.join("ablation_bucket.csv")).unwrap();
-    assert_eq!(text.lines().count(), 5); // header + 4 granularities
-    std::fs::remove_dir_all(&dir).ok();
-}
-
-#[test]
-fn unknown_ids_error() {
-    let Some(rt) = runtime() else { return };
-    let args = Args::parse(std::iter::empty(), &[]);
-    assert!(adacons::exp::run_figure(rt.clone(), "fig99", &args).is_err());
-    assert!(adacons::exp::run_table(rt, "table9", &args).is_err());
 }
