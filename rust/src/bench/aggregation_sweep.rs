@@ -41,6 +41,13 @@ pub struct SweepConfig {
     /// each entry adds an `adacons_step` case driving the full
     /// `PipelinedExecutor` (16 buckets) with overlap on or off.
     pub overlap_modes: Vec<bool>,
+    /// Interpreter train-step cases (`interp_step`): one real backward
+    /// pass per rank on the builtin MLP artifact through the pipelined
+    /// executor, in both execution modes (`mode` dimension: `roundrobin`
+    /// producer loop vs `threaded` rank threads over the exchange), per
+    /// thread count — so backend + threading perf is tracked in
+    /// `BENCH_aggregation.json` alongside the pure aggregation kernels.
+    pub interp_step: bool,
 }
 
 impl SweepConfig {
@@ -61,6 +68,7 @@ impl SweepConfig {
             min_shard_elems: crate::parallel::DEFAULT_MIN_SHARD_ELEMS,
             max_case_bytes: 2_000_000_000,
             overlap_modes: vec![false, true],
+            interp_step: true,
         }
     }
 
@@ -75,6 +83,7 @@ impl SweepConfig {
             min_shard_elems: 16 * 1024,
             max_case_bytes: 2_000_000_000,
             overlap_modes: vec![false, true],
+            interp_step: true,
         }
     }
 }
@@ -310,6 +319,10 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Json> {
             }
         }
     }
+    if cfg.interp_step {
+        println!("-- interpreter train step (mlp_cls_b32, roundrobin vs threaded ranks) --");
+        interp_step_cases(cfg.budget_s, &threads, cfg.min_shard_elems, &mut baseline, &mut cases)?;
+    }
     Ok(obj(vec![
         ("bench", s("aggregation")),
         ("schema_version", num(1.0)),
@@ -319,6 +332,131 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Json> {
         ("budget_s", num(cfg.budget_s)),
         ("cases", arr(cases)),
     ]))
+}
+
+/// The `interp_step` dimension: a full train step — real interpreter
+/// backward per rank, streamed bucket arrival, pipelined aggregation
+/// (overlap on) — on the builtin `mlp_cls_b32` artifact, in both
+/// execution modes: `roundrobin` (ranks produced serially on the leader
+/// thread) vs `threaded` (a persistent `RankTeam`, one OS thread per
+/// rank, buckets ingested in arrival order over the exchange). Tracks
+/// what the kernel-only cases cannot: backend compute plus the real
+/// threading/transport overhead of the step loop.
+fn interp_step_cases(
+    budget_s: f64,
+    threads: &[usize],
+    min_shard_elems: usize,
+    baseline: &mut BTreeMap<(String, usize, usize), f64>,
+    cases: &mut Vec<Json>,
+) -> Result<()> {
+    use crate::coordinator::team::RankTeam;
+    use crate::data::GradInjector;
+    use crate::runtime::{Backend, Runtime};
+    use crate::worker::Worker;
+
+    let n = 4usize;
+    let artifact = "mlp_cls_b32";
+    let rt = Runtime::create_with(
+        std::env::temp_dir().join("adacons_bench_interp"),
+        Backend::Interp,
+    )?;
+    let exe = rt.load(artifact)?;
+    let d = exe.spec.param_dim;
+    let local_batch = exe.spec.local_batch();
+    let params = exe.spec.load_init(0)?;
+    let buckets = Buckets::fixed(d, d.div_ceil(8).max(1));
+    let cost = CostModel::from_topology(&Topology::ring_gbps(n, 100.0));
+    let mk_workers = || -> Result<Vec<Worker>> {
+        (0..n)
+            .map(|rank| {
+                let gen =
+                    crate::data::for_model(&exe.spec.model, 42, rank as u64, 0.0, &exe.spec.meta)
+                        .context("no data generator for the bench artifact")?;
+                Ok(Worker::new(rank, gen, GradInjector::None, 42))
+            })
+            .collect()
+    };
+    for &t in threads {
+        let ctx = ParallelCtx::new(ParallelPolicy {
+            threads: t,
+            min_shard_elems,
+        });
+        for mode in ["roundrobin", "threaded"] {
+            let mut agg = aggregation::by_name("adacons", n).context("adacons not in registry")?;
+            let mut exec = PipelinedExecutor::new(n, buckets.clone(), true);
+            let mut grads = GradSet::zeros(n, d);
+            let mut out = vec![0.0f32; d];
+            let mut clock = SimClock::new(n);
+            let label = format!("interp step     N={n} d={d} t={t} mode={mode}");
+            let r = if mode == "roundrobin" {
+                let mut workers = mk_workers()?;
+                bench_auto(&label, budget_s, || {
+                    let mut produce = |rank: usize,
+                                       deliver: &mut dyn FnMut(usize, &[f32])|
+                     -> Result<(f64, f64)> {
+                        let w = &mut workers[rank];
+                        w.compute_grad_buckets(&exe, &params, local_batch, &buckets, deliver)?;
+                        Ok((w.last_loss as f64, w.last_compute_s))
+                    };
+                    exec.run_step(
+                        &mut produce,
+                        agg.as_mut(),
+                        &mut grads,
+                        &mut out,
+                        &ctx,
+                        &mut clock,
+                        &cost,
+                    )
+                    .expect("roundrobin bench step");
+                })
+            } else {
+                // Spawn once, reuse across every bench iteration — the
+                // deployment shape the trainer uses.
+                let team = RankTeam::spawn(&rt, artifact, mk_workers()?, &buckets, local_batch)?;
+                let shared = std::sync::Arc::new(params.clone());
+                bench_auto(&label, budget_s, || {
+                    team.begin_step(&shared).expect("rank team alive");
+                    exec.run_step_exchange(
+                        team.exchange(),
+                        agg.as_mut(),
+                        &mut grads,
+                        &mut out,
+                        &ctx,
+                        &mut clock,
+                        &cost,
+                    )
+                    .expect("threaded bench step");
+                })
+            };
+            let key = (format!("interp_step_{mode}"), n, d);
+            if t == threads[0] {
+                baseline.insert(key.clone(), r.mean_s);
+            }
+            let speedup = baseline.get(&key).map(|&b| b / r.mean_s);
+            println!(
+                "{}{}",
+                r.report_line(),
+                speedup
+                    .map(|x| format!("  [{x:.2}x vs 1t]"))
+                    .unwrap_or_default()
+            );
+            cases.push(obj(vec![
+                ("op", s("interp_step")),
+                ("mode", s(mode)),
+                ("artifact", s(artifact)),
+                ("workers", num(n as f64)),
+                ("d", num(d as f64)),
+                ("threads", num(t as f64)),
+                ("buckets", num(buckets.len() as f64)),
+                ("iters", num(r.iters as f64)),
+                ("mean_s", num(r.mean_s)),
+                ("p50_s", num(r.p50_s)),
+                ("p99_s", num(r.p99_s)),
+                ("speedup_vs_1t", speedup.map(num).unwrap_or(Json::Null)),
+            ]));
+        }
+    }
+    Ok(())
 }
 
 /// Run the sweep and write `path` (pretty JSON).
@@ -367,10 +505,11 @@ fn load_doc(path: &str) -> Result<Json> {
 }
 
 /// Median `mean_s` of the measured cases matching `op` (and, when given,
-/// the `overlap` tag). `None` when the document has no matching cases —
-/// pre-overlap baselines lack `adacons_step`, and the gate must not
-/// hard-fail on them.
-fn case_median(doc: &Json, op: &str, overlap: Option<&str>) -> Result<Option<f64>> {
+/// a `(key, value)` tag such as `("overlap", "on")` or
+/// `("mode", "threaded")`). `None` when the document has no matching
+/// cases — older baselines predate the `adacons_step`/`interp_step`
+/// cases, and the gate must not hard-fail on them.
+fn case_median(doc: &Json, op: &str, tag: Option<(&str, &str)>) -> Result<Option<f64>> {
     let mut v: Vec<f64> = doc
         .get("cases")
         .as_arr()
@@ -379,7 +518,7 @@ fn case_median(doc: &Json, op: &str, overlap: Option<&str>) -> Result<Option<f64
         .filter(|c| {
             c.get("op").as_str() == Some(op)
                 && c.get("skipped").as_bool() != Some(true)
-                && overlap.is_none_or(|m| c.get("overlap").as_str() == Some(m))
+                && tag.is_none_or(|(k, m)| c.get(k).as_str() == Some(m))
         })
         .filter_map(|c| c.get("mean_s").as_f64())
         .collect();
@@ -410,13 +549,18 @@ fn gate_one(
 
 /// CI perf-history gate: fail if `current` regresses vs the committed
 /// `baseline` document (both must come from the same grid, e.g. two
-/// smoke runs). Two gated groups:
+/// smoke runs). Three gated groups:
 /// * the `adacons` e2e aggregate-phase median at `max_ratio`;
 /// * the `adacons_step` pipelined-step medians (overlap off and on) at
 ///   `max_step_ratio` — looser, because the full step carries pool
 ///   scheduling + simulated-timeline work whose variance is higher than
-///   the pure kernels' (see EXPERIMENTS.md §Perf for the measured basis).
-///   Skipped with a notice when the baseline predates the overlap cases.
+///   the pure kernels' (see EXPERIMENTS.md §Perf for the measured basis);
+/// * the `interp_step` backend train-step medians (roundrobin and
+///   threaded rank execution) at `max_step_ratio` — same rationale plus
+///   OS-thread scheduling (EXPERIMENTS.md §Threaded-execution).
+///
+/// Step groups are skipped with a notice when the baseline predates
+/// their cases.
 pub fn compare_files(
     baseline: &str,
     current: &str,
@@ -430,11 +574,17 @@ pub fn compare_files(
     let c = case_median(&cur_doc, "adacons", None)?
         .with_context(|| format!("{current}: no measured adacons cases"))?;
     gate_one("aggregate-phase (adacons)", b, c, max_ratio, baseline)?;
-    for mode in ["off", "on"] {
-        let label = format!("pipelined step (adacons_step overlap={mode})");
+    let step_groups: [(&str, (&str, &str)); 4] = [
+        ("adacons_step", ("overlap", "off")),
+        ("adacons_step", ("overlap", "on")),
+        ("interp_step", ("mode", "roundrobin")),
+        ("interp_step", ("mode", "threaded")),
+    ];
+    for (op, (key, val)) in step_groups {
+        let label = format!("pipelined step ({op} {key}={val})");
         match (
-            case_median(&base_doc, "adacons_step", Some(mode))?,
-            case_median(&cur_doc, "adacons_step", Some(mode))?,
+            case_median(&base_doc, op, Some((key, val)))?,
+            case_median(&cur_doc, op, Some((key, val)))?,
         ) {
             (Some(b), Some(c)) => gate_one(&label, b, c, max_step_ratio, baseline)?,
             (b, c) => println!(
@@ -496,6 +646,7 @@ mod tests {
             min_shard_elems: 2048,
             max_case_bytes: 1 << 30,
             overlap_modes: vec![],
+            interp_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -526,6 +677,7 @@ mod tests {
             min_shard_elems: 2048,
             max_case_bytes: 1000, // force the skip path
             overlap_modes: vec![false, true],
+            interp_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -543,6 +695,7 @@ mod tests {
             min_shard_elems: 2048,
             max_case_bytes: 1 << 30,
             overlap_modes: vec![false, true],
+            interp_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -554,6 +707,62 @@ mod tests {
             .filter_map(|c| c.get("overlap").as_str())
             .collect();
         assert_eq!(tagged, vec!["off", "on"]);
+    }
+
+    #[test]
+    fn interp_step_dimension_emits_both_execution_modes() {
+        let cfg = SweepConfig {
+            budget_s: 0.001,
+            threads: vec![1],
+            workers: vec![2],
+            dims: vec![8_192],
+            min_shard_elems: 2048,
+            max_case_bytes: 1 << 30,
+            overlap_modes: vec![],
+            interp_step: true,
+        };
+        let doc = run_sweep(&cfg).unwrap();
+        let cases = doc.get("cases").as_arr().unwrap();
+        // 4 kernel ops + 2 interp execution modes.
+        assert_eq!(cases.len(), 6);
+        let modes: Vec<&str> = cases
+            .iter()
+            .filter(|c| c.get("op").as_str() == Some("interp_step"))
+            .filter_map(|c| c.get("mode").as_str())
+            .collect();
+        assert_eq!(modes, vec!["roundrobin", "threaded"]);
+        for c in cases {
+            if c.get("op").as_str() == Some("interp_step") {
+                assert!(c.get("mean_s").as_f64().unwrap() > 0.0);
+                assert_eq!(c.get("artifact").as_str(), Some("mlp_cls_b32"));
+            }
+        }
+    }
+
+    #[test]
+    fn perf_gate_covers_interp_step_cases() {
+        let dir = std::env::temp_dir().join("adacons_perf_gate_interp");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mk = |name: &str, rr_s: f64, th_s: f64| -> String {
+            let path = dir.join(name);
+            let doc = format!(
+                r#"{{"bench":"aggregation","cases":[
+                    {{"op":"adacons","workers":4,"d":1000,"threads":1,"mean_s":0.010}},
+                    {{"op":"interp_step","mode":"roundrobin","workers":4,"d":1000,"threads":1,"mean_s":{rr_s}}},
+                    {{"op":"interp_step","mode":"threaded","workers":4,"d":1000,"threads":1,"mean_s":{th_s}}}
+                ]}}"#
+            );
+            std::fs::write(&path, doc).unwrap();
+            path.to_str().unwrap().to_string()
+        };
+        let base = mk("base.json", 0.030, 0.028);
+        let ok = mk("ok.json", 0.035, 0.033);
+        compare_files(&base, &ok, 1.3, 1.5).unwrap();
+        // A threaded-mode regression beyond the step gate fails even when
+        // the kernels and the roundrobin mode are fine.
+        let bad = mk("bad.json", 0.031, 0.060);
+        assert!(compare_files(&base, &bad, 1.3, 1.5).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

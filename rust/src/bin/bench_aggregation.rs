@@ -4,6 +4,7 @@
 //!   cargo run --release --bin bench_aggregation                  # full grid
 //!   cargo run --release --bin bench_aggregation -- --smoke --budget 0.05
 //!   cargo run --release --bin bench_aggregation -- --overlap on   # on|off|both
+//!   cargo run --release --bin bench_aggregation -- --interp-step off  # skip backend step cases
 //!   cargo run --release --bin bench_aggregation -- --check BENCH_aggregation.json
 //!   cargo run --release --bin bench_aggregation -- --table BENCH_aggregation.json
 //!   cargo run --release --bin bench_aggregation -- --compare bench_history/baseline.json \
@@ -60,6 +61,13 @@ fn run() -> Result<()> {
             "both" => vec![false, true],
             "none" => vec![],
             other => return Err(adacons::err!("--overlap {other:?}: want on|off|both|none")),
+        };
+    }
+    if let Some(v) = args.str_opt("interp-step") {
+        cfg.interp_step = match v {
+            "on" => true,
+            "off" => false,
+            other => return Err(adacons::err!("--interp-step {other:?}: want on|off")),
         };
     }
     let out = args.str_or("out", "BENCH_aggregation.json");

@@ -1,143 +1,323 @@
-//! In-process rank-to-rank transport: typed mailboxes and a reusable step
-//! barrier.
+//! In-process rank-to-rank transport: typed mailboxes and the step
+//! exchange the threaded rank runtime speaks.
 //!
-//! On the single-accelerator testbed the coordinator drives ranks
-//! round-robin (see `worker/`), but the aggregation algebra itself is
-//! host-side and thread-safe; this module provides the transport for the
-//! threaded deployment shape — N rank threads exchanging gradients with a
-//! leader — and is exercised by `threaded_allreduce`, a multi-threaded
-//! driver of the simulated collectives used in tests and benches.
+//! The deployment shape is N rank threads streaming gradients to one
+//! leader ([`StepExchange::new`] hands back the leader half plus one
+//! [`RankPort`] per rank). The wire unit is a **bucket**, not a whole
+//! gradient: ranks send `(rank, bucket, columns)` messages as each bucket
+//! of their backward completes ([`RankPort::submit_bucket`]), then a
+//! [`RankMsg::Done`] carrying the step's loss and on-thread compute
+//! seconds. The leader drains messages **in arrival order**
+//! ([`StepExchange::leader_ingest`]) — the pipelined executor feeds ready
+//! buckets to the pool straight from this loop.
 //!
-//! The wire unit is a **bucket**, not a whole gradient: ranks send
-//! `(rank, bucket, columns)` messages as each bucket of their backward
-//! completes ([`StepExchange::submit_bucket`]), matching the pipelined
-//! executor's arrival surface; the leader assembles buckets in any
-//! arrival order and aggregates once the matrix is complete.
+//! Failure is a first-class message, not a hang: every `RankPort` is an
+//! armed guard, and dropping one without [`RankPort::complete`] (the
+//! unwind path of a panicking rank thread) emits [`RankMsg::Down`], so
+//! the leader's ingest loop fails the step with the dead rank's id
+//! instead of blocking forever on a `recv` that can never complete. The
+//! exchange holds no sender of its own, so even a guard-less mass death
+//! of every rank surfaces as a closed-channel error rather than a hang.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Barrier, Mutex};
+use std::sync::{Arc, Mutex};
 
 use crate::tensor::{Buckets, GradSet};
+use crate::util::error::Result;
+use crate::{bail, ensure, err};
 
-/// A typed point-to-point mailbox (multi-producer, single-consumer).
+/// A typed point-to-point mailbox (multi-producer, single-consumer). The
+/// mailbox owns only the receiving half — producers own every sender —
+/// so `recv` errors once all producers are gone instead of hanging.
 pub struct Mailbox<T> {
-    tx: Sender<T>,
     rx: Mutex<Receiver<T>>,
 }
 
-impl<T> Default for Mailbox<T> {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
 impl<T> Mailbox<T> {
-    pub fn new() -> Self {
+    /// Create a mailbox plus its first sender (clone it for more
+    /// producers).
+    pub fn channel() -> (Sender<T>, Mailbox<T>) {
         let (tx, rx) = channel();
-        Mailbox {
+        (
             tx,
-            rx: Mutex::new(rx),
-        }
+            Mailbox {
+                rx: Mutex::new(rx),
+            },
+        )
     }
 
-    pub fn sender(&self) -> Sender<T> {
-        self.tx.clone()
-    }
-
-    /// Blocking receive.
-    pub fn recv(&self) -> T {
-        self.rx.lock().unwrap().recv().expect("mailbox closed")
-    }
-
-    /// Receive exactly `n` messages.
-    pub fn recv_n(&self, n: usize) -> Vec<T> {
-        let rx = self.rx.lock().unwrap();
-        (0..n).map(|_| rx.recv().expect("mailbox closed")).collect()
-    }
-}
-
-/// The leader's view of a step exchange: collect every rank's gradient
-/// buckets, return the aggregated direction to all ranks.
-pub struct StepExchange {
-    pub n: usize,
-    /// `(rank, bucket, columns)` — one message per bucket per rank.
-    buckets_in: Mailbox<(usize, usize, Vec<f32>)>,
-    results_out: Vec<Sender<Arc<Vec<f32>>>>,
-    results_in: Vec<Mutex<Receiver<Arc<Vec<f32>>>>>,
-    pub barrier: Arc<Barrier>,
-}
-
-impl StepExchange {
-    pub fn new(n: usize) -> Self {
-        let mut results_out = Vec::with_capacity(n);
-        let mut results_in = Vec::with_capacity(n);
-        for _ in 0..n {
-            let (tx, rx) = channel();
-            results_out.push(tx);
-            results_in.push(Mutex::new(rx));
-        }
-        StepExchange {
-            n,
-            buckets_in: Mailbox::new(),
-            results_out,
-            results_in,
-            barrier: Arc::new(Barrier::new(n + 1)), // ranks + leader
-        }
-    }
-
-    /// Rank side: send one bucket's columns as soon as it is ready.
-    pub fn submit_bucket(&self, rank: usize, bucket: usize, cols: Vec<f32>) {
-        self.buckets_in.sender().send((rank, bucket, cols)).unwrap();
-    }
-
-    /// Rank side: send a whole gradient as its bucket sequence (the
-    /// degenerate single-bucket path when `buckets` is
-    /// [`Buckets::single`]).
-    pub fn submit(&self, rank: usize, buckets: &Buckets, grad: &[f32]) {
-        assert_eq!(grad.len(), buckets.total());
-        for (b, (lo, hi)) in buckets.iter().enumerate() {
-            self.submit_bucket(rank, b, grad[lo..hi].to_vec());
-        }
-    }
-
-    /// Rank side: wait for the aggregated direction.
-    pub fn wait_result(&self, rank: usize) -> Arc<Vec<f32>> {
-        self.results_in[rank]
+    /// Blocking receive; errors once every sender has disconnected.
+    pub fn recv(&self) -> Result<T> {
+        self.rx
             .lock()
             .unwrap()
             .recv()
-            .expect("exchange closed")
+            .map_err(|_| err!("mailbox closed: every sender disconnected"))
     }
 
-    /// Leader side: gather `n * buckets.len()` bucket messages (any
-    /// arrival order) into the assembled gradient matrix, aggregate with
-    /// `f`, broadcast the result.
-    pub fn leader_step(&self, buckets: &Buckets, f: impl FnOnce(GradSet) -> Vec<f32>) {
+}
+
+/// One rank-to-leader message on the step exchange.
+#[derive(Debug)]
+pub enum RankMsg {
+    /// One bucket's gradient columns, sent as the backward finalizes it.
+    Bucket {
+        rank: usize,
+        bucket: usize,
+        cols: Vec<f32>,
+    },
+    /// The rank finished its backward for this step.
+    Done {
+        rank: usize,
+        loss: f64,
+        compute_s: f64,
+    },
+    /// The rank died (panic, compute error) — emitted by its port's
+    /// guard so the leader errors instead of hanging.
+    Down { rank: usize, reason: String },
+}
+
+/// Per-rank completion report delivered with [`RankMsg::Done`]: the local
+/// loss and the wall compute seconds measured **on the rank thread**
+/// (fed to the `SimClock` by the coordinator).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RankReport {
+    pub loss: f64,
+    pub compute_s: f64,
+}
+
+/// A rank thread's handle on the exchange: the only sender for its
+/// messages plus the receiver for broadcast results. The port doubles as
+/// a death guard — dropping it without [`RankPort::complete`] (or
+/// [`RankPort::report_down`]) reports the rank down, which is exactly
+/// what happens when a rank thread unwinds from a panic.
+pub struct RankPort {
+    rank: usize,
+    tx: Sender<RankMsg>,
+    result_rx: Receiver<Arc<Vec<f32>>>,
+    armed: bool,
+}
+
+impl RankPort {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Send one bucket's columns as soon as it is ready. A send to a
+    /// departed leader is dropped silently — the rank notices at its next
+    /// blocking point.
+    pub fn submit_bucket(&self, bucket: usize, cols: Vec<f32>) {
+        let _ = self.tx.send(RankMsg::Bucket {
+            rank: self.rank,
+            bucket,
+            cols,
+        });
+    }
+
+    /// Send a whole gradient as its bucket sequence (the degenerate
+    /// single-bucket path when `buckets` is [`Buckets::single`]).
+    pub fn submit(&self, buckets: &Buckets, grad: &[f32]) {
+        assert_eq!(grad.len(), buckets.total());
+        for (b, (lo, hi)) in buckets.iter().enumerate() {
+            self.submit_bucket(b, grad[lo..hi].to_vec());
+        }
+    }
+
+    /// Mark this step's backward complete, reporting the local loss and
+    /// the compute seconds measured on this thread.
+    pub fn done(&self, loss: f64, compute_s: f64) {
+        let _ = self.tx.send(RankMsg::Done {
+            rank: self.rank,
+            loss,
+            compute_s,
+        });
+    }
+
+    /// Wait for the leader's broadcast result; errors once the leader
+    /// (and its exchange) is gone — the rank's clean-shutdown signal.
+    pub fn wait_result(&self) -> Result<Arc<Vec<f32>>> {
+        self.result_rx
+            .recv()
+            .map_err(|_| err!("step exchange closed (leader gone)"))
+    }
+
+    /// Report this rank down with an explicit reason (e.g. a compute
+    /// error) and disarm the guard.
+    pub fn report_down(mut self, reason: &str) {
+        let _ = self.tx.send(RankMsg::Down {
+            rank: self.rank,
+            reason: reason.to_string(),
+        });
+        self.armed = false;
+    }
+
+    /// Clean shutdown: disarm the guard so dropping the port does not
+    /// report the rank down.
+    pub fn complete(mut self) {
+        self.armed = false;
+    }
+}
+
+impl Drop for RankPort {
+    fn drop(&mut self) {
+        if self.armed {
+            let reason = if std::thread::panicking() {
+                "rank thread panicked"
+            } else {
+                "rank port dropped before complete()"
+            };
+            let _ = self.tx.send(RankMsg::Down {
+                rank: self.rank,
+                reason: reason.to_string(),
+            });
+        }
+    }
+}
+
+/// The leader's half of a step exchange: drain every rank's bucket
+/// messages in arrival order, broadcast the aggregated result.
+pub struct StepExchange {
+    n: usize,
+    msgs_in: Mailbox<RankMsg>,
+    results_out: Vec<Sender<Arc<Vec<f32>>>>,
+}
+
+impl StepExchange {
+    /// Build the exchange plus one [`RankPort`] per rank (move each port
+    /// into its rank thread). The exchange keeps no sender of its own,
+    /// so rank death is always observable on the leader side.
+    pub fn new(n: usize) -> (StepExchange, Vec<RankPort>) {
+        let (msg_tx, msgs_in) = Mailbox::channel();
+        let mut results_out = Vec::with_capacity(n);
+        let mut ports = Vec::with_capacity(n);
+        for rank in 0..n {
+            let (tx, rx) = channel();
+            results_out.push(tx);
+            ports.push(RankPort {
+                rank,
+                tx: msg_tx.clone(),
+                result_rx: rx,
+                armed: true,
+            });
+        }
+        (
+            StepExchange {
+                n,
+                msgs_in,
+                results_out,
+            },
+            ports,
+        )
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Drain one step's messages **in arrival order**, invoking
+    /// `on_bucket(rank, bucket, cols)` per bucket message until every
+    /// rank has delivered every bucket — plus, with `expect_done`, one
+    /// [`RankMsg::Done`] per rank (returned as rank-indexed
+    /// [`RankReport`]s; empty otherwise).
+    ///
+    /// Fails the step — instead of hanging — when a rank reports
+    /// [`RankMsg::Down`] (the error names the rank) or when every rank
+    /// sender disconnects without a guard firing.
+    pub fn leader_ingest(
+        &self,
+        buckets: &Buckets,
+        expect_done: bool,
+        on_bucket: &mut dyn FnMut(usize, usize, Vec<f32>),
+    ) -> Result<Vec<RankReport>> {
         let nb = buckets.len();
-        let mut gs = GradSet::zeros(self.n, buckets.total());
         let mut seen = vec![false; self.n * nb];
-        for (rank, b, cols) in self.buckets_in.recv_n(self.n * nb) {
-            let (lo, hi) = buckets.range(b);
-            assert_eq!(cols.len(), hi - lo, "bucket {b} payload width");
-            assert!(
-                !std::mem::replace(&mut seen[rank * nb + b], true),
-                "duplicate bucket {b} from rank {rank}"
-            );
-            gs.row_mut(rank)[lo..hi].copy_from_slice(&cols);
+        let mut remaining_buckets = self.n * nb;
+        let mut reports = vec![None; self.n];
+        let mut remaining_done = if expect_done { self.n } else { 0 };
+        while remaining_buckets > 0 || remaining_done > 0 {
+            match self.msgs_in.recv()? {
+                RankMsg::Bucket { rank, bucket, cols } => {
+                    ensure!(
+                        rank < self.n && bucket < nb,
+                        "bucket message out of range: rank {rank}, bucket {bucket}"
+                    );
+                    let (lo, hi) = buckets.range(bucket);
+                    ensure!(
+                        cols.len() == hi - lo,
+                        "bucket {bucket} payload width {} != {}",
+                        cols.len(),
+                        hi - lo
+                    );
+                    ensure!(
+                        !std::mem::replace(&mut seen[rank * nb + bucket], true),
+                        "duplicate bucket {bucket} from rank {rank}"
+                    );
+                    remaining_buckets -= 1;
+                    on_bucket(rank, bucket, cols);
+                }
+                RankMsg::Done {
+                    rank,
+                    loss,
+                    compute_s,
+                } => {
+                    ensure!(expect_done, "unexpected done message from rank {rank}");
+                    ensure!(rank < self.n, "done message from unknown rank {rank}");
+                    ensure!(
+                        reports[rank].is_none(),
+                        "duplicate done message from rank {rank}"
+                    );
+                    reports[rank] = Some(RankReport { loss, compute_s });
+                    remaining_done -= 1;
+                }
+                RankMsg::Down { rank, reason } => {
+                    bail!("rank {rank} went down mid-step: {reason}")
+                }
+            }
         }
-        let result = Arc::new(f(gs));
+        Ok(if expect_done {
+            reports
+                .into_iter()
+                .map(|r| r.expect("counted n done messages"))
+                .collect()
+        } else {
+            Vec::new()
+        })
+    }
+
+    /// Broadcast the aggregated result to every rank (sends to departed
+    /// ranks are dropped — their death already surfaced, or will, as a
+    /// `Down` message).
+    pub fn broadcast(&self, result: Arc<Vec<f32>>) {
         for tx in &self.results_out {
-            tx.send(result.clone()).unwrap();
+            let _ = tx.send(result.clone());
         }
+    }
+
+    /// Leader side, whole-step convenience: gather `n * buckets.len()`
+    /// bucket messages (any arrival order) into the assembled gradient
+    /// matrix, aggregate with `f`, broadcast the result. Errors — with
+    /// the failing rank's id — when a rank goes down mid-step.
+    pub fn leader_step(
+        &self,
+        buckets: &Buckets,
+        f: impl FnOnce(GradSet) -> Vec<f32>,
+    ) -> Result<()> {
+        let mut gs = GradSet::zeros(self.n, buckets.total());
+        self.leader_ingest(buckets, false, &mut |rank, b, cols| {
+            let (lo, hi) = buckets.range(b);
+            gs.row_mut(rank)[lo..hi].copy_from_slice(&cols);
+        })?;
+        self.broadcast(Arc::new(f(gs)));
+        Ok(())
     }
 }
 
 /// Multi-threaded driver: N rank threads aggregate `rounds` of locally
 /// generated gradients through a shared [`StepExchange`] with the given
 /// aggregator name, sending per-bucket messages (`bucket_cap` columns per
-/// bucket; `None` = one bucket). Returns the final aggregated vector.
-/// Used by tests to prove the bucketed aggregation path is thread-clean
-/// end-to-end.
+/// bucket; `None` = one bucket). Returns the final aggregated vector, or
+/// an error naming the failing rank if one dies mid-run. Used by tests
+/// to prove the bucketed aggregation path is thread-clean end-to-end.
 pub fn threaded_allreduce(
     n: usize,
     d: usize,
@@ -145,41 +325,60 @@ pub fn threaded_allreduce(
     aggregator: &str,
     bucket_cap: Option<usize>,
     make_grad: impl Fn(usize, usize) -> Vec<f32> + Send + Sync + 'static,
-) -> Vec<f32> {
-    let buckets = Arc::new(match bucket_cap {
+) -> Result<Vec<f32>> {
+    let buckets = match bucket_cap {
         Some(cap) => Buckets::fixed(d, cap),
         None => Buckets::single(d),
-    });
-    let exchange = Arc::new(StepExchange::new(n));
+    };
+    let (exchange, ports) = StepExchange::new(n);
     let make_grad = Arc::new(make_grad);
     let mut handles = Vec::new();
-    for rank in 0..n {
-        let ex = exchange.clone();
+    for (rank, port) in ports.into_iter().enumerate() {
         let mg = make_grad.clone();
         let bk = buckets.clone();
         handles.push(std::thread::spawn(move || {
             for round in 0..rounds {
-                ex.submit(rank, &bk, &mg(rank, round));
-                let _ = ex.wait_result(rank);
-                ex.barrier.wait();
+                port.submit(&bk, &mg(rank, round));
+                if port.wait_result().is_err() {
+                    // Leader gone (a step failed): exit without arming a
+                    // spurious Down.
+                    return;
+                }
             }
+            port.complete();
         }));
     }
     let mut agg = crate::aggregation::by_name(aggregator, n).expect("aggregator");
     let mut last = vec![0.0f32; d];
+    let mut step_err = None;
     for _ in 0..rounds {
-        exchange.leader_step(&buckets, |gs| {
+        let r = exchange.leader_step(&buckets, |gs| {
             let mut out = vec![0.0f32; d];
             agg.aggregate(&gs, &buckets, &mut out);
             last = out.clone();
             out
         });
-        exchange.barrier.wait();
+        if let Err(e) = r {
+            step_err = Some(e);
+            break;
+        }
     }
-    for h in handles {
-        h.join().unwrap();
+    // Unblock any rank waiting on a result the failed step never produced.
+    drop(exchange);
+    let mut panicked = Vec::new();
+    for (rank, h) in handles.into_iter().enumerate() {
+        if h.join().is_err() {
+            panicked.push(rank);
+        }
     }
-    last
+    if let Some(e) = step_err {
+        return Err(e);
+    }
+    ensure!(
+        panicked.is_empty(),
+        "rank threads {panicked:?} panicked after the final round"
+    );
+    Ok(last)
 }
 
 #[cfg(test)]
@@ -187,24 +386,29 @@ mod tests {
     use super::*;
 
     #[test]
-    fn mailbox_roundtrip() {
-        let mb = Mailbox::new();
-        let tx = mb.sender();
+    fn mailbox_roundtrip_and_closed_error() {
+        let (tx, mb) = Mailbox::channel();
         std::thread::spawn(move || tx.send(42u32).unwrap());
-        assert_eq!(mb.recv(), 42);
+        assert_eq!(mb.recv().unwrap(), 42);
+        // All senders gone: recv errors instead of hanging.
+        assert!(mb.recv().is_err());
     }
 
     #[test]
     fn exchange_collects_out_of_order_bucket_messages() {
-        let ex = Arc::new(StepExchange::new(3));
+        let (ex, ports) = StepExchange::new(3);
         let buckets = Buckets::fixed(4, 2); // 2 buckets of 2 columns
-        for rank in [2usize, 0, 1] {
-            let ex = ex.clone();
-            std::thread::spawn(move || {
+        let mut handles = Vec::new();
+        for port in ports {
+            handles.push(std::thread::spawn(move || {
+                let rank = port.rank();
                 // Deliberately send bucket 1 before bucket 0.
-                ex.submit_bucket(rank, 1, vec![rank as f32 + 10.0; 2]);
-                ex.submit_bucket(rank, 0, vec![rank as f32; 2]);
-            });
+                port.submit_bucket(1, vec![rank as f32 + 10.0; 2]);
+                port.submit_bucket(0, vec![rank as f32; 2]);
+                let got = port.wait_result().unwrap();
+                port.complete();
+                got
+            }));
         }
         ex.leader_step(&buckets, |gs| {
             for rank in 0..3 {
@@ -212,17 +416,99 @@ mod tests {
                 assert_eq!(gs.row(rank)[2..], [rank as f32 + 10.0; 2]);
             }
             vec![9.0; 4]
-        });
-        for rank in 0..3 {
-            assert_eq!(*ex.wait_result(rank), vec![9.0; 4]);
+        })
+        .unwrap();
+        for h in handles {
+            assert_eq!(*h.join().unwrap(), vec![9.0; 4]);
         }
+    }
+
+    #[test]
+    fn leader_ingest_collects_done_reports_by_rank() {
+        let (ex, ports) = StepExchange::new(2);
+        let buckets = Buckets::single(3);
+        let mut handles = Vec::new();
+        for port in ports {
+            handles.push(std::thread::spawn(move || {
+                let rank = port.rank();
+                port.submit_bucket(0, vec![rank as f32; 3]);
+                port.done(rank as f64 + 0.5, 0.1 * (rank + 1) as f64);
+                port.complete();
+            }));
+        }
+        let mut got = Vec::new();
+        let reports = ex
+            .leader_ingest(&buckets, true, &mut |rank, b, cols| {
+                got.push((rank, b, cols));
+            })
+            .unwrap();
+        assert_eq!(reports.len(), 2);
+        for (rank, r) in reports.iter().enumerate() {
+            assert_eq!(r.loss, rank as f64 + 0.5);
+            assert!((r.compute_s - 0.1 * (rank + 1) as f64).abs() < 1e-12);
+        }
+        assert_eq!(got.len(), 2);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn rank_panic_surfaces_as_step_error_not_hang() {
+        // The regression this guards: a rank thread dying mid-step used
+        // to leave the leader blocked forever in recv (the exchange held
+        // its own sender, so the channel never closed). The port guard
+        // now reports the rank down and the step fails with its id.
+        let (ex, ports) = StepExchange::new(2);
+        let buckets = Buckets::fixed(4, 2);
+        let mut ports = ports.into_iter();
+        let p0 = ports.next().unwrap();
+        let p1 = ports.next().unwrap();
+        let h0 = std::thread::spawn(move || {
+            p0.submit(&Buckets::fixed(4, 2), &[1.0, 2.0, 3.0, 4.0]);
+            let _ = p0.wait_result();
+            p0.complete();
+        });
+        let h1 = std::thread::spawn(move || {
+            p1.submit_bucket(0, vec![5.0, 6.0]);
+            panic!("injected rank failure");
+        });
+        let err = ex.leader_step(&buckets, |_| vec![0.0; 4]).unwrap_err();
+        assert!(err.to_string().contains("rank 1"), "{err}");
+        drop(ex); // unblock the healthy rank
+        h0.join().unwrap();
+        assert!(h1.join().is_err());
+    }
+
+    #[test]
+    fn compute_error_report_down_names_the_rank() {
+        let (ex, ports) = StepExchange::new(1);
+        let buckets = Buckets::single(2);
+        let port = ports.into_iter().next().unwrap();
+        std::thread::spawn(move || port.report_down("compute failed: injected"));
+        let err = ex
+            .leader_ingest(&buckets, true, &mut |_, _, _| {})
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("rank 0") && msg.contains("injected"), "{msg}");
+    }
+
+    #[test]
+    fn guardless_mass_death_errors_instead_of_hanging() {
+        let (ex, ports) = StepExchange::new(2);
+        let buckets = Buckets::single(2);
+        for port in ports {
+            port.complete(); // disarm, then drop: no Down, no senders left
+        }
+        assert!(ex.leader_ingest(&buckets, false, &mut |_, _, _| {}).is_err());
     }
 
     #[test]
     fn threaded_mean_matches_expectation() {
         // rank r contributes the constant vector r+1 -> mean = (1+2+3+4)/4.
         let out =
-            threaded_allreduce(4, 16, 3, "mean", None, |rank, _| vec![(rank + 1) as f32; 16]);
+            threaded_allreduce(4, 16, 3, "mean", None, |rank, _| vec![(rank + 1) as f32; 16])
+                .unwrap();
         for x in out {
             assert!((x - 2.5).abs() < 1e-6);
         }
@@ -233,8 +519,21 @@ mod tests {
         let out = threaded_allreduce(4, 32, 5, "adacons", None, |rank, round| {
             let mut rng = crate::util::prng::Rng::new((rank * 1000 + round) as u64);
             (0..32).map(|_| rng.normal_f32(1.0) + 0.5).collect()
-        });
+        })
+        .unwrap();
         assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn threaded_allreduce_errors_when_a_rank_dies() {
+        let err = threaded_allreduce(3, 8, 2, "mean", Some(4), |rank, round| {
+            if rank == 2 && round == 1 {
+                panic!("injected failure");
+            }
+            vec![1.0; 8]
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("rank 2"), "{err}");
     }
 
     #[test]
@@ -256,22 +555,23 @@ mod tests {
                 Some(c) => Buckets::fixed(d, c),
                 None => Buckets::single(d),
             };
-            let ex = Arc::new(StepExchange::new(n));
+            let (ex, ports) = StepExchange::new(n);
             let mut handles = Vec::new();
-            for rank in 0..n {
-                let ex = ex.clone();
-                let g = grads[rank].clone();
+            for port in ports {
+                let g = grads[port.rank()].clone();
                 let bk = buckets.clone();
                 handles.push(std::thread::spawn(move || {
-                    ex.submit(rank, &bk, &g);
-                    let _ = ex.wait_result(rank);
+                    port.submit(&bk, &g);
+                    let _ = port.wait_result();
+                    port.complete();
                 }));
             }
             let mut rows = Vec::new();
             ex.leader_step(&buckets, |gs| {
                 rows = (0..n).map(|i| gs.row(i).to_vec()).collect();
                 vec![0.0; d]
-            });
+            })
+            .unwrap();
             for h in handles {
                 h.join().unwrap();
             }

@@ -62,6 +62,13 @@ pub struct TrainConfig {
     /// step loop exactly; on is bitwise-identical in output and reports
     /// strictly less exposed communication on multi-bucket configs.
     pub overlap: bool,
+    /// Threaded rank execution (`--rank-threads on|off`): each rank is a
+    /// real OS thread owning its interpreter executable, streaming
+    /// gradient buckets to the leader over `comm::StepExchange` in true
+    /// arrival order. Off runs the ranks round-robin on the leader
+    /// thread — the equivalence oracle; both modes produce bitwise-equal
+    /// aggregated directions (interp backend only).
+    pub rank_threads: bool,
 }
 
 impl Default for TrainConfig {
@@ -88,6 +95,7 @@ impl Default for TrainConfig {
             parallel: ParallelPolicy::default(),
             backend: Backend::Auto,
             overlap: false,
+            rank_threads: false,
         }
     }
 }
@@ -147,6 +155,15 @@ impl TrainConfig {
                             parse_switch(s).context("overlap must be on|off")?
                         }
                         _ => bail!("overlap must be a bool or \"on\"/\"off\""),
+                    }
+                }
+                "rank_threads" => {
+                    cfg.rank_threads = match (v.as_bool(), v.as_str()) {
+                        (Some(b), _) => b,
+                        (None, Some(s)) => {
+                            parse_switch(s).context("rank_threads must be on|off")?
+                        }
+                        _ => bail!("rank_threads must be a bool or \"on\"/\"off\""),
                     }
                 }
                 "injectors" => {
@@ -211,6 +228,9 @@ impl TrainConfig {
         }
         if let Some(v) = args.str_opt("overlap") {
             self.overlap = parse_switch(v).context("--overlap on|off")?;
+        }
+        if let Some(v) = args.str_opt("rank-threads") {
+            self.rank_threads = parse_switch(v).context("--rank-threads on|off")?;
         }
         if let Some(p) = args.str_opt("jsonl") {
             self.jsonl = Some(p.into());
@@ -335,6 +355,30 @@ mod tests {
         let args = Args::parse("--overlap off".split_whitespace().map(String::from), &[]);
         cfg.apply_args(&args).unwrap();
         assert!(!cfg.overlap);
+    }
+
+    #[test]
+    fn rank_threads_knob_from_json_and_cli() {
+        assert!(!TrainConfig::default().rank_threads);
+        let j = Json::parse(r#"{"rank_threads":"on"}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).unwrap().rank_threads);
+        let j = Json::parse(r#"{"rank_threads":false}"#).unwrap();
+        assert!(!TrainConfig::from_json(&j).unwrap().rank_threads);
+        let j = Json::parse(r#"{"rank_threads":"sideways"}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err());
+        let mut cfg = TrainConfig::default();
+        let args = Args::parse(
+            "--rank-threads on".split_whitespace().map(String::from),
+            &[],
+        );
+        cfg.apply_args(&args).unwrap();
+        assert!(cfg.rank_threads);
+        let args = Args::parse(
+            "--rank-threads off".split_whitespace().map(String::from),
+            &[],
+        );
+        cfg.apply_args(&args).unwrap();
+        assert!(!cfg.rank_threads);
     }
 
     #[test]

@@ -8,9 +8,11 @@
 pub mod checkpoint;
 pub mod eval;
 pub mod pipeline;
+pub mod team;
 pub mod trainer;
 
 pub use checkpoint::Checkpoint;
 pub use eval::{EvalOutcome, Evaluator};
 pub use pipeline::{PipelinedExecutor, StepOutcome};
+pub use team::RankTeam;
 pub use trainer::{TrainResult, Trainer};

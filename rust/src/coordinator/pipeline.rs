@@ -2,15 +2,20 @@
 //!
 //! The serial loop runs grad → aggregate → optimize as three phases; this
 //! executor dissolves the first barrier. Ranks deliver their gradients
-//! **bucket by bucket** (`Worker::compute_grad_buckets`); the moment a
-//! bucket has arrived from every rank, its phase-1 aggregation work
+//! **bucket by bucket** — either round-robin on the leader thread via a
+//! [`GradProducer`] callback, or live from N rank threads streaming over
+//! [`comm::StepExchange`] ([`PipelinedExecutor::run_step_exchange`]), in
+//! which case the leader ingests `(rank, bucket, cols)` messages **in
+//! arrival order**. Whatever the source, the moment a bucket has arrived
+//! from every rank its phase-1 aggregation work
 //! (`BucketedAggregator::ingest_bucket`) is submitted to the persistent
 //! pool as a non-blocking task ([`TaskScope::submit`]), so bucket *k*'s
 //! consensus statistics run while buckets *k+1..* are still arriving.
 //! Phase 2 (`finalize`) joins the task handles in **fixed bucket order**,
 //! which — together with the thread-count-free shard plan — makes the
 //! pipelined output bitwise-identical to `Aggregator::aggregate_ctx`'s
-//! serial path (enforced by `tests/parallel_equivalence.rs`).
+//! serial path at any arrival interleaving (enforced by
+//! `tests/parallel_equivalence.rs`).
 //!
 //! Simulated time is charged through the [`StepTimeline`]: per-bucket
 //! collectives post at their bucket's readiness and serialize on the
@@ -19,9 +24,11 @@
 //! reproduces the barrier-only `SimClock` accounting exactly.
 //!
 //! [`TaskScope::submit`]: crate::parallel::TaskScope::submit
+//! [`comm::StepExchange`]: crate::comm::StepExchange
 
 use crate::aggregation::{AggInfo, Aggregator, BucketWork};
 use crate::collective::{CostModel, SimClock, StepTimeline};
+use crate::comm::StepExchange;
 use crate::parallel::ParallelCtx;
 use crate::tensor::{BucketTracker, Buckets, GradSet};
 use crate::util::error::Result;
@@ -31,6 +38,16 @@ use crate::util::error::Result;
 /// `(local_loss, compute_seconds)`.
 pub type GradProducer<'a> =
     dyn FnMut(usize, &mut dyn FnMut(usize, &[f32])) -> Result<(f64, f64)> + 'a;
+
+/// Where one step's bucket arrivals come from.
+enum Arrivals<'a, 'p> {
+    /// Serial round-robin: the executor calls each rank's producer in
+    /// turn on the leader thread (the `off` mode and equivalence oracle).
+    Producer(&'a mut GradProducer<'p>),
+    /// Threaded: rank threads stream buckets over the exchange; the
+    /// leader drains them in arrival order plus one `Done` per rank.
+    Exchange(&'a StepExchange),
+}
 
 /// What one executed step reports beyond the aggregation metadata.
 #[derive(Debug)]
@@ -43,6 +60,9 @@ pub struct StepOutcome {
     /// The unpipelined accounting for the same ops: the sum of every
     /// transfer's duration (== `exposed_comm_s` when overlap is off).
     pub serial_comm_s: f64,
+    /// Per-rank wall compute seconds this step — measured on the rank
+    /// thread in exchange mode — as charged to the `SimClock`.
+    pub rank_compute_s: Vec<f64>,
 }
 
 /// The reusable per-run state of the pipelined step loop: bucket arrival
@@ -87,17 +107,52 @@ impl PipelinedExecutor {
         &self.buckets
     }
 
-    /// Run one step: produce every rank's gradient, aggregate into `out`,
-    /// and charge compute + communication to the simulated clock.
+    /// Run one step fed by the round-robin producer callback (the serial
+    /// execution mode; also the bitwise oracle the threaded mode is
+    /// checked against).
+    pub fn run_step(
+        &mut self,
+        produce: &mut GradProducer<'_>,
+        agg: &mut dyn Aggregator,
+        grads: &mut GradSet,
+        out: &mut [f32],
+        ctx: &ParallelCtx,
+        clock: &mut SimClock,
+        cost: &CostModel,
+    ) -> Result<StepOutcome> {
+        self.run_step_on(Arrivals::Producer(produce), agg, grads, out, ctx, clock, cost)
+    }
+
+    /// Run one step fed by rank threads over `exchange`: the leader
+    /// ingests `(rank, bucket, cols)` messages in arrival order and one
+    /// `Done { loss, compute_s }` per rank (the threaded execution mode —
+    /// callers broadcast the step's parameters to the rank threads
+    /// first, e.g. `RankTeam::begin_step`). A rank that dies mid-step
+    /// fails the step with its id instead of deadlocking.
+    pub fn run_step_exchange(
+        &mut self,
+        exchange: &StepExchange,
+        agg: &mut dyn Aggregator,
+        grads: &mut GradSet,
+        out: &mut [f32],
+        ctx: &ParallelCtx,
+        clock: &mut SimClock,
+        cost: &CostModel,
+    ) -> Result<StepOutcome> {
+        self.run_step_on(Arrivals::Exchange(exchange), agg, grads, out, ctx, clock, cost)
+    }
+
+    /// Shared step driver: assemble arrivals into `grads`, aggregate into
+    /// `out`, and charge compute + communication to the simulated clock.
     ///
     /// `grads` is the full `(N, d)` assembly both paths maintain (the
     /// aggregators' `finalize` needs it); `out` receives the aggregated
     /// direction. With `overlap = false` this degenerates to the serial
     /// grad-then-aggregate loop with barrier collectives — same code
     /// surface, bitwise-identical output.
-    pub fn run_step(
+    fn run_step_on(
         &mut self,
-        produce: &mut GradProducer<'_>,
+        source: Arrivals<'_, '_>,
         agg: &mut dyn Aggregator,
         grads: &mut GradSet,
         out: &mut [f32],
@@ -128,14 +183,19 @@ impl PipelinedExecutor {
             let scope_result = ctx.task_scope(|scope| -> Result<Vec<BucketWork>> {
                 let ictx_ref = &ictx;
                 let mut handles: Vec<_> = (0..nb).map(|_| None).collect();
-                for rank in 0..n {
-                    let mut deliver = |b: usize, cols: &[f32]| {
+                {
+                    let handles = &mut handles;
+                    let grads = &mut *grads;
+                    // One arrival sink for both sources: copy the bucket
+                    // into the full assembly and the per-bucket store;
+                    // when the arrival completes the bucket, hand its
+                    // stats work to the pool and keep receiving later
+                    // buckets.
+                    let mut sink = |rank: usize, b: usize, cols: &[f32]| {
                         let (lo, hi) = buckets.range(b);
                         grads.row_mut(rank)[lo..hi].copy_from_slice(cols);
                         assembly[b].set_row(rank, cols);
                         if tracker.arrive(b) {
-                            // Bucket complete: hand its stats work to the
-                            // pool and keep receiving later buckets.
                             let view =
                                 std::mem::replace(&mut assembly[b], GradSet::zeros(0, 0));
                             handles[b] = Some(scope.submit(move || {
@@ -144,9 +204,28 @@ impl PipelinedExecutor {
                             }));
                         }
                     };
-                    let (loss, cs) = produce(rank, &mut deliver)?;
-                    loss_sum += loss;
-                    compute_s[rank] = cs;
+                    match source {
+                        Arrivals::Producer(produce) => {
+                            for rank in 0..n {
+                                let mut deliver =
+                                    |b: usize, cols: &[f32]| sink(rank, b, cols);
+                                let (loss, cs) = produce(rank, &mut deliver)?;
+                                loss_sum += loss;
+                                compute_s[rank] = cs;
+                            }
+                        }
+                        Arrivals::Exchange(ex) => {
+                            let reports = ex.leader_ingest(
+                                buckets,
+                                true,
+                                &mut |rank, b, cols| sink(rank, b, &cols),
+                            )?;
+                            for (rank, rep) in reports.iter().enumerate() {
+                                loss_sum += rep.loss;
+                                compute_s[rank] = rep.compute_s;
+                            }
+                        }
+                    }
                 }
                 // Join in fixed bucket order — the only ordering finalize
                 // ever sees — and recover the assembly buffers for reuse.
@@ -162,9 +241,10 @@ impl PipelinedExecutor {
             let work = match scope_result {
                 Ok(work) => work,
                 Err(e) => {
-                    // A producer error can leave bucket stores moved into
-                    // tasks that were never joined; rebuild them so the
-                    // executor stays reusable for a clean retry step.
+                    // A producer error or a dead rank can leave bucket
+                    // stores moved into tasks that were never joined;
+                    // rebuild them so the executor stays reusable for a
+                    // clean retry step.
                     for (b, (lo, hi)) in self.buckets.iter().enumerate() {
                         if self.assembly[b].d() != hi - lo {
                             self.assembly[b] = GradSet::zeros(self.n, hi - lo);
@@ -175,14 +255,29 @@ impl PipelinedExecutor {
             };
             agg.finalize(grads, &self.buckets, work, out, ctx)
         } else {
-            for rank in 0..n {
-                let mut deliver = |b: usize, cols: &[f32]| {
-                    let (lo, hi) = self.buckets.range(b);
-                    grads.row_mut(rank)[lo..hi].copy_from_slice(cols);
-                };
-                let (loss, cs) = produce(rank, &mut deliver)?;
-                loss_sum += loss;
-                compute_s[rank] = cs;
+            match source {
+                Arrivals::Producer(produce) => {
+                    for rank in 0..n {
+                        let mut deliver = |b: usize, cols: &[f32]| {
+                            let (lo, hi) = self.buckets.range(b);
+                            grads.row_mut(rank)[lo..hi].copy_from_slice(cols);
+                        };
+                        let (loss, cs) = produce(rank, &mut deliver)?;
+                        loss_sum += loss;
+                        compute_s[rank] = cs;
+                    }
+                }
+                Arrivals::Exchange(ex) => {
+                    let buckets = &self.buckets;
+                    let reports = ex.leader_ingest(buckets, true, &mut |rank, b, cols| {
+                        let (lo, hi) = buckets.range(b);
+                        grads.row_mut(rank)[lo..hi].copy_from_slice(&cols);
+                    })?;
+                    for (rank, rep) in reports.iter().enumerate() {
+                        loss_sum += rep.loss;
+                        compute_s[rank] = rep.compute_s;
+                    }
+                }
             }
             agg.aggregate_ctx(grads, &self.buckets, out, ctx)
         };
@@ -233,6 +328,7 @@ impl PipelinedExecutor {
             mean_loss: loss_sum / n as f64,
             exposed_comm_s,
             serial_comm_s,
+            rank_compute_s: compute_s,
         })
     }
 }
@@ -255,6 +351,7 @@ mod tests {
     use super::*;
     use crate::aggregation;
     use crate::collective::Topology;
+    use crate::comm::StepExchange;
     use crate::parallel::ParallelPolicy;
     use crate::tensor::ops::CHUNK;
     use crate::util::prng::Rng;
@@ -344,6 +441,129 @@ mod tests {
         let (_, off, _) = run_mode(false, 2, "adacons", &data, &buckets, &compute);
         assert!((off.exposed_comm_s - off.serial_comm_s).abs() < 1e-15);
         assert!((on.serial_comm_s - off.serial_comm_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exchange_reports_feed_the_clock_and_outcome() {
+        // The threaded path's per-rank compute seconds come from the
+        // ranks' Done messages, measured on-thread; they must drive the
+        // SimClock exactly like the producer path's returned values.
+        let d = 2 * CHUNK;
+        let n = 2;
+        let data = rows(n, d, 9);
+        let buckets = Buckets::fixed(d, CHUNK);
+        let ctx = ParallelCtx::new(ParallelPolicy {
+            threads: 1,
+            min_shard_elems: CHUNK,
+        });
+        let mut agg = aggregation::by_name("mean", n).unwrap();
+        let mut exec = PipelinedExecutor::new(n, buckets.clone(), false);
+        let mut grads = GradSet::zeros(n, d);
+        let mut out = vec![0.0f32; d];
+        let mut clock = SimClock::new(n);
+        let cost = CostModel::from_topology(&Topology::ring_gbps(n, 100.0));
+        let (exchange, ports) = StepExchange::new(n);
+        let mut handles = Vec::new();
+        for port in ports {
+            let row = data[port.rank()].clone();
+            let bk = buckets.clone();
+            let cs = 0.1 * (port.rank() + 1) as f64;
+            handles.push(std::thread::spawn(move || {
+                port.submit(&bk, &row);
+                port.done(1.0 + port.rank() as f64, cs);
+                port.complete();
+            }));
+        }
+        let outcome = exec
+            .run_step_exchange(
+                &exchange,
+                agg.as_mut(),
+                &mut grads,
+                &mut out,
+                &ctx,
+                &mut clock,
+                &cost,
+            )
+            .unwrap();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(outcome.rank_compute_s, vec![0.1, 0.2]);
+        assert!((outcome.mean_loss - 1.5).abs() < 1e-12);
+        // Clock: ranks advanced by their own compute, then the barrier
+        // collective aligned both to the straggler plus comm time.
+        assert!(clock.now() >= 0.2);
+        let mut expect = vec![0.0f32; d];
+        GradSet::from_rows(&data).mean_into(&mut expect);
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn exchange_rank_down_fails_step_with_rank_id() {
+        let d = 2 * CHUNK;
+        let n = 3;
+        let data = rows(n, d, 21);
+        let buckets = Buckets::fixed(d, CHUNK);
+        let ctx = ParallelCtx::new(ParallelPolicy {
+            threads: 2,
+            min_shard_elems: CHUNK,
+        });
+        let mut agg = aggregation::by_name("adacons", n).unwrap();
+        let mut exec = PipelinedExecutor::new(n, buckets.clone(), true);
+        let mut grads = GradSet::zeros(n, d);
+        let mut out = vec![0.0f32; d];
+        let mut clock = SimClock::new(n);
+        let cost = CostModel::from_topology(&Topology::ring_gbps(n, 100.0));
+        let (exchange, ports) = StepExchange::new(n);
+        let mut handles = Vec::new();
+        for port in ports {
+            let rank = port.rank();
+            let row = data[rank].clone();
+            let bk = buckets.clone();
+            handles.push(std::thread::spawn(move || {
+                if rank == 1 {
+                    // Dies after one bucket: the armed port reports Down.
+                    let (lo, hi) = bk.range(0);
+                    port.submit_bucket(0, row[lo..hi].to_vec());
+                    panic!("injected rank failure");
+                }
+                port.submit(&bk, &row);
+                port.done(0.0, 0.01);
+                port.complete();
+            }));
+        }
+        let err = exec
+            .run_step_exchange(
+                &exchange,
+                agg.as_mut(),
+                &mut grads,
+                &mut out,
+                &ctx,
+                &mut clock,
+                &cost,
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("rank 1"), "{err}");
+        for (rank, h) in handles.into_iter().enumerate() {
+            assert_eq!(h.join().is_err(), rank == 1);
+        }
+        // The executor stays reusable after the failed step: a clean
+        // producer-fed retry aggregates correctly.
+        let mut retry = replay_producer(&data, &buckets, &[0.01, 0.01, 0.01]);
+        let mut agg2 = aggregation::by_name("mean", n).unwrap();
+        exec.run_step(
+            &mut retry,
+            agg2.as_mut(),
+            &mut grads,
+            &mut out,
+            &ctx,
+            &mut clock,
+            &cost,
+        )
+        .unwrap();
+        let mut expect = vec![0.0f32; d];
+        GradSet::from_rows(&data).mean_into(&mut expect);
+        assert_eq!(out, expect);
     }
 
     #[test]

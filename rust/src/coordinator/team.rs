@@ -1,0 +1,233 @@
+//! Persistent rank-thread team: real N-thread training.
+//!
+//! A [`RankTeam`] spawns one OS thread per rank **once** (Trainer
+//! construction), runs every step on those threads, and joins them on
+//! drop. Each rank thread owns its [`Worker`] (data stream + injector
+//! state) and its own [`Executable`] instance
+//! ([`Runtime::load_owned`] — interpreter programs are plain data, so
+//! per-rank ownership is cheap and `Send`), computes its backward pass
+//! locally, and streams gradient buckets to the leader over its
+//! [`RankPort`] the moment the backward finalizes them. The leader drives
+//! aggregation with [`PipelinedExecutor::run_step_exchange`], ingesting
+//! buckets in true arrival order.
+//!
+//! Step protocol: the leader broadcasts the step's parameters over
+//! per-rank command channels ([`RankTeam::begin_step`]); each rank
+//! computes, submits its buckets plus a `Done { loss, compute_s }`
+//! (compute measured **on the rank thread**, feeding the `SimClock`), and
+//! blocks on the next command. A rank can therefore never run ahead into
+//! step *s+1* before the leader has fully drained step *s*, so steps
+//! never interleave on the wire. Failure is never a hang: a panicking
+//! rank thread's port reports it down (the leader's ingest errors with
+//! the rank id), a compute error is reported explicitly, and dropping the
+//! team closes the command channels so every thread exits and is joined.
+//!
+//! [`PipelinedExecutor::run_step_exchange`]:
+//! crate::coordinator::pipeline::PipelinedExecutor::run_step_exchange
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::comm::{RankPort, StepExchange};
+use crate::runtime::{Executable, Runtime};
+use crate::tensor::Buckets;
+use crate::util::error::{Context, Result};
+use crate::worker::Worker;
+
+/// One leader-to-rank command.
+enum TeamCmd {
+    /// Run one step against these parameters.
+    Step { params: Arc<Vec<f32>> },
+}
+
+/// N persistent rank threads plus the leader's exchange half.
+pub struct RankTeam {
+    exchange: StepExchange,
+    cmds: Vec<Sender<TeamCmd>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl RankTeam {
+    /// Spawn one thread per worker. Each rank gets its own `Executable`
+    /// for `artifact` (interp backend; `load_owned` refuses PJRT with
+    /// guidance). Threads idle on their command channel until
+    /// [`RankTeam::begin_step`] and exit when the team is dropped.
+    pub fn spawn(
+        rt: &Runtime,
+        artifact: &str,
+        workers: Vec<Worker>,
+        buckets: &Buckets,
+        local_batch: usize,
+    ) -> Result<RankTeam> {
+        let n = workers.len();
+        let (exchange, ports) = StepExchange::new(n);
+        let mut cmds = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for (worker, port) in workers.into_iter().zip(ports) {
+            let rank = worker.rank;
+            assert_eq!(
+                rank,
+                port.rank(),
+                "workers must be passed in rank order (worker {rank} vs port {})",
+                port.rank()
+            );
+            let exe = rt
+                .load_owned(artifact)
+                .with_context(|| format!("building rank {rank}'s executable"))?;
+            let (tx, rx) = channel();
+            let bk = buckets.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("rank-{rank}"))
+                .spawn(move || rank_main(worker, exe, port, bk, local_batch, rx))
+                .with_context(|| format!("spawning rank {rank} thread"))?;
+            cmds.push(tx);
+            handles.push(h);
+        }
+        Ok(RankTeam {
+            exchange,
+            cmds,
+            handles,
+        })
+    }
+
+    pub fn n(&self) -> usize {
+        self.cmds.len()
+    }
+
+    /// The leader half the pipelined executor ingests from.
+    pub fn exchange(&self) -> &StepExchange {
+        &self.exchange
+    }
+
+    /// Broadcast this step's parameters; every rank thread starts its
+    /// backward immediately. Errors if a rank thread is already gone
+    /// (its death reason surfaced, or will, on the exchange).
+    pub fn begin_step(&self, params: &Arc<Vec<f32>>) -> Result<()> {
+        for (rank, tx) in self.cmds.iter().enumerate() {
+            tx.send(TeamCmd::Step {
+                params: params.clone(),
+            })
+            .map_err(|_| crate::err!("rank {rank}'s thread is gone (exited or panicked)"))?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for RankTeam {
+    fn drop(&mut self) {
+        // Closing the command channels is the shutdown signal; every
+        // healthy thread's recv errors and it exits cleanly. Panicked
+        // threads already died (and reported Down) — ignore their join
+        // payloads, the step that observed the death surfaced the error.
+        self.cmds.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Body of one rank thread: wait for a step command, run the backward,
+/// stream buckets live, report completion; repeat until shutdown.
+fn rank_main(
+    mut worker: Worker,
+    exe: Executable,
+    port: RankPort,
+    buckets: Buckets,
+    local_batch: usize,
+    rx: Receiver<TeamCmd>,
+) {
+    while let Ok(TeamCmd::Step { params }) = rx.recv() {
+        let r = worker.compute_grad_buckets(&exe, &params, local_batch, &buckets, &mut |b, cols| {
+            port.submit_bucket(b, cols.to_vec());
+        });
+        match r {
+            Ok(()) => port.done(worker.last_loss as f64, worker.last_compute_s),
+            Err(e) => {
+                // Explicit failure beats the guard's generic reason.
+                port.report_down(&format!("compute failed: {e}"));
+                return;
+            }
+        }
+    }
+    port.complete();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::GradInjector;
+    use crate::runtime::Backend;
+
+    fn interp_runtime() -> Runtime {
+        let dir = std::env::temp_dir().join("adacons_team_test");
+        Runtime::create_with(dir, Backend::Interp).unwrap()
+    }
+
+    fn mk_workers(rt: &Runtime, artifact: &str, n: usize) -> Vec<Worker> {
+        let spec = rt.manifest.get(artifact).unwrap();
+        (0..n)
+            .map(|rank| {
+                let gen =
+                    crate::data::for_model(&spec.model, 7, rank as u64, 0.0, &spec.meta).unwrap();
+                Worker::new(rank, gen, GradInjector::None, 7)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn team_streams_identical_grads_to_roundrobin() {
+        // One step, same seeds: the bucket matrix assembled from N rank
+        // threads must be bitwise what the round-robin loop computes.
+        let rt = interp_runtime();
+        let artifact = "linreg_b16";
+        let exe = rt.load(artifact).unwrap();
+        let d = exe.spec.param_dim;
+        let local_batch = exe.spec.local_batch();
+        let params = Arc::new(exe.spec.load_init(0).unwrap());
+        let buckets = Buckets::fixed(d, 129); // ragged tail
+        // Round-robin reference rows.
+        let mut reference = vec![vec![0.0f32; d]; 3];
+        for (rank, worker) in mk_workers(&rt, artifact, 3).iter_mut().enumerate() {
+            worker
+                .compute_grad_buckets(&exe, &params, local_batch, &buckets, &mut |b, cols| {
+                    let (lo, hi) = buckets.range(b);
+                    reference[rank][lo..hi].copy_from_slice(cols);
+                })
+                .unwrap();
+        }
+        // Threaded team, same worker seeds.
+        let team =
+            RankTeam::spawn(&rt, artifact, mk_workers(&rt, artifact, 3), &buckets, local_batch)
+                .unwrap();
+        team.begin_step(&params).unwrap();
+        let mut rows = vec![vec![0.0f32; d]; 3];
+        let reports = team
+            .exchange()
+            .leader_ingest(&buckets, true, &mut |rank, b, cols| {
+                let (lo, hi) = buckets.range(b);
+                rows[rank][lo..hi].copy_from_slice(&cols);
+            })
+            .unwrap();
+        assert_eq!(rows, reference);
+        assert!(reports.iter().all(|r| r.loss.is_finite() && r.compute_s >= 0.0));
+    }
+
+    #[test]
+    fn dropping_the_team_joins_all_threads() {
+        let rt = interp_runtime();
+        let artifact = "linreg_b16";
+        let exe = rt.load(artifact).unwrap();
+        let buckets = Buckets::single(exe.spec.param_dim);
+        let team = RankTeam::spawn(
+            &rt,
+            artifact,
+            mk_workers(&rt, artifact, 4),
+            &buckets,
+            exe.spec.local_batch(),
+        )
+        .unwrap();
+        assert_eq!(team.n(), 4);
+        drop(team); // must not hang
+    }
+}

@@ -1,15 +1,21 @@
 //! The synchronous data-parallel training loop (Alg. 1 embedding).
 //!
 //! Per step: every rank draws its shard batch and computes a local
-//! gradient through the shared PJRT executable, delivering it bucket by
-//! bucket to the [`PipelinedExecutor`]; the aggregator combines them
-//! (AdaCons or a baseline) — with `overlap` on, each bucket's phase-1
-//! statistics run on the worker pool while later buckets are still
-//! arriving; optional global-norm clipping; the optimizer steps the
-//! master parameters.  Compute and communication are charged to a
-//! [`SimClock`] through the α-β cost model and the per-step event
-//! timeline, so iteration timing *and exposed communication* can be
-//! reported for fabrics we do not have (Table 1, §5.1).
+//! gradient, delivering it bucket by bucket to the
+//! [`PipelinedExecutor`] — either round-robin on the leader thread
+//! (`--rank-threads off`, the equivalence oracle) or from a persistent
+//! [`RankTeam`] of real rank threads streaming buckets over
+//! `comm::StepExchange` in true arrival order (`--rank-threads on`); the
+//! aggregator combines them (AdaCons or a baseline) — with `overlap` on,
+//! each bucket's phase-1 statistics run on the worker pool while later
+//! buckets are still arriving; optional global-norm clipping; the
+//! optimizer steps the master parameters.  Compute and communication are
+//! charged to a [`SimClock`] through the α-β cost model and the per-step
+//! event timeline (per-rank compute measured on-thread in threaded
+//! mode), so iteration timing *and exposed communication* can be
+//! reported for fabrics we do not have (Table 1, §5.1). Both execution
+//! modes produce bitwise-identical aggregated directions
+//! (`tests/train_end_to_end.rs`).
 
 use std::sync::Arc;
 
@@ -18,6 +24,7 @@ use crate::collective::{CostModel, SimClock, Topology};
 use crate::config::TrainConfig;
 use crate::coordinator::eval::{EvalOutcome, Evaluator};
 use crate::coordinator::pipeline::PipelinedExecutor;
+use crate::coordinator::team::RankTeam;
 use crate::optim::{self, clip_global_norm, Optimizer};
 use crate::parallel::{ParPlan, ParallelCtx};
 use crate::runtime::{Executable, Runtime};
@@ -56,6 +63,8 @@ pub struct TrainResult {
     pub agg_par: Option<ParPlan>,
     /// Whether the step loop ran with comm/compute overlap.
     pub overlap: bool,
+    /// Whether ranks ran as real OS threads (`--rank-threads on`).
+    pub rank_threads: bool,
     /// Mean simulated communication per step not hidden behind compute
     /// (event-timeline accounting; == `serial_comm_s` with overlap off).
     pub exposed_comm_s: f64,
@@ -88,12 +97,22 @@ impl TrainResult {
     }
 }
 
+/// How the N ranks execute their backward passes each step.
+enum Ranks {
+    /// Serial round-robin on the leader thread (the `--rank-threads off`
+    /// mode and bitwise oracle).
+    RoundRobin(Vec<Worker>),
+    /// Persistent rank threads (spawned once, joined on drop) streaming
+    /// buckets over the exchange.
+    Threaded(RankTeam),
+}
+
 /// The coordinator.
 pub struct Trainer {
     pub cfg: TrainConfig,
     rt: Arc<Runtime>,
     exe: Arc<Executable>,
-    workers: Vec<Worker>,
+    ranks: Ranks,
     aggregator: Box<dyn Aggregator>,
     optimizer: Box<dyn Optimizer>,
     evaluator: Option<Evaluator>,
@@ -149,11 +168,24 @@ impl Trainer {
         };
         let cost = CostModel::from_topology(&Topology::ring_gbps(cfg.workers, cfg.fabric_gbps));
         let par = ParallelCtx::new(cfg.parallel);
+        let ranks = if cfg.rank_threads {
+            // Spawn the rank threads once; they persist across every step
+            // of the run and join when the trainer drops.
+            Ranks::Threaded(RankTeam::spawn(
+                &rt,
+                &cfg.artifact,
+                workers,
+                &buckets,
+                exe.spec.local_batch(),
+            )?)
+        } else {
+            Ranks::RoundRobin(workers)
+        };
         Ok(Trainer {
             cfg,
             rt,
             exe,
-            workers,
+            ranks,
             aggregator,
             optimizer,
             evaluator,
@@ -215,31 +247,54 @@ impl Trainer {
             //     charged to the sim clock through the event timeline.
             let step_t = Timer::start();
             let mut grad_s = 0.0f64;
-            let outcome = {
-                let (workers, exe, params, buckets) = (
-                    &mut self.workers,
-                    &self.exe,
-                    &self.params,
-                    &self.buckets,
-                );
-                let mut produce = |rank: usize,
-                                   deliver: &mut dyn FnMut(usize, &[f32])|
-                 -> Result<(f64, f64)> {
-                    let t = Timer::start();
-                    let w = &mut workers[rank];
-                    w.compute_grad_buckets(exe, params, local_batch, buckets, deliver)?;
-                    grad_s += t.elapsed_s();
-                    Ok((w.last_loss as f64, w.last_compute_s))
-                };
-                exec.run_step(
-                    &mut produce,
-                    self.aggregator.as_mut(),
-                    &mut grads,
-                    &mut agg,
-                    &self.par,
-                    &mut clock,
-                    &self.cost,
-                )?
+            let outcome = match &mut self.ranks {
+                Ranks::RoundRobin(workers) => {
+                    let (exe, params, buckets) = (&self.exe, &self.params, &self.buckets);
+                    let mut produce = |rank: usize,
+                                       deliver: &mut dyn FnMut(usize, &[f32])|
+                     -> Result<(f64, f64)> {
+                        let t = Timer::start();
+                        let w = &mut workers[rank];
+                        w.compute_grad_buckets(exe, params, local_batch, buckets, deliver)?;
+                        grad_s += t.elapsed_s();
+                        Ok((w.last_loss as f64, w.last_compute_s))
+                    };
+                    exec.run_step(
+                        &mut produce,
+                        self.aggregator.as_mut(),
+                        &mut grads,
+                        &mut agg,
+                        &self.par,
+                        &mut clock,
+                        &self.cost,
+                    )?
+                }
+                Ranks::Threaded(team) => {
+                    // Broadcast this step's parameters; the rank threads
+                    // compute concurrently while the leader ingests their
+                    // buckets in arrival order.
+                    let params = Arc::new(self.params.clone());
+                    team.begin_step(&params)?;
+                    let outcome = exec.run_step_exchange(
+                        team.exchange(),
+                        self.aggregator.as_mut(),
+                        &mut grads,
+                        &mut agg,
+                        &self.par,
+                        &mut clock,
+                        &self.cost,
+                    )?;
+                    // Wall grad phase = the slowest rank's on-thread
+                    // compute: the ranks ran concurrently (with each
+                    // other and the leader's aggregation work), so their
+                    // times overlap rather than add.
+                    grad_s = outcome
+                        .rank_compute_s
+                        .iter()
+                        .cloned()
+                        .fold(0.0, f64::max);
+                    outcome
+                }
             };
             phases.add("grad", grad_s);
             phases.add("aggregate", (step_t.elapsed_s() - grad_s).max(0.0));
@@ -321,6 +376,7 @@ impl Trainer {
             effective_batch: n * local_batch,
             agg_par,
             overlap: self.cfg.overlap,
+            rank_threads: self.cfg.rank_threads,
             exposed_comm_s: exposed_comm_total / steps,
             serial_comm_s: serial_comm_total / steps,
         })

@@ -27,7 +27,8 @@ USAGE:
                 [--optimizer sgd|sgd-momentum|adam|adamw|lamb|linreg-exact]
                 [--schedule const:LR|cosine:LR:WARM:TOTAL|step:LR:EVERY:G|invsqrt:LR:WARM]
                 [--steps N] [--eval-every N] [--seed S] [--clip C|none]
-                [--bucket-cap N] [--overlap on|off] [--heterogeneity H]
+                [--bucket-cap N] [--overlap on|off] [--rank-threads on|off]
+                [--heterogeneity H]
                 [--inject RANK:SPEC] [--par-threads N] [--par-min-shard-elems N]
                 [--fabric-gbps G] [--save-checkpoint PATH] [--load-checkpoint PATH]
                 [--csv PATH]
@@ -123,10 +124,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("final {}: {:.4}", res.metric_name, m);
     }
     println!(
-        "per-iteration: {:.2} ms wall, {:.3} ms simulated @ {} Gb/s fabric",
+        "per-iteration: {:.2} ms wall, {:.3} ms simulated @ {} Gb/s fabric (ranks {})",
         res.wall_iter_s * 1e3,
         res.sim_iter_s * 1e3,
-        cfg.fabric_gbps
+        cfg.fabric_gbps,
+        if res.rank_threads {
+            "threaded"
+        } else {
+            "round-robin"
+        },
     );
     println!(
         "exposed comm: {:.4} ms/iter (overlap {}; unpipelined {:.4} ms)",

@@ -196,6 +196,25 @@ impl Runtime {
         self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
         Ok(exe)
     }
+
+    /// Build a fresh, caller-owned executable for `name` — one per rank
+    /// thread (`coordinator::team::RankTeam`). Interpreter executables
+    /// are plain-data programs, so per-rank ownership is cheap and the
+    /// instance is `Send` with no shared mutable state. PJRT executables
+    /// are process-shared device handles; refuse with guidance instead
+    /// of pretending per-rank ownership is possible.
+    pub fn load_owned(&self, name: &str) -> Result<Executable> {
+        let spec = self.manifest.get(name)?;
+        match self.backend {
+            Backend::Interp => Executable::interpret(spec),
+            Backend::Pjrt => crate::bail!(
+                "artifact {name:?}: per-rank owned executables need the interp \
+                 backend (PJRT executables are process-shared device handles); \
+                 run with --backend interp or --rank-threads off"
+            ),
+            Backend::Auto => unreachable!("create_with resolves Auto"),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -229,6 +248,21 @@ mod tests {
         assert!(Arc::ptr_eq(&exe, &again));
         // Unknown names still error through the manifest.
         assert!(rt.load("nope").is_err());
+    }
+
+    #[test]
+    fn load_owned_builds_independent_send_executables() {
+        fn assert_send<T: Send>(_: &T) {}
+        let dir = std::env::temp_dir().join("adacons_interp_rt_test");
+        let rt = Runtime::create_with(&dir, Backend::Interp).unwrap();
+        // Fresh instance per call — the per-rank-thread ownership shape —
+        // and movable into a rank thread.
+        let a = rt.load_owned("linreg_b16").unwrap();
+        let b = rt.load_owned("linreg_b16").unwrap();
+        assert!(a.is_interp() && b.is_interp());
+        assert_send(&a);
+        std::thread::spawn(move || drop(b)).join().unwrap();
+        assert!(rt.load_owned("nope").is_err());
     }
 
     #[cfg(not(feature = "pjrt"))]

@@ -2,10 +2,12 @@
 //! backends (native interpreter / PJRT).
 //!
 //! The PJRT variant needs the `xla` crate and lives behind the `pjrt`
-//! feature; the interpreter variant is always available and carries a
-//! [`InterpExec`] program. Input validation (arity, shapes, dtypes,
-//! parameter length) is shared, so both backends reject bad batches with
-//! identical errors.
+//! feature; the interpreter variant is always available, carries a
+//! [`InterpExec`] program, and — being plain data with no shared mutable
+//! state — is `Send`: each rank thread of the threaded runtime owns its
+//! own instance (`Runtime::load_owned`). Input validation (arity,
+//! shapes, dtypes, parameter length) is shared, so both backends reject
+//! bad batches with identical errors.
 //!
 //! [`InterpExec`]: crate::runtime::interp::InterpExec
 

@@ -1,11 +1,15 @@
 //! Worker rank state.
 //!
 //! A worker owns its data shard (a seeded stream), its failure injector,
-//! and its gradient slot.  The testbed is a single CPU, so ranks execute
-//! round-robin against the shared PJRT client while the [`SimClock`]
-//! models them running in parallel (each rank is charged only its own
-//! compute time); on a multi-accelerator deployment each rank would be a
-//! process and the collectives real.
+//! and its gradient slot. Everything here is `Send`, so a worker can run
+//! round-robin on the leader thread (`--rank-threads off`, each rank
+//! charged only its own compute on the [`SimClock`]) or be moved into a
+//! real rank thread (`--rank-threads on`, `coordinator::team::RankTeam`)
+//! that owns its executable and streams buckets to the leader over
+//! `comm::StepExchange`; on a multi-accelerator deployment each rank
+//! would be a process and the collectives real. Both placements draw the
+//! same deterministic data/injection streams, so their gradients are
+//! bitwise-identical.
 //!
 //! [`SimClock`]: crate::collective::SimClock
 
@@ -158,6 +162,14 @@ mod tests {
         fn next_batch(&mut self, b: usize) -> Batch {
             vec![Array::F32(vec![self.0; b * self.1], vec![b, self.1])]
         }
+    }
+
+    #[test]
+    fn worker_is_send_for_rank_threads() {
+        // The threaded rank runtime moves workers into rank threads;
+        // keep the whole state tree (data gen, injector, RNG) Send.
+        fn assert_send<T: Send>() {}
+        assert_send::<Worker>();
     }
 
     #[test]

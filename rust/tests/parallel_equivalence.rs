@@ -10,6 +10,7 @@
 
 use adacons::aggregation::{self, Aggregator};
 use adacons::collective::{CostModel, SimClock, Topology};
+use adacons::comm::StepExchange;
 use adacons::coordinator::pipeline::PipelinedExecutor;
 use adacons::parallel::{ParallelCtx, ParallelPolicy};
 use adacons::tensor::{grad_set::CHUNK, Buckets, GradSet};
@@ -311,6 +312,162 @@ fn overlap_on_reports_strictly_less_exposed_comm_multi_bucket() {
         } else {
             assert!(on.exposed_comm_s <= off.exposed_comm_s + 1e-15, "{name}");
         }
+    }
+}
+
+/// Drive one pipelined step fed by **real rank threads** over the step
+/// exchange: each rank submits its row's buckets from its own OS thread
+/// (submission order rotated per rank and round so the leader's
+/// arrival-order ingest sees genuinely different interleavings), then a
+/// `Done` report; the leader runs `run_step_exchange`.
+fn exchange_step(
+    name: &str,
+    rows: &[Vec<f32>],
+    buckets: &Buckets,
+    threads: usize,
+    min_shard: usize,
+    overlap: bool,
+    compute_s: &[f64],
+    round: usize,
+) -> Vec<f32> {
+    let n = rows.len();
+    let d = buckets.total();
+    let (exchange, ports) = StepExchange::new(n);
+    let mut handles = Vec::new();
+    for port in ports {
+        let rank = port.rank();
+        let row = rows[rank].clone();
+        let bk = buckets.clone();
+        let cs = compute_s[rank];
+        handles.push(std::thread::spawn(move || {
+            let nb = bk.len();
+            for i in 0..nb {
+                let b = (i + rank + round) % nb;
+                let (lo, hi) = bk.range(b);
+                port.submit_bucket(b, row[lo..hi].to_vec());
+            }
+            port.done(0.0, cs);
+            port.complete();
+        }));
+    }
+    let ctx = ctx(threads, min_shard);
+    let mut agg = aggregation::by_name(name, n).unwrap();
+    let mut exec = PipelinedExecutor::new(n, buckets.clone(), overlap);
+    let mut grads = GradSet::zeros(n, d);
+    let mut out = vec![0.0f32; d];
+    let mut clock = SimClock::new(n);
+    let cost = CostModel::from_topology(&Topology::ring_gbps(n, 100.0));
+    exec.run_step_exchange(
+        &exchange,
+        agg.as_mut(),
+        &mut grads,
+        &mut out,
+        &ctx,
+        &mut clock,
+        &cost,
+    )
+    .unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+    out
+}
+
+/// The five aggregator families the acceptance criterion names.
+const FIVE: &[&str] = &["adacons", "mean", "grawa", "adasum", "median"];
+
+#[test]
+fn threaded_exchange_bitwise_equals_roundrobin_all_aggregators() {
+    // Acceptance gate for the threaded rank runtime: N rank threads
+    // streaming buckets in arbitrary arrival order must produce the
+    // exact bits of the round-robin producer path, for all five
+    // aggregators, under ragged buckets and 1/2/nproc pool threads.
+    // Repeat-run (20 rounds, rotated submission orders + OS scheduling
+    // noise) to shake out interleaving-dependent bugs.
+    let (n, d) = (5, 2 * CHUNK + 311);
+    let gs = random_set(n, d, 0x7E4D);
+    let rows: Vec<Vec<f32>> = (0..n).map(|i| gs.row(i).to_vec()).collect();
+    let buckets = Buckets::fixed(d, CHUNK / 2 + 177); // ragged, CHUNK-unaligned
+    let compute = vec![0.01; n];
+    for name in FIVE {
+        for t in thread_grid() {
+            let (base, _, _) = pipelined_step(name, &rows, &buckets, t, CHUNK, true, &compute);
+            for round in 0..20 {
+                let got =
+                    exchange_step(name, &rows, &buckets, t, CHUNK, true, &compute, round);
+                assert_eq!(base, got, "{name}: t={t} round={round}");
+            }
+        }
+    }
+}
+
+#[test]
+fn threaded_exchange_matches_with_overlap_off_too() {
+    // The exchange-fed path must also be exact in the unpipelined mode
+    // (arrival order ≠ ingest-task order is not the only hazard; plain
+    // assembly indexing must hold as well).
+    let (n, d) = (4, CHUNK + 123);
+    let gs = random_set(n, d, 0x0FF);
+    let rows: Vec<Vec<f32>> = (0..n).map(|i| gs.row(i).to_vec()).collect();
+    let buckets = Buckets::fixed(d, 200);
+    let compute = vec![0.02; n];
+    for name in FIVE {
+        let (base, _, _) = pipelined_step(name, &rows, &buckets, 2, CHUNK, false, &compute);
+        for round in 0..5 {
+            let got = exchange_step(name, &rows, &buckets, 2, CHUNK, false, &compute, round);
+            assert_eq!(base, got, "{name}: round={round}");
+        }
+    }
+}
+
+#[test]
+fn threaded_rank_panic_fails_step_with_rank_id_instead_of_hanging() {
+    // Regression: a rank thread dying mid-step must fail the step with a
+    // diagnostic naming the rank — never deadlock the leader's ingest.
+    let (n, d) = (3, 2 * CHUNK);
+    let gs = random_set(n, d, 0xDEAD);
+    let rows: Vec<Vec<f32>> = (0..n).map(|i| gs.row(i).to_vec()).collect();
+    let buckets = Buckets::fixed(d, CHUNK);
+    let (exchange, ports) = StepExchange::new(n);
+    let mut handles = Vec::new();
+    for port in ports {
+        let rank = port.rank();
+        let row = rows[rank].clone();
+        let bk = buckets.clone();
+        handles.push(std::thread::spawn(move || {
+            if rank == 2 {
+                let (lo, hi) = bk.range(1);
+                port.submit_bucket(1, row[lo..hi].to_vec());
+                panic!("injected rank death");
+            }
+            for (b, (lo, hi)) in bk.iter().enumerate() {
+                port.submit_bucket(b, row[lo..hi].to_vec());
+            }
+            port.done(0.0, 0.01);
+            port.complete();
+        }));
+    }
+    let ctx = ctx(2, CHUNK);
+    let mut agg = aggregation::by_name("adacons", n).unwrap();
+    let mut exec = PipelinedExecutor::new(n, buckets.clone(), true);
+    let mut grads = GradSet::zeros(n, d);
+    let mut out = vec![0.0f32; d];
+    let mut clock = SimClock::new(n);
+    let cost = CostModel::from_topology(&Topology::ring_gbps(n, 100.0));
+    let err = exec
+        .run_step_exchange(
+            &exchange,
+            agg.as_mut(),
+            &mut grads,
+            &mut out,
+            &ctx,
+            &mut clock,
+            &cost,
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("rank 2"), "{err}");
+    for (rank, h) in handles.into_iter().enumerate() {
+        assert_eq!(h.join().is_err(), rank == 2, "rank {rank}");
     }
 }
 

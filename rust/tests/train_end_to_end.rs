@@ -81,6 +81,61 @@ fn all_aggregators_run_one_step_on_linreg() {
 }
 
 #[test]
+fn rank_threads_on_bitwise_equals_off_for_all_five_aggregators() {
+    // Acceptance gate for the threaded rank runtime: `--rank-threads on`
+    // (N real rank threads streaming buckets over the exchange, ingested
+    // in arrival order) must produce aggregated directions bitwise-equal
+    // to the round-robin path at every step — which final params and the
+    // per-step loss trace verify transitively — for all five aggregator
+    // families, on a ragged multi-bucket config with overlap on.
+    let Some(rt) = runtime() else { return };
+    if rt.backend() != Backend::Interp {
+        eprintln!("rank-threads parity needs the interp backend; skipping");
+        return;
+    }
+    for name in ["mean", "adacons", "grawa", "adasum", "median"] {
+        let run = |threaded: bool| {
+            let mut cfg = linreg_cfg(name, 12);
+            cfg.workers = 4;
+            cfg.bucket_cap = Some(37); // ragged multi-bucket arrival
+            cfg.overlap = true;
+            cfg.rank_threads = threaded;
+            Trainer::new(rt.clone(), cfg).unwrap().run().unwrap()
+        };
+        let on = run(true);
+        let off = run(false);
+        assert!(on.rank_threads && !off.rank_threads);
+        assert_eq!(on.final_params, off.final_params, "{name}: params diverge");
+        assert_eq!(on.train_loss, off.train_loss, "{name}: loss traces diverge");
+    }
+}
+
+#[test]
+fn rank_threads_keep_injector_replay_bitwise() {
+    // Injector ranks fall back to compute-then-replay inside the worker;
+    // that must hold on a real rank thread too (the injector RNG draws
+    // in flat element order either way).
+    let Some(rt) = runtime() else { return };
+    if rt.backend() != Backend::Interp {
+        eprintln!("rank-threads parity needs the interp backend; skipping");
+        return;
+    }
+    let run = |threaded: bool| {
+        let mut cfg = linreg_cfg("median", 8);
+        cfg.workers = 4;
+        cfg.bucket_cap = Some(64);
+        cfg.overlap = true;
+        cfg.rank_threads = threaded;
+        cfg.injectors = vec![(1, adacons::data::GradInjector::SignFlip)];
+        Trainer::new(rt.clone(), cfg).unwrap().run().unwrap()
+    };
+    let on = run(true);
+    let off = run(false);
+    assert_eq!(on.final_params, off.final_params);
+    assert_eq!(on.train_loss, off.train_loss);
+}
+
+#[test]
 fn byzantine_worker_breaks_mean_but_not_median() {
     let Some(rt) = runtime() else { return };
     let inject = |agg: &str| {

@@ -21,6 +21,22 @@ echo "== cargo clippy --all-targets -- -D warnings =="
 # (root Cargo.toml) — never per-site.
 cargo clippy --all-targets -- -D warnings
 
+echo "== threaded stress (comm + pipeline interleavings) =="
+# Loop the thread-heavy suites under varied harness parallelism so
+# interleaving-dependent bugs (arrival-order ingest, rank-death
+# propagation) surface before merge rather than as rare CI flakes.
+# STRESS_ITERS scales the loop (default 3 passes per --test-threads
+# setting); rationale in EXPERIMENTS.md §Threaded-execution.
+STRESS_ITERS="${STRESS_ITERS:-3}"
+for tt in 1 2 4; do
+  for i in $(seq "$STRESS_ITERS"); do
+    echo "-- stress pass ${i}/${STRESS_ITERS} (--test-threads ${tt}) --"
+    cargo test -q --test parallel_equivalence threaded -- --test-threads "$tt"
+    cargo test -q --lib comm:: -- --test-threads "$tt"
+    cargo test -q --lib coordinator:: -- --test-threads "$tt"
+  done
+done
+
 if [[ "${1:-}" != "--no-bench" ]]; then
   echo "== smoke bench (budget 0.05s/case, --overlap both) =="
   cargo run --release --bin bench_aggregation -- --smoke --budget 0.05 --overlap both --out BENCH_aggregation.json
