@@ -249,11 +249,13 @@ impl BucketedAggregator for AdaCons {
             kind: CollectiveKind::AllGather,
             bytes: 4,
             bucket: None,
+            scope: super::CommScope::Global,
         });
         comm.push(super::CommOp {
             kind: CollectiveKind::AllReduce,
             bytes: grads.d() * 4,
             bucket: None,
+            scope: super::CommScope::Global,
         });
         AggInfo {
             gammas: first_gamma,

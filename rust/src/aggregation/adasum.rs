@@ -100,6 +100,7 @@ impl BucketedAggregator for Adasum {
                 kind: CollectiveKind::AllReduce,
                 bytes: d * 4,
                 bucket: None,
+                scope: super::CommScope::Global,
             }],
             par: Some(ctx.par_plan(d)),
         }

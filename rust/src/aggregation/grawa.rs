@@ -87,12 +87,14 @@ impl BucketedAggregator for Grawa {
                 kind: CollectiveKind::AllGather,
                 bytes: 4,
                 bucket: Some(b),
+                scope: super::CommScope::Global,
             })
             .collect();
         comm.push(CommOp {
             kind: CollectiveKind::AllReduce,
             bytes: grads.d() * 4,
             bucket: None,
+            scope: super::CommScope::Global,
         });
         AggInfo {
             gammas: Some(gammas),

@@ -1,0 +1,359 @@
+//! Two-level hierarchical aggregation: intra-node reduce, inter-node
+//! consensus.
+//!
+//! The paper's testbed is hierarchical — nodes of NVLink-connected GPUs
+//! joined by an InfiniBand fabric — and its weighting scheme is designed
+//! around exactly that communication asymmetry. [`Hierarchical`] wraps
+//! any flat [`Aggregator`] with the scheme AdaSum-style systems use to
+//! scale adaptive aggregation past a node:
+//!
+//! 1. **Intra-node reduce** (cheap, NVLink): node *k*'s leader row is
+//!    `L_k = (G/N) · Σ_{i∈k} g_i` — a group-size-weighted mean, since
+//!    `L_k = (s_k·G/N) · m_k` with `m_k` the plain node mean.
+//! 2. **Inter-node consensus** (the expensive fabric): the base scheme
+//!    runs across the G leader rows only, shrinking its Gram/consensus
+//!    computation from N×N to G×G and its ring collectives from N to G
+//!    participants.
+//!
+//! **Unbiasedness invariant** (documented here, tested in
+//! `tests/parallel_equivalence.rs` and below): the uniform mean over
+//! leaders equals the global rank mean, uneven groups included —
+//! `(1/G) Σ_k L_k = (1/N) Σ_i g_i` — because each leader carries its
+//! group-size weight. Equivalently, every rank's effective weight under
+//! mean-of-leaders is exactly `1/N` (weight-sum preserved: for a base
+//! scheme reporting weights `Γ` over leaders, the per-rank weights are
+//! `γ_i = Γ_{k(i)}·G/N`, and `Σ_k Γ_k = 1 ⇒ Σ_i γ_i·s_{k(i)}/s_{k(i)}`
+//! telescopes to 1). So swapping a flat aggregator for its hierarchical
+//! form changes the f32 association and the G-vs-N consensus geometry,
+//! never the statistical target.
+//!
+//! Degenerate maps — one node, or one rank per node — have no meaningful
+//! two-level split, so the wrapper delegates straight to the base scheme:
+//! `hier:1xN` and `hier:Nx1` are **bitwise-identical** to flat (the
+//! acceptance criterion the parity suite enforces).
+
+use super::{AggInfo, Aggregator, BucketWork, BucketedAggregator, CommOp, CommScope};
+use crate::collective::{CollectiveKind, NodeMap};
+use crate::parallel::ParallelCtx;
+use crate::tensor::{Buckets, GradSet};
+
+/// A flat aggregation scheme lifted to the two-level node hierarchy.
+pub struct Hierarchical {
+    base: Box<dyn Aggregator>,
+    map: NodeMap,
+    /// Leader scale `G/N`: folds the group-size weighting into a single
+    /// uniform constant (`L_k = scale · Σ_{i∈k} g_i`).
+    scale: f32,
+    degenerate: bool,
+}
+
+impl Hierarchical {
+    pub fn new(base: Box<dyn Aggregator>, map: NodeMap) -> Hierarchical {
+        let g = map.groups() as f64;
+        let n = map.n_ranks() as f64;
+        let degenerate = map.is_degenerate();
+        Hierarchical {
+            base,
+            map,
+            scale: (g / n) as f32,
+            degenerate,
+        }
+    }
+
+    pub fn map(&self) -> &NodeMap {
+        &self.map
+    }
+
+    pub fn base_name(&self) -> &'static str {
+        self.base.name()
+    }
+}
+
+impl BucketedAggregator for Hierarchical {
+    fn node_map(&self) -> Option<&NodeMap> {
+        if self.degenerate {
+            None
+        } else {
+            Some(&self.map)
+        }
+    }
+
+    fn reduce_group(
+        &self,
+        node: usize,
+        view: &GradSet,
+        rows: (usize, usize),
+        lo: usize,
+        hi: usize,
+        ctx: &ParallelCtx,
+    ) -> Vec<f32> {
+        let _ = node;
+        let mut out = vec![0.0f32; hi - lo];
+        view.scaled_row_sum_range_into_ctx(rows, self.scale, lo, hi, &mut out, ctx);
+        out
+    }
+
+    fn ingest_leaders(&self, b: usize, leaders: GradSet, ctx: &ParallelCtx) -> BucketWork {
+        let inner = self.base.ingest_bucket(b, &leaders, 0, leaders.d(), ctx);
+        BucketWork::Hier {
+            leaders,
+            inner: Box::new(inner),
+        }
+    }
+
+    fn ingest_bucket(
+        &self,
+        b: usize,
+        view: &GradSet,
+        lo: usize,
+        hi: usize,
+        ctx: &ParallelCtx,
+    ) -> BucketWork {
+        if self.degenerate {
+            return self.base.ingest_bucket(b, view, lo, hi, ctx);
+        }
+        // Inline decomposition — the per-node-group tasks the pipelined
+        // executor runs concurrently, executed here in fixed node order.
+        // Both produce the same bits: the reduction kernel is invariant to
+        // the view convention and node outputs are independent rows.
+        let g = self.map.groups();
+        let mut leaders = GradSet::zeros(g, hi - lo);
+        for k in 0..g {
+            let row = self.reduce_group(k, view, self.map.range(k), lo, hi, ctx);
+            leaders.set_row(k, &row);
+        }
+        self.ingest_leaders(b, leaders, ctx)
+    }
+
+    fn finalize(
+        &mut self,
+        grads: &GradSet,
+        buckets: &Buckets,
+        work: Vec<BucketWork>,
+        out: &mut [f32],
+        ctx: &ParallelCtx,
+    ) -> AggInfo {
+        if self.degenerate {
+            return self.base.finalize(grads, buckets, work, out, ctx);
+        }
+        let g = self.map.groups();
+        let n = self.map.n_ranks();
+        assert_eq!(grads.n(), n, "gradient set does not match the node map");
+        let d = grads.d();
+        // Reassemble the full (G, d) leader set from the per-bucket pieces
+        // (fixed bucket order) and unwrap the base scheme's work.
+        let mut leaders_full = GradSet::zeros(g, d);
+        let mut inner_work = Vec::with_capacity(work.len());
+        for ((lo, hi), w) in buckets.iter().zip(work) {
+            match w {
+                BucketWork::Hier { leaders, inner } => {
+                    assert_eq!(leaders.n(), g);
+                    assert_eq!(leaders.d(), hi - lo);
+                    for k in 0..g {
+                        leaders_full.row_mut(k)[lo..hi].copy_from_slice(leaders.row(k));
+                    }
+                    inner_work.push(*inner);
+                }
+                other => panic!("hierarchical ingests Hier work, got {other:?}"),
+            }
+        }
+        let info = self.base.finalize(&leaders_full, buckets, inner_work, out, ctx);
+
+        // --- comm plan on the two-level fabric ---
+        // Per bucket: every node's intra reduce (concurrent NVLink-class
+        // links, overlappable with the backward)...
+        let mut comm: Vec<CommOp> = buckets
+            .iter()
+            .enumerate()
+            .map(|(b, (lo, hi))| CommOp {
+                kind: CollectiveKind::AllReduce,
+                bytes: (hi - lo) * 4,
+                bucket: Some(b),
+                scope: CommScope::Intra,
+            })
+            .collect();
+        // ...then the base scheme's ops run across node leaders on the
+        // inter-node fabric (a bucketed inter op additionally waits for
+        // that bucket's intra reduces — the executor encodes the
+        // dependency through readiness times)...
+        comm.extend(info.comm.iter().map(|op| CommOp {
+            scope: CommScope::Inter,
+            ..*op
+        }));
+        // ...and the aggregated direction fans back out inside each node.
+        comm.push(CommOp {
+            kind: CollectiveKind::Broadcast,
+            bytes: d * 4,
+            bucket: None,
+            scope: CommScope::Intra,
+        });
+
+        // Leader weights Γ expand to per-rank effective weights
+        // γ_i = Γ_{k(i)} · G/N (out = Σ_k Γ_k L_k = Σ_i γ_i g_i).
+        let gammas = info.gammas.as_ref().map(|leader_gammas| {
+            let mut per_rank = vec![0.0f32; n];
+            for (k, (r0, r1)) in self.map.iter().enumerate() {
+                let w = leader_gammas[k] * self.scale;
+                for slot in &mut per_rank[r0..r1] {
+                    *slot = w;
+                }
+            }
+            per_rank
+        });
+        AggInfo {
+            gammas,
+            coeff_stages: info.coeff_stages,
+            comm,
+            par: info.par,
+        }
+    }
+}
+
+impl Aggregator for Hierarchical {
+    fn name(&self) -> &'static str {
+        match self.base.name() {
+            "mean" => "hier-mean",
+            "adacons" => "hier-adacons",
+            "adacons-raw" => "hier-adacons-raw",
+            "adacons-momentum" => "hier-adacons-momentum",
+            "adacons-norm" => "hier-adacons-norm",
+            "adasum" => "hier-adasum",
+            "grawa" => "hier-grawa",
+            "median" => "hier-median",
+            "trimmed-mean" => "hier-trimmed-mean",
+            _ => "hier",
+        }
+    }
+
+    fn reset(&mut self) {
+        self.base.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregation;
+    use crate::util::prng::Rng;
+
+    fn random_set(n: usize, d: usize, seed: u64) -> GradSet {
+        let mut rng = Rng::new(seed);
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..d).map(|_| rng.normal_f32(1.0)).collect())
+            .collect();
+        GradSet::from_rows(&rows)
+    }
+
+    #[test]
+    fn hier_mean_is_unbiased_even_and_uneven() {
+        // The invariant: mean-of-leaders == global rank mean, any grouping.
+        let d = 257;
+        for map in [NodeMap::even(3, 2), NodeMap::from_sizes(&[3, 2, 1])] {
+            let n = map.n_ranks();
+            let gs = random_set(n, d, 42 + map.max_group() as u64);
+            let mut flat = vec![0.0f32; d];
+            gs.mean_into(&mut flat);
+            let mut hier = vec![0.0f32; d];
+            let mut agg = aggregation::hierarchical("mean", map.clone(), n).unwrap();
+            let info = agg.aggregate(&gs, &Buckets::single(d), &mut hier);
+            for j in 0..d {
+                assert!(
+                    (hier[j] - flat[j]).abs() < 1e-5 * flat[j].abs().max(1.0),
+                    "col {j}: {} vs {}",
+                    hier[j],
+                    flat[j]
+                );
+            }
+            // Weight-sum preserved: every rank's effective weight is 1/N.
+            let gammas = info.gammas.unwrap();
+            assert_eq!(gammas.len(), n);
+            for (rank, &w) in gammas.iter().enumerate() {
+                assert!(
+                    (w - 1.0 / n as f32).abs() < 1e-7,
+                    "rank {rank}: weight {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn even_group_leaders_are_the_node_means() {
+        let map = NodeMap::even(2, 3);
+        let gs = random_set(6, 64, 7);
+        let agg = Hierarchical::new(aggregation::by_name("mean", 6).unwrap(), map.clone());
+        let ctx = ParallelCtx::serial();
+        for (k, (r0, r1)) in map.iter().enumerate() {
+            let leader = agg.reduce_group(k, &gs, (r0, r1), 0, 64, &ctx);
+            for j in 0..64 {
+                let m: f64 =
+                    (r0..r1).map(|i| gs.row(i)[j] as f64).sum::<f64>() / (r1 - r0) as f64;
+                assert!((leader[j] as f64 - m).abs() < 1e-6, "node {k} col {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_maps_delegate_bitwise_to_flat() {
+        let (n, d) = (5usize, 300usize);
+        let gs = random_set(n, d, 11);
+        let buckets = Buckets::fixed(d, 77);
+        for name in aggregation::ALL_NAMES {
+            let mut flat_out = vec![0.0f32; d];
+            aggregation::by_name(name, n)
+                .unwrap()
+                .aggregate(&gs, &buckets, &mut flat_out);
+            for map in [NodeMap::even(1, n), NodeMap::even(n, 1)] {
+                let mut hier_out = vec![0.0f32; d];
+                let mut agg = aggregation::hierarchical(name, map.clone(), n).unwrap();
+                agg.aggregate(&gs, &buckets, &mut hier_out);
+                assert_eq!(
+                    flat_out, hier_out,
+                    "{name}: degenerate {map:?} diverged from flat"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn shrinks_consensus_to_leader_count_and_scopes_comm() {
+        let map = NodeMap::even(2, 3);
+        let (n, d) = (6usize, 4 * crate::tensor::ops::CHUNK);
+        let gs = random_set(n, d, 3);
+        let buckets = Buckets::fixed(d, crate::tensor::ops::CHUNK);
+        let mut out = vec![0.0f32; d];
+        let mut agg = aggregation::hierarchical("adacons", map, n).unwrap();
+        let info = agg.aggregate(&gs, &buckets, &mut out);
+        assert!(out.iter().all(|x| x.is_finite()));
+        // Per-bucket intra reduces + the base's per-bucket inter reduces
+        // + exposed inter (gather, reduce) + the final intra broadcast.
+        let nb = buckets.len();
+        let intra: Vec<&CommOp> = info
+            .comm
+            .iter()
+            .filter(|op| op.scope == CommScope::Intra)
+            .collect();
+        let inter: Vec<&CommOp> = info
+            .comm
+            .iter()
+            .filter(|op| op.scope == CommScope::Inter)
+            .collect();
+        assert_eq!(intra.len(), nb + 1); // nb reduces + final broadcast
+        assert_eq!(inter.len(), nb + 2); // nb stats reduces + gather + reproject
+        assert!(info.comm.iter().all(|op| op.scope != CommScope::Global));
+        // Per-rank weights expand from the 2 leader weights.
+        let gammas = info.gammas.unwrap();
+        assert_eq!(gammas.len(), 6);
+        assert_eq!(gammas[0], gammas[2]); // same node
+        assert_eq!(gammas[3], gammas[5]);
+    }
+
+    #[test]
+    fn hier_name_and_reset_pass_through() {
+        let mut agg =
+            aggregation::hierarchical("adacons", NodeMap::even(2, 2), 4).unwrap();
+        assert_eq!(agg.name(), "hier-adacons");
+        agg.reset(); // must not panic; clears base momentum
+        let agg = aggregation::hierarchical("median", NodeMap::even(2, 2), 4).unwrap();
+        assert_eq!(agg.name(), "hier-median");
+    }
+}

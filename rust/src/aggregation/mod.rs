@@ -15,20 +15,35 @@
 pub mod adacons;
 pub mod adasum;
 pub mod grawa;
+pub mod hierarchy;
 pub mod mean;
 pub mod robust;
 pub mod stats;
 
-use crate::collective::CollectiveKind;
+use crate::collective::{CollectiveKind, NodeMap};
 use crate::parallel::{ParPlan, ParallelCtx};
 use crate::tensor::{grad_set::ConsensusStats, Buckets, GradSet};
 
 pub use adacons::{AdaCons, AdaConsConfig};
 pub use adasum::Adasum;
 pub use grawa::Grawa;
+pub use hierarchy::Hierarchical;
 pub use mean::MeanAggregator;
 pub use robust::{CoordinateMedian, TrimmedMean};
 pub use stats::CoeffStages;
+
+/// Which fabric level a communication op runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommScope {
+    /// Flat path: the op spans all N ranks on the modeled bottleneck link
+    /// (the historical single-NIC accounting).
+    Global,
+    /// Within one node group (NVLink-class): every node runs its copy of
+    /// the op concurrently on its own intra-node link.
+    Intra,
+    /// Across node leaders on the inter-node fabric.
+    Inter,
+}
 
 /// One communication operation a step would issue on a real fabric.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -42,6 +57,9 @@ pub struct CommOp {
     /// backward compute (DDP pipelining). `None`: the op depends on the
     /// full gradient or on the bucketed phase's results — it is exposed.
     pub bucket: Option<usize>,
+    /// Fabric level the op is charged to ([`CommScope::Global`] for flat
+    /// schemes; the hierarchical wrapper emits `Intra`/`Inter` pairs).
+    pub scope: CommScope,
 }
 
 /// Metadata returned by one aggregation step.
@@ -75,6 +93,14 @@ pub enum BucketWork {
     /// fully assembled gradient set (Adasum's pairwise tree); all work
     /// happens in `finalize`.
     Deferred,
+    /// Two-level hierarchical work: the bucket's `(G, width)` node-leader
+    /// columns (group-size-weighted intra means, see
+    /// [`hierarchy::Hierarchical`]) plus the base scheme's work over
+    /// those leaders.
+    Hier {
+        leaders: GradSet,
+        inner: Box<BucketWork>,
+    },
 }
 
 /// The two-phase aggregation protocol the pipelined executor drives.
@@ -113,6 +139,46 @@ pub trait BucketedAggregator: Send + Sync {
         out: &mut [f32],
         ctx: &ParallelCtx,
     ) -> AggInfo;
+
+    /// Rank grouping for two-level hierarchical schemes: `Some(map)` when
+    /// this aggregator's `ingest_bucket` decomposes into per-node-group
+    /// reduction ([`BucketedAggregator::reduce_group`]) followed by a
+    /// leaders-level ingest ([`BucketedAggregator::ingest_leaders`]) —
+    /// the pipelined executor then runs the reduction tasks per node
+    /// group, each submitted the moment that group's ranks complete the
+    /// bucket. `None` (the default, and the hierarchical wrapper's answer
+    /// for degenerate maps): flat, one ingest task per bucket.
+    fn node_map(&self) -> Option<&NodeMap> {
+        None
+    }
+
+    /// Two-level phase 1a: reduce rows `rows.0..rows.1` of `view` (node
+    /// `node`'s rank group) over columns `[lo, hi)` to that node's leader
+    /// columns. `view`/`rows`/`lo` follow the same dual convention as
+    /// `ingest_bucket`: the full gradient set with global rows and an
+    /// absolute column range, or an owned per-group per-bucket copy with
+    /// local rows and `lo = 0` — bitwise-identical either way. Only
+    /// meaningful when `node_map` returns `Some`.
+    fn reduce_group(
+        &self,
+        node: usize,
+        view: &GradSet,
+        rows: (usize, usize),
+        lo: usize,
+        hi: usize,
+        ctx: &ParallelCtx,
+    ) -> Vec<f32> {
+        let _ = (node, view, rows, lo, hi, ctx);
+        panic!("reduce_group called on a flat aggregator")
+    }
+
+    /// Two-level phase 1b: ingest bucket `b`'s assembled `(G, width)`
+    /// leader columns (ownership transfers so the work can carry them to
+    /// `finalize`). Only meaningful when `node_map` returns `Some`.
+    fn ingest_leaders(&self, b: usize, leaders: GradSet, ctx: &ParallelCtx) -> BucketWork {
+        let _ = (b, leaders, ctx);
+        panic!("ingest_leaders called on a flat aggregator")
+    }
 }
 
 /// A synchronous gradient aggregation scheme.
@@ -159,6 +225,7 @@ pub(crate) fn per_bucket_payload_ops(kind: CollectiveKind, buckets: &Buckets) ->
             kind,
             bytes: (hi - lo) * 4,
             bucket: Some(b),
+            scope: CommScope::Global,
         })
         .collect()
 }
@@ -194,6 +261,16 @@ pub fn by_name(name: &str, n_workers: usize) -> Option<Box<dyn Aggregator>> {
     }
 }
 
+/// Build the two-level hierarchical form of a flat aggregator: intra-node
+/// group-size-weighted mean reduction, then `name`'s scheme across node
+/// leaders only (see [`hierarchy::Hierarchical`] for the unbiasedness
+/// invariant). Degenerate maps (one node, or one rank per node) delegate
+/// to the flat scheme bitwise.
+pub fn hierarchical(name: &str, map: NodeMap, n_workers: usize) -> Option<Box<dyn Aggregator>> {
+    let base = by_name(name, n_workers)?;
+    Some(Box::new(Hierarchical::new(base, map)))
+}
+
 /// All aggregator names, for CLI help and sweep harnesses.
 pub const ALL_NAMES: &[&str] = &[
     "mean",
@@ -218,5 +295,30 @@ mod tests {
             assert!(!agg.name().is_empty());
         }
         assert!(by_name("nope", 4).is_none());
+    }
+
+    #[test]
+    fn hierarchical_registry_wraps_every_name() {
+        let mut seen = std::collections::BTreeSet::new();
+        for name in ALL_NAMES {
+            let map = NodeMap::even(2, 2);
+            let agg = hierarchical(name, map, 4).unwrap_or_else(|| panic!("{name}"));
+            assert!(agg.name().starts_with("hier-"), "{}", agg.name());
+            // Every registry name must map to a distinct specialized hier
+            // name (the generic "hier" fallback would make two schemes
+            // indistinguishable in bench labels and JSONL) — adding an
+            // aggregator to ALL_NAMES requires extending
+            // Hierarchical::name()'s static table.
+            assert!(
+                agg.name() != "hier" && seen.insert(agg.name()),
+                "{name}: hier name {} not specialized/unique",
+                agg.name()
+            );
+            assert!(agg.node_map().is_some());
+        }
+        assert!(hierarchical("nope", NodeMap::even(2, 2), 4).is_none());
+        // Degenerate maps delegate: no grouping surfaces to the executor.
+        let deg = hierarchical("mean", NodeMap::even(1, 4), 4).unwrap();
+        assert!(deg.node_map().is_none());
     }
 }

@@ -12,7 +12,7 @@ use std::collections::BTreeMap;
 
 use crate::aggregation::{self, Aggregator};
 use crate::bench::bench_auto;
-use crate::collective::{CostModel, SimClock, Topology};
+use crate::collective::{CostModel, HierCostModel, NodeMap, SimClock, Topology, TopologySpec};
 use crate::coordinator::pipeline::PipelinedExecutor;
 use crate::parallel::{plan_shards, ParallelCtx, ParallelPolicy};
 use crate::tensor::ops::CHUNK;
@@ -48,11 +48,18 @@ pub struct SweepConfig {
     /// thread count — so backend + threading perf is tracked in
     /// `BENCH_aggregation.json` alongside the pure aggregation kernels.
     pub interp_step: bool,
+    /// Hierarchical-topology step cases (`hier_step`): the same pipelined
+    /// step with two-level aggregation (per-node leader reduction +
+    /// leader-level adacons over an even `<N/4>x4` split), at every
+    /// overlap mode — emitted for worker counts divisible by 4 above 4,
+    /// which is how the N = 64/128 scale rows get a hier-vs-flat
+    /// comparison.
+    pub hier_step: bool,
 }
 
 impl SweepConfig {
     /// The full grid from the perf plan: 1/2/4/nproc threads x N in
-    /// {4, 8, 32} x d in {1e5, 1e6, 1e7}.
+    /// {4, 8, 32, 64, 128} x d in {1e5, 1e6, 1e7}.
     pub fn full(budget_s: f64) -> SweepConfig {
         let nproc = std::thread::available_parallelism()
             .map(|n| n.get())
@@ -63,12 +70,16 @@ impl SweepConfig {
         SweepConfig {
             budget_s,
             threads,
-            workers: vec![4, 8, 32],
+            // 64/128 extend the grid toward scale (the ROADMAP perf
+            // item); their biggest-d cases exceed the byte cap and skip
+            // loudly rather than silently shrinking coverage.
+            workers: vec![4, 8, 32, 64, 128],
             dims: vec![100_000, 1_000_000, 10_000_000],
             min_shard_elems: crate::parallel::DEFAULT_MIN_SHARD_ELEMS,
             max_case_bytes: 2_000_000_000,
             overlap_modes: vec![false, true],
             interp_step: true,
+            hier_step: true,
         }
     }
 
@@ -84,6 +95,7 @@ impl SweepConfig {
             max_case_bytes: 2_000_000_000,
             overlap_modes: vec![false, true],
             interp_step: true,
+            hier_step: true,
         }
     }
 }
@@ -152,6 +164,18 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Json> {
                     ("skipped", Json::Bool(true)),
                     ("reason", s("pipelined buffers exceed max_case_bytes")),
                 ]));
+                // The hier_step cell for this (N, d) is skipped for the
+                // same reason — record it so the archived trajectory
+                // never silently loses hier coverage at scale.
+                if cfg.hier_step && n % 4 == 0 && n > 4 {
+                    cases.push(obj(vec![
+                        ("op", s("hier_step")),
+                        ("workers", num(n as f64)),
+                        ("d", num(d as f64)),
+                        ("skipped", Json::Bool(true)),
+                        ("reason", s("pipelined buffers exceed max_case_bytes")),
+                    ]));
+                }
             }
             let gs = random_grad_set(n, d, 42);
             let gamma: Vec<f32> = (0..n).map(|i| 0.5 + 0.1 * i as f32).collect();
@@ -316,6 +340,91 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Json> {
                         ),
                     ]));
                 }
+
+                // --- the hier topology dimension: the same pipelined
+                //     step under two-level aggregation (per-node leader
+                //     reduction + leader-level adacons over an even
+                //     <N/4>x4 split) with the two-level timeline ---
+                if !cfg.hier_step || n % 4 != 0 || n <= 4 {
+                    continue;
+                }
+                let nodes = n / 4;
+                let map = NodeMap::even(nodes, 4);
+                let topo = TopologySpec::Hier { nodes, gpus: 4 }.build(n, 100.0);
+                for &overlap in &cfg.overlap_modes {
+                    let buckets = Buckets::fixed(d, d.div_ceil(16).max(1));
+                    let mut hagg = aggregation::hierarchical("adacons", map.clone(), n)
+                        .context("adacons not in registry")?;
+                    let hier_cost = HierCostModel::from_topology(&topo)
+                        .context("hier topology must build a hier cost model")?;
+                    let mut hexec = PipelinedExecutor::with_topology(
+                        n,
+                        buckets.clone(),
+                        overlap,
+                        Some(map.clone()),
+                        Some(hier_cost),
+                    );
+                    let mut hgrads = GradSet::zeros(n, d);
+                    let mut hout = vec![0.0f32; d];
+                    let mut clock = SimClock::new(n);
+                    let cost = CostModel::from_topology(&topo);
+                    let mode = if overlap { "on" } else { "off" };
+                    let r = bench_auto(
+                        &format!("hier step       N={n} d={d} t={t} nodes={nodes} overlap={mode}"),
+                        cfg.budget_s,
+                        || {
+                            let mut produce = |rank: usize,
+                                               deliver: &mut dyn FnMut(usize, &[f32])|
+                             -> Result<(f64, f64)> {
+                                for (b, (lo, hi)) in buckets.iter().enumerate() {
+                                    deliver(b, &gs.row(rank)[lo..hi]);
+                                }
+                                Ok((0.0, 0.0))
+                            };
+                            hexec
+                                .run_step(
+                                    &mut produce,
+                                    hagg.as_mut(),
+                                    &mut hgrads,
+                                    &mut hout,
+                                    &ctx,
+                                    &mut clock,
+                                    &cost,
+                                )
+                                .expect("hier bench step");
+                        },
+                    );
+                    let key = (format!("hier_step_{mode}"), n, d);
+                    if t == 1 {
+                        baseline.insert(key.clone(), r.mean_s);
+                    }
+                    let speedup = baseline.get(&key).map(|&b| b / r.mean_s);
+                    println!(
+                        "{}{}",
+                        r.report_line(),
+                        speedup
+                            .map(|x| format!("  [{x:.2}x vs 1t]"))
+                            .unwrap_or_default()
+                    );
+                    cases.push(obj(vec![
+                        ("op", s("hier_step")),
+                        ("overlap", s(mode)),
+                        ("topo", s(&format!("hier:{nodes}x4"))),
+                        ("nodes", num(nodes as f64)),
+                        ("workers", num(n as f64)),
+                        ("d", num(d as f64)),
+                        ("threads", num(t as f64)),
+                        ("buckets", num(buckets.len() as f64)),
+                        ("iters", num(r.iters as f64)),
+                        ("mean_s", num(r.mean_s)),
+                        ("p50_s", num(r.p50_s)),
+                        ("p99_s", num(r.p99_s)),
+                        (
+                            "speedup_vs_1t",
+                            speedup.map(num).unwrap_or(Json::Null),
+                        ),
+                    ]));
+                }
             }
         }
     }
@@ -412,7 +521,8 @@ fn interp_step_cases(
             } else {
                 // Spawn once, reuse across every bench iteration — the
                 // deployment shape the trainer uses.
-                let team = RankTeam::spawn(&rt, artifact, mk_workers()?, &buckets, local_batch)?;
+                let team =
+                    RankTeam::spawn(&rt, artifact, mk_workers()?, &buckets, local_batch, None)?;
                 let shared = std::sync::Arc::new(params.clone());
                 bench_auto(&label, budget_s, || {
                     team.begin_step(&shared).expect("rank team alive");
@@ -574,11 +684,13 @@ pub fn compare_files(
     let c = case_median(&cur_doc, "adacons", None)?
         .with_context(|| format!("{current}: no measured adacons cases"))?;
     gate_one("aggregate-phase (adacons)", b, c, max_ratio, baseline)?;
-    let step_groups: [(&str, (&str, &str)); 4] = [
+    let step_groups: [(&str, (&str, &str)); 6] = [
         ("adacons_step", ("overlap", "off")),
         ("adacons_step", ("overlap", "on")),
         ("interp_step", ("mode", "roundrobin")),
         ("interp_step", ("mode", "threaded")),
+        ("hier_step", ("overlap", "off")),
+        ("hier_step", ("overlap", "on")),
     ];
     for (op, (key, val)) in step_groups {
         let label = format!("pipelined step ({op} {key}={val})");
@@ -647,6 +759,7 @@ mod tests {
             max_case_bytes: 1 << 30,
             overlap_modes: vec![],
             interp_step: false,
+            hier_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -678,6 +791,7 @@ mod tests {
             max_case_bytes: 1000, // force the skip path
             overlap_modes: vec![false, true],
             interp_step: false,
+            hier_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -696,6 +810,7 @@ mod tests {
             max_case_bytes: 1 << 30,
             overlap_modes: vec![false, true],
             interp_step: false,
+            hier_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -720,6 +835,7 @@ mod tests {
             max_case_bytes: 1 << 30,
             overlap_modes: vec![],
             interp_step: true,
+            hier_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -737,6 +853,77 @@ mod tests {
                 assert_eq!(c.get("artifact").as_str(), Some("mlp_cls_b32"));
             }
         }
+    }
+
+    #[test]
+    fn hier_step_dimension_emits_tagged_cases() {
+        // N = 8 splits as hier:2x4; N = 2 is below the hier threshold and
+        // must emit no hier cases.
+        let cfg = SweepConfig {
+            budget_s: 0.001,
+            threads: vec![1],
+            workers: vec![2, 8],
+            dims: vec![8_192],
+            min_shard_elems: 2048,
+            max_case_bytes: 1 << 30,
+            overlap_modes: vec![false, true],
+            interp_step: false,
+            hier_step: true,
+        };
+        let doc = run_sweep(&cfg).unwrap();
+        let cases = doc.get("cases").as_arr().unwrap();
+        let hier: Vec<&Json> = cases
+            .iter()
+            .filter(|c| c.get("op").as_str() == Some("hier_step"))
+            .collect();
+        assert_eq!(hier.len(), 2, "one hier case per overlap mode");
+        for c in &hier {
+            assert_eq!(c.get("workers").as_usize(), Some(8));
+            assert_eq!(c.get("nodes").as_usize(), Some(2));
+            assert_eq!(c.get("topo").as_str(), Some("hier:2x4"));
+            assert!(c.get("mean_s").as_f64().unwrap() > 0.0);
+        }
+        let modes: Vec<&str> = hier
+            .iter()
+            .filter_map(|c| c.get("overlap").as_str())
+            .collect();
+        assert_eq!(modes, vec!["off", "on"]);
+    }
+
+    #[test]
+    fn perf_gate_covers_hier_step_cases() {
+        let dir = std::env::temp_dir().join("adacons_perf_gate_hier");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mk = |name: &str, off_s: f64, on_s: f64| -> String {
+            let path = dir.join(name);
+            let doc = format!(
+                r#"{{"bench":"aggregation","cases":[
+                    {{"op":"adacons","workers":8,"d":1000,"threads":1,"mean_s":0.010}},
+                    {{"op":"hier_step","overlap":"off","workers":8,"d":1000,"threads":1,"mean_s":{off_s}}},
+                    {{"op":"hier_step","overlap":"on","workers":8,"d":1000,"threads":1,"mean_s":{on_s}}}
+                ]}}"#
+            );
+            std::fs::write(&path, doc).unwrap();
+            path.to_str().unwrap().to_string()
+        };
+        let base = mk("base.json", 0.020, 0.018);
+        let ok = mk("ok.json", 0.024, 0.022);
+        compare_files(&base, &ok, 1.3, 1.5).unwrap();
+        // A hier-step regression beyond the step gate fails even when the
+        // kernels are fine.
+        let bad = mk("bad.json", 0.020, 0.040);
+        assert!(compare_files(&base, &bad, 1.3, 1.5).is_err());
+        // Baselines predating hier cases skip the hier groups cleanly.
+        let old = dir.join("old.json");
+        std::fs::write(
+            &old,
+            r#"{"bench":"aggregation","cases":[
+                {"op":"adacons","workers":8,"d":1000,"threads":1,"mean_s":0.010}
+            ]}"#,
+        )
+        .unwrap();
+        compare_files(old.to_str().unwrap(), &ok, 1.3, 1.5).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //!   cargo run --release --bin bench_aggregation -- --smoke --budget 0.05
 //!   cargo run --release --bin bench_aggregation -- --overlap on   # on|off|both
 //!   cargo run --release --bin bench_aggregation -- --interp-step off  # skip backend step cases
+//!   cargo run --release --bin bench_aggregation -- --hier-step off    # skip hier topology cases
 //!   cargo run --release --bin bench_aggregation -- --check BENCH_aggregation.json
 //!   cargo run --release --bin bench_aggregation -- --table BENCH_aggregation.json
 //!   cargo run --release --bin bench_aggregation -- --compare bench_history/baseline.json \
@@ -68,6 +69,13 @@ fn run() -> Result<()> {
             "on" => true,
             "off" => false,
             other => return Err(adacons::err!("--interp-step {other:?}: want on|off")),
+        };
+    }
+    if let Some(v) = args.str_opt("hier-step") {
+        cfg.hier_step = match v {
+            "on" => true,
+            "off" => false,
+            other => return Err(adacons::err!("--hier-step {other:?}: want on|off")),
         };
     }
     let out = args.str_or("out", "BENCH_aggregation.json");

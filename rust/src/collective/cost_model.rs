@@ -6,7 +6,7 @@
 //! Ring all-gather of per-rank payload b: (n-1) steps of b bytes.
 //! Broadcast (tree): ceil(log2 n) steps of B bytes.
 
-use super::topology::Topology;
+use super::topology::{NodeMap, Topology};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CollectiveKind {
@@ -83,6 +83,56 @@ impl CostModel {
     }
 }
 
+/// Two-level cost models for a hierarchical topology: `intra` prices a
+/// per-node collective (over the largest node group, on the NVLink-class
+/// link — every node runs its copy concurrently on its own link), `inter`
+/// prices leader-level collectives (one participant per node, on the
+/// inter-node fabric). `map` is the rank grouping both levels share.
+#[derive(Debug, Clone)]
+pub struct HierCostModel {
+    pub intra: CostModel,
+    pub inter: CostModel,
+    pub map: NodeMap,
+}
+
+impl HierCostModel {
+    /// `Some` for hierarchical topologies, `None` for rings (flat).
+    pub fn from_topology(t: &Topology) -> Option<HierCostModel> {
+        match t {
+            Topology::Ring { .. } => None,
+            Topology::Hierarchical {
+                nodes,
+                gpus_per_node,
+                intra_latency_s,
+                intra_bandwidth_bps,
+                inter_latency_s,
+                inter_bandwidth_bps,
+            } => Some(HierCostModel {
+                intra: CostModel {
+                    alpha_s: *intra_latency_s,
+                    bandwidth_bps: *intra_bandwidth_bps,
+                    n: *gpus_per_node,
+                },
+                inter: CostModel {
+                    alpha_s: *inter_latency_s,
+                    bandwidth_bps: *inter_bandwidth_bps,
+                    n: *nodes,
+                },
+                map: NodeMap::even(*nodes, *gpus_per_node),
+            }),
+        }
+    }
+
+    /// Re-group onto an uneven map: the intra model prices the slowest
+    /// (largest) node group, the inter model the leader count.
+    pub fn with_map(mut self, map: NodeMap) -> HierCostModel {
+        self.intra.n = map.max_group();
+        self.inter.n = map.groups();
+        self.map = map;
+        self
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -139,6 +189,26 @@ mod tests {
         let abs_slow = slow.adacons_iteration_s(d) - slow.sum_iteration_s(d);
         let abs_fast = fast.adacons_iteration_s(d) - fast.sum_iteration_s(d);
         assert!(abs_fast < abs_slow / 6.0, "{abs_fast} vs {abs_slow}");
+    }
+
+    #[test]
+    fn hier_model_splits_the_paper_testbed() {
+        let h = HierCostModel::from_topology(&Topology::paper_testbed()).unwrap();
+        assert_eq!(h.intra.n, 4);
+        assert_eq!(h.inter.n, 8);
+        assert_eq!(h.intra.bandwidth_bps, 50e9);
+        assert_eq!(h.inter.bandwidth_bps, 12.5e9);
+        assert_eq!(h.map.groups(), 8);
+        // The leader-level all-reduce is strictly cheaper than the flat
+        // 32-rank ring over the same bottleneck fabric: fewer ring steps.
+        let flat = CostModel::from_topology(&Topology::paper_testbed());
+        let d_bytes = 25_600_000 * 4;
+        assert!(h.inter.allreduce_s(d_bytes) < flat.allreduce_s(d_bytes));
+        assert!(HierCostModel::from_topology(&Topology::ring_gbps(8, 100.0)).is_none());
+        // Uneven re-grouping re-prices both levels.
+        let h2 = h.with_map(crate::collective::topology::NodeMap::from_sizes(&[5, 3]));
+        assert_eq!(h2.intra.n, 5);
+        assert_eq!(h2.inter.n, 2);
     }
 
     #[test]

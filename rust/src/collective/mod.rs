@@ -16,8 +16,8 @@ pub mod timeline;
 pub mod topology;
 
 pub use allreduce::{ring_allgather, ring_allreduce, ring_broadcast};
-pub use cost_model::{CollectiveKind, CostModel};
+pub use cost_model::{CollectiveKind, CostModel, HierCostModel};
 pub use overlap::{adacons_iteration_overlapped_s, exposed_comm_s, sum_iteration_overlapped_s};
 pub use simclock::SimClock;
-pub use timeline::StepTimeline;
-pub use topology::Topology;
+pub use timeline::{HierTimeline, StepTimeline};
+pub use topology::{NodeMap, Topology, TopologySpec};

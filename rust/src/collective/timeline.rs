@@ -69,6 +69,89 @@ impl StepTimeline {
     }
 }
 
+/// Topology-aware step schedule for a hierarchical cluster: one
+/// independent channel per node's intra-node (NVLink-class) link plus one
+/// shared inter-node fabric channel. Intra transfers on different nodes
+/// overlap freely with each other *and* with inter-node transfers — the
+/// deployment behaviour the flat single-NIC [`StepTimeline`] cannot
+/// express; causality (a leader-level transfer waiting on every node's
+/// reduction) is encoded by the caller through the `ready_s` it posts
+/// with. Completion is the max over every channel.
+#[derive(Debug, Clone)]
+pub struct HierTimeline {
+    intra: Vec<StepTimeline>,
+    inter: StepTimeline,
+}
+
+impl HierTimeline {
+    /// A fresh schedule with `nodes` intra channels, all free from
+    /// `start_s`.
+    pub fn new(start_s: f64, nodes: usize) -> Self {
+        assert!(nodes > 0, "hierarchical timeline needs at least one node");
+        HierTimeline {
+            intra: vec![StepTimeline::new(start_s); nodes],
+            inter: StepTimeline::new(start_s),
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.intra.len()
+    }
+
+    /// Post a transfer on node `k`'s intra link; returns its completion.
+    pub fn post_intra(&mut self, node: usize, ready_s: f64, dur_s: f64) -> f64 {
+        self.intra[node].post(ready_s, dur_s)
+    }
+
+    /// Post a transfer on the shared inter-node fabric.
+    pub fn post_inter(&mut self, ready_s: f64, dur_s: f64) -> f64 {
+        self.inter.post(ready_s, dur_s)
+    }
+
+    /// Completion of the slowest intra channel.
+    pub fn intra_done_s(&self) -> f64 {
+        self.intra
+            .iter()
+            .map(|t| t.done_s())
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn inter_done_s(&self) -> f64 {
+        self.inter.done_s()
+    }
+
+    /// Completion of the whole schedule (every channel drained).
+    pub fn done_s(&self) -> f64 {
+        self.intra_done_s().max(self.inter_done_s())
+    }
+
+    /// Total exposed communication past `compute_end_s`.
+    pub fn exposed_s(&self, compute_end_s: f64) -> f64 {
+        (self.done_s() - compute_end_s).max(0.0)
+    }
+
+    /// Exposed time attributable to the intra-node links: the schedule
+    /// tail the intra channels add **beyond** the inter fabric's
+    /// completion (the result fan-out). Critical-path attribution, so
+    /// `exposed_intra_s + exposed_inter_s == exposed_s` — waiting that
+    /// inter ops do on earlier intra reduces is charged to the inter
+    /// phase, which is what paces it.
+    pub fn exposed_intra_s(&self, compute_end_s: f64) -> f64 {
+        (self.intra_done_s() - compute_end_s.max(self.inter.done_s())).max(0.0)
+    }
+
+    /// Exposed time attributable to the inter-node fabric (completion of
+    /// the leader-level schedule past backward end).
+    pub fn exposed_inter_s(&self, compute_end_s: f64) -> f64 {
+        (self.inter.done_s() - compute_end_s).max(0.0)
+    }
+
+    /// Synchronous completion barrier over every channel.
+    pub fn commit(&self, clock: &mut SimClock) -> f64 {
+        clock.align(self.done_s())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,6 +211,49 @@ mod tests {
         for r in 0..3 {
             assert_eq!(clock.rank_time(r), 3.5);
         }
+    }
+
+    #[test]
+    fn hier_channels_overlap_independently() {
+        let mut tl = HierTimeline::new(0.0, 2);
+        // Both nodes reduce concurrently on their own links...
+        assert_eq!(tl.post_intra(0, 1.0, 0.5), 1.5);
+        assert_eq!(tl.post_intra(1, 1.0, 0.5), 1.5);
+        // ...and the leader-level transfer starts as soon as both are done
+        // — not after their serialized sum (the single-NIC model's answer).
+        assert_eq!(tl.post_inter(1.5, 1.0), 2.5);
+        assert_eq!(tl.done_s(), 2.5);
+        assert_eq!(tl.intra_done_s(), 1.5);
+        assert_eq!(tl.inter_done_s(), 2.5);
+        assert_eq!(tl.exposed_s(2.0), 0.5);
+        assert_eq!(tl.exposed_inter_s(2.0), 0.5);
+        assert_eq!(tl.exposed_intra_s(2.0), 0.0);
+        // A fan-out posted after the inter phase becomes an intra tail;
+        // the critical-path split stays additive: intra + inter == total.
+        tl.post_intra(0, 2.5, 0.25);
+        tl.post_intra(1, 2.5, 0.25);
+        assert_eq!(tl.exposed_s(2.0), 0.75);
+        assert_eq!(tl.exposed_inter_s(2.0), 0.5);
+        assert_eq!(tl.exposed_intra_s(2.0), 0.25);
+        // The same ops on one NIC serialize: strictly later completion.
+        let mut flat = StepTimeline::new(0.0);
+        flat.post(1.0, 0.5);
+        flat.post(1.0, 0.5);
+        flat.post(flat.done_s(), 1.0);
+        assert!(flat.done_s() > tl.done_s());
+    }
+
+    #[test]
+    fn hier_intra_serializes_within_one_node() {
+        let mut tl = HierTimeline::new(0.0, 3);
+        assert_eq!(tl.post_intra(1, 0.0, 1.0), 1.0);
+        assert_eq!(tl.post_intra(1, 0.0, 1.0), 2.0); // same link: queues
+        assert_eq!(tl.post_intra(0, 0.0, 1.0), 1.0); // other link: free
+        assert_eq!(tl.intra_done_s(), 2.0);
+        let mut clock = SimClock::new(2);
+        let done = tl.commit(&mut clock);
+        assert_eq!(done, 2.0);
+        assert_eq!(clock.now(), 2.0);
     }
 
     #[test]

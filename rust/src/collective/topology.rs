@@ -1,4 +1,9 @@
-//! Cluster topologies for the communication simulator.
+//! Cluster topologies for the communication simulator, plus the
+//! rank-to-node grouping ([`NodeMap`]) and the config-facing topology
+//! spec (`--topology flat|hier:<nodes>x<gpus>`) the hierarchical
+//! aggregation subsystem is built on.
+
+use crate::util::error::{bail, Result};
 
 /// A communication topology over `n` ranks.
 ///
@@ -87,6 +92,168 @@ impl Topology {
     }
 }
 
+/// Contiguous assignment of ranks to nodes — the grouping the two-level
+/// hierarchical aggregation scheme (`aggregation::hierarchy`) reduces
+/// over. Node `k` owns the rank range `[bounds[k], bounds[k+1])`;
+/// contiguity is load-bearing: the per-node leader reduction sums the
+/// group's rows in global rank order, so a per-node copy of the rows
+/// (local indices `0..size(k)`) is bitwise-equivalent to the full-matrix
+/// view. Groups may be uneven ([`NodeMap::from_sizes`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodeMap {
+    bounds: Vec<usize>, // len = groups + 1; bounds[0] = 0, last = n_ranks
+}
+
+impl NodeMap {
+    /// `nodes` groups of `gpus_per_node` ranks each.
+    pub fn even(nodes: usize, gpus_per_node: usize) -> NodeMap {
+        assert!(nodes > 0 && gpus_per_node > 0, "empty node map");
+        NodeMap {
+            bounds: (0..=nodes).map(|k| k * gpus_per_node).collect(),
+        }
+    }
+
+    /// Uneven groups from explicit per-node rank counts.
+    pub fn from_sizes(sizes: &[usize]) -> NodeMap {
+        assert!(!sizes.is_empty(), "empty node map");
+        let mut bounds = vec![0usize];
+        let mut acc = 0usize;
+        for &s in sizes {
+            assert!(s > 0, "node group of zero ranks");
+            acc += s;
+            bounds.push(acc);
+        }
+        NodeMap { bounds }
+    }
+
+    /// The grouping a topology implies: hierarchical shapes map directly;
+    /// a ring is every rank its own (degenerate) node.
+    pub fn from_topology(t: &Topology) -> NodeMap {
+        match t {
+            Topology::Ring { n, .. } => NodeMap::even(*n, 1),
+            Topology::Hierarchical {
+                nodes,
+                gpus_per_node,
+                ..
+            } => NodeMap::even(*nodes, *gpus_per_node),
+        }
+    }
+
+    pub fn groups(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        *self.bounds.last().unwrap()
+    }
+
+    /// Node `k`'s rank range `(lo, hi)`.
+    pub fn range(&self, k: usize) -> (usize, usize) {
+        (self.bounds[k], self.bounds[k + 1])
+    }
+
+    pub fn size(&self, k: usize) -> usize {
+        self.bounds[k + 1] - self.bounds[k]
+    }
+
+    pub fn max_group(&self) -> usize {
+        (0..self.groups()).map(|k| self.size(k)).max().unwrap_or(0)
+    }
+
+    /// `(node, local index within the node)` of a rank.
+    pub fn locate(&self, rank: usize) -> (usize, usize) {
+        assert!(rank < self.n_ranks(), "rank {rank} out of the node map");
+        let k = self.bounds.partition_point(|&b| b <= rank) - 1;
+        (k, rank - self.bounds[k])
+    }
+
+    /// Iterate the `(lo, hi)` rank range of every node.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        (0..self.groups()).map(|k| self.range(k))
+    }
+
+    /// A degenerate hierarchy — one node, or one rank per node — has no
+    /// meaningful two-level split: the hierarchical aggregator delegates
+    /// straight to its flat base scheme (bitwise-identical to flat).
+    pub fn is_degenerate(&self) -> bool {
+        self.groups() <= 1 || self.groups() == self.n_ranks()
+    }
+}
+
+/// The config/CLI topology surface: `flat` (one homogeneous ring, the
+/// historical behaviour) or `hier:<nodes>x<gpus>` (the paper's testbed
+/// shape: NVLink-class intra-node links joined by the `--fabric-gbps`
+/// inter-node fabric, two-level aggregation enabled).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopologySpec {
+    Flat,
+    Hier { nodes: usize, gpus: usize },
+}
+
+impl TopologySpec {
+    /// Parse `flat` or `hier:<nodes>x<gpus>` (e.g. `hier:8x4`).
+    pub fn parse(s: &str) -> Option<TopologySpec> {
+        if s == "flat" {
+            return Some(TopologySpec::Flat);
+        }
+        let rest = s.strip_prefix("hier:")?;
+        let (a, b) = rest.split_once('x')?;
+        let nodes: usize = a.parse().ok()?;
+        let gpus: usize = b.parse().ok()?;
+        if nodes == 0 || gpus == 0 {
+            return None;
+        }
+        Some(TopologySpec::Hier { nodes, gpus })
+    }
+
+    pub fn describe(&self) -> String {
+        match self {
+            TopologySpec::Flat => "flat".to_string(),
+            TopologySpec::Hier { nodes, gpus } => format!("hier:{nodes}x{gpus}"),
+        }
+    }
+
+    /// The node grouping this spec implies (`None` for flat).
+    pub fn node_map(&self) -> Option<NodeMap> {
+        match self {
+            TopologySpec::Flat => None,
+            TopologySpec::Hier { nodes, gpus } => Some(NodeMap::even(*nodes, *gpus)),
+        }
+    }
+
+    /// Shape-vs-workers consistency (the config validation hook).
+    pub fn check_workers(&self, workers: usize) -> Result<()> {
+        if let TopologySpec::Hier { nodes, gpus } = self {
+            if nodes * gpus != workers {
+                bail!(
+                    "topology {} needs {} ranks but workers = {workers}",
+                    self.describe(),
+                    nodes * gpus
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// The simulated fabric this spec stands for. Flat: a homogeneous
+    /// ring at `fabric_gbps`. Hier: NVLink-class intra-node links (the
+    /// paper testbed's constants) joined by a `fabric_gbps` inter-node
+    /// fabric.
+    pub fn build(&self, workers: usize, fabric_gbps: f64) -> Topology {
+        match self {
+            TopologySpec::Flat => Topology::ring_gbps(workers, fabric_gbps),
+            TopologySpec::Hier { nodes, gpus } => Topology::Hierarchical {
+                nodes: *nodes,
+                gpus_per_node: *gpus,
+                intra_latency_s: 2e-6,
+                intra_bandwidth_bps: 50e9,
+                inter_latency_s: 5e-6,
+                inter_bandwidth_bps: fabric_gbps * 1e9 / 8.0,
+            },
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -123,5 +290,73 @@ mod tests {
         let t = Topology::ring_gbps(4, 800.0);
         let (_, bw) = t.bottleneck_link();
         assert!((bw - 100e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn node_map_even_and_uneven_shapes() {
+        let even = NodeMap::even(3, 4);
+        assert_eq!(even.groups(), 3);
+        assert_eq!(even.n_ranks(), 12);
+        assert_eq!(even.range(1), (4, 8));
+        assert_eq!(even.max_group(), 4);
+        assert!(!even.is_degenerate());
+        let uneven = NodeMap::from_sizes(&[3, 2, 1]);
+        assert_eq!(uneven.groups(), 3);
+        assert_eq!(uneven.n_ranks(), 6);
+        assert_eq!(uneven.range(0), (0, 3));
+        assert_eq!(uneven.range(2), (5, 6));
+        assert_eq!(uneven.max_group(), 3);
+        let ranges: Vec<_> = uneven.iter().collect();
+        assert_eq!(ranges, vec![(0, 3), (3, 5), (5, 6)]);
+    }
+
+    #[test]
+    fn node_map_locate_inverts_ranges() {
+        let m = NodeMap::from_sizes(&[2, 3, 1]);
+        let expect = [(0, 0), (0, 1), (1, 0), (1, 1), (1, 2), (2, 0)];
+        for (rank, &e) in expect.iter().enumerate() {
+            assert_eq!(m.locate(rank), e, "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn degenerate_maps_are_flagged() {
+        assert!(NodeMap::even(1, 8).is_degenerate()); // one node
+        assert!(NodeMap::even(8, 1).is_degenerate()); // one rank per node
+        assert!(!NodeMap::even(2, 2).is_degenerate());
+        assert!(NodeMap::from_topology(&Topology::ring_gbps(4, 100.0)).is_degenerate());
+        let m = NodeMap::from_topology(&Topology::paper_testbed());
+        assert_eq!((m.groups(), m.n_ranks()), (8, 32));
+        assert!(!m.is_degenerate());
+    }
+
+    #[test]
+    fn topology_spec_parses_and_validates() {
+        assert_eq!(TopologySpec::parse("flat"), Some(TopologySpec::Flat));
+        assert_eq!(
+            TopologySpec::parse("hier:8x4"),
+            Some(TopologySpec::Hier { nodes: 8, gpus: 4 })
+        );
+        assert!(TopologySpec::parse("hier:0x4").is_none());
+        assert!(TopologySpec::parse("hier:8").is_none());
+        assert!(TopologySpec::parse("mesh").is_none());
+        let spec = TopologySpec::Hier { nodes: 2, gpus: 3 };
+        assert_eq!(spec.describe(), "hier:2x3");
+        spec.check_workers(6).unwrap();
+        assert!(spec.check_workers(8).is_err());
+        assert_eq!(spec.node_map().unwrap(), NodeMap::even(2, 3));
+        assert!(TopologySpec::Flat.node_map().is_none());
+        TopologySpec::Flat.check_workers(5).unwrap();
+    }
+
+    #[test]
+    fn spec_builds_matching_topologies() {
+        let flat = TopologySpec::Flat.build(8, 100.0);
+        assert_eq!(flat, Topology::ring_gbps(8, 100.0));
+        let hier = TopologySpec::Hier { nodes: 8, gpus: 4 }.build(32, 100.0);
+        assert_eq!(hier.n_ranks(), 32);
+        let (lat, bw) = hier.bottleneck_link();
+        assert_eq!(lat, 5e-6);
+        assert_eq!(bw, 12.5e9);
     }
 }

@@ -22,6 +22,7 @@
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
+use crate::collective::NodeMap;
 use crate::tensor::{Buckets, GradSet};
 use crate::util::error::Result;
 use crate::{bail, ensure, err};
@@ -66,11 +67,15 @@ pub enum RankMsg {
         bucket: usize,
         cols: Vec<f32>,
     },
-    /// The rank finished its backward for this step.
+    /// The rank finished its backward for this step. `bucket_s[b]` is the
+    /// on-thread compute seconds at which bucket `b`'s gradient was final
+    /// (empty when the rank does not measure per-bucket readiness) — the
+    /// observed arrival times the hierarchical timeline consumes.
     Done {
         rank: usize,
         loss: f64,
         compute_s: f64,
+        bucket_s: Vec<f64>,
     },
     /// The rank died (panic, compute error) — emitted by its port's
     /// guard so the leader errors instead of hanging.
@@ -79,11 +84,14 @@ pub enum RankMsg {
 
 /// Per-rank completion report delivered with [`RankMsg::Done`]: the local
 /// loss and the wall compute seconds measured **on the rank thread**
-/// (fed to the `SimClock` by the coordinator).
-#[derive(Debug, Clone, Copy, Default)]
+/// (fed to the `SimClock` by the coordinator), plus the observed
+/// per-bucket completion offsets (empty when not measured — the
+/// round-robin producer path and legacy [`RankPort::done`] senders).
+#[derive(Debug, Clone, Default)]
 pub struct RankReport {
     pub loss: f64,
     pub compute_s: f64,
+    pub bucket_s: Vec<f64>,
 }
 
 /// A rank thread's handle on the exchange: the only sender for its
@@ -93,6 +101,8 @@ pub struct RankReport {
 /// what happens when a rank thread unwinds from a panic.
 pub struct RankPort {
     rank: usize,
+    /// The node group this rank belongs to (0 on ungrouped exchanges).
+    node: usize,
     tx: Sender<RankMsg>,
     result_rx: Receiver<Arc<Vec<f32>>>,
     armed: bool,
@@ -101,6 +111,12 @@ pub struct RankPort {
 impl RankPort {
     pub fn rank(&self) -> usize {
         self.rank
+    }
+
+    /// The node group this rank belongs to (per the exchange's
+    /// [`NodeMap`]; 0 on ungrouped exchanges).
+    pub fn node(&self) -> usize {
+        self.node
     }
 
     /// Send one bucket's columns as soon as it is ready. A send to a
@@ -126,10 +142,20 @@ impl RankPort {
     /// Mark this step's backward complete, reporting the local loss and
     /// the compute seconds measured on this thread.
     pub fn done(&self, loss: f64, compute_s: f64) {
+        self.done_timed(loss, compute_s, Vec::new());
+    }
+
+    /// Like [`RankPort::done`], additionally carrying the observed
+    /// on-thread completion offset of every bucket (`bucket_s[b]` seconds
+    /// into this rank's backward) — the measured readiness the
+    /// topology-aware timeline uses instead of the uniform-emission
+    /// model.
+    pub fn done_timed(&self, loss: f64, compute_s: f64, bucket_s: Vec<f64>) {
         let _ = self.tx.send(RankMsg::Done {
             rank: self.rank,
             loss,
             compute_s,
+            bucket_s,
         });
     }
 
@@ -175,9 +201,18 @@ impl Drop for RankPort {
 }
 
 /// The leader's half of a step exchange: drain every rank's bucket
-/// messages in arrival order, broadcast the aggregated result.
+/// messages in arrival order, broadcast the aggregated result. A grouped
+/// exchange ([`StepExchange::new_grouped`]) additionally knows the node
+/// hierarchy: ports are node-tagged, and
+/// [`StepExchange::leader_ingest_nodes`] surfaces **node-level bucket
+/// completion** (the moment a bucket completes within one node's rank
+/// group) for callers that drive the exchange directly. The pipelined
+/// executor tracks the same per-group completion in its arrival sink —
+/// one implementation shared with the producer-fed path, which has no
+/// exchange to lean on.
 pub struct StepExchange {
     n: usize,
+    map: Option<NodeMap>,
     msgs_in: Mailbox<RankMsg>,
     results_out: Vec<Sender<Arc<Vec<f32>>>>,
 }
@@ -187,6 +222,20 @@ impl StepExchange {
     /// into its rank thread). The exchange keeps no sender of its own,
     /// so rank death is always observable on the leader side.
     pub fn new(n: usize) -> (StepExchange, Vec<RankPort>) {
+        Self::build(n, None)
+    }
+
+    /// Grouped construction: rank threads are grouped per node (`map`),
+    /// each port tagged with its node id. Port count == `map.n_ranks()`
+    /// by construction — the consistency the hierarchy tests pin down.
+    pub fn new_grouped(map: &NodeMap) -> (StepExchange, Vec<RankPort>) {
+        Self::build(map.n_ranks(), Some(map.clone()))
+    }
+
+    fn build(n: usize, map: Option<NodeMap>) -> (StepExchange, Vec<RankPort>) {
+        if let Some(m) = &map {
+            assert_eq!(m.n_ranks(), n, "node map does not cover every rank");
+        }
         let (msg_tx, msgs_in) = Mailbox::channel();
         let mut results_out = Vec::with_capacity(n);
         let mut ports = Vec::with_capacity(n);
@@ -195,6 +244,7 @@ impl StepExchange {
             results_out.push(tx);
             ports.push(RankPort {
                 rank,
+                node: map.as_ref().map(|m| m.locate(rank).0).unwrap_or(0),
                 tx: msg_tx.clone(),
                 result_rx: rx,
                 armed: true,
@@ -203,6 +253,7 @@ impl StepExchange {
         (
             StepExchange {
                 n,
+                map,
                 msgs_in,
                 results_out,
             },
@@ -212,6 +263,11 @@ impl StepExchange {
 
     pub fn n(&self) -> usize {
         self.n
+    }
+
+    /// The node grouping of a grouped exchange.
+    pub fn map(&self) -> Option<&NodeMap> {
+        self.map.as_ref()
     }
 
     /// Drain one step's messages **in arrival order**, invoking
@@ -259,6 +315,7 @@ impl StepExchange {
                     rank,
                     loss,
                     compute_s,
+                    bucket_s,
                 } => {
                     ensure!(expect_done, "unexpected done message from rank {rank}");
                     ensure!(rank < self.n, "done message from unknown rank {rank}");
@@ -266,7 +323,11 @@ impl StepExchange {
                         reports[rank].is_none(),
                         "duplicate done message from rank {rank}"
                     );
-                    reports[rank] = Some(RankReport { loss, compute_s });
+                    reports[rank] = Some(RankReport {
+                        loss,
+                        compute_s,
+                        bucket_s,
+                    });
                     remaining_done -= 1;
                 }
                 RankMsg::Down { rank, reason } => {
@@ -281,6 +342,38 @@ impl StepExchange {
                 .collect()
         } else {
             Vec::new()
+        })
+    }
+
+    /// Node-level ingest on a grouped exchange: like
+    /// [`StepExchange::leader_ingest`], but additionally fires
+    /// `on_node_bucket(node, bucket)` at the arrival that completes the
+    /// bucket **within that node's rank group** — the node-completion
+    /// edge the hierarchical ingest is built around, exposed here for
+    /// direct exchange drivers and the grouped-team tests (the pipelined
+    /// executor computes the same edge in its source-agnostic sink).
+    pub fn leader_ingest_nodes(
+        &self,
+        buckets: &Buckets,
+        expect_done: bool,
+        on_bucket: &mut dyn FnMut(usize, usize, Vec<f32>),
+        on_node_bucket: &mut dyn FnMut(usize, usize),
+    ) -> Result<Vec<RankReport>> {
+        let map = self
+            .map
+            .as_ref()
+            .ok_or_else(|| err!("node-level ingest needs a grouped exchange"))?;
+        let nb = buckets.len();
+        let g = map.groups();
+        let mut counts = vec![0usize; g * nb];
+        self.leader_ingest(buckets, expect_done, &mut |rank, b, cols| {
+            let (k, _) = map.locate(rank);
+            counts[k * nb + b] += 1;
+            let node_complete = counts[k * nb + b] == map.size(k);
+            on_bucket(rank, b, cols);
+            if node_complete {
+                on_node_bucket(k, b);
+            }
         })
     }
 
@@ -451,6 +544,69 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn grouped_exchange_ports_match_the_node_map() {
+        // n_ranks consistency between NodeMap and StepExchange port count
+        // (uneven groups included), and every port knows its node.
+        let map = NodeMap::from_sizes(&[3, 2, 1]);
+        let (ex, ports) = StepExchange::new_grouped(&map);
+        assert_eq!(ex.n(), map.n_ranks());
+        assert_eq!(ports.len(), map.n_ranks());
+        assert_eq!(ex.map(), Some(&map));
+        for port in &ports {
+            assert_eq!(port.node(), map.locate(port.rank()).0);
+        }
+        // Ungrouped exchanges have no map and node 0 everywhere.
+        let (ex, ports) = StepExchange::new(3);
+        assert!(ex.map().is_none());
+        assert!(ports.iter().all(|p| p.node() == 0));
+    }
+
+    #[test]
+    fn node_level_ingest_fires_on_group_completion() {
+        let map = NodeMap::from_sizes(&[2, 1]);
+        let (ex, ports) = StepExchange::new_grouped(&map);
+        let buckets = Buckets::fixed(4, 2); // 2 buckets
+        let mut handles = Vec::new();
+        for port in ports {
+            handles.push(std::thread::spawn(move || {
+                let rank = port.rank();
+                port.submit_bucket(0, vec![rank as f32; 2]);
+                port.submit_bucket(1, vec![rank as f32; 2]);
+                port.done_timed(0.0, 0.01, vec![0.004, 0.008]);
+                port.complete();
+            }));
+        }
+        let mut node_events = Vec::new();
+        let mut arrivals = 0usize;
+        let reports = ex
+            .leader_ingest_nodes(
+                &buckets,
+                true,
+                &mut |_, _, _| arrivals += 1,
+                &mut |node, b| node_events.push((node, b)),
+            )
+            .unwrap();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(arrivals, 6);
+        // Every (node, bucket) pair completes exactly once.
+        node_events.sort_unstable();
+        assert_eq!(node_events, vec![(0, 0), (0, 1), (1, 0), (1, 1)]);
+        // Observed per-bucket readiness rides the Done reports.
+        assert_eq!(reports.len(), 3);
+        for r in &reports {
+            assert_eq!(r.bucket_s, vec![0.004, 0.008]);
+        }
+        // Node-level ingest on an ungrouped exchange is a clean error.
+        let (ex, ports) = StepExchange::new(1);
+        drop(ports);
+        assert!(ex
+            .leader_ingest_nodes(&buckets, false, &mut |_, _, _| {}, &mut |_, _| {})
+            .is_err());
     }
 
     #[test]

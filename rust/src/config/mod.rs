@@ -4,6 +4,7 @@
 //! any paper run can be reproduced from the command line:
 //! `adacons train --config cfg.json --workers 8 --aggregator adacons`.
 
+use crate::collective::TopologySpec;
 use crate::data::GradInjector;
 use crate::optim::Schedule;
 use crate::parallel::ParallelPolicy;
@@ -45,6 +46,13 @@ pub struct TrainConfig {
     pub injectors: Vec<(usize, GradInjector)>,
     /// Simulated fabric speed for the comm cost model (Gb/s).
     pub fabric_gbps: f64,
+    /// Cluster topology (`--topology flat|hier:<nodes>x<gpus>`). `flat`
+    /// is the historical single-ring path. `hier` groups the workers
+    /// into nodes: gradients are mean-reduced intra-node (NVLink-class
+    /// links) and the configured aggregator runs across node leaders
+    /// only, with the step's comm charged to the two-level timeline
+    /// (`nodes * gpus` must equal `workers`).
+    pub topology: TopologySpec,
     pub log_every: usize,
     /// Optional JSONL step-log path.
     pub jsonl: Option<String>,
@@ -90,6 +98,7 @@ impl Default for TrainConfig {
             heterogeneity: 0.0,
             injectors: Vec::new(),
             fabric_gbps: 100.0,
+            topology: TopologySpec::Flat,
             log_every: 0,
             jsonl: None,
             parallel: ParallelPolicy::default(),
@@ -136,6 +145,12 @@ impl TrainConfig {
                 "bucket_cap" => cfg.bucket_cap = v.as_usize(),
                 "heterogeneity" => cfg.heterogeneity = v.as_f64().context("heterogeneity")?,
                 "fabric_gbps" => cfg.fabric_gbps = v.as_f64().context("fabric_gbps")?,
+                "topology" => {
+                    let s = v.as_str().context("topology")?;
+                    cfg.topology = TopologySpec::parse(s).with_context(|| {
+                        format!("topology {s:?}: want flat|hier:<nodes>x<gpus>")
+                    })?;
+                }
                 "log_every" => cfg.log_every = v.as_usize().context("log_every")?,
                 "jsonl" => cfg.jsonl = Some(v.as_str().context("jsonl")?.into()),
                 "par_threads" => cfg.parallel.threads = v.as_usize().context("par_threads")?,
@@ -218,6 +233,10 @@ impl TrainConfig {
         }
         self.heterogeneity = args.f64_or("heterogeneity", self.heterogeneity)?;
         self.fabric_gbps = args.f64_or("fabric-gbps", self.fabric_gbps)?;
+        if let Some(s) = args.str_opt("topology") {
+            self.topology = TopologySpec::parse(s)
+                .with_context(|| format!("--topology {s:?}: want flat|hier:<nodes>x<gpus>"))?;
+        }
         self.log_every = args.usize_or("log-every", self.log_every)?;
         self.parallel.threads = args.usize_or("par-threads", self.parallel.threads)?;
         self.parallel.min_shard_elems =
@@ -268,6 +287,7 @@ impl TrainConfig {
         if self.parallel.threads > 1024 {
             bail!("par_threads {} is implausible (max 1024)", self.parallel.threads);
         }
+        self.topology.check_workers(self.workers)?;
         Ok(())
     }
 
@@ -379,6 +399,37 @@ mod tests {
         );
         cfg.apply_args(&args).unwrap();
         assert!(!cfg.rank_threads);
+    }
+
+    #[test]
+    fn topology_knob_from_json_and_cli() {
+        assert_eq!(TrainConfig::default().topology, TopologySpec::Flat);
+        let j = Json::parse(r#"{"workers":8,"topology":"hier:2x4"}"#).unwrap();
+        assert_eq!(
+            TrainConfig::from_json(&j).unwrap().topology,
+            TopologySpec::Hier { nodes: 2, gpus: 4 }
+        );
+        // Shape must match the worker count.
+        let j = Json::parse(r#"{"workers":6,"topology":"hier:2x4"}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"topology":"mesh"}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err());
+        let mut cfg = TrainConfig::default();
+        cfg.workers = 32;
+        let args = Args::parse(
+            "--topology hier:8x4".split_whitespace().map(String::from),
+            &[],
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.topology, TopologySpec::Hier { nodes: 8, gpus: 4 });
+        let args = Args::parse("--topology flat".split_whitespace().map(String::from), &[]);
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.topology, TopologySpec::Flat);
+        let args = Args::parse(
+            "--topology hier:3x3".split_whitespace().map(String::from),
+            &[],
+        );
+        assert!(cfg.apply_args(&args).is_err()); // 9 != 32
     }
 
     #[test]

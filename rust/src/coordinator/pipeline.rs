@@ -26,12 +26,12 @@
 //! [`TaskScope::submit`]: crate::parallel::TaskScope::submit
 //! [`comm::StepExchange`]: crate::comm::StepExchange
 
-use crate::aggregation::{AggInfo, Aggregator, BucketWork};
-use crate::collective::{CostModel, SimClock, StepTimeline};
+use crate::aggregation::{AggInfo, Aggregator, BucketWork, CommScope};
+use crate::collective::{CostModel, HierCostModel, HierTimeline, NodeMap, SimClock, StepTimeline};
 use crate::comm::StepExchange;
 use crate::parallel::ParallelCtx;
 use crate::tensor::{BucketTracker, Buckets, GradSet};
-use crate::util::error::Result;
+use crate::util::error::{ensure, Result};
 
 /// Per-rank gradient production: compute rank `rank`'s local gradient and
 /// deliver it through `deliver(bucket, columns)` in bucket order; return
@@ -60,6 +60,13 @@ pub struct StepOutcome {
     /// The unpipelined accounting for the same ops: the sum of every
     /// transfer's duration (== `exposed_comm_s` when overlap is off).
     pub serial_comm_s: f64,
+    /// Exposed communication attributable to intra-node (NVLink-class)
+    /// links under the hierarchical timeline; 0 on flat topologies.
+    pub exposed_intra_comm_s: f64,
+    /// Exposed communication attributable to the inter-node fabric (==
+    /// `exposed_comm_s` on flat topologies, where the single modeled NIC
+    /// plays the inter-node bottleneck).
+    pub exposed_inter_comm_s: f64,
     /// Per-rank wall compute seconds this step — measured on the rank
     /// thread in exchange mode — as charged to the `SimClock`.
     pub rank_compute_s: Vec<f64>,
@@ -67,21 +74,59 @@ pub struct StepOutcome {
 
 /// The reusable per-run state of the pipelined step loop: bucket arrival
 /// bookkeeping plus one `(N, bucket_width)` assembly buffer per bucket
-/// (the "per-bucket sends"), allocated once and reused every step.
+/// (the "per-bucket sends"), allocated once and reused every step. On a
+/// hierarchical topology ([`PipelinedExecutor::with_topology`]) the
+/// per-bucket stores are partitioned per node group instead, so each
+/// node's intra reduction can start — as its own pool task — the moment
+/// that group's ranks complete the bucket, and the step's simulated time
+/// is charged through the two-level [`HierTimeline`].
 pub struct PipelinedExecutor {
     buckets: Buckets,
     overlap: bool,
     tracker: BucketTracker,
+    /// Per-bucket `(N, width)` stores — the flat overlap path.
     assembly: Vec<GradSet>,
+    /// Per-bucket, per-node `(group_size, width)` stores — the grouped
+    /// overlap path (`map` is `Some`).
+    node_assembly: Vec<Vec<GradSet>>,
+    /// Per-(bucket, node) arrival counts, flattened `b * groups + k`.
+    node_counts: Vec<usize>,
+    /// Non-degenerate node grouping: overlap-mode ingest runs per node
+    /// group (requires a matching hierarchical aggregator).
+    map: Option<NodeMap>,
+    /// Topology-aware accounting: scoped ops priced on the intra/inter
+    /// models and scheduled on the two-level timeline.
+    hier_cost: Option<HierCostModel>,
     n: usize,
 }
 
 impl PipelinedExecutor {
     pub fn new(n_ranks: usize, buckets: Buckets, overlap: bool) -> Self {
-        // The per-bucket stores are a second full (N, d) matrix; the
-        // overlap-off path never touches them, so only pay for them when
-        // pipelining is actually on.
-        let assembly = if overlap {
+        Self::with_topology(n_ranks, buckets, overlap, None, None)
+    }
+
+    /// Hierarchical construction. `map` (when non-degenerate) switches
+    /// the overlap-mode ingest to per-node-group tasks; `hier_cost`
+    /// switches the simulated-time accounting to the two-level timeline.
+    /// A degenerate map (one node, or one rank per node) is dropped —
+    /// the flat path is bitwise-identical there and the hierarchical
+    /// aggregator delegates anyway.
+    pub fn with_topology(
+        n_ranks: usize,
+        buckets: Buckets,
+        overlap: bool,
+        map: Option<NodeMap>,
+        hier_cost: Option<HierCostModel>,
+    ) -> Self {
+        if let Some(m) = &map {
+            assert_eq!(m.n_ranks(), n_ranks, "node map does not cover every rank");
+        }
+        let map = map.filter(|m| !m.is_degenerate());
+        // The per-bucket stores are a second full (N, d) matrix (whole in
+        // the flat path, partitioned per node group in the grouped one);
+        // the overlap-off path never touches them, so only pay for them
+        // when pipelining is actually on.
+        let assembly = if overlap && map.is_none() {
             buckets
                 .iter()
                 .map(|(lo, hi)| GradSet::zeros(n_ranks, hi - lo))
@@ -89,12 +134,29 @@ impl PipelinedExecutor {
         } else {
             Vec::new()
         };
+        let node_assembly = match (&map, overlap) {
+            (Some(m), true) => buckets
+                .iter()
+                .map(|(lo, hi)| {
+                    m.iter()
+                        .map(|(r0, r1)| GradSet::zeros(r1 - r0, hi - lo))
+                        .collect()
+                })
+                .collect(),
+            _ => Vec::new(),
+        };
+        let node_counts =
+            vec![0usize; buckets.len() * map.as_ref().map(|m| m.groups()).unwrap_or(0)];
         let tracker = BucketTracker::new(buckets.len(), n_ranks);
         PipelinedExecutor {
             buckets,
             overlap,
             tracker,
             assembly,
+            node_assembly,
+            node_counts,
+            map,
+            hier_cost,
             n: n_ranks,
         }
     }
@@ -168,90 +230,31 @@ impl PipelinedExecutor {
         let start_s: Vec<f64> = (0..n).map(|r| clock.rank_time(r)).collect();
         let mut loss_sum = 0.0f64;
         let mut compute_s = vec![0.0f64; n];
+        // Observed per-rank bucket completion offsets (exchange mode; the
+        // producer path and legacy senders leave this empty).
+        let mut bucket_obs: Vec<Vec<f64>> = Vec::new();
 
         let info = if self.overlap {
-            self.tracker.reset();
-            let buckets = &self.buckets;
-            let tracker = &mut self.tracker;
-            let assembly = &mut self.assembly;
-            // Ingest tasks run on pool workers, so their kernels must not
-            // fan out again (a nested barrier would deadlock the pool);
-            // one lane with the same min_shard_elems keeps the shard plan
-            // — and the result bits — identical.
-            let ictx = ParallelCtx::new(ctx.intra_task_policy());
-            let agg_ref: &dyn Aggregator = &*agg;
-            let scope_result = ctx.task_scope(|scope| -> Result<Vec<BucketWork>> {
-                let ictx_ref = &ictx;
-                let mut handles: Vec<_> = (0..nb).map(|_| None).collect();
-                {
-                    let handles = &mut handles;
-                    let grads = &mut *grads;
-                    // One arrival sink for both sources: copy the bucket
-                    // into the full assembly and the per-bucket store;
-                    // when the arrival completes the bucket, hand its
-                    // stats work to the pool and keep receiving later
-                    // buckets.
-                    let mut sink = |rank: usize, b: usize, cols: &[f32]| {
-                        let (lo, hi) = buckets.range(b);
-                        grads.row_mut(rank)[lo..hi].copy_from_slice(cols);
-                        assembly[b].set_row(rank, cols);
-                        if tracker.arrive(b) {
-                            let view =
-                                std::mem::replace(&mut assembly[b], GradSet::zeros(0, 0));
-                            handles[b] = Some(scope.submit(move || {
-                                let w = agg_ref.ingest_bucket(b, &view, 0, view.d(), ictx_ref);
-                                (w, view)
-                            }));
-                        }
-                    };
-                    match source {
-                        Arrivals::Producer(produce) => {
-                            for rank in 0..n {
-                                let mut deliver =
-                                    |b: usize, cols: &[f32]| sink(rank, b, cols);
-                                let (loss, cs) = produce(rank, &mut deliver)?;
-                                loss_sum += loss;
-                                compute_s[rank] = cs;
-                            }
-                        }
-                        Arrivals::Exchange(ex) => {
-                            let reports = ex.leader_ingest(
-                                buckets,
-                                true,
-                                &mut |rank, b, cols| sink(rank, b, &cols),
-                            )?;
-                            for (rank, rep) in reports.iter().enumerate() {
-                                loss_sum += rep.loss;
-                                compute_s[rank] = rep.compute_s;
-                            }
-                        }
-                    }
-                }
-                // Join in fixed bucket order — the only ordering finalize
-                // ever sees — and recover the assembly buffers for reuse.
-                let mut work = Vec::with_capacity(nb);
-                for (b, h) in handles.into_iter().enumerate() {
-                    let h = h.unwrap_or_else(|| panic!("bucket {b} never became ready"));
-                    let (w, view) = h.join();
-                    assembly[b] = view;
-                    work.push(w);
-                }
-                Ok(work)
-            });
-            let work = match scope_result {
-                Ok(work) => work,
-                Err(e) => {
-                    // A producer error or a dead rank can leave bucket
-                    // stores moved into tasks that were never joined;
-                    // rebuild them so the executor stays reusable for a
-                    // clean retry step.
-                    for (b, (lo, hi)) in self.buckets.iter().enumerate() {
-                        if self.assembly[b].d() != hi - lo {
-                            self.assembly[b] = GradSet::zeros(self.n, hi - lo);
-                        }
-                    }
-                    return Err(e);
-                }
+            let work = if self.map.is_some() {
+                self.ingest_grouped(
+                    source,
+                    &*agg,
+                    grads,
+                    ctx,
+                    &mut loss_sum,
+                    &mut compute_s,
+                    &mut bucket_obs,
+                )?
+            } else {
+                self.ingest_flat(
+                    source,
+                    &*agg,
+                    grads,
+                    ctx,
+                    &mut loss_sum,
+                    &mut compute_s,
+                    &mut bucket_obs,
+                )?
             };
             agg.finalize(grads, &self.buckets, work, out, ctx)
         } else {
@@ -277,6 +280,7 @@ impl PipelinedExecutor {
                         loss_sum += rep.loss;
                         compute_s[rank] = rep.compute_s;
                     }
+                    bucket_obs = reports.into_iter().map(|r| r.bucket_s).collect();
                 }
             }
             agg.aggregate_ctx(grads, &self.buckets, out, ctx)
@@ -287,63 +291,383 @@ impl PipelinedExecutor {
             clock.advance(r, cs);
         }
         let compute_end = clock.now();
-        let (exposed_comm_s, serial_comm_s) = if self.overlap {
-            let step_start = start_s.iter().cloned().fold(0.0, f64::max);
-            let mut tl = StepTimeline::new(step_start);
-            for op in &info.comm {
-                let dur = cost.time_s(op.kind, op.bytes);
-                let ready = match op.bucket {
-                    Some(b) => {
-                        let (lo, _) = self.buckets.range(b);
-                        // The backward pass finalizes the *end* of the flat
-                        // parameter vector first (last layers), so bucket
-                        // readiness runs in descending index order — the
-                        // same order `Worker::compute_grad_buckets` streams
-                        // live off the interpreter backend.
-                        let total = self.buckets.total().max(1);
-                        let frac = (total - lo) as f64 / total as f64;
-                        bucket_ready_s(&start_s, &compute_s, frac)
-                    }
-                    None => compute_end,
-                };
-                tl.post(ready, dur);
+        // Bucket readiness: observed on-thread completion offsets when the
+        // rank threads measured them (`--rank-threads on`), else the
+        // uniform-emission model — the backward finalizes the *end* of
+        // the flat parameter vector first (last layers), so bucket
+        // readiness runs in descending index order, the same order
+        // `Worker::compute_grad_buckets` streams live off the interpreter
+        // backend.
+        let total = self.buckets.total().max(1);
+        let fracs: Vec<f64> = (0..nb)
+            .map(|b| {
+                let (lo, _) = self.buckets.range(b);
+                (total - lo) as f64 / total as f64
+            })
+            .collect();
+        let observed: Option<&Vec<Vec<f64>>> =
+            if bucket_obs.len() == n && bucket_obs.iter().all(|v| v.len() == nb) {
+                Some(&bucket_obs)
+            } else {
+                None
+            };
+        let rank_ready = |r: usize, b: usize| -> f64 {
+            match observed {
+                Some(obs) => start_s[r] + obs[r][b].max(0.0).min(compute_s[r]),
+                None => start_s[r] + fracs[b] * compute_s[r],
             }
-            let exposed = tl.exposed_s(compute_end);
-            tl.commit(clock);
-            (exposed, tl.serial_s())
-        } else {
-            // Barrier semantics, op by op — exactly the pre-pipeline
-            // accounting (every transfer is exposed).
-            let mut serial = 0.0;
-            for op in &info.comm {
-                let dur = cost.time_s(op.kind, op.bytes);
-                clock.collective(dur);
-                serial += dur;
-            }
-            (serial, serial)
         };
+        let (exposed_comm_s, serial_comm_s, exposed_intra_comm_s, exposed_inter_comm_s) =
+            if self.overlap {
+                let step_start = start_s.iter().cloned().fold(0.0, f64::max);
+                match &self.hier_cost {
+                    Some(hier) => {
+                        // Two-level schedule: every node's intra reduce runs
+                        // on its own NVLink-class channel (ready when that
+                        // node's ranks emitted the bucket); a bucket's
+                        // leader-level transfer waits for its intra reduces
+                        // on every node; exposed ops post at backward end.
+                        let g = hier.map.groups();
+                        let mut tl = HierTimeline::new(step_start, g);
+                        let mut intra_done: Vec<Option<f64>> = vec![None; nb];
+                        let mut serial = 0.0f64;
+                        for op in &info.comm {
+                            match op.scope {
+                                CommScope::Intra => {
+                                    let dur = hier.intra.time_s(op.kind, op.bytes);
+                                    serial += dur;
+                                    match op.bucket {
+                                        Some(b) => {
+                                            let mut done = step_start;
+                                            for (k, (r0, r1)) in hier.map.iter().enumerate() {
+                                                let ready = (r0..r1)
+                                                    .map(|r| rank_ready(r, b))
+                                                    .fold(0.0, f64::max);
+                                                done = done.max(tl.post_intra(k, ready, dur));
+                                            }
+                                            intra_done[b] = Some(match intra_done[b] {
+                                                Some(x) => x.max(done),
+                                                None => done,
+                                            });
+                                        }
+                                        None => {
+                                            // Exposed intra op (the result
+                                            // fan-out broadcast): its payload
+                                            // is the inter-level consensus
+                                            // output, so it cannot start
+                                            // before every inter op posted so
+                                            // far has completed (ops are
+                                            // emitted in dependency order).
+                                            let ready =
+                                                compute_end.max(tl.inter_done_s());
+                                            for k in 0..g {
+                                                tl.post_intra(k, ready, dur);
+                                            }
+                                        }
+                                    }
+                                }
+                                CommScope::Inter | CommScope::Global => {
+                                    let dur = match op.scope {
+                                        CommScope::Inter => hier.inter.time_s(op.kind, op.bytes),
+                                        _ => cost.time_s(op.kind, op.bytes),
+                                    };
+                                    serial += dur;
+                                    let ready = match op.bucket {
+                                        Some(b) => intra_done[b].unwrap_or_else(|| {
+                                            (0..n)
+                                                .map(|r| rank_ready(r, b))
+                                                .fold(0.0, f64::max)
+                                        }),
+                                        None => compute_end,
+                                    };
+                                    tl.post_inter(ready, dur);
+                                }
+                            }
+                        }
+                        let exposed = tl.exposed_s(compute_end);
+                        let intra = tl.exposed_intra_s(compute_end);
+                        let inter = tl.exposed_inter_s(compute_end);
+                        tl.commit(clock);
+                        (exposed, serial, intra, inter)
+                    }
+                    None => {
+                        let mut tl = StepTimeline::new(step_start);
+                        for op in &info.comm {
+                            let dur = cost.time_s(op.kind, op.bytes);
+                            let ready = match op.bucket {
+                                Some(b) => {
+                                    (0..n).map(|r| rank_ready(r, b)).fold(0.0, f64::max)
+                                }
+                                None => compute_end,
+                            };
+                            tl.post(ready, dur);
+                        }
+                        let exposed = tl.exposed_s(compute_end);
+                        tl.commit(clock);
+                        (exposed, tl.serial_s(), 0.0, exposed)
+                    }
+                }
+            } else {
+                // Barrier semantics, op by op — exactly the pre-pipeline
+                // accounting (every transfer is exposed). On a
+                // hierarchical topology scoped ops are still priced on
+                // their own level's model (every node's intra reduce runs
+                // concurrently, so one collective charge covers them all).
+                let mut serial = 0.0;
+                let mut serial_intra = 0.0;
+                for op in &info.comm {
+                    let dur = match (&self.hier_cost, op.scope) {
+                        (Some(h), CommScope::Intra) => h.intra.time_s(op.kind, op.bytes),
+                        (Some(h), CommScope::Inter) => h.inter.time_s(op.kind, op.bytes),
+                        _ => cost.time_s(op.kind, op.bytes),
+                    };
+                    if op.scope == CommScope::Intra {
+                        serial_intra += dur;
+                    }
+                    clock.collective(dur);
+                    serial += dur;
+                }
+                (serial, serial, serial_intra, serial - serial_intra)
+            };
 
         Ok(StepOutcome {
             info,
             mean_loss: loss_sum / n as f64,
             exposed_comm_s,
             serial_comm_s,
+            exposed_intra_comm_s,
+            exposed_inter_comm_s,
             rank_compute_s: compute_s,
         })
     }
-}
 
-/// Simulated readiness of a bucket that completes after fraction `frac`
-/// of the backward pass: each rank emits parameters uniformly across its
-/// backward (the `overlap::exposed_comm_s` model, per rank), and the
-/// bucket is ready once the slowest rank has emitted it — stragglers
-/// delay every bucket proportionally.
-fn bucket_ready_s(start_s: &[f64], compute_s: &[f64], frac: f64) -> f64 {
-    start_s
-        .iter()
-        .zip(compute_s)
-        .map(|(s, c)| s + frac * c)
-        .fold(0.0, f64::max)
+    /// Flat overlap-mode ingest: one store per bucket; the bucket's
+    /// phase-1 aggregation task is submitted at the arrival that
+    /// completes it across all ranks.
+    fn ingest_flat(
+        &mut self,
+        source: Arrivals<'_, '_>,
+        agg: &dyn Aggregator,
+        grads: &mut GradSet,
+        ctx: &ParallelCtx,
+        loss_sum: &mut f64,
+        compute_s: &mut [f64],
+        bucket_obs: &mut Vec<Vec<f64>>,
+    ) -> Result<Vec<BucketWork>> {
+        let n = self.n;
+        let nb = self.buckets.len();
+        self.tracker.reset();
+        let buckets = &self.buckets;
+        let tracker = &mut self.tracker;
+        let assembly = &mut self.assembly;
+        // Ingest tasks run on pool workers, so their kernels must not
+        // fan out again (a nested barrier would deadlock the pool);
+        // one lane with the same min_shard_elems keeps the shard plan
+        // — and the result bits — identical.
+        let ictx = ParallelCtx::new(ctx.intra_task_policy());
+        let scope_result = ctx.task_scope(|scope| -> Result<Vec<BucketWork>> {
+            let ictx_ref = &ictx;
+            let mut handles: Vec<_> = (0..nb).map(|_| None).collect();
+            {
+                let handles = &mut handles;
+                let grads = &mut *grads;
+                // One arrival sink for both sources: copy the bucket
+                // into the full assembly and the per-bucket store;
+                // when the arrival completes the bucket, hand its
+                // stats work to the pool and keep receiving later
+                // buckets.
+                let mut sink = |rank: usize, b: usize, cols: &[f32]| {
+                    let (lo, hi) = buckets.range(b);
+                    grads.row_mut(rank)[lo..hi].copy_from_slice(cols);
+                    assembly[b].set_row(rank, cols);
+                    if tracker.arrive(b) {
+                        let view = std::mem::replace(&mut assembly[b], GradSet::zeros(0, 0));
+                        handles[b] = Some(scope.submit(move || {
+                            let w = agg.ingest_bucket(b, &view, 0, view.d(), ictx_ref);
+                            (w, view)
+                        }));
+                    }
+                };
+                match source {
+                    Arrivals::Producer(produce) => {
+                        for rank in 0..n {
+                            let mut deliver = |b: usize, cols: &[f32]| sink(rank, b, cols);
+                            let (loss, cs) = produce(rank, &mut deliver)?;
+                            *loss_sum += loss;
+                            compute_s[rank] = cs;
+                        }
+                    }
+                    Arrivals::Exchange(ex) => {
+                        let reports =
+                            ex.leader_ingest(buckets, true, &mut |rank, b, cols| {
+                                sink(rank, b, &cols)
+                            })?;
+                        for (rank, rep) in reports.iter().enumerate() {
+                            *loss_sum += rep.loss;
+                            compute_s[rank] = rep.compute_s;
+                        }
+                        *bucket_obs = reports.into_iter().map(|r| r.bucket_s).collect();
+                    }
+                }
+            }
+            // Join in fixed bucket order — the only ordering finalize
+            // ever sees — and recover the assembly buffers for reuse.
+            let mut work = Vec::with_capacity(nb);
+            for (b, h) in handles.into_iter().enumerate() {
+                let h = h.unwrap_or_else(|| panic!("bucket {b} never became ready"));
+                let (w, view) = h.join();
+                assembly[b] = view;
+                work.push(w);
+            }
+            Ok(work)
+        });
+        match scope_result {
+            Ok(work) => Ok(work),
+            Err(e) => {
+                // A producer error or a dead rank can leave bucket stores
+                // moved into tasks that were never joined; rebuild them so
+                // the executor stays reusable for a clean retry step.
+                for (b, (lo, hi)) in self.buckets.iter().enumerate() {
+                    if self.assembly[b].d() != hi - lo {
+                        self.assembly[b] = GradSet::zeros(self.n, hi - lo);
+                    }
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Grouped (hierarchical) overlap-mode ingest: stores are partitioned
+    /// per node group, and **two** layers of tasks pipeline with arrival:
+    ///
+    /// * phase 1a — node `k`'s leader reduction of bucket `b`
+    ///   (`reduce_group`), submitted the moment that node's ranks
+    ///   complete the bucket, while other nodes' ranks are still
+    ///   streaming (the leader ingests node-level buckets);
+    /// * phase 1b — the base scheme's leaders-level ingest
+    ///   (`ingest_leaders`), submitted when every node's reduction for
+    ///   the bucket has been joined (fixed node order, so the assembled
+    ///   leader set is deterministic at any arrival interleaving).
+    fn ingest_grouped(
+        &mut self,
+        source: Arrivals<'_, '_>,
+        agg: &dyn Aggregator,
+        grads: &mut GradSet,
+        ctx: &ParallelCtx,
+        loss_sum: &mut f64,
+        compute_s: &mut [f64],
+        bucket_obs: &mut Vec<Vec<f64>>,
+    ) -> Result<Vec<BucketWork>> {
+        let n = self.n;
+        let nb = self.buckets.len();
+        let map = self.map.clone().expect("grouped ingest needs a node map");
+        let g = map.groups();
+        ensure!(
+            agg.node_map() == Some(&map),
+            "hierarchical executor needs an aggregator grouped by the same node map \
+             (build it with aggregation::hierarchical)"
+        );
+        self.tracker.reset();
+        self.node_counts.iter_mut().for_each(|c| *c = 0);
+        let buckets = &self.buckets;
+        let tracker = &mut self.tracker;
+        let node_assembly = &mut self.node_assembly;
+        let node_counts = &mut self.node_counts;
+        let ictx = ParallelCtx::new(ctx.intra_task_policy());
+        let scope_result = ctx.task_scope(|scope| -> Result<Vec<BucketWork>> {
+            let ictx_ref = &ictx;
+            let map_ref = &map;
+            let mut intra: Vec<Vec<Option<_>>> =
+                (0..nb).map(|_| (0..g).map(|_| None).collect()).collect();
+            let mut inner: Vec<Option<_>> = (0..nb).map(|_| None).collect();
+            {
+                let intra = &mut intra;
+                let inner = &mut inner;
+                let grads = &mut *grads;
+                let mut sink = |rank: usize, b: usize, cols: &[f32]| {
+                    let (lo, hi) = buckets.range(b);
+                    grads.row_mut(rank)[lo..hi].copy_from_slice(cols);
+                    let (k, slot) = map_ref.locate(rank);
+                    node_assembly[b][k].set_row(slot, cols);
+                    node_counts[b * g + k] += 1;
+                    if node_counts[b * g + k] == map_ref.size(k) {
+                        // Node-level bucket complete: start this node's
+                        // leader reduction now (phase 1a).
+                        let view =
+                            std::mem::replace(&mut node_assembly[b][k], GradSet::zeros(0, 0));
+                        intra[b][k] = Some(scope.submit(move || {
+                            let rows = (0, view.n());
+                            let row = agg.reduce_group(k, &view, rows, 0, view.d(), ictx_ref);
+                            (row, view)
+                        }));
+                    }
+                    if tracker.arrive(b) {
+                        // Last group's arrival completes the bucket: join
+                        // the G reductions in node order (they were
+                        // submitted as groups finished; these joins are
+                        // short and later arrivals queue on the channel
+                        // meanwhile), then hand the leaders to phase 1b.
+                        let mut leaders = GradSet::zeros(g, hi - lo);
+                        for (k, h) in intra[b].iter_mut().enumerate() {
+                            let (row, view) = h
+                                .take()
+                                .expect("every group completed this bucket")
+                                .join();
+                            leaders.set_row(k, &row);
+                            node_assembly[b][k] = view;
+                        }
+                        inner[b] =
+                            Some(scope.submit(move || agg.ingest_leaders(b, leaders, ictx_ref)));
+                    }
+                };
+                match source {
+                    Arrivals::Producer(produce) => {
+                        for rank in 0..n {
+                            let mut deliver = |b: usize, cols: &[f32]| sink(rank, b, cols);
+                            let (loss, cs) = produce(rank, &mut deliver)?;
+                            *loss_sum += loss;
+                            compute_s[rank] = cs;
+                        }
+                    }
+                    Arrivals::Exchange(ex) => {
+                        let reports =
+                            ex.leader_ingest(buckets, true, &mut |rank, b, cols| {
+                                sink(rank, b, &cols)
+                            })?;
+                        for (rank, rep) in reports.iter().enumerate() {
+                            *loss_sum += rep.loss;
+                            compute_s[rank] = rep.compute_s;
+                        }
+                        *bucket_obs = reports.into_iter().map(|r| r.bucket_s).collect();
+                    }
+                }
+            }
+            // Join the leaders-level work in fixed bucket order.
+            let mut work = Vec::with_capacity(nb);
+            for (b, h) in inner.into_iter().enumerate() {
+                let h = h.unwrap_or_else(|| panic!("bucket {b} never became ready"));
+                work.push(h.join());
+            }
+            Ok(work)
+        });
+        match scope_result {
+            Ok(work) => Ok(work),
+            Err(e) => {
+                // Rebuild any per-node stores moved into tasks that were
+                // never joined (the scope waited for them before
+                // returning), so the executor stays reusable.
+                for (b, (lo, hi)) in self.buckets.iter().enumerate() {
+                    for (k, (r0, r1)) in map.iter().enumerate() {
+                        let gs = &mut self.node_assembly[b][k];
+                        if gs.n() != r1 - r0 || gs.d() != hi - lo {
+                            *gs = GradSet::zeros(r1 - r0, hi - lo);
+                        }
+                    }
+                }
+                Err(e)
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -441,6 +765,95 @@ mod tests {
         let (_, off, _) = run_mode(false, 2, "adacons", &data, &buckets, &compute);
         assert!((off.exposed_comm_s - off.serial_comm_s).abs() < 1e-15);
         assert!((on.serial_comm_s - off.serial_comm_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grouped_ingest_matches_inline_hierarchical_bitwise() {
+        // The per-node-group task decomposition (phase 1a reductions +
+        // phase 1b leaders ingest) must produce the exact bits of the
+        // hierarchical aggregator's inline path, uneven groups included.
+        let (n, d) = (6usize, 3 * CHUNK + 41);
+        let data = rows(n, d, 31);
+        let gs = GradSet::from_rows(&data);
+        let buckets = Buckets::fixed(d, CHUNK + 11);
+        let map = crate::collective::NodeMap::from_sizes(&[3, 2, 1]);
+        let mut oracle = vec![0.0f32; d];
+        aggregation::hierarchical("adacons", map.clone(), n)
+            .unwrap()
+            .aggregate_ctx(
+                &gs,
+                &buckets,
+                &mut oracle,
+                &ParallelCtx::new(ParallelPolicy {
+                    threads: 1,
+                    min_shard_elems: CHUNK,
+                }),
+            );
+        for threads in [1usize, 3] {
+            let ctx = ParallelCtx::new(ParallelPolicy {
+                threads,
+                min_shard_elems: CHUNK,
+            });
+            let mut agg = aggregation::hierarchical("adacons", map.clone(), n).unwrap();
+            let mut exec = PipelinedExecutor::with_topology(
+                n,
+                buckets.clone(),
+                true,
+                Some(map.clone()),
+                None,
+            );
+            let mut grads = GradSet::zeros(n, d);
+            let mut out = vec![0.0f32; d];
+            let mut clock = SimClock::new(n);
+            let cost = CostModel::from_topology(&Topology::ring_gbps(n, 100.0));
+            let compute = vec![0.01; n];
+            let mut produce = replay_producer(&data, &buckets, &compute);
+            exec.run_step(
+                &mut produce,
+                agg.as_mut(),
+                &mut grads,
+                &mut out,
+                &ctx,
+                &mut clock,
+                &cost,
+            )
+            .unwrap();
+            assert_eq!(out, oracle, "threads={threads}");
+            // The full (N, d) assembly is still maintained for finalize.
+            assert_eq!(grads.row(2), &data[2][..]);
+        }
+    }
+
+    #[test]
+    fn grouped_executor_rejects_flat_aggregator() {
+        let (n, d) = (4usize, 2 * CHUNK);
+        let data = rows(n, d, 13);
+        let buckets = Buckets::fixed(d, CHUNK);
+        let map = crate::collective::NodeMap::even(2, 2);
+        let ctx = ParallelCtx::new(ParallelPolicy {
+            threads: 1,
+            min_shard_elems: CHUNK,
+        });
+        let mut agg = aggregation::by_name("mean", n).unwrap();
+        let mut exec =
+            PipelinedExecutor::with_topology(n, buckets.clone(), true, Some(map), None);
+        let mut grads = GradSet::zeros(n, d);
+        let mut out = vec![0.0f32; d];
+        let mut clock = SimClock::new(n);
+        let cost = CostModel::from_topology(&Topology::ring_gbps(n, 100.0));
+        let mut produce = replay_producer(&data, &buckets, &[0.01; 4]);
+        let err = exec
+            .run_step(
+                &mut produce,
+                agg.as_mut(),
+                &mut grads,
+                &mut out,
+                &ctx,
+                &mut clock,
+                &cost,
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("hierarchical executor"), "{err}");
     }
 
     #[test]

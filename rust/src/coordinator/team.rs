@@ -29,10 +29,11 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
+use crate::collective::NodeMap;
 use crate::comm::{RankPort, StepExchange};
 use crate::runtime::{Executable, Runtime};
 use crate::tensor::Buckets;
-use crate::util::error::{Context, Result};
+use crate::util::error::{ensure, Context, Result};
 use crate::worker::Worker;
 
 /// One leader-to-rank command.
@@ -53,15 +54,31 @@ impl RankTeam {
     /// for `artifact` (interp backend; `load_owned` refuses PJRT with
     /// guidance). Threads idle on their command channel until
     /// [`RankTeam::begin_step`] and exit when the team is dropped.
+    ///
+    /// With `map`, rank threads are grouped per node on a grouped
+    /// exchange (thread names carry the node id, ports know their group,
+    /// and the leader can ingest node-level buckets) — the deployment
+    /// shape of the hierarchical two-level aggregation path.
     pub fn spawn(
         rt: &Runtime,
         artifact: &str,
         workers: Vec<Worker>,
         buckets: &Buckets,
         local_batch: usize,
+        map: Option<&NodeMap>,
     ) -> Result<RankTeam> {
         let n = workers.len();
-        let (exchange, ports) = StepExchange::new(n);
+        let (exchange, ports) = match map {
+            Some(m) => {
+                ensure!(
+                    m.n_ranks() == n,
+                    "node map covers {} ranks but the team has {n} workers",
+                    m.n_ranks()
+                );
+                StepExchange::new_grouped(m)
+            }
+            None => StepExchange::new(n),
+        };
         let mut cmds = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
         for (worker, port) in workers.into_iter().zip(ports) {
@@ -77,8 +94,12 @@ impl RankTeam {
                 .with_context(|| format!("building rank {rank}'s executable"))?;
             let (tx, rx) = channel();
             let bk = buckets.clone();
+            let name = match map {
+                Some(_) => format!("node{}-rank{rank}", port.node()),
+                None => format!("rank-{rank}"),
+            };
             let h = std::thread::Builder::new()
-                .name(format!("rank-{rank}"))
+                .name(name)
                 .spawn(move || rank_main(worker, exe, port, bk, local_batch, rx))
                 .with_context(|| format!("spawning rank {rank} thread"))?;
             cmds.push(tx);
@@ -142,7 +163,11 @@ fn rank_main(
             port.submit_bucket(b, cols.to_vec());
         });
         match r {
-            Ok(()) => port.done(worker.last_loss as f64, worker.last_compute_s),
+            Ok(()) => port.done_timed(
+                worker.last_loss as f64,
+                worker.last_compute_s,
+                worker.last_bucket_s().to_vec(),
+            ),
             Err(e) => {
                 // Explicit failure beats the guard's generic reason.
                 port.report_down(&format!("compute failed: {e}"));
@@ -197,9 +222,15 @@ mod tests {
                 .unwrap();
         }
         // Threaded team, same worker seeds.
-        let team =
-            RankTeam::spawn(&rt, artifact, mk_workers(&rt, artifact, 3), &buckets, local_batch)
-                .unwrap();
+        let team = RankTeam::spawn(
+            &rt,
+            artifact,
+            mk_workers(&rt, artifact, 3),
+            &buckets,
+            local_batch,
+            None,
+        )
+        .unwrap();
         team.begin_step(&params).unwrap();
         let mut rows = vec![vec![0.0f32; d]; 3];
         let reports = team
@@ -225,9 +256,70 @@ mod tests {
             mk_workers(&rt, artifact, 4),
             &buckets,
             exe.spec.local_batch(),
+            None,
         )
         .unwrap();
         assert_eq!(team.n(), 4);
         drop(team); // must not hang
+    }
+
+    #[test]
+    fn grouped_team_reports_observed_bucket_readiness() {
+        // A node-grouped team runs on a grouped exchange and every Done
+        // report carries monotone per-bucket completion offsets bounded
+        // by the rank's compute time.
+        let rt = interp_runtime();
+        let artifact = "linreg_b16";
+        let exe = rt.load(artifact).unwrap();
+        let d = exe.spec.param_dim;
+        let buckets = Buckets::fixed(d, 300);
+        let map = NodeMap::even(2, 2);
+        let team = RankTeam::spawn(
+            &rt,
+            artifact,
+            mk_workers(&rt, artifact, 4),
+            &buckets,
+            exe.spec.local_batch(),
+            Some(&map),
+        )
+        .unwrap();
+        assert_eq!(team.exchange().map(), Some(&map));
+        let params = Arc::new(exe.spec.load_init(0).unwrap());
+        team.begin_step(&params).unwrap();
+        let mut node_done = 0usize;
+        let reports = team
+            .exchange()
+            .leader_ingest_nodes(&buckets, true, &mut |_, _, _| {}, &mut |_, _| {
+                node_done += 1;
+            })
+            .unwrap();
+        assert_eq!(node_done, map.groups() * buckets.len());
+        for r in &reports {
+            assert_eq!(r.bucket_s.len(), buckets.len());
+            for w in r.bucket_s.windows(2) {
+                // linreg streams one segment: offsets are monotone
+                // non-decreasing in bucket order regardless.
+                assert!(w[0] <= w[1] + 1e-12);
+            }
+            assert!(r.bucket_s.iter().all(|&s| s >= 0.0 && s <= r.compute_s + 1e-9));
+        }
+    }
+
+    #[test]
+    fn grouped_spawn_rejects_mismatched_map() {
+        let rt = interp_runtime();
+        let artifact = "linreg_b16";
+        let exe = rt.load(artifact).unwrap();
+        let buckets = Buckets::single(exe.spec.param_dim);
+        let err = RankTeam::spawn(
+            &rt,
+            artifact,
+            mk_workers(&rt, artifact, 3),
+            &buckets,
+            exe.spec.local_batch(),
+            Some(&NodeMap::even(2, 2)), // 4 ranks vs 3 workers
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("node map"), "{err}");
     }
 }

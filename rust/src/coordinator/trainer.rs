@@ -20,7 +20,7 @@
 use std::sync::Arc;
 
 use crate::aggregation::{self, Aggregator, CoeffStages};
-use crate::collective::{CostModel, SimClock, Topology};
+use crate::collective::{CostModel, HierCostModel, SimClock};
 use crate::config::TrainConfig;
 use crate::coordinator::eval::{EvalOutcome, Evaluator};
 use crate::coordinator::pipeline::PipelinedExecutor;
@@ -71,6 +71,14 @@ pub struct TrainResult {
     /// Mean simulated communication per step under the unpipelined
     /// accounting (every transfer exposed).
     pub serial_comm_s: f64,
+    /// Mean exposed communication attributable to intra-node
+    /// (NVLink-class) links; 0 on flat topologies.
+    pub exposed_intra_comm_s: f64,
+    /// Mean exposed communication attributable to the inter-node fabric
+    /// (== `exposed_comm_s` on flat topologies).
+    pub exposed_inter_comm_s: f64,
+    /// The run's topology (`flat` or `hier:<nodes>x<gpus>`).
+    pub topology: String,
 }
 
 impl TrainResult {
@@ -118,6 +126,8 @@ pub struct Trainer {
     evaluator: Option<Evaluator>,
     buckets: Buckets,
     cost: CostModel,
+    /// Two-level comm models + node grouping on hierarchical topologies.
+    hier: Option<HierCostModel>,
     /// Persistent parallel context: the worker pool is spawned once here
     /// and reused by every aggregation step (no per-step thread spawn).
     par: ParallelCtx,
@@ -152,8 +162,18 @@ impl Trainer {
                 Ok(Worker::new(rank, gen, injector, cfg.seed))
             })
             .collect::<Result<Vec<_>>>()?;
-        let aggregator = aggregation::by_name(&cfg.aggregator, cfg.workers)
-            .context("unknown aggregator")?;
+        // Topology: flat = the historical single ring; hier = intra-node
+        // reduce + inter-node consensus (the aggregator is wrapped in its
+        // two-level hierarchical form and the comm accounting runs on the
+        // two-level timeline).
+        let topo = cfg.topology.build(cfg.workers, cfg.fabric_gbps);
+        let hier = HierCostModel::from_topology(&topo);
+        let aggregator = match &hier {
+            Some(h) => aggregation::hierarchical(&cfg.aggregator, h.map.clone(), cfg.workers)
+                .context("unknown aggregator")?,
+            None => aggregation::by_name(&cfg.aggregator, cfg.workers)
+                .context("unknown aggregator")?,
+        };
         let optimizer = optim::by_name(&cfg.optimizer, d).context("unknown optimizer")?;
         let evaluator = Evaluator::for_artifact(
             &rt,
@@ -166,17 +186,19 @@ impl Trainer {
             Some(cap) => Buckets::fixed(d, cap),
             None => Buckets::single(d),
         };
-        let cost = CostModel::from_topology(&Topology::ring_gbps(cfg.workers, cfg.fabric_gbps));
+        let cost = CostModel::from_topology(&topo);
         let par = ParallelCtx::new(cfg.parallel);
         let ranks = if cfg.rank_threads {
             // Spawn the rank threads once; they persist across every step
-            // of the run and join when the trainer drops.
+            // of the run and join when the trainer drops. On hierarchical
+            // topologies the team is grouped per node.
             Ranks::Threaded(RankTeam::spawn(
                 &rt,
                 &cfg.artifact,
                 workers,
                 &buckets,
                 exe.spec.local_batch(),
+                hier.as_ref().map(|h| &h.map),
             )?)
         } else {
             Ranks::RoundRobin(workers)
@@ -191,6 +213,7 @@ impl Trainer {
             evaluator,
             buckets,
             cost,
+            hier,
             par,
             params,
             start_step: 0,
@@ -234,9 +257,17 @@ impl Trainer {
             Some(p) => Some(crate::metrics::JsonlWriter::create(p)?),
             None => None,
         };
-        let mut exec = PipelinedExecutor::new(n, self.buckets.clone(), self.cfg.overlap);
+        let mut exec = PipelinedExecutor::with_topology(
+            n,
+            self.buckets.clone(),
+            self.cfg.overlap,
+            self.hier.as_ref().map(|h| h.map.clone()),
+            self.hier.clone(),
+        );
         let mut exposed_comm_total = 0.0f64;
         let mut serial_comm_total = 0.0f64;
+        let mut exposed_intra_total = 0.0f64;
+        let mut exposed_inter_total = 0.0f64;
         let wall = Timer::start();
 
         for step in self.start_step..self.start_step + self.cfg.steps {
@@ -301,6 +332,8 @@ impl Trainer {
             train_loss.push(outcome.mean_loss);
             exposed_comm_total += outcome.exposed_comm_s;
             serial_comm_total += outcome.serial_comm_s;
+            exposed_intra_total += outcome.exposed_intra_comm_s;
+            exposed_inter_total += outcome.exposed_inter_comm_s;
             if outcome.info.par.is_some() {
                 agg_par = outcome.info.par;
             }
@@ -348,6 +381,8 @@ impl Trainer {
                     ("lr", num(self.cfg.schedule.lr(step))),
                     ("sim_time_s", num(clock.now())),
                     ("exposed_comm_s", num(outcome.exposed_comm_s)),
+                    ("exposed_intra_comm_s", num(outcome.exposed_intra_comm_s)),
+                    ("exposed_inter_comm_s", num(outcome.exposed_inter_comm_s)),
                     ("aggregator", s(&self.cfg.aggregator)),
                 ];
                 if let Some(e) = evals.last() {
@@ -379,6 +414,9 @@ impl Trainer {
             rank_threads: self.cfg.rank_threads,
             exposed_comm_s: exposed_comm_total / steps,
             serial_comm_s: serial_comm_total / steps,
+            exposed_intra_comm_s: exposed_intra_total / steps,
+            exposed_inter_comm_s: exposed_inter_total / steps,
+            topology: self.cfg.topology.describe(),
         })
     }
 }

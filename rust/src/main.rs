@@ -28,7 +28,7 @@ USAGE:
                 [--schedule const:LR|cosine:LR:WARM:TOTAL|step:LR:EVERY:G|invsqrt:LR:WARM]
                 [--steps N] [--eval-every N] [--seed S] [--clip C|none]
                 [--bucket-cap N] [--overlap on|off] [--rank-threads on|off]
-                [--heterogeneity H]
+                [--topology flat|hier:<nodes>x<gpus>] [--heterogeneity H]
                 [--inject RANK:SPEC] [--par-threads N] [--par-min-shard-elems N]
                 [--fabric-gbps G] [--save-checkpoint PATH] [--load-checkpoint PATH]
                 [--csv PATH]
@@ -140,6 +140,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         if res.overlap { "on" } else { "off" },
         res.serial_comm_s * 1e3,
     );
+    if res.topology != "flat" {
+        println!(
+            "  topology {}: intra {:.4} ms / inter {:.4} ms exposed",
+            res.topology,
+            res.exposed_intra_comm_s * 1e3,
+            res.exposed_inter_comm_s * 1e3,
+        );
+    }
     print!("{}", res.phases.report());
     if let Some(path) = args.str_opt("save-checkpoint") {
         Checkpoint {

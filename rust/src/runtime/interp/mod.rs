@@ -69,8 +69,10 @@ impl InterpExec {
                 prog.in_dim()
             );
         }
-        if matches!(prog.loss, Loss::SoftmaxXent { .. }) && spec.inputs.len() < 2 {
-            bail!("{}: softmax_xent program needs an i32 label input", spec.name);
+        if matches!(prog.loss, Loss::SoftmaxXent { .. } | Loss::SigmoidBce)
+            && spec.inputs.len() < 2
+        {
+            bail!("{}: labelled loss needs an i32 label input", spec.name);
         }
         Ok(InterpExec { prog })
     }
@@ -83,7 +85,7 @@ impl InterpExec {
         let x = batch[0].as_f32().context("input 0 must be f32 features")?;
         let m = x.len() / self.prog.in_dim();
         let y = match self.prog.loss {
-            Loss::SoftmaxXent { .. } => {
+            Loss::SoftmaxXent { .. } | Loss::SigmoidBce => {
                 Some(batch[1].as_i32().context("input 1 must be i32 labels")?)
             }
             Loss::MeanSquare => None,
@@ -117,6 +119,9 @@ impl InterpExec {
             Loss::MeanSquare => ops::mean_square_loss(out, m, self.prog.out_dim(), dh),
             Loss::SoftmaxXent { classes } => {
                 ops::softmax_xent_loss(out, y.expect("labels validated in new()"), m, classes, dh)
+            }
+            Loss::SigmoidBce => {
+                ops::sigmoid_bce_loss(out, y.expect("labels validated in new()"), m, dh)
             }
         }
     }
@@ -189,12 +194,25 @@ impl InterpExec {
         let loss = self.loss_grad(out, y, m, &mut scratch) as f32;
         let mut outs = vec![Array::F32(vec![loss], vec![])];
         if spec.outputs.len() > 1 {
-            if let (Loss::SoftmaxXent { classes }, Some(y)) = (&self.prog.loss, y) {
-                let mut correct = vec![0.0f32; m];
-                ops::argmax_correct(out, y, m, *classes, &mut correct);
-                outs.push(Array::F32(correct, vec![m]));
-            } else {
-                bail!("{}: eval outputs beyond loss need a classifier program", spec.name);
+            match (&self.prog.loss, y) {
+                (Loss::SoftmaxXent { classes }, Some(y)) => {
+                    let mut correct = vec![0.0f32; m];
+                    ops::argmax_correct(out, y, m, *classes, &mut correct);
+                    outs.push(Array::F32(correct, vec![m]));
+                }
+                (Loss::SigmoidBce, Some(y)) => {
+                    // Predicted class = σ(z) > 0.5 ⇔ z > 0.
+                    let correct: Vec<f32> = out
+                        .iter()
+                        .zip(y)
+                        .map(|(&z, &t)| ((z > 0.0) as i32 == t) as i32 as f32)
+                        .collect();
+                    outs.push(Array::F32(correct, vec![m]));
+                }
+                _ => bail!(
+                    "{}: eval outputs beyond loss need a classifier program",
+                    spec.name
+                ),
             }
         }
         Ok(outs)

@@ -186,6 +186,32 @@ pub fn softmax_xent_loss(logits: &[f32], y: &[i32], m: usize, c: usize, dl: &mut
     loss * inv_m
 }
 
+/// Mean sigmoid binary-cross-entropy over `(m, 1)` logits with i32 {0,1}
+/// labels — the CTR/detection-head loss (first step toward the det/dlrm
+/// artifacts running on the interpreter). Per element, in f64:
+/// `max(z,0) - z·y + ln(1 + e^{-|z|})` (the overflow-free softplus form
+/// of `-y·ln σ(z) - (1-y)·ln(1-σ(z))`). Returns the f64 loss and writes
+/// `dz = (σ(z) - y) / m`.
+pub fn sigmoid_bce_loss(logits: &[f32], y: &[i32], m: usize, dl: &mut [f32]) -> f64 {
+    debug_assert_eq!(logits.len(), m);
+    debug_assert_eq!(y.len(), m);
+    debug_assert_eq!(dl.len(), m);
+    let inv_m = 1.0 / m as f64;
+    let mut loss = 0.0f64;
+    for i in 0..m {
+        let z = logits[i] as f64;
+        let t = y[i] as f64;
+        // Hard assert (not debug): an out-of-range label would silently
+        // corrupt loss and gradients in release builds (unlike
+        // softmax_xent, whose bad label panics on the row index).
+        assert!(y[i] == 0 || y[i] == 1, "BCE label must be 0/1, got {}", y[i]);
+        loss += z.max(0.0) - z * t + (-z.abs()).exp().ln_1p();
+        let s = 1.0 / (1.0 + (-z).exp());
+        dl[i] = ((s - t) * inv_m) as f32;
+    }
+    loss * inv_m
+}
+
 /// Per-row argmax == label indicator (the `correct` eval output of the
 /// classifier artifacts; ties resolve to the lowest index, like argmax).
 pub fn argmax_correct(logits: &[f32], y: &[i32], m: usize, c: usize, out: &mut [f32]) {
@@ -250,6 +276,27 @@ mod tests {
         let loss = mean_square_loss(&y, 2, 2, &mut dy);
         assert!((loss - 0.5 * (1.0 + 4.0 + 9.0) / 2.0).abs() < 1e-12);
         assert_eq!(dy, [0.5, -1.0, 1.5, 0.0]);
+    }
+
+    #[test]
+    fn sigmoid_bce_hand_values_and_stability() {
+        // z = 0: loss = ln 2 per element regardless of label; dz = ±0.5/m.
+        let logits = [0.0f32, 0.0];
+        let mut dl = [0.0f32; 2];
+        let loss = sigmoid_bce_loss(&logits, &[1, 0], 2, &mut dl);
+        assert!((loss - (2.0f64).ln()).abs() < 1e-12);
+        assert!((dl[0] + 0.25).abs() < 1e-7);
+        assert!((dl[1] - 0.25).abs() < 1e-7);
+        // Confident-correct: near-zero loss; confident-wrong: ~|z|.
+        let logits = [30.0f32, -30.0];
+        let loss = sigmoid_bce_loss(&logits, &[1, 0], 2, &mut dl);
+        assert!(loss < 1e-10, "{loss}");
+        let loss = sigmoid_bce_loss(&logits, &[0, 1], 2, &mut dl);
+        assert!((loss - 30.0).abs() < 1e-6, "{loss}");
+        // Huge logits stay finite (softplus form cannot overflow).
+        let logits = [500.0f32, -500.0];
+        let loss = sigmoid_bce_loss(&logits, &[0, 1], 2, &mut dl);
+        assert!(loss.is_finite() && dl.iter().all(|d| d.is_finite()));
     }
 
     #[test]

@@ -59,6 +59,10 @@ pub enum Loss {
     MeanSquare,
     /// Mean softmax cross-entropy over `classes` logits with i32 labels.
     SoftmaxXent { classes: usize },
+    /// Mean sigmoid binary cross-entropy over a single logit with i32
+    /// {0,1} labels — the CTR/detection head (final layer out dim must
+    /// be 1).
+    SigmoidBce,
 }
 
 /// A complete interpretable program for one artifact.
@@ -100,6 +104,7 @@ impl ProgramSpec {
             Some("softmax_xent") => Loss::SoftmaxXent {
                 classes: lj.get("classes").as_usize().context("softmax_xent classes")?,
             },
+            Some("sigmoid_bce") => Loss::SigmoidBce,
             other => bail!("program loss kind {other:?} not supported"),
         };
         let p = ProgramSpec { layers, loss };
@@ -165,6 +170,12 @@ impl ProgramSpec {
                 );
             }
         }
+        if self.loss == Loss::SigmoidBce && self.out_dim() != 1 {
+            bail!(
+                "sigmoid_bce needs a single output logit, final layer out is {}",
+                self.out_dim()
+            );
+        }
         let blocks = self.param_blocks();
         let mut cursor = 0usize;
         for &(off, len) in &blocks {
@@ -222,6 +233,24 @@ mod tests {
         let j = Json::parse(
             r#"{"layers": [{"in": 2, "out": 1, "w_off": 0}],
                 "loss": {"kind": "hinge"}}"#,
+        )
+        .unwrap();
+        assert!(ProgramSpec::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn sigmoid_bce_parses_and_requires_single_logit() {
+        let j = Json::parse(
+            r#"{"layers": [{"in": 8, "out": 1, "w_off": 1, "b_off": 0}],
+                "loss": {"kind": "sigmoid_bce"}}"#,
+        )
+        .unwrap();
+        let p = ProgramSpec::from_json(&j).unwrap();
+        assert_eq!(p.loss, Loss::SigmoidBce);
+        assert_eq!(p.param_dim(), 9);
+        let j = Json::parse(
+            r#"{"layers": [{"in": 8, "out": 2, "w_off": 2, "b_off": 0}],
+                "loss": {"kind": "sigmoid_bce"}}"#,
         )
         .unwrap();
         assert!(ProgramSpec::from_json(&j).is_err());

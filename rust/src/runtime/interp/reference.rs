@@ -83,6 +83,22 @@ pub fn loss_and_grad(
             }
             loss /= m as f64;
         }
+        Loss::SigmoidBce => {
+            let y = batch[1].as_i32().context("reference: input 1 must be i32")?;
+            if c != 1 {
+                bail!("reference: sigmoid_bce needs out dim 1, got {c}");
+            }
+            for i in 0..m {
+                let z = out[i];
+                let t = y[i] as f64;
+                if y[i] != 0 && y[i] != 1 {
+                    bail!("reference: BCE label must be 0/1, got {}", y[i]);
+                }
+                loss += z.max(0.0) - z * t + (-z.abs()).exp().ln_1p();
+                dh[i] = (1.0 / (1.0 + (-z).exp()) - t) / m as f64;
+            }
+            loss /= m as f64;
+        }
     }
 
     // Backward, last layer to first.

@@ -205,6 +205,46 @@ impl GradSet {
         }
     }
 
+    /// `out = scale * Σ_{i in rows} g_i` over columns `[lo, hi)` — the
+    /// node-leader reduction of the two-level hierarchical scheme
+    /// (`aggregation::hierarchy`). With `scale = G/N` the leader row
+    /// carries its group-size weight, so the uniform mean over the G
+    /// leaders equals the global N-rank mean (the unbiasedness
+    /// invariant). Chunked and sharded exactly like
+    /// [`GradSet::mean_range_into_ctx`] (rows accumulated in fixed index
+    /// order, then one scalar scale), so the result is bitwise-identical
+    /// at any thread count and between a full-matrix view (absolute
+    /// `lo..hi`, global row range) and a per-bucket copy (`lo = 0`,
+    /// local rows) — the shard plan measures from `lo`.
+    pub fn scaled_row_sum_range_into_ctx(
+        &self,
+        rows: (usize, usize),
+        scale: f32,
+        lo: usize,
+        hi: usize,
+        out: &mut [f32],
+        ctx: &ParallelCtx,
+    ) {
+        let (r0, r1) = rows;
+        assert!(r0 < r1 && r1 <= self.n, "bad row range {r0}..{r1}");
+        assert!(lo <= hi && hi <= self.d);
+        assert_eq!(out.len(), hi - lo);
+        let (data, d) = (&self.data, self.d);
+        ctx.for_each_out_shard(lo, hi, out, |slo, shi, oslice| {
+            let mut start = slo;
+            while start < shi {
+                let end = (start + CHUNK).min(shi);
+                let oc = &mut oslice[start - slo..end - slo];
+                ops::fill(oc, 0.0);
+                for i in r0..r1 {
+                    ops::axpy(1.0, &data[i * d + start..i * d + end], oc);
+                }
+                ops::scale(scale, oc);
+                start = end;
+            }
+        });
+    }
+
     /// `out = sum_i gamma[i] * g_i` (the Eq. 12 re-projection).
     pub fn weighted_sum_into(&self, gamma: &[f32], out: &mut [f32]) {
         self.weighted_sum_range_into(gamma, 0, self.d, out);
@@ -386,6 +426,64 @@ mod tests {
         gs.weighted_sum_into(&gamma, &mut a);
         gs.weighted_sum_into_ctx(&gamma, &mut b, &ctx);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn scaled_row_sum_matches_mean_and_is_view_invariant() {
+        let gs = random_set(6, 2 * CHUNK + 77, 9);
+        let d = gs.d();
+        // scale = 1/rows over the full row range reproduces the mean
+        // structure (same chunked accumulate-then-scale sequence).
+        let mut mean = vec![0.0f32; d];
+        gs.mean_into(&mut mean);
+        let mut sum = vec![0.0f32; d];
+        gs.scaled_row_sum_range_into_ctx(
+            (0, 6),
+            1.0 / 6.0,
+            0,
+            d,
+            &mut sum,
+            &ParallelCtx::serial(),
+        );
+        assert_eq!(mean, sum);
+        // A row-group reduction over a column sub-range must be bitwise
+        // identical between the full matrix (absolute range, global rows)
+        // and an owned per-bucket copy (lo = 0, local rows) — what makes
+        // the pipelined per-node ingest path equal the inline one.
+        let (lo, hi) = (CHUNK + 13, 2 * CHUNK + 50);
+        let rows = (2usize, 5usize);
+        let mut full_view = vec![0.0f32; hi - lo];
+        gs.scaled_row_sum_range_into_ctx(
+            rows,
+            0.75,
+            lo,
+            hi,
+            &mut full_view,
+            &ParallelCtx::serial(),
+        );
+        let copy = GradSet::from_rows(
+            &(rows.0..rows.1)
+                .map(|i| gs.row(i)[lo..hi].to_vec())
+                .collect::<Vec<_>>(),
+        );
+        let mut local_view = vec![0.0f32; hi - lo];
+        copy.scaled_row_sum_range_into_ctx(
+            (0, 3),
+            0.75,
+            0,
+            hi - lo,
+            &mut local_view,
+            &ParallelCtx::serial(),
+        );
+        assert_eq!(full_view, local_view);
+        // And thread-count free, like every engine kernel.
+        let ctx = ParallelCtx::new(ParallelPolicy {
+            threads: 4,
+            min_shard_elems: CHUNK,
+        });
+        let mut par = vec![0.0f32; hi - lo];
+        gs.scaled_row_sum_range_into_ctx(rows, 0.75, lo, hi, &mut par, &ctx);
+        assert_eq!(full_view, par);
     }
 
     #[test]

@@ -33,6 +33,11 @@ pub struct Worker {
     grad_buf: Vec<f32>,
     /// Per-bucket filled-element counts for the streaming path.
     bucket_fill: Vec<usize>,
+    /// Observed per-bucket completion offsets (seconds of on-thread
+    /// compute at which each bucket's gradient was final) from the last
+    /// `compute_grad_buckets` call — the measured readiness the
+    /// topology-aware timeline consumes in threaded mode.
+    bucket_s: Vec<f64>,
 }
 
 impl Worker {
@@ -46,7 +51,17 @@ impl Worker {
             last_compute_s: 0.0,
             grad_buf: Vec::new(),
             bucket_fill: Vec::new(),
+            bucket_s: Vec::new(),
         }
+    }
+
+    /// Observed per-bucket compute offsets of the last
+    /// [`Worker::compute_grad_buckets`] call (`last_bucket_s()[b]` =
+    /// on-thread seconds into the backward at which bucket `b` was
+    /// final). Injector ranks replay: every bucket reads as ready at
+    /// backward end.
+    pub fn last_bucket_s(&self) -> &[f64] {
+        &self.bucket_s
     }
 
     /// Draw the next local batch.
@@ -101,7 +116,10 @@ impl Worker {
             let batch = self.next_batch(local_batch);
             self.bucket_fill.clear();
             self.bucket_fill.resize(buckets.len(), 0);
+            self.bucket_s.clear();
+            self.bucket_s.resize(buckets.len(), 0.0);
             let fill = &mut self.bucket_fill;
+            let bucket_s = &mut self.bucket_s;
             // Delivery work (bucket copies, overlap-mode task submission)
             // is timed separately and excluded from the compute seconds
             // charged to the sim clock — the clock models rank backward
@@ -113,6 +131,9 @@ impl Worker {
                 // bucket is ready exactly when its range is fully
                 // written (segments never overlap, so counts are exact).
                 let dt = crate::util::timer::Timer::start();
+                // Compute-only elapsed at this segment boundary: what the
+                // backward has actually spent, delivery hooks excluded.
+                let elapsed = (t.elapsed_s() - deliver_s).max(0.0);
                 let end = off + len;
                 for (b, (lo, hi)) in buckets.iter().enumerate() {
                     let ov = end.min(hi).saturating_sub(off.max(lo));
@@ -121,6 +142,7 @@ impl Worker {
                     }
                     fill[b] += ov;
                     if fill[b] == hi - lo {
+                        bucket_s[b] = elapsed;
                         on_bucket(b, &g[lo..hi]);
                     }
                 }
@@ -140,10 +162,14 @@ impl Worker {
             return Ok(());
         }
         // Injector ranks reuse the whole-vector path (compute_grad owns
-        // the draw/timer/injection sequence) and replay bucket arrival.
+        // the draw/timer/injection sequence) and replay bucket arrival —
+        // every bucket observed ready at backward end.
         let r = self.compute_grad(exe, params, local_batch, &mut grad_buf);
         self.grad_buf = grad_buf;
         r?;
+        self.bucket_s.clear();
+        self.bucket_s
+            .resize(buckets.len(), self.last_compute_s);
         for (b, (lo, hi)) in buckets.iter().enumerate() {
             on_bucket(b, &self.grad_buf[lo..hi]);
         }

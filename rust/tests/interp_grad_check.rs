@@ -168,6 +168,23 @@ fn mean_square_loss_backward() {
 }
 
 #[test]
+fn sigmoid_bce_loss_backward() {
+    let m = 8usize;
+    let mut rng = Rng::new(18);
+    let logits = randn(&mut rng, m);
+    let y: Vec<i32> = (0..m as i32).map(|i| i % 2).collect();
+    let mut dl = vec![0.0f32; m];
+    ops::sigmoid_bce_loss(&logits, &y, m, &mut dl);
+    for i in 0..m {
+        let fd = central_diff(&logits, i, &mut |lp| {
+            let mut scratch = vec![0.0f32; m];
+            ops::sigmoid_bce_loss(lp, &y, m, &mut scratch)
+        });
+        assert_close(dl[i] as f64, fd, &format!("sigmoid_bce dl[{i}]"));
+    }
+}
+
+#[test]
 fn softmax_xent_loss_backward() {
     let (m, c) = (4usize, 5);
     let mut rng = Rng::new(16);
@@ -233,6 +250,58 @@ fn full_program_gradient_matches_fd() {
             r.unwrap() as f64
         });
         assert_close(grads[i] as f64, fd, &format!("program grad[{i}]"));
+    }
+}
+
+/// Composition check for the sigmoid-BCE head: the full streamed backward
+/// of a sigmoid hidden layer + single-logit output under the BCE train
+/// loss (the det/dlrm-style head) against FD — smooth everywhere, so no
+/// kink-guarding needed. Same precision budget as the per-op checks.
+#[test]
+fn bce_program_gradient_matches_fd() {
+    use adacons::data::Array;
+    let prog = ProgramSpec {
+        layers: vec![
+            Dense {
+                in_dim: 4,
+                out_dim: 5,
+                w_off: 5,
+                b_off: Some(0),
+                act: Act::Sigmoid,
+                init_std: 0.7,
+            },
+            Dense {
+                in_dim: 5,
+                out_dim: 1,
+                w_off: 26,
+                b_off: Some(25),
+                act: Act::Linear,
+                init_std: 0.7,
+            },
+        ],
+        loss: Loss::SigmoidBce,
+    };
+    prog.validate().unwrap();
+    let d = prog.param_dim();
+    let params = adacons::runtime::interp::init_params(&prog, 23);
+    let m = 6usize;
+    let mut rng = Rng::new(19);
+    let x = randn(&mut rng, m * 4);
+    let y: Vec<i32> = (0..m as i32).map(|i| i % 2).collect();
+    let batch = vec![Array::F32(x, vec![m, 4]), Array::I32(y, vec![m])];
+
+    let exec = mk_exec(prog.clone());
+    let mut grads = vec![0.0f32; d];
+    let r = exec.run_train_stream(&params, &batch, &mut grads, &mut |_, _, _| {});
+    r.unwrap();
+
+    for i in 0..d {
+        let fd = central_diff(&params, i, &mut |pp| {
+            let mut scratch = vec![0.0f32; d];
+            let r = exec.run_train_stream(pp, &batch, &mut scratch, &mut |_, _, _| {});
+            r.unwrap() as f64
+        });
+        assert_close(grads[i] as f64, fd, &format!("bce grad[{i}]"));
     }
 }
 

@@ -9,7 +9,7 @@
 //! must additionally be bitwise-stable across *different shard plans*.
 
 use adacons::aggregation::{self, Aggregator};
-use adacons::collective::{CostModel, SimClock, Topology};
+use adacons::collective::{CostModel, HierCostModel, NodeMap, SimClock, Topology};
 use adacons::comm::StepExchange;
 use adacons::coordinator::pipeline::PipelinedExecutor;
 use adacons::parallel::{ParallelCtx, ParallelPolicy};
@@ -469,6 +469,291 @@ fn threaded_rank_panic_fails_step_with_rank_id_instead_of_hanging() {
     for (rank, h) in handles.into_iter().enumerate() {
         assert_eq!(h.join().is_err(), rank == 2, "rank {rank}");
     }
+}
+
+/// Drive one pipelined step with a **two-level hierarchical** aggregator
+/// through the grouped executor (per-node-group ingest tasks), fed by the
+/// round-robin producer. `hier_cost` switches on the two-level timeline.
+fn hier_pipelined_step(
+    name: &str,
+    rows: &[Vec<f32>],
+    buckets: &Buckets,
+    threads: usize,
+    min_shard: usize,
+    overlap: bool,
+    compute_s: &[f64],
+    map: &NodeMap,
+    hier_cost: Option<HierCostModel>,
+    topo: &Topology,
+) -> (Vec<f32>, adacons::coordinator::pipeline::StepOutcome, SimClock) {
+    let n = rows.len();
+    let d = buckets.total();
+    let ctx = ctx(threads, min_shard);
+    let mut agg = aggregation::hierarchical(name, map.clone(), n).unwrap();
+    let mut exec = PipelinedExecutor::with_topology(
+        n,
+        buckets.clone(),
+        overlap,
+        Some(map.clone()),
+        hier_cost,
+    );
+    let mut grads = GradSet::zeros(n, d);
+    let mut out = vec![0.0f32; d];
+    let mut clock = SimClock::new(n);
+    let cost = CostModel::from_topology(topo);
+    let mut produce = |rank: usize,
+                       deliver: &mut dyn FnMut(usize, &[f32])|
+     -> Result<(f64, f64)> {
+        for (b, (lo, hi)) in buckets.iter().enumerate() {
+            deliver(b, &rows[rank][lo..hi]);
+        }
+        Ok((0.0, compute_s[rank]))
+    };
+    let outcome = exec
+        .run_step(
+            &mut produce,
+            agg.as_mut(),
+            &mut grads,
+            &mut out,
+            &ctx,
+            &mut clock,
+            &cost,
+        )
+        .unwrap();
+    (out, outcome, clock)
+}
+
+#[test]
+fn hier_two_level_bitwise_equal_across_threads_and_overlap() {
+    // Acceptance gate for the hierarchy subsystem: the grouped executor
+    // (per-node ingest tasks, overlap on or off, any pool thread count)
+    // must produce the exact bits of the hierarchical aggregator's
+    // inline path — for all five aggregator families, on even and
+    // uneven node maps, with a ragged CHUNK-unaligned bucketization.
+    let (n, d) = (6usize, 2 * CHUNK + 311);
+    let gs = random_set(n, d, 0x41E7);
+    let rows: Vec<Vec<f32>> = (0..n).map(|i| gs.row(i).to_vec()).collect();
+    let buckets = Buckets::fixed(d, CHUNK / 2 + 133);
+    let compute = vec![0.01; n];
+    let topo = Topology::ring_gbps(n, 100.0);
+    for map in [NodeMap::even(2, 3), NodeMap::from_sizes(&[3, 2, 1])] {
+        for name in FIVE {
+            let mut oracle = vec![0.0f32; d];
+            aggregation::hierarchical(name, map.clone(), n)
+                .unwrap()
+                .aggregate_ctx(&gs, &buckets, &mut oracle, &ctx(1, CHUNK));
+            for t in thread_grid() {
+                for overlap in [true, false] {
+                    let (out, _, _) = hier_pipelined_step(
+                        name, &rows, &buckets, t, CHUNK, overlap, &compute, &map, None,
+                        &topo,
+                    );
+                    assert_eq!(
+                        out, oracle,
+                        "{name}: map {map:?} t={t} overlap={overlap}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn hier_degenerate_maps_bitwise_identical_to_flat_through_executor() {
+    // hier:1xN and hier:Nx1 must reproduce the flat path bit-for-bit,
+    // through the full executor (both delegate: the wrapper to its base,
+    // the executor to the flat ingest path).
+    let (n, d) = (4usize, 2 * CHUNK + 55);
+    let gs = random_set(n, d, 0xD2);
+    let rows: Vec<Vec<f32>> = (0..n).map(|i| gs.row(i).to_vec()).collect();
+    let buckets = Buckets::fixed(d, 500);
+    let compute = vec![0.01; n];
+    let topo = Topology::ring_gbps(n, 100.0);
+    for name in FIVE {
+        let (flat, _, _) = pipelined_step(name, &rows, &buckets, 2, CHUNK, true, &compute);
+        for map in [NodeMap::even(1, n), NodeMap::even(n, 1)] {
+            let (hier, _, _) = hier_pipelined_step(
+                name, &rows, &buckets, 2, CHUNK, true, &compute, &map, None, &topo,
+            );
+            assert_eq!(flat, hier, "{name}: degenerate {map:?} != flat");
+        }
+    }
+}
+
+/// Exchange-fed hierarchical step: rank threads on a **grouped** exchange
+/// submit their buckets in rotated order; the leader runs the grouped
+/// executor. Returns the aggregated output.
+fn hier_exchange_step(
+    name: &str,
+    rows: &[Vec<f32>],
+    buckets: &Buckets,
+    threads: usize,
+    overlap: bool,
+    compute_s: &[f64],
+    map: &NodeMap,
+    round: usize,
+) -> Vec<f32> {
+    let n = rows.len();
+    let d = buckets.total();
+    let (exchange, ports) = StepExchange::new_grouped(map);
+    let mut handles = Vec::new();
+    for port in ports {
+        let rank = port.rank();
+        let row = rows[rank].clone();
+        let bk = buckets.clone();
+        let cs = compute_s[rank];
+        handles.push(std::thread::spawn(move || {
+            let nb = bk.len();
+            for i in 0..nb {
+                let b = (i + rank + round) % nb;
+                let (lo, hi) = bk.range(b);
+                port.submit_bucket(b, row[lo..hi].to_vec());
+            }
+            port.done(0.0, cs);
+            port.complete();
+        }));
+    }
+    let ctx = ctx(threads, CHUNK);
+    let mut agg = aggregation::hierarchical(name, map.clone(), n).unwrap();
+    let mut exec =
+        PipelinedExecutor::with_topology(n, buckets.clone(), overlap, Some(map.clone()), None);
+    let mut grads = GradSet::zeros(n, d);
+    let mut out = vec![0.0f32; d];
+    let mut clock = SimClock::new(n);
+    let cost = CostModel::from_topology(&Topology::ring_gbps(n, 100.0));
+    exec.run_step_exchange(
+        &exchange,
+        agg.as_mut(),
+        &mut grads,
+        &mut out,
+        &ctx,
+        &mut clock,
+        &cost,
+    )
+    .unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+    out
+}
+
+#[test]
+fn threaded_exchange_hier_bitwise_equals_roundrobin() {
+    // The threaded acceptance gate extended to the hierarchy: N rank
+    // threads on a grouped exchange, arbitrary arrival interleavings,
+    // must produce the producer path's exact bits for all five base
+    // aggregators on an uneven map (repeat-run with rotated submission
+    // orders to vary which node completes each bucket first).
+    let (n, d) = (6usize, CHUNK + 211);
+    let gs = random_set(n, d, 0x7E4E);
+    let rows: Vec<Vec<f32>> = (0..n).map(|i| gs.row(i).to_vec()).collect();
+    let buckets = Buckets::fixed(d, CHUNK / 4 + 57);
+    let compute = vec![0.01; n];
+    let map = NodeMap::from_sizes(&[3, 2, 1]);
+    let topo = Topology::ring_gbps(n, 100.0);
+    for name in FIVE {
+        for t in thread_grid() {
+            let (base, _, _) = hier_pipelined_step(
+                name, &rows, &buckets, t, CHUNK, true, &compute, &map, None, &topo,
+            );
+            for round in 0..12 {
+                let got =
+                    hier_exchange_step(name, &rows, &buckets, t, true, &compute, &map, round);
+                assert_eq!(base, got, "{name}: t={t} round={round}");
+            }
+        }
+    }
+}
+
+#[test]
+fn hier_timeline_exposes_less_inter_comm_than_flat_single_nic() {
+    // Acceptance: on the paper's 8x4 testbed, the hierarchical timeline
+    // (per-node NVLink reduces + leader-level consensus over 8 ranks)
+    // must report strictly less exposed inter-node communication than the
+    // flat single-NIC model aggregating 32 ranks over the bottleneck
+    // fabric.
+    let topo = Topology::paper_testbed();
+    let n = topo.n_ranks();
+    let d = 8 * CHUNK;
+    let gs = random_set(n, d, 0xFA81);
+    let rows: Vec<Vec<f32>> = (0..n).map(|i| gs.row(i).to_vec()).collect();
+    let buckets = Buckets::fixed(d, CHUNK);
+    let compute = vec![5e-4; n]; // small compute: comm is what's measured
+    // Flat single-NIC baseline: plain adacons over all 32 ranks, every
+    // transfer on the bottleneck link.
+    let flat = {
+        let ctx = ctx(2, CHUNK);
+        let mut agg = aggregation::by_name("adacons", n).unwrap();
+        let mut exec = PipelinedExecutor::new(n, buckets.clone(), true);
+        let mut grads = GradSet::zeros(n, d);
+        let mut out = vec![0.0f32; d];
+        let mut clock = SimClock::new(n);
+        let cost = CostModel::from_topology(&topo);
+        let mut produce = |rank: usize,
+                           deliver: &mut dyn FnMut(usize, &[f32])|
+         -> Result<(f64, f64)> {
+            for (b, (lo, hi)) in buckets.iter().enumerate() {
+                deliver(b, &rows[rank][lo..hi]);
+            }
+            Ok((0.0, compute[rank]))
+        };
+        exec.run_step(
+            &mut produce,
+            agg.as_mut(),
+            &mut grads,
+            &mut out,
+            &ctx,
+            &mut clock,
+            &cost,
+        )
+        .unwrap()
+    };
+    assert_eq!(flat.exposed_intra_comm_s, 0.0);
+    assert!(flat.exposed_comm_s > 0.0);
+    assert!((flat.exposed_inter_comm_s - flat.exposed_comm_s).abs() < 1e-15);
+    // Hierarchical: two-level aggregation + two-level timeline.
+    let hier = HierCostModel::from_topology(&topo).unwrap();
+    let map = hier.map.clone();
+    let (_, hier_on, _) = hier_pipelined_step(
+        "adacons",
+        &rows,
+        &buckets,
+        2,
+        CHUNK,
+        true,
+        &compute,
+        &map,
+        Some(hier),
+        &topo,
+    );
+    assert!(
+        hier_on.exposed_inter_comm_s < flat.exposed_comm_s,
+        "hier inter {} !< flat {}",
+        hier_on.exposed_inter_comm_s,
+        flat.exposed_comm_s
+    );
+    // The serial (fully exposed) accounting is overlap-invariant on the
+    // hierarchical path too.
+    let hier2 = HierCostModel::from_topology(&topo).unwrap();
+    let (_, hier_off, _) = hier_pipelined_step(
+        "adacons",
+        &rows,
+        &buckets,
+        2,
+        CHUNK,
+        false,
+        &compute,
+        &map,
+        Some(hier2),
+        &topo,
+    );
+    assert!(
+        (hier_on.serial_comm_s - hier_off.serial_comm_s).abs() < 1e-12,
+        "{} vs {}",
+        hier_on.serial_comm_s,
+        hier_off.serial_comm_s
+    );
+    assert!(hier_on.exposed_comm_s < hier_off.exposed_comm_s);
 }
 
 #[test]

@@ -32,6 +32,9 @@ for tt in 1 2 4; do
   for i in $(seq "$STRESS_ITERS"); do
     echo "-- stress pass ${i}/${STRESS_ITERS} (--test-threads ${tt}) --"
     cargo test -q --test parallel_equivalence threaded -- --test-threads "$tt"
+    # Hierarchical two-level parity (grouped ingest, node-level bucket
+    # completion order varies with scheduling).
+    cargo test -q --test parallel_equivalence hier -- --test-threads "$tt"
     cargo test -q --lib comm:: -- --test-threads "$tt"
     cargo test -q --lib coordinator:: -- --test-threads "$tt"
   done
@@ -49,10 +52,12 @@ if [[ "${1:-}" != "--no-bench" ]]; then
   cp BENCH_aggregation.json "bench_history/${sha}.json"
   echo "archived bench_history/${sha}.json"
   if [[ -f bench_history/baseline.json ]]; then
-    # Fail if the aggregate-phase median regresses >1.3x, or either
-    # adacons_step overlap case's median regresses >1.5x, vs the
-    # committed baseline (both sides are smoke-grid runs; the step gate
-    # is looser — rationale in EXPERIMENTS.md §Perf).
+    # Fail if the aggregate-phase median regresses >1.3x, or any step
+    # case's median (adacons_step / interp_step / hier_step groups)
+    # regresses >1.5x, vs the committed baseline (both sides are
+    # smoke-grid runs; the step gate is looser — rationale in
+    # EXPERIMENTS.md §Perf). hier_step groups skip cleanly on baselines
+    # that predate them.
     cargo run --release --bin bench_aggregation -- \
       --compare bench_history/baseline.json BENCH_aggregation.json \
       --max-regress 1.3 --max-regress-step 1.5
