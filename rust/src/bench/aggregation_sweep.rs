@@ -429,7 +429,9 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Json> {
         }
     }
     if cfg.interp_step {
-        println!("-- interpreter train step (mlp_cls_b32, roundrobin vs threaded ranks) --");
+        println!("-- interpreter matmul kernels (blocked, pool-sharded) --");
+        matmul_kernel_cases(cfg.budget_s, &threads, cfg.min_shard_elems, &mut baseline, &mut cases);
+        println!("-- interpreter train step (mlp_cls_b32 / dlrm_lite, roundrobin vs threaded ranks) --");
         interp_step_cases(cfg.budget_s, &threads, cfg.min_shard_elems, &mut baseline, &mut cases)?;
     }
     Ok(obj(vec![
@@ -443,14 +445,103 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Json> {
     ]))
 }
 
+/// The `matmul` dimension: GFLOP/s rows for the three blocked,
+/// pool-sharded interpreter matmul kernels (forward, dW, dX) on one
+/// MLP-sized shape, per thread count. These are the kernels every
+/// `interp_step` case spends its compute in; tracking them directly makes
+/// a kernel regression attributable before it is diluted by step-loop
+/// overhead.
+fn matmul_kernel_cases(
+    budget_s: f64,
+    threads: &[usize],
+    min_shard_elems: usize,
+    baseline: &mut BTreeMap<(String, usize, usize), f64>,
+    cases: &mut Vec<Json>,
+) {
+    use crate::runtime::interp::ops;
+
+    let (m, k, n) = (128usize, 512, 512);
+    let flops = 2.0 * (m * k * n) as f64;
+    let mut rng = Rng::new(7);
+    let mut x = vec![0.0f32; m * k];
+    let mut w = vec![0.0f32; k * n];
+    let mut dz = vec![0.0f32; m * n];
+    rng.fill_normal_f32(&mut x, 1.0);
+    rng.fill_normal_f32(&mut w, 1.0);
+    rng.fill_normal_f32(&mut dz, 1.0);
+    let mut out = vec![0.0f32; m * n];
+    let mut dw = vec![0.0f32; k * n];
+    let mut dx = vec![0.0f32; m * k];
+    for &t in threads {
+        let ctx = ParallelCtx::new(ParallelPolicy {
+            threads: t,
+            min_shard_elems,
+        });
+        let runs: Vec<(&str, crate::bench::BenchResult)> = vec![
+            (
+                "fwd",
+                bench_auto(&format!("matmul fwd      {m}x{k}x{n} t={t}"), budget_s, || {
+                    ops::matmul_ctx(&ctx, &x, m, k, &w, n, &mut out);
+                }),
+            ),
+            (
+                "dw",
+                bench_auto(&format!("matmul dw       {m}x{k}x{n} t={t}"), budget_s, || {
+                    ops::matmul_dw_ctx(&ctx, &x, &dz, m, k, n, &mut dw);
+                }),
+            ),
+            (
+                "dx",
+                bench_auto(&format!("matmul dx       {m}x{k}x{n} t={t}"), budget_s, || {
+                    ops::matmul_dx_ctx(&ctx, &dz, &w, m, k, n, &mut dx);
+                }),
+            ),
+        ];
+        for (kernel, r) in runs {
+            let key = (format!("matmul_{kernel}"), m, k * n);
+            if t == threads[0] {
+                baseline.insert(key.clone(), r.mean_s);
+            }
+            let speedup = baseline.get(&key).map(|&b| b / r.mean_s);
+            let gflops = flops / r.p50_s / 1e9;
+            println!(
+                "{}   [{gflops:.2} GFLOP/s]{}",
+                r.report_line(),
+                speedup
+                    .map(|s| format!("  [{s:.2}x vs 1t]"))
+                    .unwrap_or_default()
+            );
+            cases.push(obj(vec![
+                ("op", s("matmul")),
+                ("kernel", s(kernel)),
+                ("m", num(m as f64)),
+                ("k", num(k as f64)),
+                ("n", num(n as f64)),
+                // The shared-schema keys the validator requires.
+                ("workers", num(1.0)),
+                ("d", num((m * k * n) as f64)),
+                ("threads", num(t as f64)),
+                ("iters", num(r.iters as f64)),
+                ("mean_s", num(r.mean_s)),
+                ("p50_s", num(r.p50_s)),
+                ("p99_s", num(r.p99_s)),
+                ("gflops", num(gflops)),
+                ("speedup_vs_1t", speedup.map(num).unwrap_or(Json::Null)),
+            ]));
+        }
+    }
+}
+
 /// The `interp_step` dimension: a full train step — real interpreter
 /// backward per rank, streamed bucket arrival, pipelined aggregation
-/// (overlap on) — on the builtin `mlp_cls_b32` artifact, in both
-/// execution modes: `roundrobin` (ranks produced serially on the leader
-/// thread) vs `threaded` (a persistent `RankTeam`, one OS thread per
-/// rank, buckets ingested in arrival order over the exchange). Tracks
-/// what the kernel-only cases cannot: backend compute plus the real
-/// threading/transport overhead of the step loop.
+/// (overlap on) — on the builtin `mlp_cls_b32` and `dlrm_lite`
+/// artifacts, in both execution modes: `roundrobin` (ranks produced
+/// serially on the leader thread) vs `threaded` (a persistent
+/// `RankTeam`, one OS thread per rank, buckets ingested in arrival order
+/// over the exchange). Tracks what the kernel-only cases cannot: backend
+/// compute plus the real threading/transport overhead of the step loop —
+/// and, through `dlrm_lite`, the embedding gather/scatter and layernorm
+/// paths.
 fn interp_step_cases(
     budget_s: f64,
     threads: &[usize],
@@ -464,106 +555,127 @@ fn interp_step_cases(
     use crate::worker::Worker;
 
     let n = 4usize;
-    let artifact = "mlp_cls_b32";
     let rt = Runtime::create_with(
         std::env::temp_dir().join("adacons_bench_interp"),
         Backend::Interp,
     )?;
-    let exe = rt.load(artifact)?;
-    let d = exe.spec.param_dim;
-    let local_batch = exe.spec.local_batch();
-    let params = exe.spec.load_init(0)?;
-    let buckets = Buckets::fixed(d, d.div_ceil(8).max(1));
-    let cost = CostModel::from_topology(&Topology::ring_gbps(n, 100.0));
-    let mk_workers = || -> Result<Vec<Worker>> {
-        (0..n)
-            .map(|rank| {
-                let gen =
-                    crate::data::for_model(&exe.spec.model, 42, rank as u64, 0.0, &exe.spec.meta)
-                        .context("no data generator for the bench artifact")?;
-                Ok(Worker::new(rank, gen, GradInjector::None, 42))
-            })
-            .collect()
-    };
-    for &t in threads {
-        let ctx = ParallelCtx::new(ParallelPolicy {
-            threads: t,
-            min_shard_elems,
-        });
-        for mode in ["roundrobin", "threaded"] {
-            let mut agg = aggregation::by_name("adacons", n).context("adacons not in registry")?;
-            let mut exec = PipelinedExecutor::new(n, buckets.clone(), true);
-            let mut grads = GradSet::zeros(n, d);
-            let mut out = vec![0.0f32; d];
-            let mut clock = SimClock::new(n);
-            let label = format!("interp step     N={n} d={d} t={t} mode={mode}");
-            let r = if mode == "roundrobin" {
-                let mut workers = mk_workers()?;
-                bench_auto(&label, budget_s, || {
-                    let mut produce = |rank: usize,
-                                       deliver: &mut dyn FnMut(usize, &[f32])|
-                     -> Result<(f64, f64)> {
-                        let w = &mut workers[rank];
-                        w.compute_grad_buckets(&exe, &params, local_batch, &buckets, deliver)?;
-                        Ok((w.last_loss as f64, w.last_compute_s))
-                    };
-                    exec.run_step(
-                        &mut produce,
-                        agg.as_mut(),
-                        &mut grads,
-                        &mut out,
-                        &ctx,
-                        &mut clock,
-                        &cost,
+    for artifact in ["mlp_cls_b32", "dlrm_lite"] {
+        let exe = rt.load(artifact)?;
+        let d = exe.spec.param_dim;
+        let local_batch = exe.spec.local_batch();
+        let params = exe.spec.load_init(0)?;
+        let buckets = Buckets::fixed(d, d.div_ceil(8).max(1));
+        let cost = CostModel::from_topology(&Topology::ring_gbps(n, 100.0));
+        let mk_workers = || -> Result<Vec<Worker>> {
+            (0..n)
+                .map(|rank| {
+                    let gen = crate::data::for_model(
+                        &exe.spec.model,
+                        42,
+                        rank as u64,
+                        0.0,
+                        &exe.spec.meta,
                     )
-                    .expect("roundrobin bench step");
+                    .context("no data generator for the bench artifact")?;
+                    Ok(Worker::new(rank, gen, GradInjector::None, 42))
                 })
-            } else {
-                // Spawn once, reuse across every bench iteration — the
-                // deployment shape the trainer uses.
-                let team =
-                    RankTeam::spawn(&rt, artifact, mk_workers()?, &buckets, local_batch, None)?;
-                let shared = std::sync::Arc::new(params.clone());
-                bench_auto(&label, budget_s, || {
-                    team.begin_step(&shared).expect("rank team alive");
-                    exec.run_step_exchange(
-                        team.exchange(),
-                        agg.as_mut(),
-                        &mut grads,
-                        &mut out,
+                .collect()
+        };
+        for &t in threads {
+            let ctx = ParallelCtx::new(ParallelPolicy {
+                threads: t,
+                min_shard_elems,
+            });
+            for mode in ["roundrobin", "threaded"] {
+                let mut agg =
+                    aggregation::by_name("adacons", n).context("adacons not in registry")?;
+                let mut exec = PipelinedExecutor::new(n, buckets.clone(), true);
+                let mut grads = GradSet::zeros(n, d);
+                let mut out = vec![0.0f32; d];
+                let mut clock = SimClock::new(n);
+                let label = format!("interp step     {artifact} N={n} t={t} mode={mode}");
+                let r = if mode == "roundrobin" {
+                    let mut workers = mk_workers()?;
+                    bench_auto(&label, budget_s, || {
+                        let mut produce = |rank: usize,
+                                           deliver: &mut dyn FnMut(usize, &[f32])|
+                         -> Result<(f64, f64)> {
+                            let w = &mut workers[rank];
+                            w.compute_grad_buckets(
+                                &exe,
+                                &params,
+                                local_batch,
+                                &buckets,
+                                &ctx,
+                                deliver,
+                            )?;
+                            Ok((w.last_loss as f64, w.last_compute_s))
+                        };
+                        exec.run_step(
+                            &mut produce,
+                            agg.as_mut(),
+                            &mut grads,
+                            &mut out,
+                            &ctx,
+                            &mut clock,
+                            &cost,
+                        )
+                        .expect("roundrobin bench step");
+                    })
+                } else {
+                    // Spawn once, reuse across every bench iteration — the
+                    // deployment shape the trainer uses.
+                    let team = RankTeam::spawn(
+                        &rt,
+                        artifact,
+                        mk_workers()?,
+                        &buckets,
+                        local_batch,
                         &ctx,
-                        &mut clock,
-                        &cost,
-                    )
-                    .expect("threaded bench step");
-                })
-            };
-            let key = (format!("interp_step_{mode}"), n, d);
-            if t == threads[0] {
-                baseline.insert(key.clone(), r.mean_s);
+                        None,
+                    )?;
+                    let shared = std::sync::Arc::new(params.clone());
+                    bench_auto(&label, budget_s, || {
+                        team.begin_step(&shared).expect("rank team alive");
+                        exec.run_step_exchange(
+                            team.exchange(),
+                            agg.as_mut(),
+                            &mut grads,
+                            &mut out,
+                            &ctx,
+                            &mut clock,
+                            &cost,
+                        )
+                        .expect("threaded bench step");
+                    })
+                };
+                let key = (format!("interp_step_{mode}"), n, d);
+                if t == threads[0] {
+                    baseline.insert(key.clone(), r.mean_s);
+                }
+                let speedup = baseline.get(&key).map(|&b| b / r.mean_s);
+                println!(
+                    "{}{}",
+                    r.report_line(),
+                    speedup
+                        .map(|x| format!("  [{x:.2}x vs 1t]"))
+                        .unwrap_or_default()
+                );
+                cases.push(obj(vec![
+                    ("op", s("interp_step")),
+                    ("mode", s(mode)),
+                    ("artifact", s(artifact)),
+                    ("workers", num(n as f64)),
+                    ("d", num(d as f64)),
+                    ("threads", num(t as f64)),
+                    ("buckets", num(buckets.len() as f64)),
+                    ("iters", num(r.iters as f64)),
+                    ("mean_s", num(r.mean_s)),
+                    ("p50_s", num(r.p50_s)),
+                    ("p99_s", num(r.p99_s)),
+                    ("speedup_vs_1t", speedup.map(num).unwrap_or(Json::Null)),
+                ]));
             }
-            let speedup = baseline.get(&key).map(|&b| b / r.mean_s);
-            println!(
-                "{}{}",
-                r.report_line(),
-                speedup
-                    .map(|x| format!("  [{x:.2}x vs 1t]"))
-                    .unwrap_or_default()
-            );
-            cases.push(obj(vec![
-                ("op", s("interp_step")),
-                ("mode", s(mode)),
-                ("artifact", s(artifact)),
-                ("workers", num(n as f64)),
-                ("d", num(d as f64)),
-                ("threads", num(t as f64)),
-                ("buckets", num(buckets.len() as f64)),
-                ("iters", num(r.iters as f64)),
-                ("mean_s", num(r.mean_s)),
-                ("p50_s", num(r.p50_s)),
-                ("p99_s", num(r.p99_s)),
-                ("speedup_vs_1t", speedup.map(num).unwrap_or(Json::Null)),
-            ]));
         }
     }
     Ok(())
@@ -614,12 +726,13 @@ fn load_doc(path: &str) -> Result<Json> {
     Json::parse(&text).map_err(|e| crate::err!("{path}: {e}"))
 }
 
-/// Median `mean_s` of the measured cases matching `op` (and, when given,
-/// a `(key, value)` tag such as `("overlap", "on")` or
-/// `("mode", "threaded")`). `None` when the document has no matching
-/// cases — older baselines predate the `adacons_step`/`interp_step`
-/// cases, and the gate must not hard-fail on them.
-fn case_median(doc: &Json, op: &str, tag: Option<(&str, &str)>) -> Result<Option<f64>> {
+/// Median `mean_s` of the measured cases matching `op` and every
+/// `(key, value)` tag in `tags` (e.g. `[("overlap", "on")]` or
+/// `[("mode", "threaded"), ("artifact", "dlrm_lite")]`). `None` when the
+/// document has no matching cases — older baselines predate the
+/// `adacons_step`/`interp_step`/`matmul` cases, and the gate must not
+/// hard-fail on them.
+fn case_median(doc: &Json, op: &str, tags: &[(&str, &str)]) -> Result<Option<f64>> {
     let mut v: Vec<f64> = doc
         .get("cases")
         .as_arr()
@@ -628,7 +741,7 @@ fn case_median(doc: &Json, op: &str, tag: Option<(&str, &str)>) -> Result<Option
         .filter(|c| {
             c.get("op").as_str() == Some(op)
                 && c.get("skipped").as_bool() != Some(true)
-                && tag.is_none_or(|(k, m)| c.get(k).as_str() == Some(m))
+                && tags.iter().all(|&(k, m)| c.get(k).as_str() == Some(m))
         })
         .filter_map(|c| c.get("mean_s").as_f64())
         .collect();
@@ -666,8 +779,12 @@ fn gate_one(
 ///   scheduling + simulated-timeline work whose variance is higher than
 ///   the pure kernels' (see EXPERIMENTS.md §Perf for the measured basis);
 /// * the `interp_step` backend train-step medians (roundrobin and
-///   threaded rank execution) at `max_step_ratio` — same rationale plus
-///   OS-thread scheduling (EXPERIMENTS.md §Threaded-execution).
+///   threaded rank execution, per artifact) at `max_step_ratio` — same
+///   rationale plus OS-thread scheduling (EXPERIMENTS.md
+///   §Threaded-execution);
+/// * the `matmul` kernel medians (fwd/dw/dx) at `max_step_ratio` — the
+///   blocked interpreter kernels every interp step spends its compute
+///   in.
 ///
 /// Step groups are skipped with a notice when the baseline predates
 /// their cases.
@@ -679,24 +796,34 @@ pub fn compare_files(
 ) -> Result<()> {
     let base_doc = load_doc(baseline)?;
     let cur_doc = load_doc(current)?;
-    let b = case_median(&base_doc, "adacons", None)?
+    let b = case_median(&base_doc, "adacons", &[])?
         .with_context(|| format!("{baseline}: no measured adacons cases"))?;
-    let c = case_median(&cur_doc, "adacons", None)?
+    let c = case_median(&cur_doc, "adacons", &[])?
         .with_context(|| format!("{current}: no measured adacons cases"))?;
     gate_one("aggregate-phase (adacons)", b, c, max_ratio, baseline)?;
-    let step_groups: [(&str, (&str, &str)); 6] = [
-        ("adacons_step", ("overlap", "off")),
-        ("adacons_step", ("overlap", "on")),
-        ("interp_step", ("mode", "roundrobin")),
-        ("interp_step", ("mode", "threaded")),
-        ("hier_step", ("overlap", "off")),
-        ("hier_step", ("overlap", "on")),
+    let step_groups: &[(&str, &[(&str, &str)])] = &[
+        ("adacons_step", &[("overlap", "off")]),
+        ("adacons_step", &[("overlap", "on")]),
+        ("interp_step", &[("mode", "roundrobin"), ("artifact", "mlp_cls_b32")]),
+        ("interp_step", &[("mode", "threaded"), ("artifact", "mlp_cls_b32")]),
+        ("interp_step", &[("mode", "roundrobin"), ("artifact", "dlrm_lite")]),
+        ("interp_step", &[("mode", "threaded"), ("artifact", "dlrm_lite")]),
+        ("hier_step", &[("overlap", "off")]),
+        ("hier_step", &[("overlap", "on")]),
+        ("matmul", &[("kernel", "fwd")]),
+        ("matmul", &[("kernel", "dw")]),
+        ("matmul", &[("kernel", "dx")]),
     ];
-    for (op, (key, val)) in step_groups {
-        let label = format!("pipelined step ({op} {key}={val})");
+    for &(op, tags) in step_groups {
+        let tag_str = tags
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        let label = format!("pipelined step ({op} {tag_str})");
         match (
-            case_median(&base_doc, op, Some((key, val)))?,
-            case_median(&cur_doc, op, Some((key, val)))?,
+            case_median(&base_doc, op, tags)?,
+            case_median(&cur_doc, op, tags)?,
         ) {
             (Some(b), Some(c)) => gate_one(&label, b, c, max_step_ratio, baseline)?,
             (b, c) => println!(
@@ -839,18 +966,41 @@ mod tests {
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
-        // 4 kernel ops + 2 interp execution modes.
-        assert_eq!(cases.len(), 6);
-        let modes: Vec<&str> = cases
+        // 4 kernel ops + 3 matmul kernels + 2 interp execution modes x 2
+        // artifacts.
+        assert_eq!(cases.len(), 11);
+        let modes: Vec<(&str, &str)> = cases
             .iter()
             .filter(|c| c.get("op").as_str() == Some("interp_step"))
-            .filter_map(|c| c.get("mode").as_str())
+            .map(|c| {
+                (
+                    c.get("artifact").as_str().unwrap(),
+                    c.get("mode").as_str().unwrap(),
+                )
+            })
             .collect();
-        assert_eq!(modes, vec!["roundrobin", "threaded"]);
+        assert_eq!(
+            modes,
+            vec![
+                ("mlp_cls_b32", "roundrobin"),
+                ("mlp_cls_b32", "threaded"),
+                ("dlrm_lite", "roundrobin"),
+                ("dlrm_lite", "threaded"),
+            ]
+        );
+        let matmul: Vec<&str> = cases
+            .iter()
+            .filter(|c| c.get("op").as_str() == Some("matmul"))
+            .filter_map(|c| c.get("kernel").as_str())
+            .collect();
+        assert_eq!(matmul, vec!["fwd", "dw", "dx"]);
         for c in cases {
-            if c.get("op").as_str() == Some("interp_step") {
+            let op = c.get("op").as_str().unwrap();
+            if op == "interp_step" || op == "matmul" {
                 assert!(c.get("mean_s").as_f64().unwrap() > 0.0);
-                assert_eq!(c.get("artifact").as_str(), Some("mlp_cls_b32"));
+            }
+            if op == "matmul" {
+                assert!(c.get("gflops").as_f64().unwrap() > 0.0);
             }
         }
     }
@@ -930,25 +1080,30 @@ mod tests {
     fn perf_gate_covers_interp_step_cases() {
         let dir = std::env::temp_dir().join("adacons_perf_gate_interp");
         std::fs::create_dir_all(&dir).unwrap();
-        let mk = |name: &str, rr_s: f64, th_s: f64| -> String {
+        let mk = |name: &str, rr_s: f64, th_s: f64, mm_s: f64| -> String {
             let path = dir.join(name);
             let doc = format!(
                 r#"{{"bench":"aggregation","cases":[
                     {{"op":"adacons","workers":4,"d":1000,"threads":1,"mean_s":0.010}},
-                    {{"op":"interp_step","mode":"roundrobin","workers":4,"d":1000,"threads":1,"mean_s":{rr_s}}},
-                    {{"op":"interp_step","mode":"threaded","workers":4,"d":1000,"threads":1,"mean_s":{th_s}}}
+                    {{"op":"interp_step","mode":"roundrobin","artifact":"mlp_cls_b32","workers":4,"d":1000,"threads":1,"mean_s":{rr_s}}},
+                    {{"op":"interp_step","mode":"threaded","artifact":"mlp_cls_b32","workers":4,"d":1000,"threads":1,"mean_s":{th_s}}},
+                    {{"op":"matmul","kernel":"fwd","workers":1,"d":1000,"threads":1,"mean_s":{mm_s}}}
                 ]}}"#
             );
             std::fs::write(&path, doc).unwrap();
             path.to_str().unwrap().to_string()
         };
-        let base = mk("base.json", 0.030, 0.028);
-        let ok = mk("ok.json", 0.035, 0.033);
+        let base = mk("base.json", 0.030, 0.028, 0.050);
+        let ok = mk("ok.json", 0.035, 0.033, 0.055);
         compare_files(&base, &ok, 1.3, 1.5).unwrap();
         // A threaded-mode regression beyond the step gate fails even when
         // the kernels and the roundrobin mode are fine.
-        let bad = mk("bad.json", 0.031, 0.060);
+        let bad = mk("bad.json", 0.031, 0.060, 0.050);
         assert!(compare_files(&base, &bad, 1.3, 1.5).is_err());
+        // So does a matmul kernel regression on its own: the fast kernels
+        // are gated as first-class rows, not only via the step they feed.
+        let badk = mk("badk.json", 0.031, 0.029, 0.120);
+        assert!(compare_files(&base, &badk, 1.3, 1.5).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

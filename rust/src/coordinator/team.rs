@@ -31,6 +31,7 @@ use std::thread::JoinHandle;
 
 use crate::collective::NodeMap;
 use crate::comm::{RankPort, StepExchange};
+use crate::parallel::ParallelCtx;
 use crate::runtime::{Executable, Runtime};
 use crate::tensor::Buckets;
 use crate::util::error::{ensure, Context, Result};
@@ -59,12 +60,18 @@ impl RankTeam {
     /// exchange (thread names carry the node id, ports know their group,
     /// and the leader can ingest node-level buckets) — the deployment
     /// shape of the hierarchical two-level aggregation path.
+    ///
+    /// Every rank thread gets a clone of `par` (sharing one worker pool),
+    /// so intra-rank kernel sharding composes with rank threading; the
+    /// kernels are bitwise invariant to the pool width, so any `par`
+    /// (including [`ParallelCtx::serial`]) yields identical training.
     pub fn spawn(
         rt: &Runtime,
         artifact: &str,
         workers: Vec<Worker>,
         buckets: &Buckets,
         local_batch: usize,
+        par: &ParallelCtx,
         map: Option<&NodeMap>,
     ) -> Result<RankTeam> {
         let n = workers.len();
@@ -94,13 +101,14 @@ impl RankTeam {
                 .with_context(|| format!("building rank {rank}'s executable"))?;
             let (tx, rx) = channel();
             let bk = buckets.clone();
+            let rank_par = par.clone();
             let name = match map {
                 Some(_) => format!("node{}-rank{rank}", port.node()),
                 None => format!("rank-{rank}"),
             };
             let h = std::thread::Builder::new()
                 .name(name)
-                .spawn(move || rank_main(worker, exe, port, bk, local_batch, rx))
+                .spawn(move || rank_main(worker, exe, port, bk, local_batch, rank_par, rx))
                 .with_context(|| format!("spawning rank {rank} thread"))?;
             cmds.push(tx);
             handles.push(h);
@@ -156,12 +164,14 @@ fn rank_main(
     port: RankPort,
     buckets: Buckets,
     local_batch: usize,
+    par: ParallelCtx,
     rx: Receiver<TeamCmd>,
 ) {
     while let Ok(TeamCmd::Step { params }) = rx.recv() {
-        let r = worker.compute_grad_buckets(&exe, &params, local_batch, &buckets, &mut |b, cols| {
-            port.submit_bucket(b, cols.to_vec());
-        });
+        let r =
+            worker.compute_grad_buckets(&exe, &params, local_batch, &buckets, &par, &mut |b, cols| {
+                port.submit_bucket(b, cols.to_vec());
+            });
         match r {
             Ok(()) => port.done_timed(
                 worker.last_loss as f64,
@@ -213,21 +223,28 @@ mod tests {
         let buckets = Buckets::fixed(d, 129); // ragged tail
         // Round-robin reference rows.
         let mut reference = vec![vec![0.0f32; d]; 3];
+        let serial = ParallelCtx::serial();
         for (rank, worker) in mk_workers(&rt, artifact, 3).iter_mut().enumerate() {
             worker
-                .compute_grad_buckets(&exe, &params, local_batch, &buckets, &mut |b, cols| {
+                .compute_grad_buckets(&exe, &params, local_batch, &buckets, &serial, &mut |b, cols| {
                     let (lo, hi) = buckets.range(b);
                     reference[rank][lo..hi].copy_from_slice(cols);
                 })
                 .unwrap();
         }
-        // Threaded team, same worker seeds.
+        // Threaded team, same worker seeds; a real shared pool must not
+        // change a single bit relative to the serial reference rows.
+        let par = ParallelCtx::new(crate::parallel::ParallelPolicy {
+            threads: 2,
+            min_shard_elems: 256,
+        });
         let team = RankTeam::spawn(
             &rt,
             artifact,
             mk_workers(&rt, artifact, 3),
             &buckets,
             local_batch,
+            &par,
             None,
         )
         .unwrap();
@@ -256,6 +273,7 @@ mod tests {
             mk_workers(&rt, artifact, 4),
             &buckets,
             exe.spec.local_batch(),
+            &ParallelCtx::serial(),
             None,
         )
         .unwrap();
@@ -280,6 +298,7 @@ mod tests {
             mk_workers(&rt, artifact, 4),
             &buckets,
             exe.spec.local_batch(),
+            &ParallelCtx::serial(),
             Some(&map),
         )
         .unwrap();
@@ -317,6 +336,7 @@ mod tests {
             mk_workers(&rt, artifact, 3),
             &buckets,
             exe.spec.local_batch(),
+            &ParallelCtx::serial(),
             Some(&NodeMap::even(2, 2)), // 4 ranks vs 3 workers
         )
         .unwrap_err();

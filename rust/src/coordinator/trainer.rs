@@ -198,6 +198,7 @@ impl Trainer {
                 workers,
                 &buckets,
                 exe.spec.local_batch(),
+                &par,
                 hier.as_ref().map(|h| &h.map),
             )?)
         } else {
@@ -280,13 +281,14 @@ impl Trainer {
             let mut grad_s = 0.0f64;
             let outcome = match &mut self.ranks {
                 Ranks::RoundRobin(workers) => {
-                    let (exe, params, buckets) = (&self.exe, &self.params, &self.buckets);
+                    let (exe, params, buckets, par) =
+                        (&self.exe, &self.params, &self.buckets, &self.par);
                     let mut produce = |rank: usize,
                                        deliver: &mut dyn FnMut(usize, &[f32])|
                      -> Result<(f64, f64)> {
                         let t = Timer::start();
                         let w = &mut workers[rank];
-                        w.compute_grad_buckets(exe, params, local_batch, buckets, deliver)?;
+                        w.compute_grad_buckets(exe, params, local_batch, buckets, par, deliver)?;
                         grad_s += t.elapsed_s();
                         Ok((w.last_loss as f64, w.last_compute_s))
                     };

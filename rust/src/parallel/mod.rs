@@ -81,14 +81,29 @@ pub struct ParPlan {
 
 /// A policy bound to a live pool: the execution context threaded through
 /// `Aggregator::aggregate_ctx` and the `GradSet` kernels.
+///
+/// The pool is behind an `Arc` so the context is `Clone`: the trainer
+/// builds one pool and hands a clone to every rank thread, and all ranks
+/// shard their backward over the same lanes (`WorkerPool::run_scope` is
+/// safe under concurrent scopes — callers drain each other's jobs, the
+/// shared pending counter only makes a scope wait a little longer).
 pub struct ParallelCtx {
     policy: ParallelPolicy,
-    pool: WorkerPool,
+    pool: std::sync::Arc<WorkerPool>,
+}
+
+impl Clone for ParallelCtx {
+    fn clone(&self) -> ParallelCtx {
+        ParallelCtx {
+            policy: self.policy,
+            pool: std::sync::Arc::clone(&self.pool),
+        }
+    }
 }
 
 impl ParallelCtx {
     pub fn new(policy: ParallelPolicy) -> ParallelCtx {
-        let pool = WorkerPool::new(policy.resolved_threads());
+        let pool = std::sync::Arc::new(WorkerPool::new(policy.resolved_threads()));
         ParallelCtx { policy, pool }
     }
 

@@ -77,7 +77,9 @@ impl ArtifactSpec {
                     // Generated init is the only parameter source here, so
                     // a missing/zero init_std would silently train from an
                     // all-zero (symmetric, gradient-dead) start — refuse.
-                    if prog.layers.iter().any(|l| l.init_std <= 0.0) {
+                    if prog.layers.iter().any(|l| l.init_std <= 0.0)
+                        || prog.embed.as_ref().is_some_and(|e| e.init_std <= 0.0)
+                    {
                         bail!(
                             "{}: no init blobs and the program lacks positive \
                              init_std fields to generate one",

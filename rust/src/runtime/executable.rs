@@ -202,6 +202,30 @@ impl Executable {
         grad_out: &mut [f32],
         on_segment: &mut dyn FnMut(&[f32], usize, usize),
     ) -> Result<f32> {
+        self.run_train_stream_ctx(
+            params,
+            batch,
+            grad_out,
+            &crate::parallel::ParallelCtx::serial(),
+            on_segment,
+        )
+    }
+
+    /// [`run_train_stream`] with an intra-step parallel context: the
+    /// interpreter shards its matmul kernels over `ctx`'s worker pool
+    /// (bitwise-identical results at every pool width — the kernels never
+    /// combine partial sums). PJRT manages its own threading and ignores
+    /// `ctx`.
+    ///
+    /// [`run_train_stream`]: Executable::run_train_stream
+    pub fn run_train_stream_ctx(
+        &self,
+        params: &[f32],
+        batch: &Batch,
+        grad_out: &mut [f32],
+        ctx: &crate::parallel::ParallelCtx,
+        on_segment: &mut dyn FnMut(&[f32], usize, usize),
+    ) -> Result<f32> {
         self.validate_io(Some(params), batch)?;
         if grad_out.len() != self.spec.param_dim {
             bail!(
@@ -212,7 +236,7 @@ impl Executable {
             );
         }
         match &self.imp {
-            Imp::Interp(exec) => exec.run_train_stream(params, batch, grad_out, on_segment),
+            Imp::Interp(exec) => exec.run_train_stream_ctx(params, batch, grad_out, ctx, on_segment),
             #[cfg(feature = "pjrt")]
             Imp::Pjrt(_) => {
                 let (loss, grads) = self.run_train(params, batch)?;

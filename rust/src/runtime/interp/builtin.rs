@@ -16,7 +16,7 @@ use std::path::PathBuf;
 use crate::runtime::artifact::{ArtifactSpec, IoSpec, Manifest};
 use crate::util::json::{num, obj, s};
 
-use super::program::{Act, Dense, Loss, ProgramSpec};
+use super::program::{Act, Dense, Embedding, LayerNorm, Loss, ProgramSpec};
 use super::reference;
 
 const LINREG_DIM: usize = 1000;
@@ -25,6 +25,15 @@ const MLP_HIDDEN: usize = 512;
 const MLP_CLASSES: usize = 16;
 const MLP_TRAIN_BATCH: usize = 32;
 const MLP_EVAL_BATCH: usize = 256;
+// dlrm-lite: the CTR workload AdaSum motivates gradient-aware
+// aggregation with — embedding-dominated params, tiny dense tower.
+const DLRM_FIELDS: usize = 8;
+const DLRM_VOCAB: usize = 1000;
+const DLRM_EMB_DIM: usize = 16;
+const DLRM_DENSE_DIM: usize = 16;
+const DLRM_HIDDEN: [usize; 2] = [64, 32];
+const DLRM_TRAIN_BATCH: usize = 64;
+const DLRM_EVAL_BATCH: usize = 256;
 
 fn f32_io(name: &str, shape: Vec<usize>) -> IoSpec {
     IoSpec {
@@ -44,11 +53,13 @@ fn i32_io(name: &str, shape: Vec<usize>) -> IoSpec {
 
 fn linreg_program() -> ProgramSpec {
     ProgramSpec {
+        embed: None,
         layers: vec![Dense {
             in_dim: LINREG_DIM,
             out_dim: 1,
             w_off: 0,
             b_off: None,
+            ln: None,
             act: Act::Linear,
             // aot.py inits linreg from N(0, 1/sqrt(d)).
             init_std: (1.0 / (LINREG_DIM as f64).sqrt()) as f32,
@@ -72,14 +83,70 @@ fn mlp_program() -> ProgramSpec {
             out_dim,
             w_off,
             b_off: Some(b_off),
+            ln: None,
             // He init on every layer, matching mlp.py's dense() helper.
             init_std: (2.0 / in_dim as f64).sqrt() as f32,
             act: if i + 1 < dims.len() { Act::Relu } else { Act::Linear },
         });
     }
     ProgramSpec {
+        embed: None,
         layers,
         loss: Loss::SoftmaxXent { classes: MLP_CLASSES },
+    }
+}
+
+fn dlrm_program() -> ProgramSpec {
+    // Flat layout: the embedding table first, then per layer (jax
+    // ravel_pytree alphabetical order over {b, ln_beta, ln_gamma, w})
+    // bias, LN beta, LN gamma, weight. Hidden layers get relu + LN; the
+    // final logit layer is plain linear.
+    let embed = Embedding {
+        fields: DLRM_FIELDS,
+        vocab: DLRM_VOCAB,
+        dim: DLRM_EMB_DIM,
+        dense_dim: DLRM_DENSE_DIM,
+        t_off: 0,
+        init_std: 0.05,
+    };
+    let x_dim = embed.x_dim();
+    let dims = [
+        (x_dim, DLRM_HIDDEN[0]),
+        (DLRM_HIDDEN[0], DLRM_HIDDEN[1]),
+        (DLRM_HIDDEN[1], 1),
+    ];
+    let mut layers = Vec::new();
+    let mut off = embed.t_len();
+    for (i, &(in_dim, out_dim)) in dims.iter().enumerate() {
+        let hidden = i + 1 < dims.len();
+        let b_off = off;
+        off += out_dim;
+        let ln = if hidden {
+            let ln = LayerNorm {
+                b_off: off,
+                g_off: off + out_dim,
+            };
+            off += 2 * out_dim;
+            Some(ln)
+        } else {
+            None
+        };
+        let w_off = off;
+        off += in_dim * out_dim;
+        layers.push(Dense {
+            in_dim,
+            out_dim,
+            w_off,
+            b_off: Some(b_off),
+            ln,
+            init_std: (2.0 / in_dim as f64).sqrt() as f32,
+            act: if hidden { Act::Relu } else { Act::Linear },
+        });
+    }
+    ProgramSpec {
+        embed: Some(embed),
+        layers,
+        loss: Loss::SigmoidBce,
     }
 }
 
@@ -156,6 +223,50 @@ fn mlp_spec(dir: &std::path::Path, eval: bool) -> ArtifactSpec {
     })
 }
 
+fn dlrm_spec(dir: &std::path::Path, eval: bool) -> ArtifactSpec {
+    let name = if eval {
+        "dlrm_lite__eval".to_string()
+    } else {
+        "dlrm_lite".to_string()
+    };
+    let kind = if eval { "eval" } else { "train" };
+    let prog = dlrm_program();
+    let d = prog.param_dim();
+    let b = if eval { DLRM_EVAL_BATCH } else { DLRM_TRAIN_BATCH };
+    let outputs = if eval {
+        // `score` = σ(logit) per example: the AUC input the dlrm
+        // evaluator pools (coordinator::eval).
+        vec![f32_io("loss", vec![]), f32_io("score", vec![b])]
+    } else {
+        vec![f32_io("loss", vec![]), f32_io("grads", vec![d])]
+    };
+    with_golden(ArtifactSpec {
+        hlo_path: dir.join(format!("{name}.hlo.txt")),
+        name,
+        kind: kind.to_string(),
+        model: "dlrm".to_string(),
+        param_dim: d,
+        inputs: vec![
+            i32_io("cat", vec![b, DLRM_FIELDS]),
+            f32_io("dense", vec![b, DLRM_DENSE_DIM]),
+            f32_io("y", vec![b]),
+        ],
+        outputs,
+        init: BTreeMap::new(),
+        golden: None,
+        meta: obj(vec![
+            ("model", s("dlrm")),
+            ("local_batch", num(DLRM_TRAIN_BATCH as f64)),
+            ("eval_batch", num(DLRM_EVAL_BATCH as f64)),
+            ("fields", num(DLRM_FIELDS as f64)),
+            ("vocab", num(DLRM_VOCAB as f64)),
+            ("dense_dim", num(DLRM_DENSE_DIM as f64)),
+            ("emb_dim", num(DLRM_EMB_DIM as f64)),
+        ]),
+        program: Some(prog),
+    })
+}
+
 /// The fallback manifest: every interpretable artifact, goldens included.
 pub fn builtin_manifest(dir: PathBuf) -> Manifest {
     let mut artifacts = BTreeMap::new();
@@ -167,6 +278,8 @@ pub fn builtin_manifest(dir: PathBuf) -> Manifest {
     }
     for eval in [false, true] {
         let spec = mlp_spec(&dir, eval);
+        artifacts.insert(spec.name.clone(), spec);
+        let spec = dlrm_spec(&dir, eval);
         artifacts.insert(spec.name.clone(), spec);
     }
     Manifest {
@@ -204,6 +317,30 @@ mod tests {
         assert_eq!(ev.kind, "eval");
         assert_eq!(ev.local_batch(), 256);
         assert_eq!(ev.outputs.len(), 2);
+    }
+
+    #[test]
+    fn builtin_dlrm_layout_and_meta() {
+        let m = builtin_manifest(PathBuf::from("artifacts"));
+        let d = m.get("dlrm_lite").unwrap();
+        // table 128000 + l0 (64b + 128ln + 9216w) + l1 (32b + 64ln +
+        // 2048w) + l2 (1b + 32w)
+        assert_eq!(d.param_dim, 139_585);
+        assert_eq!(d.local_batch(), 64);
+        assert_eq!(d.inputs[0].shape, vec![64, 8]);
+        assert_eq!(d.inputs[1].shape, vec![64, 16]);
+        assert_eq!(d.model, "dlrm");
+        assert_eq!(d.meta.get("vocab").as_usize(), Some(1000));
+        let prog = d.program.as_ref().unwrap();
+        let e = prog.embed.as_ref().unwrap();
+        assert_eq!(e.t_off, 0);
+        assert_eq!(e.t_len(), 128_000);
+        assert_eq!(prog.in_dim(), 144);
+        assert!(prog.layers[0].ln.is_some() && prog.layers[2].ln.is_none());
+        let ev = m.get("dlrm_lite__eval").unwrap();
+        assert_eq!(ev.kind, "eval");
+        assert_eq!(ev.outputs[1].name, "score");
+        assert_eq!(ev.local_batch(), 256);
     }
 
     #[test]

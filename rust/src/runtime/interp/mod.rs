@@ -5,12 +5,16 @@
 //! [`ProgramSpec`] — emitted by `python/compile/aot.py` next to the HLO
 //! text, or supplied by the hand-written fallback specs in [`builtin`]
 //! when no `artifacts/` directory exists at all. The interpreter covers
-//! the small paper artifacts (linreg, MLP classifier); the larger models
-//! still need the `pjrt` feature and a toolchain image.
+//! the paper's small artifacts (linreg, MLP classifier) plus the
+//! dlrm-lite CTR model (embedding → layernormed dense chain →
+//! sigmoid-BCE); the larger models still need the `pjrt` feature and a
+//! toolchain image.
 //!
-//! Correctness contract (validated by `tests/runtime_golden.rs` and
-//! `tests/interp_grad_check.rs`):
+//! Correctness contract (validated by `tests/runtime_golden.rs`,
+//! `tests/interp_grad_check.rs` and `tests/interp_kernel_equiv.rs`):
 //! * f32 storage, f64 accumulation in every kernel ([`ops`]);
+//! * blocked / pool-sharded kernels bitwise-equal to the scalar oracle
+//!   at every thread count (fixed per-element accumulation order);
 //! * loss / grad checksums match the straight-line f64 reference
 //!   ([`reference`]) that mints the builtin goldens;
 //! * every backward op passes a finite-difference check.
@@ -20,9 +24,10 @@ pub mod ops;
 pub mod program;
 pub mod reference;
 
-pub use program::{Act, Dense, Loss, ProgramSpec};
+pub use program::{Act, Dense, Embedding, LayerNorm, Loss, ProgramSpec};
 
 use crate::data::{Array, Batch};
+use crate::parallel::ParallelCtx;
 use crate::runtime::artifact::ArtifactSpec;
 use crate::util::error::{bail, Context, Result};
 use crate::util::prng::Rng;
@@ -33,15 +38,47 @@ pub struct InterpExec {
     prog: ProgramSpec,
 }
 
+/// Label views: softmax wants i32 class ids, BCE wants f32 {0,1} clicks
+/// (`data::ctr` emits f32; i32 label inputs are converted on the fly so
+/// pre-existing BCE artifacts keep working).
+enum Labels<'a> {
+    None,
+    I32(&'a [i32]),
+    F32(&'a [f32]),
+}
+
+/// Decoded batch inputs for one run.
+struct Views<'a> {
+    /// Per-field embedding ids `(m, fields)` — embed programs only.
+    cat: Option<&'a [i32]>,
+    /// Dense features: input 0 for plain programs, input 1 (the dense
+    /// tail) for embed programs.
+    x: &'a [f32],
+    m: usize,
+    y: Labels<'a>,
+}
+
+/// Forward-pass caches the backward pass consumes.
+struct Forward {
+    /// Assembled first-layer input (embed programs only; empty otherwise).
+    x0: Vec<f32>,
+    /// Per-layer post-activation outputs.
+    acts: Vec<Vec<f32>>,
+    /// Per-layer LN normalized activations (empty when the layer has none).
+    xhat: Vec<Vec<f32>>,
+    /// Per-layer LN per-row inverse stddevs (empty when the layer has none).
+    rstd: Vec<Vec<f64>>,
+}
+
 impl InterpExec {
     /// Build from an artifact spec; fails with a clear message when the
     /// artifact has no program description.
     pub fn new(spec: &ArtifactSpec) -> Result<InterpExec> {
         let prog = spec.program.clone().with_context(|| {
             format!(
-                "artifact {:?} has no interpreter program: only the linreg/mlp \
-                 artifacts are interpretable (builtin specs or a manifest with \
-                 \"program\" records). For the other artifacts build with \
+                "artifact {:?} has no interpreter program: only the linreg/mlp/\
+                 dlrm artifacts are interpretable (builtin specs or a manifest \
+                 with \"program\" records). For the other artifacts build with \
                  `--features pjrt` on a toolchain image that vendors the real \
                  xla crate",
                 spec.name
@@ -61,7 +98,19 @@ impl InterpExec {
             .first()
             .map(|io| io.numel())
             .context("artifact has no batch inputs")?;
-        if in_numel % prog.in_dim() != 0 {
+        if let Some(e) = &prog.embed {
+            if in_numel % e.fields != 0 {
+                bail!(
+                    "{}: id input numel {} not divisible by embed fields {}",
+                    spec.name,
+                    in_numel,
+                    e.fields
+                );
+            }
+            if spec.inputs.len() < 2 {
+                bail!("{}: embed program needs a dense-features input", spec.name);
+            }
+        } else if in_numel % prog.in_dim() != 0 {
             bail!(
                 "{}: first input numel {} not divisible by program in_dim {}",
                 spec.name,
@@ -69,10 +118,11 @@ impl InterpExec {
                 prog.in_dim()
             );
         }
+        let label_idx = if prog.embed.is_some() { 2 } else { 1 };
         if matches!(prog.loss, Loss::SoftmaxXent { .. } | Loss::SigmoidBce)
-            && spec.inputs.len() < 2
+            && spec.inputs.len() <= label_idx
         {
-            bail!("{}: labelled loss needs an i32 label input", spec.name);
+            bail!("{}: labelled loss needs a label input", spec.name);
         }
         Ok(InterpExec { prog })
     }
@@ -81,52 +131,124 @@ impl InterpExec {
         &self.prog
     }
 
-    fn batch_views<'a>(&self, batch: &'a Batch) -> Result<(&'a [f32], usize, Option<&'a [i32]>)> {
-        let x = batch[0].as_f32().context("input 0 must be f32 features")?;
-        let m = x.len() / self.prog.in_dim();
-        let y = match self.prog.loss {
-            Loss::SoftmaxXent { .. } | Loss::SigmoidBce => {
-                Some(batch[1].as_i32().context("input 1 must be i32 labels")?)
-            }
-            Loss::MeanSquare => None,
+    fn batch_views<'a>(&self, batch: &'a Batch) -> Result<Views<'a>> {
+        let (cat, x, m, label_idx) = if let Some(e) = &self.prog.embed {
+            let cat = batch[0].as_i32().context("input 0 must be i32 ids")?;
+            let x = batch[1].as_f32().context("input 1 must be f32 dense features")?;
+            (Some(cat), x, cat.len() / e.fields, 2usize)
+        } else {
+            let x = batch[0].as_f32().context("input 0 must be f32 features")?;
+            (None, x, x.len() / self.prog.in_dim(), 1usize)
         };
-        Ok((x, m, y))
+        let y = match self.prog.loss {
+            Loss::MeanSquare => Labels::None,
+            Loss::SoftmaxXent { .. } => Labels::I32(
+                batch[label_idx]
+                    .as_i32()
+                    .context("label input must be i32 class ids")?,
+            ),
+            Loss::SigmoidBce => match batch[label_idx].as_f32() {
+                Some(v) => Labels::F32(v),
+                None => Labels::I32(
+                    batch[label_idx]
+                        .as_i32()
+                        .context("BCE label input must be f32 or i32")?,
+                ),
+            },
+        };
+        Ok(Views { cat, x, m, y })
     }
 
-    /// Forward pass: returns each layer's post-activation output.
-    fn forward(&self, params: &[f32], x: &[f32], m: usize) -> Vec<Vec<f32>> {
-        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(self.prog.layers.len());
+    /// Forward pass, sharding each matmul's batch rows over `ctx`'s pool
+    /// (bitwise-identical to serial at any thread count — see `ops`).
+    fn forward_ctx(&self, params: &[f32], views: &Views, ctx: &ParallelCtx) -> Forward {
+        let m = views.m;
+        let x0 = if let Some(e) = &self.prog.embed {
+            let mut x0 = vec![0.0f32; m * e.x_dim()];
+            let table = &params[e.t_off..e.t_off + e.t_len()];
+            ops::embedding_forward(
+                table,
+                views.cat.expect("embed program validated ids input"),
+                views.x,
+                m,
+                e.fields,
+                e.vocab,
+                e.dim,
+                e.dense_dim,
+                &mut x0,
+            );
+            x0
+        } else {
+            Vec::new()
+        };
+        let nl = self.prog.layers.len();
+        let mut fw = Forward {
+            x0,
+            acts: Vec::with_capacity(nl),
+            xhat: Vec::with_capacity(nl),
+            rstd: Vec::with_capacity(nl),
+        };
         for (li, l) in self.prog.layers.iter().enumerate() {
-            let input: &[f32] = if li == 0 { x } else { &acts[li - 1] };
+            let input: &[f32] = if li == 0 {
+                if self.prog.embed.is_some() {
+                    &fw.x0
+                } else {
+                    views.x
+                }
+            } else {
+                &fw.acts[li - 1]
+            };
             let mut h = vec![0.0f32; m * l.out_dim];
             let w = &params[l.w_off..l.w_off + l.w_len()];
-            ops::matmul(input, m, l.in_dim, w, l.out_dim, &mut h);
+            ops::matmul_ctx(ctx, input, m, l.in_dim, w, l.out_dim, &mut h);
             if let Some(b_off) = l.b_off {
                 ops::bias_add(&mut h, m, l.out_dim, &params[b_off..b_off + l.out_dim]);
+            }
+            let (mut xhat, mut rstd) = (Vec::new(), Vec::new());
+            if let Some(ln) = l.ln {
+                xhat = vec![0.0f32; m * l.out_dim];
+                rstd = vec![0.0f64; m];
+                ops::layernorm_forward(
+                    &mut h,
+                    m,
+                    l.out_dim,
+                    &params[ln.g_off..ln.g_off + l.out_dim],
+                    &params[ln.b_off..ln.b_off + l.out_dim],
+                    &mut xhat,
+                    &mut rstd,
+                );
             }
             match l.act {
                 Act::Linear => {}
                 Act::Relu => ops::relu(&mut h),
                 Act::Sigmoid => ops::sigmoid(&mut h),
             }
-            acts.push(h);
+            fw.acts.push(h);
+            fw.xhat.push(xhat);
+            fw.rstd.push(rstd);
         }
-        acts
+        fw
     }
 
-    fn loss_grad(&self, out: &[f32], y: Option<&[i32]>, m: usize, dh: &mut [f32]) -> f64 {
+    fn loss_grad(&self, out: &[f32], y: &Labels, m: usize, dh: &mut [f32]) -> f64 {
         match self.prog.loss {
             Loss::MeanSquare => ops::mean_square_loss(out, m, self.prog.out_dim(), dh),
-            Loss::SoftmaxXent { classes } => {
-                ops::softmax_xent_loss(out, y.expect("labels validated in new()"), m, classes, dh)
-            }
-            Loss::SigmoidBce => {
-                ops::sigmoid_bce_loss(out, y.expect("labels validated in new()"), m, dh)
-            }
+            Loss::SoftmaxXent { classes } => match y {
+                Labels::I32(y) => ops::softmax_xent_loss(out, y, m, classes, dh),
+                _ => unreachable!("labels validated in new()"),
+            },
+            Loss::SigmoidBce => match y {
+                Labels::F32(y) => ops::sigmoid_bce_loss(out, y, m, dh),
+                Labels::I32(y) => {
+                    let yf: Vec<f32> = y.iter().map(|&v| v as f32).collect();
+                    ops::sigmoid_bce_loss(out, &yf, m, dh)
+                }
+                Labels::None => unreachable!("labels validated in new()"),
+            },
         }
     }
 
-    /// Train step with streaming gradient segments.
+    /// Train step with streaming gradient segments (serial compute).
     ///
     /// The backward pass walks layers last-to-first — the real DDP
     /// arrival order — and invokes `on_segment(grads_so_far, offset, len)`
@@ -139,7 +261,23 @@ impl InterpExec {
         grad_out: &mut [f32],
         on_segment: &mut dyn FnMut(&[f32], usize, usize),
     ) -> Result<f32> {
-        let (x, m, y) = self.batch_views(batch)?;
+        self.run_train_stream_ctx(params, batch, grad_out, &ParallelCtx::serial(), on_segment)
+    }
+
+    /// [`InterpExec::run_train_stream`] with the forward/backward matmuls
+    /// sharded over `ctx`'s worker pool. The kernels write disjoint
+    /// output bands in a fixed per-element order, so the gradients (and
+    /// the segment stream) are bitwise-identical at every thread count.
+    pub fn run_train_stream_ctx(
+        &self,
+        params: &[f32],
+        batch: &Batch,
+        grad_out: &mut [f32],
+        ctx: &ParallelCtx,
+        on_segment: &mut dyn FnMut(&[f32], usize, usize),
+    ) -> Result<f32> {
+        let views = self.batch_views(batch)?;
+        let m = views.m;
         if grad_out.len() != self.prog.param_dim() {
             bail!(
                 "grad_out len {} != param dim {}",
@@ -147,38 +285,89 @@ impl InterpExec {
                 self.prog.param_dim()
             );
         }
-        let acts = self.forward(params, x, m);
-        let out = acts.last().expect("validated non-empty program");
+        let fw = self.forward_ctx(params, &views, ctx);
+        let out = fw.acts.last().expect("validated non-empty program");
         let mut dh = vec![0.0f32; out.len()];
-        let loss = self.loss_grad(out, y, m, &mut dh);
+        let loss = self.loss_grad(out, &views.y, m, &mut dh);
+        let has_embed = self.prog.embed.is_some();
         for li in (0..self.prog.layers.len()).rev() {
             let l = &self.prog.layers[li];
             let (k, n) = (l.in_dim, l.out_dim);
-            let input: &[f32] = if li == 0 { x } else { &acts[li - 1] };
+            let input: &[f32] = if li == 0 {
+                if has_embed {
+                    &fw.x0
+                } else {
+                    views.x
+                }
+            } else {
+                &fw.acts[li - 1]
+            };
             match l.act {
                 Act::Linear => {}
-                Act::Relu => ops::relu_backward(&acts[li], &mut dh),
-                Act::Sigmoid => ops::sigmoid_backward(&acts[li], &mut dh),
+                Act::Relu => ops::relu_backward(&fw.acts[li], &mut dh),
+                Act::Sigmoid => ops::sigmoid_backward(&fw.acts[li], &mut dh),
+            }
+            if let Some(ln) = l.ln {
+                let mut dgamma = vec![0.0f32; n];
+                let mut dbeta = vec![0.0f32; n];
+                ops::layernorm_backward(
+                    &mut dh,
+                    m,
+                    n,
+                    &params[ln.g_off..ln.g_off + n],
+                    &fw.xhat[li],
+                    &fw.rstd[li],
+                    &mut dgamma,
+                    &mut dbeta,
+                );
+                grad_out[ln.g_off..ln.g_off + n].copy_from_slice(&dgamma);
+                on_segment(grad_out, ln.g_off, n);
+                grad_out[ln.b_off..ln.b_off + n].copy_from_slice(&dbeta);
+                on_segment(grad_out, ln.b_off, n);
             }
             if let Some(b_off) = l.b_off {
                 ops::bias_db(&dh, m, n, &mut grad_out[b_off..b_off + n]);
                 on_segment(grad_out, b_off, n);
             }
-            ops::matmul_dw(input, &dh, m, k, n, &mut grad_out[l.w_off..l.w_off + l.w_len()]);
+            ops::matmul_dw_ctx(
+                ctx,
+                input,
+                &dh,
+                m,
+                k,
+                n,
+                &mut grad_out[l.w_off..l.w_off + l.w_len()],
+            );
             on_segment(grad_out, l.w_off, l.w_len());
-            if li > 0 {
+            if li > 0 || has_embed {
                 let w = &params[l.w_off..l.w_off + l.w_len()];
                 let mut dx = vec![0.0f32; m * k];
-                ops::matmul_dx(&dh, w, m, k, n, &mut dx);
+                ops::matmul_dx_ctx(ctx, &dh, w, m, k, n, &mut dx);
                 dh = dx;
             }
+        }
+        if let Some(e) = &self.prog.embed {
+            // The table streams last (offset 0 in the dlrm layout): its
+            // scatter-add needs the fully backpropagated input gradient.
+            ops::embedding_backward(
+                &dh,
+                views.cat.expect("embed program validated ids input"),
+                m,
+                e.fields,
+                e.vocab,
+                e.dim,
+                e.dense_dim,
+                &mut grad_out[e.t_off..e.t_off + e.t_len()],
+            );
+            on_segment(grad_out, e.t_off, e.t_len());
         }
         Ok(loss as f32)
     }
 
     /// Execute the artifact, producing outputs in manifest order.
     pub fn run(&self, spec: &ArtifactSpec, params: &[f32], batch: &Batch) -> Result<Vec<Array>> {
-        let (x, m, y) = self.batch_views(batch)?;
+        let views = self.batch_views(batch)?;
+        let m = views.m;
         if spec.kind == "train" {
             let mut grads = vec![0.0f32; self.prog.param_dim()];
             let loss = self.run_train_stream(params, batch, &mut grads, &mut |_, _, _| {})?;
@@ -187,25 +376,43 @@ impl InterpExec {
                 Array::F32(grads, vec![self.prog.param_dim()]),
             ]);
         }
-        // Eval graph: loss (+ per-example `correct` for classifiers).
-        let acts = self.forward(params, x, m);
-        let out = acts.last().expect("validated non-empty program");
+        // Eval graph: loss (+ per-example `correct`/`score` outputs).
+        let fw = self.forward_ctx(params, &views, &ParallelCtx::serial());
+        let out = fw.acts.last().expect("validated non-empty program");
         let mut scratch = vec![0.0f32; out.len()];
-        let loss = self.loss_grad(out, y, m, &mut scratch) as f32;
+        let loss = self.loss_grad(out, &views.y, m, &mut scratch) as f32;
         let mut outs = vec![Array::F32(vec![loss], vec![])];
         if spec.outputs.len() > 1 {
-            match (&self.prog.loss, y) {
-                (Loss::SoftmaxXent { classes }, Some(y)) => {
+            match (&self.prog.loss, spec.outputs[1].name.as_str()) {
+                (Loss::SoftmaxXent { classes }, _) => {
+                    let Labels::I32(y) = views.y else {
+                        bail!("{}: classifier eval needs i32 labels", spec.name)
+                    };
                     let mut correct = vec![0.0f32; m];
                     ops::argmax_correct(out, y, m, *classes, &mut correct);
                     outs.push(Array::F32(correct, vec![m]));
                 }
-                (Loss::SigmoidBce, Some(y)) => {
+                (Loss::SigmoidBce, "score") => {
+                    // Predicted click probability σ(z) — the AUC input.
+                    let score: Vec<f32> = out
+                        .iter()
+                        .map(|&z| (1.0 / (1.0 + (-(z as f64)).exp())) as f32)
+                        .collect();
+                    outs.push(Array::F32(score, vec![m]));
+                }
+                (Loss::SigmoidBce, _) => {
                     // Predicted class = σ(z) > 0.5 ⇔ z > 0.
+                    let t_at = |i: usize| -> f32 {
+                        match &views.y {
+                            Labels::F32(y) => y[i],
+                            Labels::I32(y) => y[i] as f32,
+                            Labels::None => unreachable!("labels validated in new()"),
+                        }
+                    };
                     let correct: Vec<f32> = out
                         .iter()
-                        .zip(y)
-                        .map(|(&z, &t)| ((z > 0.0) as i32 == t) as i32 as f32)
+                        .enumerate()
+                        .map(|(i, &z)| (((z > 0.0) as i32 as f32) == t_at(i)) as i32 as f32)
                         .collect();
                     outs.push(Array::F32(correct, vec![m]));
                 }
@@ -220,28 +427,50 @@ impl InterpExec {
 }
 
 /// Deterministic parameter init for artifacts without init blobs: per
-/// layer, weights ~ N(0, init_std) from a seed-keyed stream, biases zero.
-/// Independent of the artifact name so linreg_b16/b64/b128 share inits,
-/// matching the aot.py behaviour (init depends only on model + seed).
+/// layer, weights ~ N(0, init_std) from a seed-keyed stream, biases zero;
+/// the embedding table (when present) draws from its own fork, LN gammas
+/// init to 1 and betas to 0. Independent of the artifact name so
+/// linreg_b16/b64/b128 share inits, matching the aot.py behaviour (init
+/// depends only on model + seed).
 pub fn init_params(prog: &ProgramSpec, seed: u64) -> Vec<f32> {
     let mut p = vec![0.0f32; prog.param_dim()];
+    if let Some(e) = &prog.embed {
+        // Fork key far above any layer index, so the table stream never
+        // collides with a layer's weight stream.
+        let mut rng = Rng::new(seed.wrapping_add(0x5EED_1A17)).fork(0xE4BED);
+        rng.fill_normal_f32(&mut p[e.t_off..e.t_off + e.t_len()], e.init_std);
+    }
     for (li, l) in prog.layers.iter().enumerate() {
         let mut rng = Rng::new(seed.wrapping_add(0x5EED_1A17)).fork(li as u64);
         rng.fill_normal_f32(&mut p[l.w_off..l.w_off + l.w_len()], l.init_std);
+        if let Some(ln) = l.ln {
+            for v in &mut p[ln.g_off..ln.g_off + l.out_dim] {
+                *v = 1.0;
+            }
+        }
     }
     p
 }
 
 /// The deterministic golden batch both `aot.py` and the Rust tests
-/// regenerate bit-identically: f32 arrays filled with 0.5, int arrays
-/// `index % cardinality` (cardinality from the artifact meta).
+/// regenerate bit-identically: f32 arrays filled with 0.5 (except f32
+/// label arrays, which alternate 0/1 — BCE labels must be exact
+/// indicators), int arrays `index % cardinality` (cardinality from the
+/// artifact meta).
 pub fn golden_batch(spec: &ArtifactSpec) -> Batch {
     spec.inputs
         .iter()
         .map(|io| {
             let n = io.numel();
             if io.dtype == "f32" {
-                Array::F32(vec![0.5; n], io.shape.clone())
+                if io.name == "y" {
+                    Array::F32(
+                        (0..n).map(|i| (i % 2) as f32).collect(),
+                        io.shape.clone(),
+                    )
+                } else {
+                    Array::F32(vec![0.5; n], io.shape.clone())
+                }
             } else {
                 let card = match io.name.as_str() {
                     "y" => spec.meta.get("classes").as_usize().unwrap_or(2),
@@ -260,6 +489,7 @@ pub fn golden_batch(spec: &ArtifactSpec) -> Batch {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::parallel::ParallelPolicy;
 
     #[test]
     fn builtin_linreg_interprets_and_matches_reference() {
@@ -285,25 +515,77 @@ mod tests {
     #[test]
     fn streamed_segments_cover_every_parameter_once() {
         let m = builtin::builtin_manifest(std::path::PathBuf::from("artifacts"));
-        let spec = m.get("mlp_cls_b32").unwrap();
+        for name in ["mlp_cls_b32", "dlrm_lite"] {
+            let spec = m.get(name).unwrap();
+            let exec = InterpExec::new(spec).unwrap();
+            let params = spec.load_init(0).unwrap();
+            let batch = golden_batch(spec);
+            let d = spec.param_dim;
+            let mut grads = vec![0.0f32; d];
+            let mut covered = vec![false; d];
+            let mut offsets = Vec::new();
+            let r = exec.run_train_stream(&params, &batch, &mut grads, &mut |_, off, len| {
+                offsets.push(off);
+                for c in &mut covered[off..off + len] {
+                    assert!(!*c, "segment overlap at {off}");
+                    *c = true;
+                }
+            });
+            r.unwrap();
+            assert!(
+                covered.iter().all(|&c| c),
+                "{name}: segments must tile the params"
+            );
+            // Backward order: later layers' blocks stream first.
+            assert!(offsets.first().unwrap() > offsets.last().unwrap());
+        }
+    }
+
+    #[test]
+    fn streamed_grads_bitwise_identical_at_any_pool_width() {
+        // The whole train step — embedding, layernorm, blocked matmuls,
+        // pool-sharded backward — must produce bit-equal gradients with
+        // 1, 2 and 5 lanes.
+        let m = builtin::builtin_manifest(std::path::PathBuf::from("artifacts"));
+        for name in ["mlp_cls_b32", "dlrm_lite"] {
+            let spec = m.get(name).unwrap();
+            let exec = InterpExec::new(spec).unwrap();
+            let params = spec.load_init(0).unwrap();
+            let batch = golden_batch(spec);
+            let mut base = vec![0.0f32; spec.param_dim];
+            let l0 = exec
+                .run_train_stream(&params, &batch, &mut base, &mut |_, _, _| {})
+                .unwrap();
+            for threads in [2usize, 5] {
+                let ctx = ParallelCtx::new(ParallelPolicy {
+                    threads,
+                    min_shard_elems: 1024,
+                });
+                let mut g = vec![0.0f32; spec.param_dim];
+                let l = exec
+                    .run_train_stream_ctx(&params, &batch, &mut g, &ctx, &mut |_, _, _| {})
+                    .unwrap();
+                assert_eq!(l0.to_bits(), l.to_bits(), "{name} loss @ {threads} lanes");
+                assert!(
+                    base.iter().zip(&g).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{name}: grads differ at {threads} lanes"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dlrm_eval_emits_scores() {
+        let m = builtin::builtin_manifest(std::path::PathBuf::from("artifacts"));
+        let spec = m.get("dlrm_lite__eval").unwrap();
         let exec = InterpExec::new(spec).unwrap();
         let params = spec.load_init(0).unwrap();
         let batch = golden_batch(spec);
-        let d = spec.param_dim;
-        let mut grads = vec![0.0f32; d];
-        let mut covered = vec![false; d];
-        let mut offsets = Vec::new();
-        let r = exec.run_train_stream(&params, &batch, &mut grads, &mut |_, off, len| {
-            offsets.push(off);
-            for c in &mut covered[off..off + len] {
-                assert!(!*c, "segment overlap at {off}");
-                *c = true;
-            }
-        });
-        r.unwrap();
-        assert!(covered.iter().all(|&c| c), "segments must tile the params");
-        // Backward order: later layers' blocks stream first.
-        assert!(offsets.first().unwrap() > offsets.last().unwrap());
+        let outs = exec.run(spec, &params, &batch).unwrap();
+        assert_eq!(outs.len(), 2);
+        let scores = outs[1].as_f32().unwrap();
+        assert_eq!(scores.len(), spec.inputs[2].numel());
+        assert!(scores.iter().all(|&s| (0.0..=1.0).contains(&s)));
     }
 
     #[test]
@@ -321,5 +603,19 @@ mod tests {
         let b_off = l0.b_off.unwrap();
         assert!(a[b_off..b_off + l0.out_dim].iter().all(|&v| v == 0.0));
         assert!(a[l0.w_off..l0.w_off + 8].iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn init_params_covers_embed_table_and_ln() {
+        let m = builtin::builtin_manifest(std::path::PathBuf::from("artifacts"));
+        let spec = m.get("dlrm_lite").unwrap();
+        let prog = spec.program.as_ref().unwrap();
+        let p = init_params(prog, 0);
+        let e = prog.embed.as_ref().unwrap();
+        assert!(p[e.t_off..e.t_off + 16].iter().any(|&v| v != 0.0));
+        let ln = prog.layers[0].ln.unwrap();
+        let n = prog.layers[0].out_dim;
+        assert!(p[ln.g_off..ln.g_off + n].iter().all(|&v| v == 1.0));
+        assert!(p[ln.b_off..ln.b_off + n].iter().all(|&v| v == 0.0));
     }
 }

@@ -1,5 +1,6 @@
-//! Interpreter op kernels: matmul, bias add, relu/sigmoid, mean-square
-//! and softmax-xent losses, and their backward ops.
+//! Interpreter op kernels: blocked matmul forward/backward, bias add,
+//! relu/sigmoid, embedding lookup, layernorm, mean-square / softmax-xent
+//! / sigmoid-BCE losses, and their backward ops.
 //!
 //! All kernels store f32 (matching the PJRT artifacts' dtype contract)
 //! but accumulate in f64, so the interpreter's results sit within f32
@@ -7,31 +8,166 @@
 //! that is what makes the tight golden tolerances in
 //! `tests/runtime_golden.rs` and the finite-difference checks in
 //! `tests/interp_grad_check.rs` possible.
+//!
+//! # Determinism contract
+//!
+//! Every output element of every kernel is produced by **one f64
+//! accumulator fed in a fixed canonical order** that never depends on
+//! tiling, blocking, or the thread count:
+//!
+//! * `matmul`    — `out[i,j] = Σ_kk x[i,kk]·w[kk,j]`, `kk` ascending;
+//! * `matmul_dw` — `dw[kk,j] = Σ_i  x[i,kk]·dz[i,j]`, `i` ascending;
+//! * `matmul_dx` — `dx[i,kk] = Σ_j dz[i,j]·w[kk,j]`, `j` ascending.
+//!
+//! The blocked kernels below reorder only *which elements* are in
+//! flight together (register tiles the autovectorizer can chew on);
+//! the per-element addition sequence is untouched. The `_ctx` variants
+//! shard **disjoint output bands** (rows of `out`/`dx`, `kk`-bands of
+//! `dw`) over the worker pool — no partial-sum combine exists anywhere,
+//! so results are bitwise-identical to the serial kernels and to the
+//! [`oracle`] scalar loops at every thread count. The `oracle` module is
+//! the always-compiled ground truth the kernel-equivalence suite and the
+//! bench microbenchmarks compare against.
+//!
+//! Zero inputs are **not** skipped: `0 × inf` and `0 × NaN` are `NaN`,
+//! and a poisoned weight must poison the output (a NaN-injection rank
+//! must be observable downstream), so the kernels are NaN-transparent.
+
+use crate::parallel::{Job, ParallelCtx};
+
+/// Row tile: output rows sharing one sweep of the `w`/`dz` operand.
+const MB: usize = 4;
+/// Column tile for the forward matmul's f64 accumulator block
+/// (`MB × NB × 8 B` = 2 KiB — lives in registers / L1).
+const NB: usize = 64;
+/// Below this many products (`m·k·n`) the `_ctx` kernels stay serial:
+/// pool dispatch costs more than the tile work saves.
+const PAR_MIN_PRODUCTS: usize = 64 * 1024;
+
+/// LayerNorm variance epsilon (shared with `super::reference`).
+pub const LN_EPS: f64 = 1e-5;
+
+/// Scalar reference kernels: one f64 accumulator per output element, fed
+/// in the canonical order documented on the module. Always compiled (not
+/// `#[cfg(test)]`) so the kernel-equivalence integration suite and the
+/// matmul microbenchmarks can call them from outside the crate.
+pub mod oracle {
+    /// `out = x @ w`, per element `kk`-ascending.
+    pub fn matmul(x: &[f32], m: usize, k: usize, w: &[f32], n: usize, out: &mut [f32]) {
+        debug_assert_eq!(x.len(), m * k);
+        debug_assert_eq!(w.len(), k * n);
+        debug_assert_eq!(out.len(), m * n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for kk in 0..k {
+                    acc += x[i * k + kk] as f64 * w[kk * n + j] as f64;
+                }
+                out[i * n + j] = acc as f32;
+            }
+        }
+    }
+
+    /// `dw = x^T @ dz`, per element `i`-ascending.
+    pub fn matmul_dw(x: &[f32], dz: &[f32], m: usize, k: usize, n: usize, dw: &mut [f32]) {
+        debug_assert_eq!(x.len(), m * k);
+        debug_assert_eq!(dz.len(), m * n);
+        debug_assert_eq!(dw.len(), k * n);
+        for kk in 0..k {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for i in 0..m {
+                    acc += x[i * k + kk] as f64 * dz[i * n + j] as f64;
+                }
+                dw[kk * n + j] = acc as f32;
+            }
+        }
+    }
+
+    /// `dx = dz @ w^T`, per element `j`-ascending.
+    pub fn matmul_dx(dz: &[f32], w: &[f32], m: usize, k: usize, n: usize, dx: &mut [f32]) {
+        debug_assert_eq!(dz.len(), m * n);
+        debug_assert_eq!(w.len(), k * n);
+        debug_assert_eq!(dx.len(), m * k);
+        for i in 0..m {
+            for kk in 0..k {
+                let mut acc = 0.0f64;
+                for j in 0..n {
+                    acc += dz[i * n + j] as f64 * w[kk * n + j] as f64;
+                }
+                dx[i * k + kk] = acc as f32;
+            }
+        }
+    }
+}
 
 /// `out = x @ w`: `x` is `(m, k)` row-major, `w` is `(k, n)` row-major.
-/// Accumulates each output row in an f64 buffer (inner loop runs over the
-/// contiguous `n` axis, so it vectorizes).
+///
+/// Register-tiled: `MB` output rows × `NB` output columns accumulate in
+/// a stack f64 block while one `kk`-sweep streams the shared `w` row
+/// tile past all `MB` rows. Per-element accumulation order is
+/// `kk`-ascending — bitwise equal to [`oracle::matmul`].
 pub fn matmul(x: &[f32], m: usize, k: usize, w: &[f32], n: usize, out: &mut [f32]) {
     debug_assert_eq!(x.len(), m * k);
     debug_assert_eq!(w.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
-    let mut row = vec![0.0f64; n];
-    for i in 0..m {
-        row.iter_mut().for_each(|r| *r = 0.0);
-        for kk in 0..k {
-            let xv = x[i * k + kk] as f64;
-            if xv == 0.0 {
-                continue; // post-relu inputs are ~half zeros
+    let mut i0 = 0;
+    while i0 < m {
+        let rb = MB.min(m - i0);
+        let mut j0 = 0;
+        while j0 < n {
+            let jw = NB.min(n - j0);
+            let mut acc = [[0.0f64; NB]; MB];
+            for kk in 0..k {
+                let wtile = &w[kk * n + j0..kk * n + j0 + jw];
+                for (r, arow) in acc.iter_mut().enumerate().take(rb) {
+                    let xv = x[(i0 + r) * k + kk] as f64;
+                    for (a, &wv) in arow[..jw].iter_mut().zip(wtile) {
+                        *a += xv * wv as f64;
+                    }
+                }
             }
-            let wrow = &w[kk * n..(kk + 1) * n];
-            for (r, &wv) in row.iter_mut().zip(wrow) {
-                *r += xv * wv as f64;
+            for (r, arow) in acc.iter().enumerate().take(rb) {
+                let orow = &mut out[(i0 + r) * n + j0..(i0 + r) * n + j0 + jw];
+                for (o, &a) in orow.iter_mut().zip(&arow[..jw]) {
+                    *o = a as f32;
+                }
             }
+            j0 += jw;
         }
-        for (o, &r) in out[i * n..(i + 1) * n].iter_mut().zip(&row) {
-            *o = r as f32;
-        }
+        i0 += rb;
     }
+}
+
+/// Forward matmul sharded by output **rows** over the pool. Each job
+/// owns a disjoint `out` band and runs the blocked kernel on its rows —
+/// no combine, so bitwise-identical to [`matmul`] at any thread count.
+pub fn matmul_ctx(
+    ctx: &ParallelCtx,
+    x: &[f32],
+    m: usize,
+    k: usize,
+    w: &[f32],
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(out.len(), m * n);
+    let bands = row_bands(m, ctx.threads(), m * k * n);
+    if bands.len() <= 1 {
+        matmul(x, m, k, w, n, out);
+        return;
+    }
+    let width = bands[0].1 - bands[0].0;
+    let jobs: Vec<Job<'_>> = out
+        .chunks_mut(width * n)
+        .zip(&bands)
+        .map(|(oc, &(a, b))| {
+            let xs = &x[a * k..b * k];
+            Box::new(move || matmul(xs, b - a, k, w, n, oc)) as Job<'_>
+        })
+        .collect();
+    ctx.run(jobs);
 }
 
 /// `h[i, :] += b` for every row.
@@ -81,40 +217,114 @@ pub fn sigmoid_backward(h: &[f32], dh: &mut [f32]) {
     }
 }
 
-/// Weight gradient `dw = x^T @ dz`: `x` is `(m, k)`, `dz` is `(m, n)`,
-/// `dw` out is `(k, n)` row-major. f64 accumulator matrix.
-pub fn matmul_dw(x: &[f32], dz: &[f32], m: usize, k: usize, n: usize, dw: &mut [f32]) {
+/// Weight gradient `dw = x^T @ dz` for `kk ∈ [k_lo, k_hi)` only:
+/// `dw_band` is the `(k_hi - k_lo, n)` row-major band of the full
+/// `(k, n)` gradient. `i`-blocked: `MB` batch rows stream past each
+/// band accumulator row per sweep, amortizing the accumulator traffic;
+/// per-element order stays `i`-ascending, and the band decomposition is
+/// exact (each `dw` element lives in exactly one band), so any band
+/// split is bitwise equal to [`oracle::matmul_dw`].
+pub fn matmul_dw_band(
+    x: &[f32],
+    dz: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    k_lo: usize,
+    k_hi: usize,
+    dw_band: &mut [f32],
+) {
+    debug_assert!(k_lo <= k_hi && k_hi <= k);
     debug_assert_eq!(x.len(), m * k);
     debug_assert_eq!(dz.len(), m * n);
-    debug_assert_eq!(dw.len(), k * n);
-    let mut acc = vec![0.0f64; k * n];
-    for i in 0..m {
-        let dzrow = &dz[i * n..(i + 1) * n];
-        for kk in 0..k {
-            let xv = x[i * k + kk] as f64;
-            if xv == 0.0 {
-                continue;
-            }
-            let arow = &mut acc[kk * n..(kk + 1) * n];
-            for (a, &dv) in arow.iter_mut().zip(dzrow) {
-                *a += xv * dv as f64;
+    debug_assert_eq!(dw_band.len(), (k_hi - k_lo) * n);
+    let mut acc = vec![0.0f64; (k_hi - k_lo) * n];
+    let mut i0 = 0;
+    while i0 < m {
+        let rb = MB.min(m - i0);
+        for kk in k_lo..k_hi {
+            let arow = &mut acc[(kk - k_lo) * n..(kk - k_lo + 1) * n];
+            for r in 0..rb {
+                let xv = x[(i0 + r) * k + kk] as f64;
+                let dzrow = &dz[(i0 + r) * n..(i0 + r + 1) * n];
+                for (a, &dv) in arow.iter_mut().zip(dzrow) {
+                    *a += xv * dv as f64;
+                }
             }
         }
+        i0 += rb;
     }
-    for (o, &a) in dw.iter_mut().zip(&acc) {
+    for (o, &a) in dw_band.iter_mut().zip(&acc) {
         *o = a as f32;
     }
 }
 
+/// Weight gradient `dw = x^T @ dz`: `x` is `(m, k)`, `dz` is `(m, n)`,
+/// `dw` out is `(k, n)` row-major.
+pub fn matmul_dw(x: &[f32], dz: &[f32], m: usize, k: usize, n: usize, dw: &mut [f32]) {
+    matmul_dw_band(x, dz, m, k, n, 0, k, dw);
+}
+
+/// Weight gradient sharded by `kk`-**bands** over the pool: each job
+/// owns a disjoint row band of `dw` (no partial sums are ever combined),
+/// so the result is bitwise-identical to [`matmul_dw`] at any thread
+/// count.
+pub fn matmul_dw_ctx(
+    ctx: &ParallelCtx,
+    x: &[f32],
+    dz: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    dw: &mut [f32],
+) {
+    debug_assert_eq!(dw.len(), k * n);
+    let bands = row_bands(k, ctx.threads(), m * k * n);
+    if bands.len() <= 1 {
+        matmul_dw(x, dz, m, k, n, dw);
+        return;
+    }
+    let width = bands[0].1 - bands[0].0;
+    let jobs: Vec<Job<'_>> = dw
+        .chunks_mut(width * n)
+        .zip(&bands)
+        .map(|(oc, &(a, b))| Box::new(move || matmul_dw_band(x, dz, m, k, n, a, b, oc)) as Job<'_>)
+        .collect();
+    ctx.run(jobs);
+}
+
 /// Input gradient `dx = dz @ w^T`: `dz` is `(m, n)`, `w` is `(k, n)`,
-/// `dx` out is `(m, k)`. Each element is a contiguous f64 dot over `n`.
+/// `dx` out is `(m, k)`. Register-tiled: four `w` rows share one sweep
+/// of the `dz` row (four independent f64 dot products per pass); the
+/// per-element order is a plain `j`-ascending dot, bitwise equal to
+/// [`oracle::matmul_dx`].
 pub fn matmul_dx(dz: &[f32], w: &[f32], m: usize, k: usize, n: usize, dx: &mut [f32]) {
     debug_assert_eq!(dz.len(), m * n);
     debug_assert_eq!(w.len(), k * n);
     debug_assert_eq!(dx.len(), m * k);
     for i in 0..m {
         let dzrow = &dz[i * n..(i + 1) * n];
-        for kk in 0..k {
+        let mut kk0 = 0;
+        while kk0 + MB <= k {
+            let w0 = &w[kk0 * n..(kk0 + 1) * n];
+            let w1 = &w[(kk0 + 1) * n..(kk0 + 2) * n];
+            let w2 = &w[(kk0 + 2) * n..(kk0 + 3) * n];
+            let w3 = &w[(kk0 + 3) * n..(kk0 + 4) * n];
+            let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+            for j in 0..n {
+                let dv = dzrow[j] as f64;
+                a0 += dv * w0[j] as f64;
+                a1 += dv * w1[j] as f64;
+                a2 += dv * w2[j] as f64;
+                a3 += dv * w3[j] as f64;
+            }
+            dx[i * k + kk0] = a0 as f32;
+            dx[i * k + kk0 + 1] = a1 as f32;
+            dx[i * k + kk0 + 2] = a2 as f32;
+            dx[i * k + kk0 + 3] = a3 as f32;
+            kk0 += MB;
+        }
+        for kk in kk0..k {
             let wrow = &w[kk * n..(kk + 1) * n];
             let mut acc = 0.0f64;
             for (&dv, &wv) in dzrow.iter().zip(wrow) {
@@ -123,6 +333,59 @@ pub fn matmul_dx(dz: &[f32], w: &[f32], m: usize, k: usize, n: usize, dx: &mut [
             dx[i * k + kk] = acc as f32;
         }
     }
+}
+
+/// Input gradient sharded by output **rows** over the pool (disjoint
+/// `dx` bands, no combine) — bitwise-identical to [`matmul_dx`] at any
+/// thread count.
+pub fn matmul_dx_ctx(
+    ctx: &ParallelCtx,
+    dz: &[f32],
+    w: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    dx: &mut [f32],
+) {
+    debug_assert_eq!(dz.len(), m * n);
+    debug_assert_eq!(dx.len(), m * k);
+    let bands = row_bands(m, ctx.threads(), m * k * n);
+    if bands.len() <= 1 {
+        matmul_dx(dz, w, m, k, n, dx);
+        return;
+    }
+    let width = bands[0].1 - bands[0].0;
+    let jobs: Vec<Job<'_>> = dx
+        .chunks_mut(width * k)
+        .zip(&bands)
+        .map(|(oc, &(a, b))| {
+            let dzs = &dz[a * n..b * n];
+            Box::new(move || matmul_dx(dzs, w, b - a, k, n, oc)) as Job<'_>
+        })
+        .collect();
+    ctx.run(jobs);
+}
+
+/// Deterministic row-band plan for the `_ctx` kernels: uniform-width
+/// bands (last one ragged) over `[0, rows)`, one per pool lane, or a
+/// single band when parallel dispatch cannot pay for itself. Unlike
+/// `plan_shards` this plan MAY depend on the thread count — the kernels
+/// sharded with it write disjoint output bands with a fixed per-element
+/// order, so the band boundaries never reach the arithmetic.
+fn row_bands(rows: usize, threads: usize, products: usize) -> Vec<(usize, usize)> {
+    if threads <= 1 || rows < 2 || products < PAR_MIN_PRODUCTS {
+        return vec![(0, rows)];
+    }
+    let shards = threads.min(rows);
+    let width = rows.div_ceil(shards);
+    let mut bands = Vec::with_capacity(shards);
+    let mut lo = 0;
+    while lo < rows {
+        let hi = (lo + width).min(rows);
+        bands.push((lo, hi));
+        lo = hi;
+    }
+    bands
 }
 
 /// Bias gradient `db = sum_rows(dz)` with f64 column accumulators.
@@ -137,6 +400,187 @@ pub fn bias_db(dz: &[f32], m: usize, n: usize, db: &mut [f32]) {
     }
     for (o, &a) in db.iter_mut().zip(&acc) {
         *o = a as f32;
+    }
+}
+
+/// Embedding lookup + dense concat: the dlrm-style input layer.
+///
+/// `table` holds `fields` stacked `(vocab, dim)` tables (row of id `id`
+/// in field `f` is table row `f·vocab + id`); `cat` is `(m, fields)`
+/// i32 ids, `dense` is `(m, dense_dim)`. Writes
+/// `out[i, :] = concat(table[f·vocab + cat[i,f], :] for f) ++ dense[i, :]`
+/// with row stride `fields·dim + dense_dim`.
+pub fn embedding_forward(
+    table: &[f32],
+    cat: &[i32],
+    dense: &[f32],
+    m: usize,
+    fields: usize,
+    vocab: usize,
+    dim: usize,
+    dense_dim: usize,
+    out: &mut [f32],
+) {
+    let stride = fields * dim + dense_dim;
+    debug_assert_eq!(table.len(), fields * vocab * dim);
+    debug_assert_eq!(cat.len(), m * fields);
+    debug_assert_eq!(dense.len(), m * dense_dim);
+    debug_assert_eq!(out.len(), m * stride);
+    for i in 0..m {
+        let orow = &mut out[i * stride..(i + 1) * stride];
+        for f in 0..fields {
+            let id = cat[i * fields + f];
+            // Hard assert (not debug): an out-of-range id would read the
+            // wrong field's table (or out of bounds) silently in release.
+            assert!(
+                0 <= id && (id as usize) < vocab,
+                "embedding id {id} out of range (field {f}, vocab {vocab})"
+            );
+            let trow = &table[(f * vocab + id as usize) * dim..][..dim];
+            orow[f * dim..(f + 1) * dim].copy_from_slice(trow);
+        }
+        orow[fields * dim..].copy_from_slice(&dense[i * dense_dim..(i + 1) * dense_dim]);
+    }
+}
+
+/// Embedding backward: scatter-add of the input-layer gradient into the
+/// table gradient. Accumulates the whole table in f64 and visits rows in
+/// ascending `(i, f)` order, so repeated ids sum in a fixed order —
+/// deterministic at any call site. The dense tail of `dx0` is input
+/// data's gradient and is dropped.
+pub fn embedding_backward(
+    dx0: &[f32],
+    cat: &[i32],
+    m: usize,
+    fields: usize,
+    vocab: usize,
+    dim: usize,
+    dense_dim: usize,
+    dtable: &mut [f32],
+) {
+    let stride = fields * dim + dense_dim;
+    debug_assert_eq!(dx0.len(), m * stride);
+    debug_assert_eq!(cat.len(), m * fields);
+    debug_assert_eq!(dtable.len(), fields * vocab * dim);
+    let mut acc = vec![0.0f64; fields * vocab * dim];
+    for i in 0..m {
+        let drow = &dx0[i * stride..(i + 1) * stride];
+        for f in 0..fields {
+            let id = cat[i * fields + f];
+            assert!(
+                0 <= id && (id as usize) < vocab,
+                "embedding id {id} out of range (field {f}, vocab {vocab})"
+            );
+            let arow = &mut acc[(f * vocab + id as usize) * dim..][..dim];
+            for (a, &dv) in arow.iter_mut().zip(&drow[f * dim..(f + 1) * dim]) {
+                *a += dv as f64;
+            }
+        }
+    }
+    for (o, &a) in dtable.iter_mut().zip(&acc) {
+        *o = a as f32;
+    }
+}
+
+/// LayerNorm forward over `(m, n)` rows, in place:
+/// `h[i,:] = γ ⊙ (h[i,:] - μ_i)/√(σ²_i + ε) + β` with per-row mean and
+/// (biased) variance computed in f64, `j`-ascending. Caches the
+/// normalized activations `xhat` (f32, `(m, n)`) and per-row inverse
+/// stddev `rstd` (f64, `m`) for the backward pass.
+pub fn layernorm_forward(
+    h: &mut [f32],
+    m: usize,
+    n: usize,
+    gamma: &[f32],
+    beta: &[f32],
+    xhat: &mut [f32],
+    rstd: &mut [f64],
+) {
+    debug_assert_eq!(h.len(), m * n);
+    debug_assert_eq!(gamma.len(), n);
+    debug_assert_eq!(beta.len(), n);
+    debug_assert_eq!(xhat.len(), m * n);
+    debug_assert_eq!(rstd.len(), m);
+    let inv_n = 1.0 / n as f64;
+    for i in 0..m {
+        let hrow = &mut h[i * n..(i + 1) * n];
+        let mut mean = 0.0f64;
+        for &v in hrow.iter() {
+            mean += v as f64;
+        }
+        mean *= inv_n;
+        let mut var = 0.0f64;
+        for &v in hrow.iter() {
+            let d = v as f64 - mean;
+            var += d * d;
+        }
+        var *= inv_n;
+        let rs = 1.0 / (var + LN_EPS).sqrt();
+        rstd[i] = rs;
+        let xrow = &mut xhat[i * n..(i + 1) * n];
+        for j in 0..n {
+            let xh = (hrow[j] as f64 - mean) * rs;
+            xrow[j] = xh as f32;
+            hrow[j] = (xh * gamma[j] as f64 + beta[j] as f64) as f32;
+        }
+    }
+}
+
+/// LayerNorm backward. Consumes the upstream gradient `dh` (w.r.t. the
+/// affine LN output) in place, leaving the gradient w.r.t. the LN input;
+/// writes `dgamma[j] = Σ_i dh[i,j]·xhat[i,j]` and `dbeta[j] = Σ_i
+/// dh[i,j]` (f64 column accumulators, `i`-ascending). Per row, with
+/// `dxhat = dh ⊙ γ`:
+/// `dz[j] = rstd · (dxhat[j] - Σ_j dxhat / n - xhat[j] · Σ_j dxhat·xhat / n)`,
+/// all row sums f64 `j`-ascending.
+pub fn layernorm_backward(
+    dh: &mut [f32],
+    m: usize,
+    n: usize,
+    gamma: &[f32],
+    xhat: &[f32],
+    rstd: &[f64],
+    dgamma: &mut [f32],
+    dbeta: &mut [f32],
+) {
+    debug_assert_eq!(dh.len(), m * n);
+    debug_assert_eq!(gamma.len(), n);
+    debug_assert_eq!(xhat.len(), m * n);
+    debug_assert_eq!(rstd.len(), m);
+    debug_assert_eq!(dgamma.len(), n);
+    debug_assert_eq!(dbeta.len(), n);
+    let mut gacc = vec![0.0f64; n];
+    let mut bacc = vec![0.0f64; n];
+    for i in 0..m {
+        let drow = &dh[i * n..(i + 1) * n];
+        let xrow = &xhat[i * n..(i + 1) * n];
+        for j in 0..n {
+            gacc[j] += drow[j] as f64 * xrow[j] as f64;
+            bacc[j] += drow[j] as f64;
+        }
+    }
+    for (o, &a) in dgamma.iter_mut().zip(&gacc) {
+        *o = a as f32;
+    }
+    for (o, &a) in dbeta.iter_mut().zip(&bacc) {
+        *o = a as f32;
+    }
+    let inv_n = 1.0 / n as f64;
+    for i in 0..m {
+        let drow = &mut dh[i * n..(i + 1) * n];
+        let xrow = &xhat[i * n..(i + 1) * n];
+        let mut s1 = 0.0f64;
+        let mut s2 = 0.0f64;
+        for j in 0..n {
+            let dxh = drow[j] as f64 * gamma[j] as f64;
+            s1 += dxh;
+            s2 += dxh * xrow[j] as f64;
+        }
+        let rs = rstd[i];
+        for j in 0..n {
+            let dxh = drow[j] as f64 * gamma[j] as f64;
+            drow[j] = (rs * (dxh - s1 * inv_n - xrow[j] as f64 * s2 * inv_n)) as f32;
+        }
     }
 }
 
@@ -186,13 +630,13 @@ pub fn softmax_xent_loss(logits: &[f32], y: &[i32], m: usize, c: usize, dl: &mut
     loss * inv_m
 }
 
-/// Mean sigmoid binary-cross-entropy over `(m, 1)` logits with i32 {0,1}
-/// labels — the CTR/detection-head loss (first step toward the det/dlrm
-/// artifacts running on the interpreter). Per element, in f64:
+/// Mean sigmoid binary-cross-entropy over `(m, 1)` logits with f32 {0,1}
+/// labels — the CTR/detection-head loss (`data::ctr` emits f32 click
+/// labels). Per element, in f64:
 /// `max(z,0) - z·y + ln(1 + e^{-|z|})` (the overflow-free softplus form
 /// of `-y·ln σ(z) - (1-y)·ln(1-σ(z))`). Returns the f64 loss and writes
 /// `dz = (σ(z) - y) / m`.
-pub fn sigmoid_bce_loss(logits: &[f32], y: &[i32], m: usize, dl: &mut [f32]) -> f64 {
+pub fn sigmoid_bce_loss(logits: &[f32], y: &[f32], m: usize, dl: &mut [f32]) -> f64 {
     debug_assert_eq!(logits.len(), m);
     debug_assert_eq!(y.len(), m);
     debug_assert_eq!(dl.len(), m);
@@ -200,11 +644,15 @@ pub fn sigmoid_bce_loss(logits: &[f32], y: &[i32], m: usize, dl: &mut [f32]) -> 
     let mut loss = 0.0f64;
     for i in 0..m {
         let z = logits[i] as f64;
-        let t = y[i] as f64;
         // Hard assert (not debug): an out-of-range label would silently
         // corrupt loss and gradients in release builds (unlike
         // softmax_xent, whose bad label panics on the row index).
-        assert!(y[i] == 0 || y[i] == 1, "BCE label must be 0/1, got {}", y[i]);
+        assert!(
+            y[i] == 0.0 || y[i] == 1.0,
+            "BCE label must be exactly 0/1, got {}",
+            y[i]
+        );
+        let t = y[i] as f64;
         loss += z.max(0.0) - z * t + (-z.abs()).exp().ln_1p();
         let s = 1.0 / (1.0 + (-z).exp());
         dl[i] = ((s - t) * inv_m) as f32;
@@ -216,6 +664,7 @@ pub fn sigmoid_bce_loss(logits: &[f32], y: &[i32], m: usize, dl: &mut [f32]) -> 
 /// classifier artifacts; ties resolve to the lowest index, like argmax).
 pub fn argmax_correct(logits: &[f32], y: &[i32], m: usize, c: usize, out: &mut [f32]) {
     debug_assert_eq!(logits.len(), m * c);
+    debug_assert_eq!(y.len(), m);
     debug_assert_eq!(out.len(), m);
     for i in 0..m {
         let row = &logits[i * c..(i + 1) * c];
@@ -232,6 +681,8 @@ pub fn argmax_correct(logits: &[f32], y: &[i32], m: usize, c: usize, out: &mut [
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::parallel::ParallelPolicy;
+    use crate::util::prng::Rng;
 
     #[test]
     fn matmul_small_exact() {
@@ -241,6 +692,91 @@ mod tests {
         let mut out = [0.0f32; 4];
         matmul(&x, 2, 3, &w, 2, &mut out);
         assert_eq!(out, [4.0, 5.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn blocked_kernels_match_oracle_on_ragged_shapes() {
+        // Quick in-crate check; the thorough ragged/threaded property
+        // suite lives in tests/interp_kernel_equiv.rs.
+        let mut rng = Rng::new(7);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 5, 7), (9, 66, 130)] {
+            let mut x = vec![0.0f32; m * k];
+            let mut w = vec![0.0f32; k * n];
+            let mut dz = vec![0.0f32; m * n];
+            rng.fill_normal_f32(&mut x, 1.0);
+            rng.fill_normal_f32(&mut w, 1.0);
+            rng.fill_normal_f32(&mut dz, 1.0);
+            let (mut a, mut b) = (vec![0.0f32; m * n], vec![0.0f32; m * n]);
+            matmul(&x, m, k, &w, n, &mut a);
+            oracle::matmul(&x, m, k, &w, n, &mut b);
+            assert_eq!(a, b, "matmul ({m},{k},{n})");
+            let (mut a, mut b) = (vec![0.0f32; k * n], vec![0.0f32; k * n]);
+            matmul_dw(&x, &dz, m, k, n, &mut a);
+            oracle::matmul_dw(&x, &dz, m, k, n, &mut b);
+            assert_eq!(a, b, "matmul_dw ({m},{k},{n})");
+            let (mut a, mut b) = (vec![0.0f32; m * k], vec![0.0f32; m * k]);
+            matmul_dx(&dz, &w, m, k, n, &mut a);
+            oracle::matmul_dx(&dz, &w, m, k, n, &mut b);
+            assert_eq!(a, b, "matmul_dx ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn nan_and_inf_weights_poison_zero_inputs() {
+        // Regression: the old kernels skipped xv == 0.0 terms, silently
+        // turning 0 × inf / 0 × NaN into 0 and masking poisoned params.
+        let x = [0.0f32, 1.0];
+        let w = [f32::NAN, 2.0]; // (2, 1)
+        let mut out = [0.0f32; 1];
+        matmul(&x, 1, 2, &w, 1, &mut out);
+        assert!(out[0].is_nan(), "0 × NaN weight must propagate NaN");
+        let w = [f32::INFINITY, 2.0];
+        matmul(&x, 1, 2, &w, 1, &mut out);
+        assert!(out[0].is_nan(), "0 × inf weight must propagate NaN");
+        // Same for the weight gradient: zero input column × NaN dz.
+        let x = [0.0f32];
+        let dz = [f32::NAN];
+        let mut dw = [0.0f32; 1];
+        matmul_dw(&x, &dz, 1, 1, 1, &mut dw);
+        assert!(dw[0].is_nan(), "0 × NaN dz must propagate NaN into dw");
+    }
+
+    #[test]
+    fn ctx_kernels_match_serial_bitwise() {
+        let ctx = ParallelCtx::new(ParallelPolicy {
+            threads: 3,
+            min_shard_elems: 16,
+        });
+        let (m, k, n) = (13usize, 47usize, 129usize);
+        let mut rng = Rng::new(11);
+        let mut x = vec![0.0f32; m * k];
+        let mut w = vec![0.0f32; k * n];
+        let mut dz = vec![0.0f32; m * n];
+        rng.fill_normal_f32(&mut x, 1.0);
+        rng.fill_normal_f32(&mut w, 1.0);
+        rng.fill_normal_f32(&mut dz, 1.0);
+        let (mut a, mut b) = (vec![0.0f32; m * n], vec![0.0f32; m * n]);
+        matmul_ctx(&ctx, &x, m, k, &w, n, &mut a);
+        matmul(&x, m, k, &w, n, &mut b);
+        assert_eq!(a, b);
+        let (mut a, mut b) = (vec![0.0f32; k * n], vec![0.0f32; k * n]);
+        matmul_dw_ctx(&ctx, &x, &dz, m, k, n, &mut a);
+        matmul_dw(&x, &dz, m, k, n, &mut b);
+        assert_eq!(a, b);
+        let (mut a, mut b) = (vec![0.0f32; m * k], vec![0.0f32; m * k]);
+        matmul_dx_ctx(&ctx, &dz, &w, m, k, n, &mut a);
+        matmul_dx(&dz, &w, m, k, n, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn row_bands_cover_and_respect_thresholds() {
+        assert_eq!(row_bands(10, 1, usize::MAX), vec![(0, 10)]);
+        assert_eq!(row_bands(10, 4, 0), vec![(0, 10)]); // tiny work
+        let bands = row_bands(10, 4, usize::MAX);
+        assert_eq!(bands, vec![(0, 3), (3, 6), (6, 9), (9, 10)]);
+        let bands = row_bands(3, 8, usize::MAX);
+        assert_eq!(bands.len(), 3); // never more bands than rows
     }
 
     #[test]
@@ -254,6 +790,90 @@ mod tests {
         let mut s = [0.0f32];
         sigmoid(&mut s);
         assert!((s[0] - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn embedding_forward_gathers_and_concats() {
+        // 2 fields, vocab 3, dim 2, dense 1; table rows are recognizable.
+        let table: Vec<f32> = (0..2 * 3 * 2).map(|v| v as f32).collect();
+        let cat = [2i32, 0, 1, 1]; // (2 rows, 2 fields)
+        let dense = [10.0f32, 20.0];
+        let mut out = [0.0f32; 2 * 5];
+        embedding_forward(&table, &cat, &dense, 2, 2, 3, 2, 1, &mut out);
+        // row 0: field0 id2 -> table row 2 = [4,5]; field1 id0 -> row 3 = [6,7]
+        assert_eq!(&out[..5], &[4.0, 5.0, 6.0, 7.0, 10.0]);
+        // row 1: field0 id1 -> row 1 = [2,3]; field1 id1 -> row 4 = [8,9]
+        assert_eq!(&out[5..], &[2.0, 3.0, 8.0, 9.0, 20.0]);
+    }
+
+    #[test]
+    fn embedding_backward_scatter_adds_repeated_ids() {
+        // Both rows hit field-0 id 1: gradients must sum.
+        let cat = [1i32, 1];
+        let dx0 = [1.0f32, 2.0, 0.5, 10.0, 20.0, 0.25]; // stride 3 = 1 field * dim 2 + dense 1
+        let mut dt = [0.0f32; 2 * 2]; // 1 field, vocab 2, dim 2
+        embedding_backward(&dx0, &cat, 2, 1, 2, 2, 1, &mut dt);
+        assert_eq!(dt, [0.0, 0.0, 11.0, 22.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn embedding_rejects_out_of_range_id() {
+        let table = [0.0f32; 4];
+        let cat = [7i32];
+        let dense = [0.0f32];
+        let mut out = [0.0f32; 3];
+        embedding_forward(&table, &cat, &dense, 1, 1, 2, 2, 1, &mut out);
+    }
+
+    #[test]
+    fn layernorm_forward_normalizes_rows() {
+        let mut h = [1.0f32, 2.0, 3.0, 4.0, -10.0, 0.0, 10.0, 20.0];
+        let gamma = [1.0f32; 4];
+        let beta = [0.0f32; 4];
+        let mut xhat = [0.0f32; 8];
+        let mut rstd = [0.0f64; 2];
+        layernorm_forward(&mut h, 2, 4, &gamma, &beta, &mut xhat, &mut rstd);
+        for i in 0..2 {
+            let row = &h[i * 4..(i + 1) * 4];
+            let mean: f64 = row.iter().map(|&v| v as f64).sum::<f64>() / 4.0;
+            let var: f64 = row.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / 4.0;
+            assert!(mean.abs() < 1e-6, "row {i} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-3, "row {i} var {var}");
+        }
+        // With identity affine, output == xhat.
+        assert_eq!(h, xhat);
+    }
+
+    #[test]
+    fn layernorm_backward_gradient_sums_are_consistent() {
+        // dz rows must be orthogonal to (1, xhat): the LN output is
+        // invariant to input shifts and scalings, so those directions
+        // carry no gradient.
+        let mut h = [0.5f32, -1.0, 2.0, 0.25, 3.0, -0.5];
+        let gamma = [1.5f32, 0.5, 2.0];
+        let beta = [0.1f32, -0.2, 0.3];
+        let mut xhat = [0.0f32; 6];
+        let mut rstd = [0.0f64; 2];
+        layernorm_forward(&mut h, 2, 3, &gamma, &beta, &mut xhat, &mut rstd);
+        let mut dh = [1.0f32, -2.0, 0.5, 0.75, 0.25, -1.5];
+        let dh0 = dh;
+        let mut dgamma = [0.0f32; 3];
+        let mut dbeta = [0.0f32; 3];
+        layernorm_backward(&mut dh, 2, 3, &gamma, &xhat, &rstd, &mut dgamma, &mut dbeta);
+        for i in 0..2 {
+            let dz = &dh[i * 3..(i + 1) * 3];
+            let xr = &xhat[i * 3..(i + 1) * 3];
+            let s: f64 = dz.iter().map(|&v| v as f64).sum();
+            let sx: f64 = dz.iter().zip(xr).map(|(&d, &x)| d as f64 * x as f64).sum();
+            assert!(s.abs() < 1e-5, "row {i} shift leak {s}");
+            assert!(sx.abs() < 1e-5, "row {i} scale leak {sx}");
+        }
+        // dbeta is the plain column sum of the upstream grad.
+        for j in 0..3 {
+            let want = dh0[j] as f64 + dh0[3 + j] as f64;
+            assert!((dbeta[j] as f64 - want).abs() < 1e-6);
+        }
     }
 
     #[test]
@@ -283,20 +903,27 @@ mod tests {
         // z = 0: loss = ln 2 per element regardless of label; dz = ±0.5/m.
         let logits = [0.0f32, 0.0];
         let mut dl = [0.0f32; 2];
-        let loss = sigmoid_bce_loss(&logits, &[1, 0], 2, &mut dl);
+        let loss = sigmoid_bce_loss(&logits, &[1.0, 0.0], 2, &mut dl);
         assert!((loss - (2.0f64).ln()).abs() < 1e-12);
         assert!((dl[0] + 0.25).abs() < 1e-7);
         assert!((dl[1] - 0.25).abs() < 1e-7);
         // Confident-correct: near-zero loss; confident-wrong: ~|z|.
         let logits = [30.0f32, -30.0];
-        let loss = sigmoid_bce_loss(&logits, &[1, 0], 2, &mut dl);
+        let loss = sigmoid_bce_loss(&logits, &[1.0, 0.0], 2, &mut dl);
         assert!(loss < 1e-10, "{loss}");
-        let loss = sigmoid_bce_loss(&logits, &[0, 1], 2, &mut dl);
+        let loss = sigmoid_bce_loss(&logits, &[0.0, 1.0], 2, &mut dl);
         assert!((loss - 30.0).abs() < 1e-6, "{loss}");
         // Huge logits stay finite (softplus form cannot overflow).
         let logits = [500.0f32, -500.0];
-        let loss = sigmoid_bce_loss(&logits, &[0, 1], 2, &mut dl);
+        let loss = sigmoid_bce_loss(&logits, &[0.0, 1.0], 2, &mut dl);
         assert!(loss.is_finite() && dl.iter().all(|d| d.is_finite()));
+    }
+
+    #[test]
+    #[should_panic(expected = "exactly 0/1")]
+    fn sigmoid_bce_rejects_soft_labels() {
+        let mut dl = [0.0f32; 1];
+        sigmoid_bce_loss(&[0.0], &[0.5], 1, &mut dl);
     }
 
     #[test]
@@ -307,5 +934,24 @@ mod tests {
         assert_eq!(out, [1.0, 1.0]);
         argmax_correct(&logits, &[1, 0], 2, 3, &mut out);
         assert_eq!(out, [0.0, 0.0]);
+    }
+
+    #[test]
+    fn argmax_correct_out_of_range_label_is_never_correct() {
+        let logits = [1.0f32, 0.0, 0.0]; // (1, 3), argmax = 0
+        let mut out = [9.0f32; 1];
+        argmax_correct(&logits, &[7], 1, 3, &mut out);
+        assert_eq!(out, [0.0]);
+        argmax_correct(&logits, &[-1], 1, 3, &mut out);
+        assert_eq!(out, [0.0]);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic]
+    fn argmax_correct_rejects_mismatched_label_count() {
+        let logits = [0.0f32; 6];
+        let mut out = [0.0f32; 2];
+        argmax_correct(&logits, &[0], 2, 3, &mut out);
     }
 }

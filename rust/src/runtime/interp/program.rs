@@ -31,7 +31,19 @@ impl Act {
     }
 }
 
-/// One dense layer: `h = act(x @ W + b)` with `W` stored row-major
+/// Per-layer LayerNorm applied between the affine map and the
+/// activation: `h = act(γ ⊙ norm(x @ W + b) + β)`. Gamma/beta are
+/// `out_dim`-long parameter blocks; gamma inits to 1, beta to 0 (no
+/// `init_std` needed — the init is deterministic).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerNorm {
+    /// Offset of the gamma (scale) block, `out_dim` long.
+    pub g_off: usize,
+    /// Offset of the beta (shift) block, `out_dim` long.
+    pub b_off: usize,
+}
+
+/// One dense layer: `h = act(ln?(x @ W + b))` with `W` stored row-major
 /// `(in_dim, out_dim)` at `w_off` and `b` (when present) at `b_off`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Dense {
@@ -39,6 +51,8 @@ pub struct Dense {
     pub out_dim: usize,
     pub w_off: usize,
     pub b_off: Option<usize>,
+    /// Optional LayerNorm between the affine map and the activation.
+    pub ln: Option<LayerNorm>,
     pub act: Act,
     /// Weight-init std used when the artifact has no init blobs (builtin
     /// fallback path); biases init to zero.
@@ -51,6 +65,35 @@ impl Dense {
     }
 }
 
+/// Embedding front-end (the dlrm-style input layer): `fields` stacked
+/// `(vocab, dim)` tables at `t_off` gather per-field id rows which are
+/// concatenated with the dense features to form the first layer's input
+/// (`x0[i,:] = emb(cat[i,0]) ++ … ++ emb(cat[i,F-1]) ++ dense[i,:]`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Embedding {
+    pub fields: usize,
+    pub vocab: usize,
+    /// Per-field embedding row width.
+    pub dim: usize,
+    /// Dense (continuous) feature count appended after the embeddings.
+    pub dense_dim: usize,
+    /// Offset of the stacked table block, `fields·vocab·dim` long.
+    pub t_off: usize,
+    /// Table-init std for the blob-less builtin path.
+    pub init_std: f32,
+}
+
+impl Embedding {
+    pub fn t_len(&self) -> usize {
+        self.fields * self.vocab * self.dim
+    }
+
+    /// Width of the assembled first-layer input row.
+    pub fn x_dim(&self) -> usize {
+        self.fields * self.dim + self.dense_dim
+    }
+}
+
 /// The scalar training loss applied to the final layer output.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Loss {
@@ -59,7 +102,7 @@ pub enum Loss {
     MeanSquare,
     /// Mean softmax cross-entropy over `classes` logits with i32 labels.
     SoftmaxXent { classes: usize },
-    /// Mean sigmoid binary cross-entropy over a single logit with i32
+    /// Mean sigmoid binary cross-entropy over a single logit with f32
     /// {0,1} labels — the CTR/detection head (final layer out dim must
     /// be 1).
     SigmoidBce,
@@ -68,6 +111,8 @@ pub enum Loss {
 /// A complete interpretable program for one artifact.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ProgramSpec {
+    /// Optional embedding front-end assembling the first layer's input.
+    pub embed: Option<Embedding>,
     pub layers: Vec<Dense>,
     pub loss: Loss,
 }
@@ -89,15 +134,36 @@ impl ProgramSpec {
                 None => Act::Linear,
                 Some(s) => Act::parse(s).with_context(|| format!("layer {i}: bad act {s:?}"))?,
             };
+            let lnj = l.get("ln");
+            let ln = match lnj.get("g_off").as_usize() {
+                None => None,
+                Some(g_off) => Some(LayerNorm {
+                    g_off,
+                    b_off: lnj.get("b_off").as_usize().with_context(|| format!("layer {i} ln b_off"))?,
+                }),
+            };
             layers.push(Dense {
                 in_dim,
                 out_dim,
                 w_off: l.get("w_off").as_usize().with_context(|| format!("layer {i} w_off"))?,
                 b_off: l.get("b_off").as_usize(),
+                ln,
                 act,
                 init_std: l.get("init_std").as_f64().unwrap_or(0.0) as f32,
             });
         }
+        let ej = j.get("embed");
+        let embed = match ej.get("fields").as_usize() {
+            None => None,
+            Some(fields) => Some(Embedding {
+                fields,
+                vocab: ej.get("vocab").as_usize().context("embed vocab")?,
+                dim: ej.get("dim").as_usize().context("embed dim")?,
+                dense_dim: ej.get("dense_dim").as_usize().context("embed dense_dim")?,
+                t_off: ej.get("t_off").as_usize().context("embed t_off")?,
+                init_std: ej.get("init_std").as_f64().unwrap_or(0.0) as f32,
+            }),
+        };
         let lj = j.get("loss");
         let loss = match lj.get("kind").as_str() {
             Some("mean_square") => Loss::MeanSquare,
@@ -107,7 +173,7 @@ impl ProgramSpec {
             Some("sigmoid_bce") => Loss::SigmoidBce,
             other => bail!("program loss kind {other:?} not supported"),
         };
-        let p = ProgramSpec { layers, loss };
+        let p = ProgramSpec { embed, layers, loss };
         p.validate()?;
         Ok(p)
     }
@@ -124,11 +190,18 @@ impl ProgramSpec {
 
     /// The parameter blocks `(offset, len)` in flat-vector order.
     pub fn param_blocks(&self) -> Vec<(usize, usize)> {
-        let mut blocks = Vec::with_capacity(2 * self.layers.len());
+        let mut blocks = Vec::with_capacity(4 * self.layers.len() + 1);
+        if let Some(e) = &self.embed {
+            blocks.push((e.t_off, e.t_len()));
+        }
         for l in &self.layers {
             blocks.push((l.w_off, l.w_len()));
             if let Some(b) = l.b_off {
                 blocks.push((b, l.out_dim));
+            }
+            if let Some(ln) = l.ln {
+                blocks.push((ln.g_off, l.out_dim));
+                blocks.push((ln.b_off, l.out_dim));
             }
         }
         blocks.sort_unstable();
@@ -160,6 +233,18 @@ impl ProgramSpec {
         for (i, l) in self.layers.iter().enumerate() {
             if l.in_dim == 0 || l.out_dim == 0 {
                 bail!("program layer {i} has a zero dim");
+            }
+        }
+        if let Some(e) = &self.embed {
+            if e.fields == 0 || e.vocab == 0 || e.dim == 0 {
+                bail!("program embed has a zero dim (fields/vocab/dim)");
+            }
+            if self.in_dim() != e.x_dim() {
+                bail!(
+                    "embed output width {} (fields*dim + dense_dim) != first layer in {}",
+                    e.x_dim(),
+                    self.in_dim()
+                );
             }
         }
         if let Loss::SoftmaxXent { classes } = self.loss {
@@ -251,6 +336,39 @@ mod tests {
         let j = Json::parse(
             r#"{"layers": [{"in": 8, "out": 2, "w_off": 2, "b_off": 0}],
                 "loss": {"kind": "sigmoid_bce"}}"#,
+        )
+        .unwrap();
+        assert!(ProgramSpec::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn embed_and_ln_parse_and_tile() {
+        // table 0..12, bias 12..14, ln beta 14..16, ln gamma 16..18,
+        // weight 18..28 — blocks must tile [0, 28) exactly.
+        let j = Json::parse(
+            r#"{"embed": {"fields": 2, "vocab": 3, "dim": 2, "dense_dim": 1,
+                          "t_off": 0, "init_std": 0.05},
+                "layers": [{"in": 5, "out": 2, "w_off": 18, "b_off": 12,
+                            "ln": {"g_off": 16, "b_off": 14}, "act": "relu"}],
+                "loss": {"kind": "mean_square"}}"#,
+        )
+        .unwrap();
+        let p = ProgramSpec::from_json(&j).unwrap();
+        let e = p.embed.as_ref().unwrap();
+        assert_eq!((e.fields, e.vocab, e.dim, e.dense_dim), (2, 3, 2, 1));
+        assert_eq!(e.t_len(), 12);
+        assert_eq!(e.x_dim(), 5);
+        assert_eq!(p.layers[0].ln, Some(LayerNorm { g_off: 16, b_off: 14 }));
+        assert_eq!(p.param_dim(), 28);
+    }
+
+    #[test]
+    fn embed_width_must_match_first_layer() {
+        let j = Json::parse(
+            r#"{"embed": {"fields": 2, "vocab": 3, "dim": 2, "dense_dim": 1,
+                          "t_off": 0},
+                "layers": [{"in": 4, "out": 1, "w_off": 12}],
+                "loss": {"kind": "mean_square"}}"#,
         )
         .unwrap();
         assert!(ProgramSpec::from_json(&j).is_err());

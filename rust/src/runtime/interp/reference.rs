@@ -13,6 +13,7 @@ use crate::data::Batch;
 use crate::runtime::artifact::{ArtifactSpec, Golden};
 use crate::util::error::{bail, Context, Result};
 
+use super::ops::LN_EPS;
 use super::program::{Act, Loss, ProgramSpec};
 
 /// Forward + backward in pure f64. Returns `(loss, flat_grads)`.
@@ -21,13 +22,43 @@ pub fn loss_and_grad(
     params: &[f32],
     batch: &Batch,
 ) -> Result<(f64, Vec<f64>)> {
-    let x32 = batch[0].as_f32().context("reference: input 0 must be f32")?;
-    let x: Vec<f64> = x32.iter().map(|&v| v as f64).collect();
-    let m = x.len() / prog.in_dim();
     let p: Vec<f64> = params.iter().map(|&v| v as f64).collect();
 
-    // Forward: keep every post-activation.
+    // Assemble the first-layer input: either the raw f32 features or the
+    // embedding gather ++ dense concat.
+    let (x, m, cat, label_idx) = if let Some(e) = prog.embed.as_ref() {
+        let cat = batch[0].as_i32().context("reference: input 0 must be i32 ids")?;
+        let dense = batch[1].as_f32().context("reference: input 1 must be f32 dense")?;
+        let m = cat.len() / e.fields;
+        let stride = e.x_dim();
+        let mut x = vec![0.0f64; m * stride];
+        for i in 0..m {
+            for f in 0..e.fields {
+                let id = cat[i * e.fields + f];
+                if id < 0 || id as usize >= e.vocab {
+                    bail!("reference: embedding id {id} out of range");
+                }
+                let trow = e.t_off + (f * e.vocab + id as usize) * e.dim;
+                for j in 0..e.dim {
+                    x[i * stride + f * e.dim + j] = p[trow + j];
+                }
+            }
+            for j in 0..e.dense_dim {
+                x[i * stride + e.fields * e.dim + j] = dense[i * e.dense_dim + j] as f64;
+            }
+        }
+        (x, m, Some(cat), 2usize)
+    } else {
+        let x32 = batch[0].as_f32().context("reference: input 0 must be f32")?;
+        let x: Vec<f64> = x32.iter().map(|&v| v as f64).collect();
+        let m = x.len() / prog.in_dim();
+        (x, m, None, 1usize)
+    };
+
+    // Forward: keep every post-activation plus the LN caches.
     let mut acts: Vec<Vec<f64>> = Vec::new();
+    let mut xhats: Vec<Vec<f64>> = Vec::new();
+    let mut rstds: Vec<Vec<f64>> = Vec::new();
     for (li, l) in prog.layers.iter().enumerate() {
         let input: &[f64] = if li == 0 { &x } else { &acts[li - 1] };
         let (k, n) = (l.in_dim, l.out_dim);
@@ -41,14 +72,36 @@ pub fn loss_and_grad(
                 for kk in 0..k {
                     acc += input[i * k + kk] * p[l.w_off + kk * n + j];
                 }
-                h[i * n + j] = match l.act {
-                    Act::Linear => acc,
-                    Act::Relu => acc.max(0.0),
-                    Act::Sigmoid => 1.0 / (1.0 + (-acc).exp()),
-                };
+                h[i * n + j] = acc;
             }
         }
+        let (mut xhat, mut rstd) = (Vec::new(), Vec::new());
+        if let Some(ln) = l.ln {
+            xhat = vec![0.0f64; m * n];
+            rstd = vec![0.0f64; m];
+            for i in 0..m {
+                let row = &mut h[i * n..(i + 1) * n];
+                let mean: f64 = row.iter().sum::<f64>() / n as f64;
+                let var: f64 = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f64>() / n as f64;
+                let rs = 1.0 / (var + LN_EPS).sqrt();
+                rstd[i] = rs;
+                for j in 0..n {
+                    let xh = (row[j] - mean) * rs;
+                    xhat[i * n + j] = xh;
+                    row[j] = xh * p[ln.g_off + j] + p[ln.b_off + j];
+                }
+            }
+        }
+        for v in h.iter_mut() {
+            *v = match l.act {
+                Act::Linear => *v,
+                Act::Relu => v.max(0.0),
+                Act::Sigmoid => 1.0 / (1.0 + (-*v).exp()),
+            };
+        }
         acts.push(h);
+        xhats.push(xhat);
+        rstds.push(rstd);
     }
 
     // Loss + dLoss/d(final output).
@@ -66,7 +119,9 @@ pub fn loss_and_grad(
             dh.iter_mut().for_each(|d| *d /= m as f64);
         }
         Loss::SoftmaxXent { classes } => {
-            let y = batch[1].as_i32().context("reference: input 1 must be i32")?;
+            let y = batch[label_idx]
+                .as_i32()
+                .context("reference: labels must be i32")?;
             if classes != c {
                 bail!("reference: classes {classes} != out dim {c}");
             }
@@ -84,15 +139,24 @@ pub fn loss_and_grad(
             loss /= m as f64;
         }
         Loss::SigmoidBce => {
-            let y = batch[1].as_i32().context("reference: input 1 must be i32")?;
+            // Labels arrive as f32 clicks (data::ctr) or i32 {0,1}.
+            let y: Vec<f64> = match batch[label_idx].as_f32() {
+                Some(v) => v.iter().map(|&t| t as f64).collect(),
+                None => batch[label_idx]
+                    .as_i32()
+                    .context("reference: BCE labels must be f32 or i32")?
+                    .iter()
+                    .map(|&t| t as f64)
+                    .collect(),
+            };
             if c != 1 {
                 bail!("reference: sigmoid_bce needs out dim 1, got {c}");
             }
             for i in 0..m {
                 let z = out[i];
-                let t = y[i] as f64;
-                if y[i] != 0 && y[i] != 1 {
-                    bail!("reference: BCE label must be 0/1, got {}", y[i]);
+                let t = y[i];
+                if t != 0.0 && t != 1.0 {
+                    bail!("reference: BCE label must be 0/1, got {t}");
                 }
                 loss += z.max(0.0) - z * t + (-z.abs()).exp().ln_1p();
                 dh[i] = (1.0 / (1.0 + (-z).exp()) - t) / m as f64;
@@ -120,6 +184,36 @@ pub fn loss_and_grad(
                 Act::Sigmoid => *d *= hv * (1.0 - hv),
             }
         }
+        if let Some(ln) = l.ln {
+            // dz is d/d(LN affine output) here: accumulate gamma/beta
+            // grads, then map dz back through the normalization.
+            let xhat = &xhats[li];
+            let rstd = &rstds[li];
+            for j in 0..n {
+                let mut dg = 0.0f64;
+                let mut db = 0.0f64;
+                for i in 0..m {
+                    dg += dz[i * n + j] * xhat[i * n + j];
+                    db += dz[i * n + j];
+                }
+                grads[ln.g_off + j] = dg;
+                grads[ln.b_off + j] = db;
+            }
+            for i in 0..m {
+                let mut s1 = 0.0f64;
+                let mut s2 = 0.0f64;
+                for j in 0..n {
+                    let dxh = dz[i * n + j] * p[ln.g_off + j];
+                    s1 += dxh;
+                    s2 += dxh * xhat[i * n + j];
+                }
+                for j in 0..n {
+                    let dxh = dz[i * n + j] * p[ln.g_off + j];
+                    dz[i * n + j] =
+                        rstd[i] * (dxh - s1 / n as f64 - xhat[i * n + j] * s2 / n as f64);
+                }
+            }
+        }
         let input: &[f64] = if li == 0 { &x } else { &acts[li - 1] };
         for kk in 0..k {
             for j in 0..n {
@@ -139,7 +233,7 @@ pub fn loss_and_grad(
                 grads[b_off + j] = acc;
             }
         }
-        if li > 0 {
+        if li > 0 || prog.embed.is_some() {
             let mut dx = vec![0.0f64; m * k];
             for i in 0..m {
                 for kk in 0..k {
@@ -151,6 +245,21 @@ pub fn loss_and_grad(
                 }
             }
             dh = dx;
+        }
+    }
+    if let Some(e) = prog.embed.as_ref() {
+        // Scatter-add the input gradient into the table rows; the dense
+        // tail is input data's gradient and is dropped.
+        let cat = cat.expect("embed path decoded ids above");
+        let stride = e.x_dim();
+        for i in 0..m {
+            for f in 0..e.fields {
+                let id = cat[i * e.fields + f] as usize;
+                let trow = e.t_off + (f * e.vocab + id) * e.dim;
+                for j in 0..e.dim {
+                    grads[trow + j] += dh[i * stride + f * e.dim + j];
+                }
+            }
         }
     }
     Ok((loss, grads))
@@ -180,7 +289,7 @@ pub fn golden(spec: &ArtifactSpec) -> Result<Golden> {
 mod tests {
     use super::*;
     use crate::data::Array;
-    use crate::runtime::interp::program::Dense;
+    use crate::runtime::interp::program::{Dense, Embedding, LayerNorm};
     use crate::util::prng::Rng;
 
     /// Tiny 2-layer relu net: reference vs interpreter must agree to
@@ -188,12 +297,14 @@ mod tests {
     #[test]
     fn reference_matches_interpreter_on_small_net() {
         let prog = ProgramSpec {
+            embed: None,
             layers: vec![
                 Dense {
                     in_dim: 5,
                     out_dim: 4,
                     w_off: 4,
                     b_off: Some(0),
+                    ln: None,
                     act: Act::Relu,
                     init_std: 0.5,
                 },
@@ -202,6 +313,7 @@ mod tests {
                     out_dim: 3,
                     w_off: 27,
                     b_off: Some(24),
+                    ln: None,
                     act: Act::Linear,
                     init_std: 0.5,
                 },
@@ -229,6 +341,80 @@ mod tests {
         for (i, (&g, &r)) in grads.iter().zip(&ref_grads).enumerate() {
             assert!(
                 (g as f64 - r).abs() < 1e-5 * r.abs().max(1e-3),
+                "grad[{i}]: interp {g} vs reference {r}"
+            );
+        }
+    }
+
+    /// Embedding + layernorm path: reference vs interpreter on a tiny
+    /// dlrm-shaped net (2 fields × vocab 3 × dim 2 + 1 dense → LN relu 3
+    /// → 1 logit, BCE). Catches a formula error in either side's LN or
+    /// scatter-add.
+    #[test]
+    fn reference_matches_interpreter_with_embed_and_ln() {
+        // Layout: table 0..12, l0 b 12..15, ln beta 15..18,
+        // ln gamma 18..21, l0 w 21..36, l1 b 36..37, l1 w 37..40.
+        let prog = ProgramSpec {
+            embed: Some(Embedding {
+                fields: 2,
+                vocab: 3,
+                dim: 2,
+                dense_dim: 1,
+                t_off: 0,
+                init_std: 0.4,
+            }),
+            layers: vec![
+                Dense {
+                    in_dim: 5,
+                    out_dim: 3,
+                    w_off: 21,
+                    b_off: Some(12),
+                    ln: Some(LayerNorm { g_off: 18, b_off: 15 }),
+                    act: Act::Relu,
+                    init_std: 0.5,
+                },
+                Dense {
+                    in_dim: 3,
+                    out_dim: 1,
+                    w_off: 37,
+                    b_off: Some(36),
+                    ln: None,
+                    act: Act::Linear,
+                    init_std: 0.5,
+                },
+            ],
+            loss: Loss::SigmoidBce,
+        };
+        prog.validate().unwrap();
+        let mut params = super::super::init_params(&prog, 11);
+        // Perturb LN beta/gamma away from the identity so their grads
+        // exercise the full formula.
+        params[15] = 0.3;
+        params[19] = 1.7;
+        let m = 6usize;
+        let cat: Vec<i32> = (0..m * 2).map(|i| (i % 3) as i32).collect();
+        let mut dense = vec![0.0f32; m];
+        let mut rng = Rng::new(5);
+        rng.fill_normal_f32(&mut dense, 1.0);
+        let y: Vec<f32> = (0..m).map(|i| (i % 2) as f32).collect();
+        let batch: Batch = vec![
+            Array::I32(cat, vec![m, 2]),
+            Array::F32(dense, vec![m, 1]),
+            Array::F32(y, vec![m]),
+        ];
+
+        let (ref_loss, ref_grads) = loss_and_grad(&prog, &params, &batch).unwrap();
+
+        let exec = super::super::InterpExec { prog: prog.clone() };
+        let mut grads = vec![0.0f32; prog.param_dim()];
+        let loss = exec
+            .run_train_stream(&params, &batch, &mut grads, &mut |_, _, _| {})
+            .unwrap();
+
+        assert!((loss as f64 - ref_loss).abs() < 1e-5 * ref_loss.abs().max(1.0));
+        for (i, (&g, &r)) in grads.iter().zip(&ref_grads).enumerate() {
+            assert!(
+                (g as f64 - r).abs() < 1e-4 * r.abs().max(1e-3),
                 "grad[{i}]: interp {g} vs reference {r}"
             );
         }

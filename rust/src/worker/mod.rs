@@ -101,12 +101,20 @@ impl Worker {
     /// because injectors draw from their RNG in flat element order and
     /// must see the whole gradient at once (bitwise-identical to the
     /// pre-streaming behaviour).
+    ///
+    /// `par` is the intra-step parallel context: the interpreter shards
+    /// its matmul kernels over its worker pool with results bitwise
+    /// invariant to the pool width, so any `ParallelCtx` (including
+    /// [`ParallelCtx::serial`]) yields identical gradients.
+    ///
+    /// [`ParallelCtx::serial`]: crate::parallel::ParallelCtx::serial
     pub fn compute_grad_buckets(
         &mut self,
         exe: &Executable,
         params: &[f32],
         local_batch: usize,
         buckets: &Buckets,
+        par: &crate::parallel::ParallelCtx,
         on_bucket: &mut dyn FnMut(usize, &[f32]),
     ) -> Result<()> {
         let d = buckets.total();
@@ -126,7 +134,7 @@ impl Worker {
             // time, not the leader's aggregation hooks.
             let mut deliver_s = 0.0f64;
             let t = crate::util::timer::Timer::start();
-            let r = exe.run_train_stream(params, &batch, &mut grad_buf, &mut |g, off, len| {
+            let r = exe.run_train_stream_ctx(params, &batch, &mut grad_buf, par, &mut |g, off, len| {
                 // Credit the segment to every bucket it overlaps; a
                 // bucket is ready exactly when its range is fully
                 // written (segments never overlap, so counts are exact).

@@ -172,7 +172,7 @@ fn sigmoid_bce_loss_backward() {
     let m = 8usize;
     let mut rng = Rng::new(18);
     let logits = randn(&mut rng, m);
-    let y: Vec<i32> = (0..m as i32).map(|i| i % 2).collect();
+    let y: Vec<f32> = (0..m).map(|i| (i % 2) as f32).collect();
     let mut dl = vec![0.0f32; m];
     ops::sigmoid_bce_loss(&logits, &y, m, &mut dl);
     for i in 0..m {
@@ -201,6 +201,71 @@ fn softmax_xent_loss_backward() {
     }
 }
 
+#[test]
+fn embedding_backward_matches_fd() {
+    // Repeated ids across rows so the scatter-add path (not just the
+    // one-hot gather transpose) is exercised.
+    let (m, fields, vocab, dim, dense_dim) = (3usize, 2, 4, 2, 2);
+    let stride = fields * dim + dense_dim;
+    let mut rng = Rng::new(31);
+    let table = randn(&mut rng, fields * vocab * dim);
+    let dense = randn(&mut rng, m * dense_dim);
+    let cat: Vec<i32> = vec![1, 3, 1, 0, 2, 3]; // row-major m x fields; id 1/field 0 repeats
+    let c: Vec<f64> = randn(&mut rng, m * stride).iter().map(|&v| v as f64).collect();
+    let dx0: Vec<f32> = c.iter().map(|&v| v as f32).collect();
+
+    let mut dtable = vec![0.0f32; table.len()];
+    ops::embedding_backward(&dx0, &cat, m, fields, vocab, dim, dense_dim, &mut dtable);
+    for i in 0..table.len() {
+        let fd = central_diff(&table, i, &mut |tp| {
+            let mut out = vec![0.0f32; m * stride];
+            ops::embedding_forward(tp, &cat, &dense, m, fields, vocab, dim, dense_dim, &mut out);
+            dot_f64(&c, &out)
+        });
+        assert_close(dtable[i] as f64, fd, &format!("embedding dtable[{i}]"));
+    }
+}
+
+#[test]
+fn layernorm_backward_matches_fd() {
+    let (m, n) = (4usize, 6);
+    let mut rng = Rng::new(32);
+    let z = randn(&mut rng, m * n);
+    let gamma: Vec<f32> = randn(&mut rng, n).iter().map(|&v| 1.0 + 0.3 * v).collect();
+    let beta = randn(&mut rng, n);
+    let c: Vec<f64> = randn(&mut rng, m * n).iter().map(|&v| v as f64).collect();
+
+    // Objective <C, LN(z)> for any (z, gamma, beta) triple.
+    let obj = |zp: &[f32], gp: &[f32], bp: &[f32]| -> f64 {
+        let mut h = zp.to_vec();
+        let mut xhat = vec![0.0f32; m * n];
+        let mut rstd = vec![0.0f64; m];
+        ops::layernorm_forward(&mut h, m, n, gp, bp, &mut xhat, &mut rstd);
+        dot_f64(&c, &h)
+    };
+
+    // Analytic gradients from the backward op.
+    let mut h = z.clone();
+    let mut xhat = vec![0.0f32; m * n];
+    let mut rstd = vec![0.0f64; m];
+    ops::layernorm_forward(&mut h, m, n, &gamma, &beta, &mut xhat, &mut rstd);
+    let mut dh: Vec<f32> = c.iter().map(|&v| v as f32).collect();
+    let mut dgamma = vec![0.0f32; n];
+    let mut dbeta = vec![0.0f32; n];
+    ops::layernorm_backward(&mut dh, m, n, &gamma, &xhat, &rstd, &mut dgamma, &mut dbeta);
+
+    for i in 0..m * n {
+        let fd = central_diff(&z, i, &mut |zp| obj(zp, &gamma, &beta));
+        assert_close(dh[i] as f64, fd, &format!("layernorm dz[{i}]"));
+    }
+    for i in 0..n {
+        let fd = central_diff(&gamma, i, &mut |gp| obj(&z, gp, &beta));
+        assert_close(dgamma[i] as f64, fd, &format!("layernorm dgamma[{i}]"));
+        let fd = central_diff(&beta, i, &mut |bp| obj(&z, &gamma, bp));
+        assert_close(dbeta[i] as f64, fd, &format!("layernorm dbeta[{i}]"));
+    }
+}
+
 /// Composition check: the full streamed backward of a small 2-layer net
 /// (relu + softmax-xent, biased layers) against FD on the train loss —
 /// exercises the layer chaining, offset bookkeeping, and activation
@@ -209,12 +274,14 @@ fn softmax_xent_loss_backward() {
 fn full_program_gradient_matches_fd() {
     use adacons::data::Array;
     let prog = ProgramSpec {
+        embed: None,
         layers: vec![
             Dense {
                 in_dim: 4,
                 out_dim: 5,
                 w_off: 5,
                 b_off: Some(0),
+                ln: None,
                 act: Act::Relu,
                 init_std: 0.7,
             },
@@ -223,6 +290,7 @@ fn full_program_gradient_matches_fd() {
                 out_dim: 3,
                 w_off: 28,
                 b_off: Some(25),
+                ln: None,
                 act: Act::Linear,
                 init_std: 0.7,
             },
@@ -261,12 +329,14 @@ fn full_program_gradient_matches_fd() {
 fn bce_program_gradient_matches_fd() {
     use adacons::data::Array;
     let prog = ProgramSpec {
+        embed: None,
         layers: vec![
             Dense {
                 in_dim: 4,
                 out_dim: 5,
                 w_off: 5,
                 b_off: Some(0),
+                ln: None,
                 act: Act::Sigmoid,
                 init_std: 0.7,
             },
@@ -275,6 +345,7 @@ fn bce_program_gradient_matches_fd() {
                 out_dim: 1,
                 w_off: 26,
                 b_off: Some(25),
+                ln: None,
                 act: Act::Linear,
                 init_std: 0.7,
             },

@@ -1,0 +1,129 @@
+//! Bitwise equivalence of the fast interpreter matmul kernels against
+//! the scalar oracle.
+//!
+//! The blocked kernels (`ops::matmul` / `matmul_dw` / `matmul_dx`) and
+//! their pool-sharded `_ctx` variants keep one f64 accumulator per
+//! output element and feed it in a fixed canonical order, so their
+//! results must equal the straight-loop oracle **bit for bit** on every
+//! shape and at every pool width — that invariant is what lets rank
+//! threads shard their backward over a shared pool without breaking the
+//! `parallel_equivalence` suites. This file is the property check: a
+//! deterministic grid of ragged shapes (tile-aligned, off-by-one, tiny,
+//! wide, tall) crossed with pool widths, plus NaN/inf transparency.
+
+use adacons::parallel::{ParallelCtx, ParallelPolicy};
+use adacons::runtime::interp::ops::{self, oracle};
+use adacons::util::prng::Rng;
+
+/// Shapes around the MB=4 / NB=64 tile boundaries plus degenerate and
+/// parallel-threshold-crossing cases.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (1, 7, 1),
+    (3, 5, 7),
+    (4, 64, 64),   // exactly one tile
+    (5, 65, 66),   // one past every tile edge
+    (9, 66, 130),
+    (13, 47, 129),
+    (33, 17, 3),   // tall and narrow
+    (2, 300, 11),  // long inner dimension
+    (64, 32, 64),  // above the parallel threshold
+];
+
+fn fill(rng: &mut Rng, n: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; n];
+    rng.fill_normal_f32(&mut v, 1.0);
+    v
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn blocked_kernels_match_oracle_bitwise_on_shape_grid() {
+    let mut rng = Rng::new(0xB10C);
+    for &(m, k, n) in SHAPES {
+        let x = fill(&mut rng, m * k);
+        let w = fill(&mut rng, k * n);
+        let dz = fill(&mut rng, m * n);
+
+        let (mut a, mut b) = (vec![0.0f32; m * n], vec![0.0f32; m * n]);
+        ops::matmul(&x, m, k, &w, n, &mut a);
+        oracle::matmul(&x, m, k, &w, n, &mut b);
+        assert_eq!(bits(&a), bits(&b), "matmul ({m},{k},{n})");
+
+        let (mut a, mut b) = (vec![0.0f32; k * n], vec![0.0f32; k * n]);
+        ops::matmul_dw(&x, &dz, m, k, n, &mut a);
+        oracle::matmul_dw(&x, &dz, m, k, n, &mut b);
+        assert_eq!(bits(&a), bits(&b), "matmul_dw ({m},{k},{n})");
+
+        let (mut a, mut b) = (vec![0.0f32; m * k], vec![0.0f32; m * k]);
+        ops::matmul_dx(&dz, &w, m, k, n, &mut a);
+        oracle::matmul_dx(&dz, &w, m, k, n, &mut b);
+        assert_eq!(bits(&a), bits(&b), "matmul_dx ({m},{k},{n})");
+    }
+}
+
+#[test]
+fn pool_sharded_kernels_match_oracle_bitwise_at_every_width() {
+    let mut rng = Rng::new(0xC0DE);
+    for threads in [1usize, 2, 3, 5] {
+        let ctx = ParallelCtx::new(ParallelPolicy {
+            threads,
+            min_shard_elems: 16,
+        });
+        for &(m, k, n) in SHAPES {
+            let x = fill(&mut rng, m * k);
+            let w = fill(&mut rng, k * n);
+            let dz = fill(&mut rng, m * n);
+
+            let (mut a, mut b) = (vec![0.0f32; m * n], vec![0.0f32; m * n]);
+            ops::matmul_ctx(&ctx, &x, m, k, &w, n, &mut a);
+            oracle::matmul(&x, m, k, &w, n, &mut b);
+            assert_eq!(bits(&a), bits(&b), "matmul_ctx t={threads} ({m},{k},{n})");
+
+            let (mut a, mut b) = (vec![0.0f32; k * n], vec![0.0f32; k * n]);
+            ops::matmul_dw_ctx(&ctx, &x, &dz, m, k, n, &mut a);
+            oracle::matmul_dw(&x, &dz, m, k, n, &mut b);
+            assert_eq!(bits(&a), bits(&b), "matmul_dw_ctx t={threads} ({m},{k},{n})");
+
+            let (mut a, mut b) = (vec![0.0f32; m * k], vec![0.0f32; m * k]);
+            ops::matmul_dx_ctx(&ctx, &dz, &w, m, k, n, &mut a);
+            oracle::matmul_dx(&dz, &w, m, k, n, &mut b);
+            assert_eq!(bits(&a), bits(&b), "matmul_dx_ctx t={threads} ({m},{k},{n})");
+        }
+    }
+}
+
+#[test]
+fn non_finite_values_propagate_like_the_oracle() {
+    // The old kernels skipped x == 0.0 terms, which masked 0 * inf and
+    // 0 * NaN; the blocked kernels are NaN-transparent. Poison one x and
+    // one w entry and require bit-identical (including NaN-pattern
+    // placement) results against the oracle.
+    let (m, k, n) = (6usize, 66, 70);
+    let mut rng = Rng::new(0xF1F1);
+    let mut x = fill(&mut rng, m * k);
+    let mut w = fill(&mut rng, k * n);
+    let dz = fill(&mut rng, m * n);
+    x[3] = 0.0;
+    w[3 * n + 5] = f32::INFINITY; // 0 * inf = NaN must reach out[0*n+5]
+    x[k + 7] = f32::NAN; // row 1 fully poisoned
+    let (mut a, mut b) = (vec![0.0f32; m * n], vec![0.0f32; m * n]);
+    ops::matmul(&x, m, k, &w, n, &mut a);
+    oracle::matmul(&x, m, k, &w, n, &mut b);
+    assert!(a[5].is_nan(), "0 * inf must produce NaN, got {}", a[5]);
+    assert!(a[n..2 * n].iter().all(|v| v.is_nan()));
+    assert_eq!(bits(&a), bits(&b));
+
+    let (mut da, mut db) = (vec![0.0f32; k * n], vec![0.0f32; k * n]);
+    ops::matmul_dw(&x, &dz, m, k, n, &mut da);
+    oracle::matmul_dw(&x, &dz, m, k, n, &mut db);
+    assert_eq!(bits(&da), bits(&db));
+
+    let (mut da, mut db) = (vec![0.0f32; m * k], vec![0.0f32; m * k]);
+    ops::matmul_dx(&dz, &w, m, k, n, &mut da);
+    oracle::matmul_dx(&dz, &w, m, k, n, &mut db);
+    assert_eq!(bits(&da), bits(&db));
+}

@@ -194,6 +194,67 @@ fn hier_topology_trains_and_reports_comm_split() {
     assert_eq!(on.train_loss, off.train_loss, "hier rank-threads losses");
 }
 
+fn dlrm_cfg(aggregator: &str, steps: usize) -> TrainConfig {
+    TrainConfig {
+        artifact: "dlrm_lite".into(),
+        workers: 3,
+        aggregator: aggregator.into(),
+        optimizer: "adam".into(),
+        schedule: Schedule::Const { lr: 0.002 },
+        steps,
+        seed: 9,
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn dlrm_lite_trains_under_all_five_aggregators_with_rank_thread_parity() {
+    // The embedding + layernorm workload end-to-end: every aggregator
+    // family must train it, and `--rank-threads on` must stay bitwise
+    // equal to round-robin — the embedding scatter-add and layernorm
+    // backward run inside the streamed per-rank backward, so any
+    // order-instability there would surface here.
+    let Some(rt) = runtime() else { return };
+    if rt.backend() != Backend::Interp {
+        eprintln!("dlrm_lite is interpreter-only; skipping");
+        return;
+    }
+    for name in ["mean", "adacons", "grawa", "adasum", "median"] {
+        let run = |threaded: bool| {
+            let mut cfg = dlrm_cfg(name, 4);
+            cfg.bucket_cap = Some(40_000); // multi-bucket: table splits from the dense chain
+            cfg.overlap = true;
+            cfg.rank_threads = threaded;
+            Trainer::new(rt.clone(), cfg).unwrap().run().unwrap()
+        };
+        let on = run(true);
+        let off = run(false);
+        assert!(off.train_loss.iter().all(|l| l.is_finite()), "{name}");
+        assert_eq!(on.final_params, off.final_params, "{name}: params diverge");
+        assert_eq!(on.train_loss, off.train_loss, "{name}: loss traces diverge");
+    }
+}
+
+#[test]
+fn dlrm_lite_learns_and_reports_auc() {
+    // BCE starts near ln 2 on balanced labels; a short run must push the
+    // train loss down and the eval path must pool scores into an AUC
+    // comfortably above chance on the planted-logit CTR stream.
+    let Some(rt) = runtime() else { return };
+    if rt.backend() != Backend::Interp {
+        eprintln!("dlrm_lite is interpreter-only; skipping");
+        return;
+    }
+    let mut cfg = dlrm_cfg("adacons", 80);
+    cfg.eval_every = 79;
+    cfg.eval_batches = 2;
+    let res = Trainer::new(rt, cfg).unwrap().run().unwrap();
+    assert_eq!(res.metric_name, "auc");
+    assert!(*res.train_loss.last().unwrap() < res.train_loss[0]);
+    let auc = res.final_metric().unwrap();
+    assert!(auc > 0.6, "auc {auc}");
+}
+
 #[test]
 fn byzantine_worker_breaks_mean_but_not_median() {
     let Some(rt) = runtime() else { return };

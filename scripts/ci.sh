@@ -35,6 +35,10 @@ for tt in 1 2 4; do
     # Hierarchical two-level parity (grouped ingest, node-level bucket
     # completion order varies with scheduling).
     cargo test -q --test parallel_equivalence hier -- --test-threads "$tt"
+    # Blocked/pool-sharded kernels vs the scalar oracle: bitwise equality
+    # must hold under every harness parallelism, since pool shard
+    # scheduling is the one thing these kernels are allowed to vary.
+    cargo test -q --test interp_kernel_equiv -- --test-threads "$tt"
     cargo test -q --lib comm:: -- --test-threads "$tt"
     cargo test -q --lib coordinator:: -- --test-threads "$tt"
   done
@@ -53,11 +57,11 @@ if [[ "${1:-}" != "--no-bench" ]]; then
   echo "archived bench_history/${sha}.json"
   if [[ -f bench_history/baseline.json ]]; then
     # Fail if the aggregate-phase median regresses >1.3x, or any step
-    # case's median (adacons_step / interp_step / hier_step groups)
-    # regresses >1.5x, vs the committed baseline (both sides are
-    # smoke-grid runs; the step gate is looser — rationale in
-    # EXPERIMENTS.md §Perf). hier_step groups skip cleanly on baselines
-    # that predate them.
+    # case's median (adacons_step / interp_step per {mode, artifact} /
+    # hier_step / matmul kernel rows) regresses >1.5x, vs the committed
+    # baseline (both sides are smoke-grid runs; the step gate is looser —
+    # rationale in EXPERIMENTS.md §Perf). Groups absent from an older
+    # baseline (dlrm_lite, matmul kernels, hier_step) skip cleanly.
     cargo run --release --bin bench_aggregation -- \
       --compare bench_history/baseline.json BENCH_aggregation.json \
       --max-regress 1.3 --max-regress-step 1.5
