@@ -247,13 +247,13 @@ impl BucketedAggregator for AdaCons {
         let mut comm = per_bucket_payload_ops(CollectiveKind::AllReduce, buckets);
         comm.push(super::CommOp {
             kind: CollectiveKind::AllGather,
-            bytes: 4,
+            bytes: crate::collective::cost_model::f32_wire_bytes(1),
             bucket: None,
             scope: super::CommScope::Global,
         });
         comm.push(super::CommOp {
             kind: CollectiveKind::AllReduce,
-            bytes: grads.d() * 4,
+            bytes: crate::collective::cost_model::f32_wire_bytes(grads.d()),
             bucket: None,
             scope: super::CommScope::Global,
         });

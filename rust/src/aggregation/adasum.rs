@@ -98,7 +98,7 @@ impl BucketedAggregator for Adasum {
             // log2(N) rounds of pairwise exchanges ≈ one allreduce in cost.
             comm: vec![CommOp {
                 kind: CollectiveKind::AllReduce,
-                bytes: d * 4,
+                bytes: crate::collective::cost_model::f32_wire_bytes(d),
                 bucket: None,
                 scope: super::CommScope::Global,
             }],

@@ -85,14 +85,14 @@ impl BucketedAggregator for Grawa {
         let mut comm: Vec<CommOp> = (0..buckets.len())
             .map(|b| CommOp {
                 kind: CollectiveKind::AllGather,
-                bytes: 4,
+                bytes: crate::collective::cost_model::f32_wire_bytes(1),
                 bucket: Some(b),
                 scope: super::CommScope::Global,
             })
             .collect();
         comm.push(CommOp {
             kind: CollectiveKind::AllReduce,
-            bytes: grads.d() * 4,
+            bytes: crate::collective::cost_model::f32_wire_bytes(grads.d()),
             bucket: None,
             scope: super::CommScope::Global,
         });

@@ -33,7 +33,9 @@
 //! acceptance criterion the parity suite enforces).
 
 use super::{AggInfo, Aggregator, BucketWork, BucketedAggregator, CommOp, CommScope};
+use crate::collective::cost_model::f32_wire_bytes;
 use crate::collective::{CollectiveKind, NodeMap};
+use crate::compress::{CompressorKind, SetCodec};
 use crate::parallel::ParallelCtx;
 use crate::tensor::{Buckets, GradSet};
 
@@ -45,6 +47,12 @@ pub struct Hierarchical {
     /// uniform constant (`L_k = scale · Σ_{i∈k} g_i`).
     scale: f32,
     degenerate: bool,
+    /// Inter-node compression: installed via `set_compression`, applied
+    /// to the leader rows inside `ingest_leaders` — the single funnel
+    /// both the inline path and the grouped executor go through, which
+    /// keeps them bitwise-equal under compression. Per-(node, bucket) EF
+    /// residuals live in the codec.
+    codec: Option<SetCodec>,
 }
 
 impl Hierarchical {
@@ -57,6 +65,7 @@ impl Hierarchical {
             map,
             scale: (g / n) as f32,
             degenerate,
+            codec: None,
         }
     }
 
@@ -94,6 +103,15 @@ impl BucketedAggregator for Hierarchical {
     }
 
     fn ingest_leaders(&self, b: usize, leaders: GradSet, ctx: &ParallelCtx) -> BucketWork {
+        let mut leaders = leaders;
+        // Compress→decompress the inter-node transfer *before* the base
+        // scheme's Gram/statistics pass, so consensus weights are computed
+        // on exactly the values the fabric would deliver. The transformed
+        // leaders ride in the work to `finalize`, which reassembles them
+        // for the base's weighted sums.
+        if let Some(codec) = &self.codec {
+            codec.transform(b, &mut leaders, 0, leaders.d());
+        }
         let inner = self.base.ingest_bucket(b, &leaders, 0, leaders.d(), ctx);
         BucketWork::Hier {
             leaders,
@@ -167,7 +185,7 @@ impl BucketedAggregator for Hierarchical {
             .enumerate()
             .map(|(b, (lo, hi))| CommOp {
                 kind: CollectiveKind::AllReduce,
-                bytes: (hi - lo) * 4,
+                bytes: f32_wire_bytes(hi - lo),
                 bucket: Some(b),
                 scope: CommScope::Intra,
             })
@@ -183,10 +201,15 @@ impl BucketedAggregator for Hierarchical {
         // ...and the aggregated direction fans back out inside each node.
         comm.push(CommOp {
             kind: CollectiveKind::Broadcast,
-            bytes: d * 4,
+            bytes: f32_wire_bytes(d),
             bucket: None,
             scope: CommScope::Intra,
         });
+        // One step of inter-node EF is complete; advance the codec's
+        // stochastic-rounding key for the next step.
+        if let Some(codec) = &self.codec {
+            codec.advance_step();
+        }
 
         // Leader weights Γ expand to per-rank effective weights
         // γ_i = Γ_{k(i)} · G/N (out = Σ_k Γ_k L_k = Σ_i γ_i g_i).
@@ -227,6 +250,23 @@ impl Aggregator for Hierarchical {
 
     fn reset(&mut self) {
         self.base.reset();
+    }
+
+    fn set_compression(&mut self, kind: CompressorKind, seed: u64, n_buckets: usize) {
+        // Degenerate hierarchies delegate bitwise to the flat scheme and
+        // never call `ingest_leaders`, so there is nothing to compress at
+        // this level (rank-source codecs still apply under scope `all`).
+        if self.degenerate || kind.is_none() {
+            return;
+        }
+        self.codec = Some(SetCodec::new(kind, seed, n_buckets));
+    }
+
+    fn reset_compression(&mut self) {
+        if let Some(codec) = &self.codec {
+            codec.reset();
+        }
+        self.base.reset_compression();
     }
 }
 

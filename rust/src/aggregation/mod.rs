@@ -213,6 +213,17 @@ pub trait Aggregator: BucketedAggregator {
 
     /// Clear step-dependent state (e.g. momentum) between runs.
     fn reset(&mut self) {}
+
+    /// Install a leader-side compression codec (hierarchical wrapper
+    /// only: inter-node transfers are compressed inside
+    /// `ingest_leaders`). Flat aggregators ignore this — their
+    /// compression runs at the rank source or in the executor.
+    fn set_compression(&mut self, kind: crate::compress::CompressorKind, seed: u64, n_buckets: usize) {
+        let _ = (kind, seed, n_buckets);
+    }
+
+    /// Drop error-feedback residual state (param re-broadcast / restore).
+    fn reset_compression(&mut self) {}
 }
 
 /// One `CommOp` per bucket: `kind` with the bucket's payload size, ready
@@ -223,7 +234,7 @@ pub(crate) fn per_bucket_payload_ops(kind: CollectiveKind, buckets: &Buckets) ->
         .enumerate()
         .map(|(b, (lo, hi))| CommOp {
             kind,
-            bytes: (hi - lo) * 4,
+            bytes: crate::collective::cost_model::f32_wire_bytes(hi - lo),
             bucket: Some(b),
             scope: CommScope::Global,
         })

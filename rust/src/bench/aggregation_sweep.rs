@@ -55,6 +55,12 @@ pub struct SweepConfig {
     /// which is how the N = 64/128 scale rows get a hier-vs-flat
     /// comparison.
     pub hier_step: bool,
+    /// Compressed-collective step cases (`compress_step`): the pipelined
+    /// adacons step under each error-feedback compressor (int8 / fp16 /
+    /// topk / lowrank, plus the uncompressed reference) on a flat fabric,
+    /// and int8 inter-node-only on a `hier:2x4` split — so codec cost on
+    /// the hot path is tracked per compressor x scope.
+    pub compress_step: bool,
 }
 
 impl SweepConfig {
@@ -80,6 +86,7 @@ impl SweepConfig {
             overlap_modes: vec![false, true],
             interp_step: true,
             hier_step: true,
+            compress_step: true,
         }
     }
 
@@ -96,6 +103,7 @@ impl SweepConfig {
             overlap_modes: vec![false, true],
             interp_step: true,
             hier_step: true,
+            compress_step: true,
         }
     }
 }
@@ -434,6 +442,10 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Json> {
         println!("-- interpreter train step (mlp_cls_b32 / dlrm_lite, roundrobin vs threaded ranks) --");
         interp_step_cases(cfg.budget_s, &threads, cfg.min_shard_elems, &mut baseline, &mut cases)?;
     }
+    if cfg.compress_step {
+        println!("-- compressed collective step (error-feedback codecs, adacons) --");
+        compress_step_cases(cfg.budget_s, &threads, cfg.min_shard_elems, &mut baseline, &mut cases)?;
+    }
     Ok(obj(vec![
         ("bench", s("aggregation")),
         ("schema_version", num(1.0)),
@@ -633,10 +645,11 @@ fn interp_step_cases(
                         local_batch,
                         &ctx,
                         None,
+                        None,
                     )?;
                     let shared = std::sync::Arc::new(params.clone());
                     bench_auto(&label, budget_s, || {
-                        team.begin_step(&shared).expect("rank team alive");
+                        team.begin_step(&shared, 0).expect("rank team alive");
                         exec.run_step_exchange(
                             team.exchange(),
                             agg.as_mut(),
@@ -677,6 +690,206 @@ fn interp_step_cases(
                 ]));
             }
         }
+    }
+    Ok(())
+}
+
+/// The `compress_step` dimension: the full pipelined adacons step under
+/// each error-feedback compressor, N = 8, d = 64K, 8 buckets, overlap on.
+/// Flat variants exercise the rank-source codec round-trip (encode with
+/// residual update, decode at the leader edge) for the per-rank kinds and
+/// the executor's leader-side sketch for `lowrank`; the `int8`/`inter`
+/// variant runs two-level aggregation on a `hier:2x4` split with the
+/// leader-set codec inside the hierarchical aggregator — the wire shape
+/// of `--compress int8 --compress-scope inter`. The uncompressed `none`
+/// row anchors the codec overhead.
+fn compress_step_cases(
+    budget_s: f64,
+    threads: &[usize],
+    min_shard_elems: usize,
+    baseline: &mut BTreeMap<(String, usize, usize), f64>,
+    cases: &mut Vec<Json>,
+) -> Result<()> {
+    use crate::compress::{CompressScope, CompressionSpec, CompressorKind, RankCodec};
+
+    const SEED: u64 = 63;
+    let n = 8usize;
+    let d = 65_536usize;
+    let gs = random_grad_set(n, d, SEED);
+    let buckets = Buckets::fixed(d, d.div_ceil(8).max(1));
+    let variants: &[(&str, &str)] = &[
+        ("none", "all"),
+        ("int8", "all"),
+        ("fp16", "all"),
+        ("topk:0.01", "all"),
+        ("lowrank:2", "all"),
+        ("int8", "inter"),
+    ];
+    for &t in threads {
+        let ctx = ParallelCtx::new(ParallelPolicy {
+            threads: t,
+            min_shard_elems,
+        });
+        for &(kind_s, scope_s) in variants {
+            let kind = CompressorKind::parse(kind_s).context("bench compressor kind")?;
+            let scope = CompressScope::parse(scope_s).context("bench compress scope")?;
+            let spec = CompressionSpec { kind, scope };
+            // The `inter` variant is the hierarchical wire shape; `all`
+            // variants run on the flat fabric.
+            let hier = scope == CompressScope::Inter;
+            let (mut agg, mut exec, cost, topo_tag) = if hier {
+                let map = NodeMap::even(2, 4);
+                let topo = TopologySpec::Hier { nodes: 2, gpus: 4 }.build(n, 100.0);
+                let mut agg = aggregation::hierarchical("adacons", map.clone(), n)
+                    .context("adacons not in registry")?;
+                agg.set_compression(kind, SEED, buckets.len());
+                let hier_cost = HierCostModel::from_topology(&topo)
+                    .context("hier topology must build a hier cost model")?;
+                let exec = PipelinedExecutor::with_topology(
+                    n,
+                    buckets.clone(),
+                    true,
+                    Some(map),
+                    Some(hier_cost),
+                );
+                let cost = CostModel::from_topology(&topo);
+                (agg, exec, cost, "hier:2x4".to_string())
+            } else {
+                let agg =
+                    aggregation::by_name("adacons", n).context("adacons not in registry")?;
+                let exec = PipelinedExecutor::new(n, buckets.clone(), true);
+                let cost = CostModel::from_topology(&Topology::ring_gbps(n, 100.0));
+                (agg, exec, cost, "flat".to_string())
+            };
+            exec.set_compression(spec, SEED);
+            let mut codecs: Vec<RankCodec> = if kind.is_per_rank() && !hier {
+                (0..n)
+                    .map(|rank| RankCodec::new(kind, SEED, rank, buckets.len()))
+                    .collect()
+            } else {
+                Vec::new()
+            };
+            let mut grads = GradSet::zeros(n, d);
+            let mut out = vec![0.0f32; d];
+            let mut clock = SimClock::new(n);
+            let mut step = 0u64;
+            let label =
+                format!("compress step   N={n} d={d} t={t} c={kind_s} scope={scope_s}");
+            let r = bench_auto(&label, budget_s, || {
+                let codecs = &mut codecs;
+                let mut produce = |rank: usize,
+                                   deliver: &mut dyn FnMut(usize, &[f32])|
+                 -> Result<(f64, f64)> {
+                    for (b, (lo, hi)) in buckets.iter().enumerate() {
+                        if codecs.is_empty() {
+                            deliver(b, &gs.row(rank)[lo..hi]);
+                        } else {
+                            // The rank-source wire round-trip the
+                            // trainer performs: encode (residual
+                            // update) then decode at the leader edge.
+                            let cols = codecs[rank]
+                                .encode_bucket(step, b, &gs.row(rank)[lo..hi])
+                                .into_cols();
+                            deliver(b, &cols);
+                        }
+                    }
+                    Ok((0.0, 0.0))
+                };
+                exec.run_step(
+                    &mut produce,
+                    agg.as_mut(),
+                    &mut grads,
+                    &mut out,
+                    &ctx,
+                    &mut clock,
+                    &cost,
+                )
+                .expect("compress bench step");
+                step += 1;
+            });
+            let key = (format!("compress_step_{kind_s}_{scope_s}"), n, d);
+            if t == threads[0] {
+                baseline.insert(key.clone(), r.mean_s);
+            }
+            let speedup = baseline.get(&key).map(|&b| b / r.mean_s);
+            println!(
+                "{}{}",
+                r.report_line(),
+                speedup
+                    .map(|x| format!("  [{x:.2}x vs 1t]"))
+                    .unwrap_or_default()
+            );
+            cases.push(obj(vec![
+                ("op", s("compress_step")),
+                ("compress", s(kind_s)),
+                ("scope", s(scope_s)),
+                ("topo", s(&topo_tag)),
+                ("workers", num(n as f64)),
+                ("d", num(d as f64)),
+                ("threads", num(t as f64)),
+                ("buckets", num(buckets.len() as f64)),
+                ("iters", num(r.iters as f64)),
+                ("mean_s", num(r.mean_s)),
+                ("p50_s", num(r.p50_s)),
+                ("p99_s", num(r.p99_s)),
+                ("speedup_vs_1t", speedup.map(num).unwrap_or(Json::Null)),
+            ]));
+        }
+    }
+    Ok(())
+}
+
+/// `--compress-sweep`: the ratio-vs-loss table from EXPERIMENTS.md
+/// §Compression. Trains the default linreg artifact for `steps` steps
+/// under each compressor (scope `all`, flat fabric) and prints the wire
+/// size of one full-model gradient bucket next to the final training
+/// loss, so bytes saved can be read against accuracy spent. Everything
+/// is seeded and runs on the interpreter backend: the table is
+/// reproducible bit-for-bit.
+pub fn compress_loss_sweep(steps: usize) -> Result<()> {
+    use std::sync::Arc;
+
+    use crate::collective::cost_model::f32_wire_bytes;
+    use crate::compress::{CompressScope, CompressionSpec, CompressorKind};
+    use crate::config::TrainConfig;
+    use crate::coordinator::Trainer;
+    use crate::runtime::{Backend, Runtime};
+
+    let rt = Arc::new(Runtime::open_default_with(Backend::Interp)?);
+    let kinds = [
+        "none",
+        "lowrank:2",
+        "fp16",
+        "int8",
+        "topk:0.05",
+        "topk:0.01",
+    ];
+    let mut rows: Vec<(String, usize, f64, f64)> = Vec::new();
+    for kind_s in kinds {
+        let kind = CompressorKind::parse(kind_s).context("sweep compressor kind")?;
+        let mut cfg = TrainConfig::default();
+        cfg.steps = steps;
+        cfg.seed = 11;
+        cfg.compression = CompressionSpec {
+            kind,
+            scope: CompressScope::All,
+        };
+        let n = cfg.workers;
+        let res = Trainer::new(rt.clone(), cfg)?.run()?;
+        let d = res.final_params.len();
+        let wire = kind.bucket_wire_bytes(d, n);
+        let ratio = wire as f64 / f32_wire_bytes(d) as f64;
+        rows.push((kind_s.to_string(), wire, ratio, res.final_train_loss(10)));
+    }
+    let none_loss = rows[0].3;
+    println!("\n## Compression ratio vs loss ({} steps, linreg, N=4, scope all)\n", steps);
+    println!("| compress | wire bytes | ratio vs f32 | final loss | loss - none |");
+    println!("|---|---:|---:|---:|---:|");
+    for (tag, wire, ratio, loss) in &rows {
+        println!(
+            "| {tag} | {wire} | {ratio:.4} | {loss:.6} | {:+.2e} |",
+            loss - none_loss
+        );
     }
     Ok(())
 }
@@ -784,15 +997,26 @@ fn gate_one(
 ///   §Threaded-execution);
 /// * the `matmul` kernel medians (fwd/dw/dx) at `max_step_ratio` — the
 ///   blocked interpreter kernels every interp step spends its compute
-///   in.
+///   in;
+/// * the `compress_step` compressed-collective medians (one group per
+///   compressor x scope) at `max_step_ratio` — codec cost on the hot
+///   path is first-class, not only visible through the train step.
 ///
-/// Step groups are skipped with a notice when the baseline predates
-/// their cases.
+/// A group the **baseline** predates is skipped with an explicit notice
+/// (and counted in the summary line) — never silently passed. A group
+/// the baseline has but the **current** run lacks is a hard failure:
+/// that is lost bench coverage, not an older baseline.
+///
+/// `history` names the accumulated `bench_history/` archive; when it
+/// holds enough documents the step gate is tightened below
+/// `max_step_ratio` to the run-to-run spread actually observed there
+/// (see [`tightened_step_gate`]).
 pub fn compare_files(
     baseline: &str,
     current: &str,
     max_ratio: f64,
     max_step_ratio: f64,
+    history: Option<&str>,
 ) -> Result<()> {
     let base_doc = load_doc(baseline)?;
     let cur_doc = load_doc(current)?;
@@ -813,7 +1037,18 @@ pub fn compare_files(
         ("matmul", &[("kernel", "fwd")]),
         ("matmul", &[("kernel", "dw")]),
         ("matmul", &[("kernel", "dx")]),
+        ("compress_step", &[("compress", "none"), ("scope", "all")]),
+        ("compress_step", &[("compress", "int8"), ("scope", "all")]),
+        ("compress_step", &[("compress", "fp16"), ("scope", "all")]),
+        ("compress_step", &[("compress", "topk:0.01"), ("scope", "all")]),
+        ("compress_step", &[("compress", "lowrank:2"), ("scope", "all")]),
+        ("compress_step", &[("compress", "int8"), ("scope", "inter")]),
     ];
+    let step_gate = match history {
+        Some(dir) => tightened_step_gate(dir, max_step_ratio, step_groups),
+        None => max_step_ratio,
+    };
+    let mut skipped = 0usize;
     for &(op, tags) in step_groups {
         let tag_str = tags
             .iter()
@@ -825,16 +1060,92 @@ pub fn compare_files(
             case_median(&base_doc, op, tags)?,
             case_median(&cur_doc, op, tags)?,
         ) {
-            (Some(b), Some(c)) => gate_one(&label, b, c, max_step_ratio, baseline)?,
-            (b, c) => println!(
-                "{label}: skipped (baseline has cases: {}, current has cases: {})",
-                b.is_some(),
-                c.is_some()
+            (Some(b), Some(c)) => gate_one(&label, b, c, step_gate, baseline)?,
+            (Some(_), None) => bail!(
+                "{label}: {current} has no cases for a group {baseline} covers — \
+                 bench coverage was lost, not skipped"
             ),
+            (None, cur) => {
+                skipped += 1;
+                println!(
+                    "{label}: SKIPPED — baseline predates this group (current has cases: {})",
+                    cur.is_some()
+                );
+            }
         }
     }
-    println!("perf gate: ok");
+    if skipped > 0 {
+        println!(
+            "perf gate: ok ({skipped} group(s) skipped because the baseline predates them — \
+             refresh bench_history/baseline.json to gate them)"
+        );
+    } else {
+        println!("perf gate: ok");
+    }
     Ok(())
+}
+
+/// Tighten the step gate from the accumulated `bench_history/` archive.
+/// The default step gate must admit the worst plausible run-to-run noise
+/// on any host; a history of real runs on *this* host supports a
+/// tighter bound. For every gated group with medians in at least 3
+/// archived documents, each document's median is compared against the
+/// median-of-medians; the gate becomes the largest spread observed
+/// anywhere plus a 10% margin, clamped to [1.2, `default`]. With fewer
+/// than 3 usable documents the default is kept (no basis to tighten).
+fn tightened_step_gate(
+    dir: &str,
+    default: f64,
+    step_groups: &[(&str, &[(&str, &str)])],
+) -> f64 {
+    let mut paths: Vec<std::path::PathBuf> = match std::fs::read_dir(dir) {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().and_then(|x| x.to_str()) == Some("json"))
+            .collect(),
+        Err(_) => {
+            println!("perf-history {dir}: unreadable, keeping step gate {default:.2}x");
+            return default;
+        }
+    };
+    paths.sort();
+    let docs: Vec<Json> = paths
+        .iter()
+        .filter_map(|p| p.to_str())
+        .filter_map(|p| load_doc(p).ok())
+        .filter(|d| d.get("bench").as_str() == Some("aggregation"))
+        .collect();
+    if docs.len() < 3 {
+        println!(
+            "perf-history {dir}: {} usable doc(s) (< 3), keeping step gate {default:.2}x",
+            docs.len()
+        );
+        return default;
+    }
+    let mut worst = 1.0f64;
+    for &(op, tags) in step_groups {
+        let meds: Vec<f64> = docs
+            .iter()
+            .filter_map(|d| case_median(d, op, tags).ok().flatten())
+            .filter(|&m| m > 0.0)
+            .collect();
+        if meds.len() < 3 {
+            continue;
+        }
+        let mut sorted = meds.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let center = sorted[sorted.len() / 2];
+        for m in meds {
+            worst = worst.max((m / center).max(center / m));
+        }
+    }
+    let gate = (worst * 1.1).max(1.2).min(default);
+    println!(
+        "perf-history {dir}: {} docs, worst observed group spread {worst:.3}x -> \
+         step gate {gate:.2}x (default {default:.2}x)",
+        docs.len()
+    );
+    gate
 }
 
 /// Render the consensus_stats / weighted_sum scaling rows as a markdown
@@ -887,6 +1198,7 @@ mod tests {
             overlap_modes: vec![],
             interp_step: false,
             hier_step: false,
+            compress_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -919,6 +1231,7 @@ mod tests {
             overlap_modes: vec![false, true],
             interp_step: false,
             hier_step: false,
+            compress_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -938,6 +1251,7 @@ mod tests {
             overlap_modes: vec![false, true],
             interp_step: false,
             hier_step: false,
+            compress_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -963,6 +1277,7 @@ mod tests {
             overlap_modes: vec![],
             interp_step: true,
             hier_step: false,
+            compress_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -1019,6 +1334,7 @@ mod tests {
             overlap_modes: vec![false, true],
             interp_step: false,
             hier_step: true,
+            compress_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -1041,6 +1357,129 @@ mod tests {
     }
 
     #[test]
+    fn compress_step_dimension_emits_tagged_cases() {
+        let cfg = SweepConfig {
+            budget_s: 0.001,
+            threads: vec![1],
+            workers: vec![2],
+            dims: vec![8_192],
+            min_shard_elems: 2048,
+            max_case_bytes: 1 << 30,
+            overlap_modes: vec![],
+            interp_step: false,
+            hier_step: false,
+            compress_step: true,
+        };
+        let doc = run_sweep(&cfg).unwrap();
+        let cases = doc.get("cases").as_arr().unwrap();
+        // 4 kernel ops + 6 compressor x scope variants.
+        assert_eq!(cases.len(), 10);
+        let tagged: Vec<(&str, &str, &str)> = cases
+            .iter()
+            .filter(|c| c.get("op").as_str() == Some("compress_step"))
+            .map(|c| {
+                (
+                    c.get("compress").as_str().unwrap(),
+                    c.get("scope").as_str().unwrap(),
+                    c.get("topo").as_str().unwrap(),
+                )
+            })
+            .collect();
+        assert_eq!(
+            tagged,
+            vec![
+                ("none", "all", "flat"),
+                ("int8", "all", "flat"),
+                ("fp16", "all", "flat"),
+                ("topk:0.01", "all", "flat"),
+                ("lowrank:2", "all", "flat"),
+                ("int8", "inter", "hier:2x4"),
+            ]
+        );
+        for c in cases {
+            if c.get("op").as_str() == Some("compress_step") {
+                assert!(c.get("mean_s").as_f64().unwrap() > 0.0);
+                assert!(!c.get("speedup_vs_1t").is_null());
+            }
+        }
+    }
+
+    #[test]
+    fn perf_gate_covers_compress_step_and_hard_fails_on_lost_coverage() {
+        let dir = std::env::temp_dir().join("adacons_perf_gate_compress");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mk = |name: &str, inter_s: f64| -> String {
+            let path = dir.join(name);
+            let doc = format!(
+                r#"{{"bench":"aggregation","cases":[
+                    {{"op":"adacons","workers":8,"d":1000,"threads":1,"mean_s":0.010}},
+                    {{"op":"compress_step","compress":"none","scope":"all","workers":8,"d":1000,"threads":1,"mean_s":0.020}},
+                    {{"op":"compress_step","compress":"int8","scope":"inter","workers":8,"d":1000,"threads":1,"mean_s":{inter_s}}}
+                ]}}"#
+            );
+            std::fs::write(&path, doc).unwrap();
+            path.to_str().unwrap().to_string()
+        };
+        let base = mk("base.json", 0.020);
+        let ok = mk("ok.json", 0.024);
+        compare_files(&base, &ok, 1.3, 1.5, None).unwrap();
+        // A compressed-step regression beyond the step gate fails.
+        let bad = mk("bad.json", 0.040);
+        assert!(compare_files(&base, &bad, 1.3, 1.5, None).is_err());
+        // A current run that DROPS a group the baseline covers is lost
+        // bench coverage — a hard failure, never a silent skip.
+        let lost = dir.join("lost.json");
+        std::fs::write(
+            &lost,
+            r#"{"bench":"aggregation","cases":[
+                {"op":"adacons","workers":8,"d":1000,"threads":1,"mean_s":0.010}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(compare_files(&base, lost.to_str().unwrap(), 1.3, 1.5, None).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn perf_history_tightens_the_step_gate() {
+        let dir = std::env::temp_dir().join("adacons_perf_history");
+        let hist = dir.join("hist");
+        let thin = dir.join("thin");
+        std::fs::create_dir_all(&hist).unwrap();
+        std::fs::create_dir_all(&thin).unwrap();
+        let mk = |dir: &std::path::Path, name: &str, off_s: f64| -> String {
+            let path = dir.join(name);
+            let doc = format!(
+                r#"{{"bench":"aggregation","cases":[
+                    {{"op":"adacons","workers":4,"d":1000,"threads":1,"mean_s":0.010}},
+                    {{"op":"adacons_step","overlap":"off","workers":4,"d":1000,"threads":1,"mean_s":{off_s}}}
+                ]}}"#
+            );
+            std::fs::write(&path, doc).unwrap();
+            path.to_str().unwrap().to_string()
+        };
+        // Three archived runs with ~1% run-to-run spread support a gate
+        // far below the 1.5x default (clamped at 1.2x).
+        mk(&hist, "r1.json", 0.0198);
+        mk(&hist, "r2.json", 0.0200);
+        mk(&hist, "r3.json", 0.0202);
+        let base = mk(&dir, "base.json", 0.020);
+        let cur = mk(&dir, "cur.json", 0.026); // 1.3x drift
+        // Without history the default 1.5x gate admits the drift...
+        compare_files(&base, &cur, 1.3, 1.5, None).unwrap();
+        // ...with history the gate tightens to 1.2x and catches it.
+        assert!(compare_files(&base, &cur, 1.3, 1.5, Some(hist.to_str().unwrap())).is_err());
+        // Fewer than 3 archived runs is no basis to tighten: default kept.
+        mk(&thin, "r1.json", 0.0198);
+        mk(&thin, "r2.json", 0.0202);
+        compare_files(&base, &cur, 1.3, 1.5, Some(thin.to_str().unwrap())).unwrap();
+        // An unreadable history directory also keeps the default.
+        let missing = dir.join("nope");
+        compare_files(&base, &cur, 1.3, 1.5, Some(missing.to_str().unwrap())).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn perf_gate_covers_hier_step_cases() {
         let dir = std::env::temp_dir().join("adacons_perf_gate_hier");
         std::fs::create_dir_all(&dir).unwrap();
@@ -1058,11 +1497,11 @@ mod tests {
         };
         let base = mk("base.json", 0.020, 0.018);
         let ok = mk("ok.json", 0.024, 0.022);
-        compare_files(&base, &ok, 1.3, 1.5).unwrap();
+        compare_files(&base, &ok, 1.3, 1.5, None).unwrap();
         // A hier-step regression beyond the step gate fails even when the
         // kernels are fine.
         let bad = mk("bad.json", 0.020, 0.040);
-        assert!(compare_files(&base, &bad, 1.3, 1.5).is_err());
+        assert!(compare_files(&base, &bad, 1.3, 1.5, None).is_err());
         // Baselines predating hier cases skip the hier groups cleanly.
         let old = dir.join("old.json");
         std::fs::write(
@@ -1072,7 +1511,7 @@ mod tests {
             ]}"#,
         )
         .unwrap();
-        compare_files(old.to_str().unwrap(), &ok, 1.3, 1.5).unwrap();
+        compare_files(old.to_str().unwrap(), &ok, 1.3, 1.5, None).unwrap();
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -1095,15 +1534,15 @@ mod tests {
         };
         let base = mk("base.json", 0.030, 0.028, 0.050);
         let ok = mk("ok.json", 0.035, 0.033, 0.055);
-        compare_files(&base, &ok, 1.3, 1.5).unwrap();
+        compare_files(&base, &ok, 1.3, 1.5, None).unwrap();
         // A threaded-mode regression beyond the step gate fails even when
         // the kernels and the roundrobin mode are fine.
         let bad = mk("bad.json", 0.031, 0.060, 0.050);
-        assert!(compare_files(&base, &bad, 1.3, 1.5).is_err());
+        assert!(compare_files(&base, &bad, 1.3, 1.5, None).is_err());
         // So does a matmul kernel regression on its own: the fast kernels
         // are gated as first-class rows, not only via the step they feed.
         let badk = mk("badk.json", 0.031, 0.029, 0.120);
-        assert!(compare_files(&base, &badk, 1.3, 1.5).is_err());
+        assert!(compare_files(&base, &badk, 1.3, 1.5, None).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -1126,8 +1565,8 @@ mod tests {
         let ok = mk("ok.json", 0.012);
         let bad = mk("bad.json", 0.020);
         // Baselines without adacons_step cases skip the step gate cleanly.
-        compare_files(&base, &ok, 1.3, 1.5).unwrap();
-        assert!(compare_files(&base, &bad, 1.3, 1.5).is_err());
+        compare_files(&base, &ok, 1.3, 1.5, None).unwrap();
+        assert!(compare_files(&base, &bad, 1.3, 1.5, None).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -1152,12 +1591,12 @@ mod tests {
         // aggregate median is fine.
         let bad_step = mk("bad_step.json", 0.010, 0.020, 0.040);
         let ok = mk("ok.json", 0.011, 0.024, 0.021);
-        compare_files(&base, &ok, 1.3, 1.5).unwrap();
-        assert!(compare_files(&base, &bad_step, 1.3, 1.5).is_err());
+        compare_files(&base, &ok, 1.3, 1.5, None).unwrap();
+        assert!(compare_files(&base, &bad_step, 1.3, 1.5, None).is_err());
         // The step gate is the looser one: a 1.4x step drift passes at
         // 1.5 but would fail the kernel gate.
         let drift = mk("drift.json", 0.010, 0.028, 0.025);
-        compare_files(&base, &drift, 1.3, 1.5).unwrap();
+        compare_files(&base, &drift, 1.3, 1.5, None).unwrap();
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -6,13 +6,16 @@
 //!   cargo run --release --bin bench_aggregation -- --overlap on   # on|off|both
 //!   cargo run --release --bin bench_aggregation -- --interp-step off  # skip backend step cases
 //!   cargo run --release --bin bench_aggregation -- --hier-step off    # skip hier topology cases
+//!   cargo run --release --bin bench_aggregation -- --compress-step off # skip compressed-step cases
+//!   cargo run --release --bin bench_aggregation -- --compress-sweep    # ratio-vs-loss table
 //!   cargo run --release --bin bench_aggregation -- --check BENCH_aggregation.json
 //!   cargo run --release --bin bench_aggregation -- --table BENCH_aggregation.json
 //!   cargo run --release --bin bench_aggregation -- --compare bench_history/baseline.json \
-//!       BENCH_aggregation.json --max-regress 1.3 --max-regress-step 1.5
+//!       BENCH_aggregation.json --max-regress 1.3 --max-regress-step 1.5 \
+//!       --history bench_history
 
 use adacons::bench::aggregation_sweep::{
-    compare_files, markdown_table, run_and_write, validate_file, SweepConfig,
+    compare_files, compress_loss_sweep, markdown_table, run_and_write, validate_file, SweepConfig,
 };
 use adacons::util::argparse::Args;
 use adacons::util::error::Result;
@@ -26,9 +29,13 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &["smoke"]);
+    let args = Args::parse(std::env::args().skip(1), &["smoke", "compress-sweep"]);
     if let Some(path) = args.str_opt("check") {
         return validate_file(path);
+    }
+    if args.flag("compress-sweep") {
+        let steps = args.f64_or("steps", 60.0)? as usize;
+        return compress_loss_sweep(steps);
     }
     if let Some(path) = args.str_opt("table") {
         let text = std::fs::read_to_string(path)?;
@@ -46,7 +53,11 @@ fn run() -> Result<()> {
         // The pipelined-step cases gate looser (scheduling variance);
         // rationale in EXPERIMENTS.md §Perf.
         let max_step_ratio = args.f64_or("max-regress-step", 1.5)?;
-        return compare_files(baseline, current, max_ratio, max_step_ratio);
+        // `--history` names the accumulated bench_history/ archive; with
+        // enough runs there the step gate tightens below the default to
+        // the spread actually observed on this host.
+        let history = args.str_opt("history");
+        return compare_files(baseline, current, max_ratio, max_step_ratio, history);
     }
     let smoke = args.flag("smoke");
     let budget = args.f64_or("budget", if smoke { 0.05 } else { 0.4 })?;
@@ -76,6 +87,13 @@ fn run() -> Result<()> {
             "on" => true,
             "off" => false,
             other => return Err(adacons::err!("--hier-step {other:?}: want on|off")),
+        };
+    }
+    if let Some(v) = args.str_opt("compress-step") {
+        cfg.compress_step = match v {
+            "on" => true,
+            "off" => false,
+            other => return Err(adacons::err!("--compress-step {other:?}: want on|off")),
         };
     }
     let out = args.str_or("out", "BENCH_aggregation.json");

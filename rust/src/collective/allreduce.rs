@@ -54,7 +54,7 @@ pub fn ring_allreduce(bufs: &mut [Vec<f32>], model: &CostModel, clock: Option<&m
             }
         }
     }
-    let t = model.allreduce_s(d * 4);
+    let t = model.allreduce_s(super::cost_model::f32_wire_bytes(d));
     if let Some(c) = clock {
         c.collective(t);
     }
@@ -87,7 +87,7 @@ pub fn ring_allgather(
             per_rank[dst][c] = v;
         }
     }
-    let t = model.allgather_s(4);
+    let t = model.allgather_s(super::cost_model::f32_wire_bytes(1));
     if let Some(cl) = clock {
         cl.collective(t);
     }
@@ -102,7 +102,7 @@ pub fn ring_broadcast(
     clock: Option<&mut SimClock>,
 ) -> (Vec<Vec<f32>>, f64) {
     let out: Vec<Vec<f32>> = (0..n).map(|_| src.to_vec()).collect();
-    let t = model.broadcast_s(src.len() * 4);
+    let t = model.broadcast_s(super::cost_model::f32_wire_bytes(src.len()));
     if let Some(c) = clock {
         c.collective(t);
     }

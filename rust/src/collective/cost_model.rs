@@ -8,6 +8,18 @@
 
 use super::topology::{NodeMap, Topology};
 
+/// Wire width of one uncompressed gradient element (f32).
+pub const F32_WIRE_BYTES: usize = 4;
+
+/// Wire bytes of `elems` full-precision f32 elements — the single
+/// source of truth for `CommOp.bytes` derivation. Every byte count in
+/// the collective path goes through this helper (or a
+/// `CompressorKind::bucket_wire_bytes` override), so compressed and
+/// full-precision ops can never disagree on accounting.
+pub fn f32_wire_bytes(elems: usize) -> usize {
+    elems * F32_WIRE_BYTES
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CollectiveKind {
     AllReduce,
@@ -71,7 +83,7 @@ impl CostModel {
     /// Per-iteration communication time of the plain averaging baseline:
     /// one all-reduce of the d-dimensional f32 gradient (Alg. 1 baseline).
     pub fn sum_iteration_s(&self, d: usize) -> f64 {
-        self.allreduce_s(d * 4)
+        self.allreduce_s(f32_wire_bytes(d))
     }
 
     /// Per-iteration communication time of AdaCons (Alg. 1): one O(d)
@@ -79,7 +91,9 @@ impl CostModel {
     /// coefficients, then the second O(d) all-reduce of the re-weighted
     /// gradients.
     pub fn adacons_iteration_s(&self, d: usize) -> f64 {
-        self.allreduce_s(d * 4) + self.allgather_s(4) + self.allreduce_s(d * 4)
+        self.allreduce_s(f32_wire_bytes(d))
+            + self.allgather_s(f32_wire_bytes(1))
+            + self.allreduce_s(f32_wire_bytes(d))
     }
 }
 

@@ -50,7 +50,7 @@ pub fn sum_iteration_overlapped_s(
     d: usize,
     n_buckets: usize,
 ) -> f64 {
-    let bucket_bytes = (d * 4).div_ceil(n_buckets.max(1));
+    let bucket_bytes = super::cost_model::f32_wire_bytes(d).div_ceil(n_buckets.max(1));
     compute_s + exposed_comm_s(model, compute_s, bucket_bytes, n_buckets)
 }
 
@@ -66,7 +66,8 @@ pub fn adacons_iteration_overlapped_s(
     n_buckets: usize,
 ) -> f64 {
     let base = sum_iteration_overlapped_s(model, compute_s, d, n_buckets);
-    base + model.allgather_s(4) + model.allreduce_s(d * 4)
+    base + model.allgather_s(super::cost_model::f32_wire_bytes(1))
+        + model.allreduce_s(super::cost_model::f32_wire_bytes(d))
 }
 
 #[cfg(test)]

@@ -23,6 +23,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
 use crate::collective::NodeMap;
+use crate::compress::Payload;
 use crate::tensor::{Buckets, GradSet};
 use crate::util::error::Result;
 use crate::{bail, ensure, err};
@@ -62,10 +63,13 @@ impl<T> Mailbox<T> {
 #[derive(Debug)]
 pub enum RankMsg {
     /// One bucket's gradient columns, sent as the backward finalizes it.
+    /// The payload is the **encoded wire form** ([`Payload::Raw`] when
+    /// compression is off — bitwise passthrough), carrying its true wire
+    /// size; the leader decodes before aggregation.
     Bucket {
         rank: usize,
         bucket: usize,
-        cols: Vec<f32>,
+        payload: Payload,
     },
     /// The rank finished its backward for this step. `bucket_s[b]` is the
     /// on-thread compute seconds at which bucket `b`'s gradient was final
@@ -121,12 +125,19 @@ impl RankPort {
 
     /// Send one bucket's columns as soon as it is ready. A send to a
     /// departed leader is dropped silently — the rank notices at its next
-    /// blocking point.
+    /// blocking point. Columns ship uncompressed ([`Payload::Raw`]); a
+    /// compressing rank encodes first and uses [`RankPort::submit_payload`].
     pub fn submit_bucket(&self, bucket: usize, cols: Vec<f32>) {
+        self.submit_payload(bucket, Payload::Raw(cols));
+    }
+
+    /// Send one bucket's **encoded** columns (the compressed-collective
+    /// wire path; see `compress::RankCodec`).
+    pub fn submit_payload(&self, bucket: usize, payload: Payload) {
         let _ = self.tx.send(RankMsg::Bucket {
             rank: self.rank,
             bucket,
-            cols,
+            payload,
         });
     }
 
@@ -292,16 +303,20 @@ impl StepExchange {
         let mut remaining_done = if expect_done { self.n } else { 0 };
         while remaining_buckets > 0 || remaining_done > 0 {
             match self.msgs_in.recv()? {
-                RankMsg::Bucket { rank, bucket, cols } => {
+                RankMsg::Bucket {
+                    rank,
+                    bucket,
+                    payload,
+                } => {
                     ensure!(
                         rank < self.n && bucket < nb,
                         "bucket message out of range: rank {rank}, bucket {bucket}"
                     );
                     let (lo, hi) = buckets.range(bucket);
                     ensure!(
-                        cols.len() == hi - lo,
+                        payload.n_cols() == hi - lo,
                         "bucket {bucket} payload width {} != {}",
-                        cols.len(),
+                        payload.n_cols(),
                         hi - lo
                     );
                     ensure!(
@@ -309,7 +324,9 @@ impl StepExchange {
                         "duplicate bucket {bucket} from rank {rank}"
                     );
                     remaining_buckets -= 1;
-                    on_bucket(rank, bucket, cols);
+                    // Decode at the receiving edge: aggregation always sees
+                    // f32 columns (`Raw` decodes by moving, zero-copy).
+                    on_bucket(rank, bucket, payload.into_cols());
                 }
                 RankMsg::Done {
                     rank,

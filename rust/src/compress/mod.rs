@@ -1,0 +1,1095 @@
+//! Compressed collectives with error feedback (EF).
+//!
+//! Every bucket transfer historically shipped full-precision f32 columns;
+//! on the simulated fabric the inter-node channel dominates exposed comm.
+//! This module cuts wire bytes 2–50x without biasing the consensus
+//! aggregate: each sender keeps a per-bucket **error-feedback residual**
+//! `e`, compresses `x = g + e`, ships the encoded payload, and stores
+//! `e' = x - decode(payload)`. Over steps the residual re-injects every
+//! bit the codec dropped, so the aggregate of the decoded gradients is
+//! unbiased in expectation (EXPERIMENTS.md §Compression has the
+//! argument).
+//!
+//! Three codecs behind the [`Compressor`] trait:
+//! - **int8** stochastic quantization — deterministic via `util::prng`
+//!   keyed on `(step, rank, bucket)`, so a fixed config is bit-identical
+//!   across rank-threads on/off and overlap on/off;
+//! - **fp16** round-to-nearest-even truncation (no randomness);
+//! - **top-k** sparsification with a deterministic lowest-index
+//!   tie-break.
+//!
+//! A fourth, the **rank-k low-rank sketch** ([`SetCodec`] with
+//! [`CompressorKind::LowRank`]), operates on the whole gradient *set* of
+//! a bucket (it needs the N×N Gram of the rows), so it runs leader-side:
+//! in the flat executor after assembly, or on the node-leader set in
+//! hierarchical mode.
+//!
+//! Reproducibility contract: `--compress none` is a bitwise no-op (the
+//! wire format is [`Payload::Raw`], decode is identity), and every codec
+//! is a pure function of `(values, residual, seed, step, rank, bucket)`
+//! — never of thread count, arrival order, or wall clock.
+
+use crate::tensor::GradSet;
+use crate::util::error::{bail, Context, Result};
+use crate::util::prng::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Which codec to apply to bucket transfers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CompressorKind {
+    /// Ship raw f32 columns (bitwise-identical to the uncompressed path).
+    None,
+    /// Rank-`k` low-rank sketch of the bucket's gradient set (set-level).
+    LowRank { k: usize },
+    /// Int8 stochastic quantization with a per-payload f32 scale.
+    Int8,
+    /// IEEE binary16 round-to-nearest-even.
+    Fp16,
+    /// Keep the `ratio` fraction of largest-magnitude entries.
+    TopK { ratio: f64 },
+}
+
+impl CompressorKind {
+    /// Parse `none|lowrank:<k>|int8|fp16|topk:<ratio>`.
+    pub fn parse(s: &str) -> Result<CompressorKind> {
+        match s {
+            "none" => return Ok(CompressorKind::None),
+            "int8" => return Ok(CompressorKind::Int8),
+            "fp16" => return Ok(CompressorKind::Fp16),
+            _ => {}
+        }
+        if let Some(k) = s.strip_prefix("lowrank:") {
+            let k: usize = k.parse().context("lowrank rank")?;
+            if k == 0 {
+                bail!("lowrank rank must be >= 1");
+            }
+            return Ok(CompressorKind::LowRank { k });
+        }
+        if let Some(r) = s.strip_prefix("topk:") {
+            let ratio: f64 = r.parse().context("topk ratio")?;
+            if !(ratio > 0.0 && ratio <= 1.0) {
+                bail!("topk ratio must be in (0, 1], got {ratio}");
+            }
+            return Ok(CompressorKind::TopK { ratio });
+        }
+        bail!("bad compressor {s:?}: want none|lowrank:<k>|int8|fp16|topk:<ratio>")
+    }
+
+    pub fn is_none(&self) -> bool {
+        matches!(self, CompressorKind::None)
+    }
+
+    /// True for codecs that encode one sender's columns independently
+    /// (int8/fp16/topk) — these run at the rank source. The low-rank
+    /// sketch needs the whole set and runs leader-side instead.
+    pub fn is_per_rank(&self) -> bool {
+        matches!(
+            self,
+            CompressorKind::Int8 | CompressorKind::Fp16 | CompressorKind::TopK { .. }
+        )
+    }
+
+    /// Tag string for bench rows and logs (round-trips through `parse`).
+    pub fn tag(&self) -> String {
+        match self {
+            CompressorKind::None => "none".into(),
+            CompressorKind::LowRank { k } => format!("lowrank:{k}"),
+            CompressorKind::Int8 => "int8".into(),
+            CompressorKind::Fp16 => "fp16".into(),
+            CompressorKind::TopK { ratio } => format!("topk:{ratio}"),
+        }
+    }
+
+    /// The per-row [`Compressor`] for per-rank kinds; `None` for
+    /// `None`/`LowRank` (raw passthrough / set-level path).
+    pub fn row_compressor(&self) -> Option<Box<dyn Compressor>> {
+        match *self {
+            CompressorKind::Int8 => Some(Box::new(Int8Quantizer)),
+            CompressorKind::Fp16 => Some(Box::new(Fp16Quantizer)),
+            CompressorKind::TopK { ratio } => Some(Box::new(TopKSparsifier { ratio })),
+            CompressorKind::None | CompressorKind::LowRank { .. } => None,
+        }
+    }
+
+    /// Modeled wire bytes for one participant's share of a bucket of
+    /// `n_cols` columns when `rows` participants take part in the
+    /// collective. Used to rewrite `CommOp.bytes` so the timelines price
+    /// the compressed transfer (see `collective::cost_model`).
+    pub fn bucket_wire_bytes(&self, n_cols: usize, rows: usize) -> usize {
+        match *self {
+            CompressorKind::None => crate::collective::cost_model::f32_wire_bytes(n_cols),
+            // Factored form: U (rows×k) + Uᵀ·X (k×n_cols), both f32.
+            CompressorKind::LowRank { k } => {
+                let ke = k.min(rows).min(n_cols).max(1);
+                4 * (ke * n_cols + rows * ke)
+            }
+            _ => self
+                .row_compressor()
+                .expect("per-rank kind")
+                .wire_bytes(n_cols, rows),
+        }
+    }
+}
+
+/// Which channels to compress: `All` transfers, or only the slow
+/// inter-node fabric (`Inter`). On a flat topology the single ring *is*
+/// the bottleneck fabric, so both scopes compress the rank transfers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompressScope {
+    All,
+    Inter,
+}
+
+impl CompressScope {
+    pub fn parse(s: &str) -> Result<CompressScope> {
+        match s {
+            "all" => Ok(CompressScope::All),
+            "inter" => Ok(CompressScope::Inter),
+            _ => bail!("bad compress scope {s:?}: want all|inter"),
+        }
+    }
+
+    pub fn tag(&self) -> &'static str {
+        match self {
+            CompressScope::All => "all",
+            CompressScope::Inter => "inter",
+        }
+    }
+}
+
+/// Full compression configuration: codec + which channels it applies to.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CompressionSpec {
+    pub kind: CompressorKind,
+    pub scope: CompressScope,
+}
+
+impl Default for CompressionSpec {
+    fn default() -> Self {
+        CompressionSpec {
+            kind: CompressorKind::None,
+            scope: CompressScope::All,
+        }
+    }
+}
+
+impl CompressionSpec {
+    pub fn is_active(&self) -> bool {
+        !self.kind.is_none()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wire payloads
+// ---------------------------------------------------------------------------
+
+/// One bucket's encoded columns as they cross the (simulated) wire.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    /// Uncompressed f32 columns — the `--compress none` format and the
+    /// NaN-transparent escape hatch (non-finite inputs bypass the codec
+    /// so poison reaches the aggregator unmodified).
+    Raw(Vec<f32>),
+    /// binary16 bit patterns, one per column.
+    Fp16(Vec<u16>),
+    /// Stochastically-rounded int8 codes plus their f32 scale.
+    Int8 { scale: f32, codes: Vec<i8> },
+    /// Sparse (index, value) pairs; indices strictly increasing.
+    TopK {
+        n_cols: usize,
+        idx: Vec<u32>,
+        vals: Vec<f32>,
+    },
+}
+
+impl Payload {
+    /// Width of the decoded column vector.
+    pub fn n_cols(&self) -> usize {
+        match self {
+            Payload::Raw(v) => v.len(),
+            Payload::Fp16(c) => c.len(),
+            Payload::Int8 { codes, .. } => codes.len(),
+            Payload::TopK { n_cols, .. } => *n_cols,
+        }
+    }
+
+    /// True wire size in bytes of this encoding.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Payload::Raw(v) => 4 * v.len(),
+            Payload::Fp16(c) => 2 * c.len(),
+            Payload::Int8 { codes, .. } => 4 + codes.len(),
+            Payload::TopK { idx, .. } => 4 + 8 * idx.len(),
+        }
+    }
+
+    /// Decode to f32 columns.
+    pub fn decode(&self) -> Vec<f32> {
+        match self {
+            Payload::Raw(v) => v.clone(),
+            Payload::Fp16(codes) => codes.iter().map(|&h| f16_bits_to_f32(h)).collect(),
+            Payload::Int8 { scale, codes } => {
+                codes.iter().map(|&q| q as f32 * scale).collect()
+            }
+            Payload::TopK { n_cols, idx, vals } => {
+                let mut out = vec![0.0f32; *n_cols];
+                for (&i, &v) in idx.iter().zip(vals.iter()) {
+                    out[i as usize] = v;
+                }
+                out
+            }
+        }
+    }
+
+    /// Decode, consuming the payload — zero-copy for `Raw`, so the
+    /// `--compress none` path moves the exact bits the sender produced.
+    pub fn into_cols(self) -> Vec<f32> {
+        match self {
+            Payload::Raw(v) => v,
+            other => other.decode(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// binary16 conversion (hand-rolled; the crate is zero-dependency)
+// ---------------------------------------------------------------------------
+
+/// f32 → IEEE binary16 bits, round-to-nearest-even.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf stays Inf; NaN maps to a quiet NaN.
+        return sign | 0x7c00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow → ±Inf
+    }
+    if e <= 0 {
+        // Subnormal (or zero) in f16.
+        if e < -10 {
+            return sign; // underflows to ±0
+        }
+        let m = mant | 0x0080_0000; // implicit leading 1
+        let shift = (14 - e) as u32;
+        let half = 1u32 << (shift - 1);
+        let rem = m & ((1u32 << shift) - 1);
+        let mut v = m >> shift;
+        if rem > half || (rem == half && (v & 1) == 1) {
+            v += 1; // may carry into the smallest normal — bit layout is contiguous
+        }
+        return sign | v as u16;
+    }
+    let mut m = mant >> 13;
+    let rem = mant & 0x1fff;
+    if rem > 0x1000 || (rem == 0x1000 && (m & 1) == 1) {
+        m += 1;
+        if m == 0x400 {
+            // Mantissa carry bumps the exponent.
+            let e2 = e + 1;
+            if e2 >= 0x1f {
+                return sign | 0x7c00;
+            }
+            return sign | ((e2 as u16) << 10);
+        }
+    }
+    sign | ((e as u16) << 10) | m as u16
+}
+
+/// IEEE binary16 bits → f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // Normalize the subnormal.
+            let mut e = 113u32; // 127 - 15 + 1
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x3ff) << 13)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+// ---------------------------------------------------------------------------
+// Row compressors
+// ---------------------------------------------------------------------------
+
+/// One sender's bucket-column codec. `encode` is a pure function of
+/// `(x, rng)` — the caller folds the EF residual into `x` and derives
+/// `rng` from `(seed, step, rank, bucket)`, which is what makes the whole
+/// path bit-deterministic for a fixed config.
+pub trait Compressor: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Modeled wire bytes for `n_cols` columns (`rows` participants; only
+    /// the low-rank sketch depends on it, but the signature is shared).
+    fn wire_bytes(&self, n_cols: usize, rows: usize) -> usize;
+    fn encode(&self, x: &[f32], rng: &mut Rng) -> Payload;
+}
+
+/// Int8 stochastic quantization: `q = sr(x / scale)` with
+/// `scale = max|x| / 127`. Stochastic rounding makes each payload
+/// unbiased *per draw*; EF additionally zeroes the realized error over
+/// steps.
+pub struct Int8Quantizer;
+
+impl Compressor for Int8Quantizer {
+    fn name(&self) -> &'static str {
+        "int8"
+    }
+
+    fn wire_bytes(&self, n_cols: usize, _rows: usize) -> usize {
+        4 + n_cols // f32 scale + one code per column
+    }
+
+    fn encode(&self, x: &[f32], rng: &mut Rng) -> Payload {
+        let mut max_abs = 0.0f32;
+        for &v in x {
+            max_abs = max_abs.max(v.abs());
+        }
+        let scale = max_abs / 127.0;
+        if scale == 0.0 {
+            return Payload::Int8 {
+                scale,
+                codes: vec![0; x.len()],
+            };
+        }
+        let codes = x
+            .iter()
+            .map(|&v| {
+                let y = (v / scale).clamp(-127.0, 127.0);
+                let f = y.floor();
+                let frac = y - f;
+                let up = rng.uniform_f32() < frac;
+                ((f as i32 + i32::from(up)).clamp(-127, 127)) as i8
+            })
+            .collect();
+        Payload::Int8 { scale, codes }
+    }
+}
+
+/// Plain fp16 truncation (round-to-nearest-even); deterministic, no rng.
+pub struct Fp16Quantizer;
+
+impl Compressor for Fp16Quantizer {
+    fn name(&self) -> &'static str {
+        "fp16"
+    }
+
+    fn wire_bytes(&self, n_cols: usize, _rows: usize) -> usize {
+        2 * n_cols
+    }
+
+    fn encode(&self, x: &[f32], _rng: &mut Rng) -> Payload {
+        Payload::Fp16(x.iter().map(|&v| f32_to_f16_bits(v)).collect())
+    }
+}
+
+/// Top-k sparsification: keep `ceil(ratio · n_cols)` largest-|x| entries.
+/// Ties break toward the lower index so selection is deterministic.
+pub struct TopKSparsifier {
+    pub ratio: f64,
+}
+
+/// Kept-entry count for a `n_cols`-wide bucket at `ratio`.
+pub fn topk_k(n_cols: usize, ratio: f64) -> usize {
+    ((ratio * n_cols as f64).ceil() as usize).clamp(1, n_cols.max(1))
+}
+
+impl Compressor for TopKSparsifier {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn wire_bytes(&self, n_cols: usize, _rows: usize) -> usize {
+        4 + 8 * topk_k(n_cols, self.ratio) // u32 index + f32 value per kept entry
+    }
+
+    fn encode(&self, x: &[f32], _rng: &mut Rng) -> Payload {
+        let n = x.len();
+        let k = topk_k(n, self.ratio).min(n);
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        order.sort_unstable_by(|&a, &b| {
+            let (va, vb) = (x[a as usize].abs(), x[b as usize].abs());
+            vb.partial_cmp(&va)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut idx = order[..k].to_vec();
+        idx.sort_unstable();
+        let vals = idx.iter().map(|&i| x[i as usize]).collect();
+        Payload::TopK {
+            n_cols: n,
+            idx,
+            vals,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-rank streaming codec (int8 / fp16 / topk at the gradient source)
+// ---------------------------------------------------------------------------
+
+/// One rank's sending codec: per-bucket EF residual + a row compressor.
+/// For `None`/`LowRank` kinds it is a raw passthrough (the sketch runs
+/// leader-side), so it can be installed unconditionally.
+pub struct RankCodec {
+    kind: CompressorKind,
+    comp: Option<Box<dyn Compressor>>,
+    seed: u64,
+    rank: usize,
+    /// Per-bucket residual, lazily sized to the bucket width (handles
+    /// ragged last buckets and re-initializes if widths change).
+    residuals: Vec<Vec<f32>>,
+}
+
+impl RankCodec {
+    pub fn new(kind: CompressorKind, seed: u64, rank: usize, n_buckets: usize) -> RankCodec {
+        RankCodec {
+            kind,
+            comp: kind.row_compressor(),
+            seed,
+            rank,
+            residuals: vec![Vec::new(); n_buckets],
+        }
+    }
+
+    pub fn kind(&self) -> CompressorKind {
+        self.kind
+    }
+
+    /// Drop all residual state — called when parameters are re-broadcast
+    /// (checkpoint restore), since stale feedback belongs to the old
+    /// trajectory.
+    pub fn reset(&mut self) {
+        for r in &mut self.residuals {
+            r.clear();
+        }
+    }
+
+    /// Encode one bucket's columns, folding in and updating the EF
+    /// residual. Non-finite inputs bypass both codec and residual so
+    /// NaN/Inf poison ships unmodified ([`Payload::Raw`]).
+    pub fn encode_bucket(&mut self, step: u64, bucket: usize, cols: &[f32]) -> Payload {
+        let Some(comp) = &self.comp else {
+            return Payload::Raw(cols.to_vec());
+        };
+        if cols.iter().any(|v| !v.is_finite()) {
+            return Payload::Raw(cols.to_vec());
+        }
+        let e = &mut self.residuals[bucket];
+        if e.len() != cols.len() {
+            e.clear();
+            e.resize(cols.len(), 0.0);
+        }
+        let x: Vec<f32> = cols.iter().zip(e.iter()).map(|(c, r)| c + r).collect();
+        let mut rng = Rng::new(self.seed)
+            .fork(step)
+            .fork(self.rank as u64)
+            .fork(bucket as u64);
+        let payload = comp.encode(&x, &mut rng);
+        let decoded = payload.decode();
+        for ((ei, xi), di) in e.iter_mut().zip(x.iter()).zip(decoded.iter()) {
+            *ei = xi - di;
+        }
+        payload
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Set-level codec (low-rank sketch; also per-row codecs at leader level)
+// ---------------------------------------------------------------------------
+
+/// Power-iteration sweeps per extracted component.
+const POWER_ITERS: usize = 40;
+
+/// Leader-side codec over a whole `GradSet` bucket view. Holds one EF
+/// residual bank per bucket behind a `Mutex` so pool tasks working on
+/// *different* buckets never serialize on each other; within a bucket the
+/// transform is sequential f64 with fixed iteration order, so results are
+/// bitwise-identical whether it runs inline (overlap off) or on a pool
+/// task (overlap on), and whether the view is the full set at `[lo, hi)`
+/// or an owned copy at `[0, w)`.
+pub struct SetCodec {
+    kind: CompressorKind,
+    comp: Option<Box<dyn Compressor>>,
+    seed: u64,
+    step: AtomicU64,
+    banks: Vec<Mutex<Vec<f32>>>,
+}
+
+impl SetCodec {
+    pub fn new(kind: CompressorKind, seed: u64, n_buckets: usize) -> SetCodec {
+        SetCodec {
+            kind,
+            comp: kind.row_compressor(),
+            seed,
+            step: AtomicU64::new(0),
+            banks: (0..n_buckets).map(|_| Mutex::new(Vec::new())).collect(),
+        }
+    }
+
+    pub fn kind(&self) -> CompressorKind {
+        self.kind
+    }
+
+    /// Advance the step key. Call exactly once per training step, after
+    /// every bucket's transform — the counter starts at 0 on a fresh run
+    /// (documented: it restarts on a new process, like the pool itself).
+    pub fn advance_step(&self) {
+        self.step.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Drop residuals and rewind the step key (param re-broadcast).
+    pub fn reset(&self) {
+        for b in &self.banks {
+            b.lock().unwrap().clear();
+        }
+        self.step.store(0, Ordering::SeqCst);
+    }
+
+    /// Compress-then-decompress columns `[lo, hi)` of every row in place,
+    /// updating the bucket's EF bank. The aggregator's Gram/statistics
+    /// pass then runs on the *decoded* values, which is exactly what the
+    /// receivers would reconstruct.
+    pub fn transform(&self, bucket: usize, set: &mut GradSet, lo: usize, hi: usize) {
+        let m = set.n();
+        let w = hi - lo;
+        if m == 0 || w == 0 || self.kind.is_none() {
+            return;
+        }
+        match self.kind {
+            CompressorKind::LowRank { k } => self.transform_lowrank(bucket, set, lo, hi, k),
+            _ => self.transform_rows(bucket, set, lo, hi),
+        }
+    }
+
+    /// Per-row codecs applied at the set level (hier inter-node scope:
+    /// each row is one node leader's reduced gradient).
+    fn transform_rows(&self, bucket: usize, set: &mut GradSet, lo: usize, hi: usize) {
+        let comp = self.comp.as_ref().expect("per-rank kind");
+        let m = set.n();
+        let w = hi - lo;
+        let step = self.step.load(Ordering::SeqCst);
+        let mut bank = self.banks[bucket].lock().unwrap();
+        if bank.len() != m * w {
+            bank.clear();
+            bank.resize(m * w, 0.0);
+        }
+        for i in 0..m {
+            let row = &mut set.row_mut(i)[lo..hi];
+            if row.iter().any(|v| !v.is_finite()) {
+                continue; // NaN-transparent: row and its residual untouched
+            }
+            let e = &mut bank[i * w..(i + 1) * w];
+            let x: Vec<f32> = row.iter().zip(e.iter()).map(|(c, r)| c + r).collect();
+            let mut rng = Rng::new(self.seed)
+                .fork(step)
+                .fork(i as u64)
+                .fork(bucket as u64);
+            let payload = comp.encode(&x, &mut rng);
+            let decoded = payload.decode();
+            for c in 0..w {
+                e[c] = x[c] - decoded[c];
+                row[c] = decoded[c];
+            }
+        }
+    }
+
+    /// Rank-k sketch: N×N Gram of the EF-corrected rows (sequential f64,
+    /// fixed order), top-k eigenvectors by deflated power iteration, then
+    /// the projection `Â = U·Uᵀ·X` replaces the rows. Entirely
+    /// deterministic — the init vectors are keyed by `(seed, bucket)`
+    /// only and the iteration count is fixed.
+    fn transform_lowrank(&self, bucket: usize, set: &mut GradSet, lo: usize, hi: usize, k: usize) {
+        let m = set.n();
+        let w = hi - lo;
+        let mut bank = self.banks[bucket].lock().unwrap();
+        if bank.len() != m * w {
+            bank.clear();
+            bank.resize(m * w, 0.0);
+        }
+        let mut x = vec![0.0f32; m * w];
+        let mut finite = true;
+        for i in 0..m {
+            let row = &set.row(i)[lo..hi];
+            for c in 0..w {
+                finite &= row[c].is_finite();
+                x[i * w + c] = row[c] + bank[i * w + c];
+            }
+        }
+        if !finite {
+            return; // NaN-transparent: whole bucket ships raw, bank untouched
+        }
+        let ke = k.min(m).min(w).max(1);
+        // Gram G = X·Xᵀ over the bucket columns.
+        let mut gm = vec![0.0f64; m * m];
+        for i in 0..m {
+            for j in i..m {
+                let mut s = 0.0f64;
+                for c in 0..w {
+                    s += x[i * w + c] as f64 * x[j * w + c] as f64;
+                }
+                gm[i * m + j] = s;
+                gm[j * m + i] = s;
+            }
+        }
+        let mut basis: Vec<Vec<f64>> = Vec::new();
+        let mut init = Rng::new(self.seed ^ 0x4c52_4b53).fork(bucket as u64);
+        'comp: for _ in 0..ke {
+            let mut v: Vec<f64> = (0..m).map(|_| init.normal()).collect();
+            if !normalize(&mut v) {
+                v[0] = 1.0;
+            }
+            for _ in 0..POWER_ITERS {
+                let mut nv = vec![0.0f64; m];
+                for i in 0..m {
+                    let mut s = 0.0f64;
+                    for j in 0..m {
+                        s += gm[i * m + j] * v[j];
+                    }
+                    nv[i] = s;
+                }
+                // Re-orthogonalize against extracted components for
+                // numerical stability (deflation alone drifts).
+                for u in &basis {
+                    let d: f64 = u.iter().zip(nv.iter()).map(|(a, b)| a * b).sum();
+                    for i in 0..m {
+                        nv[i] -= d * u[i];
+                    }
+                }
+                if !normalize(&mut nv) {
+                    break 'comp; // remaining spectrum is numerically zero
+                }
+                v = nv;
+            }
+            let mut lam = 0.0f64;
+            for i in 0..m {
+                let mut s = 0.0f64;
+                for j in 0..m {
+                    s += gm[i * m + j] * v[j];
+                }
+                lam += v[i] * s;
+            }
+            if !(lam > 1e-30) {
+                break;
+            }
+            for i in 0..m {
+                for j in 0..m {
+                    gm[i * m + j] -= lam * v[i] * v[j];
+                }
+            }
+            basis.push(v);
+        }
+        // Â = U·(Uᵀ·X); with an empty basis the sketch is the zero matrix
+        // and EF carries the whole signal to later steps.
+        let kb = basis.len();
+        let mut p = vec![0.0f64; kb * w];
+        for (j, u) in basis.iter().enumerate() {
+            for i in 0..m {
+                let uji = u[i];
+                for c in 0..w {
+                    p[j * w + c] += uji * x[i * w + c] as f64;
+                }
+            }
+        }
+        for i in 0..m {
+            let row = &mut set.row_mut(i)[lo..hi];
+            for c in 0..w {
+                let mut s = 0.0f64;
+                for (j, u) in basis.iter().enumerate() {
+                    s += u[i] * p[j * w + c];
+                }
+                let a = s as f32;
+                bank[i * w + c] = x[i * w + c] - a;
+                row[c] = a;
+            }
+        }
+    }
+}
+
+/// Normalize `v` in place; false if its norm is numerically zero.
+fn normalize(v: &mut [f64]) -> bool {
+    let n: f64 = v.iter().map(|a| a * a).sum::<f64>().sqrt();
+    if n <= 1e-300 {
+        return false;
+    }
+    for a in v.iter_mut() {
+        *a /= n;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_kinds_and_scopes() {
+        assert_eq!(CompressorKind::parse("none").unwrap(), CompressorKind::None);
+        assert_eq!(CompressorKind::parse("int8").unwrap(), CompressorKind::Int8);
+        assert_eq!(CompressorKind::parse("fp16").unwrap(), CompressorKind::Fp16);
+        assert_eq!(
+            CompressorKind::parse("lowrank:3").unwrap(),
+            CompressorKind::LowRank { k: 3 }
+        );
+        assert_eq!(
+            CompressorKind::parse("topk:0.05").unwrap(),
+            CompressorKind::TopK { ratio: 0.05 }
+        );
+        for bad in ["lowrank:0", "topk:0", "topk:1.5", "int4", "lowrank:x"] {
+            assert!(CompressorKind::parse(bad).is_err(), "{bad}");
+        }
+        assert_eq!(CompressScope::parse("all").unwrap(), CompressScope::All);
+        assert_eq!(CompressScope::parse("inter").unwrap(), CompressScope::Inter);
+        assert!(CompressScope::parse("intra").is_err());
+        // Tags round-trip so bench rows can be replayed as CLI values.
+        for k in ["none", "int8", "fp16", "lowrank:2", "topk:0.01"] {
+            let parsed = CompressorKind::parse(k).unwrap();
+            assert_eq!(CompressorKind::parse(&parsed.tag()).unwrap(), parsed);
+        }
+    }
+
+    #[test]
+    fn f16_bits_roundtrip_all_patterns() {
+        // decode(encode) is identity on every non-NaN f16 bit pattern —
+        // zeros, subnormals, normals, ±Inf.
+        for h in 0..=u16::MAX {
+            let exp = (h >> 10) & 0x1f;
+            let mant = h & 0x3ff;
+            if exp == 0x1f && mant != 0 {
+                let f = f16_bits_to_f32(h);
+                assert!(f.is_nan());
+                continue;
+            }
+            let back = f32_to_f16_bits(f16_bits_to_f32(h));
+            assert_eq!(back, h, "pattern {h:#06x}");
+        }
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even_and_saturates() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next f16; RNE
+        // keeps the even mantissa (1.0).
+        assert_eq!(f32_to_f16_bits(1.0 + 0.000_488_281_25), 0x3c00);
+        // Just above halfway rounds up.
+        assert_eq!(f32_to_f16_bits(1.0 + 0.000_489_f32), 0x3c01);
+        assert_eq!(f32_to_f16_bits(70000.0), 0x7c00); // > 65504 → +Inf
+        assert_eq!(f32_to_f16_bits(-70000.0), 0xfc00);
+        assert_eq!(f32_to_f16_bits(1e-10), 0x0000); // underflow → +0
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn int8_is_deterministic_per_key_and_varies_by_step() {
+        let q = Int8Quantizer;
+        let x: Vec<f32> = (0..64).map(|i| ((i * 37 % 13) as f32 - 6.0) * 0.1).collect();
+        let key = |step: u64| Rng::new(7).fork(step).fork(3).fork(1);
+        let a = q.encode(&x, &mut key(5));
+        let b = q.encode(&x, &mut key(5));
+        let c = q.encode(&x, &mut key(6));
+        assert_eq!(a, b);
+        assert_ne!(a, c, "different step key must draw different rounding");
+    }
+
+    #[test]
+    fn int8_error_feedback_is_unbiased_over_steps() {
+        // Constant input, EF on: the running mean of the decoded stream
+        // converges to the input (residual stays bounded by one quantum).
+        let mut codec = RankCodec::new(CompressorKind::Int8, 11, 0, 1);
+        let cols = vec![0.031_f32, -0.77, 0.5, 0.123];
+        let mut sums = vec![0.0f64; cols.len()];
+        let steps = 400;
+        for s in 0..steps {
+            let d = codec.encode_bucket(s, 0, &cols).decode();
+            for (acc, v) in sums.iter_mut().zip(d.iter()) {
+                *acc += *v as f64;
+            }
+        }
+        for (acc, &c) in sums.iter().zip(cols.iter()) {
+            let mean = *acc / steps as f64;
+            // One int8 quantum of the largest entry is 0.77/127 ≈ 6e-3;
+            // the time-averaged EF error must be far inside it.
+            assert!(
+                (mean - c as f64).abs() < 1e-3,
+                "mean {mean} vs {c} drifted"
+            );
+        }
+    }
+
+    #[test]
+    fn fp16_residual_persists_across_steps() {
+        // 0.1 is not representable in binary16; the dropped bits must land
+        // in the residual and re-enter the next encode.
+        let mut codec = RankCodec::new(CompressorKind::Fp16, 0, 0, 2);
+        let cols = vec![0.1_f32; 8];
+        let p1 = codec.encode_bucket(0, 1, &cols);
+        let d1 = p1.decode();
+        assert!((d1[0] - 0.1).abs() > 0.0, "0.1 must quantize inexactly");
+        // Second step sees x = 0.1 + e, so its payload differs from a
+        // fresh codec's (the residual is live state).
+        let p2 = codec.encode_bucket(1, 1, &cols);
+        let fresh = RankCodec::new(CompressorKind::Fp16, 0, 0, 2).encode_bucket(1, 1, &cols);
+        assert_ne!(p2, fresh);
+        // And the two-step decoded sum is closer to the true sum than the
+        // no-EF sum.
+        let ef_sum = d1[0] + p2.decode()[0];
+        let raw_sum = 2.0 * d1[0];
+        assert!((ef_sum - 0.2).abs() < (raw_sum - 0.2).abs());
+    }
+
+    #[test]
+    fn topk_tie_break_is_lowest_index_and_ef_ships_the_tail() {
+        let t = TopKSparsifier { ratio: 0.5 };
+        let mut rng = Rng::new(0);
+        let p = t.encode(&[1.0, 1.0, 1.0, 1.0], &mut rng);
+        match &p {
+            Payload::TopK { idx, .. } => assert_eq!(idx, &vec![0, 1]),
+            _ => panic!("want TopK"),
+        }
+        // A small entry starved by top-k accumulates in the residual until
+        // it outgrows the big one and finally ships.
+        let mut codec = RankCodec::new(CompressorKind::TopK { ratio: 0.5 }, 0, 0, 1);
+        let cols = vec![1.0_f32, 0.3];
+        let mut shipped_small = false;
+        for s in 0..8 {
+            if let Payload::TopK { idx, .. } = codec.encode_bucket(s, 0, &cols) {
+                if idx.contains(&1) {
+                    shipped_small = true;
+                    break;
+                }
+            }
+        }
+        assert!(shipped_small, "EF never released the small coordinate");
+    }
+
+    #[test]
+    fn residual_reset_and_ragged_width_reinit() {
+        let mut codec = RankCodec::new(CompressorKind::Fp16, 0, 2, 3);
+        let cols = vec![0.1_f32; 10];
+        let first = codec.encode_bucket(0, 0, &cols);
+        let _ = codec.encode_bucket(1, 0, &cols); // residual now nonzero
+        codec.reset();
+        // After reset the codec behaves exactly like a fresh one.
+        assert_eq!(codec.encode_bucket(0, 0, &cols), first);
+        // A ragged (shorter) last-bucket width re-initializes the bank
+        // rather than indexing out of bounds.
+        let short = vec![0.1_f32; 7];
+        let p = codec.encode_bucket(2, 0, &short);
+        assert_eq!(p.n_cols(), 7);
+        let again = vec![0.1_f32; 10];
+        assert_eq!(codec.encode_bucket(3, 0, &again).n_cols(), 10);
+    }
+
+    #[test]
+    fn nan_payloads_bypass_codec_and_residual() {
+        let mut codec = RankCodec::new(CompressorKind::Int8, 0, 0, 1);
+        let clean = vec![0.5_f32, -0.25, 0.125];
+        let _ = codec.encode_bucket(0, 0, &clean); // seed some residual
+        let before = codec.residuals[0].clone();
+        let poisoned = vec![0.5_f32, f32::NAN, f32::INFINITY];
+        let p = codec.encode_bucket(1, 0, &poisoned);
+        match &p {
+            Payload::Raw(v) => {
+                // Bitwise pass-through, NaN included.
+                assert_eq!(v[0].to_bits(), poisoned[0].to_bits());
+                assert!(v[1].is_nan());
+                assert_eq!(v[2].to_bits(), poisoned[2].to_bits());
+            }
+            _ => panic!("poisoned bucket must ship Raw"),
+        }
+        assert_eq!(codec.residuals[0], before, "residual must be untouched");
+    }
+
+    #[test]
+    fn none_and_lowrank_rank_codecs_are_raw_passthrough() {
+        for kind in [CompressorKind::None, CompressorKind::LowRank { k: 2 }] {
+            let mut codec = RankCodec::new(kind, 9, 1, 2);
+            let cols = vec![0.25_f32, -1.5, 3.0];
+            match codec.encode_bucket(4, 1, &cols) {
+                Payload::Raw(v) => assert_eq!(v, cols),
+                p => panic!("{kind:?} must pass through Raw, got {p:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn payload_wire_bytes_match_the_kind_model() {
+        let x: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) * 0.01).collect();
+        let mut rng = Rng::new(1).fork(0).fork(0).fork(0);
+        for kind in [
+            CompressorKind::Int8,
+            CompressorKind::Fp16,
+            CompressorKind::TopK { ratio: 0.07 },
+        ] {
+            let comp = kind.row_compressor().unwrap();
+            let p = comp.encode(&x, &mut rng);
+            assert_eq!(p.wire_bytes(), kind.bucket_wire_bytes(x.len(), 8), "{kind:?}");
+        }
+        // Compression must actually be smaller than f32 for real widths.
+        let raw = CompressorKind::None.bucket_wire_bytes(1024, 8);
+        assert!(CompressorKind::Fp16.bucket_wire_bytes(1024, 8) < raw);
+        assert!(CompressorKind::Int8.bucket_wire_bytes(1024, 8) < raw);
+        assert!(CompressorKind::TopK { ratio: 0.01 }.bucket_wire_bytes(1024, 8) < raw);
+        assert!(CompressorKind::LowRank { k: 2 }.bucket_wire_bytes(1024, 8) < raw);
+    }
+
+    #[test]
+    fn payload_decode_matches_n_cols() {
+        let p = Payload::TopK {
+            n_cols: 6,
+            idx: vec![1, 4],
+            vals: vec![2.0, -3.0],
+        };
+        assert_eq!(p.n_cols(), 6);
+        assert_eq!(p.decode(), vec![0.0, 2.0, 0.0, 0.0, -3.0, 0.0]);
+        let raw = Payload::Raw(vec![1.0, 2.0]);
+        assert_eq!(raw.clone().into_cols(), raw.decode());
+    }
+
+    fn set_from(rows: &[Vec<f32>]) -> GradSet {
+        GradSet::from_rows(rows)
+    }
+
+    #[test]
+    fn lowrank_reconstructs_genuinely_lowrank_sets() {
+        // X = u·vᵀ is exactly rank 1, so a k=1 sketch reproduces it to
+        // f32 precision and the residual is ~0.
+        let u = [1.0f32, -2.0, 0.5, 3.0];
+        let v: Vec<f32> = (0..16).map(|c| (c as f32 * 0.37).sin()).collect();
+        let rows: Vec<Vec<f32>> = u
+            .iter()
+            .map(|&ui| v.iter().map(|&vc| ui * vc).collect())
+            .collect();
+        let mut set = set_from(&rows);
+        let codec = SetCodec::new(CompressorKind::LowRank { k: 1 }, 0, 1);
+        codec.transform(0, &mut set, 0, 16);
+        for (i, row) in rows.iter().enumerate() {
+            for (c, &want) in row.iter().enumerate() {
+                let got = set.row(i)[c];
+                assert!(
+                    (got - want).abs() <= 1e-4 * want.abs().max(1.0),
+                    "({i},{c}): {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lowrank_offset_invariance_full_range_vs_view() {
+        // The executor calls transform either on the full set at [lo, hi)
+        // (overlap off) or on an owned per-bucket view at [0, w) (overlap
+        // on). Both must produce bitwise-identical columns.
+        let mut rng = Rng::new(42);
+        let d = 24;
+        let (lo, hi) = (8, 19);
+        let rows: Vec<Vec<f32>> = (0..5)
+            .map(|_| (0..d).map(|_| rng.normal_f32(1.0)).collect())
+            .collect();
+        let mut full = set_from(&rows);
+        let view_rows: Vec<Vec<f32>> = rows.iter().map(|r| r[lo..hi].to_vec()).collect();
+        let mut view = set_from(&view_rows);
+        let ca = SetCodec::new(CompressorKind::LowRank { k: 2 }, 3, 2);
+        let cb = SetCodec::new(CompressorKind::LowRank { k: 2 }, 3, 2);
+        // Two steps so the EF bank participates in the comparison.
+        for _ in 0..2 {
+            ca.transform(1, &mut full, lo, hi);
+            cb.transform(1, &mut view, 0, hi - lo);
+            ca.advance_step();
+            cb.advance_step();
+            for i in 0..5 {
+                for c in 0..(hi - lo) {
+                    assert_eq!(
+                        full.row(i)[lo + c].to_bits(),
+                        view.row(i)[c].to_bits(),
+                        "row {i} col {c}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn set_codec_rows_match_rank_codec_bits() {
+        // The hier inter path runs the same row compressors through
+        // SetCodec with the row index as the rank key — given the same
+        // (seed, step, row, bucket) key the bits must match RankCodec's.
+        let rows: Vec<Vec<f32>> = (0..3)
+            .map(|r| (0..12).map(|c| ((r * 12 + c) as f32 * 0.711).cos()).collect())
+            .collect();
+        let mut set = set_from(&rows);
+        let sc = SetCodec::new(CompressorKind::Int8, 5, 4);
+        sc.transform(2, &mut set, 0, 12);
+        for (r, row) in rows.iter().enumerate() {
+            let mut rc = RankCodec::new(CompressorKind::Int8, 5, r, 4);
+            let want = rc.encode_bucket(0, 2, row).decode();
+            for c in 0..12 {
+                assert_eq!(set.row(r)[c].to_bits(), want[c].to_bits(), "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn set_codec_nan_row_is_transparent_per_kind() {
+        // Per-row kinds: only the poisoned row bypasses; lowrank: the
+        // whole bucket does (the Gram couples all rows).
+        let rows = vec![vec![1.0f32, 2.0], vec![f32::NAN, 1.0], vec![0.5, 0.25]];
+        let mut set = set_from(&rows);
+        let sc = SetCodec::new(CompressorKind::Fp16, 0, 1);
+        sc.transform(0, &mut set, 0, 2);
+        assert!(set.row(1)[0].is_nan());
+        assert_eq!(set.row(1)[1].to_bits(), 1.0f32.to_bits());
+        assert_ne!(set.row(0)[0].to_bits(), f32::NAN.to_bits());
+        let mut set2 = set_from(&rows);
+        let lr = SetCodec::new(CompressorKind::LowRank { k: 1 }, 0, 1);
+        lr.transform(0, &mut set2, 0, 2);
+        for (i, row) in rows.iter().enumerate() {
+            for c in 0..2 {
+                assert_eq!(
+                    set2.row(i)[c].to_bits(),
+                    row[c].to_bits(),
+                    "lowrank must leave the poisoned bucket untouched"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn set_codec_reset_restores_fresh_behavior() {
+        let rows: Vec<Vec<f32>> = (0..2).map(|r| vec![0.1 * (r + 1) as f32; 6]).collect();
+        let sc = SetCodec::new(CompressorKind::Fp16, 0, 1);
+        let mut a = set_from(&rows);
+        sc.transform(0, &mut a, 0, 6);
+        sc.advance_step();
+        let mut b = set_from(&rows);
+        sc.transform(0, &mut b, 0, 6); // residual-laden second step
+        sc.reset();
+        let mut c = set_from(&rows);
+        sc.transform(0, &mut c, 0, 6);
+        for i in 0..2 {
+            for col in 0..6 {
+                assert_eq!(c.row(i)[col].to_bits(), a.row(i)[col].to_bits());
+            }
+        }
+        // (b differed from a — the residual really was live before reset)
+        assert!(b.row(0)[0].to_bits() != a.row(0)[0].to_bits()
+            || b.row(1)[0].to_bits() != a.row(1)[0].to_bits());
+    }
+}

@@ -5,6 +5,7 @@
 //! `adacons train --config cfg.json --workers 8 --aggregator adacons`.
 
 use crate::collective::TopologySpec;
+use crate::compress::{CompressScope, CompressionSpec, CompressorKind};
 use crate::data::GradInjector;
 use crate::optim::Schedule;
 use crate::parallel::ParallelPolicy;
@@ -77,6 +78,14 @@ pub struct TrainConfig {
     /// thread — the equivalence oracle; both modes produce bitwise-equal
     /// aggregated directions (interp backend only).
     pub rank_threads: bool,
+    /// Gradient compression on the collective path
+    /// (`--compress none|lowrank:<k>|int8|fp16|topk:<ratio>` plus
+    /// `--compress-scope all|inter`). Per-rank kinds encode at the rank
+    /// source with error feedback; `lowrank` sketches the assembled
+    /// set leader-side. Scope `inter` restricts compression to the
+    /// inter-node hop on hierarchical topologies (no-op distinction on
+    /// flat ones). `none` is bitwise-identical to no compression.
+    pub compression: CompressionSpec,
 }
 
 impl Default for TrainConfig {
@@ -105,6 +114,7 @@ impl Default for TrainConfig {
             backend: Backend::Auto,
             overlap: false,
             rank_threads: false,
+            compression: CompressionSpec::default(),
         }
     }
 }
@@ -181,6 +191,17 @@ impl TrainConfig {
                         _ => bail!("rank_threads must be a bool or \"on\"/\"off\""),
                     }
                 }
+                "compress" => {
+                    let s = v.as_str().context("compress")?;
+                    cfg.compression.kind = CompressorKind::parse(s).with_context(|| {
+                        format!("compress {s:?}: want none|lowrank:<k>|int8|fp16|topk:<ratio>")
+                    })?;
+                }
+                "compress_scope" => {
+                    let s = v.as_str().context("compress_scope")?;
+                    cfg.compression.scope = CompressScope::parse(s)
+                        .with_context(|| format!("compress_scope {s:?}: want all|inter"))?;
+                }
                 "injectors" => {
                     for item in v.as_arr().context("injectors")? {
                         let rank = item.get("rank").as_usize().context("injector rank")?;
@@ -250,6 +271,15 @@ impl TrainConfig {
         }
         if let Some(v) = args.str_opt("rank-threads") {
             self.rank_threads = parse_switch(v).context("--rank-threads on|off")?;
+        }
+        if let Some(s) = args.str_opt("compress") {
+            self.compression.kind = CompressorKind::parse(s).with_context(|| {
+                format!("--compress {s:?}: want none|lowrank:<k>|int8|fp16|topk:<ratio>")
+            })?;
+        }
+        if let Some(s) = args.str_opt("compress-scope") {
+            self.compression.scope = CompressScope::parse(s)
+                .with_context(|| format!("--compress-scope {s:?}: want all|inter"))?;
         }
         if let Some(p) = args.str_opt("jsonl") {
             self.jsonl = Some(p.into());
@@ -430,6 +460,39 @@ mod tests {
             &[],
         );
         assert!(cfg.apply_args(&args).is_err()); // 9 != 32
+    }
+
+    #[test]
+    fn compress_knob_from_json_and_cli() {
+        let dflt = TrainConfig::default();
+        assert!(dflt.compression.kind.is_none());
+        assert_eq!(dflt.compression.scope, CompressScope::All);
+        let j = Json::parse(r#"{"compress":"topk:0.05","compress_scope":"inter"}"#).unwrap();
+        let cfg = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.compression.kind, CompressorKind::TopK { ratio: 0.05 });
+        assert_eq!(cfg.compression.scope, CompressScope::Inter);
+        let j = Json::parse(r#"{"compress":"zip"}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"compress_scope":"intra"}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err());
+        let mut cfg = TrainConfig::default();
+        let args = Args::parse(
+            "--compress lowrank:2 --compress-scope all"
+                .split_whitespace()
+                .map(String::from),
+            &[],
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.compression.kind, CompressorKind::LowRank { k: 2 });
+        assert_eq!(cfg.compression.scope, CompressScope::All);
+        let args = Args::parse("--compress int8".split_whitespace().map(String::from), &[]);
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.compression.kind, CompressorKind::Int8);
+        let args = Args::parse(
+            "--compress topk:0".split_whitespace().map(String::from),
+            &[],
+        );
+        assert!(cfg.apply_args(&args).is_err());
     }
 
     #[test]

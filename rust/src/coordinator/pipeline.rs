@@ -27,8 +27,10 @@
 //! [`comm::StepExchange`]: crate::comm::StepExchange
 
 use crate::aggregation::{AggInfo, Aggregator, BucketWork, CommScope};
+use crate::collective::cost_model::f32_wire_bytes;
 use crate::collective::{CostModel, HierCostModel, HierTimeline, NodeMap, SimClock, StepTimeline};
 use crate::comm::StepExchange;
+use crate::compress::{CompressScope, CompressionSpec, CompressorKind, SetCodec};
 use crate::parallel::ParallelCtx;
 use crate::tensor::{BucketTracker, Buckets, GradSet};
 use crate::util::error::{ensure, Result};
@@ -97,6 +99,15 @@ pub struct PipelinedExecutor {
     /// Topology-aware accounting: scoped ops priced on the intra/inter
     /// models and scheduled on the two-level timeline.
     hier_cost: Option<HierCostModel>,
+    /// Step-compression config. The executor rewrites per-bucket
+    /// [`CommOp`](crate::aggregation::CommOp) bytes to the compressed
+    /// wire size; the codecs themselves run at the rank source
+    /// (per-rank kinds) or the leader set level (low-rank).
+    compression: CompressionSpec,
+    /// Flat low-rank set codec (leader-side sketch + error feedback).
+    /// `None` for per-rank kinds; on hierarchical runs the equivalent
+    /// codec lives inside `aggregation::Hierarchical`.
+    set_codec: Option<SetCodec>,
     n: usize,
 }
 
@@ -157,6 +168,8 @@ impl PipelinedExecutor {
             node_counts,
             map,
             hier_cost,
+            compression: CompressionSpec::default(),
+            set_codec: None,
             n: n_ranks,
         }
     }
@@ -167,6 +180,67 @@ impl PipelinedExecutor {
 
     pub fn buckets(&self) -> &Buckets {
         &self.buckets
+    }
+
+    /// Install the step-compression config. Flat low-rank sketching is
+    /// applied here, leader-side, over the assembled bucket set (the
+    /// hierarchical leader-level equivalent is installed on the
+    /// aggregator via `Aggregator::set_compression`); per-rank kinds
+    /// encode at the rank source and decode at the wire edge, so the
+    /// executor's only job for them is the byte rewrite.
+    pub fn set_compression(&mut self, spec: CompressionSpec, seed: u64) {
+        self.compression = spec;
+        self.set_codec = match spec.kind {
+            k @ CompressorKind::LowRank { .. } if self.map.is_none() => {
+                Some(SetCodec::new(k, seed, self.buckets.len()))
+            }
+            _ => None,
+        };
+    }
+
+    /// Drop accumulated error-feedback residuals (parameter
+    /// re-broadcast: the compression error no longer refers to the
+    /// restored iterate) and rewind the codec's step counter.
+    pub fn reset_compression(&self) {
+        if let Some(codec) = &self.set_codec {
+            codec.reset();
+        }
+    }
+
+    /// Rewrite per-bucket op bytes to the compressed wire size. Only
+    /// full-width bucket payloads qualify (`bytes == 4·width` with
+    /// `bucket: Some(b)`), which excludes grawa's 4-byte scalar-partial
+    /// AllGathers (except in the degenerate width-1 bucket case) and
+    /// the exposed `bucket: None` ops, neither of which is compressed.
+    fn rewrite_compressed_bytes(&self, info: &mut AggInfo) {
+        let spec = self.compression;
+        let hier = self.map.is_some();
+        for op in &mut info.comm {
+            let Some(b) = op.bucket else { continue };
+            let (lo, hi) = self.buckets.range(b);
+            let w = hi - lo;
+            if op.bytes != f32_wire_bytes(w) {
+                continue;
+            }
+            let rows = match (hier, op.scope) {
+                // Flat: the single modeled NIC carries the rank
+                // transfers, so both scopes compress them.
+                (false, CommScope::Global) => self.n,
+                // Hierarchical: the leader-level consensus transfer is
+                // compressed under either scope…
+                (true, CommScope::Inter) => self.map.as_ref().unwrap().groups(),
+                // …while the NVLink-class intra reduce only shrinks
+                // when scope `all` puts codecs at the rank source
+                // (low-rank stays a leader-set transform by design).
+                (true, CommScope::Intra)
+                    if spec.scope == CompressScope::All && spec.kind.is_per_rank() =>
+                {
+                    self.map.as_ref().unwrap().max_group()
+                }
+                _ => continue,
+            };
+            op.bytes = spec.kind.bucket_wire_bytes(w, rows);
+        }
     }
 
     /// Run one step fed by the round-robin producer callback (the serial
@@ -234,7 +308,7 @@ impl PipelinedExecutor {
         // producer path and legacy senders leave this empty).
         let mut bucket_obs: Vec<Vec<f64>> = Vec::new();
 
-        let info = if self.overlap {
+        let mut info = if self.overlap {
             let work = if self.map.is_some() {
                 self.ingest_grouped(
                     source,
@@ -283,8 +357,23 @@ impl PipelinedExecutor {
                     bucket_obs = reports.into_iter().map(|r| r.bucket_s).collect();
                 }
             }
+            // Off-overlap leader-side sketch: transform the assembled
+            // set in place, bucket by bucket, before aggregation — the
+            // same fixed order (and, by offset invariance, the same
+            // bits) as the overlap path's per-task transforms.
+            if let Some(codec) = &self.set_codec {
+                for (b, (lo, hi)) in self.buckets.iter().enumerate() {
+                    codec.transform(b, grads, lo, hi);
+                }
+            }
             agg.aggregate_ctx(grads, &self.buckets, out, ctx)
         };
+        if self.compression.is_active() {
+            self.rewrite_compressed_bytes(&mut info);
+        }
+        if let Some(codec) = &self.set_codec {
+            codec.advance_step();
+        }
 
         // --- simulated-time accounting ---
         for (r, &cs) in compute_s.iter().enumerate() {
@@ -460,6 +549,7 @@ impl PipelinedExecutor {
         let buckets = &self.buckets;
         let tracker = &mut self.tracker;
         let assembly = &mut self.assembly;
+        let codec = self.set_codec.as_ref();
         // Ingest tasks run on pool workers, so their kernels must not
         // fan out again (a nested barrier would deadlock the pool);
         // one lane with the same min_shard_elems keeps the shard plan
@@ -483,6 +573,16 @@ impl PipelinedExecutor {
                     if tracker.arrive(b) {
                         let view = std::mem::replace(&mut assembly[b], GradSet::zeros(0, 0));
                         handles[b] = Some(scope.submit(move || {
+                            let mut view = view;
+                            // Leader-side sketch (flat low-rank): the
+                            // transform runs inside the bucket's task,
+                            // overlapped with later arrivals; the
+                            // transformed rows ride back via the view
+                            // and are mirrored into `grads` at join so
+                            // finalize sees the compressed set.
+                            if let Some(codec) = codec {
+                                codec.transform(b, &mut view, 0, view.d());
+                            }
                             let w = agg.ingest_bucket(b, &view, 0, view.d(), ictx_ref);
                             (w, view)
                         }));
@@ -516,6 +616,12 @@ impl PipelinedExecutor {
             for (b, h) in handles.into_iter().enumerate() {
                 let h = h.unwrap_or_else(|| panic!("bucket {b} never became ready"));
                 let (w, view) = h.join();
+                if codec.is_some() {
+                    let (lo, hi) = buckets.range(b);
+                    for r in 0..n {
+                        grads.row_mut(r)[lo..hi].copy_from_slice(view.row(r));
+                    }
+                }
                 assembly[b] = view;
                 work.push(w);
             }

@@ -31,6 +31,7 @@ use std::thread::JoinHandle;
 
 use crate::collective::NodeMap;
 use crate::comm::{RankPort, StepExchange};
+use crate::compress::{CompressorKind, RankCodec};
 use crate::parallel::ParallelCtx;
 use crate::runtime::{Executable, Runtime};
 use crate::tensor::Buckets;
@@ -39,8 +40,13 @@ use crate::worker::Worker;
 
 /// One leader-to-rank command.
 enum TeamCmd {
-    /// Run one step against these parameters.
-    Step { params: Arc<Vec<f32>> },
+    /// Run one step against these parameters. `step` keys the rank's
+    /// compression PRNG so stochastic rounding is reproducible at any
+    /// thread interleaving.
+    Step { params: Arc<Vec<f32>>, step: u64 },
+    /// Drop compression error-feedback residuals (parameter
+    /// re-broadcast from a checkpoint).
+    Reset,
 }
 
 /// N persistent rank threads plus the leader's exchange half.
@@ -65,6 +71,12 @@ impl RankTeam {
     /// so intra-rank kernel sharding composes with rank threading; the
     /// kernels are bitwise invariant to the pool width, so any `par`
     /// (including [`ParallelCtx::serial`]) yields identical training.
+    ///
+    /// With `compress = Some((kind, seed))` each rank thread owns a
+    /// [`RankCodec`] and ships **encoded** bucket payloads (int8 / fp16 /
+    /// top-k with per-bucket error feedback); the leader's wire edge
+    /// decodes them before aggregation. `None` ships raw columns —
+    /// bitwise-identical to the uncompressed path.
     pub fn spawn(
         rt: &Runtime,
         artifact: &str,
@@ -73,6 +85,7 @@ impl RankTeam {
         local_batch: usize,
         par: &ParallelCtx,
         map: Option<&NodeMap>,
+        compress: Option<(CompressorKind, u64)>,
     ) -> Result<RankTeam> {
         let n = workers.len();
         let (exchange, ports) = match map {
@@ -106,9 +119,13 @@ impl RankTeam {
                 Some(_) => format!("node{}-rank{rank}", port.node()),
                 None => format!("rank-{rank}"),
             };
+            let codec = match compress {
+                Some((kind, seed)) => RankCodec::new(kind, seed, rank, buckets.len()),
+                None => RankCodec::new(CompressorKind::None, 0, rank, buckets.len()),
+            };
             let h = std::thread::Builder::new()
                 .name(name)
-                .spawn(move || rank_main(worker, exe, port, bk, local_batch, rank_par, rx))
+                .spawn(move || rank_main(worker, exe, port, bk, local_batch, rank_par, codec, rx))
                 .with_context(|| format!("spawning rank {rank} thread"))?;
             cmds.push(tx);
             handles.push(h);
@@ -130,14 +147,27 @@ impl RankTeam {
     }
 
     /// Broadcast this step's parameters; every rank thread starts its
-    /// backward immediately. Errors if a rank thread is already gone
+    /// backward immediately. `step` keys the compression PRNG (ignored
+    /// by uncompressed codecs). Errors if a rank thread is already gone
     /// (its death reason surfaced, or will, on the exchange).
-    pub fn begin_step(&self, params: &Arc<Vec<f32>>) -> Result<()> {
+    pub fn begin_step(&self, params: &Arc<Vec<f32>>, step: u64) -> Result<()> {
         for (rank, tx) in self.cmds.iter().enumerate() {
             tx.send(TeamCmd::Step {
                 params: params.clone(),
+                step,
             })
             .map_err(|_| crate::err!("rank {rank}'s thread is gone (exited or panicked)"))?;
+        }
+        Ok(())
+    }
+
+    /// Tell every rank thread to drop its compression error-feedback
+    /// residuals — required when parameters are re-broadcast from a
+    /// checkpoint, since the residual refers to the abandoned iterate.
+    pub fn reset_codecs(&self) -> Result<()> {
+        for (rank, tx) in self.cmds.iter().enumerate() {
+            tx.send(TeamCmd::Reset)
+                .map_err(|_| crate::err!("rank {rank}'s thread is gone (exited or panicked)"))?;
         }
         Ok(())
     }
@@ -157,7 +187,10 @@ impl Drop for RankTeam {
 }
 
 /// Body of one rank thread: wait for a step command, run the backward,
-/// stream buckets live, report completion; repeat until shutdown.
+/// stream buckets live (encoded through the rank's codec — `Raw`
+/// passthrough when compression is off), report completion; repeat
+/// until shutdown.
+#[allow(clippy::too_many_arguments)]
 fn rank_main(
     mut worker: Worker,
     exe: Executable,
@@ -165,24 +198,38 @@ fn rank_main(
     buckets: Buckets,
     local_batch: usize,
     par: ParallelCtx,
+    mut codec: RankCodec,
     rx: Receiver<TeamCmd>,
 ) {
-    while let Ok(TeamCmd::Step { params }) = rx.recv() {
-        let r =
-            worker.compute_grad_buckets(&exe, &params, local_batch, &buckets, &par, &mut |b, cols| {
-                port.submit_bucket(b, cols.to_vec());
-            });
-        match r {
-            Ok(()) => port.done_timed(
-                worker.last_loss as f64,
-                worker.last_compute_s,
-                worker.last_bucket_s().to_vec(),
-            ),
-            Err(e) => {
-                // Explicit failure beats the guard's generic reason.
-                port.report_down(&format!("compute failed: {e}"));
-                return;
+    loop {
+        match rx.recv() {
+            Ok(TeamCmd::Step { params, step }) => {
+                let codec = &mut codec;
+                let r = worker.compute_grad_buckets(
+                    &exe,
+                    &params,
+                    local_batch,
+                    &buckets,
+                    &par,
+                    &mut |b, cols| {
+                        port.submit_payload(b, codec.encode_bucket(step, b, cols));
+                    },
+                );
+                match r {
+                    Ok(()) => port.done_timed(
+                        worker.last_loss as f64,
+                        worker.last_compute_s,
+                        worker.last_bucket_s().to_vec(),
+                    ),
+                    Err(e) => {
+                        // Explicit failure beats the guard's generic reason.
+                        port.report_down(&format!("compute failed: {e}"));
+                        return;
+                    }
+                }
             }
+            Ok(TeamCmd::Reset) => codec.reset(),
+            Err(_) => break,
         }
     }
     port.complete();
@@ -246,9 +293,10 @@ mod tests {
             local_batch,
             &par,
             None,
+            None,
         )
         .unwrap();
-        team.begin_step(&params).unwrap();
+        team.begin_step(&params, 0).unwrap();
         let mut rows = vec![vec![0.0f32; d]; 3];
         let reports = team
             .exchange()
@@ -275,6 +323,7 @@ mod tests {
             exe.spec.local_batch(),
             &ParallelCtx::serial(),
             None,
+            None,
         )
         .unwrap();
         assert_eq!(team.n(), 4);
@@ -300,11 +349,12 @@ mod tests {
             exe.spec.local_batch(),
             &ParallelCtx::serial(),
             Some(&map),
+            None,
         )
         .unwrap();
         assert_eq!(team.exchange().map(), Some(&map));
         let params = Arc::new(exe.spec.load_init(0).unwrap());
-        team.begin_step(&params).unwrap();
+        team.begin_step(&params, 0).unwrap();
         let mut node_done = 0usize;
         let reports = team
             .exchange()
@@ -338,6 +388,7 @@ mod tests {
             exe.spec.local_batch(),
             &ParallelCtx::serial(),
             Some(&NodeMap::even(2, 2)), // 4 ranks vs 3 workers
+            None,
         )
         .unwrap_err();
         assert!(err.to_string().contains("node map"), "{err}");

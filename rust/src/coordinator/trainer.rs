@@ -21,6 +21,7 @@ use std::sync::Arc;
 
 use crate::aggregation::{self, Aggregator, CoeffStages};
 use crate::collective::{CostModel, HierCostModel, SimClock};
+use crate::compress::{CompressScope, RankCodec};
 use crate::config::TrainConfig;
 use crate::coordinator::eval::{EvalOutcome, Evaluator};
 use crate::coordinator::pipeline::PipelinedExecutor;
@@ -131,6 +132,9 @@ pub struct Trainer {
     /// Persistent parallel context: the worker pool is spawned once here
     /// and reused by every aggregation step (no per-step thread spawn).
     par: ParallelCtx,
+    /// Round-robin per-rank compression codecs (empty when no per-rank
+    /// kind applies; threaded mode's codecs live on the rank threads).
+    codecs: Vec<RankCodec>,
     pub params: Vec<f32>,
     start_step: usize,
 }
@@ -168,7 +172,7 @@ impl Trainer {
         // two-level timeline).
         let topo = cfg.topology.build(cfg.workers, cfg.fabric_gbps);
         let hier = HierCostModel::from_topology(&topo);
-        let aggregator = match &hier {
+        let mut aggregator = match &hier {
             Some(h) => aggregation::hierarchical(&cfg.aggregator, h.map.clone(), cfg.workers)
                 .context("unknown aggregator")?,
             None => aggregation::by_name(&cfg.aggregator, cfg.workers)
@@ -186,6 +190,29 @@ impl Trainer {
             Some(cap) => Buckets::fixed(d, cap),
             None => Buckets::single(d),
         };
+        // Compression placement by (kind, scope, topology):
+        //  * per-rank kinds (int8/fp16/topk) encode at the rank source —
+        //    always on flat fabrics (the single NIC carries the rank
+        //    transfers under either scope), only under scope `all` on
+        //    hierarchical ones (`inter` leaves the NVLink hop alone);
+        //  * on hierarchical topologies the leader-level consensus
+        //    transfer is additionally compressed through the
+        //    aggregator's set codec (low-rank sketches always live
+        //    there — the Gram structure needs the assembled set).
+        // Flat low-rank is installed on the executor inside `run()`.
+        let spec = cfg.compression;
+        let per_rank_active =
+            spec.kind.is_per_rank() && (hier.is_none() || spec.scope == CompressScope::All);
+        if hier.is_some() && !spec.kind.is_none() {
+            aggregator.set_compression(spec.kind, cfg.seed, buckets.len());
+        }
+        let codecs = if per_rank_active && !cfg.rank_threads {
+            (0..cfg.workers)
+                .map(|rank| RankCodec::new(spec.kind, cfg.seed, rank, buckets.len()))
+                .collect()
+        } else {
+            Vec::new()
+        };
         let cost = CostModel::from_topology(&topo);
         let par = ParallelCtx::new(cfg.parallel);
         let ranks = if cfg.rank_threads {
@@ -200,6 +227,7 @@ impl Trainer {
                 exe.spec.local_batch(),
                 &par,
                 hier.as_ref().map(|h| &h.map),
+                per_rank_active.then_some((spec.kind, cfg.seed)),
             )?)
         } else {
             Ranks::RoundRobin(workers)
@@ -216,12 +244,16 @@ impl Trainer {
             cost,
             hier,
             par,
+            codecs,
             params,
             start_step: 0,
         })
     }
 
-    /// Resume from a checkpoint (params + step counter).
+    /// Resume from a checkpoint (params + step counter). Compression
+    /// error-feedback residuals are dropped everywhere — the restored
+    /// parameters invalidate errors accumulated against the abandoned
+    /// iterate.
     pub fn restore(&mut self, ck: &crate::coordinator::Checkpoint) -> Result<()> {
         ensure!(
             ck.params.len() == self.params.len(),
@@ -229,6 +261,13 @@ impl Trainer {
         );
         self.params = ck.params.clone();
         self.start_step = ck.step as usize;
+        for codec in &mut self.codecs {
+            codec.reset();
+        }
+        if let Ranks::Threaded(team) = &self.ranks {
+            team.reset_codecs()?;
+        }
+        self.aggregator.reset_compression();
         Ok(())
     }
 
@@ -265,6 +304,7 @@ impl Trainer {
             self.hier.as_ref().map(|h| h.map.clone()),
             self.hier.clone(),
         );
+        exec.set_compression(self.cfg.compression, self.cfg.seed);
         let mut exposed_comm_total = 0.0f64;
         let mut serial_comm_total = 0.0f64;
         let mut exposed_intra_total = 0.0f64;
@@ -283,12 +323,36 @@ impl Trainer {
                 Ranks::RoundRobin(workers) => {
                     let (exe, params, buckets, par) =
                         (&self.exe, &self.params, &self.buckets, &self.par);
+                    let codecs = &mut self.codecs;
                     let mut produce = |rank: usize,
                                        deliver: &mut dyn FnMut(usize, &[f32])|
                      -> Result<(f64, f64)> {
                         let t = Timer::start();
                         let w = &mut workers[rank];
-                        w.compute_grad_buckets(exe, params, local_batch, buckets, par, deliver)?;
+                        if codecs.is_empty() {
+                            w.compute_grad_buckets(
+                                exe, params, local_batch, buckets, par, deliver,
+                            )?;
+                        } else {
+                            // Emulate the wire round-trip the threaded
+                            // path performs: encode at the rank source
+                            // (updating its error-feedback residual),
+                            // decode at the leader edge — so both modes
+                            // aggregate identical bits.
+                            let codec = &mut codecs[rank];
+                            w.compute_grad_buckets(
+                                exe,
+                                params,
+                                local_batch,
+                                buckets,
+                                par,
+                                &mut |b, cols| {
+                                    let decoded =
+                                        codec.encode_bucket(step as u64, b, cols).into_cols();
+                                    deliver(b, &decoded);
+                                },
+                            )?;
+                        }
                         grad_s += t.elapsed_s();
                         Ok((w.last_loss as f64, w.last_compute_s))
                     };
@@ -307,7 +371,7 @@ impl Trainer {
                     // compute concurrently while the leader ingests their
                     // buckets in arrival order.
                     let params = Arc::new(self.params.clone());
-                    team.begin_step(&params)?;
+                    team.begin_step(&params, step as u64)?;
                     let outcome = exec.run_step_exchange(
                         team.exchange(),
                         self.aggregator.as_mut(),

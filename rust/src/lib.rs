@@ -19,5 +19,6 @@ pub mod runtime;
 pub mod worker;
 pub mod collective;
 pub mod comm;
+pub mod compress;
 pub mod tensor;
 pub mod util;

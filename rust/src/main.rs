@@ -28,6 +28,8 @@ USAGE:
                 [--schedule const:LR|cosine:LR:WARM:TOTAL|step:LR:EVERY:G|invsqrt:LR:WARM]
                 [--steps N] [--eval-every N] [--seed S] [--clip C|none]
                 [--bucket-cap N] [--overlap on|off] [--rank-threads on|off]
+                [--compress none|lowrank:<k>|int8|fp16|topk:<ratio>]
+                [--compress-scope all|inter]
                 [--topology flat|hier:<nodes>x<gpus>] [--heterogeneity H]
                 [--inject RANK:SPEC] [--par-threads N] [--par-min-shard-elems N]
                 [--fabric-gbps G] [--save-checkpoint PATH] [--load-checkpoint PATH]
@@ -146,6 +148,13 @@ fn cmd_train(args: &Args) -> Result<()> {
             res.topology,
             res.exposed_intra_comm_s * 1e3,
             res.exposed_inter_comm_s * 1e3,
+        );
+    }
+    if cfg.compression.is_active() {
+        println!(
+            "  compression: {} (scope {})",
+            cfg.compression.kind.tag(),
+            cfg.compression.scope.tag(),
         );
     }
     print!("{}", res.phases.report());

@@ -61,10 +61,10 @@ impl Buckets {
         (0..self.len()).map(|i| self.range(i))
     }
 
-    /// Payload bytes of bucket `i` (f32 columns).
+    /// Payload bytes of bucket `i` (full-precision f32 columns).
     pub fn bytes(&self, i: usize) -> usize {
         let (lo, hi) = self.range(i);
-        (hi - lo) * 4
+        crate::collective::cost_model::f32_wire_bytes(hi - lo)
     }
 }
 

@@ -8,9 +8,10 @@
 //! `weighted_sum_range_into` outputs are per-column independent, so they
 //! must additionally be bitwise-stable across *different shard plans*.
 
-use adacons::aggregation::{self, Aggregator};
+use adacons::aggregation::{self, Aggregator, CommScope};
 use adacons::collective::{CostModel, HierCostModel, NodeMap, SimClock, Topology};
 use adacons::comm::StepExchange;
+use adacons::compress::{CompressScope, CompressionSpec, CompressorKind, RankCodec};
 use adacons::coordinator::pipeline::PipelinedExecutor;
 use adacons::parallel::{ParallelCtx, ParallelPolicy};
 use adacons::tensor::{grad_set::CHUNK, Buckets, GradSet};
@@ -754,6 +755,435 @@ fn hier_timeline_exposes_less_inter_comm_than_flat_single_nic() {
         hier_off.serial_comm_s
     );
     assert!(hier_on.exposed_comm_s < hier_off.exposed_comm_s);
+}
+
+/// Trainer-shaped compressed step. Per-rank codecs encode at the rank
+/// source and the leader edge decodes (the wire round-trip) for the
+/// per-rank kinds when flat or hier with scope `all`; the executor owns
+/// the leader-side sketch for flat lowrank; the hierarchical aggregator
+/// owns the leader-set codec whenever a node map is present. Mirrors the
+/// placement logic in `Trainer::new` exactly.
+#[allow(clippy::too_many_arguments)]
+fn compressed_step(
+    name: &str,
+    rows: &[Vec<f32>],
+    buckets: &Buckets,
+    threads: usize,
+    overlap: bool,
+    compute_s: &[f64],
+    spec: CompressionSpec,
+    seed: u64,
+    map: Option<&NodeMap>,
+    hier_cost: Option<HierCostModel>,
+    topo: &Topology,
+) -> (Vec<f32>, adacons::coordinator::pipeline::StepOutcome) {
+    let n = rows.len();
+    let d = buckets.total();
+    let ctx = ctx(threads, CHUNK);
+    let mut agg = match map {
+        Some(m) => {
+            let mut a = aggregation::hierarchical(name, m.clone(), n).unwrap();
+            if !spec.kind.is_none() {
+                a.set_compression(spec.kind, seed, buckets.len());
+            }
+            a
+        }
+        None => aggregation::by_name(name, n).unwrap(),
+    };
+    let mut exec = match map {
+        Some(m) => PipelinedExecutor::with_topology(
+            n,
+            buckets.clone(),
+            overlap,
+            Some(m.clone()),
+            hier_cost,
+        ),
+        None => PipelinedExecutor::new(n, buckets.clone(), overlap),
+    };
+    exec.set_compression(spec, seed);
+    let per_rank =
+        spec.kind.is_per_rank() && (map.is_none() || spec.scope == CompressScope::All);
+    let mut codecs: Vec<RankCodec> = if per_rank {
+        (0..n)
+            .map(|r| RankCodec::new(spec.kind, seed, r, buckets.len()))
+            .collect()
+    } else {
+        Vec::new()
+    };
+    let mut grads = GradSet::zeros(n, d);
+    let mut out = vec![0.0f32; d];
+    let mut clock = SimClock::new(n);
+    let cost = CostModel::from_topology(topo);
+    let mut produce = |rank: usize,
+                       deliver: &mut dyn FnMut(usize, &[f32])|
+     -> Result<(f64, f64)> {
+        for (b, (lo, hi)) in buckets.iter().enumerate() {
+            if codecs.is_empty() {
+                deliver(b, &rows[rank][lo..hi]);
+            } else {
+                let cols = codecs[rank]
+                    .encode_bucket(0, b, &rows[rank][lo..hi])
+                    .into_cols();
+                deliver(b, &cols);
+            }
+        }
+        Ok((0.0, compute_s[rank]))
+    };
+    let outcome = exec
+        .run_step(
+            &mut produce,
+            agg.as_mut(),
+            &mut grads,
+            &mut out,
+            &ctx,
+            &mut clock,
+            &cost,
+        )
+        .unwrap();
+    (out, outcome)
+}
+
+/// Exchange-fed compressed step (flat, per-rank kinds): each rank thread
+/// owns its codec and ships the **encoded wire payload** through
+/// `submit_payload`; the leader decodes at the ingest edge. Submission
+/// order is rotated per rank and round.
+fn compressed_exchange_step(
+    rows: &[Vec<f32>],
+    buckets: &Buckets,
+    threads: usize,
+    overlap: bool,
+    spec: CompressionSpec,
+    seed: u64,
+    round: usize,
+) -> Vec<f32> {
+    let n = rows.len();
+    let d = buckets.total();
+    let (exchange, ports) = StepExchange::new(n);
+    let mut handles = Vec::new();
+    for port in ports {
+        let rank = port.rank();
+        let row = rows[rank].clone();
+        let bk = buckets.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut codec = RankCodec::new(spec.kind, seed, rank, bk.len());
+            let nb = bk.len();
+            for i in 0..nb {
+                let b = (i + rank + round) % nb;
+                let (lo, hi) = bk.range(b);
+                port.submit_payload(b, codec.encode_bucket(0, b, &row[lo..hi]));
+            }
+            port.done(0.0, 0.01);
+            port.complete();
+        }));
+    }
+    let ctx = ctx(threads, CHUNK);
+    let mut agg = aggregation::by_name("adacons", n).unwrap();
+    let mut exec = PipelinedExecutor::new(n, buckets.clone(), overlap);
+    exec.set_compression(spec, seed);
+    let mut grads = GradSet::zeros(n, d);
+    let mut out = vec![0.0f32; d];
+    let mut clock = SimClock::new(n);
+    let cost = CostModel::from_topology(&Topology::ring_gbps(n, 100.0));
+    exec.run_step_exchange(
+        &exchange,
+        agg.as_mut(),
+        &mut grads,
+        &mut out,
+        &ctx,
+        &mut clock,
+        &cost,
+    )
+    .unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+    out
+}
+
+#[test]
+fn compress_none_bitwise_identical_for_five_aggregators_flat_and_hier() {
+    // Acceptance gate: `--compress none` must be a bitwise no-op for all
+    // five aggregator families, flat and hierarchical, overlap on/off,
+    // across pool thread counts — the spec routes through `Payload::Raw`
+    // and must never touch the numbers.
+    let (n, d) = (6usize, 2 * CHUNK + 311);
+    let gs = random_set(n, d, 0xC0DE);
+    let rows: Vec<Vec<f32>> = (0..n).map(|i| gs.row(i).to_vec()).collect();
+    let buckets = Buckets::fixed(d, CHUNK / 2 + 177);
+    let compute = vec![0.01; n];
+    let none = CompressionSpec::default();
+    let topo = Topology::ring_gbps(n, 100.0);
+    let map = NodeMap::even(2, 3);
+    for name in FIVE {
+        for t in thread_grid() {
+            for overlap in [true, false] {
+                let (flat_base, _, _) =
+                    pipelined_step(name, &rows, &buckets, t, CHUNK, overlap, &compute);
+                let (flat_got, _) = compressed_step(
+                    name, &rows, &buckets, t, overlap, &compute, none, 9, None, None, &topo,
+                );
+                assert_eq!(flat_base, flat_got, "{name}: flat t={t} overlap={overlap}");
+                let (hier_base, _, _) = hier_pipelined_step(
+                    name, &rows, &buckets, t, CHUNK, overlap, &compute, &map, None, &topo,
+                );
+                let (hier_got, _) = compressed_step(
+                    name, &rows, &buckets, t, overlap, &compute, none, 9, Some(&map), None,
+                    &topo,
+                );
+                assert_eq!(hier_base, hier_got, "{name}: hier t={t} overlap={overlap}");
+            }
+        }
+    }
+}
+
+#[test]
+fn compress_per_rank_codecs_bitwise_across_threads_overlap_and_aggregators() {
+    // For a fixed config the encode→decode round-trip is deterministic
+    // (the stochastic rounding is keyed on (step, rank, bucket), never on
+    // arrival order), so the compressed step must be bitwise-stable
+    // across pool thread counts, overlap modes, and aggregators see the
+    // same decoded bits.
+    let (n, d) = (5usize, 2 * CHUNK + 311);
+    let gs = random_set(n, d, 0x517E);
+    let rows: Vec<Vec<f32>> = (0..n).map(|i| gs.row(i).to_vec()).collect();
+    let buckets = Buckets::fixed(d, CHUNK / 2 + 133);
+    let compute = vec![0.01; n];
+    let topo = Topology::ring_gbps(n, 100.0);
+    for kind_s in ["int8", "fp16", "topk:0.25"] {
+        let spec = CompressionSpec {
+            kind: CompressorKind::parse(kind_s).unwrap(),
+            scope: CompressScope::All,
+        };
+        for name in FIVE {
+            let (base, _) = compressed_step(
+                name, &rows, &buckets, 1, true, &compute, spec, 17, None, None, &topo,
+            );
+            for t in thread_grid() {
+                for overlap in [true, false] {
+                    let (got, _) = compressed_step(
+                        name, &rows, &buckets, t, overlap, &compute, spec, 17, None, None,
+                        &topo,
+                    );
+                    assert_eq!(base, got, "{kind_s}/{name}: t={t} overlap={overlap}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn compress_threaded_wire_payloads_bitwise_equal_roundrobin() {
+    // Rank threads shipping *encoded* payloads through the exchange (the
+    // real wire path: encode at the rank source, decode at the leader
+    // edge, arbitrary arrival interleavings) must reproduce the
+    // round-robin producer's exact bits.
+    let (n, d) = (5usize, CHUNK + 211);
+    let gs = random_set(n, d, 0x77E);
+    let rows: Vec<Vec<f32>> = (0..n).map(|i| gs.row(i).to_vec()).collect();
+    let buckets = Buckets::fixed(d, CHUNK / 4 + 57);
+    let compute = vec![0.01; n];
+    let topo = Topology::ring_gbps(n, 100.0);
+    for kind_s in ["int8", "fp16", "topk:0.25"] {
+        let spec = CompressionSpec {
+            kind: CompressorKind::parse(kind_s).unwrap(),
+            scope: CompressScope::All,
+        };
+        let (base, _) = compressed_step(
+            "adacons", &rows, &buckets, 2, true, &compute, spec, 23, None, None, &topo,
+        );
+        for t in thread_grid() {
+            for round in 0..8 {
+                let got =
+                    compressed_exchange_step(&rows, &buckets, t, true, spec, 23, round);
+                assert_eq!(base, got, "{kind_s}: t={t} round={round}");
+            }
+        }
+    }
+}
+
+#[test]
+fn compress_lowrank_leader_sketch_bitwise_across_threads_and_overlap() {
+    // Flat lowrank is a leader-side set transform (sequential f64 power
+    // iteration per bucket): overlap on == off == any pool thread count,
+    // bit for bit.
+    let (n, d) = (5usize, 2 * CHUNK + 311);
+    let gs = random_set(n, d, 0x10E);
+    let rows: Vec<Vec<f32>> = (0..n).map(|i| gs.row(i).to_vec()).collect();
+    let buckets = Buckets::fixed(d, CHUNK / 2 + 177);
+    let compute = vec![0.01; n];
+    let topo = Topology::ring_gbps(n, 100.0);
+    let spec = CompressionSpec {
+        kind: CompressorKind::parse("lowrank:2").unwrap(),
+        scope: CompressScope::All,
+    };
+    let (base, _) = compressed_step(
+        "adacons", &rows, &buckets, 1, false, &compute, spec, 31, None, None, &topo,
+    );
+    assert!(base.iter().all(|v| v.is_finite()));
+    for t in thread_grid() {
+        for overlap in [true, false] {
+            let (got, _) = compressed_step(
+                "adacons", &rows, &buckets, t, overlap, &compute, spec, 31, None, None, &topo,
+            );
+            assert_eq!(base, got, "lowrank: t={t} overlap={overlap}");
+        }
+    }
+}
+
+#[test]
+fn compress_hier_grouped_executor_equals_inline_oracle() {
+    // Hierarchical compression lives inside the aggregator (leader-set
+    // codec), so the grouped executor must reproduce the inline
+    // `aggregate_ctx` path bit for bit — for every compressor kind, on
+    // even and uneven maps, overlap on/off, any pool thread count.
+    let (n, d) = (6usize, CHUNK + 211);
+    let gs = random_set(n, d, 0xA11);
+    let rows: Vec<Vec<f32>> = (0..n).map(|i| gs.row(i).to_vec()).collect();
+    let buckets = Buckets::fixed(d, CHUNK / 4 + 57);
+    let compute = vec![0.01; n];
+    let topo = Topology::ring_gbps(n, 100.0);
+    for map in [NodeMap::even(2, 3), NodeMap::from_sizes(&[3, 2, 1])] {
+        for kind_s in ["int8", "fp16", "topk:0.25", "lowrank:2"] {
+            let kind = CompressorKind::parse(kind_s).unwrap();
+            let spec = CompressionSpec {
+                kind,
+                scope: CompressScope::Inter,
+            };
+            let mut oracle = vec![0.0f32; d];
+            let mut inline = aggregation::hierarchical("adacons", map.clone(), n).unwrap();
+            inline.set_compression(kind, 41, buckets.len());
+            inline.aggregate_ctx(&gs, &buckets, &mut oracle, &ctx(1, CHUNK));
+            for t in thread_grid() {
+                for overlap in [true, false] {
+                    let (got, _) = compressed_step(
+                        "adacons", &rows, &buckets, t, overlap, &compute, spec, 41,
+                        Some(&map), None, &topo,
+                    );
+                    assert_eq!(
+                        got, oracle,
+                        "{kind_s}: map {map:?} t={t} overlap={overlap}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn compress_hier_scope_all_composes_rank_codecs_with_leader_codec() {
+    // hier + scope `all` applies BOTH the per-rank wire codec and the
+    // leader-set codec. Oracle: decode(encode(rows)) through fresh rank
+    // codecs, then the inline hierarchical path with the set codec.
+    let (n, d) = (6usize, CHUNK + 123);
+    let gs = random_set(n, d, 0xA22);
+    let rows: Vec<Vec<f32>> = (0..n).map(|i| gs.row(i).to_vec()).collect();
+    let buckets = Buckets::fixed(d, 300);
+    let compute = vec![0.01; n];
+    let topo = Topology::ring_gbps(n, 100.0);
+    let map = NodeMap::even(2, 3);
+    let kind = CompressorKind::parse("int8").unwrap();
+    let spec = CompressionSpec {
+        kind,
+        scope: CompressScope::All,
+    };
+    // Oracle: materialize the decoded rank rows, then run inline.
+    let mut decoded = GradSet::zeros(n, d);
+    for rank in 0..n {
+        let mut codec = RankCodec::new(kind, 43, rank, buckets.len());
+        for (b, (lo, hi)) in buckets.iter().enumerate() {
+            let cols = codec.encode_bucket(0, b, &rows[rank][lo..hi]).into_cols();
+            decoded.row_mut(rank)[lo..hi].copy_from_slice(&cols);
+        }
+    }
+    let mut oracle = vec![0.0f32; d];
+    let mut inline = aggregation::hierarchical("adacons", map.clone(), n).unwrap();
+    inline.set_compression(kind, 43, buckets.len());
+    inline.aggregate_ctx(&decoded, &buckets, &mut oracle, &ctx(1, CHUNK));
+    for t in thread_grid() {
+        let (got, _) = compressed_step(
+            "adacons", &rows, &buckets, t, true, &compute, spec, 43, Some(&map), None, &topo,
+        );
+        assert_eq!(got, oracle, "t={t}");
+    }
+}
+
+#[test]
+fn compress_int8_inter_cuts_exposed_inter_comm_on_paper_testbed() {
+    // Acceptance gate: `--compress int8 --compress-scope inter` on the
+    // paper's 8x4 testbed must report strictly lower exposed inter-node
+    // communication than the uncompressed hierarchical run — int8 cuts
+    // every bucket's inter-node transfer to (w + 4) bytes from 4w — while
+    // the aggregated output stays close to the uncompressed one.
+    let topo = Topology::paper_testbed();
+    let n = topo.n_ranks();
+    let d = 8 * CHUNK;
+    let gs = random_set(n, d, 0xFA82);
+    let rows: Vec<Vec<f32>> = (0..n).map(|i| gs.row(i).to_vec()).collect();
+    let buckets = Buckets::fixed(d, CHUNK);
+    let compute = vec![5e-4; n];
+    let map = HierCostModel::from_topology(&topo).unwrap().map.clone();
+    let run = |spec: CompressionSpec| {
+        let hc = HierCostModel::from_topology(&topo).unwrap();
+        compressed_step(
+            "adacons", &rows, &buckets, 2, false, &compute, spec, 47, Some(&map), Some(hc),
+            &topo,
+        )
+    };
+    let (base_out, base) = run(CompressionSpec::default());
+    let (int8_out, int8) = run(CompressionSpec {
+        kind: CompressorKind::parse("int8").unwrap(),
+        scope: CompressScope::Inter,
+    });
+    assert!(base.exposed_inter_comm_s > 0.0);
+    assert!(
+        int8.exposed_inter_comm_s < base.exposed_inter_comm_s,
+        "int8 inter {} !< uncompressed {}",
+        int8.exposed_inter_comm_s,
+        base.exposed_inter_comm_s
+    );
+    // The reported wire bytes shrink too: every rewritten inter op
+    // carries (w + 4) bytes instead of 4w.
+    let inter_bytes = |ops: &adacons::coordinator::pipeline::StepOutcome| -> usize {
+        ops.info
+            .comm
+            .iter()
+            .filter(|op| op.scope == CommScope::Inter && op.bucket.is_some())
+            .map(|op| op.bytes)
+            .sum()
+    };
+    assert!(inter_bytes(&int8) < inter_bytes(&base));
+    // Intra transfers are untouched at scope `inter`.
+    assert!((int8.exposed_intra_comm_s - base.exposed_intra_comm_s).abs() < 1e-15);
+    // Sanity on the numbers: finite and near the uncompressed answer
+    // (the loss-tolerance argument lives in EXPERIMENTS.md §Compression).
+    assert!(int8_out.iter().all(|v| v.is_finite()));
+    let max_diff = int8_out
+        .iter()
+        .zip(base_out.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 0.5, "int8/inter drifted {max_diff} from uncompressed");
+}
+
+#[test]
+fn compress_error_feedback_reset_matches_fresh_codec_bitwise() {
+    // The trainer resets every codec on param re-broadcast (checkpoint
+    // restore): after `reset`, a codec must be bitwise the fresh codec.
+    for kind_s in ["int8", "fp16", "topk:0.25"] {
+        let kind = CompressorKind::parse(kind_s).unwrap();
+        let cols: Vec<f32> = (0..300)
+            .map(|i| ((i * 37 % 101) as f32 - 50.0) / 17.0)
+            .collect();
+        let mut used = RankCodec::new(kind, 9, 0, 2);
+        for step in 0..3 {
+            let _ = used.encode_bucket(step, 0, &cols);
+        }
+        used.reset();
+        let mut fresh = RankCodec::new(kind, 9, 0, 2);
+        let a = used.encode_bucket(0, 0, &cols);
+        let b = fresh.encode_bucket(0, 0, &cols);
+        assert_eq!(a, b, "{kind_s}: reset codec != fresh codec");
+    }
 }
 
 #[test]

@@ -39,6 +39,13 @@ for tt in 1 2 4; do
     # must hold under every harness parallelism, since pool shard
     # scheduling is the one thing these kernels are allowed to vary.
     cargo test -q --test interp_kernel_equiv -- --test-threads "$tt"
+    # Compressed-collective equivalence: `--compress none` must stay
+    # bitwise-identical to the uncompressed path and the encode/decode
+    # round-trip must be deterministic under every harness parallelism
+    # (the error-feedback residual is per-(rank, bucket) state touched
+    # from pool threads).
+    cargo test -q --test parallel_equivalence compress -- --test-threads "$tt"
+    cargo test -q --lib compress:: -- --test-threads "$tt"
     cargo test -q --lib comm:: -- --test-threads "$tt"
     cargo test -q --lib coordinator:: -- --test-threads "$tt"
   done
@@ -61,10 +68,15 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     # hier_step / matmul kernel rows) regresses >1.5x, vs the committed
     # baseline (both sides are smoke-grid runs; the step gate is looser —
     # rationale in EXPERIMENTS.md §Perf). Groups absent from an older
-    # baseline (dlrm_lite, matmul kernels, hier_step) skip cleanly.
+    # baseline (dlrm_lite, matmul kernels, hier_step, compress_step)
+    # skip WITH AN EXPLICIT NOTICE; a group the baseline covers but the
+    # current run lacks hard-fails (lost coverage). --history lets the
+    # accumulated archive tighten the step gate below 1.5x once >=3
+    # runs exist on this runner class.
     cargo run --release --bin bench_aggregation -- \
       --compare bench_history/baseline.json BENCH_aggregation.json \
-      --max-regress 1.3 --max-regress-step 1.5
+      --max-regress 1.3 --max-regress-step 1.5 \
+      --history bench_history
   else
     cp BENCH_aggregation.json bench_history/baseline.json
     # Medians are host-specific: only commit a baseline produced on the
