@@ -279,6 +279,16 @@ impl Aggregator for AdaCons {
     fn reset(&mut self) {
         self.ema_sorted.clear();
     }
+
+    fn export_state(&self) -> Vec<Vec<f64>> {
+        self.ema_sorted.clone()
+    }
+
+    fn import_state(&mut self, state: &[Vec<f64>]) {
+        if !state.is_empty() {
+            self.ema_sorted = state.to_vec();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -457,6 +467,28 @@ mod tests {
         let info = agg.aggregate(&gs, &Buckets::single(32), &mut out);
         // Uniform fallback weights, no panic.
         assert_eq!(info.gammas.unwrap(), vec![1.0 / 3.0; 3]);
+    }
+
+    #[test]
+    fn state_round_trip_restores_momentum_bitwise() {
+        // Export mid-run, import into a fresh aggregator: the next step's
+        // weights must be bitwise-equal to the uninterrupted run's —
+        // without the transfer the fresh EMA reseeds and diverges.
+        let sqn = vec![1.0; 4];
+        let mut a = AdaCons::new(AdaConsConfig::full());
+        a.weights_from_stats(0, &[1.0, 2.0, 3.0, 4.0], &sqn);
+        a.weights_from_stats(0, &[2.0, 1.0, 4.0, 3.0], &sqn);
+        let state = Aggregator::export_state(&a);
+        assert!(!state.is_empty());
+        let mut b = AdaCons::new(AdaConsConfig::full());
+        Aggregator::import_state(&mut b, &state);
+        let (ga, _) = a.weights_from_stats(0, &[5.0, 6.0, 7.0, 8.0], &sqn);
+        let (gb, _) = b.weights_from_stats(0, &[5.0, 6.0, 7.0, 8.0], &sqn);
+        assert_eq!(ga, gb);
+        // Empty state (v1 checkpoint) leaves fresh state untouched.
+        let mut c = AdaCons::new(AdaConsConfig::full());
+        Aggregator::import_state(&mut c, &[]);
+        assert!(Aggregator::export_state(&c).is_empty());
     }
 
     #[test]

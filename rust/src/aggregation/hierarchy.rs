@@ -268,6 +268,16 @@ impl Aggregator for Hierarchical {
         }
         self.base.reset_compression();
     }
+
+    fn export_state(&self) -> Vec<Vec<f64>> {
+        // The wrapper itself is stateless (the codec's EF residuals are
+        // handled separately); only the base scheme's momentum travels.
+        self.base.export_state()
+    }
+
+    fn import_state(&mut self, state: &[Vec<f64>]) {
+        self.base.import_state(state);
+    }
 }
 
 #[cfg(test)]

@@ -224,6 +224,20 @@ pub trait Aggregator: BucketedAggregator {
 
     /// Drop error-feedback residual state (param re-broadcast / restore).
     fn reset_compression(&mut self) {}
+
+    /// Serializable step-dependent state for checkpointing, as flat f64
+    /// vectors (e.g. AdaCons' per-bucket sorted-EMA momentum). Stateless
+    /// schemes export an empty list.
+    fn export_state(&self) -> Vec<Vec<f64>> {
+        Vec::new()
+    }
+
+    /// Restore state exported by [`Aggregator::export_state`]. An empty
+    /// list (v1 checkpoints, stateless schemes) leaves fresh state — the
+    /// pre-versioned restore behaviour.
+    fn import_state(&mut self, state: &[Vec<f64>]) {
+        let _ = state;
+    }
 }
 
 /// One `CommOp` per bucket: `kind` with the bucket's payload size, ready

@@ -61,6 +61,13 @@ pub struct SweepConfig {
     /// and int8 inter-node-only on a `hier:2x4` split — so codec cost on
     /// the hot path is tracked per compressor x scope.
     pub compress_step: bool,
+    /// Elastic degraded-step cases (`degraded_step`): the elastic
+    /// exchange at full strength (the 8-of-8 anchor), under a 6-of-8
+    /// straggler cutoff (two injected stragglers dropped and the
+    /// consensus renormalized every step), and in a rejoin storm (one
+    /// rank dies and is respawned every step) — so the survivor-ingest
+    /// and respawn costs are tracked against the full-barrier anchor.
+    pub degraded_step: bool,
 }
 
 impl SweepConfig {
@@ -87,6 +94,7 @@ impl SweepConfig {
             interp_step: true,
             hier_step: true,
             compress_step: true,
+            degraded_step: true,
         }
     }
 
@@ -104,6 +112,7 @@ impl SweepConfig {
             interp_step: true,
             hier_step: true,
             compress_step: true,
+            degraded_step: true,
         }
     }
 }
@@ -445,6 +454,10 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Json> {
     if cfg.compress_step {
         println!("-- compressed collective step (error-feedback codecs, adacons) --");
         compress_step_cases(cfg.budget_s, &threads, cfg.min_shard_elems, &mut baseline, &mut cases)?;
+    }
+    if cfg.degraded_step {
+        println!("-- elastic degraded step (cutoff / rejoin storm, adacons) --");
+        degraded_step_cases(cfg.budget_s, &threads, cfg.min_shard_elems, &mut baseline, &mut cases)?;
     }
     Ok(obj(vec![
         ("bench", s("aggregation")),
@@ -839,6 +852,149 @@ fn compress_step_cases(
     Ok(())
 }
 
+/// The `degraded_step` dimension: the elastic (fault-tolerant) step on
+/// real rank threads, N = 8, mlp artifact, overlap off. Three variants:
+///
+/// * `full` — 8-of-8 quorum, nothing injected: the elastic exchange at
+///   full strength, the anchor the other two are read against;
+/// * `cutoff` — 6-of-8 quorum with two injected stragglers (50x
+///   reported compute) dropped from the consensus every step, so the
+///   survivor-set rebuild + renormalization cost is on the clock;
+/// * `rejoin` — 7-of-8 quorum with one rank whose compute dies every
+///   step, measuring the death-detection + fresh-worker respawn storm.
+fn degraded_step_cases(
+    budget_s: f64,
+    threads: &[usize],
+    min_shard_elems: usize,
+    baseline: &mut BTreeMap<(String, usize, usize), f64>,
+    cases: &mut Vec<Json>,
+) -> Result<()> {
+    use crate::coordinator::pipeline::ElasticPolicy;
+    use crate::coordinator::team::RankTeam;
+    use crate::data::GradInjector;
+    use crate::runtime::{Backend, Runtime};
+    use crate::worker::Worker;
+
+    const SEED: u64 = 42;
+    let n = 8usize;
+    let artifact = "mlp_cls_b32";
+    let rt = Runtime::create_with(
+        std::env::temp_dir().join("adacons_bench_interp"),
+        Backend::Interp,
+    )?;
+    let exe = rt.load(artifact)?;
+    let d = exe.spec.param_dim;
+    let local_batch = exe.spec.local_batch();
+    let params = exe.spec.load_init(0)?;
+    let buckets = Buckets::fixed(d, d.div_ceil(8).max(1));
+    let cost = CostModel::from_topology(&Topology::ring_gbps(n, 100.0));
+    let mk_worker = |rank: usize, injector: GradInjector| -> Result<Worker> {
+        let gen = crate::data::for_model(&exe.spec.model, SEED, rank as u64, 0.0, &exe.spec.meta)
+            .context("no data generator for the bench artifact")?;
+        Ok(Worker::new(rank, gen, injector, SEED))
+    };
+    // (variant, quorum k, per-rank injectors)
+    let straggle = GradInjector::DelayProb {
+        p: 1.0,
+        factor: 50.0,
+    };
+    let variants: Vec<(&str, usize, Vec<(usize, GradInjector)>)> = vec![
+        ("full", 8, Vec::new()),
+        ("cutoff", 6, vec![(6, straggle.clone()), (7, straggle)]),
+        ("rejoin", 7, vec![(7, GradInjector::PanicProb(1.0))]),
+    ];
+    for &t in threads {
+        let ctx = ParallelCtx::new(ParallelPolicy {
+            threads: t,
+            min_shard_elems,
+        });
+        for (variant, k, injectors) in &variants {
+            let (variant, k) = (*variant, *k);
+            let injector_for = |rank: usize| -> GradInjector {
+                injectors
+                    .iter()
+                    .find(|(r, _)| *r == rank)
+                    .map(|(_, i)| i.clone())
+                    .unwrap_or(GradInjector::None)
+            };
+            let workers: Vec<Worker> = (0..n)
+                .map(|rank| mk_worker(rank, injector_for(rank)))
+                .collect::<Result<_>>()?;
+            let mut team = RankTeam::spawn_elastic(
+                &rt,
+                artifact,
+                workers,
+                &buckets,
+                local_batch,
+                &ctx,
+                None,
+                None,
+            )?;
+            let policy = ElasticPolicy {
+                k,
+                grace_s: 0.0,
+                krum_f: 0,
+            };
+            let mut agg = aggregation::by_name("adacons", n).context("adacons not in registry")?;
+            let mut exec = PipelinedExecutor::new(n, buckets.clone(), false);
+            let mut grads = GradSet::zeros(n, d);
+            let mut out = vec![0.0f32; d];
+            let mut clock = SimClock::new(n);
+            let shared = std::sync::Arc::new(params.clone());
+            let label = format!("degraded step   {artifact} N={n} t={t} v={variant}");
+            let r = bench_auto(&label, budget_s, || {
+                team.begin_step(&shared, 0).expect("rank team alive");
+                let outcome = exec
+                    .run_step_elastic(
+                        team.exchange(),
+                        &policy,
+                        agg.as_mut(),
+                        "adacons",
+                        &mut grads,
+                        &mut out,
+                        &ctx,
+                        &mut clock,
+                        &cost,
+                    )
+                    .expect("elastic bench step");
+                // The trainer's rejoin path: every dead rank comes back
+                // as a fresh fast-forwarded worker before the next step.
+                for &rank in &outcome.dead_ranks {
+                    let w = mk_worker(rank, injector_for(rank)).expect("bench worker");
+                    team.respawn(&rt, w).expect("elastic respawn");
+                }
+            });
+            let key = (format!("degraded_step_{variant}"), n, d);
+            if t == threads[0] {
+                baseline.insert(key.clone(), r.mean_s);
+            }
+            let speedup = baseline.get(&key).map(|&b| b / r.mean_s);
+            println!(
+                "{}{}",
+                r.report_line(),
+                speedup
+                    .map(|x| format!("  [{x:.2}x vs 1t]"))
+                    .unwrap_or_default()
+            );
+            cases.push(obj(vec![
+                ("op", s("degraded_step")),
+                ("variant", s(variant)),
+                ("quorum", s(&format!("{k}-of-{n}"))),
+                ("workers", num(n as f64)),
+                ("d", num(d as f64)),
+                ("threads", num(t as f64)),
+                ("buckets", num(buckets.len() as f64)),
+                ("iters", num(r.iters as f64)),
+                ("mean_s", num(r.mean_s)),
+                ("p50_s", num(r.p50_s)),
+                ("p99_s", num(r.p99_s)),
+                ("speedup_vs_1t", speedup.map(num).unwrap_or(Json::Null)),
+            ]));
+        }
+    }
+    Ok(())
+}
+
 /// `--compress-sweep`: the ratio-vs-loss table from EXPERIMENTS.md
 /// §Compression. Trains the default linreg artifact for `steps` steps
 /// under each compressor (scope `all`, flat fabric) and prints the wire
@@ -1000,7 +1156,10 @@ fn gate_one(
 ///   in;
 /// * the `compress_step` compressed-collective medians (one group per
 ///   compressor x scope) at `max_step_ratio` — codec cost on the hot
-///   path is first-class, not only visible through the train step.
+///   path is first-class, not only visible through the train step;
+/// * the `degraded_step` elastic medians (full-strength anchor, 6-of-8
+///   cutoff, rejoin storm) at `max_step_ratio` — the fault-tolerant
+///   path must not quietly tax the healthy one.
 ///
 /// A group the **baseline** predates is skipped with an explicit notice
 /// (and counted in the summary line) — never silently passed. A group
@@ -1043,6 +1202,9 @@ pub fn compare_files(
         ("compress_step", &[("compress", "topk:0.01"), ("scope", "all")]),
         ("compress_step", &[("compress", "lowrank:2"), ("scope", "all")]),
         ("compress_step", &[("compress", "int8"), ("scope", "inter")]),
+        ("degraded_step", &[("variant", "full")]),
+        ("degraded_step", &[("variant", "cutoff")]),
+        ("degraded_step", &[("variant", "rejoin")]),
     ];
     let step_gate = match history {
         Some(dir) => tightened_step_gate(dir, max_step_ratio, step_groups),
@@ -1199,6 +1361,7 @@ mod tests {
             interp_step: false,
             hier_step: false,
             compress_step: false,
+            degraded_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -1232,6 +1395,7 @@ mod tests {
             interp_step: false,
             hier_step: false,
             compress_step: false,
+            degraded_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -1252,6 +1416,7 @@ mod tests {
             interp_step: false,
             hier_step: false,
             compress_step: false,
+            degraded_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -1278,6 +1443,7 @@ mod tests {
             interp_step: true,
             hier_step: false,
             compress_step: false,
+            degraded_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -1335,6 +1501,7 @@ mod tests {
             interp_step: false,
             hier_step: true,
             compress_step: false,
+            degraded_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -1369,6 +1536,7 @@ mod tests {
             interp_step: false,
             hier_step: false,
             compress_step: true,
+            degraded_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -1398,6 +1566,47 @@ mod tests {
         );
         for c in cases {
             if c.get("op").as_str() == Some("compress_step") {
+                assert!(c.get("mean_s").as_f64().unwrap() > 0.0);
+                assert!(!c.get("speedup_vs_1t").is_null());
+            }
+        }
+    }
+
+    #[test]
+    fn degraded_step_dimension_emits_tagged_cases() {
+        let cfg = SweepConfig {
+            budget_s: 0.001,
+            threads: vec![1],
+            workers: vec![2],
+            dims: vec![8_192],
+            min_shard_elems: 2048,
+            max_case_bytes: 1 << 30,
+            overlap_modes: vec![],
+            interp_step: false,
+            hier_step: false,
+            compress_step: false,
+            degraded_step: true,
+        };
+        let doc = run_sweep(&cfg).unwrap();
+        let cases = doc.get("cases").as_arr().unwrap();
+        // 4 kernel ops + 3 elastic variants.
+        assert_eq!(cases.len(), 7);
+        let tagged: Vec<(&str, &str)> = cases
+            .iter()
+            .filter(|c| c.get("op").as_str() == Some("degraded_step"))
+            .map(|c| {
+                (
+                    c.get("variant").as_str().unwrap(),
+                    c.get("quorum").as_str().unwrap(),
+                )
+            })
+            .collect();
+        assert_eq!(
+            tagged,
+            vec![("full", "8-of-8"), ("cutoff", "6-of-8"), ("rejoin", "7-of-8")]
+        );
+        for c in cases {
+            if c.get("op").as_str() == Some("degraded_step") {
                 assert!(c.get("mean_s").as_f64().unwrap() > 0.0);
                 assert!(!c.get("speedup_vs_1t").is_null());
             }

@@ -7,6 +7,7 @@
 //!   cargo run --release --bin bench_aggregation -- --interp-step off  # skip backend step cases
 //!   cargo run --release --bin bench_aggregation -- --hier-step off    # skip hier topology cases
 //!   cargo run --release --bin bench_aggregation -- --compress-step off # skip compressed-step cases
+//!   cargo run --release --bin bench_aggregation -- --degraded-step off # skip elastic degraded-step cases
 //!   cargo run --release --bin bench_aggregation -- --compress-sweep    # ratio-vs-loss table
 //!   cargo run --release --bin bench_aggregation -- --check BENCH_aggregation.json
 //!   cargo run --release --bin bench_aggregation -- --table BENCH_aggregation.json
@@ -94,6 +95,13 @@ fn run() -> Result<()> {
             "on" => true,
             "off" => false,
             other => return Err(adacons::err!("--compress-step {other:?}: want on|off")),
+        };
+    }
+    if let Some(v) = args.str_opt("degraded-step") {
+        cfg.degraded_step = match v {
+            "on" => true,
+            "off" => false,
+            other => return Err(adacons::err!("--degraded-step {other:?}: want on|off")),
         };
     }
     let out = args.str_or("out", "BENCH_aggregation.json");

@@ -98,6 +98,22 @@ pub struct RankReport {
     pub bucket_s: Vec<f64>,
 }
 
+/// Outcome of one elastic ingest ([`StepExchange::leader_ingest_elastic`]):
+/// per-rank completion reports (`None` for ranks that went down) plus the
+/// ranks that died this step with their reported reasons.
+#[derive(Debug)]
+pub struct ElasticReport {
+    pub reports: Vec<Option<RankReport>>,
+    pub dead: Vec<(usize, String)>,
+}
+
+impl ElasticReport {
+    /// Ranks that completed the step.
+    pub fn live(&self) -> usize {
+        self.reports.iter().filter(|r| r.is_some()).count()
+    }
+}
+
 /// A rank thread's handle on the exchange: the only sender for its
 /// messages plus the receiver for broadcast results. The port doubles as
 /// a death guard — dropping it without [`RankPort::complete`] (or
@@ -226,6 +242,11 @@ pub struct StepExchange {
     map: Option<NodeMap>,
     msgs_in: Mailbox<RankMsg>,
     results_out: Vec<Sender<Arc<Vec<f32>>>>,
+    /// Elastic exchanges keep one message sender purely to mint
+    /// replacement ports for respawned ranks ([`StepExchange::respawn_port`]).
+    /// `None` on the plain constructors, which stay sender-free so even a
+    /// guard-less mass rank death closes the channel instead of hanging.
+    respawn_tx: Option<Sender<RankMsg>>,
 }
 
 impl StepExchange {
@@ -233,17 +254,26 @@ impl StepExchange {
     /// into its rank thread). The exchange keeps no sender of its own,
     /// so rank death is always observable on the leader side.
     pub fn new(n: usize) -> (StepExchange, Vec<RankPort>) {
-        Self::build(n, None)
+        Self::build(n, None, false)
     }
 
     /// Grouped construction: rank threads are grouped per node (`map`),
     /// each port tagged with its node id. Port count == `map.n_ranks()`
     /// by construction — the consistency the hierarchy tests pin down.
     pub fn new_grouped(map: &NodeMap) -> (StepExchange, Vec<RankPort>) {
-        Self::build(map.n_ranks(), Some(map.clone()))
+        Self::build(map.n_ranks(), Some(map.clone()), false)
     }
 
-    fn build(n: usize, map: Option<NodeMap>) -> (StepExchange, Vec<RankPort>) {
+    /// Elastic construction: like [`StepExchange::new`]/`new_grouped`, but
+    /// the exchange retains one message sender so a dead rank's port can
+    /// be re-minted after a respawn ([`StepExchange::respawn_port`]). Rank
+    /// death still surfaces: the armed port guards fire `Down` on every
+    /// unwind path, and the elastic ingest counts them.
+    pub fn new_elastic(n: usize, map: Option<&NodeMap>) -> (StepExchange, Vec<RankPort>) {
+        Self::build(n, map.cloned(), true)
+    }
+
+    fn build(n: usize, map: Option<NodeMap>, elastic: bool) -> (StepExchange, Vec<RankPort>) {
         if let Some(m) = &map {
             assert_eq!(m.n_ranks(), n, "node map does not cover every rank");
         }
@@ -267,9 +297,31 @@ impl StepExchange {
                 map,
                 msgs_in,
                 results_out,
+                respawn_tx: elastic.then(|| msg_tx.clone()),
             },
             ports,
         )
+    }
+
+    /// Mint a fresh [`RankPort`] for a respawned rank on an elastic
+    /// exchange, replacing its result channel. Errors on non-elastic
+    /// exchanges (no sender retained) or out-of-range ranks.
+    pub fn respawn_port(&mut self, rank: usize) -> Result<RankPort> {
+        ensure!(rank < self.n, "respawn_port: unknown rank {rank}");
+        let tx = self
+            .respawn_tx
+            .as_ref()
+            .ok_or_else(|| err!("respawn_port needs an elastic exchange"))?
+            .clone();
+        let (result_tx, result_rx) = channel();
+        self.results_out[rank] = result_tx;
+        Ok(RankPort {
+            rank,
+            node: self.map.as_ref().map(|m| m.locate(rank).0).unwrap_or(0),
+            tx,
+            result_rx,
+            armed: true,
+        })
     }
 
     pub fn n(&self) -> usize {
@@ -360,6 +412,100 @@ impl StepExchange {
         } else {
             Vec::new()
         })
+    }
+
+    /// Fault-tolerant ingest: drain one step's messages until every rank
+    /// has either delivered all its buckets plus a `Done` report **or**
+    /// reported [`RankMsg::Down`]. Dead ranks yield `None` reports; their
+    /// partial bucket deliveries (already handed to `on_bucket`) are the
+    /// caller's to discard — the elastic step assembles the full gradient
+    /// matrix first and aggregates over survivors only.
+    ///
+    /// Fails — listing the dead ranks — only when survivors drop below
+    /// `min_ranks`, the quorum under which a degraded step would no
+    /// longer be meaningful.
+    pub fn leader_ingest_elastic(
+        &self,
+        buckets: &Buckets,
+        min_ranks: usize,
+        on_bucket: &mut dyn FnMut(usize, usize, Vec<f32>),
+    ) -> Result<ElasticReport> {
+        let nb = buckets.len();
+        let mut seen = vec![false; self.n * nb];
+        let mut delivered = vec![0usize; self.n];
+        let mut reports: Vec<Option<RankReport>> = vec![None; self.n];
+        let mut down = vec![false; self.n];
+        let mut dead: Vec<(usize, String)> = Vec::new();
+        // Ranks still owed a terminal message (Done or Down).
+        let mut pending = self.n;
+        while pending > 0 {
+            match self.msgs_in.recv()? {
+                RankMsg::Bucket {
+                    rank,
+                    bucket,
+                    payload,
+                } => {
+                    ensure!(
+                        rank < self.n && bucket < nb,
+                        "bucket message out of range: rank {rank}, bucket {bucket}"
+                    );
+                    ensure!(!down[rank], "bucket from dead rank {rank}");
+                    let (lo, hi) = buckets.range(bucket);
+                    ensure!(
+                        payload.n_cols() == hi - lo,
+                        "bucket {bucket} payload width {} != {}",
+                        payload.n_cols(),
+                        hi - lo
+                    );
+                    ensure!(
+                        !std::mem::replace(&mut seen[rank * nb + bucket], true),
+                        "duplicate bucket {bucket} from rank {rank}"
+                    );
+                    delivered[rank] += 1;
+                    on_bucket(rank, bucket, payload.into_cols());
+                }
+                RankMsg::Done {
+                    rank,
+                    loss,
+                    compute_s,
+                    bucket_s,
+                } => {
+                    ensure!(rank < self.n, "done message from unknown rank {rank}");
+                    ensure!(
+                        !down[rank] && reports[rank].is_none(),
+                        "duplicate done message from rank {rank}"
+                    );
+                    ensure!(
+                        delivered[rank] == nb,
+                        "rank {rank} done after only {}/{nb} buckets",
+                        delivered[rank]
+                    );
+                    reports[rank] = Some(RankReport {
+                        loss,
+                        compute_s,
+                        bucket_s,
+                    });
+                    pending -= 1;
+                }
+                RankMsg::Down { rank, reason } => {
+                    ensure!(rank < self.n, "down message from unknown rank {rank}");
+                    if down[rank] || reports[rank].is_some() {
+                        // A disarmed double-report (e.g. explicit
+                        // report_down raced with a guard) — ignore.
+                        continue;
+                    }
+                    down[rank] = true;
+                    dead.push((rank, reason));
+                    pending -= 1;
+                    let live = self.n - dead.len();
+                    ensure!(
+                        live >= min_ranks,
+                        "only {live} ranks live (< quorum {min_ranks}); dead: {dead:?}"
+                    );
+                }
+            }
+        }
+        Ok(ElasticReport { reports, dead })
     }
 
     /// Node-level ingest on a grouped exchange: like
@@ -674,6 +820,109 @@ mod tests {
             port.complete(); // disarm, then drop: no Down, no senders left
         }
         assert!(ex.leader_ingest(&buckets, false, &mut |_, _, _| {}).is_err());
+    }
+
+    #[test]
+    fn elastic_ingest_survives_a_rank_death() {
+        let (ex, ports) = StepExchange::new_elastic(3, None);
+        let buckets = Buckets::fixed(4, 2);
+        let mut handles = Vec::new();
+        for port in ports {
+            let bk = buckets.clone();
+            handles.push(std::thread::spawn(move || {
+                let rank = port.rank();
+                if rank == 1 {
+                    // Dies after a partial delivery: one bucket, no Done.
+                    port.submit_bucket(0, vec![9.0, 9.0]);
+                    panic!("injected rank failure");
+                }
+                port.submit(&bk, &[rank as f32; 4]);
+                port.done(rank as f64, 0.1);
+                let _ = port.wait_result();
+                port.complete();
+            }));
+        }
+        let mut arrivals = Vec::new();
+        let rep = ex
+            .leader_ingest_elastic(&buckets, 2, &mut |rank, b, _| arrivals.push((rank, b)))
+            .unwrap();
+        assert_eq!(rep.live(), 2);
+        assert!(rep.reports[0].is_some() && rep.reports[2].is_some());
+        assert!(rep.reports[1].is_none());
+        assert_eq!(rep.dead.len(), 1);
+        assert_eq!(rep.dead[0].0, 1);
+        // The dead rank's partial bucket was surfaced (caller discards it).
+        assert!(arrivals.contains(&(1, 0)));
+        ex.broadcast(Arc::new(vec![0.0; 4]));
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+
+    #[test]
+    fn elastic_ingest_bails_below_quorum() {
+        let (ex, ports) = StepExchange::new_elastic(2, None);
+        let buckets = Buckets::single(2);
+        for port in ports {
+            std::thread::spawn(move || port.report_down("injected"));
+        }
+        let err = ex
+            .leader_ingest_elastic(&buckets, 2, &mut |_, _, _| {})
+            .unwrap_err();
+        assert!(err.to_string().contains("quorum"), "{err}");
+    }
+
+    #[test]
+    fn respawned_port_rejoins_the_exchange() {
+        let (mut ex, ports) = StepExchange::new_elastic(2, None);
+        let buckets = Buckets::single(2);
+        let mut it = ports.into_iter();
+        let p0 = it.next().unwrap();
+        let p1 = it.next().unwrap();
+        // Step 1: rank 1 dies immediately.
+        let h0 = std::thread::spawn(move || {
+            p0.submit_bucket(0, vec![1.0, 1.0]);
+            p0.done(0.0, 0.1);
+            assert_eq!(*p0.wait_result().unwrap(), vec![7.0, 7.0]);
+            // Step 2 from the same surviving thread.
+            p0.submit_bucket(0, vec![2.0, 2.0]);
+            p0.done(0.0, 0.1);
+            let _ = p0.wait_result();
+            p0.complete();
+        });
+        p1.report_down("injected");
+        let rep = ex
+            .leader_ingest_elastic(&buckets, 1, &mut |_, _, _| {})
+            .unwrap();
+        assert_eq!(rep.live(), 1);
+        ex.broadcast(Arc::new(vec![7.0, 7.0]));
+        // Respawn rank 1 and run a full-strength step.
+        let p1b = ex.respawn_port(1).unwrap();
+        assert_eq!(p1b.rank(), 1);
+        let h1 = std::thread::spawn(move || {
+            p1b.submit_bucket(0, vec![3.0, 3.0]);
+            p1b.done(0.0, 0.1);
+            let _ = p1b.wait_result();
+            p1b.complete();
+        });
+        let rep = ex
+            .leader_ingest_elastic(&buckets, 2, &mut |_, _, _| {})
+            .unwrap();
+        assert_eq!(rep.live(), 2);
+        assert!(rep.dead.is_empty());
+        ex.broadcast(Arc::new(vec![0.0, 0.0]));
+        h0.join().unwrap();
+        h1.join().unwrap();
+    }
+
+    #[test]
+    fn respawn_needs_an_elastic_exchange() {
+        let (mut ex, ports) = StepExchange::new(2);
+        drop(ports);
+        assert!(ex.respawn_port(1).is_err());
+        let (mut ex, ports) = StepExchange::new_elastic(2, None);
+        assert!(ex.respawn_port(5).is_err());
+        drop(ports);
     }
 
     #[test]

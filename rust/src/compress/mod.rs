@@ -483,6 +483,22 @@ impl RankCodec {
         }
     }
 
+    /// Snapshot the per-bucket EF residuals for checkpointing — a
+    /// compress+resume run is bitwise-continuous only if the accumulated
+    /// feedback travels with the params.
+    pub fn export_residuals(&self) -> Vec<Vec<f32>> {
+        self.residuals.clone()
+    }
+
+    /// Restore residuals from [`RankCodec::export_residuals`]. A
+    /// bucket-count mismatch (changed bucketing) keeps the fresh empty
+    /// residuals, which lazily re-size on the next encode.
+    pub fn import_residuals(&mut self, residuals: Vec<Vec<f32>>) {
+        if residuals.len() == self.residuals.len() {
+            self.residuals = residuals;
+        }
+    }
+
     /// Encode one bucket's columns, folding in and updating the EF
     /// residual. Non-finite inputs bypass both codec and residual so
     /// NaN/Inf poison ships unmodified ([`Payload::Raw`]).
@@ -562,6 +578,28 @@ impl SetCodec {
             b.lock().unwrap().clear();
         }
         self.step.store(0, Ordering::SeqCst);
+    }
+
+    /// Snapshot `(step key, per-bucket residual banks)` for checkpointing.
+    pub fn export_state(&self) -> (u64, Vec<Vec<f32>>) {
+        let banks = self
+            .banks
+            .iter()
+            .map(|b| b.lock().unwrap().clone())
+            .collect();
+        (self.step.load(Ordering::SeqCst), banks)
+    }
+
+    /// Restore state from [`SetCodec::export_state`]. A bucket-count
+    /// mismatch keeps fresh state (banks lazily re-size on next use).
+    pub fn import_state(&self, step: u64, banks: Vec<Vec<f32>>) {
+        if banks.len() != self.banks.len() {
+            return;
+        }
+        for (slot, bank) in self.banks.iter().zip(banks) {
+            *slot.lock().unwrap() = bank;
+        }
+        self.step.store(step, Ordering::SeqCst);
     }
 
     /// Compress-then-decompress columns `[lo, hi)` of every row in place,
@@ -896,6 +934,56 @@ mod tests {
         assert_eq!(p.n_cols(), 7);
         let again = vec![0.1_f32; 10];
         assert_eq!(codec.encode_bucket(3, 0, &again).n_cols(), 10);
+    }
+
+    #[test]
+    fn rank_codec_residual_export_import_is_bitwise() {
+        // A checkpointed codec must continue exactly where it stopped: the
+        // imported residual produces the same payload the uninterrupted
+        // codec would.
+        let cols = vec![0.1_f32; 10];
+        let mut a = RankCodec::new(CompressorKind::Fp16, 3, 1, 2);
+        let _ = a.encode_bucket(0, 0, &cols);
+        let _ = a.encode_bucket(0, 1, &cols);
+        let snapshot = a.export_residuals();
+        let mut b = RankCodec::new(CompressorKind::Fp16, 3, 1, 2);
+        b.import_residuals(snapshot);
+        assert_eq!(a.encode_bucket(1, 0, &cols), b.encode_bucket(1, 0, &cols));
+        assert_eq!(a.encode_bucket(1, 1, &cols), b.encode_bucket(1, 1, &cols));
+        // A bucket-count mismatch keeps the fresh residuals.
+        let mut c = RankCodec::new(CompressorKind::Fp16, 3, 1, 5);
+        c.import_residuals(vec![vec![1.0]; 2]);
+        assert!(c.export_residuals().iter().all(|r| r.is_empty()));
+    }
+
+    #[test]
+    fn set_codec_state_export_import_is_bitwise() {
+        let mk_set = || {
+            let rows: Vec<Vec<f32>> = (0..3)
+                .map(|i| (0..8).map(|j| 0.1 * (i * 8 + j) as f32 + 0.05).collect())
+                .collect();
+            GradSet::from_rows(&rows)
+        };
+        let a = SetCodec::new(CompressorKind::Int8, 7, 2);
+        let mut sa = mk_set();
+        a.transform(0, &mut sa, 0, 8);
+        a.transform(1, &mut sa, 0, 8);
+        a.advance_step();
+        let (step, banks) = a.export_state();
+        assert_eq!(step, 1);
+        let b = SetCodec::new(CompressorKind::Int8, 7, 2);
+        b.import_state(step, banks);
+        let mut na = mk_set();
+        let mut nb = mk_set();
+        a.transform(0, &mut na, 0, 8);
+        b.transform(0, &mut nb, 0, 8);
+        for i in 0..3 {
+            assert_eq!(na.row(i), nb.row(i), "row {i}");
+        }
+        // Mismatched bank count is ignored.
+        let c = SetCodec::new(CompressorKind::Int8, 7, 4);
+        c.import_state(9, vec![Vec::new(); 2]);
+        assert_eq!(c.export_state().0, 0);
     }
 
     #[test]

@@ -14,6 +14,33 @@ use crate::util::argparse::Args;
 use crate::util::error::{bail, Context, Result};
 use crate::util::json::Json;
 
+/// Straggler-cutoff spec (`--cutoff k-of-n[:grace_ms]`): finalize each
+/// step once `k` of the `n` configured ranks have delivered all their
+/// buckets, granting late ranks a `grace_ms`-millisecond window past
+/// the k-th arrival on the simulated timeline before they are cut.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CutoffSpec {
+    pub k: usize,
+    pub n: usize,
+    pub grace_ms: f64,
+}
+
+impl CutoffSpec {
+    pub fn parse(s: &str) -> Option<CutoffSpec> {
+        let (quorum, grace_ms) = match s.split_once(':') {
+            Some((q, g)) => (q, g.parse::<f64>().ok()?),
+            None => (s, 0.0),
+        };
+        let (k, n) = quorum.split_once("-of-")?;
+        let spec = CutoffSpec {
+            k: k.parse().ok()?,
+            n: n.parse().ok()?,
+            grace_ms,
+        };
+        (spec.k >= 1 && spec.k <= spec.n && spec.grace_ms >= 0.0).then_some(spec)
+    }
+}
+
 /// Full specification of one training run.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
@@ -86,6 +113,24 @@ pub struct TrainConfig {
     /// inter-node hop on hierarchical topologies (no-op distinction on
     /// flat ones). `none` is bitwise-identical to no compression.
     pub compression: CompressionSpec,
+    /// Elastic fault-tolerant stepping (`--cutoff k-of-n[:grace_ms]`):
+    /// the leader finalizes each step from the first `k` ranks (plus
+    /// any landing within the grace window), consensus weights
+    /// renormalized over the survivors; a rank that dies is replaced by
+    /// a fresh fast-forwarded worker before the next step. Requires
+    /// `--rank-threads on` with `--overlap off`; `n` must equal
+    /// `workers`. None = every step is a full barrier.
+    pub cutoff: Option<CutoffSpec>,
+    /// Krum-style outlier filter on the elastic path (`--krum f`): drop
+    /// ranks with non-finite gradients, then the `f` worst krum scores
+    /// (sum of the m-f-2 smallest pairwise squared distances). 0
+    /// disables; > 0 requires `--cutoff`.
+    pub krum_f: usize,
+    /// Save a full-state checkpoint every S steps
+    /// (`--checkpoint-every S`, to `checkpoint_path`); 0 disables.
+    pub checkpoint_every: usize,
+    /// Where periodic checkpoints are written (overwritten in place).
+    pub checkpoint_path: Option<String>,
 }
 
 impl Default for TrainConfig {
@@ -115,6 +160,10 @@ impl Default for TrainConfig {
             overlap: false,
             rank_threads: false,
             compression: CompressionSpec::default(),
+            cutoff: None,
+            krum_f: 0,
+            checkpoint_every: 0,
+            checkpoint_path: None,
         }
     }
 }
@@ -202,6 +251,19 @@ impl TrainConfig {
                     cfg.compression.scope = CompressScope::parse(s)
                         .with_context(|| format!("compress_scope {s:?}: want all|inter"))?;
                 }
+                "cutoff" => {
+                    let s = v.as_str().context("cutoff")?;
+                    cfg.cutoff = Some(CutoffSpec::parse(s).with_context(|| {
+                        format!("cutoff {s:?}: want k-of-n[:grace_ms]")
+                    })?);
+                }
+                "krum_f" => cfg.krum_f = v.as_usize().context("krum_f")?,
+                "checkpoint_every" => {
+                    cfg.checkpoint_every = v.as_usize().context("checkpoint_every")?
+                }
+                "checkpoint_path" => {
+                    cfg.checkpoint_path = Some(v.as_str().context("checkpoint_path")?.into())
+                }
                 "injectors" => {
                     for item in v.as_arr().context("injectors")? {
                         let rank = item.get("rank").as_usize().context("injector rank")?;
@@ -284,6 +346,21 @@ impl TrainConfig {
         if let Some(p) = args.str_opt("jsonl") {
             self.jsonl = Some(p.into());
         }
+        if let Some(s) = args.str_opt("cutoff") {
+            self.cutoff = if s == "none" {
+                None
+            } else {
+                Some(
+                    CutoffSpec::parse(s)
+                        .with_context(|| format!("--cutoff {s:?}: want k-of-n[:grace_ms]"))?,
+                )
+            };
+        }
+        self.krum_f = args.usize_or("krum", self.krum_f)?;
+        self.checkpoint_every = args.usize_or("checkpoint-every", self.checkpoint_every)?;
+        if let Some(p) = args.str_opt("checkpoint-path") {
+            self.checkpoint_path = Some(p.into());
+        }
         if let Some(spec) = args.str_opt("inject") {
             // --inject rank:spec, e.g. --inject 0:sign-flip
             let (rank, rest) = spec.split_once(':').context("--inject rank:spec")?;
@@ -318,6 +395,39 @@ impl TrainConfig {
             bail!("par_threads {} is implausible (max 1024)", self.parallel.threads);
         }
         self.topology.check_workers(self.workers)?;
+        if let Some(c) = &self.cutoff {
+            if c.n != self.workers {
+                bail!("cutoff {}-of-{} but the run has {} workers", c.k, c.n, self.workers);
+            }
+            if !self.rank_threads {
+                bail!("--cutoff requires --rank-threads on (the elastic exchange)");
+            }
+            if self.overlap {
+                bail!("--cutoff requires --overlap off (elastic ingest assembles the full set)");
+            }
+            if !self.compression.kind.is_none() {
+                // Per-rank kinds (int8/fp16/topk) encode at the rank
+                // source and decode at the elastic wire edge — fine. The
+                // leader-side set sketches (flat lowrank; any kind's
+                // aggregator-level codec on hier topologies) hold state
+                // keyed to the full rank set, which a degraded step
+                // cannot honor.
+                if self.topology != TopologySpec::Flat {
+                    bail!("--cutoff with compression is only supported on flat topologies");
+                }
+                if matches!(self.compression.kind, CompressorKind::LowRank { .. }) {
+                    bail!("--cutoff is incompatible with lowrank compression (leader-side set sketch)");
+                }
+            }
+        } else if self.krum_f > 0 {
+            bail!("--krum requires --cutoff (it filters on the elastic path)");
+        }
+        if self.krum_f >= self.workers && self.krum_f > 0 {
+            bail!("krum_f {} must be < workers {}", self.krum_f, self.workers);
+        }
+        if self.checkpoint_every > 0 && self.checkpoint_path.is_none() {
+            bail!("--checkpoint-every needs --checkpoint-path");
+        }
         Ok(())
     }
 
@@ -506,6 +616,74 @@ mod tests {
         let args = Args::parse("--backend pjrt".split_whitespace().map(String::from), &[]);
         cfg.apply_args(&args).unwrap();
         assert_eq!(cfg.backend, Backend::Pjrt);
+    }
+
+    #[test]
+    fn cutoff_knob_parses_and_validates() {
+        assert_eq!(
+            CutoffSpec::parse("6-of-8"),
+            Some(CutoffSpec { k: 6, n: 8, grace_ms: 0.0 })
+        );
+        assert_eq!(
+            CutoffSpec::parse("3-of-4:250"),
+            Some(CutoffSpec { k: 3, n: 4, grace_ms: 250.0 })
+        );
+        assert!(CutoffSpec::parse("0-of-4").is_none());
+        assert!(CutoffSpec::parse("5-of-4").is_none());
+        assert!(CutoffSpec::parse("3of4").is_none());
+        assert!(CutoffSpec::parse("3-of-4:x").is_none());
+        // Elastic stepping needs rank threads without overlap, and the
+        // quorum's n must match the worker count.
+        let j = Json::parse(r#"{"workers":4,"rank_threads":"on","cutoff":"3-of-4:100"}"#).unwrap();
+        let cfg = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.cutoff, Some(CutoffSpec { k: 3, n: 4, grace_ms: 100.0 }));
+        let j = Json::parse(r#"{"workers":4,"cutoff":"3-of-4"}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err()); // rank_threads off
+        let j = Json::parse(r#"{"workers":8,"rank_threads":"on","cutoff":"3-of-4"}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err()); // n mismatch
+        let j = Json::parse(
+            r#"{"workers":4,"rank_threads":"on","overlap":"on","cutoff":"3-of-4"}"#,
+        )
+        .unwrap();
+        assert!(TrainConfig::from_json(&j).is_err()); // overlap on
+        let j = Json::parse(
+            r#"{"workers":4,"rank_threads":"on","cutoff":"3-of-4","compress":"lowrank:2"}"#,
+        )
+        .unwrap();
+        assert!(TrainConfig::from_json(&j).is_err()); // flat lowrank
+        let j = Json::parse(r#"{"workers":4,"krum_f":1}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err()); // krum without cutoff
+        let mut cfg = TrainConfig::default();
+        cfg.rank_threads = true;
+        let args = Args::parse(
+            "--cutoff 3-of-4:50 --krum 1".split_whitespace().map(String::from),
+            &[],
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.cutoff, Some(CutoffSpec { k: 3, n: 4, grace_ms: 50.0 }));
+        assert_eq!(cfg.krum_f, 1);
+        let args = Args::parse("--cutoff none".split_whitespace().map(String::from), &[]);
+        assert!(cfg.apply_args(&args).is_err()); // krum survives, cutoff gone
+    }
+
+    #[test]
+    fn checkpoint_knobs_validate() {
+        let j = Json::parse(r#"{"checkpoint_every":5}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err()); // no path
+        let j =
+            Json::parse(r#"{"checkpoint_every":5,"checkpoint_path":"/tmp/ck.bin"}"#).unwrap();
+        let cfg = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.checkpoint_every, 5);
+        assert_eq!(cfg.checkpoint_path.as_deref(), Some("/tmp/ck.bin"));
+        let mut cfg = TrainConfig::default();
+        let args = Args::parse(
+            "--checkpoint-every 10 --checkpoint-path /tmp/x.ckpt"
+                .split_whitespace()
+                .map(String::from),
+            &[],
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.checkpoint_every, 10);
     }
 
     #[test]

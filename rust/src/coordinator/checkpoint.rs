@@ -1,16 +1,91 @@
-//! Binary checkpoints: magic + version + step + param vector (LE f32).
+//! Binary checkpoints.
+//!
+//! Version 2 (`ADACONS2`) captures the **complete** training state, not
+//! just the iterate: parameters + step counter, optimizer slot state
+//! (momentum / Adam moments + bias-correction clock), the aggregator's
+//! internal momentum (AdaCons' per-rank EMA statistics), and every
+//! compression error-feedback residual (per-rank codecs and the
+//! hierarchical set codec). Restoring therefore continues a fault-free
+//! run **bitwise-identically** — the invariant
+//! `tests/fault_tolerance.rs` pins across aggregators, topologies, and
+//! compression settings. Version 1 files (`ADACONS1`: step + params
+//! only) still load, with empty extras.
+//!
+//! Layout (all integers LE): magic, step u64, params (u64 len + f32s),
+//! opt_t u64, opt slots (u64 count, each u64 len + f32s), aggregator
+//! state rows (u64 count, each u64 len + f64s), per-rank residuals (u64
+//! rank count, each u64 bucket count, each u64 len + f32s), set-codec
+//! flag u8 (1 => step u64 + banks as u64 count, each u64 len + f32s).
 
 use std::io::{Read, Write};
 use std::path::Path;
 
 use crate::util::error::{bail, Context, Result};
 
-const MAGIC: &[u8; 8] = b"ADACONS1";
+const MAGIC_V1: &[u8; 8] = b"ADACONS1";
+const MAGIC_V2: &[u8; 8] = b"ADACONS2";
 
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Checkpoint {
     pub step: u64,
     pub params: Vec<f32>,
+    /// Optimizer step clock (Adam's bias-correction `t`; 0 for
+    /// stateless/SGD-momentum optimizers).
+    pub opt_t: u64,
+    /// Optimizer slot state (velocity / first + second moments).
+    pub opt_slots: Vec<Vec<f32>>,
+    /// Aggregator momentum state (AdaCons' sorted per-rank EMA rows).
+    pub agg_state: Vec<Vec<f64>>,
+    /// Per-rank compression error-feedback residuals
+    /// (rank -> bucket -> columns); empty when compression is off.
+    pub rank_residuals: Vec<Vec<Vec<f32>>>,
+    /// Hierarchical set-codec state: (stochastic-rounding step, per-bucket
+    /// error-feedback banks).
+    pub set_codec: Option<(u64, Vec<Vec<f32>>)>,
+}
+
+fn write_f32s(f: &mut impl Write, v: &[f32]) -> Result<()> {
+    f.write_all(&(v.len() as u64).to_le_bytes())?;
+    for x in v {
+        f.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn write_f64s(f: &mut impl Write, v: &[f64]) -> Result<()> {
+    f.write_all(&(v.len() as u64).to_le_bytes())?;
+    for x in v {
+        f.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_u64(f: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_f32s(f: &mut impl Read) -> Result<Vec<f32>> {
+    let len = read_u64(f)? as usize;
+    let mut bytes = vec![0u8; len * 4];
+    f.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn read_f64s(f: &mut impl Read) -> Result<Vec<f64>> {
+    let len = read_u64(f)? as usize;
+    let mut bytes = vec![0u8; len * 8];
+    f.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|c| {
+            f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])
+        })
+        .collect())
 }
 
 impl Checkpoint {
@@ -19,11 +94,35 @@ impl Checkpoint {
             std::fs::create_dir_all(dir)?;
         }
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        f.write_all(MAGIC)?;
+        f.write_all(MAGIC_V2)?;
         f.write_all(&self.step.to_le_bytes())?;
-        f.write_all(&(self.params.len() as u64).to_le_bytes())?;
-        for p in &self.params {
-            f.write_all(&p.to_le_bytes())?;
+        write_f32s(&mut f, &self.params)?;
+        f.write_all(&self.opt_t.to_le_bytes())?;
+        f.write_all(&(self.opt_slots.len() as u64).to_le_bytes())?;
+        for slot in &self.opt_slots {
+            write_f32s(&mut f, slot)?;
+        }
+        f.write_all(&(self.agg_state.len() as u64).to_le_bytes())?;
+        for row in &self.agg_state {
+            write_f64s(&mut f, row)?;
+        }
+        f.write_all(&(self.rank_residuals.len() as u64).to_le_bytes())?;
+        for rank in &self.rank_residuals {
+            f.write_all(&(rank.len() as u64).to_le_bytes())?;
+            for bucket in rank {
+                write_f32s(&mut f, bucket)?;
+            }
+        }
+        match &self.set_codec {
+            None => f.write_all(&[0u8])?,
+            Some((step, banks)) => {
+                f.write_all(&[1u8])?;
+                f.write_all(&step.to_le_bytes())?;
+                f.write_all(&(banks.len() as u64).to_le_bytes())?;
+                for bank in banks {
+                    write_f32s(&mut f, bank)?;
+                }
+            }
         }
         Ok(())
     }
@@ -34,21 +133,65 @@ impl Checkpoint {
         );
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic)?;
-        if &magic != MAGIC {
-            bail!("not an adacons checkpoint");
+        let v2 = match &magic {
+            m if m == MAGIC_V2 => true,
+            m if m == MAGIC_V1 => false,
+            _ => bail!("not an adacons checkpoint"),
+        };
+        let step = read_u64(&mut f)?;
+        let params = read_f32s(&mut f)?;
+        if !v2 {
+            // Legacy step+params file: no optimizer/aggregator/residual
+            // state was captured.
+            return Ok(Checkpoint {
+                step,
+                params,
+                ..Checkpoint::default()
+            });
         }
-        let mut u64buf = [0u8; 8];
-        f.read_exact(&mut u64buf)?;
-        let step = u64::from_le_bytes(u64buf);
-        f.read_exact(&mut u64buf)?;
-        let len = u64::from_le_bytes(u64buf) as usize;
-        let mut bytes = vec![0u8; len * 4];
-        f.read_exact(&mut bytes)?;
-        let params = bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
-        Ok(Checkpoint { step, params })
+        let opt_t = read_u64(&mut f)?;
+        let n_slots = read_u64(&mut f)? as usize;
+        let mut opt_slots = Vec::with_capacity(n_slots);
+        for _ in 0..n_slots {
+            opt_slots.push(read_f32s(&mut f)?);
+        }
+        let n_rows = read_u64(&mut f)? as usize;
+        let mut agg_state = Vec::with_capacity(n_rows);
+        for _ in 0..n_rows {
+            agg_state.push(read_f64s(&mut f)?);
+        }
+        let n_ranks = read_u64(&mut f)? as usize;
+        let mut rank_residuals = Vec::with_capacity(n_ranks);
+        for _ in 0..n_ranks {
+            let n_buckets = read_u64(&mut f)? as usize;
+            let mut buckets = Vec::with_capacity(n_buckets);
+            for _ in 0..n_buckets {
+                buckets.push(read_f32s(&mut f)?);
+            }
+            rank_residuals.push(buckets);
+        }
+        let mut flag = [0u8; 1];
+        f.read_exact(&mut flag)?;
+        let set_codec = if flag[0] == 1 {
+            let step = read_u64(&mut f)?;
+            let n_banks = read_u64(&mut f)? as usize;
+            let mut banks = Vec::with_capacity(n_banks);
+            for _ in 0..n_banks {
+                banks.push(read_f32s(&mut f)?);
+            }
+            Some((step, banks))
+        } else {
+            None
+        };
+        Ok(Checkpoint {
+            step,
+            params,
+            opt_t,
+            opt_slots,
+            agg_state,
+            rank_residuals,
+            set_codec,
+        })
     }
 }
 
@@ -61,12 +204,54 @@ mod tests {
         let ck = Checkpoint {
             step: 123,
             params: vec![1.5, -2.25, f32::MIN_POSITIVE, 0.0, 3.0e30],
+            opt_t: 7,
+            opt_slots: vec![vec![0.5, -0.5], vec![]],
+            agg_state: vec![vec![1.0e-300, 2.5], vec![-3.25]],
+            rank_residuals: vec![vec![vec![0.125], vec![]], vec![vec![9.0, -9.0]]],
+            set_codec: Some((42, vec![vec![1.0, 2.0], vec![]])),
         };
         let dir = std::env::temp_dir().join("adacons_ckpt_test");
         let path = dir.join("a.ckpt");
         ck.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(ck, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn roundtrip_without_extras() {
+        let ck = Checkpoint {
+            step: 5,
+            params: vec![1.0, 2.0],
+            ..Checkpoint::default()
+        };
+        let dir = std::env::temp_dir().join("adacons_ckpt_plain");
+        let path = dir.join("p.ckpt");
+        ck.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), ck);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn legacy_v1_files_still_load() {
+        // Hand-write a v1 (step + params) file; extras must come back
+        // empty rather than erroring.
+        let dir = std::env::temp_dir().join("adacons_ckpt_v1");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("old.ckpt");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"ADACONS1");
+        bytes.extend_from_slice(&9u64.to_le_bytes());
+        bytes.extend_from_slice(&2u64.to_le_bytes());
+        bytes.extend_from_slice(&1.5f32.to_le_bytes());
+        bytes.extend_from_slice(&(-2.5f32).to_le_bytes());
+        std::fs::write(&path, bytes).unwrap();
+        let ck = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck.step, 9);
+        assert_eq!(ck.params, vec![1.5, -2.5]);
+        assert_eq!(ck.opt_t, 0);
+        assert!(ck.opt_slots.is_empty() && ck.agg_state.is_empty());
+        assert!(ck.rank_residuals.is_empty() && ck.set_codec.is_none());
         std::fs::remove_dir_all(&dir).ok();
     }
 

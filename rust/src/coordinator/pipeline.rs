@@ -26,6 +26,8 @@
 //! [`TaskScope::submit`]: crate::parallel::TaskScope::submit
 //! [`comm::StepExchange`]: crate::comm::StepExchange
 
+use std::collections::HashMap;
+
 use crate::aggregation::{AggInfo, Aggregator, BucketWork, CommScope};
 use crate::collective::cost_model::f32_wire_bytes;
 use crate::collective::{CostModel, HierCostModel, HierTimeline, NodeMap, SimClock, StepTimeline};
@@ -33,7 +35,7 @@ use crate::comm::StepExchange;
 use crate::compress::{CompressScope, CompressionSpec, CompressorKind, SetCodec};
 use crate::parallel::ParallelCtx;
 use crate::tensor::{BucketTracker, Buckets, GradSet};
-use crate::util::error::{ensure, Result};
+use crate::util::error::{bail, ensure, Result};
 
 /// Per-rank gradient production: compute rank `rank`'s local gradient and
 /// deliver it through `deliver(bucket, columns)` in bucket order; return
@@ -72,6 +74,28 @@ pub struct StepOutcome {
     /// Per-rank wall compute seconds this step — measured on the rank
     /// thread in exchange mode — as charged to the `SimClock`.
     pub rank_compute_s: Vec<f64>,
+    /// Ranks that died this step (elastic path only; empty otherwise).
+    pub dead_ranks: Vec<usize>,
+    /// How many ranks' gradients entered the aggregation (== N outside
+    /// the elastic path; < N on a degraded step).
+    pub survivors: usize,
+}
+
+/// Fault-tolerance policy for [`PipelinedExecutor::run_step_elastic`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ElasticPolicy {
+    /// K-of-N quorum: the leader finalizes once `k` ranks have delivered
+    /// all buckets; slower ranks beyond the grace window are dropped from
+    /// this step's consensus (their compute is cancelled at the barrier).
+    pub k: usize,
+    /// Straggler grace, simulated seconds: a rank finishing within
+    /// `grace_s` of the K-th fastest still makes the step.
+    pub grace_s: f64,
+    /// Krum-style outlier filter: among the on-time ranks, drop the `f`
+    /// with the largest outlier scores (sum of the `m - f - 2` smallest
+    /// pairwise squared distances); non-finite (NaN/inf) gradients are
+    /// always excluded first. 0 disables the filter.
+    pub krum_f: usize,
 }
 
 /// The reusable per-run state of the pipelined step loop: bucket arrival
@@ -108,6 +132,10 @@ pub struct PipelinedExecutor {
     /// `None` for per-rank kinds; on hierarchical runs the equivalent
     /// codec lives inside `aggregation::Hierarchical`.
     set_codec: Option<SetCodec>,
+    /// Survivor-set aggregators for the elastic path, keyed by the sorted
+    /// survivor rank list (each keeps its own momentum state — AdaCons
+    /// reseeds its EMA on a worker-count change anyway).
+    elastic_aggs: HashMap<Vec<usize>, Box<dyn Aggregator>>,
     n: usize,
 }
 
@@ -170,6 +198,7 @@ impl PipelinedExecutor {
             hier_cost,
             compression: CompressionSpec::default(),
             set_codec: None,
+            elastic_aggs: HashMap::new(),
             n: n_ranks,
         }
     }
@@ -196,6 +225,22 @@ impl PipelinedExecutor {
             }
             _ => None,
         };
+    }
+
+    /// Export the flat low-rank set codec's state (stochastic-rounding
+    /// step + per-bucket error-feedback banks) for checkpoint capture;
+    /// `None` when no set codec is installed.
+    pub fn export_set_codec(&self) -> Option<(u64, Vec<Vec<f32>>)> {
+        self.set_codec.as_ref().map(|c| c.export_state())
+    }
+
+    /// Restore the set codec's state from a checkpoint. A no-op when no
+    /// set codec is installed (the checkpoint's compression config does
+    /// not match this run's — the caller validates that).
+    pub fn import_set_codec(&self, step: u64, banks: Vec<Vec<f32>>) {
+        if let Some(codec) = &self.set_codec {
+            codec.import_state(step, banks);
+        }
     }
 
     /// Drop accumulated error-feedback residuals (parameter
@@ -527,6 +572,214 @@ impl PipelinedExecutor {
             exposed_intra_comm_s,
             exposed_inter_comm_s,
             rank_compute_s: compute_s,
+            dead_ranks: Vec::new(),
+            survivors: n,
+        })
+    }
+
+    /// Run one fault-tolerant step over an **elastic** exchange.
+    ///
+    /// The leader drains arrivals until every rank has delivered or died
+    /// (in-process transport makes the physical drain cheap); the K-of-N
+    /// cutoff is then applied on the **simulated** timeline — exactly
+    /// where a real K-of-N barrier would bite. Survivor selection, in
+    /// order: ranks that died are out; ranks whose simulated finish
+    /// exceeds the K-th fastest by more than the grace window are cut;
+    /// with `krum_f > 0`, non-finite gradients and the `f` largest
+    /// outlier scores are filtered. A full-strength step (every rank
+    /// survives) aggregates through `agg` — bitwise-identical to the
+    /// non-elastic path; a degraded step renormalizes by aggregating the
+    /// survivor rows through a cached survivor-set instance of
+    /// `agg_name` (consensus weights are computed over — and sum to one
+    /// across — the survivors, so the degraded direction stays an
+    /// unbiased combination of unbiased per-rank estimates).
+    ///
+    /// Simulated time: only survivors' compute reaches the clock — a cut
+    /// straggler's step is cancelled at the barrier, which is the entire
+    /// point of the cutoff — then the step's collectives run as barrier
+    /// ops. Runs with overlap off (the elastic ingest assembles the full
+    /// matrix before aggregating).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_step_elastic(
+        &mut self,
+        exchange: &StepExchange,
+        policy: &ElasticPolicy,
+        agg: &mut dyn Aggregator,
+        agg_name: &str,
+        grads: &mut GradSet,
+        out: &mut [f32],
+        ctx: &ParallelCtx,
+        clock: &mut SimClock,
+        cost: &CostModel,
+    ) -> Result<StepOutcome> {
+        ensure!(!self.overlap, "the elastic step path runs with overlap off");
+        ensure!(
+            self.set_codec.is_none(),
+            "elastic steps do not support the set-sketch (lowrank) compressor"
+        );
+        ensure!(
+            policy.k >= 1 && policy.k <= self.n,
+            "cutoff quorum {} out of range for {} ranks",
+            policy.k,
+            self.n
+        );
+        assert_eq!(grads.n(), self.n);
+        assert_eq!(grads.d(), self.buckets.total());
+        assert_eq!(out.len(), grads.d());
+        let n = self.n;
+        let start_s: Vec<f64> = (0..n).map(|r| clock.rank_time(r)).collect();
+        let buckets = &self.buckets;
+        let rep = exchange.leader_ingest_elastic(buckets, policy.k, &mut |rank, b, cols| {
+            let (lo, hi) = buckets.range(b);
+            grads.row_mut(rank)[lo..hi].copy_from_slice(&cols);
+        })?;
+        let dead_ranks: Vec<usize> = rep.dead.iter().map(|(r, _)| *r).collect();
+        let mut compute_s = vec![0.0f64; n];
+        let mut loss_sum = 0.0f64;
+        let mut live = 0usize;
+        for (r, report) in rep.reports.iter().enumerate() {
+            if let Some(rr) = report {
+                compute_s[r] = rr.compute_s;
+                loss_sum += rr.loss;
+                live += 1;
+            }
+        }
+
+        // --- straggler cutoff on the simulated timeline ---
+        let mut candidates: Vec<usize> =
+            (0..n).filter(|&r| rep.reports[r].is_some()).collect();
+        if candidates.len() > policy.k {
+            let mut finishes: Vec<f64> = candidates
+                .iter()
+                .map(|&r| start_s[r] + compute_s[r])
+                .collect();
+            finishes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let deadline = finishes[policy.k - 1] + policy.grace_s;
+            candidates.retain(|&r| start_s[r] + compute_s[r] <= deadline);
+        }
+
+        // --- krum-style outlier filter ---
+        if policy.krum_f > 0 {
+            candidates.retain(|&r| grads.row(r).iter().all(|x| x.is_finite()));
+            let m = candidates.len();
+            let f = policy.krum_f;
+            if m >= f + 3 {
+                // score_i = sum of the (m - f - 2) smallest squared
+                // distances to the other candidates (Blanchard et al.'s
+                // krum score); drop the f largest. Fixed-order f64
+                // accumulation keeps the scores deterministic.
+                let mut scored: Vec<(f64, usize)> = candidates
+                    .iter()
+                    .map(|&i| {
+                        let mut d2: Vec<f64> = candidates
+                            .iter()
+                            .filter(|&&j| j != i)
+                            .map(|&j| {
+                                grads
+                                    .row(i)
+                                    .iter()
+                                    .zip(grads.row(j))
+                                    .map(|(a, b)| {
+                                        let e = (*a - *b) as f64;
+                                        e * e
+                                    })
+                                    .sum::<f64>()
+                            })
+                            .collect();
+                        d2.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                        (d2.iter().take(m - f - 2).sum::<f64>(), i)
+                    })
+                    .collect();
+                scored.sort_by(|a, b| {
+                    a.0.partial_cmp(&b.0)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.1.cmp(&b.1))
+                });
+                candidates = scored[..m - f].iter().map(|&(_, i)| i).collect();
+                candidates.sort_unstable();
+            }
+        }
+        if candidates.is_empty() {
+            bail!("no survivors after cutoff/filter (dead: {dead_ranks:?})");
+        }
+
+        // --- aggregate over the survivor set ---
+        let mut info = if candidates.len() == n {
+            // Full strength: the normal aggregator, bitwise-identical to
+            // the non-elastic barrier path.
+            agg.aggregate_ctx(grads, buckets, out, ctx)
+        } else {
+            let m = candidates.len();
+            let mut sgs = GradSet::zeros(m, grads.d());
+            for (i, &r) in candidates.iter().enumerate() {
+                sgs.row_mut(i).copy_from_slice(grads.row(r));
+            }
+            let surv_agg = match self.elastic_aggs.entry(candidates.clone()) {
+                std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    let built = match &self.map {
+                        Some(map) => {
+                            // Survivor node grouping: per-group survivor
+                            // counts, empty groups dropped (survivors are
+                            // sorted, and groups cover contiguous rank
+                            // ranges, so order is preserved).
+                            let mut sizes: Vec<usize> = Vec::new();
+                            for (r0, r1) in map.iter() {
+                                let c = candidates
+                                    .iter()
+                                    .filter(|&&r| r >= r0 && r < r1)
+                                    .count();
+                                if c > 0 {
+                                    sizes.push(c);
+                                }
+                            }
+                            crate::aggregation::hierarchical(
+                                agg_name,
+                                NodeMap::from_sizes(&sizes),
+                                m,
+                            )
+                        }
+                        None => crate::aggregation::by_name(agg_name, m),
+                    }
+                    .ok_or_else(|| crate::err!("unknown aggregator {agg_name}"))?;
+                    e.insert(built)
+                }
+            };
+            surv_agg.aggregate_ctx(&sgs, buckets, out, ctx)
+        };
+        if self.compression.is_active() {
+            self.rewrite_compressed_bytes(&mut info);
+        }
+
+        // --- simulated time: survivors' compute, then barrier ops ---
+        for &r in &candidates {
+            clock.advance(r, compute_s[r]);
+        }
+        let mut serial = 0.0f64;
+        let mut serial_intra = 0.0f64;
+        for op in &info.comm {
+            let dur = match (&self.hier_cost, op.scope) {
+                (Some(h), CommScope::Intra) => h.intra.time_s(op.kind, op.bytes),
+                (Some(h), CommScope::Inter) => h.inter.time_s(op.kind, op.bytes),
+                _ => cost.time_s(op.kind, op.bytes),
+            };
+            if op.scope == CommScope::Intra {
+                serial_intra += dur;
+            }
+            clock.collective(dur);
+            serial += dur;
+        }
+
+        Ok(StepOutcome {
+            info,
+            mean_loss: loss_sum / (live.max(1)) as f64,
+            exposed_comm_s: serial,
+            serial_comm_s: serial,
+            exposed_intra_comm_s: serial_intra,
+            exposed_inter_comm_s: serial - serial_intra,
+            rank_compute_s: compute_s,
+            dead_ranks,
+            survivors: candidates.len(),
         })
     }
 
@@ -1083,6 +1336,251 @@ mod tests {
         let mut expect = vec![0.0f32; d];
         GradSet::from_rows(&data).mean_into(&mut expect);
         assert_eq!(out, expect);
+    }
+
+    /// Spawn `n` sender threads over an elastic exchange: each submits
+    /// `rows[r]` with compute time `compute[r]`; ranks listed in `die`
+    /// panic after a partial delivery instead.
+    fn elastic_fixture(
+        rows_data: &[Vec<f32>],
+        buckets: &Buckets,
+        compute: &[f64],
+        die: &[usize],
+    ) -> (StepExchange, Vec<std::thread::JoinHandle<()>>) {
+        let n = rows_data.len();
+        let (exchange, ports) = StepExchange::new_elastic(n, None);
+        let mut handles = Vec::new();
+        for port in ports {
+            let rank = port.rank();
+            let row = rows_data[rank].clone();
+            let bk = buckets.clone();
+            let cs = compute[rank];
+            let dies = die.contains(&rank);
+            handles.push(std::thread::spawn(move || {
+                if dies {
+                    let (lo, hi) = bk.range(0);
+                    port.submit_bucket(0, row[lo..hi].to_vec());
+                    panic!("injected rank failure");
+                }
+                port.submit(&bk, &row);
+                port.done(1.0, cs);
+                port.complete();
+            }));
+        }
+        (exchange, handles)
+    }
+
+    fn elastic_run(
+        policy: &ElasticPolicy,
+        name: &str,
+        rows_data: &[Vec<f32>],
+        buckets: &Buckets,
+        compute: &[f64],
+        die: &[usize],
+    ) -> (Vec<f32>, StepOutcome, SimClock) {
+        let n = rows_data.len();
+        let d = buckets.total();
+        let ctx = ParallelCtx::serial();
+        let mut agg = aggregation::by_name(name, n).unwrap();
+        let mut exec = PipelinedExecutor::new(n, buckets.clone(), false);
+        let mut grads = GradSet::zeros(n, d);
+        let mut out = vec![0.0f32; d];
+        let mut clock = SimClock::new(n);
+        let cost = CostModel::from_topology(&Topology::ring_gbps(n, 100.0));
+        let (exchange, handles) = elastic_fixture(rows_data, buckets, compute, die);
+        let outcome = exec
+            .run_step_elastic(
+                &exchange,
+                policy,
+                agg.as_mut(),
+                name,
+                &mut grads,
+                &mut out,
+                &ctx,
+                &mut clock,
+                &cost,
+            )
+            .unwrap();
+        for h in handles {
+            let _ = h.join();
+        }
+        (out, outcome, clock)
+    }
+
+    #[test]
+    fn elastic_full_strength_matches_normal_path_bitwise() {
+        // Cutoff armed but nothing fails and nobody straggles: the step
+        // must be bitwise what the non-elastic exchange path computes,
+        // with identical simulated time.
+        let d = 2 * CHUNK + 9;
+        let n = 3;
+        let data = rows(n, d, 17);
+        let buckets = Buckets::fixed(d, CHUNK);
+        let compute = vec![0.01, 0.012, 0.011];
+        for name in ["mean", "adacons"] {
+            // Normal exchange path (overlap off).
+            let ctx = ParallelCtx::serial();
+            let mut agg = aggregation::by_name(name, n).unwrap();
+            let mut exec = PipelinedExecutor::new(n, buckets.clone(), false);
+            let mut grads = GradSet::zeros(n, d);
+            let mut normal = vec![0.0f32; d];
+            let mut clock_a = SimClock::new(n);
+            let cost = CostModel::from_topology(&Topology::ring_gbps(n, 100.0));
+            let (exchange, ports) = StepExchange::new(n);
+            let mut handles = Vec::new();
+            for port in ports {
+                let row = data[port.rank()].clone();
+                let bk = buckets.clone();
+                let cs = compute[port.rank()];
+                handles.push(std::thread::spawn(move || {
+                    port.submit(&bk, &row);
+                    port.done(1.0, cs);
+                    port.complete();
+                }));
+            }
+            exec.run_step_exchange(
+                &exchange,
+                agg.as_mut(),
+                &mut grads,
+                &mut normal,
+                &ctx,
+                &mut clock_a,
+                &cost,
+            )
+            .unwrap();
+            for h in handles {
+                h.join().unwrap();
+            }
+            let policy = ElasticPolicy {
+                k: 2,
+                grace_s: 10.0,
+                krum_f: 0,
+            };
+            let (elastic, outcome, clock_b) =
+                elastic_run(&policy, name, &data, &buckets, &compute, &[]);
+            assert_eq!(elastic, normal, "{name}");
+            assert_eq!(outcome.survivors, n);
+            assert!(outcome.dead_ranks.is_empty());
+            assert_eq!(clock_a.now().to_bits(), clock_b.now().to_bits(), "{name}");
+        }
+    }
+
+    #[test]
+    fn elastic_cutoff_drops_the_straggler_and_renormalizes() {
+        let d = CHUNK;
+        let n = 4;
+        let data = rows(n, d, 23);
+        let buckets = Buckets::single(d);
+        // Rank 2 straggles far beyond the grace window.
+        let compute = vec![0.01, 0.011, 5.0, 0.012];
+        let policy = ElasticPolicy {
+            k: 3,
+            grace_s: 0.5,
+            krum_f: 0,
+        };
+        let (out, outcome, clock) =
+            elastic_run(&policy, "mean", &data, &buckets, &compute, &[]);
+        assert_eq!(outcome.survivors, 3);
+        assert!(outcome.dead_ranks.is_empty());
+        // Unbiasedness mechanics: the degraded direction is the plain
+        // mean over the survivor rows — weights renormalized to sum to
+        // one across survivors, nothing leaking from the dropped rank.
+        let survivor_rows: Vec<Vec<f32>> = [0usize, 1, 3]
+            .iter()
+            .map(|&r| data[r].clone())
+            .collect();
+        let mut expect = vec![0.0f32; d];
+        GradSet::from_rows(&survivor_rows).mean_into(&mut expect);
+        assert_eq!(out, expect);
+        // The cancelled straggler does not pace the simulated step.
+        assert!(clock.now() < 1.0, "{}", clock.now());
+    }
+
+    #[test]
+    fn elastic_step_survives_a_dead_rank() {
+        let d = CHUNK;
+        let n = 3;
+        let data = rows(n, d, 29);
+        let buckets = Buckets::fixed(d, CHUNK / 2);
+        let policy = ElasticPolicy {
+            k: 2,
+            grace_s: 1.0,
+            krum_f: 0,
+        };
+        let (out, outcome, _) =
+            elastic_run(&policy, "mean", &data, &buckets, &[0.01; 3], &[1]);
+        assert_eq!(outcome.dead_ranks, vec![1]);
+        assert_eq!(outcome.survivors, 2);
+        let survivor_rows = vec![data[0].clone(), data[2].clone()];
+        let mut expect = vec![0.0f32; d];
+        GradSet::from_rows(&survivor_rows).mean_into(&mut expect);
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn elastic_krum_excludes_nan_and_outlier_ranks() {
+        let d = 64;
+        let n = 5;
+        let mut data = rows(n, d, 37);
+        // Rank 1 ships NaNs (corrupted buffers), rank 4 a huge outlier.
+        data[1] = vec![f32::NAN; d];
+        data[4] = vec![1.0e6; d];
+        let buckets = Buckets::single(d);
+        let policy = ElasticPolicy {
+            k: 2,
+            grace_s: 10.0,
+            krum_f: 1,
+        };
+        let (out, outcome, _) =
+            elastic_run(&policy, "mean", &data, &buckets, &[0.01; 5], &[]);
+        // NaN rank always excluded; among the 4 finite rows (m=4 >= f+3)
+        // the krum score drops the distant outlier.
+        assert_eq!(outcome.survivors, 3);
+        let survivor_rows: Vec<Vec<f32>> =
+            [0usize, 2, 3].iter().map(|&r| data[r].clone()).collect();
+        let mut expect = vec![0.0f32; d];
+        GradSet::from_rows(&survivor_rows).mean_into(&mut expect);
+        assert_eq!(out, expect);
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn elastic_quorum_violation_fails_the_step() {
+        let d = 16;
+        let n = 3;
+        let data = rows(n, d, 41);
+        let buckets = Buckets::single(d);
+        let ctx = ParallelCtx::serial();
+        let mut agg = aggregation::by_name("mean", n).unwrap();
+        let mut exec = PipelinedExecutor::new(n, buckets.clone(), false);
+        let mut grads = GradSet::zeros(n, d);
+        let mut out = vec![0.0f32; d];
+        let mut clock = SimClock::new(n);
+        let cost = CostModel::from_topology(&Topology::ring_gbps(n, 100.0));
+        let policy = ElasticPolicy {
+            k: 3,
+            grace_s: 1.0,
+            krum_f: 0,
+        };
+        let (exchange, handles) =
+            elastic_fixture(&data, &buckets, &[0.01; 3], &[0, 2]);
+        let err = exec
+            .run_step_elastic(
+                &exchange,
+                &policy,
+                agg.as_mut(),
+                "mean",
+                &mut grads,
+                &mut out,
+                &ctx,
+                &mut clock,
+                &cost,
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("quorum"), "{err}");
+        for h in handles {
+            let _ = h.join();
+        }
     }
 
     #[test]

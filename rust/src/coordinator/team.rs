@@ -47,6 +47,31 @@ enum TeamCmd {
     /// Drop compression error-feedback residuals (parameter
     /// re-broadcast from a checkpoint).
     Reset,
+    /// Send back this rank's per-bucket error-feedback residuals
+    /// (checkpoint capture).
+    ExportResiduals(Sender<Vec<Vec<f32>>>),
+    /// Replace this rank's error-feedback residuals (checkpoint restore).
+    ImportResiduals(Vec<Vec<f32>>),
+    /// Replay `steps` steps' worth of RNG draws on the rank's worker
+    /// without computing (checkpoint resume: the data stream and
+    /// injector state must sit exactly where the original run left
+    /// them).
+    FastForward {
+        steps: u64,
+        local_batch: usize,
+        d: usize,
+    },
+}
+
+/// Everything an elastic team must remember to rebuild one rank thread
+/// after a death (the spawn inputs `RankTeam::spawn` otherwise discards).
+#[derive(Clone)]
+struct ElasticCfg {
+    artifact: String,
+    buckets: Buckets,
+    local_batch: usize,
+    par: ParallelCtx,
+    compress: Option<(CompressorKind, u64)>,
 }
 
 /// N persistent rank threads plus the leader's exchange half.
@@ -54,6 +79,9 @@ pub struct RankTeam {
     exchange: StepExchange,
     cmds: Vec<Sender<TeamCmd>>,
     handles: Vec<JoinHandle<()>>,
+    /// `Some` on elastic teams ([`RankTeam::spawn_elastic`]): the spawn
+    /// inputs retained so [`RankTeam::respawn`] can rebuild a rank.
+    elastic: Option<ElasticCfg>,
 }
 
 impl RankTeam {
@@ -87,17 +115,54 @@ impl RankTeam {
         map: Option<&NodeMap>,
         compress: Option<(CompressorKind, u64)>,
     ) -> Result<RankTeam> {
+        Self::spawn_inner(rt, artifact, workers, buckets, local_batch, par, map, compress, false)
+    }
+
+    /// Like [`RankTeam::spawn`], but on an elastic exchange: a rank that
+    /// dies mid-step can be rebuilt in place with [`RankTeam::respawn`]
+    /// (the spawn inputs are retained). The fault-tolerant training path
+    /// (`--cutoff`) runs on this.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn_elastic(
+        rt: &Runtime,
+        artifact: &str,
+        workers: Vec<Worker>,
+        buckets: &Buckets,
+        local_batch: usize,
+        par: &ParallelCtx,
+        map: Option<&NodeMap>,
+        compress: Option<(CompressorKind, u64)>,
+    ) -> Result<RankTeam> {
+        Self::spawn_inner(rt, artifact, workers, buckets, local_batch, par, map, compress, true)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn spawn_inner(
+        rt: &Runtime,
+        artifact: &str,
+        workers: Vec<Worker>,
+        buckets: &Buckets,
+        local_batch: usize,
+        par: &ParallelCtx,
+        map: Option<&NodeMap>,
+        compress: Option<(CompressorKind, u64)>,
+        elastic: bool,
+    ) -> Result<RankTeam> {
         let n = workers.len();
-        let (exchange, ports) = match map {
-            Some(m) => {
-                ensure!(
-                    m.n_ranks() == n,
-                    "node map covers {} ranks but the team has {n} workers",
-                    m.n_ranks()
-                );
-                StepExchange::new_grouped(m)
+        if let Some(m) = map {
+            ensure!(
+                m.n_ranks() == n,
+                "node map covers {} ranks but the team has {n} workers",
+                m.n_ranks()
+            );
+        }
+        let (exchange, ports) = if elastic {
+            StepExchange::new_elastic(n, map)
+        } else {
+            match map {
+                Some(m) => StepExchange::new_grouped(m),
+                None => StepExchange::new(n),
             }
-            None => StepExchange::new(n),
         };
         let mut cmds = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
@@ -109,24 +174,8 @@ impl RankTeam {
                 "workers must be passed in rank order (worker {rank} vs port {})",
                 port.rank()
             );
-            let exe = rt
-                .load_owned(artifact)
-                .with_context(|| format!("building rank {rank}'s executable"))?;
-            let (tx, rx) = channel();
-            let bk = buckets.clone();
-            let rank_par = par.clone();
-            let name = match map {
-                Some(_) => format!("node{}-rank{rank}", port.node()),
-                None => format!("rank-{rank}"),
-            };
-            let codec = match compress {
-                Some((kind, seed)) => RankCodec::new(kind, seed, rank, buckets.len()),
-                None => RankCodec::new(CompressorKind::None, 0, rank, buckets.len()),
-            };
-            let h = std::thread::Builder::new()
-                .name(name)
-                .spawn(move || rank_main(worker, exe, port, bk, local_batch, rank_par, codec, rx))
-                .with_context(|| format!("spawning rank {rank} thread"))?;
+            let (tx, h) =
+                spawn_rank(rt, artifact, worker, port, buckets, local_batch, par, compress)?;
             cmds.push(tx);
             handles.push(h);
         }
@@ -134,7 +183,46 @@ impl RankTeam {
             exchange,
             cmds,
             handles,
+            elastic: elastic.then(|| ElasticCfg {
+                artifact: artifact.to_string(),
+                buckets: buckets.clone(),
+                local_batch,
+                par: par.clone(),
+                compress,
+            }),
         })
+    }
+
+    /// Rebuild one dead rank's thread on an elastic team: mint a fresh
+    /// port, spawn a new thread around `worker` (typically a fresh
+    /// [`Worker`] fast-forwarded past the completed steps), and join the
+    /// old thread's corpse. The new rank's codec starts with zero
+    /// error-feedback residuals — its old error state died with it, which
+    /// is exactly the semantics of a re-provisioned machine.
+    pub fn respawn(&mut self, rt: &Runtime, worker: Worker) -> Result<()> {
+        let rank = worker.rank;
+        let cfg = self
+            .elastic
+            .clone()
+            .ok_or_else(|| crate::err!("respawn needs an elastic team"))?;
+        ensure!(rank < self.cmds.len(), "respawn: unknown rank {rank}");
+        let port = self.exchange.respawn_port(rank)?;
+        let (tx, h) = spawn_rank(
+            rt,
+            &cfg.artifact,
+            worker,
+            port,
+            &cfg.buckets,
+            cfg.local_batch,
+            &cfg.par,
+            cfg.compress,
+        )?;
+        self.cmds[rank] = tx;
+        let old = std::mem::replace(&mut self.handles[rank], h);
+        // The dead thread already exited (or is unwinding); join its
+        // corpse so it is not orphaned until team drop.
+        let _ = old.join();
+        Ok(())
     }
 
     pub fn n(&self) -> usize {
@@ -171,6 +259,89 @@ impl RankTeam {
         }
         Ok(())
     }
+
+    /// Collect every rank's per-bucket error-feedback residuals (rank ->
+    /// bucket -> residual columns) for checkpoint capture. Uncompressed
+    /// codecs report empty residual vectors.
+    pub fn export_residuals(&self) -> Result<Vec<Vec<Vec<f32>>>> {
+        let mut out = Vec::with_capacity(self.cmds.len());
+        for (rank, tx) in self.cmds.iter().enumerate() {
+            let (rtx, rrx) = channel();
+            tx.send(TeamCmd::ExportResiduals(rtx))
+                .map_err(|_| crate::err!("rank {rank}'s thread is gone (exited or panicked)"))?;
+            out.push(
+                rrx.recv()
+                    .map_err(|_| crate::err!("rank {rank} died exporting residuals"))?,
+            );
+        }
+        Ok(out)
+    }
+
+    /// Fast-forward every rank's worker past `steps` completed steps
+    /// (checkpoint resume): replays each worker's per-step RNG draw
+    /// sequence so the continuation samples the exact batches and
+    /// injector draws the uninterrupted run would have.
+    pub fn fast_forward(&self, steps: u64, local_batch: usize, d: usize) -> Result<()> {
+        for (rank, tx) in self.cmds.iter().enumerate() {
+            tx.send(TeamCmd::FastForward {
+                steps,
+                local_batch,
+                d,
+            })
+            .map_err(|_| crate::err!("rank {rank}'s thread is gone (exited or panicked)"))?;
+        }
+        Ok(())
+    }
+
+    /// Restore every rank's error-feedback residuals from a checkpoint
+    /// (shape-mismatched entries are ignored by the codec).
+    pub fn import_residuals(&self, residuals: Vec<Vec<Vec<f32>>>) -> Result<()> {
+        ensure!(
+            residuals.len() == self.cmds.len(),
+            "residual sets for {} ranks but the team has {}",
+            residuals.len(),
+            self.cmds.len()
+        );
+        for ((rank, tx), r) in self.cmds.iter().enumerate().zip(residuals) {
+            tx.send(TeamCmd::ImportResiduals(r))
+                .map_err(|_| crate::err!("rank {rank}'s thread is gone (exited or panicked)"))?;
+        }
+        Ok(())
+    }
+}
+
+/// Build one rank thread: its own executable, codec, command channel.
+#[allow(clippy::too_many_arguments)]
+fn spawn_rank(
+    rt: &Runtime,
+    artifact: &str,
+    worker: Worker,
+    port: RankPort,
+    buckets: &Buckets,
+    local_batch: usize,
+    par: &ParallelCtx,
+    compress: Option<(CompressorKind, u64)>,
+) -> Result<(Sender<TeamCmd>, JoinHandle<()>)> {
+    let rank = worker.rank;
+    let exe = rt
+        .load_owned(artifact)
+        .with_context(|| format!("building rank {rank}'s executable"))?;
+    let (tx, rx) = channel();
+    let bk = buckets.clone();
+    let rank_par = par.clone();
+    let name = match port.node() {
+        0 => format!("rank-{rank}"),
+        node => format!("node{node}-rank{rank}"),
+    };
+    let codec = match compress {
+        Some((kind, seed)) => RankCodec::new(kind, seed, rank, buckets.len()),
+        None => RankCodec::new(CompressorKind::None, 0, rank, buckets.len()),
+    };
+    let h = std::thread::Builder::new()
+        .name(name)
+        .spawn(move || rank_main(worker, exe, port, bk, local_batch, rank_par, codec, rx))
+        .with_context(|| format!("spawning rank {rank} thread"))?;
+    Ok((tx, h))
 }
 
 impl Drop for RankTeam {
@@ -229,6 +400,15 @@ fn rank_main(
                 }
             }
             Ok(TeamCmd::Reset) => codec.reset(),
+            Ok(TeamCmd::ExportResiduals(tx)) => {
+                let _ = tx.send(codec.export_residuals());
+            }
+            Ok(TeamCmd::ImportResiduals(r)) => codec.import_residuals(r),
+            Ok(TeamCmd::FastForward {
+                steps,
+                local_batch,
+                d,
+            }) => worker.fast_forward(steps, local_batch, d),
             Err(_) => break,
         }
     }
@@ -372,6 +552,83 @@ mod tests {
             }
             assert!(r.bucket_s.iter().all(|&s| s >= 0.0 && s <= r.compute_s + 1e-9));
         }
+    }
+
+    #[test]
+    fn elastic_team_respawns_a_dead_rank() {
+        // Rank 1 carries `panic-at:0`: its compute errors on the first
+        // step, the elastic ingest completes from the survivors, and a
+        // fresh fast-forwarded worker rejoins for a full-strength step.
+        let rt = interp_runtime();
+        let artifact = "linreg_b16";
+        let exe = rt.load(artifact).unwrap();
+        let d = exe.spec.param_dim;
+        let local_batch = exe.spec.local_batch();
+        let buckets = Buckets::fixed(d, 300);
+        let spec = rt.manifest.get(artifact).unwrap();
+        let mut workers = mk_workers(&rt, artifact, 3);
+        workers[1] = Worker::new(
+            1,
+            crate::data::for_model(&spec.model, 7, 1, 0.0, &spec.meta).unwrap(),
+            GradInjector::parse("panic-at:0").unwrap(),
+            7,
+        );
+        let mut team = RankTeam::spawn_elastic(
+            &rt,
+            artifact,
+            workers,
+            &buckets,
+            local_batch,
+            &ParallelCtx::serial(),
+            None,
+            None,
+        )
+        .unwrap();
+        let params = Arc::new(exe.spec.load_init(0).unwrap());
+        team.begin_step(&params, 0).unwrap();
+        let rep = team
+            .exchange()
+            .leader_ingest_elastic(&buckets, 1, &mut |_, _, _| {})
+            .unwrap();
+        assert_eq!(rep.live(), 2);
+        assert_eq!(rep.dead.len(), 1);
+        assert_eq!(rep.dead[0].0, 1);
+        assert!(rep.dead[0].1.contains("injected panic"), "{}", rep.dead[0].1);
+        // Rejoin: fresh healthy worker, fast-forwarded past step 0.
+        let gen = crate::data::for_model(&spec.model, 7, 1, 0.0, &spec.meta).unwrap();
+        let mut w = Worker::new(1, gen, GradInjector::None, 7);
+        w.fast_forward(1, local_batch, d);
+        team.respawn(&rt, w).unwrap();
+        team.begin_step(&params, 1).unwrap();
+        let rep = team
+            .exchange()
+            .leader_ingest_elastic(&buckets, 3, &mut |_, _, _| {})
+            .unwrap();
+        assert_eq!(rep.live(), 3);
+        assert!(rep.dead.is_empty());
+    }
+
+    #[test]
+    fn respawn_rejects_non_elastic_team() {
+        let rt = interp_runtime();
+        let artifact = "linreg_b16";
+        let exe = rt.load(artifact).unwrap();
+        let buckets = Buckets::single(exe.spec.param_dim);
+        let spec = rt.manifest.get(artifact).unwrap();
+        let mut team = RankTeam::spawn(
+            &rt,
+            artifact,
+            mk_workers(&rt, artifact, 2),
+            &buckets,
+            exe.spec.local_batch(),
+            &ParallelCtx::serial(),
+            None,
+            None,
+        )
+        .unwrap();
+        let gen = crate::data::for_model(&spec.model, 7, 0, 0.0, &spec.meta).unwrap();
+        let w = Worker::new(0, gen, GradInjector::None, 7);
+        assert!(team.respawn(&rt, w).unwrap_err().to_string().contains("elastic"));
     }
 
     #[test]

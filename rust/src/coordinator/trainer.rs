@@ -24,8 +24,9 @@ use crate::collective::{CostModel, HierCostModel, SimClock};
 use crate::compress::{CompressScope, RankCodec};
 use crate::config::TrainConfig;
 use crate::coordinator::eval::{EvalOutcome, Evaluator};
-use crate::coordinator::pipeline::PipelinedExecutor;
+use crate::coordinator::pipeline::{ElasticPolicy, PipelinedExecutor};
 use crate::coordinator::team::RankTeam;
+use crate::coordinator::Checkpoint;
 use crate::optim::{self, clip_global_norm, Optimizer};
 use crate::parallel::{ParPlan, ParallelCtx};
 use crate::runtime::{Executable, Runtime};
@@ -80,6 +81,11 @@ pub struct TrainResult {
     pub exposed_inter_comm_s: f64,
     /// The run's topology (`flat` or `hier:<nodes>x<gpus>`).
     pub topology: String,
+    /// Steps finalized from a strict subset of ranks (straggler cutoff,
+    /// krum filtering, or a rank death); 0 without `--cutoff`.
+    pub degraded_steps: usize,
+    /// Dead ranks replaced mid-run by fresh fast-forwarded workers.
+    pub rejoins: usize,
 }
 
 impl TrainResult {
@@ -137,6 +143,11 @@ pub struct Trainer {
     codecs: Vec<RankCodec>,
     pub params: Vec<f32>,
     start_step: usize,
+    /// Flat set-codec state in transit: inbound from `restore()` (the
+    /// executor that owns the codec is built inside `run()`), outbound
+    /// captured from the executor when `run()` finishes so
+    /// [`Trainer::checkpoint`] can persist it.
+    set_codec_state: Option<(u64, Vec<Vec<f32>>)>,
 }
 
 impl Trainer {
@@ -218,17 +229,32 @@ impl Trainer {
         let ranks = if cfg.rank_threads {
             // Spawn the rank threads once; they persist across every step
             // of the run and join when the trainer drops. On hierarchical
-            // topologies the team is grouped per node.
-            Ranks::Threaded(RankTeam::spawn(
-                &rt,
-                &cfg.artifact,
-                workers,
-                &buckets,
-                exe.spec.local_batch(),
-                &par,
-                hier.as_ref().map(|h| &h.map),
-                per_rank_active.then_some((spec.kind, cfg.seed)),
-            )?)
+            // topologies the team is grouped per node. With `--cutoff`
+            // the team is elastic: dead ranks can be respawned in place.
+            let team = if cfg.cutoff.is_some() {
+                RankTeam::spawn_elastic(
+                    &rt,
+                    &cfg.artifact,
+                    workers,
+                    &buckets,
+                    exe.spec.local_batch(),
+                    &par,
+                    hier.as_ref().map(|h| &h.map),
+                    per_rank_active.then_some((spec.kind, cfg.seed)),
+                )?
+            } else {
+                RankTeam::spawn(
+                    &rt,
+                    &cfg.artifact,
+                    workers,
+                    &buckets,
+                    exe.spec.local_batch(),
+                    &par,
+                    hier.as_ref().map(|h| &h.map),
+                    per_rank_active.then_some((spec.kind, cfg.seed)),
+                )?
+            };
+            Ranks::Threaded(team)
         } else {
             Ranks::RoundRobin(workers)
         };
@@ -247,28 +273,94 @@ impl Trainer {
             codecs,
             params,
             start_step: 0,
+            set_codec_state: None,
         })
     }
 
-    /// Resume from a checkpoint (params + step counter). Compression
-    /// error-feedback residuals are dropped everywhere — the restored
-    /// parameters invalidate errors accumulated against the abandoned
-    /// iterate.
-    pub fn restore(&mut self, ck: &crate::coordinator::Checkpoint) -> Result<()> {
+    /// Resume from a checkpoint: restore the **complete** training
+    /// state — parameters + step counter, optimizer slots, aggregator
+    /// momentum, and the compression error-feedback residuals the v2
+    /// format captures (the former residual-discarding restore silently
+    /// perturbed every compressed continuation; the v1 fallback still
+    /// resets them, since that format never recorded any). Every
+    /// worker's data stream and injector RNG is fast-forwarded past the
+    /// completed steps, so a fault-free continuation replays the
+    /// original run bitwise.
+    pub fn restore(&mut self, ck: &Checkpoint) -> Result<()> {
         ensure!(
             ck.params.len() == self.params.len(),
             "checkpoint dim mismatch"
         );
+        let d = self.exe.spec.param_dim;
+        let local_batch = self.exe.spec.local_batch();
         self.params = ck.params.clone();
         self.start_step = ck.step as usize;
-        for codec in &mut self.codecs {
-            codec.reset();
+        self.optimizer.import_state(ck.opt_t, &ck.opt_slots);
+        self.aggregator.import_state(&ck.agg_state);
+        let have_residuals = ck.rank_residuals.len() == self.cfg.workers;
+        match &mut self.ranks {
+            Ranks::RoundRobin(workers) => {
+                if have_residuals {
+                    for (codec, r) in self.codecs.iter_mut().zip(&ck.rank_residuals) {
+                        codec.import_residuals(r.clone());
+                    }
+                } else {
+                    for codec in &mut self.codecs {
+                        codec.reset();
+                    }
+                }
+                for w in workers.iter_mut() {
+                    w.fast_forward(ck.step, local_batch, d);
+                }
+            }
+            Ranks::Threaded(team) => {
+                if have_residuals {
+                    team.import_residuals(ck.rank_residuals.clone())?;
+                } else {
+                    team.reset_codecs()?;
+                }
+                team.fast_forward(ck.step, local_batch, d)?;
+            }
         }
-        if let Ranks::Threaded(team) = &self.ranks {
-            team.reset_codecs()?;
+        // The flat low-rank set codec lives on the executor, which is
+        // built inside `run()` — stash its state until then. The
+        // aggregator-level set codec (hier compression) is not in the
+        // checkpoint format; drop its residuals as before.
+        self.set_codec_state = ck.set_codec.clone();
+        if ck.set_codec.is_none() {
+            self.aggregator.reset_compression();
         }
-        self.aggregator.reset_compression();
         Ok(())
+    }
+
+    /// Capture the complete training state after `step` completed steps,
+    /// with `set_codec` supplied by whoever holds the executor.
+    fn snapshot(&self, step: u64, set_codec: Option<(u64, Vec<Vec<f32>>)>) -> Result<Checkpoint> {
+        let (opt_t, opt_slots) = self.optimizer.export_state();
+        let rank_residuals = match &self.ranks {
+            Ranks::RoundRobin(_) => self.codecs.iter().map(|c| c.export_residuals()).collect(),
+            Ranks::Threaded(team) => team.export_residuals()?,
+        };
+        Ok(Checkpoint {
+            step,
+            params: self.params.clone(),
+            opt_t,
+            opt_slots,
+            agg_state: self.aggregator.export_state(),
+            rank_residuals,
+            set_codec,
+        })
+    }
+
+    /// Full-state checkpoint of the trainer as it stands — intended
+    /// after [`Trainer::run`] returns (the recorded step is the total
+    /// completed step count, and the set-codec state is the one the
+    /// finished run exported).
+    pub fn checkpoint(&self) -> Result<Checkpoint> {
+        self.snapshot(
+            (self.start_step + self.cfg.steps) as u64,
+            self.set_codec_state.clone(),
+        )
     }
 
     pub fn local_batch(&self) -> usize {
@@ -305,6 +397,17 @@ impl Trainer {
             self.hier.clone(),
         );
         exec.set_compression(self.cfg.compression, self.cfg.seed);
+        if let Some((cstep, banks)) = self.set_codec_state.take() {
+            exec.import_set_codec(cstep, banks);
+        }
+        let policy = self.cfg.cutoff.map(|c| ElasticPolicy {
+            k: c.k,
+            grace_s: c.grace_ms / 1000.0,
+            krum_f: self.cfg.krum_f,
+        });
+        let model = self.exe.spec.model.clone();
+        let mut degraded_steps = 0usize;
+        let mut rejoins = 0usize;
         let mut exposed_comm_total = 0.0f64;
         let mut serial_comm_total = 0.0f64;
         let mut exposed_intra_total = 0.0f64;
@@ -369,18 +472,33 @@ impl Trainer {
                 Ranks::Threaded(team) => {
                     // Broadcast this step's parameters; the rank threads
                     // compute concurrently while the leader ingests their
-                    // buckets in arrival order.
+                    // buckets in arrival order. With `--cutoff` the step
+                    // runs elastically: the leader finalizes from the
+                    // quorum, cutting stragglers and surviving deaths.
                     let params = Arc::new(self.params.clone());
                     team.begin_step(&params, step as u64)?;
-                    let outcome = exec.run_step_exchange(
-                        team.exchange(),
-                        self.aggregator.as_mut(),
-                        &mut grads,
-                        &mut agg,
-                        &self.par,
-                        &mut clock,
-                        &self.cost,
-                    )?;
+                    let outcome = match &policy {
+                        Some(p) => exec.run_step_elastic(
+                            team.exchange(),
+                            p,
+                            self.aggregator.as_mut(),
+                            &self.cfg.aggregator,
+                            &mut grads,
+                            &mut agg,
+                            &self.par,
+                            &mut clock,
+                            &self.cost,
+                        )?,
+                        None => exec.run_step_exchange(
+                            team.exchange(),
+                            self.aggregator.as_mut(),
+                            &mut grads,
+                            &mut agg,
+                            &self.par,
+                            &mut clock,
+                            &self.cost,
+                        )?,
+                    };
                     // Wall grad phase = the slowest rank's on-thread
                     // compute: the ranks ran concurrently (with each
                     // other and the leader's aggregation work), so their
@@ -393,6 +511,42 @@ impl Trainer {
                     outcome
                 }
             };
+            // --- rank rejoin: replace every rank that died this step
+            //     with a fresh worker fast-forwarded past the completed
+            //     steps (its data stream and injector RNG land exactly
+            //     where the dead rank's would have), so the team is back
+            //     at full strength before the next broadcast.
+            if outcome.survivors < n {
+                degraded_steps += 1;
+            }
+            if !outcome.dead_ranks.is_empty() {
+                if let Ranks::Threaded(team) = &mut self.ranks {
+                    for &rank in &outcome.dead_ranks {
+                        if self.cfg.log_every > 0 {
+                            crate::log_info!("step {step}: rank {rank} died; respawning");
+                        }
+                        let gen = crate::data::for_model(
+                            &model,
+                            self.cfg.seed,
+                            rank as u64,
+                            self.cfg.heterogeneity,
+                            &self.exe.spec.meta,
+                        )
+                        .with_context(|| format!("no data generator for model {model}"))?;
+                        let injector = self
+                            .cfg
+                            .injectors
+                            .iter()
+                            .find(|(r, _)| *r == rank)
+                            .map(|(_, i)| i.clone())
+                            .unwrap_or(crate::data::GradInjector::None);
+                        let mut w = Worker::new(rank, gen, injector, self.cfg.seed);
+                        w.fast_forward(step as u64 + 1, local_batch, d);
+                        team.respawn(&self.rt, w)?;
+                        rejoins += 1;
+                    }
+                }
+            }
             phases.add("grad", grad_s);
             phases.add("aggregate", (step_t.elapsed_s() - grad_s).max(0.0));
             train_loss.push(outcome.mean_loss);
@@ -439,6 +593,13 @@ impl Trainer {
             if self.cfg.log_every > 0 && step % self.cfg.log_every == 0 {
                 crate::log_debug!("step {step}: train loss {:.5}", train_loss.last().unwrap());
             }
+            // --- periodic full-state checkpoint
+            if self.cfg.checkpoint_every > 0 && (step + 1) % self.cfg.checkpoint_every == 0 {
+                if let Some(path) = self.cfg.checkpoint_path.clone() {
+                    self.snapshot(step as u64 + 1, exec.export_set_codec())?
+                        .save(&path)?;
+                }
+            }
             if let Some(w) = &mut jsonl {
                 use crate::util::json::{num, obj, s};
                 let mut rec = vec![
@@ -463,6 +624,7 @@ impl Trainer {
         if let Some(w) = &mut jsonl {
             w.flush()?;
         }
+        self.set_codec_state = exec.export_set_codec();
 
         let steps = self.cfg.steps.max(1) as f64;
         Ok(TrainResult {
@@ -483,6 +645,8 @@ impl Trainer {
             exposed_intra_comm_s: exposed_intra_total / steps,
             exposed_inter_comm_s: exposed_inter_total / steps,
             topology: self.cfg.topology.describe(),
+            degraded_steps,
+            rejoins,
         })
     }
 }

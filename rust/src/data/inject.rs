@@ -25,11 +25,37 @@ pub enum GradInjector {
     HeavyTail { dof: f64, scale: f32 },
     /// Fires `inner` only with probability `p` per step.
     Intermittent { p: f64, inner: Box<GradInjector> },
+    /// Chaos: the rank's compute fails (thread death) exactly at this
+    /// step index — deterministic, for replayable fault drills.
+    PanicAt(u64),
+    /// Chaos: the rank's compute fails with probability `p` per step.
+    PanicProb(f64),
+    /// Chaos: with probability `p` the rank's reported compute time is
+    /// inflated by `factor` (an injected straggler).
+    DelayProb { p: f64, factor: f64 },
+    /// Chaos: with probability `p` the rank ships an all-NaN gradient
+    /// (corrupted buffers) — the krum filter's target.
+    NanProb(f64),
+}
+
+/// A process-level fault decision for one step, drawn *before* the
+/// gradient is computed ([`GradInjector::step_fault`]). Value-independent:
+/// probability-based variants draw exactly one uniform per step whether or
+/// not they fire, so a replayed RNG stream stays aligned.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StepFault {
+    /// No process-level fault this step.
+    None,
+    /// The rank's compute fails this step.
+    Panic,
+    /// The rank's compute time is multiplied by this factor.
+    Delay(f64),
 }
 
 impl GradInjector {
     /// Parse `none`, `sign-flip`, `scale:100`, `zero`, `noise:0.5`,
-    /// `heavy-tail:2:0.5`, `intermittent:0.1:sign-flip`.
+    /// `heavy-tail:2:0.5`, `intermittent:0.1:sign-flip`, and the chaos
+    /// forms `panic-at:3`, `panic:0.05`, `delay:0.3:4`, `nan:0.1`.
     pub fn parse(s: &str) -> Option<GradInjector> {
         let parts: Vec<&str> = s.splitn(3, ':').collect();
         match parts.as_slice() {
@@ -46,7 +72,46 @@ impl GradInjector {
                 p: p.parse().ok()?,
                 inner: Box::new(GradInjector::parse(rest)?),
             }),
+            ["panic-at", s] => Some(GradInjector::PanicAt(s.parse().ok()?)),
+            ["panic", p] => Some(GradInjector::PanicProb(p.parse().ok()?)),
+            ["delay", p, f] => Some(GradInjector::DelayProb {
+                p: p.parse().ok()?,
+                factor: f.parse().ok()?,
+            }),
+            ["nan", p] => Some(GradInjector::NanProb(p.parse().ok()?)),
             _ => None,
+        }
+    }
+
+    /// Decide this step's process-level fault. Probability-based chaos
+    /// variants (`panic:p`, `delay:p:f`) draw exactly one uniform per call
+    /// whether or not they fire; every other variant draws nothing. This
+    /// keeps the rank's injection RNG stream value-independent, so
+    /// checkpoint fast-forward can replay the exact draw count.
+    pub fn step_fault(&self, step: u64, rng: &mut Rng) -> StepFault {
+        match self {
+            GradInjector::PanicAt(s) => {
+                if step == *s {
+                    StepFault::Panic
+                } else {
+                    StepFault::None
+                }
+            }
+            GradInjector::PanicProb(p) => {
+                if rng.uniform() < *p {
+                    StepFault::Panic
+                } else {
+                    StepFault::None
+                }
+            }
+            GradInjector::DelayProb { p, factor } => {
+                if rng.uniform() < *p {
+                    StepFault::Delay(*factor)
+                } else {
+                    StepFault::None
+                }
+            }
+            _ => StepFault::None,
         }
     }
 
@@ -83,6 +148,19 @@ impl GradInjector {
                     inner.apply(grad, rng);
                 }
             }
+            // One uniform per step whether or not it fires (replayable).
+            GradInjector::NanProb(p) => {
+                if rng.uniform() < *p {
+                    for g in grad.iter_mut() {
+                        *g = f32::NAN;
+                    }
+                }
+            }
+            // Process-level faults: the gradient itself is untouched;
+            // `step_fault` owns their RNG draws.
+            GradInjector::PanicAt(_)
+            | GradInjector::PanicProb(_)
+            | GradInjector::DelayProb { .. } => {}
         }
     }
 }
@@ -112,6 +190,86 @@ mod tests {
         ));
         assert!(GradInjector::parse("bogus").is_none());
         assert!(GradInjector::parse("scale:x").is_none());
+        assert_eq!(
+            GradInjector::parse("panic-at:3").unwrap(),
+            GradInjector::PanicAt(3)
+        );
+        assert_eq!(
+            GradInjector::parse("panic:0.05").unwrap(),
+            GradInjector::PanicProb(0.05)
+        );
+        assert_eq!(
+            GradInjector::parse("delay:0.3:4").unwrap(),
+            GradInjector::DelayProb { p: 0.3, factor: 4.0 }
+        );
+        assert_eq!(
+            GradInjector::parse("nan:0.1").unwrap(),
+            GradInjector::NanProb(0.1)
+        );
+        assert!(GradInjector::parse("panic-at:x").is_none());
+        assert!(GradInjector::parse("delay:0.3").is_none());
+    }
+
+    #[test]
+    fn step_faults_fire_as_specified() {
+        let mut rng = Rng::new(7);
+        let at = GradInjector::PanicAt(3);
+        assert_eq!(at.step_fault(2, &mut rng), StepFault::None);
+        assert_eq!(at.step_fault(3, &mut rng), StepFault::Panic);
+        assert_eq!(at.step_fault(4, &mut rng), StepFault::None);
+
+        let delay = GradInjector::DelayProb { p: 1.0, factor: 4.0 };
+        assert_eq!(delay.step_fault(0, &mut rng), StepFault::Delay(4.0));
+        let never = GradInjector::DelayProb { p: 0.0, factor: 4.0 };
+        assert_eq!(never.step_fault(0, &mut rng), StepFault::None);
+
+        let mut fired = 0;
+        let panic = GradInjector::PanicProb(0.5);
+        for s in 0..200 {
+            if panic.step_fault(s, &mut rng) == StepFault::Panic {
+                fired += 1;
+            }
+        }
+        assert!(fired > 50 && fired < 150, "{fired}");
+        // Gradient-only injectors never raise process faults.
+        assert_eq!(
+            GradInjector::SignFlip.step_fault(0, &mut rng),
+            StepFault::None
+        );
+    }
+
+    #[test]
+    fn step_fault_draw_count_is_value_independent() {
+        // Two streams with the same seed stay aligned regardless of the
+        // step index passed in — one draw per call for prob variants.
+        let inj = GradInjector::PanicProb(0.5);
+        let mut a = Rng::new(11);
+        let mut b = Rng::new(11);
+        for s in 0..50 {
+            let _ = inj.step_fault(s, &mut a);
+            let _ = inj.step_fault(1000 + s, &mut b);
+        }
+        assert_eq!(a.uniform(), b.uniform());
+        // Deterministic variants draw nothing.
+        let mut c = Rng::new(11);
+        for s in 0..50 {
+            let _ = GradInjector::PanicAt(7).step_fault(s, &mut c);
+        }
+        let mut d = Rng::new(11);
+        assert_eq!(c.uniform(), d.uniform());
+    }
+
+    #[test]
+    fn nan_injector_poisons_gradient() {
+        let inj = GradInjector::NanProb(1.0);
+        let mut rng = Rng::new(3);
+        let mut g = vec![1.0f32, -2.0];
+        inj.apply(&mut g, &mut rng);
+        assert!(g.iter().all(|x| x.is_nan()));
+        let never = GradInjector::NanProb(0.0);
+        let mut g = vec![1.0f32, -2.0];
+        never.apply(&mut g, &mut rng);
+        assert_eq!(g, vec![1.0, -2.0]);
     }
 
     #[test]

@@ -16,7 +16,7 @@ pub mod linreg;
 pub mod text;
 
 pub use array::{Array, Batch};
-pub use inject::GradInjector;
+pub use inject::{GradInjector, StepFault};
 
 use crate::util::prng::Rng;
 

@@ -33,6 +33,8 @@ USAGE:
                 [--topology flat|hier:<nodes>x<gpus>] [--heterogeneity H]
                 [--inject RANK:SPEC] [--par-threads N] [--par-min-shard-elems N]
                 [--fabric-gbps G] [--save-checkpoint PATH] [--load-checkpoint PATH]
+                [--cutoff k-of-n[:grace_ms]|none] [--krum F]
+                [--checkpoint-every S --checkpoint-path PATH] [--resume PATH]
                 [--csv PATH]
   adacons figure fig2|fig3|fig4|fig5|fig6|fig7|fig8|all [--out-dir DIR] [--steps-scale F]
   adacons table  table1|table2|all [--out-dir DIR] [--steps-scale F]
@@ -108,7 +110,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.apply_args(args)?;
     let rt = Arc::new(Runtime::open_default_with(cfg.backend)?);
     let mut trainer = Trainer::new(rt, cfg.clone())?;
-    if let Some(path) = args.str_opt("load-checkpoint") {
+    if let Some(path) = args.str_opt("resume").or_else(|| args.str_opt("load-checkpoint")) {
         let ck = Checkpoint::load(path)?;
         trainer.restore(&ck).context("restoring checkpoint")?;
         println!("restored checkpoint at step {}", ck.step);
@@ -157,13 +159,15 @@ fn cmd_train(args: &Args) -> Result<()> {
             cfg.compression.scope.tag(),
         );
     }
+    if cfg.cutoff.is_some() {
+        println!(
+            "elastic: {} degraded steps, {} rank rejoins",
+            res.degraded_steps, res.rejoins,
+        );
+    }
     print!("{}", res.phases.report());
     if let Some(path) = args.str_opt("save-checkpoint") {
-        Checkpoint {
-            step: cfg.steps as u64,
-            params: res.final_params.clone(),
-        }
-        .save(path)?;
+        trainer.checkpoint()?.save(path)?;
         println!("saved checkpoint to {path}");
     }
     if let Some(path) = args.str_opt("csv") {

@@ -7,6 +7,21 @@ pub trait Optimizer: Send {
     /// `params -= lr * f(direction)` where `f` is the optimizer's transform.
     fn step(&mut self, params: &mut [f32], direction: &[f32], lr: f32);
     fn reset(&mut self);
+
+    /// Serializable state for checkpointing: a step counter plus flat f32
+    /// slot vectors (momentum/variance buffers). Stateless optimizers
+    /// export `(0, [])`.
+    fn export_state(&self) -> (u64, Vec<Vec<f32>>) {
+        (0, Vec::new())
+    }
+
+    /// Restore state exported by [`Optimizer::export_state`]. Slots whose
+    /// shapes do not match this optimizer (e.g. a v1 checkpoint with no
+    /// optimizer section) are ignored — the optimizer keeps fresh state,
+    /// which matches the pre-versioned restore behaviour.
+    fn import_state(&mut self, t: u64, slots: &[Vec<f32>]) {
+        let _ = (t, slots);
+    }
 }
 
 /// Plain SGD.
@@ -64,6 +79,16 @@ impl Optimizer for SgdMomentum {
     fn reset(&mut self) {
         self.velocity.iter_mut().for_each(|v| *v = 0.0);
     }
+
+    fn export_state(&self) -> (u64, Vec<Vec<f32>>) {
+        (0, vec![self.velocity.clone()])
+    }
+
+    fn import_state(&mut self, _t: u64, slots: &[Vec<f32>]) {
+        if slots.len() == 1 && slots[0].len() == self.velocity.len() {
+            self.velocity.copy_from_slice(&slots[0]);
+        }
+    }
 }
 
 /// Adam (Kingma & Ba) with bias correction.
@@ -118,6 +143,18 @@ impl Optimizer for Adam {
         self.v.iter_mut().for_each(|x| *x = 0.0);
         self.t = 0;
     }
+
+    fn export_state(&self) -> (u64, Vec<Vec<f32>>) {
+        (self.t as u64, vec![self.m.clone(), self.v.clone()])
+    }
+
+    fn import_state(&mut self, t: u64, slots: &[Vec<f32>]) {
+        if slots.len() == 2 && slots[0].len() == self.m.len() && slots[1].len() == self.v.len() {
+            self.m.copy_from_slice(&slots[0]);
+            self.v.copy_from_slice(&slots[1]);
+            self.t = t as i32;
+        }
+    }
 }
 
 /// AdamW — Adam with decoupled weight decay.
@@ -148,6 +185,14 @@ impl Optimizer for AdamW {
 
     fn reset(&mut self) {
         self.inner.reset();
+    }
+
+    fn export_state(&self) -> (u64, Vec<Vec<f32>>) {
+        self.inner.export_state()
+    }
+
+    fn import_state(&mut self, t: u64, slots: &[Vec<f32>]) {
+        self.inner.import_state(t, slots);
     }
 }
 
@@ -203,6 +248,14 @@ impl Optimizer for Lamb {
 
     fn reset(&mut self) {
         self.inner.reset();
+    }
+
+    fn export_state(&self) -> (u64, Vec<Vec<f32>>) {
+        self.inner.export_state()
+    }
+
+    fn import_state(&mut self, t: u64, slots: &[Vec<f32>]) {
+        self.inner.import_state(t, slots);
     }
 }
 
@@ -265,5 +318,46 @@ mod tests {
         opt.step(&mut x, &[0.0], 0.1);
         assert!(x[0] < 1.0); // decay applied
         assert!(x[0] > 0.95);
+    }
+
+    #[test]
+    fn state_round_trip_is_bitwise_for_stateful_optimizers() {
+        // Export mid-run, import into a fresh optimizer, and the next
+        // step must be bitwise-equal to the uninterrupted one — the
+        // checkpoint/resume contract.
+        let mk: Vec<Box<dyn Fn() -> Box<dyn Optimizer>>> = vec![
+            Box::new(|| Box::new(Sgd::new())),
+            Box::new(|| Box::new(SgdMomentum::new(3, 0.9))),
+            Box::new(|| Box::new(Adam::new(3, 0.9, 0.999, 1e-8))),
+            Box::new(|| Box::new(AdamW::new(3, 0.9, 0.999, 1e-8, 0.01))),
+            Box::new(|| Box::new(Lamb::new(3, 0.9, 0.999, 1e-6, 0.01))),
+        ];
+        for f in mk {
+            let mut a = f();
+            let mut xa = vec![1.0f32, -2.0, 3.0];
+            for _ in 0..3 {
+                let g = xa.clone();
+                a.step(&mut xa, &g, 0.05);
+            }
+            let (t, slots) = a.export_state();
+            let mut b = f();
+            let mut xb = xa.clone();
+            b.import_state(t, &slots);
+            let g = xa.clone();
+            a.step(&mut xa, &g.clone(), 0.05);
+            b.step(&mut xb, &g, 0.05);
+            assert_eq!(xa, xb, "{}", a.name());
+        }
+    }
+
+    #[test]
+    fn import_ignores_mismatched_slots() {
+        // A v1 checkpoint has no optimizer section: empty slots must leave
+        // fresh state untouched rather than panic or corrupt.
+        let mut opt = Adam::new(2, 0.9, 0.999, 1e-8);
+        opt.import_state(7, &[]);
+        let (t, slots) = opt.export_state();
+        assert_eq!(t, 0);
+        assert_eq!(slots, vec![vec![0.0f32; 2], vec![0.0f32; 2]]);
     }
 }

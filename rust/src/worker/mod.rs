@@ -13,10 +13,10 @@
 //!
 //! [`SimClock`]: crate::collective::SimClock
 
-use crate::data::{Batch, DataGen, GradInjector};
+use crate::data::{Batch, DataGen, GradInjector, StepFault};
 use crate::runtime::Executable;
 use crate::tensor::Buckets;
-use crate::util::error::Result;
+use crate::util::error::{err, Result};
 use crate::util::prng::Rng;
 
 pub struct Worker {
@@ -38,6 +38,9 @@ pub struct Worker {
     /// `compute_grad_buckets` call — the measured readiness the
     /// topology-aware timeline consumes in threaded mode.
     bucket_s: Vec<f64>,
+    /// Local step counter: drives step-keyed fault injection
+    /// (`panic-at:S`) and checkpoint/rejoin fast-forward.
+    step: u64,
 }
 
 impl Worker {
@@ -52,6 +55,36 @@ impl Worker {
             grad_buf: Vec::new(),
             bucket_fill: Vec::new(),
             bucket_s: Vec::new(),
+            step: 0,
+        }
+    }
+
+    /// Steps this worker has drawn so far (completed or panicked).
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
+    /// Advance the worker's deterministic streams past `steps` completed
+    /// steps without computing anything — replays exactly the per-step
+    /// draw sequence of a live step (fault decision, data batch, injector
+    /// application on a zero scratch gradient of length `d`), so a fresh
+    /// worker fast-forwarded to step `S` continues bitwise-identically to
+    /// one that trained through `S`. Used by checkpoint `--resume` and by
+    /// rank rejoin after a fault.
+    pub fn fast_forward(&mut self, steps: u64, local_batch: usize, d: usize) {
+        let mut scratch = if matches!(self.injector, GradInjector::None) {
+            Vec::new()
+        } else {
+            vec![0.0f32; d]
+        };
+        for _ in 0..steps {
+            let _ = self.injector.step_fault(self.step, &mut self.inject_rng);
+            let _ = self.gen.next_batch(local_batch);
+            if !matches!(self.injector, GradInjector::None) {
+                scratch.fill(0.0);
+                self.injector.apply(&mut scratch, &mut self.inject_rng);
+            }
+            self.step += 1;
         }
     }
 
@@ -71,6 +104,11 @@ impl Worker {
 
     /// Compute the local gradient into `grad_out` via the PJRT executable,
     /// then apply this rank's failure injection.
+    ///
+    /// Process-level chaos faults fire here: an injected panic returns an
+    /// error before any compute (in threaded mode the rank thread dies and
+    /// its `Down` guard fires), an injected delay inflates the reported
+    /// compute seconds (a straggler the cutoff path can drop).
     pub fn compute_grad(
         &mut self,
         exe: &Executable,
@@ -78,10 +116,22 @@ impl Worker {
         local_batch: usize,
         grad_out: &mut [f32],
     ) -> Result<()> {
-        let batch = self.next_batch(local_batch);
+        let fault = self.injector.step_fault(self.step, &mut self.inject_rng);
+        self.step += 1;
+        if fault == StepFault::Panic {
+            return Err(err!(
+                "injected panic at rank {} step {}",
+                self.rank,
+                self.step - 1
+            ));
+        }
+        let batch = self.gen.next_batch(local_batch);
         let t = crate::util::timer::Timer::start();
         let (loss, grads) = exe.run_train(params, &batch)?;
         self.last_compute_s = t.elapsed_s();
+        if let StepFault::Delay(f) = fault {
+            self.last_compute_s *= f;
+        }
         self.last_loss = loss;
         grad_out.copy_from_slice(&grads);
         self.injector.apply(grad_out, &mut self.inject_rng);
@@ -121,7 +171,8 @@ impl Worker {
         let mut grad_buf = std::mem::take(&mut self.grad_buf);
         grad_buf.resize(d, 0.0);
         if matches!(self.injector, GradInjector::None) {
-            let batch = self.next_batch(local_batch);
+            self.step += 1;
+            let batch = self.gen.next_batch(local_batch);
             self.bucket_fill.clear();
             self.bucket_fill.resize(buckets.len(), 0);
             self.bucket_s.clear();
@@ -204,6 +255,62 @@ mod tests {
         // keep the whole state tree (data gen, injector, RNG) Send.
         fn assert_send<T: Send>() {}
         assert_send::<Worker>();
+    }
+
+    #[test]
+    fn fast_forward_matches_live_draw_sequence() {
+        // A fresh worker fast-forwarded past N steps must sit at exactly
+        // the stream position of a worker that lived through them.
+        let meta = crate::util::json::Json::parse(r#"{"dim":16}"#).unwrap();
+        let mk = || {
+            Worker::new(
+                2,
+                crate::data::for_model("linreg", 7, 2, 0.0, &meta).unwrap(),
+                GradInjector::GaussNoise(0.1),
+                5,
+            )
+        };
+        let (lb, d) = (4, 8);
+        let mut live = mk();
+        for _ in 0..3 {
+            // Mimic compute_grad's draw sequence without an executable:
+            // fault decision, batch, injector application.
+            let _ = live.injector.step_fault(live.step, &mut live.inject_rng);
+            live.step += 1;
+            let _ = live.gen.next_batch(lb);
+            let mut g = vec![0.5f32; d];
+            live.injector.apply(&mut g, &mut live.inject_rng);
+        }
+        let mut ffwd = mk();
+        ffwd.fast_forward(3, lb, d);
+        assert_eq!(ffwd.step(), 3);
+        // Same next batch...
+        let (ba, bb) = (live.next_batch(lb), ffwd.next_batch(lb));
+        assert_eq!(ba[0].as_f32().unwrap(), bb[0].as_f32().unwrap());
+        // ...and the same next injector draws.
+        let mut ga = vec![1.0f32; d];
+        let mut gb = vec![1.0f32; d];
+        live.injector.apply(&mut ga, &mut live.inject_rng);
+        ffwd.injector.apply(&mut gb, &mut ffwd.inject_rng);
+        assert_eq!(ga, gb);
+    }
+
+    #[test]
+    fn fast_forward_consumes_step_keyed_faults() {
+        // Rejoining past a `panic-at:S` step must not re-fire the panic:
+        // the counter lands beyond S.
+        let mut w = Worker::new(
+            0,
+            Box::new(ConstGen(1.0, 4)),
+            GradInjector::PanicAt(1),
+            3,
+        );
+        w.fast_forward(2, 2, 4);
+        assert_eq!(w.step(), 2);
+        assert_eq!(
+            w.injector.step_fault(w.step, &mut w.inject_rng),
+            StepFault::None
+        );
     }
 
     #[test]

@@ -1,0 +1,244 @@
+//! Elastic fault-tolerance drills: rank death mid-step, straggler
+//! cutoff, krum NaN filtering, and full-state checkpoint/resume parity.
+//!
+//! These run on the native interpreter backend (deterministic SimClock
+//! timeline) so every fault is replayable from the printed seed. The CI
+//! chaos leg loops this suite at several `--test-threads` settings.
+
+use std::sync::Arc;
+
+use adacons::collective::TopologySpec;
+use adacons::compress::{CompressScope, CompressionSpec, CompressorKind};
+use adacons::config::{CutoffSpec, TrainConfig};
+use adacons::coordinator::{Checkpoint, Trainer};
+use adacons::data::GradInjector;
+use adacons::optim::Schedule;
+use adacons::runtime::{Backend, Manifest, Runtime};
+
+/// Every drill derives its faults from this seed; it is echoed per test so
+/// a CI failure line is enough to replay the exact fault sequence.
+const FAULT_SEED: u64 = 3;
+
+fn runtime() -> Option<Arc<Runtime>> {
+    if Runtime::HAS_PJRT {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("artifacts not built; skipping");
+            return None;
+        }
+        return Some(Arc::new(Runtime::create(dir).unwrap()));
+    }
+    Some(Arc::new(
+        Runtime::open_default_with(Backend::Interp).expect("interp backend always constructs"),
+    ))
+}
+
+/// Interp-only runtime: the elastic exchange and SimClock cutoff drills
+/// need the in-process transport, like the rank-threads parity tests.
+fn interp_runtime() -> Option<Arc<Runtime>> {
+    let rt = runtime()?;
+    if rt.backend() != Backend::Interp {
+        eprintln!("fault drills need the interp backend; skipping");
+        return None;
+    }
+    Some(rt)
+}
+
+fn linreg_cfg(aggregator: &str, steps: usize) -> TrainConfig {
+    TrainConfig {
+        artifact: "linreg_b16".into(),
+        workers: 8,
+        aggregator: aggregator.into(),
+        optimizer: "linreg-exact".into(),
+        schedule: Schedule::Const { lr: 0.0 },
+        steps,
+        seed: FAULT_SEED,
+        ..TrainConfig::default()
+    }
+}
+
+/// An elastic config: `k`-of-`workers` cutoff on the threaded runtime
+/// (the only mode the elastic exchange supports).
+fn elastic_cfg(aggregator: &str, steps: usize, workers: usize, k: usize) -> TrainConfig {
+    let mut cfg = linreg_cfg(aggregator, steps);
+    cfg.workers = workers;
+    cfg.rank_threads = true;
+    cfg.overlap = false;
+    cfg.cutoff = Some(CutoffSpec {
+        k,
+        n: workers,
+        grace_ms: 0.0,
+    });
+    cfg
+}
+
+#[test]
+fn rank_panic_mid_run_completes_from_survivors_and_rejoins() {
+    eprintln!("fault seed: {FAULT_SEED}");
+    let Some(rt) = interp_runtime() else { return };
+    let mut cfg = elastic_cfg("adacons", 8, 4, 3);
+    cfg.cutoff = Some(CutoffSpec {
+        k: 3,
+        n: 4,
+        grace_ms: 5.0,
+    });
+    // Rank 1's compute thread dies exactly at step 3; the step must
+    // finalize over the 3 survivors and a fast-forwarded replacement
+    // must be live again for step 4 (so exactly one degraded step).
+    cfg.injectors
+        .push((1, GradInjector::parse("panic-at:3").unwrap()));
+    let res = Trainer::new(rt, cfg).unwrap().run().unwrap();
+    assert_eq!(res.degraded_steps, 1, "only the death step is degraded");
+    assert_eq!(res.rejoins, 1, "dead rank respawned exactly once");
+    assert!(res.train_loss.iter().all(|l| l.is_finite()));
+    assert!(
+        res.train_loss[0] / res.final_train_loss(3) > 1.5,
+        "training failed to make progress through the fault"
+    );
+}
+
+#[test]
+fn cutoff_drops_injected_straggler_every_step() {
+    eprintln!("fault seed: {FAULT_SEED}");
+    let Some(rt) = interp_runtime() else { return };
+    let mut cfg = elastic_cfg("mean", 10, 4, 3);
+    // Rank 2 reports 50x compute time every step: with zero grace and the
+    // healthy ranks finishing in deterministic lockstep, it misses the
+    // deadline every step but never dies — dropped, not respawned.
+    cfg.injectors
+        .push((2, GradInjector::parse("delay:1:50").unwrap()));
+    let res = Trainer::new(rt, cfg).unwrap().run().unwrap();
+    assert_eq!(res.degraded_steps, 10, "straggler dropped every step");
+    assert_eq!(res.rejoins, 0, "a slow rank is not a dead rank");
+    assert!(res.train_loss.iter().all(|l| l.is_finite()));
+    assert!(
+        res.train_loss[0] / res.final_train_loss(3) > 1.5,
+        "survivor-renormalized consensus failed to converge"
+    );
+}
+
+#[test]
+fn krum_filter_excludes_nan_rank_and_training_stays_finite() {
+    eprintln!("fault seed: {FAULT_SEED}");
+    let Some(rt) = interp_runtime() else { return };
+    let mut cfg = elastic_cfg("mean", 8, 4, 4);
+    cfg.krum_f = 1;
+    // Rank 2 ships all-NaN gradients every step. The outlier filter must
+    // drop the non-finite row before aggregation, so the step finalizes
+    // degraded (3 of 4 rows) but the model never sees a NaN.
+    cfg.injectors
+        .push((2, GradInjector::parse("nan:1").unwrap()));
+    let res = Trainer::new(rt, cfg).unwrap().run().unwrap();
+    assert_eq!(res.degraded_steps, 8, "NaN rank filtered every step");
+    assert_eq!(res.rejoins, 0);
+    assert!(
+        res.train_loss.iter().all(|l| l.is_finite()),
+        "a NaN row leaked through the krum filter: {:?}",
+        res.train_loss
+    );
+    assert!(res.final_params.iter().all(|p| p.is_finite()));
+}
+
+/// Run `2*half` steps straight, then `half` + checkpoint + resume `half`,
+/// and require the split run to land bitwise on the uninterrupted one
+/// (params and the per-step loss tail), including a save/load round trip
+/// through the on-disk format.
+fn assert_resume_bitwise(rt: &Arc<Runtime>, cfg_half: TrainConfig, tag: &str) {
+    let half = cfg_half.steps;
+    let mut cfg_full = cfg_half.clone();
+    cfg_full.steps = 2 * half;
+    let full = Trainer::new(rt.clone(), cfg_full).unwrap().run().unwrap();
+
+    let mut t_a = Trainer::new(rt.clone(), cfg_half.clone()).unwrap();
+    let a = t_a.run().unwrap();
+    let ck = t_a.checkpoint().unwrap();
+    assert_eq!(ck.step, half as u64, "{tag}");
+    assert_eq!(ck.params, a.final_params, "{tag}");
+
+    let path = std::env::temp_dir().join(format!("adacons_ft_{}.ckpt", tag.replace('/', "_")));
+    ck.save(&path).unwrap();
+    let loaded = Checkpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded, ck, "{tag}: on-disk round trip not lossless");
+
+    let mut t_b = Trainer::new(rt.clone(), cfg_half).unwrap();
+    t_b.restore(&loaded).unwrap();
+    let b = t_b.run().unwrap();
+    assert_eq!(
+        b.final_params, full.final_params,
+        "{tag}: resumed params diverge from the fault-free run"
+    );
+    assert_eq!(
+        b.train_loss[..],
+        full.train_loss[half..],
+        "{tag}: resumed loss tail diverges"
+    );
+}
+
+#[test]
+fn checkpoint_resume_bitwise_for_all_five_aggregators() {
+    eprintln!("fault seed: {FAULT_SEED}");
+    let Some(rt) = runtime() else { return };
+    for name in ["mean", "adacons", "grawa", "adasum", "median"] {
+        assert_resume_bitwise(&rt, linreg_cfg(name, 6), name);
+    }
+}
+
+#[test]
+fn checkpoint_resume_bitwise_on_hier_topology_and_rank_threads() {
+    eprintln!("fault seed: {FAULT_SEED}");
+    let Some(rt) = interp_runtime() else { return };
+    let hier = |name: &str, threaded: bool| {
+        let mut cfg = linreg_cfg(name, 6);
+        cfg.topology = TopologySpec::Hier { nodes: 2, gpus: 4 };
+        cfg.rank_threads = threaded;
+        cfg
+    };
+    assert_resume_bitwise(&rt, hier("adacons", false), "hier/roundrobin");
+    assert_resume_bitwise(&rt, hier("adacons", true), "hier/threaded");
+    let mut flat = linreg_cfg("mean", 6);
+    flat.rank_threads = true;
+    assert_resume_bitwise(&rt, flat, "flat/threaded");
+}
+
+#[test]
+fn checkpoint_resume_bitwise_with_per_rank_compression() {
+    // int8/fp16 error-feedback residuals ride the checkpoint (the restore
+    // bug this PR fixes: residuals used to be silently discarded), and the
+    // int8 rng keys off the absolute step, so the resumed stream is
+    // bitwise-continuous in both rank modes.
+    eprintln!("fault seed: {FAULT_SEED}");
+    let Some(rt) = interp_runtime() else { return };
+    for kind in [CompressorKind::Fp16, CompressorKind::Int8] {
+        for threaded in [false, true] {
+            let mut cfg = linreg_cfg("adacons", 6);
+            cfg.compression = CompressionSpec {
+                kind,
+                scope: CompressScope::All,
+            };
+            cfg.rank_threads = threaded;
+            let tag = format!("{}/{}", kind.tag(), if threaded { "thr" } else { "rr" });
+            assert_resume_bitwise(&rt, cfg, &tag);
+        }
+    }
+}
+
+#[test]
+fn resume_composes_with_elastic_cutoff() {
+    // A checkpointed run restarted *into* an elastic config keeps going:
+    // restore, then survive a straggler drill on the continuation.
+    eprintln!("fault seed: {FAULT_SEED}");
+    let Some(rt) = interp_runtime() else { return };
+    let mut t_a = Trainer::new(rt.clone(), elastic_cfg("adacons", 5, 4, 3)).unwrap();
+    t_a.run().unwrap();
+    let ck = t_a.checkpoint().unwrap();
+    let mut cfg_b = elastic_cfg("adacons", 5, 4, 3);
+    cfg_b
+        .injectors
+        .push((0, GradInjector::parse("delay:1:50").unwrap()));
+    let mut t_b = Trainer::new(rt, cfg_b).unwrap();
+    t_b.restore(&ck).unwrap();
+    let b = t_b.run().unwrap();
+    assert_eq!(b.degraded_steps, 5);
+    assert!(b.train_loss.iter().all(|l| l.is_finite()));
+}

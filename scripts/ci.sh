@@ -45,6 +45,12 @@ for tt in 1 2 4; do
     # (the error-feedback residual is per-(rank, bucket) state touched
     # from pool threads).
     cargo test -q --test parallel_equivalence compress -- --test-threads "$tt"
+    # Chaos leg: elastic fault drills (rank death + respawn, straggler
+    # cutoff, krum NaN filtering, checkpoint/resume bitwise parity).
+    # Every drill derives its faults from the seed it echoes on stderr
+    # ("fault seed: N"), so a failing pass is replayable verbatim.
+    echo "-- chaos leg: fault_tolerance (--test-threads ${tt}) --"
+    cargo test -q --test fault_tolerance -- --test-threads "$tt"
     cargo test -q --lib compress:: -- --test-threads "$tt"
     cargo test -q --lib comm:: -- --test-threads "$tt"
     cargo test -q --lib coordinator:: -- --test-threads "$tt"
