@@ -68,16 +68,28 @@ pub struct SweepConfig {
     /// rank dies and is respawned every step) — so the survivor-ingest
     /// and respawn costs are tracked against the full-barrier anchor.
     pub degraded_step: bool,
+    /// Local-step regime cases (`local_step`): full paper-testbed
+    /// training runs (`mlp_cls_b32`, `dlrm_lite`, N = 8, adacons) under
+    /// `--local-steps` H = 1/4/16 and the adaptive `auto:1-16` policy,
+    /// recording total wire bytes and amortized exposed comm per H —
+    /// and checking the H = 16 rows against the H = 1 anchors (wire
+    /// <= 1/8, exposed strictly lower) where the trajectory is
+    /// produced.
+    pub local_step: bool,
 }
 
 impl SweepConfig {
-    /// The full grid from the perf plan: 1/2/4/nproc threads x N in
+    /// The full grid from the perf plan: 1/2/4/8/nproc threads x N in
     /// {4, 8, 32, 64, 128} x d in {1e5, 1e6, 1e7}.
     pub fn full(budget_s: f64) -> SweepConfig {
         let nproc = std::thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(1);
-        let mut threads = vec![1, 2, 4, nproc];
+        // 8 extends the measured thread ladder past 4 (the ROADMAP
+        // perf-trajectory item): on >= 8-core hosts the 4 -> 8 -> nproc
+        // scaling knee is now a first-class row, not inferred from the
+        // nproc endpoint alone.
+        let mut threads = vec![1, 2, 4, 8, nproc];
         threads.sort_unstable();
         threads.dedup();
         SweepConfig {
@@ -95,6 +107,7 @@ impl SweepConfig {
             hier_step: true,
             compress_step: true,
             degraded_step: true,
+            local_step: true,
         }
     }
 
@@ -113,6 +126,7 @@ impl SweepConfig {
             hier_step: true,
             compress_step: true,
             degraded_step: true,
+            local_step: true,
         }
     }
 }
@@ -458,6 +472,10 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Json> {
     if cfg.degraded_step {
         println!("-- elastic degraded step (cutoff / rejoin storm, adacons) --");
         degraded_step_cases(cfg.budget_s, &threads, cfg.min_shard_elems, &mut baseline, &mut cases)?;
+    }
+    if cfg.local_step {
+        println!("-- local-step regime (wire/comm amortization vs H, adacons) --");
+        local_step_cases(32, &mut cases)?;
     }
     Ok(obj(vec![
         ("bench", s("aggregation")),
@@ -995,6 +1013,100 @@ fn degraded_step_cases(
     Ok(())
 }
 
+/// The `local_step` dimension: the paper-testbed runs behind
+/// `--local-step` — `mlp_cls_b32` and `dlrm_lite` trained end to end
+/// (N = 8, adacons, plain SGD) under the local-step regime at
+/// H = 1 / 4 / 16 and the adaptive `auto:1-16` policy, barrier
+/// timeline (overlap off) so every comm second is an exact function of
+/// the α-β model. Each row records total wire bytes, the amortized
+/// exposed/serial comm per local step and the final train loss; the
+/// H = 16 rows are *checked* against the H = 1 anchors where the
+/// trajectory is produced — total wire traffic must amortize to
+/// <= 1/8 (it is exactly 1/16 at 32 steps: payload bytes are
+/// data-independent) and the amortized exposed comm must be strictly
+/// lower — rather than eyeballed downstream. `mean_s` is the wall
+/// time per *local* step, which is what the perf gate medians track.
+fn local_step_cases(steps: usize, cases: &mut Vec<Json>) -> Result<()> {
+    use std::sync::Arc;
+
+    use crate::config::{LocalStepSpec, TrainConfig};
+    use crate::coordinator::Trainer;
+    use crate::optim::Schedule;
+    use crate::runtime::{Backend, Runtime};
+
+    let rt = Arc::new(Runtime::open_default_with(Backend::Interp)?);
+    let n = 8usize;
+    for artifact in ["mlp_cls_b32", "dlrm_lite"] {
+        // (spec, total wire bytes, exposed s/local-step, final loss)
+        let mut rows: Vec<(String, u64, f64, f64)> = Vec::new();
+        for spec in ["1", "4", "16", "auto:1-16"] {
+            let mut cfg = TrainConfig::default();
+            cfg.artifact = artifact.into();
+            cfg.workers = n;
+            cfg.aggregator = "adacons".into();
+            cfg.optimizer = "sgd".into();
+            cfg.schedule = Schedule::Const { lr: 0.005 };
+            cfg.steps = steps;
+            cfg.seed = 17;
+            cfg.overlap = false; // barrier accounting: exact comm seconds
+            cfg.local_steps = LocalStepSpec::parse(spec).context("bench local-step spec")?;
+            let threads = cfg.parallel.threads;
+            let res = Trainer::new(rt.clone(), cfg)?.run()?;
+            let d = res.final_params.len();
+            let loss = res.final_train_loss(5);
+            println!(
+                "local step      {artifact} N={n} H={spec:<9} rounds={:>2}  wire {:>12} B  \
+                 exposed {:.4} ms/step  loss {loss:.5}",
+                res.sync_rounds,
+                res.total_wire_bytes,
+                res.exposed_comm_s * 1e3,
+            );
+            cases.push(obj(vec![
+                ("op", s("local_step")),
+                ("artifact", s(artifact)),
+                ("local_steps", s(spec)),
+                ("workers", num(n as f64)),
+                ("d", num(d as f64)),
+                ("threads", num(threads as f64)),
+                ("steps", num(steps as f64)),
+                ("sync_rounds", num(res.sync_rounds as f64)),
+                ("wire_bytes", num(res.total_wire_bytes as f64)),
+                ("exposed_comm_s", num(res.exposed_comm_s)),
+                ("serial_comm_s", num(res.serial_comm_s)),
+                ("final_loss", num(loss)),
+                ("iters", num(steps as f64)),
+                ("mean_s", num(res.wall_iter_s)),
+            ]));
+            rows.push((spec.to_string(), res.total_wire_bytes, res.exposed_comm_s, loss));
+        }
+        let h1 = rows.iter().find(|r| r.0 == "1").expect("H=1 anchor row");
+        let h16 = rows.iter().find(|r| r.0 == "16").expect("H=16 row");
+        if 8 * h16.1 > h1.1 {
+            bail!(
+                "{artifact}: H=16 wire traffic {} B is not <= 1/8 of the H=1 anchor {} B",
+                h16.1,
+                h1.1
+            );
+        }
+        if h16.2 >= h1.2 {
+            bail!(
+                "{artifact}: H=16 amortized exposed comm {:.6e}s is not strictly below \
+                 the H=1 anchor {:.6e}s",
+                h16.2,
+                h1.2
+            );
+        }
+        println!(
+            "local step      {artifact}: wire H16/H1 {:.4} (gate <= 0.125), \
+             exposed H16/H1 {:.4}, loss drift H16-H1 {:+.2e}",
+            h16.1 as f64 / h1.1 as f64,
+            h16.2 / h1.2,
+            h16.3 - h1.3,
+        );
+    }
+    Ok(())
+}
+
 /// `--compress-sweep`: the ratio-vs-loss table from EXPERIMENTS.md
 /// §Compression. Trains the default linreg artifact for `steps` steps
 /// under each compressor (scope `all`, flat fabric) and prints the wire
@@ -1159,7 +1271,11 @@ fn gate_one(
 ///   path is first-class, not only visible through the train step;
 /// * the `degraded_step` elastic medians (full-strength anchor, 6-of-8
 ///   cutoff, rejoin storm) at `max_step_ratio` — the fault-tolerant
-///   path must not quietly tax the healthy one.
+///   path must not quietly tax the healthy one;
+/// * the `local_step` regime medians (H = 1 and H = 16 anchors per
+///   artifact) at `max_step_ratio` — wall time per *local* step of the
+///   full training runs, so the periodic-consensus delta path cannot
+///   quietly tax the synchronous one it must match at H = 1.
 ///
 /// A group the **baseline** predates is skipped with an explicit notice
 /// (and counted in the summary line) — never silently passed. A group
@@ -1205,6 +1321,10 @@ pub fn compare_files(
         ("degraded_step", &[("variant", "full")]),
         ("degraded_step", &[("variant", "cutoff")]),
         ("degraded_step", &[("variant", "rejoin")]),
+        ("local_step", &[("artifact", "mlp_cls_b32"), ("local_steps", "1")]),
+        ("local_step", &[("artifact", "mlp_cls_b32"), ("local_steps", "16")]),
+        ("local_step", &[("artifact", "dlrm_lite"), ("local_steps", "1")]),
+        ("local_step", &[("artifact", "dlrm_lite"), ("local_steps", "16")]),
     ];
     let step_gate = match history {
         Some(dir) => tightened_step_gate(dir, max_step_ratio, step_groups),
@@ -1362,6 +1482,7 @@ mod tests {
             hier_step: false,
             compress_step: false,
             degraded_step: false,
+            local_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -1396,6 +1517,7 @@ mod tests {
             hier_step: false,
             compress_step: false,
             degraded_step: false,
+            local_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -1417,6 +1539,7 @@ mod tests {
             hier_step: false,
             compress_step: false,
             degraded_step: false,
+            local_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -1444,6 +1567,7 @@ mod tests {
             hier_step: false,
             compress_step: false,
             degraded_step: false,
+            local_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -1502,6 +1626,7 @@ mod tests {
             hier_step: true,
             compress_step: false,
             degraded_step: false,
+            local_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -1537,6 +1662,7 @@ mod tests {
             hier_step: false,
             compress_step: true,
             degraded_step: false,
+            local_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -1586,6 +1712,7 @@ mod tests {
             hier_step: false,
             compress_step: false,
             degraded_step: true,
+            local_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -1646,6 +1773,42 @@ mod tests {
         )
         .unwrap();
         assert!(compare_files(&base, lost.to_str().unwrap(), 1.3, 1.5, None).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn perf_gate_covers_local_step_cases() {
+        let dir = std::env::temp_dir().join("adacons_perf_gate_local");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mk = |name: &str, h16_s: f64| -> String {
+            let path = dir.join(name);
+            let doc = format!(
+                r#"{{"bench":"aggregation","cases":[
+                    {{"op":"adacons","workers":8,"d":1000,"threads":1,"mean_s":0.010}},
+                    {{"op":"local_step","artifact":"mlp_cls_b32","local_steps":"1","workers":8,"d":1000,"threads":1,"mean_s":0.030}},
+                    {{"op":"local_step","artifact":"mlp_cls_b32","local_steps":"16","workers":8,"d":1000,"threads":1,"mean_s":{h16_s}}}
+                ]}}"#
+            );
+            std::fs::write(&path, doc).unwrap();
+            path.to_str().unwrap().to_string()
+        };
+        let base = mk("base.json", 0.028);
+        let ok = mk("ok.json", 0.033);
+        compare_files(&base, &ok, 1.3, 1.5, None).unwrap();
+        // A local-step H=16 regression beyond the step gate fails even
+        // when the H=1 anchor and the kernels are fine.
+        let bad = mk("bad.json", 0.060);
+        assert!(compare_files(&base, &bad, 1.3, 1.5, None).is_err());
+        // Baselines predating the regime skip its groups cleanly.
+        let old = dir.join("old.json");
+        std::fs::write(
+            &old,
+            r#"{"bench":"aggregation","cases":[
+                {"op":"adacons","workers":8,"d":1000,"threads":1,"mean_s":0.010}
+            ]}"#,
+        )
+        .unwrap();
+        compare_files(old.to_str().unwrap(), &ok, 1.3, 1.5, None).unwrap();
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -8,6 +8,7 @@
 //!   cargo run --release --bin bench_aggregation -- --hier-step off    # skip hier topology cases
 //!   cargo run --release --bin bench_aggregation -- --compress-step off # skip compressed-step cases
 //!   cargo run --release --bin bench_aggregation -- --degraded-step off # skip elastic degraded-step cases
+//!   cargo run --release --bin bench_aggregation -- --local-step off    # skip local-step regime cases
 //!   cargo run --release --bin bench_aggregation -- --compress-sweep    # ratio-vs-loss table
 //!   cargo run --release --bin bench_aggregation -- --check BENCH_aggregation.json
 //!   cargo run --release --bin bench_aggregation -- --table BENCH_aggregation.json
@@ -102,6 +103,13 @@ fn run() -> Result<()> {
             "on" => true,
             "off" => false,
             other => return Err(adacons::err!("--degraded-step {other:?}: want on|off")),
+        };
+    }
+    if let Some(v) = args.str_opt("local-step") {
+        cfg.local_step = match v {
+            "on" => true,
+            "off" => false,
+            other => return Err(adacons::err!("--local-step {other:?}: want on|off")),
         };
     }
     let out = args.str_or("out", "BENCH_aggregation.json");

@@ -41,6 +41,57 @@ impl CutoffSpec {
     }
 }
 
+/// Local-step regime (`--local-steps H|auto:<min>-<max>`): how many
+/// optimizer steps each rank takes between consensus rounds. `Fixed(1)`
+/// is the historical fully-synchronous path (one aggregation per
+/// gradient). `Fixed(H>1)` runs H local SGD steps per rank and then
+/// aggregates the accumulated model *delta* (in gradient units) once,
+/// cutting collective traffic ~H×. `Auto` adapts H between sync rounds
+/// from the consensus-weight dispersion: high dispersion (ranks
+/// disagree) shrinks H toward `min`, low dispersion grows it toward
+/// `max`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LocalStepSpec {
+    Fixed(usize),
+    Auto { min: usize, max: usize },
+}
+
+impl LocalStepSpec {
+    pub fn parse(s: &str) -> Option<LocalStepSpec> {
+        if let Some(range) = s.strip_prefix("auto:") {
+            let (min, max) = range.split_once('-')?;
+            let (min, max) = (min.parse().ok()?, max.parse().ok()?);
+            return (min >= 1 && min <= max).then_some(LocalStepSpec::Auto { min, max });
+        }
+        let h: usize = s.parse().ok()?;
+        (h >= 1).then_some(LocalStepSpec::Fixed(h))
+    }
+
+    /// True for the fully-synchronous regime (aggregate every gradient) —
+    /// the historical path every bitwise invariant anchors to.
+    pub fn is_sync(&self) -> bool {
+        matches!(self, LocalStepSpec::Fixed(1))
+    }
+
+    /// H for the first sync round. Adaptive runs start conservative (at
+    /// `min`): communicate eagerly until the dispersion signal earns
+    /// longer local phases.
+    pub fn initial(&self) -> usize {
+        match *self {
+            LocalStepSpec::Fixed(h) => h,
+            LocalStepSpec::Auto { min, .. } => min,
+        }
+    }
+
+    /// Human-readable form (config echo / TrainResult).
+    pub fn describe(&self) -> String {
+        match *self {
+            LocalStepSpec::Fixed(h) => h.to_string(),
+            LocalStepSpec::Auto { min, max } => format!("auto:{min}-{max}"),
+        }
+    }
+}
+
 /// Full specification of one training run.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
@@ -131,6 +182,14 @@ pub struct TrainConfig {
     pub checkpoint_every: usize,
     /// Where periodic checkpoints are written (overwritten in place).
     pub checkpoint_path: Option<String>,
+    /// Local-step regime (`--local-steps H|auto:<min>-<max>`): ranks take
+    /// H local SGD steps between consensus rounds, aggregating the
+    /// accumulated model delta (in gradient units) once per round. `1`
+    /// (the default) is bitwise-identical to the historical synchronous
+    /// path. `cfg.steps` always counts *local* steps (gradient
+    /// evaluations per rank), so a 64-step run at H=4 performs 16 sync
+    /// rounds.
+    pub local_steps: LocalStepSpec,
 }
 
 impl Default for TrainConfig {
@@ -164,6 +223,7 @@ impl Default for TrainConfig {
             krum_f: 0,
             checkpoint_every: 0,
             checkpoint_path: None,
+            local_steps: LocalStepSpec::Fixed(1),
         }
     }
 }
@@ -264,6 +324,16 @@ impl TrainConfig {
                 "checkpoint_path" => {
                     cfg.checkpoint_path = Some(v.as_str().context("checkpoint_path")?.into())
                 }
+                "local_steps" => {
+                    cfg.local_steps = match (v.as_usize(), v.as_str()) {
+                        (Some(h), _) => LocalStepSpec::parse(&h.to_string()),
+                        (None, Some(s)) => LocalStepSpec::parse(s),
+                        _ => None,
+                    }
+                    .with_context(|| {
+                        format!("local_steps {v:?}: want H>=1 or \"auto:<min>-<max>\"")
+                    })?;
+                }
                 "injectors" => {
                     for item in v.as_arr().context("injectors")? {
                         let rank = item.get("rank").as_usize().context("injector rank")?;
@@ -357,6 +427,11 @@ impl TrainConfig {
             };
         }
         self.krum_f = args.usize_or("krum", self.krum_f)?;
+        if let Some(s) = args.str_opt("local-steps") {
+            self.local_steps = LocalStepSpec::parse(s).with_context(|| {
+                format!("--local-steps {s:?}: want H>=1 or auto:<min>-<max>")
+            })?;
+        }
         self.checkpoint_every = args.usize_or("checkpoint-every", self.checkpoint_every)?;
         if let Some(p) = args.str_opt("checkpoint-path") {
             self.checkpoint_path = Some(p.into());
@@ -427,6 +502,30 @@ impl TrainConfig {
         }
         if self.checkpoint_every > 0 && self.checkpoint_path.is_none() {
             bail!("--checkpoint-every needs --checkpoint-path");
+        }
+        if !self.local_steps.is_sync() {
+            // The elastic path's cutoff grace window is defined per
+            // gradient arrival; a sync round delivering one fused delta
+            // per rank has no per-step arrival to grant grace against,
+            // and krum's pairwise-distance filter is calibrated on
+            // single-step gradient geometry. Neither composition has
+            // defined semantics yet — reject loudly.
+            if self.cutoff.is_some() {
+                bail!(
+                    "--local-steps {} is incompatible with --cutoff: the straggler \
+                     grace window is per-gradient-arrival, not per-sync-round; run \
+                     with --local-steps 1 or drop --cutoff",
+                    self.local_steps.describe()
+                );
+            }
+            if self.krum_f > 0 {
+                bail!(
+                    "--local-steps {} is incompatible with --krum: outlier scores are \
+                     calibrated on single-step gradient distances, not H-step deltas; \
+                     run with --local-steps 1 or drop --krum",
+                    self.local_steps.describe()
+                );
+            }
         }
         Ok(())
     }
@@ -684,6 +783,70 @@ mod tests {
         );
         cfg.apply_args(&args).unwrap();
         assert_eq!(cfg.checkpoint_every, 10);
+    }
+
+    #[test]
+    fn local_steps_knob_from_json_and_cli() {
+        assert_eq!(TrainConfig::default().local_steps, LocalStepSpec::Fixed(1));
+        assert!(TrainConfig::default().local_steps.is_sync());
+        // JSON accepts a bare number or the auto:<min>-<max> string.
+        let j = Json::parse(r#"{"local_steps":4}"#).unwrap();
+        let cfg = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.local_steps, LocalStepSpec::Fixed(4));
+        assert!(!cfg.local_steps.is_sync());
+        let j = Json::parse(r#"{"local_steps":"auto:2-16"}"#).unwrap();
+        let cfg = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.local_steps, LocalStepSpec::Auto { min: 2, max: 16 });
+        assert_eq!(cfg.local_steps.initial(), 2);
+        assert_eq!(cfg.local_steps.describe(), "auto:2-16");
+        let j = Json::parse(r#"{"local_steps":0}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"local_steps":"auto:8-2"}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err()); // min > max
+        let j = Json::parse(r#"{"local_steps":"auto:0-4"}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err()); // min < 1
+        let mut cfg = TrainConfig::default();
+        let args = Args::parse(
+            "--local-steps 8".split_whitespace().map(String::from),
+            &[],
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.local_steps, LocalStepSpec::Fixed(8));
+        let args = Args::parse(
+            "--local-steps auto:1-32".split_whitespace().map(String::from),
+            &[],
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.local_steps, LocalStepSpec::Auto { min: 1, max: 32 });
+        let args = Args::parse(
+            "--local-steps zero".split_whitespace().map(String::from),
+            &[],
+        );
+        assert!(cfg.apply_args(&args).is_err());
+    }
+
+    #[test]
+    fn local_steps_fences_unsupported_compositions() {
+        // local-steps > 1 has no defined cutoff/krum semantics — the
+        // fences must fire with actionable messages, and H=1 (the
+        // synchronous regime) must keep composing with both.
+        let j = Json::parse(
+            r#"{"workers":4,"rank_threads":"on","cutoff":"3-of-4","local_steps":4}"#,
+        )
+        .unwrap();
+        let e = TrainConfig::from_json(&j).unwrap_err().to_string();
+        assert!(e.contains("--cutoff"), "{e}");
+        let j = Json::parse(
+            r#"{"workers":4,"rank_threads":"on","cutoff":"3-of-4","krum_f":1,
+                "local_steps":"auto:2-8"}"#,
+        )
+        .unwrap();
+        assert!(TrainConfig::from_json(&j).is_err());
+        let j = Json::parse(
+            r#"{"workers":4,"rank_threads":"on","cutoff":"3-of-4","local_steps":1}"#,
+        )
+        .unwrap();
+        TrainConfig::from_json(&j).unwrap(); // H=1 composes fine
     }
 
     #[test]

@@ -15,7 +15,11 @@
 //! opt_t u64, opt slots (u64 count, each u64 len + f32s), aggregator
 //! state rows (u64 count, each u64 len + f64s), per-rank residuals (u64
 //! rank count, each u64 bucket count, each u64 len + f32s), set-codec
-//! flag u8 (1 => step u64 + banks as u64 count, each u64 len + f32s).
+//! flag u8 (1 => step u64 + banks as u64 count, each u64 len + f32s),
+//! then an *optional trailing* adaptive local-step section: flag u8
+//! (1 => H u64). The trailing section is absent in files written before
+//! the local-step regime existed — the reader maps EOF to `None`, so
+//! those files still load.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -42,6 +46,10 @@ pub struct Checkpoint {
     /// Hierarchical set-codec state: (stochastic-rounding step, per-bucket
     /// error-feedback banks).
     pub set_codec: Option<(u64, Vec<Vec<f32>>)>,
+    /// Adaptive local-step controller carry: the H the next sync round
+    /// would use under `--local-steps auto:<min>-<max>`. None for
+    /// fixed-H runs and files written before the local-step regime.
+    pub local_h: Option<u64>,
 }
 
 fn write_f32s(f: &mut impl Write, v: &[f32]) -> Result<()> {
@@ -124,6 +132,13 @@ impl Checkpoint {
                 }
             }
         }
+        match self.local_h {
+            None => f.write_all(&[0u8])?,
+            Some(h) => {
+                f.write_all(&[1u8])?;
+                f.write_all(&h.to_le_bytes())?;
+            }
+        }
         Ok(())
     }
 
@@ -183,6 +198,15 @@ impl Checkpoint {
         } else {
             None
         };
+        // Trailing adaptive-H section: absent (EOF right here) in files
+        // written before the local-step regime — treat that as None.
+        let mut hflag = [0u8; 1];
+        let local_h = match f.read_exact(&mut hflag) {
+            Ok(()) if hflag[0] == 1 => Some(read_u64(&mut f)?),
+            Ok(()) => None,
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => None,
+            Err(e) => return Err(e.into()),
+        };
         Ok(Checkpoint {
             step,
             params,
@@ -191,6 +215,7 @@ impl Checkpoint {
             agg_state,
             rank_residuals,
             set_codec,
+            local_h,
         })
     }
 }
@@ -209,6 +234,7 @@ mod tests {
             agg_state: vec![vec![1.0e-300, 2.5], vec![-3.25]],
             rank_residuals: vec![vec![vec![0.125], vec![]], vec![vec![9.0, -9.0]]],
             set_codec: Some((42, vec![vec![1.0, 2.0], vec![]])),
+            local_h: Some(12),
         };
         let dir = std::env::temp_dir().join("adacons_ckpt_test");
         let path = dir.join("a.ckpt");
@@ -252,6 +278,33 @@ mod tests {
         assert_eq!(ck.opt_t, 0);
         assert!(ck.opt_slots.is_empty() && ck.agg_state.is_empty());
         assert!(ck.rank_residuals.is_empty() && ck.set_codec.is_none());
+        assert!(ck.local_h.is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v2_without_trailing_local_h_section_still_loads() {
+        // Files written before the local-step regime end right after the
+        // set-codec section; truncating the trailing byte(s) simulates
+        // one. The reader must map EOF there to `local_h: None`.
+        let ck = Checkpoint {
+            step: 17,
+            params: vec![0.25, -4.0],
+            opt_t: 3,
+            opt_slots: vec![vec![1.0]],
+            agg_state: vec![vec![2.0]],
+            rank_residuals: vec![],
+            set_codec: None,
+            local_h: None,
+        };
+        let dir = std::env::temp_dir().join("adacons_ckpt_pre_local_h");
+        let path = dir.join("pre.ckpt");
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.pop(); // drop the trailing local-H flag byte
+        std::fs::write(&path, bytes).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, ck);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -79,6 +79,11 @@ pub struct StepOutcome {
     /// How many ranks' gradients entered the aggregation (== N outside
     /// the elastic path; < N on a degraded step).
     pub survivors: usize,
+    /// Total modeled wire traffic this step: the sum of every
+    /// [`CommOp`](crate::aggregation::CommOp)'s payload bytes, after any
+    /// compression rewrite — the measurable counterpart of every
+    /// comm-reduction claim (`--compress`, `--local-steps`).
+    pub wire_bytes: u64,
 }
 
 /// Fault-tolerance policy for [`PipelinedExecutor::run_step_elastic`].
@@ -352,6 +357,11 @@ impl PipelinedExecutor {
         // Observed per-rank bucket completion offsets (exchange mode; the
         // producer path and legacy senders leave this empty).
         let mut bucket_obs: Vec<Vec<f64>> = Vec::new();
+        // Measured leader-side set-codec (flat lowrank) transform seconds
+        // per bucket — charged to the timeline as compute ahead of that
+        // bucket's transfer, so sketching no longer runs free on
+        // wall-clock threads. Stays all-zero without a set codec.
+        let mut set_encode_s = vec![0.0f64; nb];
 
         let mut info = if self.overlap {
             let work = if self.map.is_some() {
@@ -373,6 +383,7 @@ impl PipelinedExecutor {
                     &mut loss_sum,
                     &mut compute_s,
                     &mut bucket_obs,
+                    &mut set_encode_s,
                 )?
             };
             agg.finalize(grads, &self.buckets, work, out, ctx)
@@ -408,7 +419,9 @@ impl PipelinedExecutor {
             // bits) as the overlap path's per-task transforms.
             if let Some(codec) = &self.set_codec {
                 for (b, (lo, hi)) in self.buckets.iter().enumerate() {
+                    let t = crate::util::timer::Timer::start();
                     codec.transform(b, grads, lo, hi);
+                    set_encode_s[b] = t.elapsed_s();
                 }
             }
             agg.aggregate_ctx(grads, &self.buckets, out, ctx)
@@ -416,6 +429,7 @@ impl PipelinedExecutor {
         if self.compression.is_active() {
             self.rewrite_compressed_bytes(&mut info);
         }
+        let wire_bytes: u64 = info.comm.iter().map(|op| op.bytes as u64).sum();
         if let Some(codec) = &self.set_codec {
             codec.advance_step();
         }
@@ -529,8 +543,11 @@ impl PipelinedExecutor {
                         for op in &info.comm {
                             let dur = cost.time_s(op.kind, op.bytes);
                             let ready = match op.bucket {
+                                // A set-sketched bucket's transfer starts
+                                // only after its leader-side encode.
                                 Some(b) => {
                                     (0..n).map(|r| rank_ready(r, b)).fold(0.0, f64::max)
+                                        + set_encode_s[b]
                                 }
                                 None => compute_end,
                             };
@@ -549,6 +566,13 @@ impl PipelinedExecutor {
                 // concurrently, so one collective charge covers them all).
                 let mut serial = 0.0;
                 let mut serial_intra = 0.0;
+                // Leader-side set-codec encode precedes every transfer
+                // under barrier semantics: charge it as one serial
+                // compute span (it advances the clock but is not comm).
+                let encode_total: f64 = set_encode_s.iter().sum();
+                if encode_total > 0.0 {
+                    clock.collective(encode_total);
+                }
                 for op in &info.comm {
                     let dur = match (&self.hier_cost, op.scope) {
                         (Some(h), CommScope::Intra) => h.intra.time_s(op.kind, op.bytes),
@@ -574,6 +598,7 @@ impl PipelinedExecutor {
             rank_compute_s: compute_s,
             dead_ranks: Vec::new(),
             survivors: n,
+            wire_bytes,
         })
     }
 
@@ -750,6 +775,7 @@ impl PipelinedExecutor {
         if self.compression.is_active() {
             self.rewrite_compressed_bytes(&mut info);
         }
+        let wire_bytes: u64 = info.comm.iter().map(|op| op.bytes as u64).sum();
 
         // --- simulated time: survivors' compute, then barrier ops ---
         for &r in &candidates {
@@ -780,12 +806,16 @@ impl PipelinedExecutor {
             rank_compute_s: compute_s,
             dead_ranks,
             survivors: candidates.len(),
+            wire_bytes,
         })
     }
 
     /// Flat overlap-mode ingest: one store per bucket; the bucket's
     /// phase-1 aggregation task is submitted at the arrival that
-    /// completes it across all ranks.
+    /// completes it across all ranks. `set_encode_s[b]` receives the
+    /// measured leader-side set-codec transform seconds for bucket `b`
+    /// (zero without a set codec) for the caller's timeline charge.
+    #[allow(clippy::too_many_arguments)]
     fn ingest_flat(
         &mut self,
         source: Arrivals<'_, '_>,
@@ -795,6 +825,7 @@ impl PipelinedExecutor {
         loss_sum: &mut f64,
         compute_s: &mut [f64],
         bucket_obs: &mut Vec<Vec<f64>>,
+        set_encode_s: &mut [f64],
     ) -> Result<Vec<BucketWork>> {
         let n = self.n;
         let nb = self.buckets.len();
@@ -832,12 +863,18 @@ impl PipelinedExecutor {
                             // overlapped with later arrivals; the
                             // transformed rows ride back via the view
                             // and are mirrored into `grads` at join so
-                            // finalize sees the compressed set.
+                            // finalize sees the compressed set. Its
+                            // measured seconds ride back too: the
+                            // timeline delays the bucket's transfer by
+                            // them (encode is not free).
+                            let mut enc_s = 0.0f64;
                             if let Some(codec) = codec {
+                                let t = crate::util::timer::Timer::start();
                                 codec.transform(b, &mut view, 0, view.d());
+                                enc_s = t.elapsed_s();
                             }
                             let w = agg.ingest_bucket(b, &view, 0, view.d(), ictx_ref);
-                            (w, view)
+                            (w, view, enc_s)
                         }));
                     }
                 };
@@ -868,7 +905,8 @@ impl PipelinedExecutor {
             let mut work = Vec::with_capacity(nb);
             for (b, h) in handles.into_iter().enumerate() {
                 let h = h.unwrap_or_else(|| panic!("bucket {b} never became ready"));
-                let (w, view) = h.join();
+                let (w, view, enc_s) = h.join();
+                set_encode_s[b] = enc_s;
                 if codec.is_some() {
                     let (lo, hi) = buckets.range(b);
                     for r in 0..n {

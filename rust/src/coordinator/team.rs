@@ -42,8 +42,17 @@ use crate::worker::Worker;
 enum TeamCmd {
     /// Run one step against these parameters. `step` keys the rank's
     /// compression PRNG so stochastic rounding is reproducible at any
-    /// thread interleaving.
-    Step { params: Arc<Vec<f32>>, step: u64 },
+    /// thread interleaving. `local_lrs` selects the execution regime:
+    /// `None` is the historical synchronous single-gradient step (live
+    /// bucket streaming); `Some(lrs)` runs a local-step sync round of
+    /// `lrs.len()` plain-SGD passes (pass `p` at `lrs[p]` — the rank
+    /// threads hold no schedule, so the leader ships the resolved rates)
+    /// and streams the round's accumulated delta buckets instead.
+    Step {
+        params: Arc<Vec<f32>>,
+        step: u64,
+        local_lrs: Option<Arc<Vec<f32>>>,
+    },
     /// Drop compression error-feedback residuals (parameter
     /// re-broadcast from a checkpoint).
     Reset,
@@ -239,10 +248,25 @@ impl RankTeam {
     /// by uncompressed codecs). Errors if a rank thread is already gone
     /// (its death reason surfaced, or will, on the exchange).
     pub fn begin_step(&self, params: &Arc<Vec<f32>>, step: u64) -> Result<()> {
+        self.begin_round(params, step, None)
+    }
+
+    /// Broadcast one sync round: `local_lrs = None` is a synchronous
+    /// single-gradient step (identical to [`RankTeam::begin_step`]);
+    /// `Some(lrs)` has every rank run `lrs.len()` local SGD passes and
+    /// stream the round's delta buckets. `step` is the round's first
+    /// *local* step index (it keys the compression PRNG).
+    pub fn begin_round(
+        &self,
+        params: &Arc<Vec<f32>>,
+        step: u64,
+        local_lrs: Option<Arc<Vec<f32>>>,
+    ) -> Result<()> {
         for (rank, tx) in self.cmds.iter().enumerate() {
             tx.send(TeamCmd::Step {
                 params: params.clone(),
                 step,
+                local_lrs: local_lrs.clone(),
             })
             .map_err(|_| crate::err!("rank {rank}'s thread is gone (exited or panicked)"))?;
         }
@@ -374,24 +398,69 @@ fn rank_main(
 ) {
     loop {
         match rx.recv() {
-            Ok(TeamCmd::Step { params, step }) => {
+            Ok(TeamCmd::Step {
+                params,
+                step,
+                local_lrs,
+            }) => {
                 let codec = &mut codec;
-                let r = worker.compute_grad_buckets(
-                    &exe,
-                    &params,
-                    local_batch,
-                    &buckets,
-                    &par,
-                    &mut |b, cols| {
+                // Compressed payloads charge their measured encode
+                // wall-time to the rank's timeline: each bucket reads as
+                // ready only after the encode work spent up to and
+                // including it (the transfer cannot start earlier).
+                // Uncompressed runs skip the timing entirely, keeping
+                // the historical path untouched.
+                let timed = !codec.kind().is_none();
+                let mut encode_s = 0.0f64;
+                let mut encode_ready = vec![0.0f64; buckets.len()];
+                let mut deliver = |port: &RankPort, b: usize, cols: &[f32]| {
+                    if timed {
+                        let t = crate::util::timer::Timer::start();
+                        let payload = codec.encode_bucket(step, b, cols);
+                        encode_s += t.elapsed_s();
+                        encode_ready[b] = encode_s;
+                        port.submit_payload(b, payload);
+                    } else {
                         port.submit_payload(b, codec.encode_bucket(step, b, cols));
-                    },
-                );
-                match r {
-                    Ok(()) => port.done_timed(
-                        worker.last_loss as f64,
-                        worker.last_compute_s,
-                        worker.last_bucket_s().to_vec(),
+                    }
+                };
+                let r = match &local_lrs {
+                    // Synchronous regime: live per-bucket streaming off
+                    // the backward — the H=1 bitwise anchor.
+                    None => worker.compute_grad_buckets(
+                        &exe,
+                        &params,
+                        local_batch,
+                        &buckets,
+                        &par,
+                        &mut |b, cols| deliver(&port, b, cols),
                     ),
+                    // Local-step round: lrs.len() local passes, then the
+                    // accumulated delta streams bucket by bucket.
+                    Some(lrs) => worker.compute_delta_round(
+                        &exe,
+                        &params,
+                        local_batch,
+                        &buckets,
+                        &par,
+                        lrs,
+                        &mut |b, cols| deliver(&port, b, cols),
+                    ),
+                };
+                match r {
+                    Ok(()) => {
+                        let mut bucket_s = worker.last_bucket_s().to_vec();
+                        if timed {
+                            for (s, e) in bucket_s.iter_mut().zip(&encode_ready) {
+                                *s += e;
+                            }
+                        }
+                        port.done_timed(
+                            worker.last_loss as f64,
+                            worker.last_compute_s + encode_s,
+                            bucket_s,
+                        )
+                    }
                     Err(e) => {
                         // Explicit failure beats the guard's generic reason.
                         port.report_down(&format!("compute failed: {e}"));

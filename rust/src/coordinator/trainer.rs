@@ -22,7 +22,7 @@ use std::sync::Arc;
 use crate::aggregation::{self, Aggregator, CoeffStages};
 use crate::collective::{CostModel, HierCostModel, SimClock};
 use crate::compress::{CompressScope, RankCodec};
-use crate::config::TrainConfig;
+use crate::config::{LocalStepSpec, TrainConfig};
 use crate::coordinator::eval::{EvalOutcome, Evaluator};
 use crate::coordinator::pipeline::{ElasticPolicy, PipelinedExecutor};
 use crate::coordinator::team::RankTeam;
@@ -86,6 +86,17 @@ pub struct TrainResult {
     pub degraded_steps: usize,
     /// Dead ranks replaced mid-run by fresh fast-forwarded workers.
     pub rejoins: usize,
+    /// Total modeled wire traffic across the run: the sum of every
+    /// collective op's payload bytes (post-compression), over all sync
+    /// rounds. At fixed `steps`, local-step training divides this by ~H.
+    pub total_wire_bytes: u64,
+    /// The configured local-step regime (`"1"`, `"16"`, `"auto:2-32"`).
+    pub local_steps: String,
+    /// Number of sync rounds the run performed (== `steps` when H=1).
+    pub sync_rounds: usize,
+    /// Realized H per sync round — the adaptive-H trace (constant for
+    /// fixed H except a possibly clamped final round).
+    pub local_step_trace: Vec<usize>,
 }
 
 impl TrainResult {
@@ -148,6 +159,12 @@ pub struct Trainer {
     /// captured from the executor when `run()` finishes so
     /// [`Trainer::checkpoint`] can persist it.
     set_codec_state: Option<(u64, Vec<Vec<f32>>)>,
+    /// Adaptive-H carry: the H the next sync round would use. Inbound
+    /// from `restore()` (so a resumed `auto` run continues the
+    /// controller state instead of resetting to `min`), outbound
+    /// captured when `run()` finishes so [`Trainer::checkpoint`] can
+    /// persist it. None for fixed-H runs and legacy checkpoints.
+    adaptive_h: Option<usize>,
 }
 
 impl Trainer {
@@ -274,6 +291,7 @@ impl Trainer {
             params,
             start_step: 0,
             set_codec_state: None,
+            adaptive_h: None,
         })
     }
 
@@ -330,12 +348,22 @@ impl Trainer {
         if ck.set_codec.is_none() {
             self.aggregator.reset_compression();
         }
+        // Adaptive-H controller state (trailing v2 section; None for
+        // legacy files and fixed-H runs — `run()` then falls back to the
+        // spec's initial H).
+        self.adaptive_h = ck.local_h.map(|h| h as usize);
         Ok(())
     }
 
-    /// Capture the complete training state after `step` completed steps,
-    /// with `set_codec` supplied by whoever holds the executor.
-    fn snapshot(&self, step: u64, set_codec: Option<(u64, Vec<Vec<f32>>)>) -> Result<Checkpoint> {
+    /// Capture the complete training state after `step` completed local
+    /// steps, with `set_codec` supplied by whoever holds the executor
+    /// and `local_h` the adaptive-H carry (None for fixed-H runs).
+    fn snapshot(
+        &self,
+        step: u64,
+        set_codec: Option<(u64, Vec<Vec<f32>>)>,
+        local_h: Option<u64>,
+    ) -> Result<Checkpoint> {
         let (opt_t, opt_slots) = self.optimizer.export_state();
         let rank_residuals = match &self.ranks {
             Ranks::RoundRobin(_) => self.codecs.iter().map(|c| c.export_residuals()).collect(),
@@ -349,6 +377,7 @@ impl Trainer {
             agg_state: self.aggregator.export_state(),
             rank_residuals,
             set_codec,
+            local_h,
         })
     }
 
@@ -360,6 +389,7 @@ impl Trainer {
         self.snapshot(
             (self.start_step + self.cfg.steps) as u64,
             self.set_codec_state.clone(),
+            self.adaptive_h.map(|h| h as u64),
         )
     }
 
@@ -412,14 +442,48 @@ impl Trainer {
         let mut serial_comm_total = 0.0f64;
         let mut exposed_intra_total = 0.0f64;
         let mut exposed_inter_total = 0.0f64;
+        let mut total_wire_bytes = 0u64;
+        // --- local-step regime: `cfg.steps` counts *local* steps
+        //     (gradient evaluations per rank); the loop below advances
+        //     one *sync round* of H local steps at a time. H=1 takes the
+        //     historical synchronous path verbatim (`local_lrs` stays
+        //     None end to end), so it is bitwise-identical to the
+        //     pre-local-step trainer. Under `auto:<min>-<max>` the
+        //     controller re-picks H each round from the consensus-weight
+        //     dispersion (see `weight_dispersion`).
+        let end = self.start_step + self.cfg.steps;
+        let adaptive = matches!(self.cfg.local_steps, LocalStepSpec::Auto { .. });
+        let mut cur_h = match (self.adaptive_h.take(), self.cfg.local_steps) {
+            // Resumed `auto` run: continue the controller where the
+            // checkpointed run left it (clamped in case the spec's
+            // bounds changed across the restart).
+            (Some(carry), LocalStepSpec::Auto { min, max }) => carry.clamp(min, max),
+            _ => self.cfg.local_steps.initial(),
+        };
+        let mut local_step_trace: Vec<usize> = Vec::new();
         let wall = Timer::start();
 
-        for step in self.start_step..self.start_step + self.cfg.steps {
-            // --- event-driven step: ranks deliver gradients bucket by
-            //     bucket (round-robin on this 1-CPU host, parallel on real
-            //     hardware); ready buckets' statistics run on the worker
-            //     pool while later buckets arrive; compute + comm are
-            //     charged to the sim clock through the event timeline.
+        let mut step = self.start_step;
+        while step < end {
+            // --- event-driven sync round: ranks deliver gradients (H=1)
+            //     or H-step model deltas in gradient units (H>1) bucket
+            //     by bucket (round-robin on this 1-CPU host, parallel on
+            //     real hardware); ready buckets' statistics run on the
+            //     worker pool while later buckets arrive; compute + comm
+            //     are charged to the sim clock through the event
+            //     timeline — comm once per round, so H amortizes it.
+            let h = cur_h.min(end - step);
+            let last = step + h - 1;
+            // Per-pass learning rates for the H local SGD steps; the
+            // leader resolves the schedule (rank threads hold none) and
+            // ships them with the round broadcast.
+            let local_lrs: Option<Arc<Vec<f32>>> = (h > 1).then(|| {
+                Arc::new(
+                    (step..step + h)
+                        .map(|s| self.cfg.schedule.lr(s) as f32)
+                        .collect::<Vec<f32>>(),
+                )
+            });
             let step_t = Timer::start();
             let mut grad_s = 0.0f64;
             let outcome = match &mut self.ranks {
@@ -427,37 +491,63 @@ impl Trainer {
                     let (exe, params, buckets, par) =
                         (&self.exe, &self.params, &self.buckets, &self.par);
                     let codecs = &mut self.codecs;
+                    let local_lrs = &local_lrs;
                     let mut produce = |rank: usize,
                                        deliver: &mut dyn FnMut(usize, &[f32])|
                      -> Result<(f64, f64)> {
                         let t = Timer::start();
                         let w = &mut workers[rank];
+                        let mut encode_s = 0.0f64;
                         if codecs.is_empty() {
-                            w.compute_grad_buckets(
-                                exe, params, local_batch, buckets, par, deliver,
-                            )?;
+                            match local_lrs {
+                                None => w.compute_grad_buckets(
+                                    exe, params, local_batch, buckets, par, deliver,
+                                )?,
+                                Some(lrs) => w.compute_delta_round(
+                                    exe, params, local_batch, buckets, par, lrs, deliver,
+                                )?,
+                            }
                         } else {
                             // Emulate the wire round-trip the threaded
                             // path performs: encode at the rank source
                             // (updating its error-feedback residual),
                             // decode at the leader edge — so both modes
-                            // aggregate identical bits.
+                            // aggregate identical bits. The measured
+                            // encode wall-time is charged to this rank's
+                            // compute, mirroring the on-thread timing.
                             let codec = &mut codecs[rank];
-                            w.compute_grad_buckets(
-                                exe,
-                                params,
-                                local_batch,
-                                buckets,
-                                par,
-                                &mut |b, cols| {
-                                    let decoded =
-                                        codec.encode_bucket(step as u64, b, cols).into_cols();
-                                    deliver(b, &decoded);
-                                },
-                            )?;
+                            let enc = &mut encode_s;
+                            let mut wire = |b: usize,
+                                            cols: &[f32],
+                                            deliver: &mut dyn FnMut(usize, &[f32])| {
+                                let et = Timer::start();
+                                let payload = codec.encode_bucket(step as u64, b, cols);
+                                *enc += et.elapsed_s();
+                                let decoded = payload.into_cols();
+                                deliver(b, &decoded);
+                            };
+                            match local_lrs {
+                                None => w.compute_grad_buckets(
+                                    exe,
+                                    params,
+                                    local_batch,
+                                    buckets,
+                                    par,
+                                    &mut |b, cols| wire(b, cols, deliver),
+                                )?,
+                                Some(lrs) => w.compute_delta_round(
+                                    exe,
+                                    params,
+                                    local_batch,
+                                    buckets,
+                                    par,
+                                    lrs,
+                                    &mut |b, cols| wire(b, cols, deliver),
+                                )?,
+                            }
                         }
                         grad_s += t.elapsed_s();
-                        Ok((w.last_loss as f64, w.last_compute_s))
+                        Ok((w.last_loss as f64, w.last_compute_s + encode_s))
                     };
                     exec.run_step(
                         &mut produce,
@@ -470,13 +560,15 @@ impl Trainer {
                     )?
                 }
                 Ranks::Threaded(team) => {
-                    // Broadcast this step's parameters; the rank threads
-                    // compute concurrently while the leader ingests their
+                    // Broadcast this round's parameters (plus the local
+                    // lr slice when H>1); the rank threads compute
+                    // concurrently while the leader ingests their
                     // buckets in arrival order. With `--cutoff` the step
                     // runs elastically: the leader finalizes from the
-                    // quorum, cutting stragglers and surviving deaths.
+                    // quorum, cutting stragglers and surviving deaths
+                    // (fenced to H=1 by `TrainConfig::validate`).
                     let params = Arc::new(self.params.clone());
-                    team.begin_step(&params, step as u64)?;
+                    team.begin_round(&params, step as u64, local_lrs.clone())?;
                     let outcome = match &policy {
                         Some(p) => exec.run_step_elastic(
                             team.exchange(),
@@ -554,16 +646,43 @@ impl Trainer {
             serial_comm_total += outcome.serial_comm_s;
             exposed_intra_total += outcome.exposed_intra_comm_s;
             exposed_inter_total += outcome.exposed_inter_comm_s;
+            total_wire_bytes += outcome.wire_bytes;
+            local_step_trace.push(h);
+            // Round-aligned cadence: a periodic event fires at this
+            // round's boundary iff its local-step interval [step, step+h)
+            // contains a qualifying index — exactly the historical
+            // per-step behavior when H=1.
+            let due = |every: usize| every > 0 && (step..step + h).any(|s| s % every == 0);
+            let log_due = due(self.cfg.log_every);
             if outcome.info.par.is_some() {
                 agg_par = outcome.info.par;
             }
+            // --- adaptive H: re-pick next round's H from how much the
+            //     consensus weights disagree across ranks. High
+            //     dispersion means the local models are drifting apart
+            //     (the aggregator is down-weighting outliers), so sync
+            //     more often; near-uniform weights mean the deltas
+            //     agree, so communication can be stretched further.
+            //     Deterministic: driven only by aggregation outputs.
+            if adaptive {
+                let disp = weight_dispersion(outcome.info.gammas.as_deref(), &grads, n);
+                if let LocalStepSpec::Auto { min, max } = self.cfg.local_steps {
+                    if disp > 0.5 {
+                        cur_h = (cur_h / 2).max(min);
+                    } else if disp < 0.15 {
+                        cur_h = (cur_h * 2).min(max);
+                    }
+                }
+            }
             if let Some(stages) = outcome.info.coeff_stages {
-                if self.cfg.log_every > 0 && step % self.cfg.log_every == 0 {
-                    coeff_log.push((step, stages));
+                if log_due {
+                    coeff_log.push((last, stages));
                 }
             }
 
-            // --- clip + optimize
+            // --- clip + optimize: one outer step per sync round, at the
+            //     round-start learning rate (the per-pass rates already
+            //     shaped the delta).
             phases.time("optimize", || {
                 if let Some(max_norm) = self.cfg.clip {
                     clip_global_norm(&mut agg, max_norm);
@@ -573,59 +692,75 @@ impl Trainer {
             });
 
             // --- eval
-            if self.cfg.eval_every > 0
-                && (step % self.cfg.eval_every == 0 || step + 1 == self.start_step + self.cfg.steps)
-            {
+            if self.cfg.eval_every > 0 && (due(self.cfg.eval_every) || step + h == end) {
                 if let Some(ev) = &mut self.evaluator {
                     let outcome = ev.evaluate(&self.params)?;
                     metric_name = outcome.metric_name;
                     if self.cfg.log_every > 0 {
                         crate::log_info!(
-                            "step {step}: loss {:.4} {} {:.4}",
+                            "step {last}: loss {:.4} {} {:.4}",
                             outcome.loss,
                             outcome.metric_name,
                             outcome.metric
                         );
                     }
-                    evals.push(EvalPoint { step, outcome });
+                    evals.push(EvalPoint {
+                        step: last,
+                        outcome,
+                    });
                 }
             }
-            if self.cfg.log_every > 0 && step % self.cfg.log_every == 0 {
-                crate::log_debug!("step {step}: train loss {:.5}", train_loss.last().unwrap());
+            if log_due {
+                crate::log_debug!("step {last}: train loss {:.5}", train_loss.last().unwrap());
             }
-            // --- periodic full-state checkpoint
-            if self.cfg.checkpoint_every > 0 && (step + 1) % self.cfg.checkpoint_every == 0 {
+            // --- periodic full-state checkpoint (round-aligned: fires
+            //     at the first round boundary covering the configured
+            //     multiple, recording the completed local-step count)
+            if self.cfg.checkpoint_every > 0
+                && (step..step + h).any(|s| (s + 1) % self.cfg.checkpoint_every == 0)
+            {
                 if let Some(path) = self.cfg.checkpoint_path.clone() {
-                    self.snapshot(step as u64 + 1, exec.export_set_codec())?
-                        .save(&path)?;
+                    self.snapshot(
+                        (step + h) as u64,
+                        exec.export_set_codec(),
+                        adaptive.then_some(cur_h as u64),
+                    )?
+                    .save(&path)?;
                 }
             }
             if let Some(w) = &mut jsonl {
                 use crate::util::json::{num, obj, s};
                 let mut rec = vec![
-                    ("step", num(step as f64)),
+                    ("step", num(last as f64)),
                     ("train_loss", num(*train_loss.last().unwrap())),
                     ("lr", num(self.cfg.schedule.lr(step))),
                     ("sim_time_s", num(clock.now())),
                     ("exposed_comm_s", num(outcome.exposed_comm_s)),
                     ("exposed_intra_comm_s", num(outcome.exposed_intra_comm_s)),
                     ("exposed_inter_comm_s", num(outcome.exposed_inter_comm_s)),
+                    ("wire_bytes", num(outcome.wire_bytes as f64)),
+                    ("local_steps", num(h as f64)),
                     ("aggregator", s(&self.cfg.aggregator)),
                 ];
                 if let Some(e) = evals.last() {
-                    if e.step == step {
+                    if e.step == last {
                         rec.push(("eval_loss", num(e.outcome.loss)));
                         rec.push(("metric", num(e.outcome.metric)));
                     }
                 }
                 w.write(&obj(rec))?;
             }
+            step += h;
         }
         if let Some(w) = &mut jsonl {
             w.flush()?;
         }
         self.set_codec_state = exec.export_set_codec();
+        self.adaptive_h = adaptive.then_some(cur_h);
 
+        // Amortized per-*local-step* metrics: dividing by `cfg.steps`
+        // (not sync rounds) is what makes H>1 show its win — the same
+        // number of gradient evaluations, the comm charged 1/H as often.
         let steps = self.cfg.steps.max(1) as f64;
         Ok(TrainResult {
             train_loss,
@@ -647,8 +782,47 @@ impl Trainer {
             topology: self.cfg.topology.describe(),
             degraded_steps,
             rejoins,
+            total_wire_bytes,
+            local_steps: self.cfg.local_steps.describe(),
+            sync_rounds: local_step_trace.len(),
+            local_step_trace,
         })
     }
+}
+
+/// Dispersion of the consensus weights across ranks — the adaptive-H
+/// control signal. Coefficient of variation (std/|mean|) of the
+/// aggregator's per-rank weights when it reports them (`AggInfo::
+/// gammas`: AdaCons' Eq. 7/12 coefficients); for weight-free
+/// aggregators the fallback is the CV of the per-rank delta row norms,
+/// which measures the same drift directly on the assembled set. Both
+/// signals are deterministic functions of aggregation inputs, so the
+/// realized H trace is reproducible run to run.
+fn weight_dispersion(gammas: Option<&[f32]>, grads: &GradSet, n: usize) -> f64 {
+    let vals: Vec<f64> = match gammas {
+        Some(g) if g.len() > 1 => g.iter().map(|&x| x as f64).collect(),
+        _ => (0..n)
+            .map(|r| {
+                grads
+                    .row(r)
+                    .iter()
+                    .map(|&x| (x as f64) * (x as f64))
+                    .sum::<f64>()
+                    .sqrt()
+            })
+            .collect(),
+    };
+    if vals.len() < 2 {
+        return 0.0;
+    }
+    let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+    if !mean.is_finite() || mean.abs() < 1e-300 {
+        // Degenerate weights (all-zero or non-finite): treat as maximal
+        // disagreement so the controller falls back to frequent syncs.
+        return 1.0;
+    }
+    let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / vals.len() as f64;
+    var.sqrt() / mean.abs()
 }
 
 /// Convenience: build a trainer on the default runtime and run it.

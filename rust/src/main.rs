@@ -34,6 +34,7 @@ USAGE:
                 [--inject RANK:SPEC] [--par-threads N] [--par-min-shard-elems N]
                 [--fabric-gbps G] [--save-checkpoint PATH] [--load-checkpoint PATH]
                 [--cutoff k-of-n[:grace_ms]|none] [--krum F]
+                [--local-steps H|auto:<min>-<max>]
                 [--checkpoint-every S --checkpoint-path PATH] [--resume PATH]
                 [--csv PATH]
   adacons figure fig2|fig3|fig4|fig5|fig6|fig7|fig8|all [--out-dir DIR] [--steps-scale F]
@@ -144,6 +145,22 @@ fn cmd_train(args: &Args) -> Result<()> {
         if res.overlap { "on" } else { "off" },
         res.serial_comm_s * 1e3,
     );
+    println!(
+        "wire traffic: {} total ({:.1} KiB/step)",
+        res.total_wire_bytes,
+        res.total_wire_bytes as f64 / cfg.steps.max(1) as f64 / 1024.0,
+    );
+    if !cfg.local_steps.is_sync() {
+        let hs = &res.local_step_trace;
+        let (hmin, hmax) = (
+            hs.iter().copied().min().unwrap_or(1),
+            hs.iter().copied().max().unwrap_or(1),
+        );
+        println!(
+            "local steps: H={} -> {} sync rounds over {} local steps (realized H {}..{})",
+            res.local_steps, res.sync_rounds, cfg.steps, hmin, hmax,
+        );
+    }
     if res.topology != "flat" {
         println!(
             "  topology {}: intra {:.4} ms / inter {:.4} ms exposed",

@@ -234,6 +234,75 @@ impl Worker {
         }
         Ok(())
     }
+
+    /// One **local-step sync round**: starting from the consensus params,
+    /// take `lrs.len()` plain-SGD steps on this rank's own stream (pass
+    /// `p` at learning rate `lrs[p]`), accumulating the round's delta
+    /// Δ = Σ_p g^(p) — the sum of the local gradients, i.e. the model
+    /// movement measured in *gradient units* — then deliver Δ bucket by
+    /// bucket through `on_bucket`, exactly like a one-step gradient.
+    ///
+    /// Keeping Δ in gradient units (rather than (θ_sync − θ_local)/lr)
+    /// lets the five aggregators, the compression codecs, and the outer
+    /// optimizer consume it unchanged: for a constant-lr schedule,
+    /// `θ_sync − lr·agg(Δ)` is exactly the consensus-weighted average of
+    /// the ranks' local models (the weights sum to 1), so delta
+    /// aggregation inherits the synchronous path's unbiasedness.
+    ///
+    /// This helper is the **shared** H>1 execution path: both the
+    /// round-robin producer and the rank threads call it, so every float
+    /// lands in the same operation order and the two modes stay
+    /// bitwise-equal. (H==1 never routes here — the trainer takes the
+    /// historical synchronous path verbatim, preserving its bitwise
+    /// invariant and live per-bucket streaming.)
+    ///
+    /// After the call, `last_loss` is the mean of the round's local
+    /// losses, `last_compute_s` the summed backward seconds, and every
+    /// bucket reads as ready at the round's compute end (delta buckets
+    /// only exist once the last local pass finishes, so there is no
+    /// intra-round arrival to overlap).
+    pub fn compute_delta_round(
+        &mut self,
+        exe: &Executable,
+        sync_params: &[f32],
+        local_batch: usize,
+        buckets: &Buckets,
+        par: &crate::parallel::ParallelCtx,
+        lrs: &[f32],
+        on_bucket: &mut dyn FnMut(usize, &[f32]),
+    ) -> Result<()> {
+        let h = lrs.len();
+        debug_assert!(h >= 1, "a sync round needs at least one local pass");
+        let d = buckets.total();
+        let mut local = sync_params.to_vec();
+        let mut delta = vec![0.0f32; d];
+        let mut loss_sum = 0.0f64;
+        let mut compute_s = 0.0f64;
+        for &lr in lrs {
+            // Each pass draws its own batch/fault/injection step — the
+            // worker's deterministic streams advance one *local* step at
+            // a time, so fast-forward/rejoin replay stays draw-exact.
+            self.compute_grad_buckets(exe, &local, local_batch, buckets, par, &mut |_, _| {})?;
+            loss_sum += self.last_loss as f64;
+            compute_s += self.last_compute_s;
+            // Fixed flat-element order: accumulate the delta, then apply
+            // the local SGD update for the next pass.
+            for j in 0..d {
+                delta[j] += self.grad_buf[j];
+            }
+            for j in 0..d {
+                local[j] -= lr * self.grad_buf[j];
+            }
+        }
+        self.last_loss = (loss_sum / h as f64) as f32;
+        self.last_compute_s = compute_s;
+        self.bucket_s.clear();
+        self.bucket_s.resize(buckets.len(), compute_s);
+        for (b, (lo, hi)) in buckets.iter().enumerate() {
+            on_bucket(b, &delta[lo..hi]);
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -74,8 +74,9 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     # hier_step / matmul kernel rows) regresses >1.5x, vs the committed
     # baseline (both sides are smoke-grid runs; the step gate is looser —
     # rationale in EXPERIMENTS.md §Perf). Groups absent from an older
-    # baseline (dlrm_lite, matmul kernels, hier_step, compress_step)
-    # skip WITH AN EXPLICIT NOTICE; a group the baseline covers but the
+    # baseline (dlrm_lite, matmul kernels, hier_step, compress_step,
+    # local_step) skip WITH AN EXPLICIT NOTICE; a group the baseline
+    # covers but the
     # current run lacks hard-fails (lost coverage). --history lets the
     # accumulated archive tighten the step gate below 1.5x once >=3
     # runs exist on this runner class.
