@@ -76,6 +76,13 @@ pub struct SweepConfig {
     /// <= 1/8, exposed strictly lower) where the trajectory is
     /// produced.
     pub local_step: bool,
+    /// Tracing-overhead cases (`obs_step`): full `mlp_cls_b32` training
+    /// runs (N = 8, adacons, overlap on) at `--trace-level` off / step /
+    /// bucket, each repeated and reduced to the median wall seconds per
+    /// step — the measured basis for the "tracing is cheap" claim. The
+    /// `--compare` gate hard-fails when the bucket-level median exceeds
+    /// the untraced one by more than 5%.
+    pub obs_step: bool,
 }
 
 impl SweepConfig {
@@ -108,6 +115,7 @@ impl SweepConfig {
             compress_step: true,
             degraded_step: true,
             local_step: true,
+            obs_step: true,
         }
     }
 
@@ -127,6 +135,7 @@ impl SweepConfig {
             compress_step: true,
             degraded_step: true,
             local_step: true,
+            obs_step: true,
         }
     }
 }
@@ -477,6 +486,10 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Json> {
         println!("-- local-step regime (wire/comm amortization vs H, adacons) --");
         local_step_cases(32, &mut cases)?;
     }
+    if cfg.obs_step {
+        println!("-- tracing overhead (trace-level off/step/bucket, adacons) --");
+        obs_step_cases(24, 3, &mut cases)?;
+    }
     Ok(obj(vec![
         ("bench", s("aggregation")),
         ("schema_version", num(1.0)),
@@ -677,6 +690,7 @@ fn interp_step_cases(
                         &ctx,
                         None,
                         None,
+                        crate::obs::Obs::disabled(),
                     )?;
                     let shared = std::sync::Arc::new(params.clone());
                     bench_auto(&label, budget_s, || {
@@ -947,6 +961,7 @@ fn degraded_step_cases(
                 &ctx,
                 None,
                 None,
+                crate::obs::Obs::disabled(),
             )?;
             let policy = ElasticPolicy {
                 k,
@@ -1102,6 +1117,80 @@ fn local_step_cases(steps: usize, cases: &mut Vec<Json>) -> Result<()> {
             h16.1 as f64 / h1.1 as f64,
             h16.2 / h1.2,
             h16.3 - h1.3,
+        );
+    }
+    Ok(())
+}
+
+/// The `obs_step` dimension: tracing overhead on the real step path.
+/// `mlp_cls_b32` is trained end to end (N = 8, adacons, overlap on,
+/// multi-bucket so the bucket-level spans actually fire) at
+/// `--trace-level` off / step / bucket; each level runs `repeats` times
+/// and `mean_s` is the **median** wall seconds per step across the
+/// repeats, which is what the `--compare` overhead gate reads. Training
+/// output is bitwise-identical across levels (tests/observability.rs
+/// owns that invariant); this dimension owns the *cost* claim.
+fn obs_step_cases(steps: usize, repeats: usize, cases: &mut Vec<Json>) -> Result<()> {
+    use std::sync::Arc;
+
+    use crate::config::TrainConfig;
+    use crate::coordinator::Trainer;
+    use crate::obs::TraceLevel;
+    use crate::optim::Schedule;
+    use crate::runtime::{Backend, Runtime};
+
+    let rt = Arc::new(Runtime::open_default_with(Backend::Interp)?);
+    let n = 8usize;
+    let artifact = "mlp_cls_b32";
+    let mut medians: Vec<(&str, f64)> = Vec::new();
+    for level in ["off", "step", "bucket"] {
+        let mut walls: Vec<f64> = Vec::new();
+        let mut d = 0usize;
+        let mut threads = 0usize;
+        for _ in 0..repeats {
+            let mut cfg = TrainConfig::default();
+            cfg.artifact = artifact.into();
+            cfg.workers = n;
+            cfg.aggregator = "adacons".into();
+            cfg.optimizer = "sgd".into();
+            cfg.schedule = Schedule::Const { lr: 0.005 };
+            cfg.steps = steps;
+            cfg.seed = 17;
+            cfg.overlap = true;
+            cfg.bucket_cap = Some(4096);
+            cfg.trace_level = TraceLevel::parse(level).context("bench trace level")?;
+            threads = cfg.parallel.threads;
+            let res = Trainer::new(rt.clone(), cfg)?.run()?;
+            d = res.final_params.len();
+            walls.push(res.wall_iter_s);
+        }
+        walls.sort_by(|a, b| a.total_cmp(b));
+        let median = walls[walls.len() / 2];
+        println!(
+            "obs step        {artifact} N={n} trace={level:<6} median {:.4} ms/step \
+             ({repeats} runs)",
+            median * 1e3,
+        );
+        cases.push(obj(vec![
+            ("op", s("obs_step")),
+            ("trace", s(level)),
+            ("artifact", s(artifact)),
+            ("workers", num(n as f64)),
+            ("d", num(d as f64)),
+            ("threads", num(threads as f64)),
+            ("steps", num(steps as f64)),
+            ("repeats", num(repeats as f64)),
+            ("iters", num((steps * repeats) as f64)),
+            ("mean_s", num(median)),
+        ]));
+        medians.push((level, median));
+    }
+    let off = medians[0].1;
+    for (level, m) in &medians[1..] {
+        println!(
+            "obs step        {artifact}: trace={level} overhead {:+.2}% vs off \
+             (compare gate: bucket <= +5%)",
+            (m / off - 1.0) * 100.0,
         );
     }
     Ok(())
@@ -1275,7 +1364,11 @@ fn gate_one(
 /// * the `local_step` regime medians (H = 1 and H = 16 anchors per
 ///   artifact) at `max_step_ratio` — wall time per *local* step of the
 ///   full training runs, so the periodic-consensus delta path cannot
-///   quietly tax the synchronous one it must match at H = 1.
+///   quietly tax the synchronous one it must match at H = 1;
+/// * the `obs_step` tracing medians (trace off and bucket) at
+///   `max_step_ratio` vs the baseline, **plus** an absolute same-run
+///   gate: the current document's bucket-level median must be within
+///   5% of its own untraced anchor, or the gate hard-fails.
 ///
 /// A group the **baseline** predates is skipped with an explicit notice
 /// (and counted in the summary line) — never silently passed. A group
@@ -1325,6 +1418,8 @@ pub fn compare_files(
         ("local_step", &[("artifact", "mlp_cls_b32"), ("local_steps", "16")]),
         ("local_step", &[("artifact", "dlrm_lite"), ("local_steps", "1")]),
         ("local_step", &[("artifact", "dlrm_lite"), ("local_steps", "16")]),
+        ("obs_step", &[("trace", "off")]),
+        ("obs_step", &[("trace", "bucket")]),
     ];
     let step_gate = match history {
         Some(dir) => tightened_step_gate(dir, max_step_ratio, step_groups),
@@ -1354,6 +1449,29 @@ pub fn compare_files(
                     cur.is_some()
                 );
             }
+        }
+    }
+    // Tracing-overhead gate: within the *current* document, the
+    // bucket-level obs_step median must sit within 5% of the untraced
+    // anchor. Same-run comparison, so host speed divides out — this is
+    // the hard ceiling on what `--trace-level bucket` may cost, gated
+    // independently of any baseline drift.
+    match (
+        case_median(&cur_doc, "obs_step", &[("trace", "off")])?,
+        case_median(&cur_doc, "obs_step", &[("trace", "bucket")])?,
+    ) {
+        (Some(off), Some(bucket)) => gate_one(
+            "tracing overhead (obs_step bucket vs off)",
+            off,
+            bucket,
+            1.05,
+            "the same run's trace=off anchor",
+        )?,
+        _ => {
+            skipped += 1;
+            println!(
+                "tracing overhead (obs_step): SKIPPED — {current} has no obs_step cases"
+            );
         }
     }
     if skipped > 0 {
@@ -1483,6 +1601,7 @@ mod tests {
             compress_step: false,
             degraded_step: false,
             local_step: false,
+            obs_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -1518,6 +1637,7 @@ mod tests {
             compress_step: false,
             degraded_step: false,
             local_step: false,
+            obs_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -1540,6 +1660,7 @@ mod tests {
             compress_step: false,
             degraded_step: false,
             local_step: false,
+            obs_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -1568,6 +1689,7 @@ mod tests {
             compress_step: false,
             degraded_step: false,
             local_step: false,
+            obs_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -1627,6 +1749,7 @@ mod tests {
             compress_step: false,
             degraded_step: false,
             local_step: false,
+            obs_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -1663,6 +1786,7 @@ mod tests {
             compress_step: true,
             degraded_step: false,
             local_step: false,
+            obs_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -1713,6 +1837,7 @@ mod tests {
             compress_step: false,
             degraded_step: true,
             local_step: false,
+            obs_step: false,
         };
         let doc = run_sweep(&cfg).unwrap();
         let cases = doc.get("cases").as_arr().unwrap();
@@ -1809,6 +1934,48 @@ mod tests {
         )
         .unwrap();
         compare_files(old.to_str().unwrap(), &ok, 1.3, 1.5, None).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn perf_gate_covers_obs_step_overhead() {
+        let dir = std::env::temp_dir().join("adacons_perf_gate_obs");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mk = |name: &str, off_s: f64, bucket_s: f64| -> String {
+            let path = dir.join(name);
+            let doc = format!(
+                r#"{{"bench":"aggregation","cases":[
+                    {{"op":"adacons","workers":8,"d":1000,"threads":1,"mean_s":0.010}},
+                    {{"op":"obs_step","trace":"off","artifact":"mlp_cls_b32","workers":8,"d":1000,"threads":0,"mean_s":{off_s}}},
+                    {{"op":"obs_step","trace":"bucket","artifact":"mlp_cls_b32","workers":8,"d":1000,"threads":0,"mean_s":{bucket_s}}}
+                ]}}"#
+            );
+            std::fs::write(&path, doc).unwrap();
+            path.to_str().unwrap().to_string()
+        };
+        let base = mk("base.json", 0.030, 0.0305);
+        let ok = mk("ok.json", 0.031, 0.0318);
+        compare_files(&base, &ok, 1.3, 1.5, None).unwrap();
+        // Bucket-level tracing beyond 5% of the same run's untraced
+        // anchor hard-fails, even though 1.07x vs the *baseline* would
+        // pass the 1.5x step gate.
+        let bad = mk("bad.json", 0.030, 0.033);
+        assert!(compare_files(&base, &bad, 1.3, 1.5, None).is_err());
+        // Baselines predating the obs cases skip the drift groups; the
+        // same-run overhead gate still applies to the current document.
+        let old = dir.join("old.json");
+        std::fs::write(
+            &old,
+            r#"{"bench":"aggregation","cases":[
+                {"op":"adacons","workers":8,"d":1000,"threads":1,"mean_s":0.010}
+            ]}"#,
+        )
+        .unwrap();
+        compare_files(old.to_str().unwrap(), &ok, 1.3, 1.5, None).unwrap();
+        assert!(compare_files(old.to_str().unwrap(), &bad, 1.3, 1.5, None).is_err());
+        // Dropping the obs cases from the current run is lost coverage
+        // when the baseline has them — a hard failure, not a skip.
+        compare_files(&base, old.to_str().unwrap(), 1.3, 1.5, None).unwrap_err();
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -9,6 +9,7 @@
 //!   cargo run --release --bin bench_aggregation -- --compress-step off # skip compressed-step cases
 //!   cargo run --release --bin bench_aggregation -- --degraded-step off # skip elastic degraded-step cases
 //!   cargo run --release --bin bench_aggregation -- --local-step off    # skip local-step regime cases
+//!   cargo run --release --bin bench_aggregation -- --obs-step off      # skip tracing-overhead cases
 //!   cargo run --release --bin bench_aggregation -- --compress-sweep    # ratio-vs-loss table
 //!   cargo run --release --bin bench_aggregation -- --check BENCH_aggregation.json
 //!   cargo run --release --bin bench_aggregation -- --table BENCH_aggregation.json
@@ -110,6 +111,13 @@ fn run() -> Result<()> {
             "on" => true,
             "off" => false,
             other => return Err(adacons::err!("--local-step {other:?}: want on|off")),
+        };
+    }
+    if let Some(v) = args.str_opt("obs-step") {
+        cfg.obs_step = match v {
+            "on" => true,
+            "off" => false,
+            other => return Err(adacons::err!("--obs-step {other:?}: want on|off")),
         };
     }
     let out = args.str_or("out", "BENCH_aggregation.json");

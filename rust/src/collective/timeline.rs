@@ -39,10 +39,18 @@ impl StepTimeline {
     /// the NIC for `dur_s`. Transfers serialize: this one starts at
     /// `max(ready_s, nic_free)`. Returns its completion time.
     pub fn post(&mut self, ready_s: f64, dur_s: f64) -> f64 {
+        self.post_span(ready_s, dur_s).1
+    }
+
+    /// [`StepTimeline::post`], also returning the transfer's start time
+    /// — `(start, done)` — so span tracing can record the exact schedule
+    /// without re-deriving `start = done - dur` (not `f64`-exact). The
+    /// arithmetic is identical to the historical `post`.
+    pub fn post_span(&mut self, ready_s: f64, dur_s: f64) -> (f64, f64) {
         let start = ready_s.max(self.nic_free_s);
         self.nic_free_s = start + dur_s;
         self.serial_s += dur_s;
-        self.nic_free_s
+        (start, self.nic_free_s)
     }
 
     /// Completion time of everything posted so far.
@@ -103,9 +111,19 @@ impl HierTimeline {
         self.intra[node].post(ready_s, dur_s)
     }
 
+    /// [`HierTimeline::post_intra`] returning `(start, done)`.
+    pub fn post_intra_span(&mut self, node: usize, ready_s: f64, dur_s: f64) -> (f64, f64) {
+        self.intra[node].post_span(ready_s, dur_s)
+    }
+
     /// Post a transfer on the shared inter-node fabric.
     pub fn post_inter(&mut self, ready_s: f64, dur_s: f64) -> f64 {
         self.inter.post(ready_s, dur_s)
+    }
+
+    /// [`HierTimeline::post_inter`] returning `(start, done)`.
+    pub fn post_inter_span(&mut self, ready_s: f64, dur_s: f64) -> (f64, f64) {
+        self.inter.post_span(ready_s, dur_s)
     }
 
     /// Completion of the slowest intra channel.
@@ -170,6 +188,25 @@ mod tests {
         assert_eq!(tl.serial_s(), 3.0);
         assert_eq!(tl.exposed_s(5.5), 0.5);
         assert_eq!(tl.exposed_s(10.0), 0.0);
+    }
+
+    #[test]
+    fn post_span_is_post_with_the_start_attached() {
+        let mut a = StepTimeline::new(0.25);
+        let mut b = StepTimeline::new(0.25);
+        for (ready, dur) in [(0.0, 1.0), (0.5, 0.125), (7.0, 0.3), (6.9, 0.05)] {
+            let done = a.post(ready, dur);
+            let (start, done2) = b.post_span(ready, dur);
+            assert_eq!(done.to_bits(), done2.to_bits());
+            assert_eq!((start + dur).to_bits(), done2.to_bits());
+        }
+        assert_eq!(a.serial_s().to_bits(), b.serial_s().to_bits());
+        assert_eq!(a.done_s().to_bits(), b.done_s().to_bits());
+        let mut h = HierTimeline::new(0.0, 2);
+        let (s0, d0) = h.post_intra_span(0, 1.0, 0.5);
+        assert_eq!((s0, d0), (1.0, 1.5));
+        let (s1, d1) = h.post_inter_span(1.5, 1.0);
+        assert_eq!((s1, d1), (1.5, 2.5));
     }
 
     #[test]

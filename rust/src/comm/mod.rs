@@ -495,6 +495,7 @@ impl StepExchange {
                         continue;
                     }
                     down[rank] = true;
+                    crate::log_warn!("rank {rank} down: {reason}");
                     dead.push((rank, reason));
                     pending -= 1;
                     let live = self.n - dead.len();

@@ -507,6 +507,10 @@ impl RankCodec {
             return Payload::Raw(cols.to_vec());
         };
         if cols.iter().any(|v| !v.is_finite()) {
+            crate::log_debug!(
+                "step {step} bucket {bucket}: non-finite gradient, codec bypassed \
+                 (poison ships raw; EF residual untouched)"
+            );
             return Payload::Raw(cols.to_vec());
         }
         let e = &mut self.residuals[bucket];

@@ -7,6 +7,7 @@
 use crate::collective::TopologySpec;
 use crate::compress::{CompressScope, CompressionSpec, CompressorKind};
 use crate::data::GradInjector;
+use crate::obs::TraceLevel;
 use crate::optim::Schedule;
 use crate::parallel::ParallelPolicy;
 use crate::runtime::Backend;
@@ -190,6 +191,22 @@ pub struct TrainConfig {
     /// evaluations per rank), so a 64-step run at H=4 performs 16 sync
     /// rounds.
     pub local_steps: LocalStepSpec,
+    /// Span-trace granularity (`--trace-level off|step|bucket|rank`).
+    /// `off` (the default) records nothing; `step` adds per-round
+    /// leader phase spans + step marks, `bucket` adds per-bucket
+    /// encode/transfer spans, `rank` adds per-rank compute spans and
+    /// bucket-ready instants. Tracing is purely passive: training
+    /// output is bitwise-identical at every level.
+    pub trace_level: TraceLevel,
+    /// Chrome trace-event JSON output path (`--trace-out trace.json`,
+    /// Perfetto-loadable). Requires `trace_level != off`.
+    pub trace_out: Option<String>,
+    /// Prometheus-style text exposition of the run's metrics registry
+    /// (`--metrics-out metrics.txt`), written once after training.
+    pub metrics_out: Option<String>,
+    /// Stderr log level (`--log-level error|warn|info|debug|trace`).
+    /// `None` falls back to the `ADACONS_LOG` environment variable.
+    pub log_level: Option<String>,
 }
 
 impl Default for TrainConfig {
@@ -224,6 +241,10 @@ impl Default for TrainConfig {
             checkpoint_every: 0,
             checkpoint_path: None,
             local_steps: LocalStepSpec::Fixed(1),
+            trace_level: TraceLevel::Off,
+            trace_out: None,
+            metrics_out: None,
+            log_level: None,
         }
     }
 }
@@ -334,6 +355,17 @@ impl TrainConfig {
                         format!("local_steps {v:?}: want H>=1 or \"auto:<min>-<max>\"")
                     })?;
                 }
+                "trace_level" => {
+                    let s = v.as_str().context("trace_level")?;
+                    cfg.trace_level = TraceLevel::parse(s).with_context(|| {
+                        format!("trace_level {s:?}: want off|step|bucket|rank")
+                    })?;
+                }
+                "trace_out" => cfg.trace_out = Some(v.as_str().context("trace_out")?.into()),
+                "metrics_out" => {
+                    cfg.metrics_out = Some(v.as_str().context("metrics_out")?.into())
+                }
+                "log_level" => cfg.log_level = Some(v.as_str().context("log_level")?.into()),
                 "injectors" => {
                     for item in v.as_arr().context("injectors")? {
                         let rank = item.get("rank").as_usize().context("injector rank")?;
@@ -436,6 +468,19 @@ impl TrainConfig {
         if let Some(p) = args.str_opt("checkpoint-path") {
             self.checkpoint_path = Some(p.into());
         }
+        if let Some(s) = args.str_opt("trace-level") {
+            self.trace_level = TraceLevel::parse(s)
+                .with_context(|| format!("--trace-level {s:?}: want off|step|bucket|rank"))?;
+        }
+        if let Some(p) = args.str_opt("trace-out") {
+            self.trace_out = Some(p.into());
+        }
+        if let Some(p) = args.str_opt("metrics-out") {
+            self.metrics_out = Some(p.into());
+        }
+        if let Some(s) = args.str_opt("log-level") {
+            self.log_level = Some(s.into());
+        }
         if let Some(spec) = args.str_opt("inject") {
             // --inject rank:spec, e.g. --inject 0:sign-flip
             let (rank, rest) = spec.split_once(':').context("--inject rank:spec")?;
@@ -502,6 +547,14 @@ impl TrainConfig {
         }
         if self.checkpoint_every > 0 && self.checkpoint_path.is_none() {
             bail!("--checkpoint-every needs --checkpoint-path");
+        }
+        if self.trace_out.is_some() && self.trace_level == TraceLevel::Off {
+            bail!("--trace-out needs --trace-level step|bucket|rank (nothing to export at off)");
+        }
+        if let Some(s) = &self.log_level {
+            if crate::util::logging::Level::parse(s).is_none() {
+                bail!("--log-level {s:?}: want error|warn|info|debug|trace");
+            }
         }
         if !self.local_steps.is_sync() {
             // The elastic path's cutoff grace window is defined per
@@ -847,6 +900,54 @@ mod tests {
         )
         .unwrap();
         TrainConfig::from_json(&j).unwrap(); // H=1 composes fine
+    }
+
+    #[test]
+    fn observability_knobs_from_json_and_cli() {
+        let dflt = TrainConfig::default();
+        assert_eq!(dflt.trace_level, TraceLevel::Off);
+        assert!(dflt.trace_out.is_none());
+        assert!(dflt.metrics_out.is_none());
+        assert!(dflt.log_level.is_none());
+        let j = Json::parse(
+            r#"{"trace_level":"bucket","trace_out":"/tmp/t.json",
+                "metrics_out":"/tmp/m.txt","log_level":"debug"}"#,
+        )
+        .unwrap();
+        let cfg = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.trace_level, TraceLevel::Bucket);
+        assert_eq!(cfg.trace_out.as_deref(), Some("/tmp/t.json"));
+        assert_eq!(cfg.metrics_out.as_deref(), Some("/tmp/m.txt"));
+        assert_eq!(cfg.log_level.as_deref(), Some("debug"));
+        // trace_out without tracing enabled is a silent no-op trap — reject.
+        let j = Json::parse(r#"{"trace_out":"/tmp/t.json"}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"trace_level":"verbose"}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"log_level":"loud"}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err());
+        // metrics_out stands alone: the registry is always populated.
+        let j = Json::parse(r#"{"metrics_out":"/tmp/m.txt"}"#).unwrap();
+        TrainConfig::from_json(&j).unwrap();
+        let mut cfg = TrainConfig::default();
+        let args = Args::parse(
+            "--trace-level rank --trace-out /tmp/t2.json --metrics-out /tmp/m2.txt \
+             --log-level warn"
+                .split_whitespace()
+                .map(String::from),
+            &[],
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.trace_level, TraceLevel::Rank);
+        assert_eq!(cfg.trace_out.as_deref(), Some("/tmp/t2.json"));
+        assert_eq!(cfg.metrics_out.as_deref(), Some("/tmp/m2.txt"));
+        assert_eq!(cfg.log_level.as_deref(), Some("warn"));
+        let mut cfg = TrainConfig::default();
+        let args = Args::parse(
+            "--trace-out /tmp/t.json".split_whitespace().map(String::from),
+            &[],
+        );
+        assert!(cfg.apply_args(&args).is_err()); // level still off
     }
 
     #[test]

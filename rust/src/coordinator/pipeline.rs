@@ -27,12 +27,14 @@
 //! [`comm::StepExchange`]: crate::comm::StepExchange
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::aggregation::{AggInfo, Aggregator, BucketWork, CommScope};
 use crate::collective::cost_model::f32_wire_bytes;
 use crate::collective::{CostModel, HierCostModel, HierTimeline, NodeMap, SimClock, StepTimeline};
 use crate::comm::StepExchange;
 use crate::compress::{CompressScope, CompressionSpec, CompressorKind, SetCodec};
+use crate::obs::{Domain, Obs, SpanEvent, SpanKind, SpanScope, StepMark, StepMode, TraceLevel};
 use crate::parallel::ParallelCtx;
 use crate::tensor::{BucketTracker, Buckets, GradSet};
 use crate::util::error::{bail, ensure, Result};
@@ -141,7 +143,24 @@ pub struct PipelinedExecutor {
     /// survivor rank list (each keeps its own momentum state — AdaCons
     /// reseeds its EMA on a worker-count change anyway).
     elastic_aggs: HashMap<Vec<usize>, Box<dyn Aggregator>>,
+    /// Shared observability handle (tracing + metrics). Dormant
+    /// (`Obs::disabled`) until `set_obs` installs the trainer's; every
+    /// recording site is gated on the trace level, so the untraced step
+    /// path is bitwise-identical to the pre-observability executor.
+    obs: Arc<Obs>,
+    /// Step id stamped onto trace events — plain bookkeeping the trainer
+    /// sets before each step; never read by the execution path.
+    trace_step: u64,
     n: usize,
+}
+
+/// Map an op's communication scope onto the trace-span scope tag.
+fn span_scope(s: CommScope) -> SpanScope {
+    match s {
+        CommScope::Global => SpanScope::Global,
+        CommScope::Intra => SpanScope::Intra,
+        CommScope::Inter => SpanScope::Inter,
+    }
 }
 
 impl PipelinedExecutor {
@@ -204,8 +223,22 @@ impl PipelinedExecutor {
             compression: CompressionSpec::default(),
             set_codec: None,
             elastic_aggs: HashMap::new(),
+            obs: Obs::disabled(),
+            trace_step: 0,
             n: n_ranks,
         }
+    }
+
+    /// Install the trainer's shared observability handle.
+    pub fn set_obs(&mut self, obs: Arc<Obs>) {
+        self.obs = obs;
+    }
+
+    /// Stamp subsequent trace events with this step id (the trainer sets
+    /// it to the round's first global step). Pure bookkeeping — the
+    /// execution path never reads it.
+    pub fn set_trace_step(&mut self, step: u64) {
+        self.trace_step = step;
     }
 
     pub fn overlap(&self) -> bool {
@@ -363,6 +396,16 @@ impl PipelinedExecutor {
         // wall-clock threads. Stays all-zero without a set codec.
         let mut set_encode_s = vec![0.0f64; nb];
 
+        let obs = self.obs.clone();
+        let step_id = self.trace_step;
+        // Wall-domain phase spans (leader ingest → consensus finalize).
+        // `t_phase` is Some only when tracing, so the untraced path takes
+        // no timestamps at all.
+        let t_phase = obs
+            .trace
+            .enabled(TraceLevel::Step)
+            .then(|| obs.trace.now_s());
+
         let mut info = if self.overlap {
             let work = if self.map.is_some() {
                 self.ingest_grouped(
@@ -386,7 +429,28 @@ impl PipelinedExecutor {
                     &mut set_encode_s,
                 )?
             };
-            agg.finalize(grads, &self.buckets, work, out, ctx)
+            let t_fin = t_phase.map(|t0| {
+                let t1 = obs.trace.now_s();
+                obs.trace.span(
+                    TraceLevel::Step,
+                    SpanEvent::new(SpanKind::LeaderIngest, Domain::Wall, step_id, t0, t1 - t0),
+                );
+                t1
+            });
+            let info = agg.finalize(grads, &self.buckets, work, out, ctx);
+            if let Some(t0) = t_fin {
+                obs.trace.span(
+                    TraceLevel::Step,
+                    SpanEvent::new(
+                        SpanKind::Finalize,
+                        Domain::Wall,
+                        step_id,
+                        t0,
+                        obs.trace.now_s() - t0,
+                    ),
+                );
+            }
+            info
         } else {
             match source {
                 Arrivals::Producer(produce) => {
@@ -418,13 +482,49 @@ impl PipelinedExecutor {
             // same fixed order (and, by offset invariance, the same
             // bits) as the overlap path's per-task transforms.
             if let Some(codec) = &self.set_codec {
+                let enc_tr = obs.trace.enabled(TraceLevel::Bucket);
                 for (b, (lo, hi)) in self.buckets.iter().enumerate() {
+                    let enc_t0 = if enc_tr { obs.trace.now_s() } else { 0.0 };
                     let t = crate::util::timer::Timer::start();
                     codec.transform(b, grads, lo, hi);
                     set_encode_s[b] = t.elapsed_s();
+                    if enc_tr {
+                        obs.trace.span(
+                            TraceLevel::Bucket,
+                            SpanEvent::new(
+                                SpanKind::Encode,
+                                Domain::Wall,
+                                step_id,
+                                enc_t0,
+                                set_encode_s[b],
+                            )
+                            .bucket(b),
+                        );
+                    }
                 }
             }
-            agg.aggregate_ctx(grads, &self.buckets, out, ctx)
+            let t_fin = t_phase.map(|t0| {
+                let t1 = obs.trace.now_s();
+                obs.trace.span(
+                    TraceLevel::Step,
+                    SpanEvent::new(SpanKind::LeaderIngest, Domain::Wall, step_id, t0, t1 - t0),
+                );
+                t1
+            });
+            let info = agg.aggregate_ctx(grads, &self.buckets, out, ctx);
+            if let Some(t0) = t_fin {
+                obs.trace.span(
+                    TraceLevel::Step,
+                    SpanEvent::new(
+                        SpanKind::Finalize,
+                        Domain::Wall,
+                        step_id,
+                        t0,
+                        obs.trace.now_s() - t0,
+                    ),
+                );
+            }
+            info
         };
         if self.compression.is_active() {
             self.rewrite_compressed_bytes(&mut info);
@@ -461,13 +561,43 @@ impl PipelinedExecutor {
             };
         let rank_ready = |r: usize, b: usize| -> f64 {
             match observed {
-                Some(obs) => start_s[r] + obs[r][b].max(0.0).min(compute_s[r]),
+                Some(ob) => start_s[r] + ob[r][b].max(0.0).min(compute_s[r]),
                 None => start_s[r] + fracs[b] * compute_s[r],
             }
         };
+        let step_start = start_s.iter().cloned().fold(0.0, f64::max);
+        let bucket_tr = obs.trace.enabled(TraceLevel::Bucket);
+        // Sim-domain trace events batch into a local buffer and flush in
+        // one `record_batch` at step end — no allocation when tracing is
+        // off (`Vec::new` does not allocate until the first push).
+        let mut sim_evs: Vec<SpanEvent> = Vec::new();
+        if obs.trace.enabled(TraceLevel::Rank) {
+            for (r, &cs) in compute_s.iter().enumerate() {
+                sim_evs.push(
+                    SpanEvent::new(SpanKind::SimCompute, Domain::Sim, step_id, start_s[r], cs)
+                        .rank(r),
+                );
+            }
+            if self.overlap {
+                for r in 0..n {
+                    for b in 0..nb {
+                        sim_evs.push(
+                            SpanEvent::new(
+                                SpanKind::BucketReady,
+                                Domain::Sim,
+                                step_id,
+                                rank_ready(r, b),
+                                0.0,
+                            )
+                            .rank(r)
+                            .bucket(b),
+                        );
+                    }
+                }
+            }
+        }
         let (exposed_comm_s, serial_comm_s, exposed_intra_comm_s, exposed_inter_comm_s) =
             if self.overlap {
-                let step_start = start_s.iter().cloned().fold(0.0, f64::max);
                 match &self.hier_cost {
                     Some(hier) => {
                         // Two-level schedule: every node's intra reduce runs
@@ -491,7 +621,27 @@ impl PipelinedExecutor {
                                                 let ready = (r0..r1)
                                                     .map(|r| rank_ready(r, b))
                                                     .fold(0.0, f64::max);
-                                                done = done.max(tl.post_intra(k, ready, dur));
+                                                let (t0, dk) = tl.post_intra_span(k, ready, dur);
+                                                if bucket_tr {
+                                                    // One op, g concurrent channel
+                                                    // posts: only the first carries
+                                                    // the serial-time charge.
+                                                    let mut ev = SpanEvent::new(
+                                                        SpanKind::Transfer,
+                                                        Domain::Sim,
+                                                        step_id,
+                                                        t0,
+                                                        dur,
+                                                    )
+                                                    .bucket(b)
+                                                    .node(k)
+                                                    .scope(SpanScope::Intra);
+                                                    if k > 0 {
+                                                        ev = ev.not_serial();
+                                                    }
+                                                    sim_evs.push(ev);
+                                                }
+                                                done = done.max(dk);
                                             }
                                             intra_done[b] = Some(match intra_done[b] {
                                                 Some(x) => x.max(done),
@@ -509,7 +659,23 @@ impl PipelinedExecutor {
                                             let ready =
                                                 compute_end.max(tl.inter_done_s());
                                             for k in 0..g {
-                                                tl.post_intra(k, ready, dur);
+                                                let (t0, _) =
+                                                    tl.post_intra_span(k, ready, dur);
+                                                if bucket_tr {
+                                                    let mut ev = SpanEvent::new(
+                                                        SpanKind::Transfer,
+                                                        Domain::Sim,
+                                                        step_id,
+                                                        t0,
+                                                        dur,
+                                                    )
+                                                    .node(k)
+                                                    .scope(SpanScope::Intra);
+                                                    if k > 0 {
+                                                        ev = ev.not_serial();
+                                                    }
+                                                    sim_evs.push(ev);
+                                                }
                                             }
                                         }
                                     }
@@ -528,7 +694,21 @@ impl PipelinedExecutor {
                                         }),
                                         None => compute_end,
                                     };
-                                    tl.post_inter(ready, dur);
+                                    let (t0, _) = tl.post_inter_span(ready, dur);
+                                    if bucket_tr {
+                                        let mut ev = SpanEvent::new(
+                                            SpanKind::Transfer,
+                                            Domain::Sim,
+                                            step_id,
+                                            t0,
+                                            dur,
+                                        )
+                                        .scope(span_scope(op.scope));
+                                        if let Some(b) = op.bucket {
+                                            ev = ev.bucket(b);
+                                        }
+                                        sim_evs.push(ev);
+                                    }
                                 }
                             }
                         }
@@ -551,7 +731,21 @@ impl PipelinedExecutor {
                                 }
                                 None => compute_end,
                             };
-                            tl.post(ready, dur);
+                            let (t0, _) = tl.post_span(ready, dur);
+                            if bucket_tr {
+                                let mut ev = SpanEvent::new(
+                                    SpanKind::Transfer,
+                                    Domain::Sim,
+                                    step_id,
+                                    t0,
+                                    dur,
+                                )
+                                .scope(span_scope(op.scope));
+                                if let Some(b) = op.bucket {
+                                    ev = ev.bucket(b);
+                                }
+                                sim_evs.push(ev);
+                            }
                         }
                         let exposed = tl.exposed_s(compute_end);
                         tl.commit(clock);
@@ -582,11 +776,51 @@ impl PipelinedExecutor {
                     if op.scope == CommScope::Intra {
                         serial_intra += dur;
                     }
+                    if bucket_tr {
+                        // Barrier collectives start where the aligned
+                        // clock stands (`now` is a pure read).
+                        let mut ev = SpanEvent::new(
+                            SpanKind::Transfer,
+                            Domain::Sim,
+                            step_id,
+                            clock.now(),
+                            dur,
+                        )
+                        .scope(span_scope(op.scope));
+                        if let Some(b) = op.bucket {
+                            ev = ev.bucket(b);
+                        }
+                        sim_evs.push(ev);
+                    }
                     clock.collective(dur);
                     serial += dur;
                 }
                 (serial, serial, serial_intra, serial - serial_intra)
             };
+
+        if obs.trace.enabled(TraceLevel::Step) {
+            let mode = if self.overlap {
+                if self.hier_cost.is_some() {
+                    StepMode::OverlapHier
+                } else {
+                    StepMode::OverlapFlat
+                }
+            } else {
+                StepMode::Barrier
+            };
+            obs.trace.record_batch(sim_evs);
+            obs.trace.mark(StepMark {
+                step: step_id,
+                mode,
+                step_start_s: step_start,
+                compute_end_s: compute_end,
+                exposed_comm_s,
+                exposed_intra_s: exposed_intra_comm_s,
+                exposed_inter_s: exposed_inter_comm_s,
+                serial_comm_s,
+                wire_bytes,
+            });
+        }
 
         Ok(StepOutcome {
             info,
@@ -653,6 +887,12 @@ impl PipelinedExecutor {
         assert_eq!(out.len(), grads.d());
         let n = self.n;
         let start_s: Vec<f64> = (0..n).map(|r| clock.rank_time(r)).collect();
+        let obs = self.obs.clone();
+        let step_id = self.trace_step;
+        let t_phase = obs
+            .trace
+            .enabled(TraceLevel::Step)
+            .then(|| obs.trace.now_s());
         let buckets = &self.buckets;
         let rep = exchange.leader_ingest_elastic(buckets, policy.k, &mut |rank, b, cols| {
             let (lo, hi) = buckets.range(b);
@@ -669,6 +909,17 @@ impl PipelinedExecutor {
                 live += 1;
             }
         }
+        // Cutoff + krum + survivor aggregation all count as the leader's
+        // consensus work: ingest span ends here, finalize span covers
+        // the rest of the leader phase.
+        let t_agg = t_phase.map(|t0| {
+            let t1 = obs.trace.now_s();
+            obs.trace.span(
+                TraceLevel::Step,
+                SpanEvent::new(SpanKind::LeaderIngest, Domain::Wall, step_id, t0, t1 - t0),
+            );
+            t1
+        });
 
         // --- straggler cutoff on the simulated timeline ---
         let mut candidates: Vec<usize> =
@@ -776,10 +1027,43 @@ impl PipelinedExecutor {
             self.rewrite_compressed_bytes(&mut info);
         }
         let wire_bytes: u64 = info.comm.iter().map(|op| op.bytes as u64).sum();
+        if let Some(t0) = t_agg {
+            obs.trace.span(
+                TraceLevel::Step,
+                SpanEvent::new(
+                    SpanKind::Finalize,
+                    Domain::Wall,
+                    step_id,
+                    t0,
+                    obs.trace.now_s() - t0,
+                ),
+            );
+        }
 
         // --- simulated time: survivors' compute, then barrier ops ---
         for &r in &candidates {
             clock.advance(r, compute_s[r]);
+        }
+        let step_start = start_s.iter().cloned().fold(0.0, f64::max);
+        let compute_end = clock.now();
+        let bucket_tr = obs.trace.enabled(TraceLevel::Bucket);
+        let mut sim_evs: Vec<SpanEvent> = Vec::new();
+        if obs.trace.enabled(TraceLevel::Rank) {
+            // Only survivors' compute reaches the clock — a cut
+            // straggler's step is cancelled at the barrier — so only
+            // survivors get sim-compute spans.
+            for &r in &candidates {
+                sim_evs.push(
+                    SpanEvent::new(
+                        SpanKind::SimCompute,
+                        Domain::Sim,
+                        step_id,
+                        start_s[r],
+                        compute_s[r],
+                    )
+                    .rank(r),
+                );
+            }
         }
         let mut serial = 0.0f64;
         let mut serial_intra = 0.0f64;
@@ -792,8 +1076,31 @@ impl PipelinedExecutor {
             if op.scope == CommScope::Intra {
                 serial_intra += dur;
             }
+            if bucket_tr {
+                let mut ev =
+                    SpanEvent::new(SpanKind::Transfer, Domain::Sim, step_id, clock.now(), dur)
+                        .scope(span_scope(op.scope));
+                if let Some(b) = op.bucket {
+                    ev = ev.bucket(b);
+                }
+                sim_evs.push(ev);
+            }
             clock.collective(dur);
             serial += dur;
+        }
+        if obs.trace.enabled(TraceLevel::Step) {
+            obs.trace.record_batch(sim_evs);
+            obs.trace.mark(StepMark {
+                step: step_id,
+                mode: StepMode::Elastic,
+                step_start_s: step_start,
+                compute_end_s: compute_end,
+                exposed_comm_s: serial,
+                exposed_intra_s: serial_intra,
+                exposed_inter_s: serial - serial_intra,
+                serial_comm_s: serial,
+                wire_bytes,
+            });
         }
 
         Ok(StepOutcome {
@@ -834,6 +1141,9 @@ impl PipelinedExecutor {
         let tracker = &mut self.tracker;
         let assembly = &mut self.assembly;
         let codec = self.set_codec.as_ref();
+        let obs = self.obs.clone();
+        let step_id = self.trace_step;
+        let enc_tr = codec.is_some() && obs.trace.enabled(TraceLevel::Bucket);
         // Ingest tasks run on pool workers, so their kernels must not
         // fan out again (a nested barrier would deadlock the pool);
         // one lane with the same min_shard_elems keeps the shard plan
@@ -841,6 +1151,7 @@ impl PipelinedExecutor {
         let ictx = ParallelCtx::new(ctx.intra_task_policy());
         let scope_result = ctx.task_scope(|scope| -> Result<Vec<BucketWork>> {
             let ictx_ref = &ictx;
+            let tracer = &obs.trace;
             let mut handles: Vec<_> = (0..nb).map(|_| None).collect();
             {
                 let handles = &mut handles;
@@ -868,13 +1179,17 @@ impl PipelinedExecutor {
                             // timeline delays the bucket's transfer by
                             // them (encode is not free).
                             let mut enc_s = 0.0f64;
+                            let mut enc_t0 = 0.0f64;
                             if let Some(codec) = codec {
+                                if enc_tr {
+                                    enc_t0 = tracer.now_s();
+                                }
                                 let t = crate::util::timer::Timer::start();
                                 codec.transform(b, &mut view, 0, view.d());
                                 enc_s = t.elapsed_s();
                             }
                             let w = agg.ingest_bucket(b, &view, 0, view.d(), ictx_ref);
-                            (w, view, enc_s)
+                            (w, view, enc_s, enc_t0)
                         }));
                     }
                 };
@@ -905,8 +1220,15 @@ impl PipelinedExecutor {
             let mut work = Vec::with_capacity(nb);
             for (b, h) in handles.into_iter().enumerate() {
                 let h = h.unwrap_or_else(|| panic!("bucket {b} never became ready"));
-                let (w, view, enc_s) = h.join();
+                let (w, view, enc_s, enc_t0) = h.join();
                 set_encode_s[b] = enc_s;
+                if enc_tr {
+                    tracer.span(
+                        TraceLevel::Bucket,
+                        SpanEvent::new(SpanKind::Encode, Domain::Wall, step_id, enc_t0, enc_s)
+                            .bucket(b),
+                    );
+                }
                 if codec.is_some() {
                     let (lo, hi) = buckets.range(b);
                     for r in 0..n {

@@ -32,6 +32,7 @@ use std::thread::JoinHandle;
 use crate::collective::NodeMap;
 use crate::comm::{RankPort, StepExchange};
 use crate::compress::{CompressorKind, RankCodec};
+use crate::obs::{Domain, Obs, SpanEvent, SpanKind, TraceLevel};
 use crate::parallel::ParallelCtx;
 use crate::runtime::{Executable, Runtime};
 use crate::tensor::Buckets;
@@ -81,6 +82,7 @@ struct ElasticCfg {
     local_batch: usize,
     par: ParallelCtx,
     compress: Option<(CompressorKind, u64)>,
+    obs: Arc<Obs>,
 }
 
 /// N persistent rank threads plus the leader's exchange half.
@@ -114,6 +116,12 @@ impl RankTeam {
     /// top-k with per-bucket error feedback); the leader's wire edge
     /// decodes them before aggregation. `None` ships raw columns —
     /// bitwise-identical to the uncompressed path.
+    ///
+    /// `obs` is the shared observability handle each rank thread records
+    /// wall-domain compute/encode spans into (pass [`Obs::disabled`]
+    /// when no tracing is wanted — recording is level-gated and the
+    /// training output is bitwise-identical either way).
+    #[allow(clippy::too_many_arguments)]
     pub fn spawn(
         rt: &Runtime,
         artifact: &str,
@@ -123,8 +131,11 @@ impl RankTeam {
         par: &ParallelCtx,
         map: Option<&NodeMap>,
         compress: Option<(CompressorKind, u64)>,
+        obs: Arc<Obs>,
     ) -> Result<RankTeam> {
-        Self::spawn_inner(rt, artifact, workers, buckets, local_batch, par, map, compress, false)
+        Self::spawn_inner(
+            rt, artifact, workers, buckets, local_batch, par, map, compress, obs, false,
+        )
     }
 
     /// Like [`RankTeam::spawn`], but on an elastic exchange: a rank that
@@ -141,8 +152,11 @@ impl RankTeam {
         par: &ParallelCtx,
         map: Option<&NodeMap>,
         compress: Option<(CompressorKind, u64)>,
+        obs: Arc<Obs>,
     ) -> Result<RankTeam> {
-        Self::spawn_inner(rt, artifact, workers, buckets, local_batch, par, map, compress, true)
+        Self::spawn_inner(
+            rt, artifact, workers, buckets, local_batch, par, map, compress, obs, true,
+        )
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -155,6 +169,7 @@ impl RankTeam {
         par: &ParallelCtx,
         map: Option<&NodeMap>,
         compress: Option<(CompressorKind, u64)>,
+        obs: Arc<Obs>,
         elastic: bool,
     ) -> Result<RankTeam> {
         let n = workers.len();
@@ -183,8 +198,17 @@ impl RankTeam {
                 "workers must be passed in rank order (worker {rank} vs port {})",
                 port.rank()
             );
-            let (tx, h) =
-                spawn_rank(rt, artifact, worker, port, buckets, local_batch, par, compress)?;
+            let (tx, h) = spawn_rank(
+                rt,
+                artifact,
+                worker,
+                port,
+                buckets,
+                local_batch,
+                par,
+                compress,
+                obs.clone(),
+            )?;
             cmds.push(tx);
             handles.push(h);
         }
@@ -198,6 +222,7 @@ impl RankTeam {
                 local_batch,
                 par: par.clone(),
                 compress,
+                obs,
             }),
         })
     }
@@ -225,6 +250,7 @@ impl RankTeam {
             cfg.local_batch,
             &cfg.par,
             cfg.compress,
+            cfg.obs,
         )?;
         self.cmds[rank] = tx;
         let old = std::mem::replace(&mut self.handles[rank], h);
@@ -345,6 +371,7 @@ fn spawn_rank(
     local_batch: usize,
     par: &ParallelCtx,
     compress: Option<(CompressorKind, u64)>,
+    obs: Arc<Obs>,
 ) -> Result<(Sender<TeamCmd>, JoinHandle<()>)> {
     let rank = worker.rank;
     let exe = rt
@@ -363,7 +390,7 @@ fn spawn_rank(
     };
     let h = std::thread::Builder::new()
         .name(name)
-        .spawn(move || rank_main(worker, exe, port, bk, local_batch, rank_par, codec, rx))
+        .spawn(move || rank_main(worker, exe, port, bk, local_batch, rank_par, codec, obs, rx))
         .with_context(|| format!("spawning rank {rank} thread"))?;
     Ok((tx, h))
 }
@@ -394,8 +421,11 @@ fn rank_main(
     local_batch: usize,
     par: ParallelCtx,
     mut codec: RankCodec,
+    obs: Arc<Obs>,
     rx: Receiver<TeamCmd>,
 ) {
+    let rank = port.rank();
+    crate::util::logging::set_rank_context(Some(rank));
     loop {
         match rx.recv() {
             Ok(TeamCmd::Step {
@@ -404,6 +434,13 @@ fn rank_main(
                 local_lrs,
             }) => {
                 let codec = &mut codec;
+                // Wall-domain rank spans batch locally and flush in one
+                // lock per step; level-gated so the untraced path takes
+                // no timestamps and allocates nothing.
+                let tracer = &obs.trace;
+                let rank_tr = tracer.enabled(TraceLevel::Rank);
+                let t0 = if rank_tr { tracer.now_s() } else { 0.0 };
+                let mut spans: Vec<SpanEvent> = Vec::new();
                 // Compressed payloads charge their measured encode
                 // wall-time to the rank's timeline: each bucket reads as
                 // ready only after the encode work spent up to and
@@ -411,14 +448,24 @@ fn rank_main(
                 // Uncompressed runs skip the timing entirely, keeping
                 // the historical path untouched.
                 let timed = !codec.kind().is_none();
+                let enc_tr = timed && tracer.enabled(TraceLevel::Bucket);
                 let mut encode_s = 0.0f64;
                 let mut encode_ready = vec![0.0f64; buckets.len()];
                 let mut deliver = |port: &RankPort, b: usize, cols: &[f32]| {
                     if timed {
+                        let enc_t0 = if enc_tr { tracer.now_s() } else { 0.0 };
                         let t = crate::util::timer::Timer::start();
                         let payload = codec.encode_bucket(step, b, cols);
-                        encode_s += t.elapsed_s();
+                        let dt = t.elapsed_s();
+                        encode_s += dt;
                         encode_ready[b] = encode_s;
+                        if enc_tr {
+                            spans.push(
+                                SpanEvent::new(SpanKind::Encode, Domain::Wall, step, enc_t0, dt)
+                                    .rank(rank)
+                                    .bucket(b),
+                            );
+                        }
                         port.submit_payload(b, payload);
                     } else {
                         port.submit_payload(b, codec.encode_bucket(step, b, cols));
@@ -449,6 +496,24 @@ fn rank_main(
                 };
                 match r {
                     Ok(()) => {
+                        if rank_tr {
+                            spans.push(
+                                SpanEvent::new(
+                                    SpanKind::RankCompute,
+                                    Domain::Wall,
+                                    step,
+                                    t0,
+                                    tracer.now_s() - t0,
+                                )
+                                .rank(rank),
+                            );
+                        }
+                        if !spans.is_empty() {
+                            tracer.record_batch(std::mem::take(&mut spans));
+                        }
+                        if timed {
+                            obs.metrics.add_f("rank_encode_s", encode_s);
+                        }
                         let mut bucket_s = worker.last_bucket_s().to_vec();
                         if timed {
                             for (s, e) in bucket_s.iter_mut().zip(&encode_ready) {
@@ -543,6 +608,7 @@ mod tests {
             &par,
             None,
             None,
+            Obs::disabled(),
         )
         .unwrap();
         team.begin_step(&params, 0).unwrap();
@@ -573,6 +639,7 @@ mod tests {
             &ParallelCtx::serial(),
             None,
             None,
+            Obs::disabled(),
         )
         .unwrap();
         assert_eq!(team.n(), 4);
@@ -599,6 +666,7 @@ mod tests {
             &ParallelCtx::serial(),
             Some(&map),
             None,
+            Obs::disabled(),
         )
         .unwrap();
         assert_eq!(team.exchange().map(), Some(&map));
@@ -651,6 +719,7 @@ mod tests {
             &ParallelCtx::serial(),
             None,
             None,
+            Obs::disabled(),
         )
         .unwrap();
         let params = Arc::new(exe.spec.load_init(0).unwrap());
@@ -693,6 +762,7 @@ mod tests {
             &ParallelCtx::serial(),
             None,
             None,
+            Obs::disabled(),
         )
         .unwrap();
         let gen = crate::data::for_model(&spec.model, 7, 0, 0.0, &spec.meta).unwrap();
@@ -715,6 +785,7 @@ mod tests {
             &ParallelCtx::serial(),
             Some(&NodeMap::even(2, 2)), // 4 ranks vs 3 workers
             None,
+            Obs::disabled(),
         )
         .unwrap_err();
         assert!(err.to_string().contains("node map"), "{err}");

@@ -27,6 +27,7 @@ use crate::coordinator::eval::{EvalOutcome, Evaluator};
 use crate::coordinator::pipeline::{ElasticPolicy, PipelinedExecutor};
 use crate::coordinator::team::RankTeam;
 use crate::coordinator::Checkpoint;
+use crate::obs::{Domain, Obs, SpanEvent, SpanKind, TraceLevel};
 use crate::optim::{self, clip_global_norm, Optimizer};
 use crate::parallel::{ParPlan, ParallelCtx};
 use crate::runtime::{Executable, Runtime};
@@ -165,6 +166,11 @@ pub struct Trainer {
     /// captured when `run()` finishes so [`Trainer::checkpoint`] can
     /// persist it. None for fixed-H runs and legacy checkpoints.
     adaptive_h: Option<usize>,
+    /// Shared observability handle: span tracer + the metrics registry
+    /// every reported counter is derived from (`TrainResult`, jsonl,
+    /// `--metrics-out` all read the same folds, so sinks cannot
+    /// disagree).
+    obs: Arc<Obs>,
 }
 
 impl Trainer {
@@ -243,6 +249,7 @@ impl Trainer {
         };
         let cost = CostModel::from_topology(&topo);
         let par = ParallelCtx::new(cfg.parallel);
+        let obs = Obs::new(cfg.trace_level);
         let ranks = if cfg.rank_threads {
             // Spawn the rank threads once; they persist across every step
             // of the run and join when the trainer drops. On hierarchical
@@ -258,6 +265,7 @@ impl Trainer {
                     &par,
                     hier.as_ref().map(|h| &h.map),
                     per_rank_active.then_some((spec.kind, cfg.seed)),
+                    obs.clone(),
                 )?
             } else {
                 RankTeam::spawn(
@@ -269,6 +277,7 @@ impl Trainer {
                     &par,
                     hier.as_ref().map(|h| &h.map),
                     per_rank_active.then_some((spec.kind, cfg.seed)),
+                    obs.clone(),
                 )?
             };
             Ranks::Threaded(team)
@@ -292,7 +301,14 @@ impl Trainer {
             start_step: 0,
             set_codec_state: None,
             adaptive_h: None,
+            obs,
         })
+    }
+
+    /// The run's shared observability handle (tracer + metrics
+    /// registry). Totals are valid after [`Trainer::run`] returns.
+    pub fn obs(&self) -> &Arc<Obs> {
+        &self.obs
     }
 
     /// Resume from a checkpoint: restore the **complete** training
@@ -427,6 +443,10 @@ impl Trainer {
             self.hier.clone(),
         );
         exec.set_compression(self.cfg.compression, self.cfg.seed);
+        exec.set_obs(self.obs.clone());
+        // Fresh totals for this run: every reported counter below is
+        // derived from the registry, so a re-run must not inherit folds.
+        self.obs.metrics.reset();
         if let Some((cstep, banks)) = self.set_codec_state.take() {
             exec.import_set_codec(cstep, banks);
         }
@@ -436,13 +456,6 @@ impl Trainer {
             krum_f: self.cfg.krum_f,
         });
         let model = self.exe.spec.model.clone();
-        let mut degraded_steps = 0usize;
-        let mut rejoins = 0usize;
-        let mut exposed_comm_total = 0.0f64;
-        let mut serial_comm_total = 0.0f64;
-        let mut exposed_intra_total = 0.0f64;
-        let mut exposed_inter_total = 0.0f64;
-        let mut total_wire_bytes = 0u64;
         // --- local-step regime: `cfg.steps` counts *local* steps
         //     (gradient evaluations per rank); the loop below advances
         //     one *sync round* of H local steps at a time. H=1 takes the
@@ -484,6 +497,13 @@ impl Trainer {
                         .collect::<Vec<f32>>(),
                 )
             });
+            crate::util::logging::set_step_context(Some(step as u64));
+            exec.set_trace_step(step as u64);
+            let t_step = self
+                .obs
+                .trace
+                .enabled(TraceLevel::Step)
+                .then(|| self.obs.trace.now_s());
             let step_t = Timer::start();
             let mut grad_s = 0.0f64;
             let outcome = match &mut self.ranks {
@@ -609,7 +629,7 @@ impl Trainer {
             //     where the dead rank's would have), so the team is back
             //     at full strength before the next broadcast.
             if outcome.survivors < n {
-                degraded_steps += 1;
+                self.obs.metrics.add_u("degraded_steps", 1);
             }
             if !outcome.dead_ranks.is_empty() {
                 if let Ranks::Threaded(team) = &mut self.ranks {
@@ -635,18 +655,27 @@ impl Trainer {
                         let mut w = Worker::new(rank, gen, injector, self.cfg.seed);
                         w.fast_forward(step as u64 + 1, local_batch, d);
                         team.respawn(&self.rt, w)?;
-                        rejoins += 1;
+                        self.obs.metrics.add_u("rejoins", 1);
                     }
                 }
             }
             phases.add("grad", grad_s);
             phases.add("aggregate", (step_t.elapsed_s() - grad_s).max(0.0));
             train_loss.push(outcome.mean_loss);
-            exposed_comm_total += outcome.exposed_comm_s;
-            serial_comm_total += outcome.serial_comm_s;
-            exposed_intra_total += outcome.exposed_intra_comm_s;
-            exposed_inter_total += outcome.exposed_inter_comm_s;
-            total_wire_bytes += outcome.wire_bytes;
+            // The registry is the single accumulator: counter totals are
+            // the exact in-order fold of these adds, so they carry the
+            // same bits the former local `+=` accumulators did.
+            let m = &self.obs.metrics;
+            m.add_f("exposed_comm_s", outcome.exposed_comm_s);
+            m.add_f("serial_comm_s", outcome.serial_comm_s);
+            m.add_f("exposed_intra_comm_s", outcome.exposed_intra_comm_s);
+            m.add_f("exposed_inter_comm_s", outcome.exposed_inter_comm_s);
+            m.add_u("wire_bytes", outcome.wire_bytes);
+            m.add_u("sync_rounds", 1);
+            m.observe("local_step_h", h as f64);
+            if let Some(g) = outcome.info.gammas.as_deref() {
+                m.observe("gamma_dispersion", coeff_of_variation(g));
+            }
             local_step_trace.push(h);
             // Round-aligned cadence: a periodic event fires at this
             // round's boundary iff its local-step interval [step, step+h)
@@ -683,6 +712,7 @@ impl Trainer {
             // --- clip + optimize: one outer step per sync round, at the
             //     round-start learning rate (the per-pass rates already
             //     shaped the delta).
+            let t_opt = t_step.map(|_| self.obs.trace.now_s());
             phases.time("optimize", || {
                 if let Some(max_norm) = self.cfg.clip {
                     clip_global_norm(&mut agg, max_norm);
@@ -690,6 +720,30 @@ impl Trainer {
                 let lr = self.cfg.schedule.lr(step) as f32;
                 self.optimizer.step(&mut self.params, &agg, lr);
             });
+            if let Some(t0) = t_opt {
+                self.obs.trace.span(
+                    TraceLevel::Step,
+                    SpanEvent::new(
+                        SpanKind::OptimizerApply,
+                        Domain::Wall,
+                        step as u64,
+                        t0,
+                        self.obs.trace.now_s() - t0,
+                    ),
+                );
+            }
+            if let Some(t0) = t_step {
+                self.obs.trace.span(
+                    TraceLevel::Step,
+                    SpanEvent::new(
+                        SpanKind::Step,
+                        Domain::Wall,
+                        step as u64,
+                        t0,
+                        self.obs.trace.now_s() - t0,
+                    ),
+                );
+            }
 
             // --- eval
             if self.cfg.eval_every > 0 && (due(self.cfg.eval_every) || step + h == end) {
@@ -726,19 +780,31 @@ impl Trainer {
                         adaptive.then_some(cur_h as u64),
                     )?
                     .save(&path)?;
+                    // A checkpoint marks a resumable point: make the
+                    // metrics stream durable up to it too, so a crash
+                    // right after the save cannot strand buffered
+                    // records behind the checkpoint's step counter.
+                    if let Some(w) = &mut jsonl {
+                        w.flush()?;
+                    }
                 }
             }
             if let Some(w) = &mut jsonl {
                 use crate::util::json::{num, obj, s};
+                // Per-step comm figures read back from the registry (the
+                // `_last` slots hold exactly this round's adds), so the
+                // jsonl stream and the `--metrics-out` exposition can
+                // never drift apart.
+                let m = &self.obs.metrics;
                 let mut rec = vec![
                     ("step", num(last as f64)),
                     ("train_loss", num(*train_loss.last().unwrap())),
                     ("lr", num(self.cfg.schedule.lr(step))),
                     ("sim_time_s", num(clock.now())),
-                    ("exposed_comm_s", num(outcome.exposed_comm_s)),
-                    ("exposed_intra_comm_s", num(outcome.exposed_intra_comm_s)),
-                    ("exposed_inter_comm_s", num(outcome.exposed_inter_comm_s)),
-                    ("wire_bytes", num(outcome.wire_bytes as f64)),
+                    ("exposed_comm_s", num(m.last_f("exposed_comm_s"))),
+                    ("exposed_intra_comm_s", num(m.last_f("exposed_intra_comm_s"))),
+                    ("exposed_inter_comm_s", num(m.last_f("exposed_inter_comm_s"))),
+                    ("wire_bytes", num(m.last_u("wire_bytes") as f64)),
                     ("local_steps", num(h as f64)),
                     ("aggregator", s(&self.cfg.aggregator)),
                 ];
@@ -755,13 +821,30 @@ impl Trainer {
         if let Some(w) = &mut jsonl {
             w.flush()?;
         }
+        crate::util::logging::set_step_context(None);
         self.set_codec_state = exec.export_set_codec();
         self.adaptive_h = adaptive.then_some(cur_h);
+
+        // Observability exports: drain the span buffer into a Chrome
+        // trace and write the Prometheus exposition. Both happen after
+        // the last step, so neither can perturb training.
+        if let Some(path) = &self.cfg.trace_out {
+            let events = self.obs.trace.take_events();
+            crate::obs::chrome::write_trace(path, self.obs.trace.level(), &events)
+                .with_context(|| format!("writing trace to {path}"))?;
+        }
+        if let Some(path) = &self.cfg.metrics_out {
+            std::fs::write(path, self.obs.metrics.expose())
+                .with_context(|| format!("writing metrics to {path}"))?;
+        }
 
         // Amortized per-*local-step* metrics: dividing by `cfg.steps`
         // (not sync rounds) is what makes H>1 show its win — the same
         // number of gradient evaluations, the comm charged 1/H as often.
+        // Comm totals read back from the registry — the same in-order
+        // folds the jsonl stream and `--metrics-out` report.
         let steps = self.cfg.steps.max(1) as f64;
+        let m = &self.obs.metrics;
         Ok(TrainResult {
             train_loss,
             evals,
@@ -775,19 +858,37 @@ impl Trainer {
             agg_par,
             overlap: self.cfg.overlap,
             rank_threads: self.cfg.rank_threads,
-            exposed_comm_s: exposed_comm_total / steps,
-            serial_comm_s: serial_comm_total / steps,
-            exposed_intra_comm_s: exposed_intra_total / steps,
-            exposed_inter_comm_s: exposed_inter_total / steps,
+            exposed_comm_s: m.total_f("exposed_comm_s") / steps,
+            serial_comm_s: m.total_f("serial_comm_s") / steps,
+            exposed_intra_comm_s: m.total_f("exposed_intra_comm_s") / steps,
+            exposed_inter_comm_s: m.total_f("exposed_inter_comm_s") / steps,
             topology: self.cfg.topology.describe(),
-            degraded_steps,
-            rejoins,
-            total_wire_bytes,
+            degraded_steps: m.total_u("degraded_steps") as usize,
+            rejoins: m.total_u("rejoins") as usize,
+            total_wire_bytes: m.total_u("wire_bytes"),
             local_steps: self.cfg.local_steps.describe(),
             sync_rounds: local_step_trace.len(),
             local_step_trace,
         })
     }
+}
+
+/// Coefficient of variation (std/|mean|) of the aggregator's reported
+/// per-rank consensus weights — the γ-dispersion series the registry
+/// keeps per aggregator run. Cheap (N values), so it is recorded every
+/// round; degenerate means read as maximal disagreement, matching
+/// [`weight_dispersion`]'s convention.
+fn coeff_of_variation(vals: &[f32]) -> f64 {
+    if vals.len() < 2 {
+        return 0.0;
+    }
+    let vals: Vec<f64> = vals.iter().map(|&x| x as f64).collect();
+    let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+    if !mean.is_finite() || mean.abs() < 1e-300 {
+        return 1.0;
+    }
+    let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / vals.len() as f64;
+    var.sqrt() / mean.abs()
 }
 
 /// Dispersion of the consensus weights across ranks — the adaptive-H

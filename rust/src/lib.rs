@@ -13,6 +13,7 @@ pub mod coordinator;
 pub mod data;
 pub mod exp;
 pub mod metrics;
+pub mod obs;
 pub mod optim;
 pub mod parallel;
 pub mod runtime;

@@ -1,11 +1,13 @@
 //! `adacons` — the leader binary.
 //!
 //! Subcommands:
-//!   train   — run one training config (JSON file + CLI overrides)
-//!   figure  — regenerate a paper figure's series (fig2..fig8 | all)
-//!   table   — regenerate a paper table (table1 | table2 | all)
-//!   inspect — list the artifacts in the manifest
-//!   help    — this text
+//!   train       — run one training config (JSON file + CLI overrides)
+//!   figure      — regenerate a paper figure's series (fig2..fig8 | all)
+//!   table       — regenerate a paper table (table1 | table2 | all)
+//!   inspect     — list the artifacts in the manifest
+//!   trace-check — validate a `--trace-out` Chrome trace (and optionally
+//!                 cross-check it against a `--metrics-out` exposition)
+//!   help        — this text
 
 use std::sync::Arc;
 
@@ -36,10 +38,14 @@ USAGE:
                 [--cutoff k-of-n[:grace_ms]|none] [--krum F]
                 [--local-steps H|auto:<min>-<max>]
                 [--checkpoint-every S --checkpoint-path PATH] [--resume PATH]
-                [--csv PATH]
+                [--csv PATH] [--jsonl PATH]
+                [--trace-level off|step|bucket|rank] [--trace-out trace.json]
+                [--metrics-out metrics.txt]
+                [--log-level error|warn|info|debug|trace]
   adacons figure fig2|fig3|fig4|fig5|fig6|fig7|fig8|all [--out-dir DIR] [--steps-scale F]
   adacons table  table1|table2|all [--out-dir DIR] [--steps-scale F]
   adacons inspect [--backend auto|interp|pjrt]
+  adacons trace-check trace.json [--metrics metrics.txt]
   adacons help
 
 The linreg and MLP artifacts run on the native interpreter backend out of
@@ -95,6 +101,12 @@ fn run() -> Result<()> {
             let args = Args::parse(argv, &[]);
             cmd_inspect(&args)
         }
+        "trace-check" => {
+            ensure!(!argv.is_empty(), "trace file required (adacons trace-check trace.json)");
+            let path = argv.remove(0);
+            let args = Args::parse(argv, &[]);
+            cmd_trace_check(&path, &args)
+        }
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -109,6 +121,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         None => TrainConfig::default(),
     };
     cfg.apply_args(args)?;
+    if let Some(s) = &cfg.log_level {
+        // validate() already vetted the spec; this override beats ADACONS_LOG.
+        let level = adacons::util::logging::Level::parse(s)
+            .with_context(|| format!("--log-level {s:?}"))?;
+        adacons::util::logging::set_max_level(level);
+    }
     let rt = Arc::new(Runtime::open_default_with(cfg.backend)?);
     let mut trainer = Trainer::new(rt, cfg.clone())?;
     if let Some(path) = args.str_opt("resume").or_else(|| args.str_opt("load-checkpoint")) {
@@ -194,6 +212,51 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         w.flush()?;
         println!("wrote {path}");
+    }
+    if let Some(path) = &cfg.trace_out {
+        println!("wrote trace {path} (level {})", cfg.trace_level.tag());
+    }
+    if let Some(path) = &cfg.metrics_out {
+        println!("wrote metrics {path}");
+    }
+    Ok(())
+}
+
+/// Validate a `--trace-out` file: parse, structural checks (well-nested
+/// spans, monotonic sim tracks), and per-step reconstruction of the
+/// exposed-comm accounting from transfer spans. With `--metrics`, also
+/// cross-check the trace's step-mark folds against the Prometheus-style
+/// exposition bit-for-bit.
+fn cmd_trace_check(path: &str, args: &Args) -> Result<()> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let doc = adacons::util::json::Json::parse(&text)
+        .map_err(|e| adacons::err!("{path}: {e}"))?;
+    let st = adacons::obs::chrome::check_trace(&doc).with_context(|| format!("checking {path}"))?;
+    println!(
+        "{path}: valid Chrome trace at level {} — {} events ({} spans, {} instants, {} step marks)",
+        st.trace_level, st.events, st.spans, st.instants, st.marks,
+    );
+    println!(
+        "  {} transfer spans, {} sim-compute spans, {} bucket-ready instants",
+        st.transfer_spans, st.sim_compute_spans, st.bucket_ready_instants,
+    );
+    println!(
+        "  {}/{} steps reconstructed exactly from transfer spans; exposed comm {:.6} s \
+         (intra {:.6} s, inter {:.6} s; serial {:.6} s), wire {} bytes",
+        st.reconstructed_steps,
+        st.marks,
+        st.exposed_comm_total,
+        st.exposed_intra_total,
+        st.exposed_inter_total,
+        st.serial_comm_total,
+        st.wire_bytes_total,
+    );
+    if let Some(mpath) = args.str_opt("metrics") {
+        let exposition =
+            std::fs::read_to_string(mpath).with_context(|| format!("reading {mpath}"))?;
+        let n = adacons::obs::chrome::cross_check_metrics(&st, &exposition)
+            .with_context(|| format!("cross-checking {mpath}"))?;
+        println!("  {mpath}: {n} metric totals match the trace bit-for-bit");
     }
     Ok(())
 }

@@ -40,6 +40,14 @@ impl CsvWriter {
     }
 }
 
+impl Drop for CsvWriter {
+    /// Best-effort flush: a panic or early return between the last
+    /// explicit `flush()` and drop must not truncate the series on disk.
+    fn drop(&mut self) {
+        let _ = self.out.flush();
+    }
+}
+
 /// JSONL step logger.
 pub struct JsonlWriter {
     out: BufWriter<File>,
@@ -61,6 +69,14 @@ impl JsonlWriter {
 
     pub fn flush(&mut self) -> std::io::Result<()> {
         self.out.flush()
+    }
+}
+
+impl Drop for JsonlWriter {
+    /// Best-effort flush, mirroring [`CsvWriter`]: buffered step records
+    /// survive any exit path that drops the writer.
+    fn drop(&mut self) {
+        let _ = self.out.flush();
     }
 }
 
@@ -97,6 +113,31 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         let parsed = Json::parse(text.trim()).unwrap();
         assert_eq!(parsed.get("loss").as_f64().unwrap(), 0.5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn writers_flush_on_drop() {
+        let dir = std::env::temp_dir().join("adacons_test_sink_drop");
+        let csv = dir.join("d.csv");
+        let jsonl = dir.join("d.jsonl");
+        {
+            // No explicit flush: the Drop impls must drain the buffers.
+            let mut w = CsvWriter::create(&csv, &["step", "loss"]).unwrap();
+            w.row(&["0".into(), "2.25".into()]).unwrap();
+            let mut j = JsonlWriter::create(&jsonl).unwrap();
+            j.write(&obj(vec![("step", num(0.0)), ("loss", num(2.25))]))
+                .unwrap();
+        }
+        assert_eq!(
+            std::fs::read_to_string(&csv).unwrap(),
+            "step,loss\n0,2.25\n"
+        );
+        let text = std::fs::read_to_string(&jsonl).unwrap();
+        assert_eq!(
+            Json::parse(text.trim()).unwrap().get("loss").as_f64(),
+            Some(2.25)
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,702 @@
+//! Chrome trace-event export (Perfetto-loadable) and the `trace-check`
+//! validator.
+//!
+//! Layout: one pid per rank (`pid = 1 + rank`), the leader on pid 0, and
+//! a synthetic `sim-timeline` process on pid 1000 carrying every
+//! SimClock-domain event (per-rank modeled compute on `tid = rank`,
+//! intra-node channels on `tid = 800 + node`, the shared inter/global
+//! fabric on `tid = 900`, per-round step marks on `tid = 950`). The
+//! `ts`/`dur` microsecond fields are for the viewer; every span also
+//! carries its exact `f64` seconds in `args` (`start_s`/`dur_s`), which
+//! the in-repo JSON writer emits in shortest-round-trip form — that is
+//! what lets [`check_trace`] replay the executor's accounting and match
+//! the reported `exposed_{,intra_,inter_}comm_s` bit for bit.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::util::error::Result;
+use crate::util::json::{self, Json};
+use crate::{bail, ensure};
+
+use super::trace::{Domain, Event, SpanEvent, SpanKind, SpanScope, StepMark, TraceLevel};
+
+/// Synthetic process id for the SimClock timeline.
+const SIM_PID: i64 = 1000;
+/// Sim tids: intra channel of node `k` is `INTRA_TID0 + k`.
+const INTRA_TID0: i64 = 800;
+const INTER_TID: i64 = 900;
+const MARK_TID: i64 = 950;
+/// Leader-side set-codec encode track for bucket `b` is `ENC_TID0 + b`.
+const ENC_TID0: i64 = 10;
+
+/// Tolerance (µs) for the viewer-field well-nestedness check: `ts` and
+/// `dur` are `seconds * 1e6`, so shared span edges can disagree by a few
+/// ulps after scaling. Exactness lives in `args`, not in `ts`.
+const TS_SLACK_US: f64 = 1e-3;
+
+fn span_track(sp: &SpanEvent) -> (i64, i64) {
+    match sp.domain {
+        Domain::Wall => match sp.kind {
+            SpanKind::RankCompute => (1 + sp.rank.max(0), 0),
+            SpanKind::Encode if sp.rank >= 0 => (1 + sp.rank, 1),
+            // Leader set-codec encode runs on pool threads; give each
+            // bucket its own track so spans never interleave on one tid.
+            SpanKind::Encode => (0, ENC_TID0 + sp.bucket.max(0)),
+            _ => (0, 0),
+        },
+        Domain::Sim => match sp.kind {
+            SpanKind::Transfer => match sp.scope {
+                SpanScope::Intra => (SIM_PID, INTRA_TID0 + sp.node.max(0)),
+                _ => (SIM_PID, INTER_TID),
+            },
+            _ => (SIM_PID, sp.rank.max(0)),
+        },
+    }
+}
+
+fn span_name(sp: &SpanEvent) -> String {
+    match sp.kind {
+        SpanKind::Transfer => match sp.bucket {
+            b if b >= 0 => format!("transfer b{b} ({})", sp.scope.tag()),
+            _ => format!("transfer ({})", sp.scope.tag()),
+        },
+        SpanKind::Encode if sp.bucket >= 0 => format!("encode b{}", sp.bucket),
+        SpanKind::BucketReady => format!("ready b{}", sp.bucket.max(0)),
+        k => k.name().to_string(),
+    }
+}
+
+fn span_json(sp: &SpanEvent) -> Json {
+    let (pid, tid) = span_track(sp);
+    let mut args = vec![
+        ("kind", json::s(sp.kind.name())),
+        ("domain", json::s(sp.domain.tag())),
+        ("step", json::num(sp.step as f64)),
+        ("start_s", json::num(sp.start_s)),
+        ("dur_s", json::num(sp.dur_s)),
+    ];
+    if sp.rank >= 0 {
+        args.push(("rank", json::num(sp.rank as f64)));
+    }
+    if sp.bucket >= 0 {
+        args.push(("bucket", json::num(sp.bucket as f64)));
+    }
+    if sp.node >= 0 {
+        args.push(("node", json::num(sp.node as f64)));
+    }
+    if sp.scope != SpanScope::None {
+        args.push(("scope", json::s(sp.scope.tag())));
+    }
+    if sp.kind == SpanKind::Transfer {
+        // Whether this span's duration entered the executor's serial-comm
+        // accumulator (fan-out ops post once per channel but count once).
+        args.push(("serial", Json::Bool(sp.serial)));
+    }
+    let instant = sp.kind == SpanKind::BucketReady;
+    let mut fields = vec![
+        ("name", json::s(&span_name(sp))),
+        ("cat", json::s(sp.domain.tag())),
+        ("ph", json::s(if instant { "i" } else { "X" })),
+        ("pid", json::num(pid as f64)),
+        ("tid", json::num(tid as f64)),
+        ("ts", json::num(sp.start_s * 1e6)),
+        ("args", json::obj(args)),
+    ];
+    if instant {
+        fields.push(("s", json::s("t")));
+    } else {
+        fields.push(("dur", json::num(sp.dur_s * 1e6)));
+    }
+    json::obj(fields)
+}
+
+fn mark_json(m: &StepMark) -> Json {
+    let args = vec![
+        ("kind", json::s("step_mark")),
+        ("step", json::num(m.step as f64)),
+        ("mode", json::s(m.mode.tag())),
+        ("step_start_s", json::num(m.step_start_s)),
+        ("compute_end_s", json::num(m.compute_end_s)),
+        ("exposed_comm_s", json::num(m.exposed_comm_s)),
+        ("exposed_intra_s", json::num(m.exposed_intra_s)),
+        ("exposed_inter_s", json::num(m.exposed_inter_s)),
+        ("serial_comm_s", json::num(m.serial_comm_s)),
+        ("wire_bytes", json::num(m.wire_bytes as f64)),
+    ];
+    json::obj(vec![
+        ("name", json::s(&format!("step {}", m.step))),
+        ("cat", json::s("sim")),
+        ("ph", json::s("i")),
+        ("s", json::s("t")),
+        ("pid", json::num(SIM_PID as f64)),
+        ("tid", json::num(MARK_TID as f64)),
+        ("ts", json::num(m.compute_end_s * 1e6)),
+        ("args", json::obj(args)),
+    ])
+}
+
+fn meta_json(pid: i64, tid: Option<i64>, name: &str) -> Json {
+    let mut fields = vec![
+        (
+            "name",
+            json::s(if tid.is_some() {
+                "thread_name"
+            } else {
+                "process_name"
+            }),
+        ),
+        ("ph", json::s("M")),
+        ("pid", json::num(pid as f64)),
+        ("args", json::obj(vec![("name", json::s(name))])),
+    ];
+    if let Some(t) = tid {
+        fields.push(("tid", json::num(t as f64)));
+    }
+    json::obj(fields)
+}
+
+/// Render a drained event buffer as a Chrome trace-event JSON document.
+/// The recording side (coordinator::pipeline) sets `SpanEvent::serial`
+/// per transfer span, so the serial-comm accounting survives fan-out
+/// ops that post one span per channel.
+pub fn chrome_trace(level: TraceLevel, events: &[Event]) -> Json {
+    let mut body: Vec<Json> = Vec::with_capacity(events.len() + 8);
+    for ev in events {
+        match ev {
+            Event::Span(sp) => body.push(span_json(sp)),
+            Event::Mark(m) => body.push(mark_json(m)),
+        }
+    }
+
+    // Metadata: name every process/thread that actually appears.
+    let mut tracks: BTreeSet<(i64, i64)> = BTreeSet::new();
+    for ev in events {
+        match ev {
+            Event::Span(sp) => {
+                tracks.insert(span_track(sp));
+            }
+            Event::Mark(_) => {
+                tracks.insert((SIM_PID, MARK_TID));
+            }
+        }
+    }
+    let mut meta: Vec<Json> = Vec::new();
+    let pids: BTreeSet<i64> = tracks.iter().map(|&(p, _)| p).collect();
+    for pid in pids {
+        let pname = match pid {
+            0 => "leader".to_string(),
+            SIM_PID => "sim-timeline".to_string(),
+            p => format!("rank {}", p - 1),
+        };
+        meta.push(meta_json(pid, None, &pname));
+    }
+    for &(pid, tid) in &tracks {
+        let tname = match (pid, tid) {
+            (0, 0) => "step".to_string(),
+            (0, t) if t >= ENC_TID0 => format!("set-encode b{}", t - ENC_TID0),
+            (SIM_PID, MARK_TID) => "step marks".to_string(),
+            (SIM_PID, INTER_TID) => "fabric (inter)".to_string(),
+            (SIM_PID, t) if t >= INTRA_TID0 => format!("intra node {}", t - INTRA_TID0),
+            (SIM_PID, t) => format!("sim rank {t}"),
+            (_, 0) => "compute".to_string(),
+            (_, 1) => "encode".to_string(),
+            (_, t) => format!("t{t}"),
+        };
+        meta.push(meta_json(pid, Some(tid), &tname));
+    }
+    meta.extend(body);
+
+    json::obj(vec![
+        ("traceEvents", Json::Arr(meta)),
+        ("displayTimeUnit", json::s("ms")),
+        (
+            "adacons",
+            json::obj(vec![
+                ("trace_level", json::s(level.tag())),
+                ("version", json::num(1.0)),
+            ]),
+        ),
+    ])
+}
+
+/// Serialize and write a trace document to `path`.
+pub fn write_trace(path: &str, level: TraceLevel, events: &[Event]) -> Result<()> {
+    let doc = chrome_trace(level, events);
+    std::fs::write(path, doc.to_string_compact())?;
+    Ok(())
+}
+
+/// What [`check_trace`] verified and summed.
+#[derive(Debug, Clone, Default)]
+pub struct TraceStats {
+    pub events: usize,
+    pub spans: usize,
+    pub instants: usize,
+    pub marks: usize,
+    pub transfer_spans: usize,
+    pub sim_compute_spans: usize,
+    pub bucket_ready_instants: usize,
+    /// Steps whose exposed-comm figures were reconstructed from transfer
+    /// spans and matched the step mark bit-for-bit (requires a trace
+    /// recorded at `bucket` level or above).
+    pub reconstructed_steps: usize,
+    /// Σ over step marks, in step order (the same fold the trainer's
+    /// registry performs) — comparable bitwise to the metrics exposition.
+    pub exposed_comm_total: f64,
+    pub exposed_intra_total: f64,
+    pub exposed_inter_total: f64,
+    pub serial_comm_total: f64,
+    pub wire_bytes_total: u64,
+    pub trace_level: String,
+}
+
+struct XSpan {
+    ts: f64,
+    dur: f64,
+    /// Sim-domain spans are emitted in schedule order; wall spans close
+    /// (and are recorded) after their children, so only sim tracks are
+    /// held to file-order timestamp monotonicity.
+    sim: bool,
+}
+
+struct TransferArg {
+    step: u64,
+    scope: String,
+    start_s: f64,
+    dur_s: f64,
+    serial: bool,
+}
+
+struct MarkArg {
+    step: u64,
+    mode: String,
+    step_start_s: f64,
+    compute_end_s: f64,
+    exposed_comm_s: f64,
+    exposed_intra_s: f64,
+    exposed_inter_s: f64,
+    serial_comm_s: f64,
+    wire_bytes: u64,
+}
+
+fn req_f64(ev: &Json, key: &str, i: usize) -> Result<f64> {
+    match ev.get(key).as_f64() {
+        Some(v) if v.is_finite() => Ok(v),
+        Some(v) => bail!("event {i}: non-finite {key:?}: {v}"),
+        None => bail!("event {i}: missing numeric {key:?}"),
+    }
+}
+
+fn arg_f64(args: &Json, key: &str, i: usize) -> Result<f64> {
+    args.get(key)
+        .as_f64()
+        .ok_or_else(|| crate::util::error::Error::msg(format!("event {i}: missing args.{key}")))
+}
+
+/// Validate a Chrome trace-event document produced by this crate:
+/// structure (object with `traceEvents`, every event typed and
+/// timestamped), per-track monotonic timestamps, well-nested `X` spans,
+/// and — when the trace was recorded at `bucket` level or deeper —
+/// bit-exact reconstruction of each step's reported
+/// `exposed_{,intra_,inter_}comm_s` / `serial_comm_s` from its transfer
+/// spans, replaying the executor's accounting branch (`mode` in the
+/// step mark).
+pub fn check_trace(doc: &Json) -> Result<TraceStats> {
+    let evs = match doc.get("traceEvents").as_arr() {
+        Some(a) => a,
+        None => bail!("not a Chrome trace: no traceEvents array"),
+    };
+    let mut st = TraceStats {
+        events: evs.len(),
+        trace_level: doc
+            .get("adacons")
+            .get("trace_level")
+            .as_str()
+            .unwrap_or("unknown")
+            .to_string(),
+        ..TraceStats::default()
+    };
+
+    let mut tracks: BTreeMap<(i64, i64), Vec<XSpan>> = BTreeMap::new();
+    let mut transfers: Vec<TransferArg> = Vec::new();
+    let mut marks: Vec<MarkArg> = Vec::new();
+
+    for (i, ev) in evs.iter().enumerate() {
+        let ph = match ev.get("ph").as_str() {
+            Some(p) => p,
+            None => bail!("event {i}: missing ph"),
+        };
+        ensure!(!ev.get("name").is_null(), "event {i}: missing name");
+        if ph == "M" {
+            continue;
+        }
+        let pid = req_f64(ev, "pid", i)? as i64;
+        let tid = req_f64(ev, "tid", i)? as i64;
+        let ts = req_f64(ev, "ts", i)?;
+        let args = ev.get("args");
+        let kind = args.get("kind").as_str().unwrap_or("");
+        match ph {
+            "X" => {
+                let dur = req_f64(ev, "dur", i)?;
+                ensure!(dur >= 0.0, "event {i}: negative dur {dur}");
+                st.spans += 1;
+                let sim = ev.get("cat").as_str() == Some("sim");
+                tracks.entry((pid, tid)).or_default().push(XSpan { ts, dur, sim });
+                match kind {
+                    "transfer" => {
+                        st.transfer_spans += 1;
+                        transfers.push(TransferArg {
+                            step: arg_f64(args, "step", i)? as u64,
+                            scope: args.get("scope").as_str().unwrap_or("global").to_string(),
+                            start_s: arg_f64(args, "start_s", i)?,
+                            dur_s: arg_f64(args, "dur_s", i)?,
+                            serial: args.get("serial").as_bool().unwrap_or(true),
+                        });
+                    }
+                    "sim_compute" => st.sim_compute_spans += 1,
+                    _ => {}
+                }
+            }
+            "i" => {
+                st.instants += 1;
+                match kind {
+                    "step_mark" => {
+                        st.marks += 1;
+                        marks.push(MarkArg {
+                            step: arg_f64(args, "step", i)? as u64,
+                            mode: args
+                                .get("mode")
+                                .as_str()
+                                .unwrap_or("barrier")
+                                .to_string(),
+                            step_start_s: arg_f64(args, "step_start_s", i)?,
+                            compute_end_s: arg_f64(args, "compute_end_s", i)?,
+                            exposed_comm_s: arg_f64(args, "exposed_comm_s", i)?,
+                            exposed_intra_s: arg_f64(args, "exposed_intra_s", i)?,
+                            exposed_inter_s: arg_f64(args, "exposed_inter_s", i)?,
+                            serial_comm_s: arg_f64(args, "serial_comm_s", i)?,
+                            wire_bytes: arg_f64(args, "wire_bytes", i)? as u64,
+                        });
+                    }
+                    "bucket_ready" => st.bucket_ready_instants += 1,
+                    _ => {}
+                }
+            }
+            other => bail!("event {i}: unsupported ph {other:?}"),
+        }
+    }
+
+    // Per-track: sim-domain timestamps monotonic in file order (they are
+    // emitted in schedule order), and X spans well-nested — on the
+    // ts-sorted schedule, each span either disjoint from or fully
+    // contained in any open ancestor on its track. Wall spans are sorted
+    // first because a parent (e.g. the whole-step span) is recorded when
+    // it *closes*, i.e. after its children.
+    for ((pid, tid), spans) in &tracks {
+        let mut prev_ts = f64::NEG_INFINITY;
+        for sp in spans.iter().filter(|s| s.sim) {
+            ensure!(
+                sp.ts + TS_SLACK_US >= prev_ts,
+                "track ({pid},{tid}): non-monotonic sim ts {} after {prev_ts}",
+                sp.ts
+            );
+            prev_ts = sp.ts;
+        }
+        let mut sorted: Vec<&XSpan> = spans.iter().collect();
+        sorted.sort_by(|a, b| {
+            a.ts.partial_cmp(&b.ts)
+                .unwrap()
+                .then(b.dur.partial_cmp(&a.dur).unwrap())
+        });
+        let mut open_ends: Vec<f64> = Vec::new();
+        for sp in sorted {
+            let end = sp.ts + sp.dur;
+            while open_ends
+                .last()
+                .map(|&e| sp.ts >= e - TS_SLACK_US)
+                .unwrap_or(false)
+            {
+                open_ends.pop();
+            }
+            if let Some(&e) = open_ends.last() {
+                ensure!(
+                    end <= e + TS_SLACK_US,
+                    "track ({pid},{tid}): span [{}, {end}] not nested in parent ending {e}",
+                    sp.ts
+                );
+            }
+            open_ends.push(end);
+        }
+    }
+
+    // Step-mark totals, folded in file (== step) order: the same
+    // accumulation the trainer's registry performs.
+    let mut seen_steps: BTreeSet<u64> = BTreeSet::new();
+    for m in &marks {
+        ensure!(
+            seen_steps.insert(m.step),
+            "duplicate step mark for step {}",
+            m.step
+        );
+        st.exposed_comm_total += m.exposed_comm_s;
+        st.exposed_intra_total += m.exposed_intra_s;
+        st.exposed_inter_total += m.exposed_inter_s;
+        st.serial_comm_total += m.serial_comm_s;
+        st.wire_bytes_total += m.wire_bytes;
+    }
+
+    // Bit-exact reconstruction (needs per-bucket transfer spans).
+    let reconstruct = matches!(st.trace_level.as_str(), "bucket" | "rank");
+    if reconstruct {
+        for m in &marks {
+            let step_transfers: Vec<&TransferArg> =
+                transfers.iter().filter(|t| t.step == m.step).collect();
+            let (rec_comm, rec_intra, rec_inter, rec_serial) = match m.mode.as_str() {
+                "overlap-hier" => {
+                    let mut inter_done = m.step_start_s;
+                    let mut intra_done = m.step_start_s;
+                    let mut serial = 0.0f64;
+                    for t in &step_transfers {
+                        let done = t.start_s + t.dur_s;
+                        if t.scope == "intra" {
+                            intra_done = intra_done.max(done);
+                        } else {
+                            inter_done = inter_done.max(done);
+                        }
+                        if t.serial {
+                            serial += t.dur_s;
+                        }
+                    }
+                    let comm = (intra_done.max(inter_done) - m.compute_end_s).max(0.0);
+                    let intra =
+                        (intra_done - m.compute_end_s.max(inter_done)).max(0.0);
+                    let inter = (inter_done - m.compute_end_s).max(0.0);
+                    (comm, intra, inter, serial)
+                }
+                "overlap-flat" => {
+                    let mut done = m.step_start_s;
+                    let mut serial = 0.0f64;
+                    for t in &step_transfers {
+                        done = done.max(t.start_s + t.dur_s);
+                        if t.serial {
+                            serial += t.dur_s;
+                        }
+                    }
+                    let e = (done - m.compute_end_s).max(0.0);
+                    (e, 0.0, e, serial)
+                }
+                "barrier" | "elastic" => {
+                    let mut serial = 0.0f64;
+                    let mut serial_intra = 0.0f64;
+                    for t in &step_transfers {
+                        if t.serial {
+                            serial += t.dur_s;
+                            if t.scope == "intra" {
+                                serial_intra += t.dur_s;
+                            }
+                        }
+                    }
+                    (serial, serial_intra, serial - serial_intra, serial)
+                }
+                other => bail!("step {}: unknown step-mark mode {other:?}", m.step),
+            };
+            for (what, rec, reported) in [
+                ("exposed_comm_s", rec_comm, m.exposed_comm_s),
+                ("exposed_intra_s", rec_intra, m.exposed_intra_s),
+                ("exposed_inter_s", rec_inter, m.exposed_inter_s),
+                ("serial_comm_s", rec_serial, m.serial_comm_s),
+            ] {
+                ensure!(
+                    rec.to_bits() == reported.to_bits(),
+                    "step {} ({}): {} reconstruction mismatch: transfers give {rec:e}, mark reports {reported:e}",
+                    m.step,
+                    m.mode,
+                    what
+                );
+            }
+            st.reconstructed_steps += 1;
+        }
+    }
+
+    Ok(st)
+}
+
+/// Cross-check the trace's step-mark totals against a metrics exposition
+/// (`--metrics-out` file). Returns how many series were compared; the
+/// comm totals are required, anything else present is ignored.
+pub fn cross_check_metrics(st: &TraceStats, exposition: &str) -> Result<usize> {
+    let map = super::registry::parse_exposition(exposition);
+    let mut checked = 0usize;
+    for (key, want) in [
+        ("adacons_exposed_comm_s_total", st.exposed_comm_total),
+        ("adacons_exposed_intra_comm_s_total", st.exposed_intra_total),
+        ("adacons_exposed_inter_comm_s_total", st.exposed_inter_total),
+        ("adacons_serial_comm_s_total", st.serial_comm_total),
+        ("adacons_wire_bytes_total", st.wire_bytes_total as f64),
+    ] {
+        match map.get(key) {
+            Some(&got) => {
+                ensure!(
+                    got.to_bits() == want.to_bits(),
+                    "metrics mismatch for {key}: exposition has {got:e}, trace marks sum to {want:e}"
+                );
+                checked += 1;
+            }
+            None => bail!("metrics exposition is missing {key}"),
+        }
+    }
+    Ok(checked)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::trace::{StepMode, Tracer};
+    use super::*;
+
+    fn sample_events() -> Vec<Event> {
+        let t = Tracer::new(TraceLevel::Rank);
+        // One fake "step": two ranks, two buckets, barrier-mode marks.
+        let ce = 0.010f64;
+        let durs = [0.004f64, 0.002];
+        for r in 0..2usize {
+            t.span(
+                TraceLevel::Rank,
+                SpanEvent::new(SpanKind::SimCompute, Domain::Sim, 0, 0.0, ce).rank(r),
+            );
+            for b in 0..2usize {
+                t.span(
+                    TraceLevel::Rank,
+                    SpanEvent::new(
+                        SpanKind::BucketReady,
+                        Domain::Sim,
+                        0,
+                        ce * (b + 1) as f64 / 2.0,
+                        0.0,
+                    )
+                    .rank(r)
+                    .bucket(b),
+                );
+            }
+        }
+        let mut pos = ce;
+        let mut serial = 0.0f64;
+        for (b, &d) in durs.iter().enumerate() {
+            t.span(
+                TraceLevel::Bucket,
+                SpanEvent::new(SpanKind::Transfer, Domain::Sim, 0, pos, d)
+                    .bucket(b)
+                    .scope(SpanScope::Global),
+            );
+            pos += d;
+            serial += d;
+        }
+        t.span(
+            TraceLevel::Step,
+            SpanEvent::new(SpanKind::Finalize, Domain::Wall, 0, 0.001, 0.0005),
+        );
+        t.mark(StepMark {
+            step: 0,
+            mode: StepMode::Barrier,
+            step_start_s: 0.0,
+            compute_end_s: ce,
+            exposed_comm_s: serial,
+            exposed_intra_s: 0.0,
+            exposed_inter_s: serial,
+            serial_comm_s: serial,
+            wire_bytes: 4096,
+        });
+        t.take_events()
+    }
+
+    #[test]
+    fn export_parses_and_checks_clean() {
+        let evs = sample_events();
+        let doc = chrome_trace(TraceLevel::Rank, &evs);
+        // Round-trip through text: the on-disk form must parse.
+        let text = doc.to_string_compact();
+        let parsed = Json::parse(&text).unwrap();
+        let st = check_trace(&parsed).unwrap();
+        assert_eq!(st.marks, 1);
+        assert_eq!(st.sim_compute_spans, 2);
+        assert_eq!(st.bucket_ready_instants, 4);
+        assert_eq!(st.transfer_spans, 2);
+        assert_eq!(st.reconstructed_steps, 1);
+        assert_eq!(st.wire_bytes_total, 4096);
+        assert_eq!(
+            st.exposed_inter_total.to_bits(),
+            (0.004f64 + 0.002).to_bits()
+        );
+        assert_eq!(st.trace_level, "rank");
+    }
+
+    #[test]
+    fn corrupt_duration_fails_reconstruction() {
+        let mut evs = sample_events();
+        // Perturb one transfer duration: reconstruction must notice.
+        for ev in &mut evs {
+            if let Event::Span(sp) = ev {
+                if sp.kind == SpanKind::Transfer {
+                    sp.dur_s *= 1.0 + 1e-12;
+                    break;
+                }
+            }
+        }
+        let doc = chrome_trace(TraceLevel::Rank, &evs);
+        let err = check_trace(&doc).unwrap_err().to_string();
+        assert!(err.contains("reconstruction mismatch"), "{err}");
+    }
+
+    #[test]
+    fn malformed_documents_are_rejected() {
+        assert!(check_trace(&Json::Num(3.0)).is_err());
+        let doc = json::obj(vec![(
+            "traceEvents",
+            json::arr(vec![json::obj(vec![("name", json::s("x"))])]),
+        )]);
+        let err = check_trace(&doc).unwrap_err().to_string();
+        assert!(err.contains("missing ph"), "{err}");
+    }
+
+    #[test]
+    fn overlapping_spans_on_one_track_are_rejected() {
+        // Two X spans on the same track that partially overlap.
+        let mk = |ts: f64, dur: f64| {
+            json::obj(vec![
+                ("name", json::s("a")),
+                ("ph", json::s("X")),
+                ("pid", json::num(0.0)),
+                ("tid", json::num(0.0)),
+                ("ts", json::num(ts)),
+                ("dur", json::num(dur)),
+            ])
+        };
+        let doc = json::obj(vec![(
+            "traceEvents",
+            json::arr(vec![mk(0.0, 10.0), mk(5.0, 10.0)]),
+        )]);
+        let err = check_trace(&doc).unwrap_err().to_string();
+        assert!(err.contains("not nested"), "{err}");
+    }
+
+    #[test]
+    fn metrics_cross_check() {
+        let evs = sample_events();
+        let doc = chrome_trace(TraceLevel::Rank, &evs);
+        let st = check_trace(&doc).unwrap();
+        let reg = super::super::registry::Registry::new();
+        reg.add_f("exposed_comm_s", 0.004 + 0.002);
+        reg.add_f("exposed_intra_comm_s", 0.0);
+        reg.add_f("exposed_inter_comm_s", 0.004 + 0.002);
+        reg.add_f("serial_comm_s", 0.004 + 0.002);
+        reg.add_u("wire_bytes", 4096);
+        assert_eq!(cross_check_metrics(&st, &reg.expose()).unwrap(), 5);
+        // A perturbed exposition fails.
+        let reg2 = super::super::registry::Registry::new();
+        reg2.add_f("exposed_comm_s", 0.004 + 0.002 + 1e-15);
+        reg2.add_f("exposed_intra_comm_s", 0.0);
+        reg2.add_f("exposed_inter_comm_s", 0.004 + 0.002);
+        reg2.add_f("serial_comm_s", 0.004 + 0.002);
+        reg2.add_u("wire_bytes", 4096);
+        assert!(cross_check_metrics(&st, &reg2.expose()).is_err());
+    }
+}

@@ -1,0 +1,46 @@
+//! Observability: structured span tracing + a unified metrics registry.
+//!
+//! One [`Obs`] handle per `Trainer`, shared (`Arc`) with the executor
+//! and every rank thread. The [`Tracer`] half records wall- and
+//! sim-domain spans for Chrome-trace export ([`chrome`]); the
+//! [`Registry`] half is the single source of truth for every counter
+//! the trainer reports — `TrainResult` fields, per-step jsonl records,
+//! and the `--metrics-out` Prometheus exposition are all derived from
+//! it, so sinks can never disagree.
+//!
+//! Invariant: observation never alters the experiment. Recording reads
+//! already-computed values, draws no RNG, and writes nothing into the
+//! `SimClock`, so training output is bitwise-identical at every trace
+//! level, including `off`.
+
+pub mod chrome;
+pub mod registry;
+pub mod trace;
+
+use std::sync::Arc;
+
+pub use registry::{HistStat, Registry};
+pub use trace::{
+    Domain, Event, SpanEvent, SpanKind, SpanScope, StepMark, StepMode, TraceLevel, Tracer,
+};
+
+/// Shared observability handle: tracer + metrics registry.
+pub struct Obs {
+    pub trace: Tracer,
+    pub metrics: Registry,
+}
+
+impl Obs {
+    pub fn new(level: TraceLevel) -> Arc<Obs> {
+        Arc::new(Obs {
+            trace: Tracer::new(level),
+            metrics: Registry::new(),
+        })
+    }
+
+    /// Tracing off, metrics still collected — the default everywhere a
+    /// caller has no `TrainConfig` in hand (benches, unit tests).
+    pub fn disabled() -> Arc<Obs> {
+        Obs::new(TraceLevel::Off)
+    }
+}

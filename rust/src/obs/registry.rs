@@ -1,0 +1,303 @@
+//! Unified metrics registry: counters, gauges, and summary histograms
+//! behind one mutex, with a Prometheus-style text exposition.
+//!
+//! The trainer feeds every per-round quantity through here and then
+//! *re-derives* the `TrainResult` fields and jsonl records from the
+//! registry, so the sinks cannot disagree: a counter's `total` is the
+//! exact fold of its `add` calls in call order (bitwise-reproducible for
+//! deterministic inputs), and `last` is the most recent addend (what the
+//! per-step jsonl line reports).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::Mutex;
+
+/// Summary statistics of an observed series (we keep count/sum/min/max
+/// rather than bucketed quantiles — enough for dispersion-style metrics
+/// without committing to a bucket layout).
+#[derive(Debug, Clone, Copy)]
+pub struct HistStat {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Default for HistStat {
+    fn default() -> HistStat {
+        HistStat {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Metric {
+    CounterF { total: f64, last: f64 },
+    CounterU { total: u64, last: u64 },
+    Gauge(f64),
+    Hist(HistStat),
+}
+
+impl Metric {
+    fn type_tag(&self) -> &'static str {
+        match self {
+            Metric::CounterF { .. } | Metric::CounterU { .. } => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Hist(_) => "histogram",
+        }
+    }
+}
+
+/// The registry. Names are bare (`exposed_comm_s`); the exposition
+/// prefixes them with `adacons_` and suffixes by kind (`_total`,
+/// `_last`, `_count`, ...).
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Add to an f64 counter (creates it at zero first).
+    pub fn add_f(&self, name: &str, v: f64) {
+        let mut m = self.lock();
+        match m.entry(name.to_string()).or_insert(Metric::CounterF {
+            total: 0.0,
+            last: 0.0,
+        }) {
+            Metric::CounterF { total, last } => {
+                *total += v;
+                *last = v;
+            }
+            other => panic!("metric {name:?} is a {}, not an f64 counter", other.type_tag()),
+        }
+    }
+
+    /// Add to a u64 counter (creates it at zero first).
+    pub fn add_u(&self, name: &str, v: u64) {
+        let mut m = self.lock();
+        match m.entry(name.to_string()).or_insert(Metric::CounterU {
+            total: 0,
+            last: 0,
+        }) {
+            Metric::CounterU { total, last } => {
+                *total += v;
+                *last = v;
+            }
+            other => panic!("metric {name:?} is a {}, not a u64 counter", other.type_tag()),
+        }
+    }
+
+    pub fn set_gauge(&self, name: &str, v: f64) {
+        self.lock().insert(name.to_string(), Metric::Gauge(v));
+    }
+
+    /// Record one observation into a summary histogram.
+    pub fn observe(&self, name: &str, v: f64) {
+        let mut m = self.lock();
+        match m
+            .entry(name.to_string())
+            .or_insert(Metric::Hist(HistStat::default()))
+        {
+            Metric::Hist(h) => {
+                h.count += 1;
+                h.sum += v;
+                h.min = h.min.min(v);
+                h.max = h.max.max(v);
+            }
+            other => panic!("metric {name:?} is a {}, not a histogram", other.type_tag()),
+        }
+    }
+
+    pub fn total_f(&self, name: &str) -> f64 {
+        match self.lock().get(name) {
+            Some(Metric::CounterF { total, .. }) => *total,
+            _ => 0.0,
+        }
+    }
+
+    pub fn last_f(&self, name: &str) -> f64 {
+        match self.lock().get(name) {
+            Some(Metric::CounterF { last, .. }) => *last,
+            _ => 0.0,
+        }
+    }
+
+    pub fn total_u(&self, name: &str) -> u64 {
+        match self.lock().get(name) {
+            Some(Metric::CounterU { total, .. }) => *total,
+            _ => 0,
+        }
+    }
+
+    pub fn last_u(&self, name: &str) -> u64 {
+        match self.lock().get(name) {
+            Some(Metric::CounterU { last, .. }) => *last,
+            _ => 0,
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        match self.lock().get(name) {
+            Some(Metric::Gauge(v)) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn hist(&self, name: &str) -> Option<HistStat> {
+        match self.lock().get(name) {
+            Some(Metric::Hist(h)) => Some(*h),
+            _ => None,
+        }
+    }
+
+    /// Drop every metric (a fresh `Trainer::run` starts from zero).
+    pub fn reset(&self) {
+        self.lock().clear();
+    }
+
+    /// Prometheus-style text exposition. Counters emit `_total` plus a
+    /// `_last` gauge (the most recent per-step addend); histograms emit
+    /// `_count`/`_sum`/`_min`/`_max`. `f64`s are written with Rust's
+    /// shortest-round-trip `Display`, so parsing a value back yields the
+    /// identical bits — `adacons trace-check --metrics` relies on this.
+    pub fn expose(&self) -> String {
+        let mut out = String::new();
+        for (name, metric) in self.lock().iter() {
+            let full = format!("adacons_{name}");
+            match metric {
+                Metric::CounterF { total, last } => {
+                    let _ = writeln!(out, "# TYPE {full}_total counter");
+                    let _ = writeln!(out, "{full}_total {total}");
+                    let _ = writeln!(out, "# TYPE {full}_last gauge");
+                    let _ = writeln!(out, "{full}_last {last}");
+                }
+                Metric::CounterU { total, last } => {
+                    let _ = writeln!(out, "# TYPE {full}_total counter");
+                    let _ = writeln!(out, "{full}_total {total}");
+                    let _ = writeln!(out, "# TYPE {full}_last gauge");
+                    let _ = writeln!(out, "{full}_last {last}");
+                }
+                Metric::Gauge(v) => {
+                    let _ = writeln!(out, "# TYPE {full} gauge");
+                    let _ = writeln!(out, "{full} {v}");
+                }
+                Metric::Hist(h) => {
+                    let _ = writeln!(out, "# TYPE {full} summary");
+                    let _ = writeln!(out, "{full}_count {}", h.count);
+                    let _ = writeln!(out, "{full}_sum {}", h.sum);
+                    if h.count > 0 {
+                        let _ = writeln!(out, "{full}_min {}", h.min);
+                        let _ = writeln!(out, "{full}_max {}", h.max);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, BTreeMap<String, Metric>> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// Parse a text exposition back into `name -> value` (comment lines
+/// skipped). Values round-trip bitwise because [`Registry::expose`]
+/// writes shortest-round-trip `Display` forms.
+pub fn parse_exposition(text: &str) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        if let (Some(name), Some(val)) = (it.next(), it.next()) {
+            if let Ok(v) = val.parse::<f64>() {
+                out.insert(name.to_string(), v);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_total_is_the_exact_fold_and_last_is_the_tail() {
+        let r = Registry::new();
+        let xs = [0.1f64, 0.2, 0.30000000000000004, 1e-9];
+        let mut acc = 0.0f64;
+        for &x in &xs {
+            r.add_f("exposed_comm_s", x);
+            acc += x;
+        }
+        assert_eq!(r.total_f("exposed_comm_s").to_bits(), acc.to_bits());
+        assert_eq!(r.last_f("exposed_comm_s").to_bits(), 1e-9f64.to_bits());
+        r.add_u("wire_bytes", 1024);
+        r.add_u("wire_bytes", 512);
+        assert_eq!(r.total_u("wire_bytes"), 1536);
+        assert_eq!(r.last_u("wire_bytes"), 512);
+        // Missing names read as zero, not panic.
+        assert_eq!(r.total_f("nope"), 0.0);
+        assert_eq!(r.total_u("nope"), 0);
+    }
+
+    #[test]
+    fn gauges_and_hists() {
+        let r = Registry::new();
+        r.set_gauge("local_step_h", 4.0);
+        r.set_gauge("local_step_h", 2.0);
+        assert_eq!(r.gauge("local_step_h"), Some(2.0));
+        r.observe("gamma_dispersion", 0.5);
+        r.observe("gamma_dispersion", 0.1);
+        r.observe("gamma_dispersion", 0.3);
+        let h = r.hist("gamma_dispersion").unwrap();
+        assert_eq!(h.count, 3);
+        assert_eq!(h.min, 0.1);
+        assert_eq!(h.max, 0.5);
+        assert!((h.sum - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exposition_round_trips_bitwise() {
+        let r = Registry::new();
+        r.add_f("exposed_comm_s", 0.1 + 0.2); // 0.30000000000000004
+        r.add_u("wire_bytes", 123456789);
+        r.set_gauge("gamma_dispersion_last", 0.07203791469194313);
+        r.observe("h", 3.0);
+        let text = r.expose();
+        let map = parse_exposition(&text);
+        assert_eq!(
+            map["adacons_exposed_comm_s_total"].to_bits(),
+            (0.1f64 + 0.2).to_bits()
+        );
+        assert_eq!(map["adacons_wire_bytes_total"], 123456789.0);
+        assert_eq!(
+            map["adacons_gamma_dispersion_last"].to_bits(),
+            0.07203791469194313f64.to_bits()
+        );
+        assert_eq!(map["adacons_h_count"], 1.0);
+        // TYPE lines present and skipped by the parser.
+        assert!(text.contains("# TYPE adacons_exposed_comm_s_total counter"));
+        assert!(!map.contains_key("#"));
+    }
+
+    #[test]
+    fn reset_clears() {
+        let r = Registry::new();
+        r.add_f("a", 1.0);
+        r.reset();
+        assert_eq!(r.total_f("a"), 0.0);
+        assert!(r.expose().is_empty());
+    }
+}

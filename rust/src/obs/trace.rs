@@ -1,0 +1,426 @@
+//! Span tracing: cheap `Instant`-stamped events recorded on the step path.
+//!
+//! Producers (rank threads, the leader's ingest/finalize path, the
+//! simulated-timeline accounting in the executor) batch [`SpanEvent`]s
+//! into thread-local `Vec`s and flush them into the shared [`Tracer`]
+//! once per step, so the hot path takes one lock per producer per step
+//! and allocates nothing at all when tracing is off — every recording
+//! site is gated on [`Tracer::enabled`], which is a plain enum compare.
+//!
+//! Two clock domains coexist and are never mixed in one span:
+//! * **Wall** — seconds since the tracer's epoch (`Instant`-derived),
+//!   used for real thread activity (rank compute, encode, leader ingest,
+//!   finalize, optimizer apply).
+//! * **Sim** — the `SimClock`/`StepTimeline` coordinate system, used for
+//!   modeled transfers, per-rank simulated compute, and bucket-readiness
+//!   instants. Sim spans carry the *exact* `f64`s the accounting used,
+//!   which is what lets `obs::chrome::check_trace` reconstruct the
+//!   reported exposed-comm figures bit-for-bit.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Trace verbosity. Levels are cumulative: `Bucket` includes everything
+/// `Step` records, `Rank` includes everything `Bucket` records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TraceLevel {
+    /// No events recorded; every trace call site is a cheap compare.
+    Off = 0,
+    /// Step-scoped spans: leader ingest, finalize, optimizer apply, the
+    /// whole-step span, and one [`StepMark`] per sync round.
+    Step = 1,
+    /// Adds per-bucket spans: simulated transfers and encode time.
+    Bucket = 2,
+    /// Adds per-rank spans: rank-thread wall compute, simulated per-rank
+    /// compute, and bucket-readiness instants.
+    Rank = 3,
+}
+
+impl TraceLevel {
+    pub fn parse(v: &str) -> Option<TraceLevel> {
+        match v {
+            "off" | "none" => Some(TraceLevel::Off),
+            "step" => Some(TraceLevel::Step),
+            "bucket" => Some(TraceLevel::Bucket),
+            "rank" => Some(TraceLevel::Rank),
+            _ => None,
+        }
+    }
+
+    pub fn tag(self) -> &'static str {
+        match self {
+            TraceLevel::Off => "off",
+            TraceLevel::Step => "step",
+            TraceLevel::Bucket => "bucket",
+            TraceLevel::Rank => "rank",
+        }
+    }
+}
+
+/// Which clock a span's `start_s`/`dur_s` live on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Domain {
+    Wall,
+    Sim,
+}
+
+impl Domain {
+    pub fn tag(self) -> &'static str {
+        match self {
+            Domain::Wall => "wall",
+            Domain::Sim => "sim",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// One whole sync round on the leader (wall).
+    Step,
+    /// Leader draining/ingesting rank gradients (wall).
+    LeaderIngest,
+    /// Consensus finalize / aggregate call (wall).
+    Finalize,
+    /// Optimizer apply incl. clipping (wall).
+    OptimizerApply,
+    /// One rank thread's step: compute + encode + submit (wall).
+    RankCompute,
+    /// Codec encode of one bucket (wall; rank-side or leader set-codec).
+    Encode,
+    /// One modeled collective transfer (sim).
+    Transfer,
+    /// One rank's modeled backward pass (sim).
+    SimCompute,
+    /// Instant: bucket `b` of rank `r` became ready (sim).
+    BucketReady,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Step => "step",
+            SpanKind::LeaderIngest => "leader_ingest",
+            SpanKind::Finalize => "finalize",
+            SpanKind::OptimizerApply => "optimizer_apply",
+            SpanKind::RankCompute => "rank_compute",
+            SpanKind::Encode => "encode",
+            SpanKind::Transfer => "transfer",
+            SpanKind::SimCompute => "sim_compute",
+            SpanKind::BucketReady => "bucket_ready",
+        }
+    }
+}
+
+/// Communication scope of a [`SpanKind::Transfer`] span (mirrors
+/// `comm::CommScope`, kept separate so `obs` stays dependency-free).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanScope {
+    None,
+    Global,
+    Intra,
+    Inter,
+}
+
+impl SpanScope {
+    pub fn tag(self) -> &'static str {
+        match self {
+            SpanScope::None => "none",
+            SpanScope::Global => "global",
+            SpanScope::Intra => "intra",
+            SpanScope::Inter => "inter",
+        }
+    }
+
+    pub fn parse(v: &str) -> Option<SpanScope> {
+        match v {
+            "none" => Some(SpanScope::None),
+            "global" => Some(SpanScope::Global),
+            "intra" => Some(SpanScope::Intra),
+            "inter" => Some(SpanScope::Inter),
+            _ => None,
+        }
+    }
+}
+
+/// One recorded span. `rank`/`bucket`/`node` are `-1` when not
+/// applicable (e.g. leader-side spans have `rank == -1`). `serial` is
+/// only meaningful on [`SpanKind::Transfer`]: whether this span's
+/// duration entered the executor's serial-comm accumulator (a fan-out
+/// op posts one span per channel but its duration counts once).
+#[derive(Debug, Clone, Copy)]
+pub struct SpanEvent {
+    pub kind: SpanKind,
+    pub domain: Domain,
+    pub step: u64,
+    pub rank: i64,
+    pub bucket: i64,
+    pub node: i64,
+    pub scope: SpanScope,
+    pub start_s: f64,
+    pub dur_s: f64,
+    pub serial: bool,
+}
+
+impl SpanEvent {
+    pub fn new(kind: SpanKind, domain: Domain, step: u64, start_s: f64, dur_s: f64) -> SpanEvent {
+        SpanEvent {
+            kind,
+            domain,
+            step,
+            rank: -1,
+            bucket: -1,
+            node: -1,
+            scope: SpanScope::None,
+            start_s,
+            dur_s,
+            serial: true,
+        }
+    }
+
+    /// Mark a transfer span as a fan-out repeat whose duration was
+    /// already counted by a sibling span.
+    pub fn not_serial(mut self) -> SpanEvent {
+        self.serial = false;
+        self
+    }
+
+    pub fn rank(mut self, r: usize) -> SpanEvent {
+        self.rank = r as i64;
+        self
+    }
+
+    pub fn bucket(mut self, b: usize) -> SpanEvent {
+        self.bucket = b as i64;
+        self
+    }
+
+    pub fn node(mut self, k: usize) -> SpanEvent {
+        self.node = k as i64;
+        self
+    }
+
+    pub fn scope(mut self, s: SpanScope) -> SpanEvent {
+        self.scope = s;
+        self
+    }
+}
+
+/// Which accounting branch produced a step's comm figures; the trace
+/// checker replays the matching arithmetic when reconstructing them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepMode {
+    /// Overlapped transfers on the two-level `HierTimeline`.
+    OverlapHier,
+    /// Overlapped transfers on the single-NIC `StepTimeline`.
+    OverlapFlat,
+    /// Barrier accounting: every op fully exposed, in comm-op order.
+    Barrier,
+    /// Elastic (cutoff) step: barrier accounting over survivors.
+    Elastic,
+}
+
+impl StepMode {
+    pub fn tag(self) -> &'static str {
+        match self {
+            StepMode::OverlapHier => "overlap-hier",
+            StepMode::OverlapFlat => "overlap-flat",
+            StepMode::Barrier => "barrier",
+            StepMode::Elastic => "elastic",
+        }
+    }
+
+    pub fn parse(v: &str) -> Option<StepMode> {
+        match v {
+            "overlap-hier" => Some(StepMode::OverlapHier),
+            "overlap-flat" => Some(StepMode::OverlapFlat),
+            "barrier" => Some(StepMode::Barrier),
+            "elastic" => Some(StepMode::Elastic),
+            _ => None,
+        }
+    }
+}
+
+/// Per-sync-round summary instant carrying the exact comm accounting the
+/// executor reported for that round. The Chrome export writes these
+/// `f64`s losslessly, so `check_trace` can verify the transfer spans
+/// reproduce them to the bit.
+#[derive(Debug, Clone, Copy)]
+pub struct StepMark {
+    pub step: u64,
+    pub mode: StepMode,
+    pub step_start_s: f64,
+    pub compute_end_s: f64,
+    pub exposed_comm_s: f64,
+    pub exposed_intra_s: f64,
+    pub exposed_inter_s: f64,
+    pub serial_comm_s: f64,
+    pub wire_bytes: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub enum Event {
+    Span(SpanEvent),
+    Mark(StepMark),
+}
+
+/// Shared trace buffer. Construction pins the wall epoch; producers
+/// check [`Tracer::enabled`] (a plain compare) before building any
+/// event, batch into local `Vec`s, and flush with
+/// [`Tracer::record_batch`] once per step.
+pub struct Tracer {
+    level: TraceLevel,
+    epoch: Instant,
+    events: Mutex<Vec<Event>>,
+}
+
+impl Tracer {
+    pub fn new(level: TraceLevel) -> Tracer {
+        Tracer {
+            level,
+            epoch: Instant::now(),
+            events: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn level(&self) -> TraceLevel {
+        self.level
+    }
+
+    /// True when spans gated at `min` (which must be >= `Step`) should
+    /// be recorded.
+    #[inline]
+    pub fn enabled(&self, min: TraceLevel) -> bool {
+        min != TraceLevel::Off && self.level >= min
+    }
+
+    /// Wall seconds since the tracer's epoch.
+    pub fn now_s(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Record one span already gated by the caller (no-op when off, so
+    /// an ungated call is safe, just wasteful).
+    pub fn span(&self, min: TraceLevel, ev: SpanEvent) {
+        if self.enabled(min) {
+            self.lock().push(Event::Span(ev));
+        }
+    }
+
+    /// Record one per-round summary mark (gated at `Step`).
+    pub fn mark(&self, m: StepMark) {
+        if self.enabled(TraceLevel::Step) {
+            self.lock().push(Event::Mark(m));
+        }
+    }
+
+    /// Flush a producer's per-step local buffer: one lock per call.
+    pub fn record_batch(&self, evs: Vec<SpanEvent>) {
+        if self.level != TraceLevel::Off && !evs.is_empty() {
+            self.lock().extend(evs.into_iter().map(Event::Span));
+        }
+    }
+
+    /// Drain everything recorded so far (leader-side, at export time).
+    pub fn take_events(&self) -> Vec<Event> {
+        std::mem::take(&mut *self.lock())
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Vec<Event>> {
+        // A panicking producer poisons nothing we can't still read.
+        self.events.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parse_and_order() {
+        assert_eq!(TraceLevel::parse("off"), Some(TraceLevel::Off));
+        assert_eq!(TraceLevel::parse("step"), Some(TraceLevel::Step));
+        assert_eq!(TraceLevel::parse("bucket"), Some(TraceLevel::Bucket));
+        assert_eq!(TraceLevel::parse("rank"), Some(TraceLevel::Rank));
+        assert_eq!(TraceLevel::parse("verbose"), None);
+        assert!(TraceLevel::Rank > TraceLevel::Bucket);
+        assert!(TraceLevel::Bucket > TraceLevel::Step);
+        for l in ["off", "step", "bucket", "rank"] {
+            assert_eq!(TraceLevel::parse(l).unwrap().tag(), l);
+        }
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::new(TraceLevel::Off);
+        assert!(!t.enabled(TraceLevel::Step));
+        assert!(!t.enabled(TraceLevel::Rank));
+        t.span(
+            TraceLevel::Step,
+            SpanEvent::new(SpanKind::Step, Domain::Wall, 0, 0.0, 1.0),
+        );
+        t.mark(StepMark {
+            step: 0,
+            mode: StepMode::Barrier,
+            step_start_s: 0.0,
+            compute_end_s: 0.0,
+            exposed_comm_s: 0.0,
+            exposed_intra_s: 0.0,
+            exposed_inter_s: 0.0,
+            serial_comm_s: 0.0,
+            wire_bytes: 0,
+        });
+        assert!(t.take_events().is_empty());
+    }
+
+    #[test]
+    fn levels_gate_cumulatively() {
+        let t = Tracer::new(TraceLevel::Bucket);
+        assert!(t.enabled(TraceLevel::Step));
+        assert!(t.enabled(TraceLevel::Bucket));
+        assert!(!t.enabled(TraceLevel::Rank));
+        t.span(
+            TraceLevel::Bucket,
+            SpanEvent::new(SpanKind::Transfer, Domain::Sim, 3, 1.0, 0.5)
+                .bucket(2)
+                .scope(SpanScope::Inter),
+        );
+        t.span(
+            TraceLevel::Rank,
+            SpanEvent::new(SpanKind::SimCompute, Domain::Sim, 3, 0.0, 1.0).rank(1),
+        );
+        let evs = t.take_events();
+        assert_eq!(evs.len(), 1);
+        match evs[0] {
+            Event::Span(sp) => {
+                assert_eq!(sp.kind, SpanKind::Transfer);
+                assert_eq!(sp.bucket, 2);
+                assert_eq!(sp.scope, SpanScope::Inter);
+            }
+            Event::Mark(_) => panic!("expected span"),
+        }
+        // Drained: the buffer is empty again.
+        assert!(t.take_events().is_empty());
+    }
+
+    #[test]
+    fn batch_flush_preserves_order() {
+        let t = Tracer::new(TraceLevel::Rank);
+        let mut local = Vec::new();
+        for b in 0..3usize {
+            local.push(
+                SpanEvent::new(SpanKind::Encode, Domain::Wall, 7, b as f64, 0.1)
+                    .rank(0)
+                    .bucket(b),
+            );
+        }
+        t.record_batch(local);
+        let evs = t.take_events();
+        assert_eq!(evs.len(), 3);
+        for (b, ev) in evs.iter().enumerate() {
+            match ev {
+                Event::Span(sp) => assert_eq!(sp.bucket, b as i64),
+                Event::Mark(_) => panic!("expected span"),
+            }
+        }
+    }
+}

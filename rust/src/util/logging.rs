@@ -1,9 +1,21 @@
 //! Std-only leveled logging to stderr (the `log` crate is not vendored
-//! offline). A process-global level filter is set from `ADACONS_LOG`
-//! (error|warn|info|debug|trace; default info); the `log_error!` /
-//! `log_warn!` / `log_info!` / `log_debug!` macros are the call surface.
+//! offline). A process-global level filter is set from `--log-level`
+//! (falling back to `ADACONS_LOG`; error|warn|info|debug|trace, default
+//! info); the `log_error!` / `log_warn!` / `log_info!` / `log_debug!`
+//! macros are the call surface.
+//!
+//! Each record carries wall time elapsed since [`init`] plus any
+//! thread-local step/rank context installed via [`set_step_context`] /
+//! [`set_rank_context`]:
+//!
+//! ```text
+//! [   12.041 W adacons::comm s37 r2] rank 2 down: channel closed
+//! ```
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
 
 /// Log severity, ordered from quietest to noisiest.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -16,6 +28,18 @@ pub enum Level {
 }
 
 impl Level {
+    /// Parse a `--log-level` / `ADACONS_LOG` spec.
+    pub fn parse(v: &str) -> Option<Level> {
+        match v {
+            "error" => Some(Level::Error),
+            "warn" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
     fn tag(self) -> &'static str {
         match self {
             Level::Error => "E",
@@ -29,16 +53,40 @@ impl Level {
 
 static MAX_LEVEL: AtomicUsize = AtomicUsize::new(Level::Info as usize);
 
-/// Install the level filter from the environment (idempotent).
+thread_local! {
+    static STEP_CTX: Cell<Option<u64>> = Cell::new(None);
+    static RANK_CTX: Cell<Option<usize>> = Cell::new(None);
+}
+
+/// The process epoch every log line's elapsed time is measured from.
+/// First use pins it, so call [`init`] early for meaningful offsets.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Install the level filter from the environment and pin the elapsed-time
+/// epoch (idempotent).
 pub fn init() {
-    let level = match std::env::var("ADACONS_LOG").as_deref() {
-        Ok("error") => Level::Error,
-        Ok("warn") => Level::Warn,
-        Ok("debug") => Level::Debug,
-        Ok("trace") => Level::Trace,
-        _ => Level::Info,
-    };
+    let _ = epoch();
+    let level = std::env::var("ADACONS_LOG")
+        .ok()
+        .as_deref()
+        .and_then(Level::parse)
+        .unwrap_or(Level::Info);
     set_max_level(level);
+}
+
+/// Tag this thread's subsequent log lines with a training step (`s<N>`);
+/// `None` clears it. The trainer sets this once per round.
+pub fn set_step_context(step: Option<u64>) {
+    STEP_CTX.with(|c| c.set(step));
+}
+
+/// Tag this thread's subsequent log lines with a rank id (`r<N>`);
+/// `None` clears it. Rank worker threads set this once at spawn.
+pub fn set_rank_context(rank: Option<usize>) {
+    RANK_CTX.with(|c| c.set(rank));
 }
 
 pub fn set_max_level(level: Level) {
@@ -51,9 +99,18 @@ pub fn enabled(level: Level) -> bool {
 
 /// Emit one record; the macros below are the intended entry point.
 pub fn log(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
-    if enabled(level) {
-        eprintln!("[{} {}] {}", level.tag(), target, args);
+    if !enabled(level) {
+        return;
     }
+    let elapsed = epoch().elapsed().as_secs_f64();
+    let mut ctx = String::new();
+    if let Some(s) = STEP_CTX.with(|c| c.get()) {
+        ctx.push_str(&format!(" s{s}"));
+    }
+    if let Some(r) = RANK_CTX.with(|c| c.get()) {
+        ctx.push_str(&format!(" r{r}"));
+    }
+    eprintln!("[{elapsed:9.3} {} {}{}] {}", level.tag(), target, ctx, args);
 }
 
 #[macro_export]
@@ -118,5 +175,23 @@ mod tests {
         set_max_level(Level::Info);
         assert!(enabled(Level::Info));
         assert!(!enabled(Level::Debug));
+        // Contexts are thread-local; set + emit + clear must not poison
+        // later lines (visual check only — stderr is not captured here).
+        set_step_context(Some(7));
+        set_rank_context(Some(2));
+        crate::log_info!("contextual smoke test");
+        set_step_context(None);
+        set_rank_context(None);
+    }
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(Level::parse("error"), Some(Level::Error));
+        assert_eq!(Level::parse("warn"), Some(Level::Warn));
+        assert_eq!(Level::parse("info"), Some(Level::Info));
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("trace"), Some(Level::Trace));
+        assert_eq!(Level::parse("loud"), None);
+        assert_eq!(Level::parse(""), None);
     }
 }

@@ -1,0 +1,291 @@
+//! Observability acceptance tests: tracing must be bitwise-invisible to
+//! training, the Chrome-trace export must reconstruct the reported comm
+//! accounting to the bit, and every sink (TrainResult, jsonl, metrics
+//! exposition) must agree exactly because all derive from one registry.
+
+use std::sync::Arc;
+
+use adacons::collective::TopologySpec;
+use adacons::config::TrainConfig;
+use adacons::coordinator::Trainer;
+use adacons::obs::chrome::{check_trace, cross_check_metrics};
+use adacons::obs::TraceLevel;
+use adacons::optim::Schedule;
+use adacons::runtime::{Backend, Manifest, Runtime};
+use adacons::util::json::Json;
+
+fn runtime() -> Option<Arc<Runtime>> {
+    if Runtime::HAS_PJRT {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("artifacts not built; skipping");
+            return None;
+        }
+        return Some(Arc::new(Runtime::create(dir).unwrap()));
+    }
+    Some(Arc::new(
+        Runtime::open_default_with(Backend::Interp).expect("interp backend always constructs"),
+    ))
+}
+
+fn linreg_cfg(aggregator: &str, steps: usize) -> TrainConfig {
+    TrainConfig {
+        artifact: "linreg_b16".into(),
+        workers: 8,
+        aggregator: aggregator.into(),
+        optimizer: "linreg-exact".into(),
+        schedule: Schedule::Const { lr: 0.0 },
+        steps,
+        seed: 3,
+        bucket_cap: Some(97), // ragged multi-bucket
+        overlap: true,
+        ..TrainConfig::default()
+    }
+}
+
+/// Tracing on — even at the most verbose level — must leave training
+/// output bitwise-unchanged: recording reads already-computed values and
+/// draws no RNG. Checked for every aggregator family on flat and
+/// two-level topologies, round-robin and real rank threads.
+#[test]
+fn tracing_at_rank_level_is_bitwise_invisible() {
+    let Some(rt) = runtime() else { return };
+    if rt.backend() != Backend::Interp {
+        eprintln!("bitwise parity sweep needs the interp backend; skipping");
+        return;
+    }
+    for name in ["mean", "adacons", "grawa", "adasum", "median"] {
+        for topology in [TopologySpec::Flat, TopologySpec::Hier { nodes: 2, gpus: 4 }] {
+            for threaded in [false, true] {
+                let run = |level: TraceLevel| {
+                    let mut cfg = linreg_cfg(name, 6);
+                    cfg.topology = topology;
+                    cfg.rank_threads = threaded;
+                    cfg.trace_level = level;
+                    Trainer::new(rt.clone(), cfg).unwrap().run().unwrap()
+                };
+                let off = run(TraceLevel::Off);
+                let on = run(TraceLevel::Rank);
+                let tag = format!("{name}/{topology:?}/threads={threaded}");
+                assert_eq!(on.final_params, off.final_params, "{tag}: params diverge");
+                assert_eq!(on.train_loss, off.train_loss, "{tag}: loss traces diverge");
+            }
+        }
+    }
+}
+
+/// The acceptance gate: a traced hierarchical run writes a Chrome trace
+/// whose transfer spans reconstruct the reported exposed-comm split to
+/// the bit, a metrics exposition whose totals match the trace and the
+/// `TrainResult` exactly, and a jsonl log whose per-round records re-sum
+/// to the same totals — while the training output stays bitwise equal to
+/// the untraced twin.
+#[test]
+fn bucket_trace_and_metrics_reconstruct_train_result_to_the_bit() {
+    let Some(rt) = runtime() else { return };
+    if rt.backend() != Backend::Interp {
+        eprintln!("hier acceptance run needs the interp backend; skipping");
+        return;
+    }
+    let dir = std::env::temp_dir().join("adacons_obs_accept");
+    std::fs::create_dir_all(&dir).unwrap();
+    let t_path = dir.join("t.json");
+    let m_path = dir.join("metrics.txt");
+    let j_path = dir.join("log.jsonl");
+    let steps = 6usize;
+    let mk = || {
+        let mut cfg = linreg_cfg("adacons", steps);
+        cfg.topology = TopologySpec::Hier { nodes: 2, gpus: 4 };
+        cfg
+    };
+
+    let untraced = Trainer::new(rt.clone(), mk()).unwrap().run().unwrap();
+    let mut cfg = mk();
+    cfg.trace_level = TraceLevel::Bucket;
+    cfg.trace_out = Some(t_path.to_str().unwrap().into());
+    cfg.metrics_out = Some(m_path.to_str().unwrap().into());
+    cfg.jsonl = Some(j_path.to_str().unwrap().into());
+    let mut tr = Trainer::new(rt.clone(), cfg).unwrap();
+    let res = tr.run().unwrap();
+
+    // Tracing on changes nothing about the training output.
+    assert_eq!(res.final_params, untraced.final_params, "traced params diverge");
+    assert_eq!(res.train_loss, untraced.train_loss, "traced losses diverge");
+
+    // The exported trace parses, validates (monotonic sim timeline,
+    // well-nested tracks), and replays the executor's accounting.
+    let text = std::fs::read_to_string(&t_path).unwrap();
+    let doc = Json::parse(&text).unwrap();
+    let st = check_trace(&doc).unwrap();
+    assert_eq!(st.trace_level, "bucket");
+    assert_eq!(st.marks, steps, "one step mark per sync round");
+    assert_eq!(st.reconstructed_steps, steps, "every mark replayed from spans");
+    assert!(st.transfer_spans > 0, "hier run must record transfer spans");
+    assert!(st.spans > 0 && st.events > st.spans);
+
+    // Transfer spans reconstruct the reported comm split to the bit:
+    // TrainResult divides the same registry totals by the same step count.
+    let div = steps as f64;
+    for (tag, trace_total, reported) in [
+        ("exposed", st.exposed_comm_total, res.exposed_comm_s),
+        ("intra", st.exposed_intra_total, res.exposed_intra_comm_s),
+        ("inter", st.exposed_inter_total, res.exposed_inter_comm_s),
+        ("serial", st.serial_comm_total, res.serial_comm_s),
+    ] {
+        assert_eq!(
+            (trace_total / div).to_bits(),
+            reported.to_bits(),
+            "{tag}: trace-reconstructed mean != TrainResult"
+        );
+    }
+    assert!(res.exposed_inter_comm_s > 0.0, "two-level run exposes inter comm");
+    assert_eq!(st.wire_bytes_total, res.total_wire_bytes);
+
+    // The metrics exposition is the registry verbatim, and its totals
+    // match the trace bitwise (5 cross-checked keys).
+    let exposition = std::fs::read_to_string(&m_path).unwrap();
+    assert_eq!(exposition, tr.obs().metrics.expose(), "metrics file != live registry");
+    assert_eq!(cross_check_metrics(&st, &exposition).unwrap(), 5);
+
+    // The jsonl log re-sums to the same totals: each record carries the
+    // round's registry deltas, so an in-order fold is the registry fold.
+    let jtext = std::fs::read_to_string(&j_path).unwrap();
+    let recs: Vec<Json> = jtext
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| Json::parse(l).unwrap())
+        .collect();
+    assert_eq!(recs.len(), steps, "one jsonl record per sync round");
+    for key in [
+        "step",
+        "train_loss",
+        "lr",
+        "sim_time_s",
+        "exposed_comm_s",
+        "exposed_intra_comm_s",
+        "exposed_inter_comm_s",
+        "wire_bytes",
+        "local_steps",
+        "aggregator",
+    ] {
+        assert!(!recs[0].get(key).is_null(), "jsonl record missing {key}");
+    }
+    let mut exposed = 0.0f64;
+    let mut inter = 0.0f64;
+    let mut wire = 0u64;
+    for r in &recs {
+        exposed += r.get("exposed_comm_s").as_f64().unwrap();
+        inter += r.get("exposed_inter_comm_s").as_f64().unwrap();
+        wire += r.get("wire_bytes").as_f64().unwrap() as u64;
+    }
+    assert_eq!(exposed.to_bits(), st.exposed_comm_total.to_bits(), "jsonl exposed sum");
+    assert_eq!(inter.to_bits(), st.exposed_inter_total.to_bits(), "jsonl inter sum");
+    assert_eq!(wire, res.total_wire_bytes, "jsonl wire-byte sum");
+
+    // Registry == TrainResult directly (no trace in between).
+    let m = &tr.obs().metrics;
+    assert_eq!(
+        (m.total_f("exposed_comm_s") / div).to_bits(),
+        res.exposed_comm_s.to_bits()
+    );
+    assert_eq!(m.total_u("wire_bytes"), res.total_wire_bytes);
+    assert_eq!(m.total_u("sync_rounds") as usize, res.sync_rounds);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Rank-level tracing records the modeled backward of every rank every
+/// step, and — with overlap on — a readiness instant for every
+/// (rank, bucket) pair, so span counts are exactly steps x ranks and
+/// steps x ranks x buckets.
+#[test]
+fn rank_level_span_counts_match_steps_ranks_buckets() {
+    let Some(rt) = runtime() else { return };
+    let dir = std::env::temp_dir().join("adacons_obs_counts");
+    std::fs::create_dir_all(&dir).unwrap();
+    let t_path = dir.join("t.json");
+    let (steps, workers, cap) = (5usize, 4usize, 37usize);
+    let mut cfg = linreg_cfg("adacons", steps);
+    cfg.workers = workers;
+    cfg.bucket_cap = Some(cap);
+    cfg.trace_level = TraceLevel::Rank;
+    cfg.trace_out = Some(t_path.to_str().unwrap().into());
+    let res = Trainer::new(rt, cfg).unwrap().run().unwrap();
+
+    let buckets = res.final_params.len().div_ceil(cap);
+    assert!(buckets >= 2, "config must split into multiple buckets");
+    let doc = Json::parse(&std::fs::read_to_string(&t_path).unwrap()).unwrap();
+    let st = check_trace(&doc).unwrap();
+    assert_eq!(st.trace_level, "rank");
+    assert_eq!(st.sim_compute_spans, steps * workers, "one SimCompute per rank per step");
+    assert_eq!(
+        st.bucket_ready_instants,
+        steps * workers * buckets,
+        "one readiness instant per (rank, bucket) per step"
+    );
+    assert_eq!(st.marks, steps);
+    assert_eq!(st.reconstructed_steps, steps);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `check_trace` is a verifier, not a pretty-printer: a renamed top-level
+/// key and a corrupted transfer duration must both fail loudly (the
+/// latter because the replayed accounting no longer matches the step
+/// marks bit-for-bit).
+#[test]
+fn trace_check_rejects_corrupted_traces() {
+    let Some(rt) = runtime() else { return };
+    let dir = std::env::temp_dir().join("adacons_obs_corrupt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let t_path = dir.join("t.json");
+    let mut cfg = linreg_cfg("adacons", 3);
+    cfg.trace_level = TraceLevel::Bucket;
+    cfg.trace_out = Some(t_path.to_str().unwrap().into());
+    Trainer::new(rt, cfg).unwrap().run().unwrap();
+    let text = std::fs::read_to_string(&t_path).unwrap();
+    let clean = Json::parse(&text).unwrap();
+    check_trace(&clean).unwrap();
+
+    // (a) Not a Chrome trace at all.
+    let mut renamed = clean.clone();
+    if let Json::Obj(map) = &mut renamed {
+        let evs = map.remove("traceEvents").unwrap();
+        map.insert("traceEventz".into(), evs);
+    }
+    assert!(check_trace(&renamed).is_err(), "renamed traceEvents must fail");
+
+    // (b) Perturb one transfer span's exact duration: the reconstruction
+    // replays the executor's fold from span args, so the totals no longer
+    // match the step mark bitwise.
+    let mut perturbed = clean.clone();
+    let mut hit = false;
+    if let Json::Obj(map) = &mut perturbed {
+        if let Some(Json::Arr(evs)) = map.get_mut("traceEvents") {
+            for ev in evs.iter_mut() {
+                let Json::Obj(fields) = ev else { continue };
+                let is_transfer = matches!(
+                    fields.get("args").and_then(|a| match a {
+                        Json::Obj(m) => m.get("kind"),
+                        _ => None,
+                    }),
+                    Some(Json::Str(k)) if k.as_str() == "transfer"
+                );
+                if !is_transfer {
+                    continue;
+                }
+                if let Some(Json::Obj(args)) = fields.get_mut("args") {
+                    if let Some(Json::Num(d)) = args.get_mut("dur_s") {
+                        *d += 1.0;
+                        hit = true;
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    assert!(hit, "trace has no transfer span to corrupt");
+    assert!(
+        check_trace(&perturbed).is_err(),
+        "corrupted transfer duration must fail reconstruction"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -58,6 +58,17 @@ for tt in 1 2 4; do
 done
 
 if [[ "${1:-}" != "--no-bench" ]]; then
+  echo "== traced smoke run + trace-check =="
+  # A short traced hier run, then the in-tree verifier replays the
+  # executor's comm accounting from the exported spans and demands it
+  # match every step mark and the metrics exposition bit-for-bit
+  # (EXPERIMENTS.md §Observability). trace.json/metrics.txt ride the
+  # failure-artifact upload for postmortems.
+  cargo run --release --bin adacons -- train --workers 8 --steps 8 \
+    --topology hier:2x4 --optimizer sgd --schedule const:0.005 \
+    --trace-level bucket --trace-out trace.json --metrics-out metrics.txt
+  cargo run --release --bin adacons -- trace-check trace.json --metrics metrics.txt
+
   echo "== smoke bench (budget 0.05s/case, --overlap both) =="
   cargo run --release --bin bench_aggregation -- --smoke --budget 0.05 --overlap both --out BENCH_aggregation.json
   echo "== validate BENCH_aggregation.json =="
